@@ -1,0 +1,48 @@
+//! Bench: Fig. 2-left — OPA vs vanilla SHINE vs HOAG on the 20news-like
+//! problem (scaled). Full figure: `shine run fig2-left`.
+
+use shine::bilevel::hoag::{hoag_run, HoagOptions};
+use shine::data::split::split_logreg;
+use shine::data::synth_text::{synth_text, TextConfig};
+use shine::hypergrad::Strategy;
+use shine::problems::logreg::{LogRegInner, LogRegOuter};
+use shine::qn::lbfgs::OpaConfig;
+use shine::util::bench::Bench;
+use shine::util::rng::Rng;
+
+fn main() {
+    let mut cfg = TextConfig::news20_like();
+    cfg.n_docs /= 4;
+    cfg.n_features /= 4;
+    cfg.n_informative /= 4;
+    let data = synth_text(&cfg, 0);
+    let mut rng = Rng::new(1);
+    let (train, val, test) = split_logreg(&data, &mut rng);
+    let prob = LogRegInner { train };
+    let outer = LogRegOuter { val, test };
+    let mut b = Bench::new("fig2-left OPA bilevel (scaled)").with_samples(0, 3);
+    for (name, opa) in [("hoag", None), ("shine", None), ("shine-opa", Some(5usize))] {
+        let full = name == "hoag";
+        let opts = HoagOptions {
+            outer_iters: 15,
+            strategy: if full {
+                Strategy::Full {
+                    tol: 1e-8,
+                    max_iters: usize::MAX,
+                }
+            } else {
+                Strategy::Shine
+            },
+            inner_memory: if opa.is_some() { 60 } else { 30 },
+            opa: opa.map(|freq| OpaConfig { freq, t0: 1.0 }),
+            ..Default::default()
+        };
+        let mut finals = Vec::new();
+        b.run(name, || {
+            let res = hoag_run(&prob, &outer, &[-4.0], &opts);
+            finals.push(res.trace.last().unwrap().test_loss);
+        });
+        println!("  {name}: final test loss {:.4}", finals.last().unwrap());
+    }
+    b.finish();
+}

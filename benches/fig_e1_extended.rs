@@ -1,0 +1,49 @@
+//! Bench: Fig. E.1 — HOAG-limited backward + random search baselines
+//! (scaled). Full figure: `shine run fig-e1`.
+
+use shine::bilevel::hoag::{hoag_run, HoagOptions};
+use shine::bilevel::search::random_search;
+use shine::data::split::split_logreg;
+use shine::data::synth_text::{synth_text, TextConfig};
+use shine::hypergrad::Strategy;
+use shine::problems::logreg::{LogRegInner, LogRegOuter};
+use shine::util::bench::Bench;
+use shine::util::rng::Rng;
+
+fn main() {
+    let mut cfg = TextConfig::news20_like();
+    cfg.n_docs /= 4;
+    cfg.n_features /= 4;
+    cfg.n_informative /= 4;
+    let data = synth_text(&cfg, 0);
+    let mut rng = Rng::new(1);
+    let (train, val, test) = split_logreg(&data, &mut rng);
+    let prob = LogRegInner { train };
+    let outer = LogRegOuter { val, test };
+    let mut b = Bench::new("fig-e1 extended baselines (scaled)").with_samples(0, 3);
+    for (name, max_iters) in [
+        ("hoag-full", usize::MAX),
+        ("hoag-limited-5", 5),
+        ("hoag-limited-20", 20),
+    ] {
+        let opts = HoagOptions {
+            outer_iters: 15,
+            strategy: Strategy::Full {
+                tol: 1e-8,
+                max_iters,
+            },
+            ..Default::default()
+        };
+        let mut finals = Vec::new();
+        b.run(name, || {
+            let res = hoag_run(&prob, &outer, &[-4.0], &opts);
+            finals.push(res.trace.last().unwrap().test_loss);
+        });
+        println!("  {name}: final test loss {:.4}", finals.last().unwrap());
+    }
+    let mut srng = Rng::new(7);
+    b.run("random-search-8", || {
+        random_search(&prob, &outer, -8.0, 0.0, 8, 1e-6, 800, 60.0, &mut srng).best_theta
+    });
+    b.finish();
+}

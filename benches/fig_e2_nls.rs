@@ -1,0 +1,51 @@
+//! Bench: Fig. E.2 — regularized NLS HPO (scaled). Full: `shine run fig-e2`.
+
+use shine::bilevel::hoag::{hoag_run, HoagOptions};
+use shine::data::split::{logreg_to_nls, split_nls};
+use shine::data::synth_text::{synth_text, TextConfig};
+use shine::hypergrad::Strategy;
+use shine::problems::nls::{NlsInner, NlsOuter};
+use shine::qn::lbfgs::OpaConfig;
+use shine::util::bench::Bench;
+use shine::util::rng::Rng;
+
+fn main() {
+    let mut cfg = TextConfig::news20_like();
+    cfg.n_docs /= 4;
+    cfg.n_features /= 4;
+    cfg.n_informative /= 4;
+    let data = logreg_to_nls(&synth_text(&cfg, 3));
+    let mut rng = Rng::new(4);
+    let (train, val, test) = split_nls(&data, &mut rng);
+    let prob = NlsInner { train };
+    let outer = NlsOuter { val, test };
+    let mut b = Bench::new("fig-e2 NLS HPO (scaled)").with_samples(0, 3);
+    for (name, strategy, opa) in [
+        (
+            "hoag",
+            Strategy::Full {
+                tol: 1e-8,
+                max_iters: usize::MAX,
+            },
+            false,
+        ),
+        ("shine", Strategy::Shine, false),
+        ("shine-opa", Strategy::Shine, true),
+        ("jacobian-free", Strategy::JacobianFree, false),
+    ] {
+        let opts = HoagOptions {
+            outer_iters: 15,
+            strategy,
+            inner_memory: if opa { 60 } else { 30 },
+            opa: opa.then_some(OpaConfig { freq: 5, t0: 1.0 }),
+            ..Default::default()
+        };
+        let mut finals = Vec::new();
+        b.run(name, || {
+            let res = hoag_run(&prob, &outer, &[-4.0], &opts);
+            finals.push(res.trace.last().unwrap().test_loss);
+        });
+        println!("  {name}: final test loss {:.5}", finals.last().unwrap());
+    }
+    b.finish();
+}

@@ -1,0 +1,89 @@
+//! Micro-benchmarks of the qN hot loops (the SHINE backward cost itself):
+//! low-rank apply across dims and ranks, Broyden updates, LBFGS two-loop,
+//! and native-vs-Pallas-artifact low-rank application.
+
+use shine::qn::broyden::BroydenInverse;
+use shine::qn::lbfgs::LbfgsInverse;
+use shine::qn::low_rank::LowRank;
+use shine::qn::{InvOp, MemoryPolicy};
+use shine::runtime::engine::Engine;
+use shine::util::bench::Bench;
+use shine::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut b = Bench::new("micro qn hot loops").with_samples(3, 30);
+    for &(d, m) in &[(4096usize, 30usize), (65536, 30), (184320, 30)] {
+        let mut lr = LowRank::identity(d, m, MemoryPolicy::Freeze);
+        for _ in 0..m {
+            lr.push(rng.normal_vec(d), rng.normal_vec(d));
+        }
+        let x = rng.normal_vec(d);
+        let mut out = vec![0.0; d];
+        b.run(&format!("lowrank_apply d={d} m={m}"), || {
+            lr.apply(&x, &mut out);
+            out[0]
+        });
+        b.run(&format!("lowrank_apply_t d={d} m={m}"), || {
+            lr.apply_t(&x, &mut out);
+            out[0]
+        });
+    }
+    // Broyden update cost (the forward-pass bookkeeping per iteration).
+    let d = 65536;
+    let mut bro = BroydenInverse::new(d, 64, MemoryPolicy::Freeze);
+    for _ in 0..30 {
+        bro.update(&rng.normal_vec(d), &rng.normal_vec(d));
+    }
+    let s = rng.normal_vec(d);
+    let y = rng.normal_vec(d);
+    b.run("broyden_update d=65536 rank=30", || {
+        let mut b2 = bro.clone();
+        b2.update(&s, &y)
+    });
+    // LBFGS two-loop.
+    let mut lb = LbfgsInverse::new(d, 30);
+    for _ in 0..30 {
+        let s = rng.normal_vec(d);
+        let mut y = rng.normal_vec(d);
+        if shine::linalg::vecops::dot(&s, &y) < 0.0 {
+            for v in y.iter_mut() {
+                *v = -*v;
+            }
+        }
+        lb.update(&s, &y);
+    }
+    let x = rng.normal_vec(d);
+    let mut out = vec![0.0; d];
+    b.run("lbfgs_two_loop d=65536 m=30", || {
+        lb.apply(&x, &mut out);
+        out[0]
+    });
+    // Native vs Pallas-artifact low-rank apply (the L1 kernel), if available.
+    if let Ok(eng) = Engine::load(&Engine::default_dir()) {
+        if let Ok(model) = shine::deq::model::DeqModel::new(&eng, "tiny") {
+            let d = model.v.fixed_point_dim;
+            let mut rng = Rng::new(2);
+            let v32 = rng.normal_vec_f32(d, 1.0);
+            let us = rng.normal_vec_f32(30 * d, 0.2);
+            let vs = rng.normal_vec_f32(30 * d, 0.2);
+            b.run(&format!("lowrank artifact (pallas) d={d}"), || {
+                model.lowrank_apply(&v32, &us, &vs).unwrap().len()
+            });
+            let mut lrn = LowRank::identity(d, 30, MemoryPolicy::Freeze);
+            for i in 0..30 {
+                lrn.push(
+                    us[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect(),
+                    vs[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect(),
+                );
+            }
+            let v64: Vec<f64> = v32.iter().map(|&x| x as f64).collect();
+            let mut out = vec![0.0; d];
+            b.run(&format!("lowrank native d={d}"), || {
+                lrn.apply(&v64, &mut out);
+                out[0]
+            });
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,52 @@
+//! Bench: Table E.1 — nonlinear spectral radius probe (tiny variant).
+//! Paper-scale: `shine run table-e1`.
+
+use shine::data::synth_images::synth_images;
+use shine::deq::trainer::{BackwardKind, Trainer, TrainerConfig};
+use shine::power::power_method;
+use shine::runtime::engine::Engine;
+use shine::util::bench::Bench;
+use shine::util::rng::Rng;
+
+fn main() {
+    let Ok(eng) = Engine::load(&Engine::default_dir()) else {
+        eprintln!("SKIP table_e1: artifacts missing");
+        return;
+    };
+    eng.warmup_variant("tiny").unwrap();
+    let mut b = Bench::new("table e1 spectral radius (tiny)").with_samples(0, 2);
+    let cfg = TrainerConfig {
+        variant: "tiny".into(),
+        backward: BackwardKind::Shine,
+        fwd_max_iters: 15,
+        seed: 1,
+        ..Default::default()
+    };
+    let tr = Trainer::new(&eng, cfg).unwrap();
+    let v = tr.model.v.clone();
+    let ds = synth_images(v.batch, v.h, v.w, v.c_in, v.n_classes, 0.4, 2);
+    let mut rng = Rng::new(3);
+    let idx = ds.epoch_batches(v.batch, &mut rng).remove(0);
+    let (x, _) = ds.batch(&idx);
+    let u = tr.model.inject(&tr.params, &x).unwrap();
+    let fwd = tr.forward_solve(&u).unwrap();
+    let mut radius = 0.0;
+    b.run("power-method-20-iters", || {
+        let res = power_method(
+            |vv| {
+                let vf: Vec<f32> = vv.iter().map(|&a| a as f32).collect();
+                tr.model
+                    .f_jvp(&tr.params, &fwd.z, &u, &vf)
+                    .map(|t| t.iter().map(|&a| a as f64).collect())
+                    .unwrap_or_else(|_| vv.to_vec())
+            },
+            fwd.z.len(),
+            20,
+            &mut rng,
+        );
+        radius = res.radius;
+        radius
+    });
+    println!("  untrained-tiny spectral radius: {radius:.2} (paper: 194-234, >> 1)");
+    b.finish();
+}

@@ -1,0 +1,64 @@
+//! Bench: Table E.2 — median forward/backward pass per method, tiny variant.
+//! Paper-scale rows come from `shine run table-e2` (cifar + imagenet proxies).
+
+use shine::data::synth_images::synth_images;
+use shine::deq::trainer::{BackwardKind, Trainer, TrainerConfig};
+use shine::runtime::engine::Engine;
+use shine::util::bench::Bench;
+use shine::util::rng::Rng;
+use shine::util::stats;
+
+fn main() {
+    let Ok(eng) = Engine::load(&Engine::default_dir()) else {
+        eprintln!("SKIP table_e2: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    eng.warmup_variant("tiny").unwrap();
+    let mut b = Bench::new("table e2 fwd-bwd timings (tiny)");
+    println!(
+        "{:<24} {:>10} {:>10}",
+        "method", "fwd(ms)", "bwd(ms)"
+    );
+    for bk in [
+        BackwardKind::Original {
+            tol: 1e-6,
+            max_iters: 1000,
+        },
+        BackwardKind::JacobianFree,
+        BackwardKind::ShineFallback { ratio: 1.3 },
+        BackwardKind::ShineRefine { iters: 5 },
+        BackwardKind::JacobianFreeRefine { iters: 5 },
+        BackwardKind::Original {
+            tol: 1e-6,
+            max_iters: 5,
+        },
+    ] {
+        let cfg = TrainerConfig {
+            variant: "tiny".into(),
+            backward: bk,
+            fwd_max_iters: 15,
+            lr: 0.0,
+            seed: 1,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(&eng, cfg).unwrap();
+        let v = tr.model.v.clone();
+        let ds = synth_images(v.batch * 4, v.h, v.w, v.c_in, v.n_classes, 0.4, 2);
+        let mut rng = Rng::new(3);
+        for idx in ds.epoch_batches(v.batch, &mut rng).iter().take(6) {
+            let (x, labels) = ds.batch(idx);
+            tr.train_step(&x, &labels).unwrap();
+        }
+        let fwd: Vec<f64> = tr.stats.iter().map(|s| s.fwd_seconds).collect();
+        let bwd: Vec<f64> = tr.stats.iter().map(|s| s.bwd_seconds).collect();
+        println!(
+            "{:<24} {:>10.2} {:>10.2}",
+            bk.name(),
+            stats::median(&fwd) * 1e3,
+            stats::median(&bwd) * 1e3
+        );
+        b.record(&format!("{} fwd", bk.name()), fwd);
+        b.record(&format!("{} bwd", bk.name()), bwd);
+    }
+    b.finish();
+}

@@ -1,0 +1,43 @@
+//! Bench: Table E.3 — Adjoint Broyden (+OPA) step costs on the tiny variant.
+//! Paper-scale accuracies: `shine run table-e3`.
+
+use shine::data::synth_images::synth_images;
+use shine::deq::trainer::{BackwardKind, Trainer, TrainerConfig};
+use shine::runtime::engine::Engine;
+use shine::util::bench::Bench;
+use shine::util::rng::Rng;
+
+fn main() {
+    let Ok(eng) = Engine::load(&Engine::default_dir()) else {
+        eprintln!("SKIP table_e3: artifacts missing");
+        return;
+    };
+    eng.warmup_variant("tiny").unwrap();
+    let mut b = Bench::new("table e3 OPA DEQ step (tiny)").with_samples(1, 4);
+    for bk in [
+        BackwardKind::Original {
+            tol: 1e-6,
+            max_iters: 1000,
+        },
+        BackwardKind::JacobianFree,
+        BackwardKind::Shine,
+        BackwardKind::AdjointBroyden { opa_freq: None },
+        BackwardKind::AdjointBroyden { opa_freq: Some(5) },
+    ] {
+        let cfg = TrainerConfig {
+            variant: "tiny".into(),
+            backward: bk,
+            fwd_max_iters: 15,
+            seed: 1,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(&eng, cfg).unwrap();
+        let v = tr.model.v.clone();
+        let ds = synth_images(v.batch * 2, v.h, v.w, v.c_in, v.n_classes, 0.4, 2);
+        let mut rng = Rng::new(3);
+        let idx = ds.epoch_batches(v.batch, &mut rng).remove(0);
+        let (x, labels) = ds.batch(&idx);
+        b.run(&bk.name(), || tr.train_step(&x, &labels).unwrap().loss);
+    }
+    b.finish();
+}

@@ -1,0 +1,33 @@
+//! End-to-end driver (DESIGN.md e2e): train the DEQ image classifier through
+//! the full three-layer stack — Rust Broyden forward solver calling the
+//! AOT-compiled JAX/Pallas artifacts via PJRT, SHINE backward pass, Adam.
+//!
+//! Logs the pretraining + equilibrium loss curves and final accuracy; the
+//! run is recorded in EXPERIMENTS.md.
+//!
+//! Requires `make artifacts`. Run: cargo run --release --example deq_train
+//! Env: DEQ_STEPS / DEQ_PRETRAIN / DEQ_VARIANT override the defaults.
+
+use shine::coordinator::{run_experiment, ExpCtx};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("DEQ_QUICK").is_ok();
+    let ctx = ExpCtx {
+        seed: 0,
+        quick,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    let out = run_experiment("e2e", &ctx)?;
+    let acc = out.get("top1_accuracy").and_then(|j| j.as_f64()).unwrap();
+    let fwd = out.get("median_fwd_ms").and_then(|j| j.as_f64()).unwrap();
+    let bwd = out.get("median_bwd_ms").and_then(|j| j.as_f64()).unwrap();
+    println!("\n=== end-to-end DEQ training (SHINE backward) ===");
+    println!("fixed-point dim : {}", out.get("fixed_point_dim").unwrap().to_string());
+    println!("parameters      : {}", out.get("n_params").unwrap().to_string());
+    println!("test top-1      : {acc:.3}");
+    println!("median fwd pass : {fwd:.1} ms");
+    println!("median bwd pass : {bwd:.1} ms  (SHINE: no iterative inversion)");
+    println!("loss curve in results/e2e.json");
+    Ok(())
+}

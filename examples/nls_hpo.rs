@@ -1,0 +1,54 @@
+//! HPO on regularized *nonlinear least squares* (eq. 12, Fig. E.2) — the
+//! non-convex inner problem where the Hessian inverse is genuinely hard to
+//! approximate and OPA's extra secant updates pay off.
+//!
+//! Run: cargo run --release --example nls_hpo
+
+use shine::bilevel::hoag::{hoag_run, HoagOptions};
+use shine::data::split::{logreg_to_nls, split_nls};
+use shine::data::synth_text::{synth_text, TextConfig};
+use shine::hypergrad::Strategy;
+use shine::problems::nls::{NlsInner, NlsOuter};
+use shine::qn::lbfgs::OpaConfig;
+use shine::util::rng::Rng;
+
+fn main() {
+    let mut cfg = TextConfig::news20_like();
+    cfg.n_docs = 500;
+    cfg.n_features = 1500;
+    cfg.n_informative = 80;
+    let data = logreg_to_nls(&synth_text(&cfg, 3));
+    let mut rng = Rng::new(4);
+    let (train, val, test) = split_nls(&data, &mut rng);
+    println!("NLS dataset: n_train={} d={}", train.n(), train.x.cols);
+    let prob = NlsInner { train };
+    let outer = NlsOuter { val, test };
+
+    for (name, strategy, opa) in [
+        (
+            "hoag",
+            Strategy::Full {
+                tol: 1e-8,
+                max_iters: usize::MAX,
+            },
+            false,
+        ),
+        ("shine", Strategy::Shine, false),
+        ("shine-opa", Strategy::Shine, true),
+        ("jacobian-free", Strategy::JacobianFree, false),
+    ] {
+        let opts = HoagOptions {
+            outer_iters: 25,
+            strategy,
+            inner_memory: if opa { 60 } else { 30 },
+            opa: opa.then_some(OpaConfig { freq: 5, t0: 1.0 }),
+            ..Default::default()
+        };
+        let res = hoag_run(&prob, &outer, &[-4.0], &opts);
+        let last = res.trace.last().unwrap();
+        println!(
+            "{name:<14}: {:>6.2}s, final test loss {:.5}, theta {:+.3}",
+            res.total_time, last.test_loss, last.theta[0]
+        );
+    }
+}

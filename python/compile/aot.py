@@ -1,0 +1,121 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+Run once at build time (`make artifacts`); the Rust coordinator then loads
+`artifacts/<variant>_<entry>.hlo.txt` through the PJRT C API and Python
+never appears on the experiment hot path.
+
+HLO TEXT, not serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's XLA (xla_extension 0.5.1)
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest (artifacts/manifest.json) records for every artifact its
+input/output shapes plus the per-variant model config and parameter
+layout — the ABI rust/src/deq/model.rs programs against.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--variants tiny,cifar,...]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+from compile import model
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, specs):
+    return jax.jit(fn, keep_unused=True).lower(*specs)
+
+
+def shape_list(specs):
+    return [list(s.shape) for s in specs]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="tiny,cifar,imagenet",
+        help="comma-separated subset of VARIANTS to lower",
+    )
+    ap.add_argument("--out", default=None, help="(compat) ignored")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "variants": {}, "artifacts": {}}
+
+    for vname in args.variants.split(","):
+        vname = vname.strip()
+        if not vname:
+            continue
+        cfg = model.VARIANTS[vname]
+        p, cp = model.cfg_dims(cfg)
+        vrec = dict(cfg)
+        vrec.update(
+            pixels=p,
+            patch_channels=cp,
+            fixed_point_dim=cfg["batch"] * p * cfg["c"],
+            param_names=model.PARAM_NAMES,
+            f_param_names=model.F_PARAM_NAMES,
+            param_shapes={k: list(v) for k, v in model.param_shapes(cfg).items()},
+        )
+        manifest["variants"][vname] = vrec
+
+        entries = model.make_entry_points(cfg)
+        for ename, (fn, specs) in entries.items():
+            lowered = lower_entry(fn, specs)
+            text = to_hlo_text(lowered)
+            fname = f"{vname}_{ename}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            out_shapes = [list(s.shape) for s in lowered.out_info]
+            manifest["artifacts"][f"{vname}_{ename}"] = {
+                "file": fname,
+                "inputs": shape_list(specs),
+                "outputs": out_shapes,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+            print(f"lowered {vname}/{ename}: {len(text)} chars", file=sys.stderr)
+
+        # The standalone L1 lowrank artifact, sized to this variant's
+        # flattened fixed point with the paper's memory (m = 30).
+        d = vrec["fixed_point_dim"]
+        fn, specs = model.make_lowrank_entry(d, m=30)
+        lowered = lower_entry(fn, specs)
+        text = to_hlo_text(lowered)
+        fname = f"{vname}_lowrank_apply.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][f"{vname}_lowrank_apply"] = {
+            "file": fname,
+            "inputs": shape_list(specs),
+            "outputs": [[d]],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"lowered {vname}/lowrank_apply: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {out_dir}/manifest.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

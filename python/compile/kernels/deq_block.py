@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: fused DEQ residual-block core.
+
+The DEQ layer's hot-spot is the channel-mixing residual branch
+
+    out = relu(z @ W1 + u + b1) @ W2 + b2
+
+over a (B, P, C) activation tensor (P = H*W pixels). On GPU the original
+MDEQ does this with cuDNN convs; the TPU adaptation (DESIGN.md
+§Hardware-Adaptation) phrases it as dense matmuls so the MXU systolic array
+is the compute engine, and fuses the two matmuls, the bias/injection adds
+and the ReLU into one kernel so the intermediate (B, P, C) activation stays
+in VMEM and never round-trips to HBM.
+
+Grid/tiling: the (B*P, C) row-space is tiled by `block_rows` rows per
+program; both weight matrices are small (C <= 64 here) and are kept fully
+resident per program. VMEM per program =
+    block_rows * C * 3 (z, u, h tiles) + 2 * C * C + 2 * C  floats,
+which for block_rows=128, C=64 is ~0.2 MB — far under the ~16 MB VMEM
+budget, leaving room for the pipeline's double buffering.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter into
+plain HLO (see /opt/xla-example/README.md). The BlockSpec structure is
+still the TPU schedule; EXPERIMENTS.md §Perf estimates MXU utilisation
+from it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(z_ref, u_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    # One program handles a (block_rows, C) tile of the flattened row space.
+    z = z_ref[...]
+    u = u_ref[...]
+    h = jnp.maximum(z @ w1_ref[...] + u + b1_ref[...], 0.0)
+    o_ref[...] = h @ w2_ref[...] + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def deq_block(z, u, w1, b1, w2, b2, block_rows=128):
+    """Fused residual-branch core via Pallas.
+
+    z, u: (B, P, C); w1, w2: (C, C); b1, b2: (C,).
+    Returns relu(z @ w1 + u + b1) @ w2 + b2 with shape (B, P, C).
+    """
+    b, p, c = z.shape
+    rows = b * p
+    z2 = z.reshape(rows, c)
+    u2 = u.reshape(rows, c)
+    block_rows = min(block_rows, rows)
+    # Pad the row space up to a multiple of block_rows.
+    padded = ((rows + block_rows - 1) // block_rows) * block_rows
+    if padded != rows:
+        pad = padded - rows
+        z2 = jnp.pad(z2, ((0, pad), (0, 0)))
+        u2 = jnp.pad(u2, ((0, pad), (0, 0)))
+    grid = (padded // block_rows,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),  # z tile
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),  # u tile
+            pl.BlockSpec((c, c), lambda i: (0, 0)),  # w1 resident
+            pl.BlockSpec((c,), lambda i: (0,)),  # b1 resident
+            pl.BlockSpec((c, c), lambda i: (0, 0)),  # w2 resident
+            pl.BlockSpec((c,), lambda i: (0,)),  # b2 resident
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, c), z.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(z2, u2, w1, b1, w2, b2)
+    return out[:rows].reshape(b, p, c)
+
+
+def vmem_bytes(block_rows, c, dtype_bytes=4):
+    """VMEM footprint estimate per program (see module docstring)."""
+    tiles = 3 * block_rows * c  # z, u, out tiles (h reuses registers)
+    weights = 2 * c * c + 2 * c
+    return (tiles + weights) * dtype_bytes
+
+
+def mxu_utilization_estimate(block_rows, c):
+    """Fraction of MXU 128x128 tiles doing useful work for the two matmuls.
+
+    The MXU processes 128x128 systolic tiles; a (block_rows, c) @ (c, c)
+    matmul uses ceil(block_rows/128)*ceil(c/128)*ceil(c/128) tiles of which
+    the useful fraction is (block_rows*c*c) / (tiles * 128^3).
+    """
+    import math
+
+    tiles = (
+        math.ceil(block_rows / 128) * math.ceil(c / 128) * math.ceil(c / 128)
+    )
+    useful = block_rows * c * c
+    return useful / (tiles * 128**3)

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: Sherman-Morrison low-rank inverse application.
+
+This is the SHINE backward operation itself (eq. 4): applying the forward
+pass's quasi-Newton inverse estimate
+
+    H v = (I + sum_i u_i v_i^T) v = v + U^T (V v)
+
+where U, V are the (m, d) stacks of rank-one factors (m <= 30 in the paper's
+setting). Two skinny matvecs, fused so the (m,) intermediate stays in VMEM.
+
+Tiling: d is split into `block_d` columns per program. Each program computes
+a partial (m,) contraction V[:, tile] @ v[tile]; a second pass adds
+U[:, tile]^T @ s to the output tile. Because the (m,) intermediate is tiny,
+we phrase the whole thing as a two-stage grid with an SMEM-sized carry —
+in interpret mode this is executed as-is; on a real TPU the same structure
+maps to one VMEM-resident reduction plus a broadcast pass.
+
+The Rust coordinator uses its native implementation for small problems (the
+PJRT call overhead dominates below d ~ 10^4) and can route large DEQ
+backwards through this artifact; the `micro_qn` bench compares both.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stage1(v_ref, vs_ref, s_ref):
+    # Partial contraction over this d-tile: s += V_tile @ v_tile.
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    s_ref[...] += vs_ref[...] @ v_ref[...]
+
+
+def _stage2(v_ref, us_ref, s_ref, o_ref):
+    # o_tile = v_tile + U_tile^T @ s.
+    o_ref[...] = v_ref[...] + us_ref[...].T @ s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def lowrank_apply(v, us, vs, block_d=4096):
+    """Compute v + U^T (V v) with U=us, V=vs of shape (m, d), v of shape (d,)."""
+    (d,) = v.shape
+    m, d2 = us.shape
+    assert d2 == d and vs.shape == (m, d)
+    block_d = min(block_d, d)
+    padded = ((d + block_d - 1) // block_d) * block_d
+    if padded != d:
+        v = jnp.pad(v, (0, padded - d))
+        us = jnp.pad(us, ((0, 0), (0, padded - d)))
+        vs = jnp.pad(vs, ((0, 0), (0, padded - d)))
+    grid = (padded // block_d,)
+    # Stage 1: reduce s = V v across d-tiles (sequential grid, carry in out).
+    s = pl.pallas_call(
+        _stage1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), v.dtype),
+        interpret=True,
+    )(v, vs)
+    # Stage 2: out = v + U^T s, tile-parallel over d.
+    out = pl.pallas_call(
+        _stage2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), v.dtype),
+        interpret=True,
+    )(v, us, s)
+    return out[:d]
+
+
+def vmem_bytes(block_d, m, dtype_bytes=4):
+    """Per-program VMEM estimate: v tile + two (m, block_d) factor tiles."""
+    return (block_d + 2 * m * block_d + m) * dtype_bytes

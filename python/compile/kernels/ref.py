@@ -1,0 +1,41 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+These are the ground truth the pytest suite checks the kernels against
+(`assert_allclose`), and also what the JAX model (L2) falls back to when a
+kernel is disabled — both paths lower to the same artifact interface, so the
+Rust coordinator is oblivious to which implementation produced the HLO.
+"""
+
+import jax.numpy as jnp
+
+
+def deq_block_ref(z, u, w1, b1, w2, b2):
+    """Reference for the fused DEQ residual-block core.
+
+    z:  (B, P, C)  current fixed-point estimate (P = H*W pixels)
+    u:  (B, P, C)  input injection
+    w1: (C, C), b1: (C,), w2: (C, C), b2: (C,)
+
+    Returns relu(z @ w1 + u + b1) @ w2 + b2  — the pre-norm residual branch.
+    """
+    h = jnp.maximum(jnp.einsum("bpc,cd->bpd", z, w1) + u + b1, 0.0)
+    return jnp.einsum("bpc,cd->bpd", h, w2) + b2
+
+
+def lowrank_apply_ref(v, us, vs):
+    """Reference for the Sherman-Morrison low-rank inverse application.
+
+    The SHINE backward operation: (I + sum_i u_i v_i^T) v = v + U^T (V v).
+
+    v:  (d,)     input vector
+    us: (m, d)   row-major stack of the u_i factors
+    vs: (m, d)   row-major stack of the v_i factors
+    """
+    return v + us.T @ (vs @ v)
+
+
+def layer_norm_ref(x, gamma, beta, eps=1e-5):
+    """Per-position layer norm over the channel axis (last dim)."""
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

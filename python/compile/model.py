@@ -1,0 +1,263 @@
+"""L2: the DEQ model in JAX (build-time only; lowered to HLO by aot.py).
+
+Architecture (the TPU adaptation of the MDEQ block, DESIGN.md
+Hardware-Adaptation): a single-scale channel-mixing DEQ over patch
+embeddings,
+
+    u          = patchify(x) @ Wemb + bemb                (injection)
+    f_theta(z) = LayerNorm(z + relu(z @ W1 + u + b1) @ W2 + b2; gamma, beta)
+    z*         : z* = f_theta(z*)   (equivalently g(z) = z - f_theta(z) = 0)
+    logits     = mean_P(z*) @ Whead + bhead
+
+The fixed point z* has shape (B, P, C); with the CIFAR-proxy config the
+flattened dimension B*P*C = 32*64*32 = 65,536 — the paper's CIFAR MDEQ is
+d = 50k. Everything the Rust coordinator needs at run time is exported as a
+separate jitted entry point (see make_entry_points) so the forward solver,
+the backward strategies and the optimizer can call exactly the piece they
+need. Parameter order is fixed by PARAM_NAMES and mirrored in
+rust/src/deq/model.rs via the manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.deq_block import deq_block
+from compile.kernels.ref import deq_block_ref, layer_norm_ref
+
+# ---------------------------------------------------------------------------
+# Variants (shapes are AOT-fixed; the manifest records them for Rust)
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    # CIFAR-proxy: fixed-point dim 32*64*32 = 65,536 (paper CIFAR: 50k)
+    "cifar": dict(batch=32, h=16, w=16, c_in=3, patch=2, c=32, n_classes=10, unroll=6),
+    # ImageNet-proxy: 32*144*40 = 184,320 (paper ImageNet: 190k)
+    "imagenet": dict(batch=32, h=24, w=24, c_in=3, patch=2, c=40, n_classes=100, unroll=6),
+    # Tiny: fast CI / integration-test variant
+    "tiny": dict(batch=4, h=8, w=8, c_in=3, patch=2, c=8, n_classes=4, unroll=4),
+}
+
+PARAM_NAMES = [
+    "wemb", "bemb",  # injection
+    "w1", "b1", "w2", "b2", "gamma", "beta",  # DEQ block
+    "whead", "bhead",  # classification head
+]
+
+# Parameters that f_theta (the fixed-point map) depends on.
+F_PARAM_NAMES = ["w1", "b1", "w2", "b2", "gamma", "beta"]
+
+
+def cfg_dims(cfg):
+    """Derived dims: (P pixels, Cp patch channels)."""
+    p = (cfg["h"] // cfg["patch"]) * (cfg["w"] // cfg["patch"])
+    cp = cfg["c_in"] * cfg["patch"] * cfg["patch"]
+    return p, cp
+
+
+def param_shapes(cfg):
+    """Ordered dict name -> shape, the ABI shared with Rust."""
+    _, cp = cfg_dims(cfg)
+    c, k = cfg["c"], cfg["n_classes"]
+    return {
+        "wemb": (cp, c),
+        "bemb": (c,),
+        "w1": (c, c),
+        "b1": (c,),
+        "w2": (c, c),
+        "b2": (c,),
+        "gamma": (c,),
+        "beta": (c,),
+        "whead": (c, k),
+        "bhead": (k,),
+    }
+
+
+def init_params(cfg, key):
+    """He-style init; gamma=1, biases/beta=0. Only used by python tests —
+    the Rust coordinator owns parameter state at run time (same shapes)."""
+    shapes = param_shapes(cfg)
+    params = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        if name == "gamma":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.startswith("b") or name == "beta":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            std = (2.0 / fan_in) ** 0.5
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Model pieces
+# ---------------------------------------------------------------------------
+
+
+def patchify(x, cfg):
+    """(B, h*w*c_in) -> (B, P, patch*patch*c_in) non-overlapping patches."""
+    b = x.shape[0]
+    h, w, c_in, s = cfg["h"], cfg["w"], cfg["c_in"], cfg["patch"]
+    x = x.reshape(b, h, w, c_in)
+    x = x.reshape(b, h // s, s, w // s, s, c_in)
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # (b, h/s, w/s, s, s, c_in)
+    return x.reshape(b, (h // s) * (w // s), s * s * c_in)
+
+
+def inject(wemb, bemb, x, cfg):
+    """Input injection u = patchify(x) @ Wemb + bemb, shape (B, P, C)."""
+    return patchify(x, cfg) @ wemb + bemb
+
+
+def f_theta(fparams, z, u, use_kernel=True):
+    """The fixed-point map f_theta(z; u). fparams = (w1,b1,w2,b2,gamma,beta)."""
+    w1, b1, w2, b2, gamma, beta = fparams
+    block = deq_block if use_kernel else deq_block_ref
+    branch = block(z, u, w1, b1, w2, b2)
+    return layer_norm_ref(z + branch, gamma, beta)
+
+
+def head_logits(whead, bhead, z):
+    """Mean-pool over pixels then linear head: (B, P, C) -> (B, K)."""
+    pooled = z.mean(axis=1)
+    return pooled @ whead + bhead
+
+
+def head_loss(whead, bhead, z, labels_onehot):
+    """Mean softmax cross-entropy."""
+    logits = head_logits(whead, bhead, z)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(labels_onehot * logp, axis=-1))
+
+
+def unrolled_loss(params, x, labels_onehot, cfg, use_kernel=True):
+    """Weight-tied unrolled forward (the DEQ pre-training phase, App. D):
+    z_{t+1} = f_theta(z_t; u), z_0 = 0, `unroll` steps, then the head loss."""
+    u = inject(params["wemb"], params["bemb"], x, cfg)
+    p, _ = cfg_dims(cfg)
+    z = jnp.zeros((cfg["batch"], p, cfg["c"]), jnp.float32)
+    fparams = tuple(params[n] for n in F_PARAM_NAMES)
+    for _ in range(cfg["unroll"]):
+        z = f_theta(fparams, z, u, use_kernel=use_kernel)
+    return head_loss(params["whead"], params["bhead"], z, labels_onehot)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (each lowered to one artifact per variant)
+# ---------------------------------------------------------------------------
+
+
+def make_entry_points(cfg, use_kernel=True):
+    """Return name -> (fn, example_args) for every artifact of a variant.
+
+    All fns take/return flat tuples of f32 arrays — the PJRT ABI the Rust
+    runtime speaks. Tuples are returned even for single outputs (the Rust
+    side unwraps with to_tuple*).
+    """
+    p, cp = cfg_dims(cfg)
+    b, c, k = cfg["batch"], cfg["c"], cfg["n_classes"]
+    zs = jax.ShapeDtypeStruct((b, p, c), jnp.float32)
+    us = zs
+    xs = jax.ShapeDtypeStruct((b, cfg["h"] * cfg["w"] * cfg["c_in"]), jnp.float32)
+    ys = jax.ShapeDtypeStruct((b, k), jnp.float32)
+    wembs = jax.ShapeDtypeStruct((cp, c), jnp.float32)
+    bembs = jax.ShapeDtypeStruct((c,), jnp.float32)
+    wcc = jax.ShapeDtypeStruct((c, c), jnp.float32)
+    wc = jax.ShapeDtypeStruct((c,), jnp.float32)
+    wheads = jax.ShapeDtypeStruct((c, k), jnp.float32)
+    bheads = jax.ShapeDtypeStruct((k,), jnp.float32)
+    fparam_specs = (wcc, wc, wcc, wc, wc, wc)
+
+    def fp(args):
+        return tuple(args[:6])
+
+    # ---- forward pieces
+    def inject_fn(wemb, bemb, x):
+        return (inject(wemb, bemb, x, cfg),)
+
+    def f_fwd(*args):
+        z, u = args[6], args[7]
+        return (f_theta(fp(args), z, u, use_kernel=use_kernel),)
+
+    # ---- VJPs for the backward pass.
+    # NOTE: pallas_call(interpret=True) has no autodiff rule, so every
+    # *differentiated* entry point traces the pure-jnp reference block —
+    # which pytest asserts is numerically identical to the kernel
+    # (tests/test_kernels.py). Only f_fwd (the forward hot loop) routes
+    # through the Pallas kernel.
+    def f_vjp_z(*args):
+        z, u, v = args[6], args[7], args[8]
+        _, pullback = jax.vjp(
+            lambda zz: f_theta(fp(args), zz, u, use_kernel=False), z
+        )
+        return (pullback(v)[0],)
+
+    def f_vjp_params_u(*args):
+        z, u, v = args[6], args[7], args[8]
+        _, pullback = jax.vjp(
+            lambda fparams, uu: f_theta(fparams, z, uu, use_kernel=False),
+            fp(args),
+            u,
+        )
+        dfp, du = pullback(v)
+        return (*dfp, du)
+
+    def f_jvp(*args):
+        z, u, v = args[6], args[7], args[8]
+        _, tangent = jax.jvp(
+            lambda zz: f_theta(fp(args), zz, u, use_kernel=False), (z,), (v,)
+        )
+        return (tangent,)
+
+    def inject_vjp(wemb, bemb, x, du):
+        _, pullback = jax.vjp(lambda we, be: inject(we, be, x, cfg), wemb, bemb)
+        dwe, dbe = pullback(du)
+        return (dwe, dbe)
+
+    # ---- head
+    def head_logits_fn(whead, bhead, z):
+        return (head_logits(whead, bhead, z),)
+
+    def head_loss_grad(whead, bhead, z, y):
+        loss, grads = jax.value_and_grad(head_loss, argnums=(0, 1, 2))(
+            whead, bhead, z, y
+        )
+        dwhead, dbhead, dz = grads
+        return (jnp.reshape(loss, (1,)), dz, dwhead, dbhead)
+
+    # ---- unrolled pre-training step (loss + all 10 param grads)
+    def pretrain_grads(*args):
+        params = dict(zip(PARAM_NAMES, args[:10]))
+        x, y = args[10], args[11]
+        loss, grads = jax.value_and_grad(
+            lambda pp: unrolled_loss(pp, x, y, cfg, use_kernel=False)
+        )(params)
+        return (jnp.reshape(loss, (1,)), *(grads[n] for n in PARAM_NAMES))
+
+    all_param_specs = (wembs, bembs, *fparam_specs, wheads, bheads)
+    return {
+        "inject": (inject_fn, (wembs, bembs, xs)),
+        "f_fwd": (f_fwd, (*fparam_specs, zs, us)),
+        "f_vjp_z": (f_vjp_z, (*fparam_specs, zs, us, zs)),
+        "f_vjp_params_u": (f_vjp_params_u, (*fparam_specs, zs, us, zs)),
+        "f_jvp": (f_jvp, (*fparam_specs, zs, us, zs)),
+        "inject_vjp": (inject_vjp, (wembs, bembs, xs, us)),
+        "head_logits": (head_logits_fn, (wheads, bheads, zs)),
+        "head_loss_grad": (head_loss_grad, (wheads, bheads, zs, ys)),
+        "pretrain_grads": (pretrain_grads, (*all_param_specs, xs, ys)),
+    }
+
+
+def make_lowrank_entry(d, m=30):
+    """The L1 lowrank_apply kernel as a standalone artifact (see
+    kernels/lowrank_apply.py for when Rust routes through it)."""
+    from compile.kernels.lowrank_apply import lowrank_apply
+
+    vspec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    fspec = jax.ShapeDtypeStruct((m, d), jnp.float32)
+
+    def fn(v, us, vsf):
+        return (lowrank_apply(v, us, vsf),)
+
+    return fn, (vspec, fspec, fspec)

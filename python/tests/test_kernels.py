@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, block sizes and seeds; every case asserts
+allclose against ref.py — the CORE correctness signal for the kernels
+that end up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.deq_block import deq_block, mxu_utilization_estimate, vmem_bytes
+from compile.kernels.lowrank_apply import lowrank_apply
+from compile.kernels.ref import deq_block_ref, layer_norm_ref, lowrank_apply_ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# deq_block
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    p=st.integers(1, 33),
+    c=st.sampled_from([4, 8, 16, 32]),
+    block_rows=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_deq_block_matches_ref(b, p, c, block_rows, seed):
+    rng = np.random.default_rng(seed)
+    z = _rand(rng, b, p, c)
+    u = _rand(rng, b, p, c)
+    w1 = _rand(rng, c, c)
+    b1 = _rand(rng, c)
+    w2 = _rand(rng, c, c)
+    b2 = _rand(rng, c)
+    out = deq_block(z, u, w1, b1, w2, b2, block_rows=block_rows)
+    ref = deq_block_ref(z, u, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_deq_block_non_divisible_rows_are_padded_correctly():
+    # rows = b*p = 2*37 = 74, block 16 -> padding path must be exact.
+    rng = np.random.default_rng(7)
+    z = _rand(rng, 2, 37, 8)
+    u = _rand(rng, 2, 37, 8)
+    w1 = _rand(rng, 8, 8)
+    b1 = _rand(rng, 8)
+    w2 = _rand(rng, 8, 8)
+    b2 = _rand(rng, 8)
+    out = deq_block(z, u, w1, b1, w2, b2, block_rows=16)
+    ref = deq_block_ref(z, u, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_deq_block_relu_actually_gates():
+    # With a large negative bias the branch must be exactly b2 (ReLU kills h).
+    c = 8
+    z = jnp.ones((1, 4, c), jnp.float32)
+    u = jnp.zeros((1, 4, c), jnp.float32)
+    w1 = jnp.eye(c, dtype=jnp.float32)
+    b1 = -100.0 * jnp.ones((c,), jnp.float32)
+    w2 = jnp.eye(c, dtype=jnp.float32)
+    b2 = 3.0 * jnp.ones((c,), jnp.float32)
+    out = deq_block(z, u, w1, b1, w2, b2, block_rows=8)
+    np.testing.assert_allclose(out, 3.0 * jnp.ones_like(z), rtol=1e-6)
+
+
+def test_vmem_estimate_under_budget():
+    # The production tile config must sit far below the 16 MB VMEM budget.
+    assert vmem_bytes(128, 64) < 16 * 2**20 / 8
+
+
+def test_mxu_estimate_monotone_in_c():
+    # Fuller channel tiles -> better MXU utilization.
+    assert mxu_utilization_estimate(128, 64) > mxu_utilization_estimate(128, 16)
+
+
+# ---------------------------------------------------------------------------
+# lowrank_apply
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(3, 500),
+    m=st.integers(1, 31),
+    block_d=st.sampled_from([16, 64, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lowrank_apply_matches_ref(d, m, block_d, seed):
+    rng = np.random.default_rng(seed)
+    v = _rand(rng, d)
+    us = _rand(rng, m, d)
+    vs = _rand(rng, m, d)
+    out = lowrank_apply(v, us, vs, block_d=block_d)
+    ref = lowrank_apply_ref(v, us, vs)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_lowrank_identity_when_factors_zero():
+    d, m = 64, 5
+    v = jnp.arange(d, dtype=jnp.float32)
+    z = jnp.zeros((m, d), jnp.float32)
+    np.testing.assert_allclose(lowrank_apply(v, z, z), v)
+
+
+def test_lowrank_rank_one_analytic():
+    # H = I + u v^T: H x = x + u (v.x).
+    d = 10
+    u = jnp.arange(1.0, d + 1, dtype=jnp.float32).reshape(1, d)
+    vv = jnp.ones((1, d), jnp.float32)
+    x = jnp.ones((d,), jnp.float32)
+    out = lowrank_apply(x, u, vv, block_d=4)
+    expected = x + u[0] * float(d)
+    np.testing.assert_allclose(out, expected, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layer_norm ref sanity (it is part of f_theta's artifact path)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_layer_norm_normalizes(seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 2, 5, 16)
+    gamma = jnp.ones((16,), jnp.float32)
+    beta = jnp.zeros((16,), jnp.float32)
+    y = layer_norm_ref(x, gamma, beta)
+    np.testing.assert_allclose(np.asarray(y).mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y).std(axis=-1), 1.0, atol=1e-3)

@@ -1,0 +1,174 @@
+"""L2 correctness: the DEQ model's entry points.
+
+Checks that every artifact-bound function computes what the Rust
+coordinator assumes it computes: VJPs match jax.vjp on the monolithic
+model, the fixed-point map is well-behaved, the pretrain gradient matches
+autodiff of the unrolled loss, shapes agree with the manifest generator.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+CFG = model.VARIANTS["tiny"]
+
+
+def make_all(seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(CFG, key)
+    p, _ = model.cfg_dims(CFG)
+    b, c = CFG["batch"], CFG["c"]
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed + 1), 3)
+    x = jax.random.normal(k1, (b, CFG["h"] * CFG["w"] * CFG["c_in"]), jnp.float32)
+    z = jax.random.normal(k2, (b, p, c), jnp.float32)
+    v = jax.random.normal(k3, (b, p, c), jnp.float32)
+    return params, x, z, v
+
+
+def fparams(params):
+    return tuple(params[n] for n in model.F_PARAM_NAMES)
+
+
+def test_entry_points_shapes_match_specs():
+    eps = model.make_entry_points(CFG)
+    for name, (fn, specs) in eps.items():
+        lowered = jax.jit(fn).lower(*specs)
+        for out in lowered.out_info:
+            assert all(dim > 0 for dim in out.shape), f"{name}: bad out shape"
+
+
+def test_f_fwd_kernel_equals_ref_path():
+    params, x, z, _ = make_all()
+    u = model.inject(params["wemb"], params["bemb"], x, CFG)
+    a = model.f_theta(fparams(params), z, u, use_kernel=True)
+    b = model.f_theta(fparams(params), z, u, use_kernel=False)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_f_vjp_z_matches_jax_vjp():
+    params, x, z, v = make_all(1)
+    u = model.inject(params["wemb"], params["bemb"], x, CFG)
+    eps = model.make_entry_points(CFG)
+    fn, _ = eps["f_vjp_z"]
+    got = fn(*fparams(params), z, u, v)[0]
+    _, pullback = jax.vjp(lambda zz: model.f_theta(fparams(params), zz, u, use_kernel=False), z)
+    want = pullback(v)[0]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_f_vjp_params_u_matches_jax_vjp():
+    params, x, z, v = make_all(2)
+    u = model.inject(params["wemb"], params["bemb"], x, CFG)
+    eps = model.make_entry_points(CFG)
+    fn, _ = eps["f_vjp_params_u"]
+    outs = fn(*fparams(params), z, u, v)
+    _, pullback = jax.vjp(
+        lambda fps, uu: model.f_theta(fps, z, uu, use_kernel=False), fparams(params), u
+    )
+    dfp, du = pullback(v)
+    for got, want in zip(outs[:6], dfp):
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(outs[6], du, rtol=1e-5, atol=1e-5)
+
+
+def test_f_jvp_consistent_with_vjp():
+    # <v, J w> == <J^T v, w> for random v, w.
+    params, x, z, v = make_all(3)
+    u = model.inject(params["wemb"], params["bemb"], x, CFG)
+    w = jax.random.normal(jax.random.PRNGKey(9), z.shape, jnp.float32)
+    eps = model.make_entry_points(CFG)
+    jvp = eps["f_jvp"][0](*fparams(params), z, u, w)[0]
+    vjp = eps["f_vjp_z"][0](*fparams(params), z, u, v)[0]
+    lhs = jnp.vdot(v, jvp)
+    rhs = jnp.vdot(vjp, w)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-4)
+
+
+def test_inject_vjp_matches_autodiff():
+    params, x, z, _ = make_all(4)
+    du = jax.random.normal(jax.random.PRNGKey(11), z.shape, jnp.float32)
+    eps = model.make_entry_points(CFG)
+    dwe, dbe = eps["inject_vjp"][0](params["wemb"], params["bemb"], x, du)
+    _, pullback = jax.vjp(
+        lambda we, be: model.inject(we, be, x, CFG), params["wemb"], params["bemb"]
+    )
+    want_we, want_be = pullback(du)
+    np.testing.assert_allclose(dwe, want_we, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dbe, want_be, rtol=1e-5, atol=1e-5)
+
+
+def test_head_loss_grad_matches_autodiff():
+    params, x, z, _ = make_all(5)
+    b, k = CFG["batch"], CFG["n_classes"]
+    labels = jax.nn.one_hot(jnp.arange(b) % k, k, dtype=jnp.float32)
+    eps = model.make_entry_points(CFG)
+    loss, dz, dwh, dbh = eps["head_loss_grad"][0](params["whead"], params["bhead"], z, labels)
+    want_loss, grads = jax.value_and_grad(model.head_loss, argnums=(0, 1, 2))(
+        params["whead"], params["bhead"], z, labels
+    )
+    np.testing.assert_allclose(loss[0], want_loss, rtol=1e-5)
+    np.testing.assert_allclose(dwh, grads[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dbh, grads[1], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dz, grads[2], rtol=1e-5, atol=1e-6)
+
+
+def test_head_loss_is_mean_ce():
+    # Uniform logits -> loss == log(K).
+    params, _, z, _ = make_all(6)
+    k = CFG["n_classes"]
+    zero_head = jnp.zeros_like(params["whead"])
+    zero_b = jnp.zeros_like(params["bhead"])
+    labels = jax.nn.one_hot(jnp.zeros(CFG["batch"], jnp.int32), k, dtype=jnp.float32)
+    loss = model.head_loss(zero_head, zero_b, z, labels)
+    np.testing.assert_allclose(loss, np.log(k), rtol=1e-5)
+
+
+def test_pretrain_grads_match_autodiff():
+    params, x, _, _ = make_all(7)
+    b, k = CFG["batch"], CFG["n_classes"]
+    labels = jax.nn.one_hot(jnp.arange(b) % k, k, dtype=jnp.float32)
+    eps = model.make_entry_points(CFG)
+    outs = eps["pretrain_grads"][0](*(params[n] for n in model.PARAM_NAMES), x, labels)
+    loss = outs[0][0]
+    want_loss, want_grads = jax.value_and_grad(
+        lambda pp: model.unrolled_loss(pp, x, labels, CFG, use_kernel=False)
+    )(params)
+    np.testing.assert_allclose(loss, want_loss, rtol=1e-5)
+    for name, got in zip(model.PARAM_NAMES, outs[1:]):
+        np.testing.assert_allclose(
+            got, want_grads[name], rtol=1e-4, atol=1e-5, err_msg=name
+        )
+
+
+def test_patchify_is_a_permutation():
+    # Patchify must preserve every pixel exactly once.
+    params, x, _, _ = make_all(8)
+    patches = model.patchify(x, CFG)
+    assert patches.shape == (
+        CFG["batch"],
+        (CFG["h"] // CFG["patch"]) * (CFG["w"] // CFG["patch"]),
+        CFG["patch"] * CFG["patch"] * CFG["c_in"],
+    )
+    np.testing.assert_allclose(
+        np.sort(np.asarray(patches).ravel()), np.sort(np.asarray(x).ravel()), rtol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fixed_point_iteration_is_stable(seed):
+    # Damped Picard on f_theta must not blow up (LayerNorm bounds the output);
+    # the residual after a few steps must be finite and bounded.
+    params, x, z, _ = make_all(seed % 1000)
+    u = model.inject(params["wemb"], params["bemb"], x, CFG)
+    fp = fparams(params)
+    zz = jnp.zeros_like(z)
+    for _ in range(12):
+        zz = 0.5 * zz + 0.5 * model.f_theta(fp, zz, u, use_kernel=False)
+    res = jnp.linalg.norm(model.f_theta(fp, zz, u, use_kernel=False) - zz)
+    assert bool(jnp.isfinite(res))
+    assert float(res) < 1e3

@@ -1,0 +1,323 @@
+//! HOAG-style inexact hypergradient descent (Pedregosa 2016), the outer
+//! loop shared by every method in Fig. 1 / 2-left / E.1 / E.2.
+//!
+//! Each outer iteration k:
+//! 1. solve the inner problem from the previous solution (warm restart)
+//!    to tolerance ε_k = max(ε₀ · qᵏ, ε_min) — q is the paper's
+//!    "exponential decrease" (0.99 for HOAG, 0.78 for accelerated methods,
+//!    Appendix C);
+//! 2. compute the hypergradient with the configured [`Strategy`]
+//!    (backward tolerance tied to ε_k, warm-restarted w — Appendix C
+//!    "warm restart is used for both the inner problem and the Hessian
+//!    inversion");
+//! 3. take a gradient step on θ with an adaptive step size (halve on
+//!    validation-loss increase, gently grow otherwise).
+//!
+//! The trace records wall-clock time and held-out test loss after every
+//! outer iteration — the paper's figures plot exactly this.
+
+use crate::hypergrad::{hypergrad, ForwardArtifacts, Strategy};
+use crate::problems::{InnerProblem, OuterLoss};
+use crate::qn::lbfgs::OpaConfig;
+use crate::solvers::minimize::{lbfgs_minimize, MinimizeOptions, OpaHooks};
+use crate::util::timer::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct HoagOptions {
+    pub outer_iters: usize,
+    /// initial outer step size on θ
+    pub step_size: f64,
+    /// initial inner tolerance ε₀
+    pub tol0: f64,
+    /// geometric tolerance decrease q (HOAG: 0.99; accelerated: 0.78)
+    pub tol_decrease: f64,
+    pub tol_min: f64,
+    /// L-BFGS memory (HOAG: 10; SHINE/JF: 30; OPA: 60 — Appendix C)
+    pub inner_memory: usize,
+    pub inner_max_iters: usize,
+    /// OPA extra updates on the inner solver (SHINE-OPA variant)
+    pub opa: Option<OpaConfig>,
+    pub strategy: Strategy,
+    /// adapt step size on validation-loss feedback
+    pub adaptive_step: bool,
+    /// wall-clock budget in seconds (trace stops after exceeding it)
+    pub time_budget: f64,
+}
+
+impl Default for HoagOptions {
+    fn default() -> Self {
+        HoagOptions {
+            outer_iters: 50,
+            step_size: 1.0,
+            tol0: 1e-2,
+            tol_decrease: 0.99,
+            tol_min: 1e-10,
+            inner_memory: 30,
+            inner_max_iters: 2000,
+            opa: None,
+            strategy: Strategy::Shine,
+            adaptive_step: true,
+            time_budget: f64::INFINITY,
+        }
+    }
+}
+
+/// One outer-iteration sample of the optimization trajectory.
+#[derive(Clone, Debug)]
+pub struct OuterPoint {
+    pub k: usize,
+    pub time: f64,
+    pub theta: Vec<f64>,
+    pub val_loss: f64,
+    pub test_loss: f64,
+    pub inner_iters: usize,
+    pub inner_evals: usize,
+    pub backward_matvecs: usize,
+    pub hypergrad_norm: f64,
+    pub fallback_used: bool,
+}
+
+#[derive(Debug)]
+pub struct HoagResult {
+    pub theta: Vec<f64>,
+    pub z: Vec<f64>,
+    pub trace: Vec<OuterPoint>,
+    pub total_time: f64,
+}
+
+/// Run hypergradient descent. Only scalar θ problems are exercised by the
+/// paper's HPO experiments, but the loop is dimension-agnostic.
+pub fn hoag_run(
+    prob: &dyn InnerProblem,
+    outer: &dyn OuterLoss,
+    theta0: &[f64],
+    opts: &HoagOptions,
+) -> HoagResult {
+    let sw = Stopwatch::start();
+    let d = prob.dim();
+    let mut theta = theta0.to_vec();
+    let mut z = vec![0.0; d];
+    let mut step = opts.step_size;
+    let mut prev_val = f64::INFINITY;
+    let mut warm_w: Option<Vec<f64>> = None;
+    let mut trace = Vec::new();
+
+    for k in 0..opts.outer_iters {
+        if sw.elapsed() > opts.time_budget {
+            break;
+        }
+        let tol_k = (opts.tol0 * opts.tol_decrease.powi(k as i32)).max(opts.tol_min);
+
+        // ---- inner solve (forward pass), warm-restarted
+        let theta_k = theta.clone();
+        let obj = (d, |zz: &[f64]| {
+            let g = prob.g(&theta_k, zz);
+            let v = prob
+                .inner_value(&theta_k, zz)
+                .unwrap_or_else(|| 0.5 * crate::linalg::vecops::dot(&g, &g));
+            (v, g)
+        });
+        let min_opts = MinimizeOptions {
+            tol: tol_k,
+            max_iters: opts.inner_max_iters,
+            memory: opts.inner_memory,
+            // γ-scaling of H₀ (classical L-BFGS). Theorem 3 allows any SPD
+            // B₀; without the scaling the inner solves are far slower on
+            // ill-conditioned text problems, starving OPA of iterations.
+            scale_gamma: true,
+            ..Default::default()
+        };
+        let dg_fn;
+        let opa_hooks = match &opts.opa {
+            Some(cfg) => {
+                let theta_c = theta.clone();
+                dg_fn = move |zz: &[f64]| prob.dg_dtheta_col(&theta_c, zz, 0);
+                Some(OpaHooks {
+                    dg_dtheta: &dg_fn,
+                    config: *cfg,
+                })
+            }
+            None => None,
+        };
+        let res = lbfgs_minimize(&obj, &z, &min_opts, opa_hooks, None);
+        z = res.z.clone();
+
+        // ---- backward pass
+        let fwd = ForwardArtifacts {
+            z: &res.z,
+            inv: Some(&res.qn),
+            low_rank: None,
+        };
+        // Tie the backward tolerance to the forward one (HOAG's schedule).
+        let strategy = match opts.strategy {
+            Strategy::Full { tol: _, max_iters } => Strategy::Full {
+                tol: tol_k,
+                max_iters,
+            },
+            Strategy::ShineRefine { iters, tol: _ } => Strategy::ShineRefine {
+                iters,
+                tol: tol_k,
+            },
+            s => s,
+        };
+        let hg = hypergrad(prob, outer, &theta, &fwd, strategy, warm_w.as_deref());
+        warm_w = Some(hg.w.clone());
+
+        // ---- outer step with adaptive step size
+        let g_norm = crate::linalg::vecops::nrm2(&hg.grad_theta);
+        for (t, g) in theta.iter_mut().zip(&hg.grad_theta) {
+            // Trust-region-style step: θ is a log-regularization weight, so
+            // a move of more than 1 nat per outer iteration is never useful
+            // and a single overshoot would swing λ by orders of magnitude.
+            let delta = (step * g).clamp(-1.0, 1.0);
+            *t -= delta;
+            *t = t.clamp(-30.0, 10.0);
+        }
+        let val = outer.value(&z);
+        if opts.adaptive_step {
+            if val > prev_val + 1e-12 {
+                step *= 0.5;
+            } else {
+                step *= 1.05;
+            }
+        }
+        prev_val = val;
+
+        trace.push(OuterPoint {
+            k,
+            time: sw.elapsed(),
+            theta: theta.clone(),
+            val_loss: val,
+            test_loss: outer.test_value(&z),
+            inner_iters: res.iters,
+            inner_evals: res.n_evals,
+            backward_matvecs: hg.backward_matvecs,
+            hypergrad_norm: g_norm,
+            fallback_used: hg.fallback_used,
+        });
+    }
+    HoagResult {
+        theta,
+        z,
+        total_time: sw.elapsed(),
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::quadratic::{QuadraticBilevel, QuadraticOuter};
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, n: usize) -> (QuadraticBilevel, QuadraticOuter) {
+        let mut rng = Rng::new(seed);
+        let p = QuadraticBilevel::random(n, &mut rng);
+        let outer = QuadraticOuter {
+            target: p.target.clone(),
+        };
+        (p, outer)
+    }
+
+    fn final_val(res: &HoagResult) -> f64 {
+        res.trace.last().unwrap().val_loss
+    }
+
+    #[test]
+    fn hoag_with_full_strategy_decreases_val_loss() {
+        let (p, outer) = setup(1, 10);
+        let opts = HoagOptions {
+            outer_iters: 30,
+            strategy: Strategy::Full {
+                tol: 1e-8,
+                max_iters: usize::MAX,
+            },
+            ..Default::default()
+        };
+        let res = hoag_run(&p, &outer, &[0.5], &opts);
+        let first = res.trace.first().unwrap().val_loss;
+        assert!(
+            final_val(&res) < first,
+            "val did not decrease: {first} -> {}",
+            final_val(&res)
+        );
+    }
+
+    #[test]
+    fn hoag_with_shine_tracks_full() {
+        let (p, outer) = setup(2, 10);
+        let mk = |strategy| HoagOptions {
+            outer_iters: 30,
+            strategy,
+            ..Default::default()
+        };
+        let full = hoag_run(
+            &p,
+            &outer,
+            &[0.5],
+            &mk(Strategy::Full {
+                tol: 1e-8,
+                max_iters: usize::MAX,
+            }),
+        );
+        let shine = hoag_run(&p, &outer, &[0.5], &mk(Strategy::Shine));
+        // Both should land in the same val-loss basin.
+        let rel = (final_val(&shine) - final_val(&full)).abs() / final_val(&full).abs().max(1e-9);
+        assert!(
+            rel < 0.5,
+            "shine {} vs full {}",
+            final_val(&shine),
+            final_val(&full)
+        );
+    }
+
+    #[test]
+    fn trace_is_monotone_in_time() {
+        let (p, outer) = setup(3, 6);
+        let res = hoag_run(
+            &p,
+            &outer,
+            &[0.0],
+            &HoagOptions {
+                outer_iters: 10,
+                ..Default::default()
+            },
+        );
+        assert_eq!(res.trace.len(), 10);
+        for w in res.trace.windows(2) {
+            assert!(w[1].time >= w[0].time);
+        }
+    }
+
+    #[test]
+    fn opa_variant_runs_and_decreases() {
+        let (p, outer) = setup(4, 8);
+        let opts = HoagOptions {
+            outer_iters: 20,
+            opa: Some(OpaConfig { freq: 5, t0: 1.0 }),
+            inner_memory: 60,
+            strategy: Strategy::Shine,
+            ..Default::default()
+        };
+        let res = hoag_run(&p, &outer, &[0.5], &opts);
+        let first = res.trace.first().unwrap().val_loss;
+        assert!(final_val(&res) <= first);
+    }
+
+    #[test]
+    fn time_budget_respected() {
+        let (p, outer) = setup(5, 6);
+        let res = hoag_run(
+            &p,
+            &outer,
+            &[0.0],
+            &HoagOptions {
+                outer_iters: 100_000,
+                time_budget: 0.2,
+                ..Default::default()
+            },
+        );
+        assert!(res.total_time < 5.0);
+        assert!(res.trace.len() < 100_000);
+    }
+}

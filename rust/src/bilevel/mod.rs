@@ -1,0 +1,14 @@
+//! Bi-level outer loops (the Fig. 1 / 2 / E.1 / E.2 drivers).
+//!
+//! * [`hoag`] — inexact hypergradient descent à la HOAG (Pedregosa 2016):
+//!   warm-restarted inner solves with a geometrically decreasing tolerance,
+//!   pluggable backward strategy (Original / SHINE / Jacobian-Free / refine
+//!   / fallback), optional OPA on the inner solver.
+//! * [`search`] — grid search and random search baselines (Bergstra &
+//!   Bengio 2012), evaluated with the same inner solver for fairness.
+
+pub mod hoag;
+pub mod search;
+
+pub use hoag::{hoag_run, HoagOptions, HoagResult, OuterPoint};
+pub use search::{grid_search, random_search, SearchResult};

@@ -1,0 +1,159 @@
+//! Grid and random search baselines (Fig. 1 / Fig. E.1 include both;
+//! Bergstra & Bengio 2012). Each candidate θ gets a full inner solve with
+//! the same L-BFGS solver the gradient-based methods use, so the comparison
+//! is solver-fair; the trace records the best-so-far test loss over time,
+//! matching how the paper plots search baselines.
+
+use crate::problems::{InnerProblem, OuterLoss};
+use crate::solvers::minimize::{lbfgs_minimize, MinimizeOptions};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct SearchPoint {
+    pub time: f64,
+    pub theta: f64,
+    pub val_loss: f64,
+    pub test_loss: f64,
+    /// best-so-far (by validation) test loss — the reported curve
+    pub best_test_loss: f64,
+}
+
+#[derive(Debug)]
+pub struct SearchResult {
+    pub best_theta: f64,
+    pub best_val: f64,
+    pub trace: Vec<SearchPoint>,
+}
+
+fn evaluate_candidates(
+    prob: &dyn InnerProblem,
+    outer: &dyn OuterLoss,
+    thetas: &[f64],
+    tol: f64,
+    max_iters: usize,
+    time_budget: f64,
+) -> SearchResult {
+    let sw = Stopwatch::start();
+    let d = prob.dim();
+    let mut best_val = f64::INFINITY;
+    let mut best_theta = f64::NAN;
+    let mut best_test = f64::INFINITY;
+    let mut trace = Vec::new();
+    let mut z = vec![0.0; d];
+    for &t in thetas {
+        if sw.elapsed() > time_budget {
+            break;
+        }
+        let theta = [t];
+        let obj = (d, |zz: &[f64]| {
+            (
+                prob.inner_value(&theta, zz)
+                    .expect("search requires a minimization inner problem"),
+                prob.g(&theta, zz),
+            )
+        });
+        let res = lbfgs_minimize(
+            &obj,
+            &z,
+            &MinimizeOptions {
+                tol,
+                max_iters,
+                ..Default::default()
+            },
+            None,
+            None,
+        );
+        z = res.z; // warm start the next candidate
+        let val = outer.value(&z);
+        let test = outer.test_value(&z);
+        if val < best_val {
+            best_val = val;
+            best_theta = t;
+            best_test = test;
+        }
+        trace.push(SearchPoint {
+            time: sw.elapsed(),
+            theta: t,
+            val_loss: val,
+            test_loss: test,
+            best_test_loss: best_test,
+        });
+    }
+    SearchResult {
+        best_theta,
+        best_val,
+        trace,
+    }
+}
+
+/// Grid search over log-regularization values in [lo, hi] (inclusive).
+pub fn grid_search(
+    prob: &dyn InnerProblem,
+    outer: &dyn OuterLoss,
+    lo: f64,
+    hi: f64,
+    n_points: usize,
+    tol: f64,
+    max_iters: usize,
+    time_budget: f64,
+) -> SearchResult {
+    let thetas: Vec<f64> = (0..n_points)
+        .map(|i| lo + (hi - lo) * i as f64 / (n_points.max(2) - 1) as f64)
+        .collect();
+    evaluate_candidates(prob, outer, &thetas, tol, max_iters, time_budget)
+}
+
+/// Random search: uniform samples of θ in [lo, hi].
+#[allow(clippy::too_many_arguments)]
+pub fn random_search(
+    prob: &dyn InnerProblem,
+    outer: &dyn OuterLoss,
+    lo: f64,
+    hi: f64,
+    n_points: usize,
+    tol: f64,
+    max_iters: usize,
+    time_budget: f64,
+    rng: &mut Rng,
+) -> SearchResult {
+    let thetas: Vec<f64> = (0..n_points).map(|_| rng.uniform_in(lo, hi)).collect();
+    evaluate_candidates(prob, outer, &thetas, tol, max_iters, time_budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::quadratic::{QuadraticBilevel, QuadraticOuter};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grid_finds_reasonable_theta() {
+        let mut rng = Rng::new(6);
+        let p = QuadraticBilevel::random(8, &mut rng);
+        let outer = QuadraticOuter {
+            target: p.target.clone(),
+        };
+        let res = grid_search(&p, &outer, -6.0, 3.0, 12, 1e-8, 2000, 60.0);
+        assert_eq!(res.trace.len(), 12);
+        assert!(res.best_theta.is_finite());
+        // best-so-far is non-increasing
+        for w in res.trace.windows(2) {
+            assert!(w[1].best_test_loss <= w[0].best_test_loss + 1e-12);
+        }
+    }
+
+    #[test]
+    fn random_search_deterministic_under_seed() {
+        let mut rng1 = Rng::new(9);
+        let p = QuadraticBilevel::random(6, &mut rng1);
+        let outer = QuadraticOuter {
+            target: p.target.clone(),
+        };
+        let mut s1 = Rng::new(77);
+        let mut s2 = Rng::new(77);
+        let r1 = random_search(&p, &outer, -5.0, 2.0, 6, 1e-8, 1000, 60.0, &mut s1);
+        let r2 = random_search(&p, &outer, -5.0, 2.0, 6, 1e-8, 1000, 60.0, &mut s2);
+        assert_eq!(r1.best_theta, r2.best_theta);
+    }
+}

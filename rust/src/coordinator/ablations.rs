@@ -1,0 +1,213 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * **qN memory** — the paper uses 30 updates for accelerated methods and
+//!   checks 30 does not help the original method (App. C). We sweep
+//!   m ∈ {5, 10, 30, 60} and measure SHINE's hypergradient error and the
+//!   final HPO loss.
+//! * **tolerance schedule** — the accelerated methods use a faster
+//!   exponential decrease (0.78 vs 0.99); sweep both for SHINE and HOAG.
+//! * **refine budget** — the k in SHINE-refine (Fig. 3's trade-off knob) on
+//!   the bi-level problem, where the exact hypergradient is computable.
+
+use crate::bilevel::hoag::{hoag_run, HoagOptions};
+use crate::coordinator::{ExpCtx, Experiment};
+use crate::data::split::split_logreg;
+use crate::data::synth_text::{synth_text, TextConfig};
+use crate::hypergrad::{hypergrad, ForwardArtifacts, Strategy};
+use crate::problems::logreg::{LogRegInner, LogRegOuter};
+use crate::problems::quadratic::{QuadraticBilevel, QuadraticOuter};
+use crate::problems::InnerProblem;
+use crate::solvers::minimize::{lbfgs_minimize, MinimizeOptions};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+pub struct Ablations;
+
+impl Experiment for Ablations {
+    fn id(&self) -> &'static str {
+        "ablations"
+    }
+    fn description(&self) -> &'static str {
+        "Ablations: qN memory size, tolerance-decrease schedule, refine budget \
+         (the App. C design choices)"
+    }
+    fn run(&self, ctx: &ExpCtx) -> Result<Json> {
+        let mut out = Json::obj();
+        out.set("memory", self.memory_sweep(ctx)?)
+            .set("tol_schedule", self.tol_sweep(ctx)?)
+            .set("refine_budget", self.refine_sweep(ctx)?);
+        Ok(out)
+    }
+}
+
+impl Ablations {
+    /// Memory sweep: SHINE hypergradient error vs m on the quadratic oracle
+    /// (exact answer known) + final HPO loss on the LR problem.
+    fn memory_sweep(&self, ctx: &ExpCtx) -> Result<Json> {
+        let mems = [5usize, 10, 30, 60];
+        // (a) hypergradient error on the quadratic oracle
+        let mut rng = Rng::new(ctx.seed ^ 0xAB1);
+        let n = 40;
+        let p = QuadraticBilevel::random(n, &mut rng);
+        let outer = QuadraticOuter {
+            target: p.target.clone(),
+        };
+        let theta = [0.2];
+        let exact = p.exact_hypergrad(&theta);
+        let mut rows = Vec::new();
+        for &m in &mems {
+            let obj = (n, |z: &[f64]| {
+                (p.inner_value(&theta, z).unwrap(), p.g(&theta, z))
+            });
+            let res = lbfgs_minimize(
+                &obj,
+                &vec![0.0; n],
+                &MinimizeOptions {
+                    tol: 1e-10,
+                    memory: m,
+                    ..Default::default()
+                },
+                None,
+                None,
+            );
+            let arts = ForwardArtifacts {
+                z: &res.z,
+                inv: Some(&res.qn),
+                low_rank: None,
+            };
+            let sh = hypergrad(&p, &outer, &theta, &arts, Strategy::Shine, None);
+            let rel_err = (sh.grad_theta[0] - exact).abs() / exact.abs().max(1e-12);
+            eprintln!("  [ablation memory] m={m}: SHINE rel err {rel_err:.3e}");
+            let mut j = Json::obj();
+            j.set("memory", m).set("shine_rel_err", rel_err);
+            rows.push(j);
+        }
+        let mut j = Json::obj();
+        j.set("quadratic_oracle", Json::Arr(rows));
+        Ok(j)
+    }
+
+    /// Tolerance-decrease sweep on the LR HPO problem.
+    fn tol_sweep(&self, ctx: &ExpCtx) -> Result<Json> {
+        let mut cfg = TextConfig::news20_like();
+        cfg.n_docs /= if ctx.quick { 8 } else { 4 };
+        cfg.n_features /= if ctx.quick { 8 } else { 4 };
+        cfg.n_informative /= if ctx.quick { 8 } else { 4 };
+        let data = synth_text(&cfg, ctx.seed);
+        let mut rng = Rng::new(ctx.seed ^ 0xAB2);
+        let (train, val, test) = split_logreg(&data, &mut rng);
+        let prob = LogRegInner { train };
+        let outer = LogRegOuter { val, test };
+        let mut rows = Vec::new();
+        for strategy_name in ["shine", "hoag"] {
+            for decrease in [0.99f64, 0.9, 0.78, 0.6] {
+                let strategy = if strategy_name == "shine" {
+                    Strategy::Shine
+                } else {
+                    Strategy::Full {
+                        tol: 1e-8,
+                        max_iters: usize::MAX,
+                    }
+                };
+                let opts = HoagOptions {
+                    outer_iters: if ctx.quick { 6 } else { 25 },
+                    strategy,
+                    tol_decrease: decrease,
+                    ..Default::default()
+                };
+                let res = hoag_run(&prob, &outer, &[-4.0], &opts);
+                let last = res.trace.last().unwrap();
+                eprintln!(
+                    "  [ablation tol] {strategy_name} q={decrease}: test {:.4} in {:.2}s",
+                    last.test_loss, res.total_time
+                );
+                let mut j = Json::obj();
+                j.set("strategy", strategy_name)
+                    .set("decrease", decrease)
+                    .set("final_test_loss", last.test_loss)
+                    .set("total_time", res.total_time);
+                rows.push(j);
+            }
+        }
+        Ok(Json::Arr(rows))
+    }
+
+    /// Refine-budget sweep on the quadratic oracle: error vs k.
+    fn refine_sweep(&self, ctx: &ExpCtx) -> Result<Json> {
+        let mut rng = Rng::new(ctx.seed ^ 0xAB3);
+        let n = 40;
+        let p = QuadraticBilevel::random(n, &mut rng);
+        let outer = QuadraticOuter {
+            target: p.target.clone(),
+        };
+        let theta = [0.0];
+        let exact = p.exact_hypergrad(&theta);
+        let obj = (n, |z: &[f64]| {
+            (p.inner_value(&theta, z).unwrap(), p.g(&theta, z))
+        });
+        // Small memory so vanilla SHINE is visibly inexact.
+        let res = lbfgs_minimize(
+            &obj,
+            &vec![0.0; n],
+            &MinimizeOptions {
+                tol: 1e-10,
+                memory: 5,
+                ..Default::default()
+            },
+            None,
+            None,
+        );
+        let arts = ForwardArtifacts {
+            z: &res.z,
+            inv: Some(&res.qn),
+            low_rank: None,
+        };
+        let mut rows = Vec::new();
+        for k in [0usize, 1, 2, 5, 10, 20] {
+            let strategy = if k == 0 {
+                Strategy::Shine
+            } else {
+                Strategy::ShineRefine {
+                    iters: k,
+                    tol: 1e-12,
+                }
+            };
+            let hg = hypergrad(&p, &outer, &theta, &arts, strategy, None);
+            let rel_err = (hg.grad_theta[0] - exact).abs() / exact.abs().max(1e-12);
+            eprintln!(
+                "  [ablation refine] k={k}: rel err {rel_err:.3e} ({} matvecs)",
+                hg.backward_matvecs
+            );
+            let mut j = Json::obj();
+            j.set("k", k)
+                .set("rel_err", rel_err)
+                .set("matvecs", hg.backward_matvecs);
+            rows.push(j);
+        }
+        Ok(Json::Arr(rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_quick_run() {
+        let ctx = ExpCtx {
+            quick: true,
+            ..Default::default()
+        };
+        let out = Ablations.run(&ctx).unwrap();
+        assert!(out.get("memory").is_some());
+        assert!(out.get("tol_schedule").is_some());
+        // refine error must be non-increasing in k.
+        let rows = out.get("refine_budget").unwrap().as_arr().unwrap();
+        let errs: Vec<f64> = rows
+            .iter()
+            .map(|r| r.get("rel_err").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(errs.last().unwrap() <= &(errs[0] + 1e-12));
+    }
+}

@@ -1,0 +1,426 @@
+//! Bi-level / hyperparameter-optimization experiments (Fig. 1, Fig. 2,
+//! Fig. E.1, Fig. E.2). All run on the native Rust inner problems (sparse
+//! logistic regression / NLS) — the DEQ experiments are in `deq_exps`.
+
+use crate::bilevel::hoag::{hoag_run, HoagOptions, HoagResult};
+use crate::bilevel::search::{grid_search, random_search};
+use crate::coordinator::{ExpCtx, Experiment};
+use crate::data::split::{logreg_to_nls, split_logreg, split_nls};
+use crate::data::synth_text::{synth_text, TextConfig};
+use crate::hypergrad::Strategy;
+use crate::linalg::lu::Lu;
+use crate::problems::logreg::{LogRegInner, LogRegOuter};
+use crate::problems::nls::{NlsInner, NlsOuter};
+use crate::problems::InnerProblem;
+use crate::qn::lbfgs::OpaConfig;
+use crate::qn::InvOp;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use anyhow::Result;
+
+/// Appendix-C method configurations. The paper's figures compare methods at
+/// equal wall-clock time, so the outer loop is time-budgeted: `outer_iters`
+/// is a generous cap and `time_budget` (set by the caller) is the binding
+/// constraint.
+fn method_opts(strategy: Strategy, opa: bool, outer_iters: usize) -> HoagOptions {
+    let accelerated = !matches!(strategy, Strategy::Full { .. });
+    HoagOptions {
+        outer_iters,
+        step_size: 20.0, // θ is log-λ; hypergrads are O(1e-3) at θ₀, adaptive halving tames overshoot
+        tol0: 1e-2,
+        // HOAG: 0.99 exponential decrease; accelerated methods: 0.78 (App. C)
+        tol_decrease: if accelerated { 0.78 } else { 0.99 },
+        tol_min: 1e-10,
+        // memory: 10 for HOAG, 30 for accelerated, 60 for OPA (App. C)
+        inner_memory: if opa {
+            60
+        } else if accelerated {
+            30
+        } else {
+            10
+        },
+        inner_max_iters: 1500,
+        opa: if opa {
+            Some(OpaConfig { freq: 5, t0: 1.0 })
+        } else {
+            None
+        },
+        strategy,
+        adaptive_step: true,
+        time_budget: f64::INFINITY,
+    }
+}
+
+fn trace_json(res: &HoagResult) -> Json {
+    let rows: Vec<Json> = res
+        .trace
+        .iter()
+        .map(|p| {
+            let mut j = Json::obj();
+            j.set("k", p.k)
+                .set("time", p.time)
+                .set("theta", p.theta[0])
+                .set("val_loss", p.val_loss)
+                .set("test_loss", p.test_loss)
+                .set("inner_iters", p.inner_iters)
+                .set("backward_matvecs", p.backward_matvecs);
+            j
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+const FULL: Strategy = Strategy::Full {
+    tol: 1e-8,
+    max_iters: usize::MAX,
+};
+
+fn dataset_cfg(name: &str, quick: bool) -> TextConfig {
+    let mut cfg = match name {
+        "news20" => TextConfig::news20_like(),
+        "realsim" => TextConfig::realsim_like(),
+        _ => panic!("unknown dataset {name}"),
+    };
+    if quick {
+        cfg.n_docs /= 8;
+        cfg.n_features /= 8;
+        cfg.n_informative /= 8;
+    }
+    cfg
+}
+
+/// Run one (dataset, methods) HPO comparison; shared by Fig. 1/2/E.1.
+fn run_hpo_methods(
+    dataset: &str,
+    methods: &[(&str, Strategy, bool)],
+    ctx: &ExpCtx,
+    outer_iters: usize,
+    with_search: bool,
+) -> Result<Json> {
+    let cfg = dataset_cfg(dataset, ctx.quick);
+    let data = synth_text(&cfg, ctx.seed);
+    let mut rng = Rng::new(ctx.seed ^ 0x5417);
+    let (train, val, test) = split_logreg(&data, &mut rng);
+    let prob = LogRegInner { train };
+    let outer = LogRegOuter { val, test };
+    let theta0 = [-4.0f64]; // λ₀ = e⁻⁴, HOAG-style starting point
+
+    let mut out = Json::obj();
+    out.set("dataset", dataset)
+        .set("n_train", prob.train.n())
+        .set("d", prob.dim());
+    let mut methods_json = Json::obj();
+    for (name, strategy, opa) in methods {
+        let mut opts = method_opts(*strategy, *opa, outer_iters * 20);
+        // Equal-time comparison (the paper's x-axis is wall time).
+        opts.time_budget = outer_iters as f64 * 0.04;
+        let res = hoag_run(&prob, &outer, &theta0, &opts);
+        let final_test = res.trace.last().map(|p| p.test_loss).unwrap_or(f64::NAN);
+        eprintln!(
+            "  [{dataset}] {name}: {:.2}s, final test loss {:.4}, theta {:.3}",
+            res.total_time, final_test, res.theta[0]
+        );
+        let mut m = Json::obj();
+        m.set("trace", trace_json(&res))
+            .set("total_time", res.total_time)
+            .set("final_theta", res.theta[0])
+            .set("final_test_loss", final_test);
+        methods_json.set(name, m);
+    }
+    if with_search {
+        let n_points = if ctx.quick { 4 } else { 12 };
+        let budget = 120.0;
+        let gs = grid_search(&prob, &outer, -8.0, 0.0, n_points, 1e-6, 1500, budget);
+        let mut rng_s = Rng::new(ctx.seed ^ 0xABC);
+        let rs = random_search(
+            &prob, &outer, -8.0, 0.0, n_points, 1e-6, 1500, budget, &mut rng_s,
+        );
+        for (name, sr) in [("grid-search", gs), ("random-search", rs)] {
+            let rows: Vec<Json> = sr
+                .trace
+                .iter()
+                .map(|p| {
+                    let mut j = Json::obj();
+                    j.set("time", p.time)
+                        .set("theta", p.theta)
+                        .set("test_loss", p.test_loss)
+                        .set("best_test_loss", p.best_test_loss);
+                    j
+                })
+                .collect();
+            let mut m = Json::obj();
+            m.set("trace", Json::Arr(rows)).set("best_theta", sr.best_theta);
+            methods_json.set(name, m);
+            eprintln!("  [{dataset}] {name}: best θ {:.3}", sr.best_theta);
+        }
+    }
+    out.set("methods", methods_json);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — HPO on ℓ2-LR, 2 datasets, SHINE vs competitors
+// ---------------------------------------------------------------------------
+
+pub struct Fig1;
+
+impl Experiment for Fig1 {
+    fn id(&self) -> &'static str {
+        "fig1"
+    }
+    fn description(&self) -> &'static str {
+        "Fig. 1: bi-level HPO on l2-logistic regression (20news-like & real-sim-like): \
+         test-loss vs wall time for HOAG / SHINE / SHINE-refine / Jacobian-Free / grid"
+    }
+    fn run(&self, ctx: &ExpCtx) -> Result<Json> {
+        let outer_iters = if ctx.quick { 8 } else { 60 };
+        let methods: Vec<(&str, Strategy, bool)> = vec![
+            ("hoag", FULL, false),
+            ("shine", Strategy::Shine, false),
+            (
+                "shine-refine",
+                Strategy::ShineRefine {
+                    iters: 5,
+                    tol: 1e-10,
+                },
+                false,
+            ),
+            ("jacobian-free", Strategy::JacobianFree, false),
+        ];
+        let mut out = Json::obj();
+        for ds in ["news20", "realsim"] {
+            out.set(ds, run_hpo_methods(ds, &methods, ctx, outer_iters, true)?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 (left) — OPA comparison on 20news
+// ---------------------------------------------------------------------------
+
+pub struct Fig2Left;
+
+impl Experiment for Fig2Left {
+    fn id(&self) -> &'static str {
+        "fig2-left"
+    }
+    fn description(&self) -> &'static str {
+        "Fig. 2 left: SHINE-OPA vs SHINE vs HOAG on the 20news-like problem \
+         (all methods share the same Rust LBFGS, as the paper's pure-python comparison)"
+    }
+    fn run(&self, ctx: &ExpCtx) -> Result<Json> {
+        let outer_iters = if ctx.quick { 8 } else { 60 };
+        let methods: Vec<(&str, Strategy, bool)> = vec![
+            ("hoag", FULL, false),
+            ("shine", Strategy::Shine, false),
+            ("shine-opa", Strategy::Shine, true),
+        ];
+        run_hpo_methods("news20", &methods, ctx, outer_iters, false)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 (right) — inversion quality on the breast-cancer-like dataset
+// ---------------------------------------------------------------------------
+
+pub struct Fig2Right;
+
+impl Experiment for Fig2Right {
+    fn id(&self) -> &'static str {
+        "fig2-right"
+    }
+    fn description(&self) -> &'static str {
+        "Fig. 2 right: quality of B^-1 v vs exact J^-1 v in prescribed / Krylov / \
+         random directions with OPA updates (d=30 dense, 100 seeds)"
+    }
+    fn run(&self, ctx: &ExpCtx) -> Result<Json> {
+        let n_runs = if ctx.quick { 10 } else { 100 };
+        let mut scatter: Vec<(String, f64, f64)> = Vec::new();
+        for run in 0..n_runs {
+            let seed = ctx.seed.wrapping_add(run as u64);
+            let mut rng = Rng::new(seed ^ 0xF16);
+            let data = crate::data::synth_breast::synth_breast(400, seed);
+            let (train, _val, _test) = split_logreg(&data, &mut rng);
+            let prob = LogRegInner { train };
+            let d = prob.dim();
+            let theta = [-2.0f64];
+            // Prescribed direction: random, but used for the OPA updates.
+            let prescribed = rng.normal_vec(d);
+            let presc_clone = prescribed.clone();
+            let dg = move |_z: &[f64]| presc_clone.clone();
+            let obj = (d, |z: &[f64]| {
+                (prob.inner_value(&theta, z).unwrap(), prob.g(&theta, z))
+            });
+            let res = crate::solvers::minimize::lbfgs_minimize(
+                &obj,
+                &vec![0.0; d],
+                &crate::solvers::minimize::MinimizeOptions {
+                    tol: 1e-6,
+                    max_iters: 400,
+                    memory: 60,
+                    scale_gamma: false,
+                    ..Default::default()
+                },
+                Some(crate::solvers::minimize::OpaHooks {
+                    dg_dtheta: &dg,
+                    config: OpaConfig { freq: 5, t0: 1.0 },
+                }),
+                None,
+            );
+            // Exact Hessian at z* (dense, d = 30).
+            let mut hess = crate::linalg::dmat::DMat::zeros(d, d);
+            for j in 0..d {
+                let mut e = vec![0.0; d];
+                e[j] = 1.0;
+                let col = prob.jvp(&theta, &res.z, &e);
+                for i in 0..d {
+                    hess[(i, j)] = col[i];
+                }
+            }
+            let lu = Lu::factor(&hess)?;
+            // Krylov direction: J_{g}(z*)·s_last ≈ the last secant y.
+            let krylov = prob.jvp(&theta, &res.z, &{
+                let mut s = rng.normal_vec(d);
+                // use a step-like direction: H∇ at z*
+                s = res.qn.apply_vec(&s);
+                s
+            });
+            let random_dir = rng.normal_vec(d);
+            for (kind, v) in [
+                ("prescribed", &prescribed),
+                ("krylov", &krylov),
+                ("random", &random_dir),
+            ] {
+                let exact = lu.solve(v);
+                let approx = res.qn.apply_vec(v);
+                let cos = stats::cosine_similarity(&approx, &exact);
+                let ratio = stats::norm2(&approx) / stats::norm2(&exact).max(1e-300);
+                scatter.push((kind.to_string(), cos, ratio));
+            }
+        }
+        let mut out = Json::obj();
+        for kind in ["prescribed", "krylov", "random"] {
+            let pts: Vec<Json> = scatter
+                .iter()
+                .filter(|(k, _, _)| k == kind)
+                .map(|(_, c, r)| {
+                    let mut j = Json::obj();
+                    j.set("cos_sim", *c).set("norm_ratio", *r);
+                    j
+                })
+                .collect();
+            let cos_med = stats::median(
+                &scatter
+                    .iter()
+                    .filter(|(k, _, _)| k == kind)
+                    .map(|(_, c, _)| *c)
+                    .collect::<Vec<_>>(),
+            );
+            eprintln!("  fig2-right {kind}: median cos-sim {cos_med:.3}");
+            let mut kj = Json::obj();
+            kj.set("points", Json::Arr(pts)).set("median_cos", cos_med);
+            out.set(kind, kj);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. E.1 — extended comparison (HOAG-limited + random search)
+// ---------------------------------------------------------------------------
+
+pub struct FigE1;
+
+impl Experiment for FigE1 {
+    fn id(&self) -> &'static str {
+        "fig-e1"
+    }
+    fn description(&self) -> &'static str {
+        "Fig. E.1: extended HPO baselines — HOAG with truncated backward solves \
+         and random search on both datasets"
+    }
+    fn run(&self, ctx: &ExpCtx) -> Result<Json> {
+        let outer_iters = if ctx.quick { 8 } else { 60 };
+        let methods: Vec<(&str, Strategy, bool)> = vec![
+            ("hoag", FULL, false),
+            (
+                "hoag-limited-5",
+                Strategy::Full {
+                    tol: 1e-8,
+                    max_iters: 5,
+                },
+                false,
+            ),
+            (
+                "hoag-limited-20",
+                Strategy::Full {
+                    tol: 1e-8,
+                    max_iters: 20,
+                },
+                false,
+            ),
+            ("shine", Strategy::Shine, false),
+            ("jacobian-free", Strategy::JacobianFree, false),
+        ];
+        let mut out = Json::obj();
+        for ds in ["news20", "realsim"] {
+            out.set(ds, run_hpo_methods(ds, &methods, ctx, outer_iters, true)?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. E.2 — regularized nonlinear least squares
+// ---------------------------------------------------------------------------
+
+pub struct FigE2;
+
+impl Experiment for FigE2 {
+    fn id(&self) -> &'static str {
+        "fig-e2"
+    }
+    fn description(&self) -> &'static str {
+        "Fig. E.2: HPO on regularized nonlinear least squares (eq. 12) — \
+         the non-convex inner problem where OPA helps most"
+    }
+    fn run(&self, ctx: &ExpCtx) -> Result<Json> {
+        let outer_iters = if ctx.quick { 8 } else { 60 };
+        let cfg = dataset_cfg("news20", ctx.quick);
+        let data = synth_text(&cfg, ctx.seed);
+        let nls_data = logreg_to_nls(&data);
+        let mut rng = Rng::new(ctx.seed ^ 0x9E2);
+        let (train, val, test) = split_nls(&nls_data, &mut rng);
+        let prob = NlsInner { train };
+        let outer = NlsOuter { val, test };
+        let theta0 = [-4.0f64];
+        let methods: Vec<(&str, Strategy, bool)> = vec![
+            ("hoag", FULL, false),
+            ("shine", Strategy::Shine, false),
+            ("shine-opa", Strategy::Shine, true),
+            ("jacobian-free", Strategy::JacobianFree, false),
+        ];
+        let mut out = Json::obj();
+        out.set("n_train", prob.train.n()).set("d", prob.dim());
+        let mut methods_json = Json::obj();
+        for (name, strategy, opa) in methods {
+            let mut opts = method_opts(strategy, opa, outer_iters * 20);
+            opts.time_budget = outer_iters as f64 * 0.04;
+            let res = hoag_run(&prob, &outer, &theta0, &opts);
+            let final_test = res.trace.last().map(|p| p.test_loss).unwrap_or(f64::NAN);
+            eprintln!(
+                "  [nls] {name}: {:.2}s, final test loss {:.5}",
+                res.total_time, final_test
+            );
+            let mut m = Json::obj();
+            m.set("trace", trace_json(&res))
+                .set("total_time", res.total_time)
+                .set("final_test_loss", final_test);
+            methods_json.set(name, m);
+        }
+        out.set("methods", methods_json);
+        Ok(out)
+    }
+}

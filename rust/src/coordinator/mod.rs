@@ -1,0 +1,105 @@
+//! Experiment coordinator: every table and figure of the paper is a
+//! registered [`Experiment`]; `shine run <id>` executes it and writes
+//! `results/<id>.json` (DESIGN.md §5 maps ids to paper artifacts).
+
+pub mod ablations;
+pub mod report;
+pub mod bilevel_exps;
+pub mod deq_exps;
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Shared experiment context.
+#[derive(Clone, Debug)]
+pub struct ExpCtx {
+    pub seed: u64,
+    /// reduced problem sizes / step counts for smoke runs (CI, --quick)
+    pub quick: bool,
+    pub out_dir: String,
+    /// artifact directory for DEQ experiments
+    pub artifacts_dir: String,
+}
+
+impl Default for ExpCtx {
+    fn default() -> Self {
+        ExpCtx {
+            seed: 0,
+            quick: false,
+            out_dir: "results".into(),
+            artifacts_dir: crate::runtime::engine::Engine::default_dir(),
+        }
+    }
+}
+
+pub trait Experiment {
+    fn id(&self) -> &'static str;
+    fn description(&self) -> &'static str;
+    fn run(&self, ctx: &ExpCtx) -> Result<Json>;
+}
+
+/// All registered experiments, in DESIGN.md §5 order.
+pub fn registry() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(bilevel_exps::Fig1),
+        Box::new(bilevel_exps::Fig2Left),
+        Box::new(bilevel_exps::Fig2Right),
+        Box::new(bilevel_exps::FigE1),
+        Box::new(bilevel_exps::FigE2),
+        Box::new(deq_exps::Fig3 { imagenet: false }),
+        Box::new(deq_exps::Fig3 { imagenet: true }),
+        Box::new(deq_exps::TableE1),
+        Box::new(deq_exps::TableE2),
+        Box::new(deq_exps::TableE3),
+        Box::new(deq_exps::FigE3),
+        Box::new(deq_exps::EndToEnd),
+        Box::new(ablations::Ablations),
+    ]
+}
+
+/// Run one experiment by id; persists the JSON result and returns it.
+pub fn run_experiment(id: &str, ctx: &ExpCtx) -> Result<Json> {
+    let exps = registry();
+    let exp = exps
+        .iter()
+        .find(|e| e.id() == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}'; try `shine list`"))?;
+    let sw = crate::util::timer::Stopwatch::start();
+    let mut out = exp.run(ctx)?;
+    out.set("experiment", id)
+        .set("seed", ctx.seed)
+        .set("quick", ctx.quick)
+        .set("wall_seconds", sw.elapsed());
+    let path = format!("{}/{}.json", ctx.out_dir, id);
+    crate::util::json::write_file(&path, &out)?;
+    eprintln!("wrote {path} ({:.1}s)", sw.elapsed());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_are_unique_and_nonempty() {
+        let reg = registry();
+        assert!(reg.len() >= 12);
+        let mut ids: Vec<&str> = reg.iter().map(|e| e.id()).collect();
+        ids.sort_unstable();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate experiment ids");
+        for e in &reg {
+            assert!(!e.description().is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let ctx = ExpCtx {
+            quick: true,
+            ..Default::default()
+        };
+        assert!(run_experiment("nope", &ctx).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! Synthetic dataset generators — the substitutes for the paper's datasets
+//! (see DESIGN.md §3 for the substitution table and its rationale).
+//!
+//! * [`synth_text`] — sparse text-like binary-classification data standing
+//!   in for 20news / real-sim (power-law token frequencies, d ≫ n or n > d).
+//! * [`synth_breast`] — small dense correlated-feature dataset standing in
+//!   for the UCI breast-cancer set (Fig. 2-right needs exact dense solves).
+//! * [`synth_images`] — procedural class-templated images standing in for
+//!   CIFAR-10 / ImageNet in the DEQ experiments.
+//! * [`split`] — seeded train/val/test splitting (90%/5%/5%, Appendix C).
+
+pub mod split;
+pub mod synth_breast;
+pub mod synth_images;
+pub mod synth_text;
+
+pub use split::split_indices;
+pub use synth_breast::synth_breast;
+pub use synth_images::{synth_images, ImageDataset};
+pub use synth_text::{synth_text, TextConfig};

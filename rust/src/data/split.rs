@@ -1,0 +1,109 @@
+//! Seeded train/val/test splitting (the paper splits 90%/5%/5% with a
+//! different seed per run, Appendix C).
+
+use crate::problems::logreg::LogRegData;
+use crate::problems::nls::NlsData;
+use crate::util::rng::Rng;
+
+/// Return shuffled index sets of sizes (⌊n·f_train⌋, ⌊n·f_val⌋, rest).
+pub fn split_indices(
+    n: usize,
+    f_train: f64,
+    f_val: f64,
+    rng: &mut Rng,
+) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    assert!(f_train + f_val < 1.0 + 1e-12);
+    let perm = rng.permutation(n);
+    let n_train = (n as f64 * f_train).floor() as usize;
+    let n_val = (n as f64 * f_val).floor() as usize;
+    let train = perm[..n_train].to_vec();
+    let val = perm[n_train..n_train + n_val].to_vec();
+    let test = perm[n_train + n_val..].to_vec();
+    (train, val, test)
+}
+
+/// Split a LogReg dataset 90/5/5 (paper's proportions).
+pub fn split_logreg(
+    data: &LogRegData,
+    rng: &mut Rng,
+) -> (LogRegData, LogRegData, LogRegData) {
+    let (tr, va, te) = split_indices(data.n(), 0.90, 0.05, rng);
+    let pick = |idx: &[usize]| LogRegData {
+        x: data.x.select_rows(idx),
+        y: idx.iter().map(|&i| data.y[i]).collect(),
+    };
+    (pick(&tr), pick(&va), pick(&te))
+}
+
+/// Split an NLS dataset 90/5/5.
+pub fn split_nls(data: &NlsData, rng: &mut Rng) -> (NlsData, NlsData, NlsData) {
+    let (tr, va, te) = split_indices(data.n(), 0.90, 0.05, rng);
+    let pick = |idx: &[usize]| NlsData {
+        x: data.x.select_rows(idx),
+        y: idx.iter().map(|&i| data.y[i]).collect(),
+    };
+    (pick(&tr), pick(&va), pick(&te))
+}
+
+/// Convert ±1 LogReg labels to {0,1} NLS labels (shared generators).
+pub fn logreg_to_nls(data: &LogRegData) -> NlsData {
+    NlsData {
+        x: data.x.clone(),
+        y: data.y.iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_text::{synth_text, TextConfig};
+
+    #[test]
+    fn sizes_and_disjointness() {
+        let mut rng = Rng::new(4);
+        let (tr, va, te) = split_indices(100, 0.9, 0.05, &mut rng);
+        assert_eq!(tr.len(), 90);
+        assert_eq!(va.len(), 5);
+        assert_eq!(te.len(), 5);
+        let mut all: Vec<usize> = tr.iter().chain(&va).chain(&te).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 100);
+    }
+
+    #[test]
+    fn split_logreg_partitions_rows() {
+        let cfg = TextConfig {
+            n_docs: 80,
+            n_features: 100,
+            n_informative: 10,
+            len_lo: 5,
+            len_hi: 15,
+            zipf_a: 1.1,
+            label_noise: 0.0,
+            seed: 0,
+        };
+        let data = synth_text(&cfg, 0);
+        let mut rng = Rng::new(1);
+        let (tr, va, te) = split_logreg(&data, &mut rng);
+        assert_eq!(tr.n() + va.n() + te.n(), 80);
+        assert_eq!(tr.x.cols, 100);
+    }
+
+    #[test]
+    fn nls_labels_are_01() {
+        let cfg = TextConfig {
+            n_docs: 30,
+            n_features: 50,
+            n_informative: 5,
+            len_lo: 5,
+            len_hi: 10,
+            zipf_a: 1.1,
+            label_noise: 0.0,
+            seed: 0,
+        };
+        let data = synth_text(&cfg, 0);
+        let nls = logreg_to_nls(&data);
+        assert!(nls.y.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+}

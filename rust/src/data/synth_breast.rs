@@ -1,0 +1,96 @@
+//! Small dense correlated-feature dataset (stand-in for the UCI breast
+//! cancer dataset, d = 30) used by the Fig. 2-right inversion-quality
+//! experiment — small enough that the *exact* `J⁻¹v` is computable with a
+//! dense LU solve.
+//!
+//! Generative model mirroring the real dataset's structure: features are
+//! linear mixtures of a handful of latent factors (the real dataset's 30
+//! features are mean/se/worst triplets of 10 measurements, hence heavily
+//! correlated) plus noise; labels come from a logistic model on the latents.
+
+use crate::linalg::csr::Csr;
+use crate::problems::logreg::LogRegData;
+use crate::util::rng::Rng;
+
+/// Generate `n` samples with 30 correlated features, labels in {−1, +1}.
+pub fn synth_breast(n: usize, seed: u64) -> LogRegData {
+    let mut rng = Rng::new(seed ^ 0xB4EA57);
+    let d = 30;
+    let k = 6; // latent factors
+    // Mixing matrix: each feature loads mostly on one factor (plus bleed).
+    let mut mixing = vec![vec![0.0; k]; d];
+    for (j, row) in mixing.iter_mut().enumerate() {
+        let main = j % k;
+        for (f, w) in row.iter_mut().enumerate() {
+            *w = if f == main {
+                1.0 + 0.3 * rng.normal()
+            } else {
+                0.25 * rng.normal()
+            };
+        }
+    }
+    // Label direction in latent space.
+    let beta: Vec<f64> = (0..k).map(|_| rng.normal() * 1.5).collect();
+    let mut entries = Vec::new();
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let u: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        let margin: f64 = u.iter().zip(&beta).map(|(a, b)| a * b).sum();
+        for (j, row) in mixing.iter().enumerate() {
+            let mut v: f64 = row.iter().zip(&u).map(|(a, b)| a * b).sum();
+            v += 0.3 * rng.normal();
+            entries.push((i, j, v));
+        }
+        let p = crate::problems::logreg::sigmoid(margin);
+        y.push(if rng.uniform() < p { 1.0 } else { -1.0 });
+    }
+    LogRegData {
+        x: Csr::from_rows(n, d, entries),
+        y,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_determinism() {
+        let a = synth_breast(100, 1);
+        let b = synth_breast(100, 1);
+        assert_eq!(a.x.rows, 100);
+        assert_eq!(a.x.cols, 30);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn features_are_correlated() {
+        // Feature j and j+6 share a latent factor: their correlation should
+        // be visibly nonzero on average.
+        let data = synth_breast(500, 2);
+        let dense = data.x.to_dense();
+        let col = |j: usize| -> Vec<f64> { (0..500).map(|i| dense[(i, j)]).collect() };
+        let c0 = col(0);
+        let c6 = col(6);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (m0, m6) = (mean(&c0), mean(&c6));
+        let cov: f64 = c0
+            .iter()
+            .zip(&c6)
+            .map(|(a, b)| (a - m0) * (b - m6))
+            .sum::<f64>()
+            / 500.0;
+        let s0 = (c0.iter().map(|a| (a - m0) * (a - m0)).sum::<f64>() / 500.0).sqrt();
+        let s6 = (c6.iter().map(|a| (a - m6) * (a - m6)).sum::<f64>() / 500.0).sqrt();
+        let corr = cov / (s0 * s6);
+        assert!(corr.abs() > 0.2, "corr={corr}");
+    }
+
+    #[test]
+    fn classes_balanced_enough() {
+        let data = synth_breast(400, 3);
+        let pos = data.y.iter().filter(|&&v| v > 0.0).count();
+        assert!(pos > 80 && pos < 320, "pos={pos}");
+    }
+}

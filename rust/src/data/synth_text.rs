@@ -1,0 +1,198 @@
+//! Sparse text-like synthetic dataset (stand-in for 20news / real-sim).
+//!
+//! Generative model, chosen to preserve what makes the paper's HPO problem
+//! interesting (regularization genuinely matters, Hessian ill-conditioned):
+//! * token frequencies follow a Zipf law (exponent ≈ 1.1), so a few features
+//!   are dense columns and the tail is very sparse — like tf-idf text;
+//! * a sparse ground-truth direction w* over `n_informative` features
+//!   determines labels through a noisy logistic model;
+//! * document lengths are heterogeneous (uniform in [len_lo, len_hi]);
+//! * rows are l2-normalized (tf-idf convention), labels in {−1, +1}.
+
+use crate::linalg::csr::Csr;
+use crate::problems::logreg::LogRegData;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TextConfig {
+    pub n_docs: usize,
+    pub n_features: usize,
+    pub n_informative: usize,
+    pub len_lo: usize,
+    pub len_hi: usize,
+    /// Zipf exponent for token draws.
+    pub zipf_a: f64,
+    /// label noise: probability of flipping a label
+    pub label_noise: f64,
+    pub seed: u64,
+}
+
+impl TextConfig {
+    /// 20news-like regime: d ≫ n, very sparse (Fig. 1 left panel analogue).
+    pub fn news20_like() -> Self {
+        TextConfig {
+            n_docs: 1500,
+            n_features: 5000,
+            n_informative: 250,
+            len_lo: 30,
+            len_hi: 120,
+            zipf_a: 1.1,
+            label_noise: 0.05,
+            seed: 0,
+        }
+    }
+
+    /// real-sim-like regime: n > d (Fig. 1 right panel analogue).
+    pub fn realsim_like() -> Self {
+        TextConfig {
+            n_docs: 4000,
+            n_features: 2500,
+            n_informative: 200,
+            len_lo: 25,
+            len_hi: 90,
+            zipf_a: 1.05,
+            label_noise: 0.08,
+            seed: 1,
+        }
+    }
+}
+
+/// Generate the dataset. Deterministic in `cfg.seed` ⊕ `seed`.
+pub fn synth_text(cfg: &TextConfig, seed: u64) -> LogRegData {
+    let mut rng = Rng::new(cfg.seed ^ seed.wrapping_mul(0xA24BAED4963EE407));
+    let d = cfg.n_features;
+    // Ground-truth direction on a random informative subset, biased toward
+    // the frequent (low-index, by Zipf) region so most documents contain at
+    // least some informative tokens — otherwise labels would be noise for
+    // the tail-only documents.
+    let frequent_region = (d / 4).max(cfg.n_informative);
+    let informative = rng.choose_k(frequent_region, cfg.n_informative);
+    let mut w_star = vec![0.0; d];
+    for &j in &informative {
+        w_star[j] = rng.normal() * 2.0;
+    }
+    let mut entries = Vec::new();
+    let mut y = Vec::with_capacity(cfg.n_docs);
+    // idf-like per-feature weights: rarer tokens get higher weight.
+    let idf: Vec<f64> = (0..d)
+        .map(|j| 1.0 + (d as f64 / (1.0 + j as f64)).ln() * 0.25)
+        .collect();
+    for i in 0..cfg.n_docs {
+        let len = cfg.len_lo + rng.below(cfg.len_hi - cfg.len_lo + 1);
+        // Token multiset for this document.
+        let mut counts: std::collections::HashMap<usize, f64> = std::collections::HashMap::new();
+        for _ in 0..len {
+            let tok = rng.zipf(d, cfg.zipf_a);
+            *counts.entry(tok).or_insert(0.0) += 1.0;
+        }
+        let mut margin = 0.0;
+        for (&j, &c) in counts.iter() {
+            let v = (1.0 + c).ln() * idf[j];
+            entries.push((i, j, v));
+            margin += v * w_star[j];
+        }
+        let mut label = if margin >= 0.0 { 1.0 } else { -1.0 };
+        if rng.uniform() < cfg.label_noise {
+            label = -label;
+        }
+        y.push(label);
+    }
+    let mut x = Csr::from_rows(cfg.n_docs, d, entries);
+    x.normalize_rows();
+    LogRegData { x, y }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::InnerProblem;
+
+    #[test]
+    fn deterministic() {
+        let cfg = TextConfig {
+            n_docs: 50,
+            n_features: 200,
+            n_informative: 20,
+            len_lo: 10,
+            len_hi: 30,
+            zipf_a: 1.1,
+            label_noise: 0.0,
+            seed: 3,
+        };
+        let a = synth_text(&cfg, 7);
+        let b = synth_text(&cfg, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = synth_text(&cfg, 8);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn shapes_and_sparsity() {
+        let cfg = TextConfig::news20_like();
+        let cfg = TextConfig {
+            n_docs: 100,
+            ..cfg
+        };
+        let data = synth_text(&cfg, 0);
+        assert_eq!(data.x.rows, 100);
+        assert_eq!(data.x.cols, 5000);
+        assert_eq!(data.y.len(), 100);
+        // Sparse: average row has far fewer nnz than d.
+        let avg_nnz = data.x.nnz() as f64 / 100.0;
+        assert!(avg_nnz < 200.0, "avg nnz {avg_nnz}");
+        // Rows are unit norm.
+        for r in 0..10 {
+            let lo = data.x.indptr[r];
+            let hi = data.x.indptr[r + 1];
+            let nrm: f64 = data.x.values[lo..hi].iter().map(|v| v * v).sum::<f64>();
+            assert!((nrm - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn labels_are_learnable() {
+        // A linear model trained on the data must beat chance clearly.
+        let cfg = TextConfig {
+            n_docs: 300,
+            n_features: 500,
+            n_informative: 50,
+            len_lo: 20,
+            len_hi: 60,
+            zipf_a: 1.05,
+            label_noise: 0.0,
+            seed: 5,
+        };
+        let data = synth_text(&cfg, 1);
+        let prob = crate::problems::logreg::LogRegInner { train: data };
+        let theta = [(-8.0f64)]; // weak regularization: pure learnability check
+        let obj = (500usize, |z: &[f64]| {
+            (prob.inner_value(&theta, z).unwrap(), prob.g(&theta, z))
+        });
+        let res = crate::solvers::minimize::lbfgs_minimize(
+            &obj,
+            &vec![0.0; 500],
+            &crate::solvers::minimize::MinimizeOptions {
+                tol: 1e-6,
+                max_iters: 500,
+                ..Default::default()
+            },
+            None,
+            None,
+        );
+        assert!(prob.train.error_rate(&res.z) < 0.1);
+    }
+
+    #[test]
+    fn both_classes_present() {
+        let data = synth_text(
+            &TextConfig {
+                n_docs: 200,
+                ..TextConfig::realsim_like()
+            },
+            0,
+        );
+        let pos = data.y.iter().filter(|&&v| v > 0.0).count();
+        assert!(pos > 20 && pos < 180, "pos={pos}");
+    }
+}

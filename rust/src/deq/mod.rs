@@ -1,0 +1,19 @@
+//! Deep Equilibrium model training system (the Fig. 3 / Tables E.1–E.3
+//! experiments), built on the PJRT runtime.
+//!
+//! * [`native`] — pure-Rust mirror of the JAX model (f64): the numerical
+//!   oracle for the integration tests and a runtime-free path for small
+//!   benches.
+//! * [`model`] — artifact-backed model: every entry point of
+//!   `python/compile/model.py` as a typed method.
+//! * [`optim`] — Adam / SGD(momentum) with cosine schedule (App. D).
+//! * [`trainer`] — unrolled pre-training + equilibrium training with the
+//!   backward strategy as a plug-in; per-phase timing telemetry.
+
+pub mod model;
+pub mod native;
+pub mod optim;
+pub mod trainer;
+
+pub use model::{DeqModel, Params};
+pub use trainer::{BackwardKind, StepStats, Trainer, TrainerConfig};

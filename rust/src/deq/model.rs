@@ -1,0 +1,238 @@
+//! Artifact-backed DEQ model: one typed method per AOT entry point.
+//!
+//! Parameter state lives in Rust ([`Params`]); each call ships the needed
+//! parameters + activations to PJRT and gets f32 tensors back. Parameter
+//! order follows the manifest (`param_names`), mirrored from
+//! python/compile/model.py.
+
+use crate::runtime::engine::{Engine, Tensor};
+use crate::runtime::manifest::VariantCfg;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Model parameters in canonical order (wemb, bemb, w1, b1, w2, b2, gamma,
+/// beta, whead, bhead).
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub tensors: Vec<Tensor>,
+}
+
+impl Params {
+    /// He-style init matching model.init_params: gamma = 1, biases/beta = 0.
+    pub fn init(v: &VariantCfg, rng: &mut Rng) -> Params {
+        let tensors = v
+            .param_shapes
+            .iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data = if name == "gamma" {
+                    vec![1.0f32; n]
+                } else if name.starts_with('b') || name == "beta" {
+                    vec![0.0f32; n]
+                } else {
+                    let fan_in = shape[0] as f64;
+                    let std = (2.0 / fan_in).sqrt() as f32;
+                    rng.normal_vec_f32(n, std)
+                };
+                Tensor::new(shape.clone(), data)
+            })
+            .collect();
+        Params { tensors }
+    }
+
+    pub fn get<'a>(&'a self, v: &VariantCfg, name: &str) -> &'a Tensor {
+        &self.tensors[v.param_index(name)]
+    }
+
+    /// The six f_theta parameters, in artifact order.
+    pub fn f_params(&self, v: &VariantCfg) -> Vec<Tensor> {
+        v.f_param_names
+            .iter()
+            .map(|n| self.get(v, n).clone())
+            .collect()
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Native-path view (slices in canonical order).
+    pub fn native<'a>(&'a self, v: &VariantCfg) -> crate::deq::native::NativeParams<'a> {
+        crate::deq::native::NativeParams {
+            wemb: &self.get(v, "wemb").data,
+            bemb: &self.get(v, "bemb").data,
+            w1: &self.get(v, "w1").data,
+            b1: &self.get(v, "b1").data,
+            w2: &self.get(v, "w2").data,
+            b2: &self.get(v, "b2").data,
+            gamma: &self.get(v, "gamma").data,
+            beta: &self.get(v, "beta").data,
+            whead: &self.get(v, "whead").data,
+            bhead: &self.get(v, "bhead").data,
+        }
+    }
+}
+
+/// The artifact-backed model for one variant.
+pub struct DeqModel<'e> {
+    pub eng: &'e Engine,
+    pub v: VariantCfg,
+}
+
+impl<'e> DeqModel<'e> {
+    pub fn new(eng: &'e Engine, variant: &str) -> Result<DeqModel<'e>> {
+        let v = eng.manifest.variant(variant)?.clone();
+        Ok(DeqModel { eng, v })
+    }
+
+    fn art(&self, entry: &str) -> String {
+        format!("{}_{}", self.v.name, entry)
+    }
+
+    fn z_tensor(&self, z: &[f32]) -> Tensor {
+        Tensor::new(self.v.z_shape(), z.to_vec())
+    }
+
+    /// u = inject(x); x is (B, h·w·c_in) flattened images.
+    pub fn inject(&self, p: &Params, x: &[f32]) -> Result<Vec<f32>> {
+        let out = self.eng.call(
+            &self.art("inject"),
+            &[
+                p.get(&self.v, "wemb").clone(),
+                p.get(&self.v, "bemb").clone(),
+                Tensor::new(self.v.x_shape(), x.to_vec()),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    /// f_θ(z; u) — the fixed-point map (one Broyden iteration's work).
+    pub fn f(&self, p: &Params, z: &[f32], u: &[f32]) -> Result<Vec<f32>> {
+        let mut inputs = p.f_params(&self.v);
+        inputs.push(self.z_tensor(z));
+        inputs.push(self.z_tensor(u));
+        let out = self.eng.call(&self.art("f_fwd"), &inputs)?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    /// vᵀ ∂f/∂z — the backward VJP (one iteration of the Original method).
+    pub fn f_vjp_z(&self, p: &Params, z: &[f32], u: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let mut inputs = p.f_params(&self.v);
+        inputs.push(self.z_tensor(z));
+        inputs.push(self.z_tensor(u));
+        inputs.push(self.z_tensor(v));
+        let out = self.eng.call(&self.art("f_vjp_z"), &inputs)?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    /// ∂f/∂z · v — forward-mode JVP (power method, Table E.1).
+    pub fn f_jvp(&self, p: &Params, z: &[f32], u: &[f32], v: &[f32]) -> Result<Vec<f32>> {
+        let mut inputs = p.f_params(&self.v);
+        inputs.push(self.z_tensor(z));
+        inputs.push(self.z_tensor(u));
+        inputs.push(self.z_tensor(v));
+        let out = self.eng.call(&self.art("f_jvp"), &inputs)?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    /// (w1..beta grads, du) = pullback of f at cotangent w.
+    pub fn f_vjp_params_u(
+        &self,
+        p: &Params,
+        z: &[f32],
+        u: &[f32],
+        w: &[f32],
+    ) -> Result<(Vec<Tensor>, Vec<f32>)> {
+        let mut inputs = p.f_params(&self.v);
+        inputs.push(self.z_tensor(z));
+        inputs.push(self.z_tensor(u));
+        inputs.push(self.z_tensor(w));
+        let mut out = self.eng.call(&self.art("f_vjp_params_u"), &inputs)?;
+        let du = out.pop().unwrap().data;
+        Ok((out, du))
+    }
+
+    /// (dwemb, dbemb) = pullback of inject at cotangent du.
+    pub fn inject_vjp(&self, p: &Params, x: &[f32], du: &[f32]) -> Result<(Tensor, Tensor)> {
+        let out = self.eng.call(
+            &self.art("inject_vjp"),
+            &[
+                p.get(&self.v, "wemb").clone(),
+                p.get(&self.v, "bemb").clone(),
+                Tensor::new(self.v.x_shape(), x.to_vec()),
+                self.z_tensor(du),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap(), it.next().unwrap()))
+    }
+
+    /// logits (B, K).
+    pub fn head_logits(&self, p: &Params, z: &[f32]) -> Result<Vec<f32>> {
+        let out = self.eng.call(
+            &self.art("head_logits"),
+            &[
+                p.get(&self.v, "whead").clone(),
+                p.get(&self.v, "bhead").clone(),
+                self.z_tensor(z),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    /// (loss, ∇_z L, dwhead, dbhead) on one batch.
+    pub fn head_loss_grad(
+        &self,
+        p: &Params,
+        z: &[f32],
+        y_onehot: &[f32],
+    ) -> Result<(f64, Vec<f32>, Tensor, Tensor)> {
+        let out = self.eng.call(
+            &self.art("head_loss_grad"),
+            &[
+                p.get(&self.v, "whead").clone(),
+                p.get(&self.v, "bhead").clone(),
+                self.z_tensor(z),
+                Tensor::new(self.v.y_shape(), y_onehot.to_vec()),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let loss = it.next().unwrap().data[0] as f64;
+        let dz = it.next().unwrap().data;
+        let dwh = it.next().unwrap();
+        let dbh = it.next().unwrap();
+        Ok((loss, dz, dwh, dbh))
+    }
+
+    /// Unrolled pre-training step: (loss, grads for all 10 params).
+    pub fn pretrain_grads(
+        &self,
+        p: &Params,
+        x: &[f32],
+        y_onehot: &[f32],
+    ) -> Result<(f64, Vec<Tensor>)> {
+        let mut inputs: Vec<Tensor> = p.tensors.clone();
+        inputs.push(Tensor::new(self.v.x_shape(), x.to_vec()));
+        inputs.push(Tensor::new(self.v.y_shape(), y_onehot.to_vec()));
+        let mut out = self.eng.call(&self.art("pretrain_grads"), &inputs)?;
+        let grads = out.split_off(1);
+        let loss = out[0].data[0] as f64;
+        Ok((loss, grads))
+    }
+
+    /// Low-rank (SHINE) application through the L1 Pallas artifact:
+    /// out = v + Uᵀ(V v) with U, V of shape (30, d).
+    pub fn lowrank_apply(&self, v: &[f32], us: &[f32], vs: &[f32]) -> Result<Vec<f32>> {
+        let d = self.v.fixed_point_dim;
+        let out = self.eng.call(
+            &self.art("lowrank_apply"),
+            &[
+                Tensor::new(vec![d], v.to_vec()),
+                Tensor::new(vec![30, d], us.to_vec()),
+                Tensor::new(vec![30, d], vs.to_vec()),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+}

@@ -1,0 +1,279 @@
+//! Pure-Rust mirror of the JAX DEQ model (python/compile/model.py).
+//!
+//! Bit-for-bit architecture parity (patchify layout, LayerNorm eps, pooling,
+//! softmax CE), computed in f64 and cast to f32 at the boundary. The
+//! integration tests assert the PJRT artifacts agree with this mirror to
+//! f32 tolerance on random inputs — the strongest end-to-end check that the
+//! three-layer stack computes the model the paper's math assumes.
+
+use crate::runtime::manifest::VariantCfg;
+
+const LN_EPS: f64 = 1e-5;
+
+/// Named parameter access for the native path: slices in canonical order.
+pub struct NativeParams<'a> {
+    pub wemb: &'a [f32],
+    pub bemb: &'a [f32],
+    pub w1: &'a [f32],
+    pub b1: &'a [f32],
+    pub w2: &'a [f32],
+    pub b2: &'a [f32],
+    pub gamma: &'a [f32],
+    pub beta: &'a [f32],
+    pub whead: &'a [f32],
+    pub bhead: &'a [f32],
+}
+
+/// patchify + embed: x (B, h·w·c_in) → u (B, P, C).
+pub fn inject(v: &VariantCfg, wemb: &[f32], bemb: &[f32], x: &[f32]) -> Vec<f32> {
+    let (b, h, w, cin, s, c) = (v.batch, v.h, v.w, v.c_in, v.patch, v.c);
+    let cp = v.patch_channels;
+    let p = v.pixels;
+    let wpatches = w / s;
+    let mut u = vec![0.0f32; b * p * c];
+    let mut patch = vec![0.0f64; cp];
+    for bi in 0..b {
+        for pi in 0..p {
+            let py = pi / wpatches;
+            let px = pi % wpatches;
+            // gather the patch in the JAX layout: ((dy*s)+dx)*c_in + ci
+            for dy in 0..s {
+                for dx in 0..s {
+                    for ci in 0..cin {
+                        let yy = py * s + dy;
+                        let xx = px * s + dx;
+                        patch[(dy * s + dx) * cin + ci] =
+                            x[bi * (h * w * cin) + yy * (w * cin) + xx * cin + ci] as f64;
+                    }
+                }
+            }
+            // u = patch @ wemb + bemb
+            for cj in 0..c {
+                let mut acc = bemb[cj] as f64;
+                for ck in 0..cp {
+                    acc += patch[ck] * wemb[ck * c + cj] as f64;
+                }
+                u[bi * (p * c) + pi * c + cj] = acc as f32;
+            }
+        }
+    }
+    u
+}
+
+/// The fixed-point map f_θ(z; u) = LN(z + relu(z W1 + u + b1) W2 + b2).
+pub fn f_theta(v: &VariantCfg, np: &NativeParams, z: &[f32], u: &[f32]) -> Vec<f32> {
+    let c = v.c;
+    let rows = v.batch * v.pixels;
+    debug_assert_eq!(z.len(), rows * c);
+    let mut out = vec![0.0f32; rows * c];
+    let mut hrow = vec![0.0f64; c];
+    let mut xrow = vec![0.0f64; c];
+    for r in 0..rows {
+        let zr = &z[r * c..(r + 1) * c];
+        let ur = &u[r * c..(r + 1) * c];
+        // h = relu(z W1 + u + b1)
+        for j in 0..c {
+            let mut acc = ur[j] as f64 + np.b1[j] as f64;
+            for k in 0..c {
+                acc += zr[k] as f64 * np.w1[k * c + j] as f64;
+            }
+            hrow[j] = acc.max(0.0);
+        }
+        // x = z + h W2 + b2
+        for j in 0..c {
+            let mut acc = zr[j] as f64 + np.b2[j] as f64;
+            for k in 0..c {
+                acc += hrow[k] * np.w2[k * c + j] as f64;
+            }
+            xrow[j] = acc;
+        }
+        // layer norm over channels
+        let mean: f64 = xrow.iter().sum::<f64>() / c as f64;
+        let var: f64 = xrow.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / c as f64;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..c {
+            out[r * c + j] =
+                (((xrow[j] - mean) * inv) * np.gamma[j] as f64 + np.beta[j] as f64) as f32;
+        }
+    }
+    out
+}
+
+/// logits (B, K) from z (B, P, C): mean-pool over P then linear head.
+pub fn head_logits(v: &VariantCfg, whead: &[f32], bhead: &[f32], z: &[f32]) -> Vec<f32> {
+    let (b, p, c, k) = (v.batch, v.pixels, v.c, v.n_classes);
+    let mut logits = vec![0.0f32; b * k];
+    let mut pooled = vec![0.0f64; c];
+    for bi in 0..b {
+        for cj in 0..c {
+            pooled[cj] = 0.0;
+        }
+        for pi in 0..p {
+            for cj in 0..c {
+                pooled[cj] += z[bi * (p * c) + pi * c + cj] as f64;
+            }
+        }
+        for cj in 0..c {
+            pooled[cj] /= p as f64;
+        }
+        for kj in 0..k {
+            let mut acc = bhead[kj] as f64;
+            for cj in 0..c {
+                acc += pooled[cj] * whead[cj * k + kj] as f64;
+            }
+            logits[bi * k + kj] = acc as f32;
+        }
+    }
+    logits
+}
+
+/// Mean softmax cross-entropy given one-hot labels (B, K).
+pub fn ce_loss(logits: &[f32], y_onehot: &[f32], b: usize, k: usize) -> f64 {
+    let mut total = 0.0f64;
+    for bi in 0..b {
+        let row = &logits[bi * k..(bi + 1) * k];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let logsum: f64 = (row.iter().map(|&l| ((l as f64) - max).exp()).sum::<f64>()).ln() + max;
+        for kj in 0..k {
+            if y_onehot[bi * k + kj] > 0.0 {
+                total += (logsum - row[kj] as f64) * y_onehot[bi * k + kj] as f64;
+            }
+        }
+    }
+    total / b as f64
+}
+
+/// Top-1 accuracy of logits against integer labels.
+pub fn accuracy(logits: &[f32], labels: &[usize], k: usize) -> f64 {
+    let b = labels.len();
+    let mut correct = 0usize;
+    for bi in 0..b {
+        let row = &logits[bi * k..(bi + 1) * k];
+        let mut best = 0;
+        for j in 1..k {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[bi] {
+            correct += 1;
+        }
+    }
+    correct as f64 / b as f64
+}
+
+/// One-hot encode labels to (B, K) f32.
+pub fn one_hot(labels: &[usize], k: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; labels.len() * k];
+    for (i, &l) in labels.iter().enumerate() {
+        y[i * k + l] = 1.0;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> VariantCfg {
+        VariantCfg {
+            name: "tiny".into(),
+            batch: 2,
+            h: 4,
+            w: 4,
+            c_in: 3,
+            patch: 2,
+            c: 8,
+            n_classes: 4,
+            unroll: 4,
+            pixels: 4,
+            patch_channels: 12,
+            fixed_point_dim: 2 * 4 * 8,
+            param_shapes: vec![],
+            f_param_names: vec![],
+        }
+    }
+
+    #[test]
+    fn layer_norm_inside_f_theta_normalizes() {
+        let v = tiny_cfg();
+        let c = v.c;
+        let rows = v.batch * v.pixels;
+        let mut rng = crate::util::rng::Rng::new(1);
+        let z: Vec<f32> = (0..rows * c).map(|_| rng.normal() as f32).collect();
+        let u: Vec<f32> = (0..rows * c).map(|_| rng.normal() as f32).collect();
+        let w1: Vec<f32> = (0..c * c).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let w2: Vec<f32> = (0..c * c).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let zeros = vec![0.0f32; c];
+        let ones = vec![1.0f32; c];
+        let np = NativeParams {
+            wemb: &[],
+            bemb: &[],
+            w1: &w1,
+            b1: &zeros,
+            w2: &w2,
+            b2: &zeros,
+            gamma: &ones,
+            beta: &zeros,
+            whead: &[],
+            bhead: &[],
+        };
+        let out = f_theta(&v, &np, &z, &u);
+        // Every row of out must have ~zero mean and ~unit variance.
+        for r in 0..rows {
+            let row = &out[r * c..(r + 1) * c];
+            let mean: f64 = row.iter().map(|&x| x as f64).sum::<f64>() / c as f64;
+            let var: f64 =
+                row.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / c as f64;
+            assert!(mean.abs() < 1e-5, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+        }
+    }
+
+    #[test]
+    fn patchify_covers_all_pixels() {
+        let v = tiny_cfg();
+        // wemb = identity-ish: embed dim == patch dim is not true (12 vs 8),
+        // so instead check inject sums: with wemb all-ones and bemb 0, every
+        // u entry equals the patch sum.
+        let wemb = vec![1.0f32; v.patch_channels * v.c];
+        let bemb = vec![0.0f32; v.c];
+        let x: Vec<f32> = (0..v.batch * v.h * v.w * v.c_in)
+            .map(|i| i as f32)
+            .collect();
+        let u = inject(&v, &wemb, &bemb, &x);
+        // Each patch sum equals u[b,p,0] (all output channels identical).
+        for bi in 0..v.batch {
+            for pi in 0..v.pixels {
+                let u0 = u[bi * v.pixels * v.c + pi * v.c];
+                for cj in 1..v.c {
+                    assert_eq!(u[bi * v.pixels * v.c + pi * v.c + cj], u0);
+                }
+            }
+        }
+        // Total: sum over all u channels/c == sum of x per batch.
+        let total_x: f64 = x.iter().map(|&v| v as f64).sum();
+        let total_u: f64 = u.iter().map(|&v| v as f64).sum::<f64>() / v.c as f64;
+        assert!((total_x - total_u).abs() / total_x < 1e-5);
+    }
+
+    #[test]
+    fn ce_loss_uniform_is_log_k() {
+        let b = 3;
+        let k = 4;
+        let logits = vec![0.0f32; b * k];
+        let y = one_hot(&[0, 1, 2], k);
+        let loss = ce_loss(&logits, &y, b, k);
+        assert!((loss - (k as f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = vec![
+            1.0, 0.0, 0.0, // -> 0
+            0.0, 2.0, 0.0, // -> 1
+            0.0, 0.0, 3.0, // -> 2
+        ];
+        assert_eq!(accuracy(&logits, &[0, 1, 0], 3), 2.0 / 3.0);
+    }
+}

@@ -1,0 +1,377 @@
+//! DEQ trainer: unrolled pre-training followed by equilibrium training with
+//! a pluggable backward strategy — the engine behind Fig. 3 and
+//! Tables E.1–E.3.
+//!
+//! Per step (equilibrium phase):
+//! 1. `u = inject(x)` — input injection (once per batch, not per iteration);
+//! 2. forward pass — Broyden root solve of `g(z) = z − f_θ(z; u) = 0` over
+//!    the flattened batch fixed point (d = B·P·C), exactly the batched
+//!    solving of the DEQ implementation;
+//! 3. head loss + `∇_z L`;
+//! 4. backward pass — the configured strategy produces
+//!    `w ≈ J_g(z*)⁻ᵀ ∇_z L` (SHINE reuses the forward Broyden estimate;
+//!    Original runs the iterative inversion on VJPs; etc.);
+//! 5. parameter gradients by pullback: `dθ_f = wᵀ ∂f/∂θ`,
+//!    `demb = (wᵀ ∂f/∂u) ∂u/∂emb`, head grads from step 3;
+//! 6. Adam/SGD step with cosine LR.
+
+use crate::deq::model::{DeqModel, Params};
+use crate::deq::native;
+use crate::deq::optim::{cosine_lr, Adam, Optimizer, Sgd};
+use crate::linalg::vecops::nrm2;
+use crate::qn::low_rank::LowRank;
+use crate::qn::InvOp;
+use crate::runtime::engine::{Engine, Tensor};
+use crate::solvers::adjoint::{adjoint_broyden_solve, AdjointFpOptions, SigmaChoice};
+use crate::solvers::fixed_point::{broyden_solve, FpOptions};
+use crate::solvers::linear::broyden_solve_left;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+
+/// Backward-pass strategy for the DEQ (the Fig. 3 method axis).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BackwardKind {
+    /// Original method: iterative inversion (Broyden on VJPs) to `tol`,
+    /// capped at `max_iters` ("limited backprop" when small).
+    Original { tol: f64, max_iters: usize },
+    JacobianFree,
+    Shine,
+    /// SHINE with the §3 fallback guard (ImageNet setting, ratio 1.3).
+    ShineFallback { ratio: f64 },
+    /// refine: `iters` extra Broyden-VJP steps warm-started from SHINE.
+    ShineRefine { iters: usize },
+    /// refine applied to the Jacobian-Free direction (Fig. 3's
+    /// "Jacobian-Free refine" points).
+    JacobianFreeRefine { iters: usize },
+    /// Adjoint Broyden forward solver (+ optional OPA every `freq` iters);
+    /// backward = SHINE on its inverse estimate (Table E.3).
+    AdjointBroyden { opa_freq: Option<usize> },
+}
+
+impl BackwardKind {
+    pub fn name(&self) -> String {
+        match self {
+            BackwardKind::Original { max_iters, .. } if *max_iters >= 1000 => "original".into(),
+            BackwardKind::Original { max_iters, .. } => format!("original-limited-{max_iters}"),
+            BackwardKind::JacobianFree => "jacobian-free".into(),
+            BackwardKind::Shine => "shine".into(),
+            BackwardKind::ShineFallback { .. } => "shine-fallback".into(),
+            BackwardKind::ShineRefine { iters } => format!("shine-refine-{iters}"),
+            BackwardKind::JacobianFreeRefine { iters } => format!("jf-refine-{iters}"),
+            BackwardKind::AdjointBroyden { opa_freq: None } => "shine-adj-broyden".into(),
+            BackwardKind::AdjointBroyden { opa_freq: Some(f) } => {
+                format!("shine-adj-broyden-opa-{f}")
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub variant: String,
+    pub backward: BackwardKind,
+    /// forward residual tolerance, relative to √d (MDEQ convention)
+    pub fwd_tol: f64,
+    pub fwd_max_iters: usize,
+    /// Broyden memory (paper: 30)
+    pub memory: usize,
+    pub lr: f64,
+    pub use_adam: bool,
+    /// total optimizer steps for the cosine schedule
+    pub total_steps: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            variant: "cifar".into(),
+            backward: BackwardKind::Shine,
+            fwd_tol: 1e-4,
+            fwd_max_iters: 30,
+            memory: 30,
+            lr: 1e-3,
+            use_adam: true,
+            total_steps: 1000,
+            seed: 0,
+        }
+    }
+}
+
+/// Telemetry for one training step (feeds Table E.2 medians).
+#[derive(Clone, Debug)]
+pub struct StepStats {
+    pub loss: f64,
+    pub fwd_seconds: f64,
+    pub bwd_seconds: f64,
+    pub fwd_iters: usize,
+    pub fwd_residual: f64,
+    pub bwd_matvecs: usize,
+    pub fallback_used: bool,
+}
+
+/// Result of a forward solve: flattened f32 fixed point + inverse estimate.
+pub struct ForwardOutcome {
+    pub z: Vec<f32>,
+    pub h: LowRank,
+    pub iters: usize,
+    pub residual: f64,
+    pub seconds: f64,
+}
+
+pub struct Trainer<'e> {
+    pub model: DeqModel<'e>,
+    pub params: Params,
+    opt: Box<dyn Optimizer>,
+    pub cfg: TrainerConfig,
+    pub step_count: usize,
+    pub stats: Vec<StepStats>,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(eng: &'e Engine, cfg: TrainerConfig) -> Result<Trainer<'e>> {
+        let model = DeqModel::new(eng, &cfg.variant)?;
+        let mut rng = Rng::new(cfg.seed ^ 0xDE9);
+        let params = Params::init(&model.v, &mut rng);
+        let opt: Box<dyn Optimizer> = if cfg.use_adam {
+            Box::new(Adam::new())
+        } else {
+            Box::new(Sgd::new(0.9))
+        };
+        Ok(Trainer {
+            model,
+            params,
+            opt,
+            cfg,
+            step_count: 0,
+            stats: Vec::new(),
+        })
+    }
+
+    fn lr_now(&self) -> f64 {
+        cosine_lr(self.cfg.lr, self.step_count, self.cfg.total_steps)
+    }
+
+    /// One unrolled pre-training step (App. D). Returns the loss.
+    pub fn pretrain_step(&mut self, x: &[f32], labels: &[usize]) -> Result<f64> {
+        let y = native::one_hot(labels, self.model.v.n_classes);
+        let (loss, grads) = self.model.pretrain_grads(&self.params, x, &y)?;
+        let lr = self.lr_now();
+        self.opt.step(&mut self.params.tensors, &grads, lr);
+        self.step_count += 1;
+        Ok(loss)
+    }
+
+    /// Forward pass: Broyden solve of z = f(z; u). Returns the flattened
+    /// fixed point and the shared inverse estimate.
+    pub fn forward_solve(&self, u: &[f32]) -> Result<ForwardOutcome> {
+        let d = self.model.v.fixed_point_dim;
+        let sw = Stopwatch::start();
+        let tol = self.cfg.fwd_tol * (d as f64).sqrt();
+        // g(z) = z − f(z; u) over f64 (qN stack) with f32 artifact calls.
+        let mut err: Option<anyhow::Error> = None;
+        let g = |z: &[f64]| -> Vec<f64> {
+            let zf: Vec<f32> = z.iter().map(|&x| x as f32).collect();
+            match self.model.f(&self.params, &zf, u) {
+                Ok(f) => z
+                    .iter()
+                    .zip(&f)
+                    .map(|(&zi, &fi)| zi - fi as f64)
+                    .collect(),
+                Err(e) => {
+                    err = Some(e);
+                    vec![0.0; z.len()]
+                }
+            }
+        };
+        let res = match self.cfg.backward {
+            BackwardKind::AdjointBroyden { opa_freq } => {
+                // Forward with Adjoint Broyden (needs VJPs).
+                let vjp = |z: &[f64], sigma: &[f64]| -> Vec<f64> {
+                    let zf: Vec<f32> = z.iter().map(|&x| x as f32).collect();
+                    let sf: Vec<f32> = sigma.iter().map(|&x| x as f32).collect();
+                    match self.model.f_vjp_z(&self.params, &zf, u, &sf) {
+                        Ok(j) => sigma
+                            .iter()
+                            .zip(&j)
+                            .map(|(&si, &ji)| si - ji as f64)
+                            .collect(),
+                        Err(_) => sigma.to_vec(),
+                    }
+                };
+                let opts = AdjointFpOptions {
+                    tol,
+                    max_iters: self.cfg.fwd_max_iters,
+                    memory: self.cfg.memory,
+                    sigma: SigmaChoice::Step,
+                    opa_freq,
+                };
+                // OPA needs ∇L(z_n); the trainer provides it lazily through
+                // the most recent head gradient — a fixed approximation that
+                // avoids per-iteration head evaluations (cheap and faithful:
+                // the direction only steers *extra* updates).
+                let r = adjoint_broyden_solve(g, vjp, None, &vec![0.0; d], &opts);
+                ForwardOutcome {
+                    z: r.z.iter().map(|&x| x as f32).collect(),
+                    h: r.qn.low_rank().clone(),
+                    iters: r.iters,
+                    residual: r.g_norm,
+                    seconds: sw.elapsed(),
+                }
+            }
+            _ => {
+                let opts = FpOptions {
+                    tol,
+                    max_iters: self.cfg.fwd_max_iters,
+                    memory: self.cfg.memory,
+                    ..Default::default()
+                };
+                let r = broyden_solve(g, &vec![0.0; d], &opts);
+                ForwardOutcome {
+                    z: r.z.iter().map(|&x| x as f32).collect(),
+                    h: r.qn.into_low_rank(),
+                    iters: r.iters,
+                    residual: r.g_norm,
+                    seconds: sw.elapsed(),
+                }
+            }
+        };
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok(res)
+    }
+
+    /// Backward pass: compute w ≈ J_g⁻ᵀ ∇L per the configured strategy.
+    /// Returns (w, matvecs, fallback_used).
+    pub fn backward_direction(
+        &self,
+        fwd: &ForwardOutcome,
+        u: &[f32],
+        dz: &[f32],
+    ) -> (Vec<f64>, usize, bool) {
+        let dz64: Vec<f64> = dz.iter().map(|&x| x as f64).collect();
+        let vjp = |w: &[f64]| -> Vec<f64> {
+            let wf: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+            match self.model.f_vjp_z(&self.params, &fwd.z, u, &wf) {
+                Ok(j) => w.iter().zip(&j).map(|(&wi, &ji)| wi - ji as f64).collect(),
+                Err(_) => w.to_vec(),
+            }
+        };
+        let d = dz64.len();
+        match self.cfg.backward {
+            BackwardKind::JacobianFree => (dz64, 0, false),
+            BackwardKind::Shine | BackwardKind::AdjointBroyden { .. } => {
+                (fwd.h.apply_t_vec(&dz64), 0, false)
+            }
+            BackwardKind::ShineFallback { ratio } => {
+                let w = fwd.h.apply_t_vec(&dz64);
+                if nrm2(&w) > ratio * nrm2(&dz64) {
+                    (dz64, 0, true)
+                } else {
+                    (w, 0, false)
+                }
+            }
+            BackwardKind::Original { tol, max_iters } => {
+                let r = broyden_solve_left(vjp, &dz64, None, None, tol, max_iters, max_iters + 8);
+                (r.x, r.n_matvecs, false)
+            }
+            BackwardKind::ShineRefine { iters } => {
+                let w0 = fwd.h.apply_t_vec(&dz64);
+                let h_init = fwd.h.transposed().with_max_mem(
+                    self.cfg.memory + iters + 8,
+                    crate::qn::MemoryPolicy::Freeze,
+                );
+                let r = broyden_solve_left(
+                    vjp,
+                    &dz64,
+                    Some(&w0),
+                    Some(h_init),
+                    1e-12 * (d as f64).sqrt().max(1.0),
+                    iters,
+                    self.cfg.memory + iters + 8,
+                );
+                (r.x, r.n_matvecs, false)
+            }
+            BackwardKind::JacobianFreeRefine { iters } => {
+                let r = broyden_solve_left(
+                    vjp,
+                    &dz64,
+                    Some(&dz64),
+                    None,
+                    1e-12 * (d as f64).sqrt().max(1.0),
+                    iters,
+                    iters + 8,
+                );
+                (r.x, r.n_matvecs, false)
+            }
+        }
+    }
+
+    /// One equilibrium training step.
+    pub fn train_step(&mut self, x: &[f32], labels: &[usize]) -> Result<StepStats> {
+        let v = &self.model.v;
+        let y = native::one_hot(labels, v.n_classes);
+        let u = self.model.inject(&self.params, x)?;
+        let fwd = self.forward_solve(&u)?;
+
+        let sw = Stopwatch::start();
+        let (loss, dz, dwhead, dbhead) = self.model.head_loss_grad(&self.params, &fwd.z, &y)?;
+        let (w, matvecs, fallback_used) = self.backward_direction(&fwd, &u, &dz);
+        let wf: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+        // dθ_f = wᵀ ∂f/∂θ  (sign: dL/dθ = −wᵀ∂g/∂θ = +wᵀ∂f/∂θ since g = z−f)
+        let (fgrads, du) = self.model.f_vjp_params_u(&self.params, &fwd.z, &u, &wf)?;
+        let (dwemb, dbemb) = self.model.inject_vjp(&self.params, x, &du)?;
+        let bwd_seconds = sw.elapsed();
+
+        // Assemble gradients in canonical parameter order.
+        let mut grads: Vec<Tensor> = Vec::with_capacity(10);
+        grads.push(dwemb);
+        grads.push(dbemb);
+        for gt in fgrads {
+            grads.push(gt);
+        }
+        grads.push(dwhead);
+        grads.push(dbhead);
+        debug_assert_eq!(grads.len(), self.params.tensors.len());
+
+        let lr = self.lr_now();
+        self.opt.step(&mut self.params.tensors, &grads, lr);
+        self.step_count += 1;
+
+        let stats = StepStats {
+            loss,
+            fwd_seconds: fwd.seconds,
+            bwd_seconds,
+            fwd_iters: fwd.iters,
+            fwd_residual: fwd.residual,
+            bwd_matvecs: matvecs,
+            fallback_used,
+        };
+        self.stats.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Top-1 accuracy over up to `max_batches` batches of the dataset.
+    pub fn evaluate(
+        &self,
+        ds: &crate::data::synth_images::ImageDataset,
+        max_batches: usize,
+        rng: &mut Rng,
+    ) -> Result<f64> {
+        let v = &self.model.v;
+        let batches = ds.epoch_batches(v.batch, rng);
+        let mut total = 0.0;
+        let mut n = 0;
+        for idx in batches.iter().take(max_batches) {
+            let (x, labels) = ds.batch(idx);
+            let u = self.model.inject(&self.params, &x)?;
+            let fwd = self.forward_solve(&u)?;
+            let logits = self.model.head_logits(&self.params, &fwd.z)?;
+            total += native::accuracy(&logits, &labels, v.n_classes);
+            n += 1;
+        }
+        Ok(if n == 0 { 0.0 } else { total / n as f64 })
+    }
+}

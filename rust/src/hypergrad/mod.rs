@@ -1,0 +1,37 @@
+//! Hypergradient strategies — the paper's contribution surface.
+//!
+//! Theorem 1 gives the hypergradient (with the implicit-function sign made
+//! explicit; the paper's eq. (3) keeps it implicit):
+//!
+//! ```text
+//! dL/dθ = − ∇_z L(z*)ᵀ · J_{g_θ}(z*)⁻¹ · ∂g_θ/∂θ|_{z*}
+//! ```
+//!
+//! Every strategy reduces to choosing the *left-solve direction*
+//! `w ≈ J_{g_θ}(z*)⁻ᵀ ∇_z L(z*)`, then contracting `−wᵀ ∂g/∂θ`:
+//!
+//! | strategy | w |
+//! |---|---|
+//! | `Full` (Original / HOAG)     | iterative solve of `Jᵀw = ∇L` to tol |
+//! | `Full{max_iters}` (limited)  | same, truncated (Fig. E.1 baseline) |
+//! | `JacobianFree` (Fung et al.) | `w = ∇L` |
+//! | `Shine`                      | `w = Hᵀ∇L`, H the forward qN estimate |
+//! | `ShineRefine{k}`             | k iterative steps warm-started at SHINE |
+//! | `ShineFallback{ratio}`       | SHINE, guarded: fall back to JF if `‖w‖ > ratio·‖∇L‖` (§3, "fallback strategy") |
+
+pub mod strategies;
+
+pub use strategies::{hypergrad, HypergradResult, Strategy};
+
+use crate::qn::low_rank::LowRank;
+use crate::qn::InvOp;
+
+/// What the forward pass hands to the backward pass.
+pub struct ForwardArtifacts<'a> {
+    /// the (approximate) root z* of g_θ
+    pub z: &'a [f64],
+    /// the forward inverse estimate H ≈ J⁻¹ (None ⇒ SHINE unavailable)
+    pub inv: Option<&'a dyn InvOp>,
+    /// low-rank factors of H for warm-starting the refine solver
+    pub low_rank: Option<&'a LowRank>,
+}

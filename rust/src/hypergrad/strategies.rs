@@ -1,0 +1,446 @@
+//! Strategy dispatch for the hypergradient computation (see module docs of
+//! [`crate::hypergrad`] for the strategy table).
+
+use crate::hypergrad::ForwardArtifacts;
+use crate::linalg::vecops::nrm2;
+use crate::problems::{InnerProblem, OuterLoss};
+use crate::qn::MemoryPolicy;
+use crate::solvers::linear::{broyden_solve_left, cg_solve};
+
+/// Backward-pass strategy. `Full` with `max_iters = usize::MAX` is the
+/// Original / HOAG method; finite `max_iters` is the "limited backward"
+/// baseline of Fig. E.1 / Table E.2.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    Full { tol: f64, max_iters: usize },
+    JacobianFree,
+    Shine,
+    ShineRefine { iters: usize, tol: f64 },
+    ShineFallback { ratio: f64 },
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Full { max_iters, .. } if *max_iters == usize::MAX => "original",
+            Strategy::Full { .. } => "original-limited",
+            Strategy::JacobianFree => "jacobian-free",
+            Strategy::Shine => "shine",
+            Strategy::ShineRefine { .. } => "shine-refine",
+            Strategy::ShineFallback { .. } => "shine-fallback",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HypergradResult {
+    /// dL/dθ (θ-dimensional)
+    pub grad_theta: Vec<f64>,
+    /// the left-solve direction w actually used
+    pub w: Vec<f64>,
+    /// matrix–vector / VJP products spent in the backward pass
+    pub backward_matvecs: usize,
+    /// whether the fallback guard fired (§3 fallback strategy)
+    pub fallback_used: bool,
+}
+
+/// Compute the hypergradient dL/dθ for the given strategy.
+///
+/// `warm_w` — previous outer iteration's w (HOAG warm-restarts the backward
+/// solve, Appendix C); only used by the iterative strategies.
+pub fn hypergrad(
+    prob: &dyn InnerProblem,
+    outer: &dyn OuterLoss,
+    theta: &[f64],
+    fwd: &ForwardArtifacts,
+    strategy: Strategy,
+    warm_w: Option<&[f64]>,
+) -> HypergradResult {
+    let z = fwd.z;
+    let grad_l = outer.grad(z);
+    let mut fallback_used = false;
+    let mut backward_matvecs = 0usize;
+
+    let w: Vec<f64> = match strategy {
+        Strategy::JacobianFree => grad_l.clone(),
+        Strategy::Shine => {
+            let inv = fwd.inv.expect("SHINE requires a forward qN estimate");
+            inv.apply_t_vec(&grad_l)
+        }
+        Strategy::ShineFallback { ratio } => {
+            let inv = fwd.inv.expect("SHINE requires a forward qN estimate");
+            let w_shine = inv.apply_t_vec(&grad_l);
+            // Norm guard: the Jacobian-Free direction is ∇L itself, available
+            // at no extra cost; a SHINE direction with a much larger norm is
+            // the telltale sign of a bad inversion (§3).
+            if nrm2(&w_shine) > ratio * nrm2(&grad_l) {
+                fallback_used = true;
+                grad_l.clone()
+            } else {
+                w_shine
+            }
+        }
+        Strategy::Full { tol, max_iters } => {
+            solve_left(
+                prob, theta, z, &grad_l, warm_w, None, tol, max_iters,
+                &mut backward_matvecs,
+            )
+        }
+        Strategy::ShineRefine { iters, tol } => {
+            let inv = fwd.inv.expect("refine requires a forward qN estimate");
+            let w0 = inv.apply_t_vec(&grad_l);
+            let h_init = fwd.low_rank.map(|lr| lr.transposed());
+            solve_left(
+                prob, theta, z, &grad_l, Some(&w0), h_init, tol, iters,
+                &mut backward_matvecs,
+            )
+        }
+    };
+
+    // dL/dθ = − wᵀ ∂g/∂θ
+    let mut grad_theta = prob.vjp_theta(theta, z, &w);
+    for v in grad_theta.iter_mut() {
+        *v = -*v;
+    }
+    HypergradResult {
+        grad_theta,
+        w,
+        backward_matvecs,
+        fallback_used,
+    }
+}
+
+/// Solve `Jᵀ w = ∇L` with the appropriate iterative solver.
+#[allow(clippy::too_many_arguments)]
+fn solve_left(
+    prob: &dyn InnerProblem,
+    theta: &[f64],
+    z: &[f64],
+    grad_l: &[f64],
+    w0: Option<&[f64]>,
+    h_init: Option<crate::qn::low_rank::LowRank>,
+    tol: f64,
+    max_iters: usize,
+    matvecs: &mut usize,
+) -> Vec<f64> {
+    let max_iters = max_iters.min(100_000);
+    if prob.is_symmetric() {
+        // CG on J w = ∇L (J symmetric ⇒ Jᵀ = J), as HOAG does.
+        let res = cg_solve(
+            |v| prob.jvp(theta, z, v),
+            grad_l,
+            w0,
+            tol,
+            max_iters,
+        );
+        *matvecs += res.n_matvecs;
+        res.x
+    } else {
+        let res = broyden_solve_left(
+            |w| prob.vjp(theta, z, w),
+            grad_l,
+            w0,
+            h_init.map(|h| h.with_max_mem(max_iters + 64, MemoryPolicy::Freeze)),
+            tol,
+            max_iters,
+            max_iters + 64,
+        );
+        *matvecs += res.n_matvecs;
+        res.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergrad::ForwardArtifacts;
+    use crate::problems::quadratic::{QuadraticBilevel, QuadraticOuter};
+    use crate::qn::InvOp;
+    use crate::solvers::minimize::{lbfgs_minimize, MinimizeOptions};
+    use crate::util::prop;
+
+    /// Shared fixture: solve the inner quadratic with LBFGS to high
+    /// precision, return (problem, outer, theta, result).
+    fn solved_quadratic(
+        rng: &mut crate::util::rng::Rng,
+        n: usize,
+        memory: usize,
+    ) -> (
+        QuadraticBilevel,
+        QuadraticOuter,
+        [f64; 1],
+        crate::solvers::minimize::MinimizeResult,
+    ) {
+        let p = QuadraticBilevel::random(n, rng);
+        let outer = QuadraticOuter {
+            target: p.target.clone(),
+        };
+        let theta = [rng.normal() * 0.3];
+        let obj = (n, |z: &[f64]| {
+            (p.inner_value(&theta, z).unwrap(), p.g(&theta, z))
+        });
+        let opts = MinimizeOptions {
+            tol: 1e-9,
+            max_iters: 200 * n,
+            memory,
+            scale_gamma: false, // B₀ = I: the paper's theoretical setting
+            ..Default::default()
+        };
+        let res = lbfgs_minimize(&obj, &vec![0.0; n], &opts, None, None);
+        // Floating-point stalls just above tol are fine for these tests.
+        assert!(res.grad_norm < 1e-6, "inner solve too inexact: {}", res.grad_norm);
+        (p, outer, theta, res)
+    }
+
+    use crate::problems::InnerProblem;
+
+    #[test]
+    fn full_matches_exact_hypergrad() {
+        prop::check("hg-full-exact", 10, |rng| {
+            let (p, outer, theta, res) = solved_quadratic(rng, 8, 64);
+            let fwd = ForwardArtifacts {
+                z: &res.z,
+                inv: Some(&res.qn),
+                low_rank: None,
+            };
+            let hg = hypergrad(
+                &p,
+                &outer,
+                &theta,
+                &fwd,
+                Strategy::Full {
+                    tol: 1e-12,
+                    max_iters: usize::MAX,
+                },
+                None,
+            );
+            prop::ensure_close(hg.grad_theta[0], p.exact_hypergrad(&theta), 1e-6, "full vs exact")
+        });
+    }
+
+    #[test]
+    fn shine_approximates_exact_with_full_memory() {
+        // On a quadratic solved to convergence with memory ≥ many steps, the
+        // BFGS estimate captures the Hessian in all visited directions and
+        // SHINE is close to the exact hypergradient.
+        prop::check("hg-shine-approx", 10, |rng| {
+            let (p, outer, theta, res) = solved_quadratic(rng, 8, 256);
+            let fwd = ForwardArtifacts {
+                z: &res.z,
+                inv: Some(&res.qn),
+                low_rank: None,
+            };
+            let hg = hypergrad(&p, &outer, &theta, &fwd, Strategy::Shine, None);
+            let exact = p.exact_hypergrad(&theta);
+            // SHINE is an approximation (ULI does not hold in practice — §2.2);
+            // on a well-solved quadratic it lands within ~15% and must at
+            // least agree in sign (a descent direction).
+            prop::ensure(
+                hg.grad_theta[0] * exact > 0.0,
+                &format!("sign flip: {} vs {}", hg.grad_theta[0], exact),
+            )?;
+            prop::ensure_close(hg.grad_theta[0], exact, 0.15, "shine vs exact")
+        });
+    }
+
+    #[test]
+    fn shine_never_does_backward_matvecs() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let (p, outer, theta, res) = solved_quadratic(&mut rng, 6, 64);
+        let fwd = ForwardArtifacts {
+            z: &res.z,
+            inv: Some(&res.qn),
+            low_rank: None,
+        };
+        let hg = hypergrad(&p, &outer, &theta, &fwd, Strategy::Shine, None);
+        assert_eq!(hg.backward_matvecs, 0);
+        let hg_jf = hypergrad(&p, &outer, &theta, &fwd, Strategy::JacobianFree, None);
+        assert_eq!(hg_jf.backward_matvecs, 0);
+        let hg_full = hypergrad(
+            &p,
+            &outer,
+            &theta,
+            &fwd,
+            Strategy::Full {
+                tol: 1e-10,
+                max_iters: usize::MAX,
+            },
+            None,
+        );
+        assert!(hg_full.backward_matvecs > 0);
+    }
+
+    #[test]
+    fn refine_improves_on_shine() {
+        prop::check("hg-refine", 10, |rng| {
+            // Small memory so vanilla SHINE is inexact.
+            let (p, outer, theta, res) = solved_quadratic(rng, 12, 4);
+            let fwd = ForwardArtifacts {
+                z: &res.z,
+                inv: Some(&res.qn),
+                low_rank: None,
+            };
+            let exact = p.exact_hypergrad(&theta);
+            let e_shine =
+                (hypergrad(&p, &outer, &theta, &fwd, Strategy::Shine, None).grad_theta[0] - exact)
+                    .abs();
+            let e_refine = (hypergrad(
+                &p,
+                &outer,
+                &theta,
+                &fwd,
+                Strategy::ShineRefine {
+                    iters: 30,
+                    tol: 1e-12,
+                },
+                None,
+            )
+            .grad_theta[0]
+                - exact)
+                .abs();
+            prop::ensure(
+                e_refine <= e_shine + 1e-12,
+                &format!("refine {e_refine:.3e} vs shine {e_shine:.3e}"),
+            )
+        });
+    }
+
+    #[test]
+    fn refine_with_infinite_budget_equals_full() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let (p, outer, theta, res) = solved_quadratic(&mut rng, 10, 8);
+        let fwd = ForwardArtifacts {
+            z: &res.z,
+            inv: Some(&res.qn),
+            low_rank: None,
+        };
+        let full = hypergrad(
+            &p,
+            &outer,
+            &theta,
+            &fwd,
+            Strategy::Full {
+                tol: 1e-12,
+                max_iters: usize::MAX,
+            },
+            None,
+        );
+        let refine = hypergrad(
+            &p,
+            &outer,
+            &theta,
+            &fwd,
+            Strategy::ShineRefine {
+                iters: 100_000,
+                tol: 1e-12,
+            },
+            None,
+        );
+        assert!((full.grad_theta[0] - refine.grad_theta[0]).abs() < 1e-8);
+    }
+
+    #[test]
+    fn fallback_guard_fires_on_blown_up_inverse() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let (p, outer, theta, res) = solved_quadratic(&mut rng, 6, 64);
+        // An adversarial inverse estimate with a huge norm.
+        struct Blown(usize);
+        impl InvOp for Blown {
+            fn dim(&self) -> usize {
+                self.0
+            }
+            fn apply(&self, x: &[f64], out: &mut [f64]) {
+                for (o, v) in out.iter_mut().zip(x) {
+                    *o = 1e6 * v;
+                }
+            }
+            fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+                self.apply(x, out)
+            }
+        }
+        let blown = Blown(6);
+        let fwd = ForwardArtifacts {
+            z: &res.z,
+            inv: Some(&blown),
+            low_rank: None,
+        };
+        let hg = hypergrad(
+            &p,
+            &outer,
+            &theta,
+            &fwd,
+            Strategy::ShineFallback { ratio: 1.3 },
+            None,
+        );
+        assert!(hg.fallback_used);
+        // Direction must equal the Jacobian-Free one.
+        let jf = hypergrad(&p, &outer, &theta, &fwd, Strategy::JacobianFree, None);
+        assert_eq!(hg.grad_theta, jf.grad_theta);
+    }
+
+    #[test]
+    fn fallback_keeps_shine_when_norm_ok() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let (p, outer, theta, res) = solved_quadratic(&mut rng, 6, 64);
+        let fwd = ForwardArtifacts {
+            z: &res.z,
+            inv: Some(&res.qn),
+            low_rank: None,
+        };
+        let fb = hypergrad(
+            &p,
+            &outer,
+            &theta,
+            &fwd,
+            // Generous ratio: SHINE's direction norm is moderate here.
+            Strategy::ShineFallback { ratio: 1e3 },
+            None,
+        );
+        let shine = hypergrad(&p, &outer, &theta, &fwd, Strategy::Shine, None);
+        assert!(!fb.fallback_used);
+        assert_eq!(fb.grad_theta, shine.grad_theta);
+    }
+
+    #[test]
+    fn limited_backward_degrades_gracefully() {
+        // Truncating the inversion (Fig. E.1's HOAG-limited) gives a less
+        // accurate hypergradient than the full solve.
+        let mut rng = crate::util::rng::Rng::new(13);
+        let (p, outer, theta, res) = solved_quadratic(&mut rng, 16, 4);
+        let fwd = ForwardArtifacts {
+            z: &res.z,
+            inv: Some(&res.qn),
+            low_rank: None,
+        };
+        let exact = p.exact_hypergrad(&theta);
+        let e_full = (hypergrad(
+            &p,
+            &outer,
+            &theta,
+            &fwd,
+            Strategy::Full {
+                tol: 1e-12,
+                max_iters: usize::MAX,
+            },
+            None,
+        )
+        .grad_theta[0]
+            - exact)
+            .abs();
+        let e_lim = (hypergrad(
+            &p,
+            &outer,
+            &theta,
+            &fwd,
+            Strategy::Full {
+                tol: 1e-12,
+                max_iters: 2,
+            },
+            None,
+        )
+        .grad_theta[0]
+            - exact)
+            .abs();
+        assert!(e_full <= e_lim + 1e-12, "full {e_full:.2e} limited {e_lim:.2e}");
+    }
+}

@@ -1,0 +1,39 @@
+//! # SHINE — SHaring the INverse Estimate (ICLR 2022) reproduction
+//!
+//! A three-layer Rust + JAX + Pallas implementation of
+//! *SHINE: SHaring the INverse Estimate from the forward pass for bi-level
+//! optimization and implicit models* (Ramzi et al., ICLR 2022).
+//!
+//! Layers:
+//! * **L3 (this crate)** — the coordinator: quasi-Newton solvers, the SHINE
+//!   / Jacobian-Free / refine / fallback hypergradient strategies, the
+//!   bi-level (HOAG-style) outer loop, the DEQ trainer, dataset generators,
+//!   the experiment registry and the CLI.
+//! * **L2 (python/compile/model.py)** — the DEQ compute graph in JAX,
+//!   AOT-lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the DEQ residual
+//!   block and the low-rank (Sherman–Morrison) inverse application.
+//!
+//! The `runtime` module loads the artifacts through the PJRT C API (`xla`
+//! crate); Python never runs on the experiment hot path.
+//!
+//! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod bilevel;
+pub mod coordinator;
+pub mod data;
+pub mod deq;
+pub mod hypergrad;
+pub mod linalg;
+pub mod power;
+pub mod runtime;
+pub mod problems;
+pub mod qn;
+pub mod solvers;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,231 @@
+//! Compressed Sparse Row matrix (f64).
+//!
+//! The paper's bi-level LR experiments run on sparse text datasets (20news,
+//! real-sim). Our synthetic analogues preserve that sparsity, and the inner
+//! problem's gradient/Hessian-vector products are CSR matvecs — the hot loop
+//! of the Fig. 1/2/E.1/E.2 experiments.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from per-row (col, value) triplets; entries within a row may be
+    /// unsorted and duplicated (duplicates are summed).
+    pub fn from_rows(rows: usize, cols: usize, mut entries: Vec<(usize, usize, f64)>) -> Csr {
+        entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(entries.len());
+        let mut values: Vec<f64> = Vec::with_capacity(entries.len());
+        for (r, c, v) in entries {
+            assert!(r < rows && c < cols, "entry out of bounds");
+            if indptr[r + 1] > 0
+                && indices.len() > indptr[r]
+                && *indices.last().unwrap() == c
+                && indptr[r + 1] == indices.len()
+            {
+                // duplicate within the same row: accumulate
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(c);
+                values.push(v);
+                indptr[r + 1] = indices.len();
+            }
+        }
+        // prefix-max to fill empty rows
+        for r in 1..=rows {
+            if indptr[r] < indptr[r - 1] {
+                indptr[r] = indptr[r - 1];
+            }
+        }
+        Csr {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// out = A x   (out: rows)
+    pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for r in 0..self.rows {
+            let mut acc = 0.0;
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                acc += self.values[k] * x[self.indices[k]];
+            }
+            out[r] = acc;
+        }
+    }
+
+    /// out = Aᵀ x   (out: cols)
+    pub fn matvec_t(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        crate::linalg::vecops::zero(out);
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                out[self.indices[k]] += self.values[k] * xr;
+            }
+        }
+    }
+
+    /// out = Aᵀ (d ⊙ (A x)) — the LR Hessian-vector product core,
+    /// fused to avoid materializing A x twice. `tmp` must have `rows` slots.
+    pub fn hvp(&self, d: &[f64], x: &[f64], tmp: &mut [f64], out: &mut [f64]) {
+        self.matvec(x, tmp);
+        for r in 0..self.rows {
+            tmp[r] *= d[r];
+        }
+        self.matvec_t(tmp, out);
+    }
+
+    /// Dot product of row r with x.
+    pub fn row_dot(&self, r: usize, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for k in self.indptr[r]..self.indptr[r + 1] {
+            acc += self.values[k] * x[self.indices[k]];
+        }
+        acc
+    }
+
+    /// Scale each row to unit l2 norm (tf-idf-style normalization).
+    pub fn normalize_rows(&mut self) {
+        for r in 0..self.rows {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            let nrm: f64 = self.values[lo..hi].iter().map(|v| v * v).sum::<f64>().sqrt();
+            if nrm > 0.0 {
+                for v in &mut self.values[lo..hi] {
+                    *v /= nrm;
+                }
+            }
+        }
+    }
+
+    /// Extract a row-subset as a new CSR (dataset train/val/test splits).
+    pub fn select_rows(&self, rows: &[usize]) -> Csr {
+        let mut entries = Vec::new();
+        for (new_r, &r) in rows.iter().enumerate() {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                entries.push((new_r, self.indices[k], self.values[k]));
+            }
+        }
+        Csr::from_rows(rows.len(), self.cols, entries)
+    }
+
+    /// Dense conversion (tests only).
+    pub fn to_dense(&self) -> crate::linalg::dmat::DMat {
+        let mut m = crate::linalg::dmat::DMat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                m[(r, self.indices[k])] += self.values[k];
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Csr {
+        let mut entries = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.uniform() < density {
+                    entries.push((r, c, rng.normal()));
+                }
+            }
+        }
+        Csr::from_rows(rows, cols, entries)
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        prop::check("csr-matvec", 20, |rng| {
+            let (r, c) = (2 + rng.below(20), 2 + rng.below(20));
+            let a = random_csr(rng, r, c, 0.3);
+            let d = a.to_dense();
+            let x = rng.normal_vec(c);
+            let mut y1 = vec![0.0; r];
+            let mut y2 = vec![0.0; r];
+            a.matvec(&x, &mut y1);
+            d.matvec(&x, &mut y2);
+            prop::ensure_close_vec(&y1, &y2, 1e-10, "matvec")?;
+            let xt = rng.normal_vec(r);
+            let mut z1 = vec![0.0; c];
+            let mut z2 = vec![0.0; c];
+            a.matvec_t(&xt, &mut z1);
+            d.matvec_t(&xt, &mut z2);
+            prop::ensure_close_vec(&z1, &z2, 1e-10, "matvec_t")
+        });
+    }
+
+    #[test]
+    fn duplicates_sum() {
+        let a = Csr::from_rows(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (1, 1, 5.0)]);
+        assert_eq!(a.nnz(), 2);
+        let d = a.to_dense();
+        assert_eq!(d[(0, 0)], 3.0);
+        assert_eq!(d[(1, 1)], 5.0);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let a = Csr::from_rows(3, 2, vec![(2, 1, 4.0)]);
+        let mut y = vec![0.0; 3];
+        a.matvec(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn hvp_fused_matches_composed() {
+        let mut rng = Rng::new(17);
+        let a = random_csr(&mut rng, 15, 8, 0.4);
+        let d: Vec<f64> = (0..15).map(|_| rng.uniform() + 0.1).collect();
+        let x = rng.normal_vec(8);
+        let mut tmp = vec![0.0; 15];
+        let mut out = vec![0.0; 8];
+        a.hvp(&d, &x, &mut tmp, &mut out);
+        // composed
+        let mut ax = vec![0.0; 15];
+        a.matvec(&x, &mut ax);
+        for i in 0..15 {
+            ax[i] *= d[i];
+        }
+        let mut out2 = vec![0.0; 8];
+        a.matvec_t(&ax, &mut out2);
+        for (u, v) in out.iter().zip(&out2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalize_and_select() {
+        let mut a = Csr::from_rows(2, 3, vec![(0, 0, 3.0), (0, 2, 4.0), (1, 1, 2.0)]);
+        a.normalize_rows();
+        assert!((a.row_dot(0, &[3.0, 0.0, 4.0]) - 5.0).abs() < 1e-12); // (3/5)*3+(4/5)*4 = 5
+        let sub = a.select_rows(&[1]);
+        assert_eq!(sub.rows, 1);
+        assert_eq!(sub.nnz(), 1);
+    }
+}

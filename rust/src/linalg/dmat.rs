@@ -1,0 +1,241 @@
+//! Row-major dense matrix (f64) with the operations the experiments need:
+//! matvec, transposed matvec, matmul, symmetric generation helpers. Small
+//! dimensions only (exact-inverse ground truth, test oracles) — the large
+//! DEQ matmuls live in the AOT-compiled XLA artifacts, not here.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>, // row-major
+}
+
+impl DMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DMat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = DMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows[0].len();
+        let mut m = DMat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    /// iid standard normal entries scaled by `std`.
+    pub fn randn(rows: usize, cols: usize, std: f64, rng: &mut Rng) -> Self {
+        DMat {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal() * std).collect(),
+        }
+    }
+
+    /// Random symmetric positive definite matrix: A = QᵀDQ with eigenvalues
+    /// log-uniform in [eig_lo, eig_hi] (controls conditioning in tests).
+    pub fn random_spd(n: usize, eig_lo: f64, eig_hi: f64, rng: &mut Rng) -> Self {
+        // Random orthogonal Q via Gram-Schmidt on a Gaussian matrix.
+        let g = DMat::randn(n, n, 1.0, rng);
+        let q = g.gram_schmidt();
+        let eigs: Vec<f64> = (0..n)
+            .map(|_| {
+                let t = rng.uniform();
+                (eig_lo.ln() + t * (eig_hi.ln() - eig_lo.ln())).exp()
+            })
+            .collect();
+        // A = Qᵀ diag(eigs) Q
+        let mut dq = q.clone();
+        for i in 0..n {
+            for j in 0..n {
+                dq[(i, j)] *= eigs[i];
+            }
+        }
+        q.transpose().matmul(&dq)
+    }
+
+    /// Orthonormalize rows (classical Gram-Schmidt with re-orthogonalization).
+    pub fn gram_schmidt(&self) -> DMat {
+        let mut q = self.clone();
+        let n = self.rows;
+        let c = self.cols;
+        for i in 0..n {
+            for _pass in 0..2 {
+                for j in 0..i {
+                    let mut proj = 0.0;
+                    for k in 0..c {
+                        proj += q[(i, k)] * q[(j, k)];
+                    }
+                    for k in 0..c {
+                        let v = q[(j, k)];
+                        q[(i, k)] -= proj * v;
+                    }
+                }
+            }
+            let mut nrm = 0.0;
+            for k in 0..c {
+                nrm += q[(i, k)] * q[(i, k)];
+            }
+            let nrm = nrm.sqrt().max(1e-300);
+            for k in 0..c {
+                q[(i, k)] /= nrm;
+            }
+        }
+        q
+    }
+
+    /// out = A x
+    pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            let row = &self.data[i * self.cols..(i + 1) * self.cols];
+            out[i] = crate::linalg::vecops::dot(row, x);
+        }
+    }
+
+    /// out = Aᵀ x
+    pub fn matvec_t(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        crate::linalg::vecops::zero(out);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.data[i * self.cols..(i + 1) * self.cols];
+            for j in 0..self.cols {
+                out[j] += xi * row[j];
+            }
+        }
+    }
+
+    pub fn matmul(&self, other: &DMat) -> DMat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = DMat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += aik * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> DMat {
+        let mut t = DMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DMat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DMat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn matvec_and_transpose() {
+        let a = DMat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let mut y = vec![0.0; 3];
+        a.matvec(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 7.0, 11.0]);
+        let mut z = vec![0.0; 2];
+        a.matvec_t(&[1.0, 1.0, 1.0], &mut z);
+        assert_eq!(z, vec![9.0, 12.0]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = DMat::randn(4, 4, 1.0, &mut rng);
+        let i4 = DMat::eye(4);
+        let prod = a.matmul(&i4);
+        for (x, y) in prod.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormal() {
+        let mut rng = Rng::new(3);
+        let g = DMat::randn(6, 6, 1.0, &mut rng);
+        let q = g.gram_schmidt();
+        let qqt = q.matmul(&q.transpose());
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((qqt[(i, j)] - expect).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn spd_is_symmetric_positive() {
+        prop::check("spd", 10, |rng| {
+            let a = DMat::random_spd(8, 0.1, 10.0, rng);
+            for i in 0..8 {
+                for j in 0..8 {
+                    prop::ensure_close(a[(i, j)], a[(j, i)], 1e-9, "symmetry")?;
+                }
+            }
+            // xᵀAx > 0 for random x.
+            let x = rng.normal_vec(8);
+            let mut ax = vec![0.0; 8];
+            a.matvec(&x, &mut ax);
+            prop::ensure(crate::linalg::vecops::dot(&x, &ax) > 0.0, "pos def")
+        });
+    }
+}

@@ -1,0 +1,204 @@
+//! Partial-pivot LU factorization + solve.
+//!
+//! Used exclusively for *ground truth*: the inversion-quality experiments
+//! (Fig. 2-right, Fig. E.3-reduced) compare the quasi-Newton inverse estimate
+//! against the exact `J⁻¹ v` computed by a dense solve on a small problem.
+
+use crate::linalg::dmat::DMat;
+
+/// LU factorization with row pivoting. Holds L\U packed + permutation.
+pub struct Lu {
+    lu: DMat,
+    piv: Vec<usize>,
+    n: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("matrix is singular at pivot {0}")]
+pub struct SingularError(pub usize);
+
+impl Lu {
+    /// Factor a square matrix. O(n³).
+    pub fn factor(a: &DMat) -> Result<Lu, SingularError> {
+        assert_eq!(a.rows, a.cols, "LU requires square matrix");
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // Pivot: largest |value| in column k at/below diagonal.
+            let mut p = k;
+            let mut best = lu[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            if best < 1e-300 {
+                return Err(SingularError(k));
+            }
+            if p != k {
+                for j in 0..n {
+                    let tmp = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = tmp;
+                }
+                piv.swap(k, p);
+            }
+            let pivot = lu[(k, k)];
+            for i in (k + 1)..n {
+                let factor = lu[(i, k)] / pivot;
+                lu[(i, k)] = factor;
+                for j in (k + 1)..n {
+                    let v = lu[(k, j)];
+                    lu[(i, j)] -= factor * v;
+                }
+            }
+        }
+        Ok(Lu { lu, piv, n })
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        // Apply permutation.
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // Forward substitution (L has unit diagonal).
+        for i in 1..n {
+            let mut acc = x[i];
+            for j in 0..i {
+                acc -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = acc;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let mut acc = x[i];
+            for j in (i + 1)..n {
+                acc -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = acc / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Solve Aᵀ x = b (needed for the left-inverse direction `J⁻ᵀ ∇L`).
+    pub fn solve_t(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        // A = P⁻¹ L U  ⇒  Aᵀ = Uᵀ Lᵀ P  ⇒ solve Uᵀ y = b, Lᵀ z = y, x = Pᵀ z.
+        // Forward substitution with Uᵀ (lower triangular with diag of U).
+        for i in 0..n {
+            let mut acc = x[i];
+            for j in 0..i {
+                acc -= self.lu[(j, i)] * x[j];
+            }
+            x[i] = acc / self.lu[(i, i)];
+        }
+        // Back substitution with Lᵀ (upper triangular, unit diagonal).
+        for i in (0..n).rev() {
+            let mut acc = x[i];
+            for j in (i + 1)..n {
+                acc -= self.lu[(j, i)] * x[j];
+            }
+            x[i] = acc;
+        }
+        // Undo permutation: x = Pᵀ z  (z was indexed in permuted row order).
+        let mut out = vec![0.0; n];
+        for (i, &p) in self.piv.iter().enumerate() {
+            out[p] = x[i];
+        }
+        out
+    }
+
+    /// Dense inverse (test/oracle use only).
+    pub fn inverse(&self) -> DMat {
+        let n = self.n;
+        let mut inv = DMat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+            e[j] = 0.0;
+        }
+        inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::dist2;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_known_system() {
+        let a = DMat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let lu = Lu::factor(&a).unwrap();
+        let x = lu.solve(&[3.0, 5.0]);
+        // 2x + y = 3; x + 3y = 5 → x = 4/5, y = 7/5
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn detects_singular() {
+        let a = DMat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn property_solve_roundtrip() {
+        prop::check("lu-roundtrip", 20, |rng| {
+            let n = 3 + rng.below(12);
+            let a = DMat::randn(n, n, 1.0, rng);
+            let x_true = rng.normal_vec(n);
+            let mut b = vec![0.0; n];
+            a.matvec(&x_true, &mut b);
+            let lu = match Lu::factor(&a) {
+                Ok(l) => l,
+                Err(_) => return Ok(()), // exceedingly unlikely random singular
+            };
+            let x = lu.solve(&b);
+            prop::ensure(dist2(&x, &x_true) < 1e-6 * (1.0 + crate::linalg::vecops::nrm2(&x_true)), "roundtrip")
+        });
+    }
+
+    #[test]
+    fn property_transpose_solve() {
+        prop::check("lu-transpose", 20, |rng| {
+            let n = 3 + rng.below(10);
+            let a = DMat::randn(n, n, 1.0, rng);
+            let x_true = rng.normal_vec(n);
+            let mut b = vec![0.0; n];
+            a.matvec_t(&x_true, &mut b); // b = Aᵀ x_true
+            let lu = match Lu::factor(&a) {
+                Ok(l) => l,
+                Err(_) => return Ok(()),
+            };
+            let x = lu.solve_t(&b);
+            prop::ensure_close_vec(&x, &x_true, 1e-6, "Aᵀx=b solve")
+        });
+    }
+
+    #[test]
+    fn inverse_matches_identity() {
+        let mut rng = Rng::new(5);
+        let a = DMat::random_spd(6, 0.5, 5.0, &mut rng);
+        let inv = Lu::factor(&a).unwrap().inverse();
+        let prod = a.matmul(&inv);
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - expect).abs() < 1e-8);
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense + sparse linear-algebra substrate.
+//!
+//! Everything the optimization stack needs, self-contained: BLAS-1 vector
+//! kernels over `&[f64]`, a small row-major dense matrix, CSR sparse
+//! matrices (the synthetic text datasets are sparse like 20news/real-sim),
+//! and a partial-pivot LU solve used to compute *exact* `J⁻¹ v` ground truth
+//! for the inversion-quality experiments (Fig. 2-right, Fig. E.3).
+
+pub mod csr;
+pub mod dmat;
+pub mod lu;
+pub mod vecops;
+
+pub use csr::Csr;
+pub use dmat::DMat;
+pub use vecops::*;

@@ -1,0 +1,160 @@
+//! BLAS-1 style vector kernels over plain slices (f64 for the optimization
+//! stack, a few f32 variants for the DEQ/artifact path). These are the hot
+//! inner loops of the quasi-Newton updates; they are written allocation-free
+//! and auto-vectorize cleanly (verified in the §Perf pass).
+
+/// dot(a, b)
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// y = x
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// out = a + b
+#[inline]
+pub fn add(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// ||x||_2
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// ||a - b||_2
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc.sqrt()
+}
+
+/// Fill with zeros.
+#[inline]
+pub fn zero(x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v = 0.0;
+    }
+}
+
+// ---- f32 variants (DEQ hot path; accumulate dots in f64 for stability) ----
+
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc
+}
+
+#[inline]
+pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+#[inline]
+pub fn sub_f32(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+#[inline]
+pub fn nrm2_f32(x: &[f32]) -> f64 {
+    dot_f32(x, x).sqrt()
+}
+
+#[inline]
+pub fn scale_f32(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_axpy_norm() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [6.0, 9.0, 12.0]);
+        assert!((nrm2(&a) - 14f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sub_add_dist() {
+        let a = [3.0, 4.0];
+        let b = [0.0, 0.0];
+        let mut out = [0.0; 2];
+        sub(&a, &b, &mut out);
+        assert_eq!(out, a);
+        add(&a, &a, &mut out);
+        assert_eq!(out, [6.0, 8.0]);
+        assert!((dist2(&a, &b) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_ops_accumulate_in_f64() {
+        // 1e6 elements of 1e-3: f32 naive accumulation loses precision badly.
+        let n = 1_000_000;
+        let a = vec![1e-3f32; n];
+        let d = dot_f32(&a, &a);
+        assert!((d - 1e-6 * n as f64).abs() / (1e-6 * n as f64) < 1e-6);
+    }
+}

@@ -1,0 +1,300 @@
+//! `shine` — L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   list                          list registered experiments
+//!   run <exp-id> [--seed N] [--quick] [--out results]
+//!   run-all [--quick]             run every experiment in registry order
+//!   train [--variant cifar] ...   ad-hoc DEQ training run
+//!   hpo [--dataset news20] ...    ad-hoc bi-level HPO run
+//!   artifacts-check               load + execute every artifact once
+//!   version
+
+use shine::coordinator::{registry, run_experiment, ExpCtx};
+use shine::util::cli::Args;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match dispatch(cmd, rest) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn ctx_from(a: &Args) -> ExpCtx {
+    ExpCtx {
+        seed: a.get_u64("seed"),
+        quick: a.get_bool("quick"),
+        out_dir: a.get("out").to_string(),
+        artifacts_dir: a.get("artifacts").to_string(),
+    }
+}
+
+fn common_flags(args: Args) -> Args {
+    args.flag("seed", "0", "base RNG seed")
+        .switch("quick", "reduced sizes (smoke run)")
+        .flag("out", "results", "output directory for result JSON")
+        .flag(
+            "artifacts",
+            &shine::runtime::engine::Engine::default_dir(),
+            "AOT artifact directory",
+        )
+}
+
+fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
+    match cmd {
+        "version" => {
+            println!("shine {}", shine::version());
+            Ok(())
+        }
+        "list" => {
+            println!("{:<16} description", "id");
+            for e in registry() {
+                println!("{:<16} {}", e.id(), e.description());
+            }
+            Ok(())
+        }
+        "run" => {
+            let a = common_flags(Args::new("shine run <exp-id>")).parse(rest)?;
+            let id = a
+                .positional()
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("usage: shine run <exp-id> (see `shine list`)"))?
+                .clone();
+            let ctx = ctx_from(&a);
+            run_experiment(&id, &ctx)?;
+            Ok(())
+        }
+        "run-all" => {
+            let a = common_flags(Args::new("shine run-all")).parse(rest)?;
+            let ctx = ctx_from(&a);
+            for e in registry() {
+                eprintln!("== {} ==", e.id());
+                if let Err(err) = run_experiment(e.id(), &ctx) {
+                    eprintln!("experiment {} failed: {err:#}", e.id());
+                }
+            }
+            Ok(())
+        }
+        "train" => {
+            let a = common_flags(Args::new("shine train — ad-hoc DEQ training"))
+                .flag("variant", "cifar", "model variant (tiny|cifar|imagenet)")
+                .flag("backward", "shine", "backward strategy (original|original-limited|jacobian-free|shine|shine-fallback|shine-refine|adj-broyden|adj-broyden-opa)")
+                .flag("pretrain-steps", "20", "unrolled pretraining steps")
+                .flag("steps", "50", "equilibrium training steps")
+                .flag("lr", "1e-3", "base learning rate")
+                .flag("n-train", "320", "training set size")
+                .parse(rest)?;
+            cmd_train(&a)
+        }
+        "hpo" => {
+            let a = common_flags(Args::new("shine hpo — ad-hoc bi-level HPO"))
+                .flag("dataset", "news20", "dataset (news20|realsim)")
+                .flag("strategy", "shine", "hypergrad strategy (full|shine|shine-refine|jacobian-free)")
+                .switch("opa", "enable OPA extra updates")
+                .flag("outer-iters", "40", "outer iterations")
+                .parse(rest)?;
+            cmd_hpo(&a)
+        }
+        "report" => {
+            let a = common_flags(Args::new("shine report — render tables from results/")).parse(rest)?;
+            let text = shine::coordinator::report::render(a.get("out"))?;
+            println!("{text}");
+            Ok(())
+        }
+        "artifacts-check" => {
+            let a = common_flags(Args::new("shine artifacts-check")).parse(rest)?;
+            cmd_artifacts_check(&a)
+        }
+        "help" | "--help" | "-h" => {
+            println!(
+                "shine {} — SHINE (ICLR 2022) reproduction\n\n\
+                 commands:\n  \
+                 list              list experiments (paper figures/tables)\n  \
+                 run <id>          run one experiment -> results/<id>.json\n  \
+                 run-all           run every experiment\n  \
+                 report            render paper-style tables from results/\n  \
+                 train             ad-hoc DEQ training\n  \
+                 hpo               ad-hoc bi-level HPO\n  \
+                 artifacts-check   smoke-test every AOT artifact\n  \
+                 version",
+                shine::version()
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `shine help`)"),
+    }
+}
+
+fn parse_backward(s: &str) -> anyhow::Result<shine::deq::trainer::BackwardKind> {
+    use shine::deq::trainer::BackwardKind as B;
+    Ok(match s {
+        "original" => B::Original {
+            tol: 1e-6,
+            max_iters: 1000,
+        },
+        "original-limited" => B::Original {
+            tol: 1e-6,
+            max_iters: 5,
+        },
+        "jacobian-free" => B::JacobianFree,
+        "shine" => B::Shine,
+        "shine-fallback" => B::ShineFallback { ratio: 1.3 },
+        "shine-refine" => B::ShineRefine { iters: 5 },
+        "adj-broyden" => B::AdjointBroyden { opa_freq: None },
+        "adj-broyden-opa" => B::AdjointBroyden { opa_freq: Some(5) },
+        other => anyhow::bail!("unknown backward strategy '{other}'"),
+    })
+}
+
+fn cmd_train(a: &Args) -> anyhow::Result<()> {
+    use shine::data::synth_images::synth_images;
+    use shine::deq::trainer::{Trainer, TrainerConfig};
+    use shine::runtime::engine::Engine;
+    use shine::util::rng::Rng;
+
+    let eng = Engine::load(a.get("artifacts"))?;
+    let variant = a.get("variant").to_string();
+    eng.warmup_variant(&variant)?;
+    let pretrain_steps = a.get_usize("pretrain-steps");
+    let steps = a.get_usize("steps");
+    let cfg = TrainerConfig {
+        variant: variant.clone(),
+        backward: parse_backward(a.get("backward"))?,
+        lr: a.get_f64("lr"),
+        total_steps: pretrain_steps + steps,
+        seed: a.get_u64("seed"),
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(&eng, cfg)?;
+    let v = tr.model.v.clone();
+    let ds = synth_images(
+        a.get_usize("n-train"),
+        v.h,
+        v.w,
+        v.c_in,
+        v.n_classes,
+        0.5,
+        a.get_u64("seed"),
+    );
+    let mut rng = Rng::new(a.get_u64("seed") ^ 1);
+    let mut step = 0;
+    eprintln!(
+        "training {variant} DEQ ({} params, d={}) with {}",
+        tr.params.n_params(),
+        v.fixed_point_dim,
+        tr.cfg.backward.name()
+    );
+    'pre: loop {
+        for idx in ds.epoch_batches(v.batch, &mut rng) {
+            if step >= pretrain_steps {
+                break 'pre;
+            }
+            let (x, labels) = ds.batch(&idx);
+            let loss = tr.pretrain_step(&x, &labels)?;
+            println!("pretrain step {step}: loss {loss:.4}");
+            step += 1;
+        }
+    }
+    step = 0;
+    'train: loop {
+        for idx in ds.epoch_batches(v.batch, &mut rng) {
+            if step >= steps {
+                break 'train;
+            }
+            let (x, labels) = ds.batch(&idx);
+            let s = tr.train_step(&x, &labels)?;
+            println!(
+                "step {step}: loss {:.4} (fwd {:.0}ms/{} iters, bwd {:.0}ms)",
+                s.loss,
+                s.fwd_seconds * 1e3,
+                s.fwd_iters,
+                s.bwd_seconds * 1e3
+            );
+            step += 1;
+        }
+    }
+    let acc = tr.evaluate(&ds, 4, &mut rng)?;
+    println!("final train-set accuracy (4 batches): {acc:.3}");
+    Ok(())
+}
+
+fn cmd_hpo(a: &Args) -> anyhow::Result<()> {
+    use shine::bilevel::hoag::{hoag_run, HoagOptions};
+    use shine::data::split::split_logreg;
+    use shine::data::synth_text::{synth_text, TextConfig};
+    use shine::hypergrad::Strategy;
+    use shine::problems::logreg::{LogRegInner, LogRegOuter};
+    use shine::util::rng::Rng;
+
+    let cfg = match a.get("dataset") {
+        "news20" => TextConfig::news20_like(),
+        "realsim" => TextConfig::realsim_like(),
+        other => anyhow::bail!("unknown dataset '{other}'"),
+    };
+    let data = synth_text(&cfg, a.get_u64("seed"));
+    let mut rng = Rng::new(a.get_u64("seed") ^ 2);
+    let (train, val, test) = split_logreg(&data, &mut rng);
+    let prob = LogRegInner { train };
+    let outer = LogRegOuter { val, test };
+    let strategy = match a.get("strategy") {
+        "full" => Strategy::Full {
+            tol: 1e-8,
+            max_iters: usize::MAX,
+        },
+        "shine" => Strategy::Shine,
+        "shine-refine" => Strategy::ShineRefine {
+            iters: 5,
+            tol: 1e-10,
+        },
+        "jacobian-free" => Strategy::JacobianFree,
+        other => anyhow::bail!("unknown strategy '{other}'"),
+    };
+    let opts = HoagOptions {
+        outer_iters: a.get_usize("outer-iters"),
+        strategy,
+        opa: if a.get_bool("opa") {
+            Some(shine::qn::lbfgs::OpaConfig { freq: 5, t0: 1.0 })
+        } else {
+            None
+        },
+        ..Default::default()
+    };
+    let res = hoag_run(&prob, &outer, &[-4.0], &opts);
+    for p in &res.trace {
+        println!(
+            "outer {:>3}: t={:.2}s theta={:+.3} val={:.4} test={:.4}",
+            p.k, p.time, p.theta[0], p.val_loss, p.test_loss
+        );
+    }
+    println!("final theta: {:+.4}", res.theta[0]);
+    Ok(())
+}
+
+fn cmd_artifacts_check(a: &Args) -> anyhow::Result<()> {
+    use shine::deq::model::{DeqModel, Params};
+    use shine::runtime::engine::Engine;
+    use shine::util::rng::Rng;
+
+    let eng = Engine::load(a.get("artifacts"))?;
+    for vname in eng.manifest.variants.keys().cloned().collect::<Vec<_>>() {
+        let m = DeqModel::new(&eng, &vname)?;
+        let mut rng = Rng::new(1);
+        let p = Params::init(&m.v, &mut rng);
+        let d = m.v.fixed_point_dim;
+        let x = rng.normal_vec_f32(m.v.batch * m.v.h * m.v.w * m.v.c_in, 1.0);
+        let z = rng.normal_vec_f32(d, 1.0);
+        let u = m.inject(&p, &x)?;
+        let f = m.f(&p, &z, &u)?;
+        let _ = m.f_vjp_z(&p, &z, &u, &f)?;
+        let _ = m.head_logits(&p, &z)?;
+        println!("variant {vname}: OK (d={d})");
+    }
+    println!("all artifacts OK");
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! Nonlinear power method — Table E.1's "nonlinear spectral radius" of the
+//! fixed-point-defining sub-network.
+//!
+//! The paper probes the contractivity assumption of the Jacobian-Free method
+//! (Fung et al. 2021) by applying the power method to f_θ around z*: if the
+//! dominant singular value of ∂f/∂z exceeds 1, the network is not
+//! contractive (the paper measures 194–234 — not contractive at all).
+
+use crate::linalg::vecops::{nrm2, scale};
+use crate::util::rng::Rng;
+
+/// Result of a power-method run.
+#[derive(Clone, Debug)]
+pub struct PowerResult {
+    /// estimated spectral radius (dominant |eigenvalue| of the Jacobian map)
+    pub radius: f64,
+    pub iters: usize,
+    /// per-iteration radius estimates (convergence diagnostics)
+    pub history: Vec<f64>,
+}
+
+/// Power method on a linear map given as a matvec closure.
+pub fn power_method(
+    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+    dim: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> PowerResult {
+    let mut v = rng.normal_vec(dim);
+    let n0 = nrm2(&v);
+    scale(1.0 / n0.max(1e-300), &mut v);
+    let mut history = Vec::with_capacity(iters);
+    let mut radius = 0.0;
+    for _ in 0..iters {
+        let av = apply(&v);
+        radius = nrm2(&av);
+        history.push(radius);
+        if radius <= 1e-300 {
+            break;
+        }
+        v = av;
+        scale(1.0 / radius, &mut v);
+    }
+    PowerResult {
+        radius,
+        iters: history.len(),
+        history,
+    }
+}
+
+/// Nonlinear variant: the Jacobian map at z is approximated by finite
+/// differences of `f` (the paper's "power-method applied to a nonlinear
+/// function"). `f` must be the fixed-point map (not the residual).
+pub fn nonlinear_power_method(
+    mut f: impl FnMut(&[f64]) -> Vec<f64>,
+    z: &[f64],
+    iters: usize,
+    eps: f64,
+    rng: &mut Rng,
+) -> PowerResult {
+    let fz = f(z);
+    let dim = z.len();
+    power_method(
+        move |v| {
+            // (f(z + εv) − f(z)) / ε
+            let zp: Vec<f64> = z.iter().zip(v).map(|(&a, &b)| a + eps * b).collect();
+            let fp = f(&zp);
+            fp.iter().zip(&fz).map(|(&a, &b)| (a - b) / eps).collect()
+        },
+        dim,
+        iters,
+        rng,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dmat::DMat;
+    use crate::util::prop;
+
+    #[test]
+    fn recovers_dominant_eigenvalue_of_diag() {
+        let mut rng = Rng::new(2);
+        let diag = [5.0, 2.0, 1.0, 0.5];
+        let res = power_method(
+            |v| v.iter().zip(&diag).map(|(&x, &d)| x * d).collect(),
+            4,
+            100,
+            &mut rng,
+        );
+        assert!((res.radius - 5.0).abs() < 1e-6, "radius={}", res.radius);
+    }
+
+    #[test]
+    fn spd_radius_matches_extreme_eigenvalue() {
+        prop::check("power-spd", 8, |rng| {
+            let n = 6;
+            let a = DMat::random_spd(n, 0.1, 3.0, rng);
+            let res = power_method(
+                |v| {
+                    let mut out = vec![0.0; n];
+                    a.matvec(v, &mut out);
+                    out
+                },
+                n,
+                500,
+                rng,
+            );
+            // Rayleigh check: radius must be ≥ |Av|/|v| for a random probe
+            // and equal to the max singular value within tolerance: verify
+            // via ‖A x‖ ≤ radius·‖x‖ (1 + tol) for random x.
+            let x = rng.normal_vec(n);
+            let mut ax = vec![0.0; n];
+            a.matvec(&x, &mut ax);
+            prop::ensure(
+                nrm2(&ax) <= res.radius * nrm2(&x) * (1.0 + 1e-3),
+                &format!("radius {} too small", res.radius),
+            )
+        });
+    }
+
+    #[test]
+    fn nonlinear_matches_linear_on_linear_map() {
+        let mut rng = Rng::new(7);
+        let n = 5;
+        // SPD: the power method converges cleanly (a random nonsymmetric
+        // matrix may have complex dominant eigenvalues → oscillation).
+        let a = DMat::random_spd(n, 0.2, 4.0, &mut rng);
+        let z = rng.normal_vec(n);
+        let res = nonlinear_power_method(
+            |x| {
+                let mut out = vec![0.0; n];
+                a.matvec(x, &mut out);
+                out
+            },
+            &z,
+            200,
+            1e-6,
+            &mut rng,
+        );
+        // Compare against direct power method on A.
+        let mut rng2 = Rng::new(8);
+        let lin = power_method(
+            |v| {
+                let mut out = vec![0.0; n];
+                a.matvec(v, &mut out);
+                out
+            },
+            n,
+            200,
+            &mut rng2,
+        );
+        assert!(
+            (res.radius - lin.radius).abs() / lin.radius < 1e-2,
+            "{} vs {}",
+            res.radius,
+            lin.radius
+        );
+    }
+
+    #[test]
+    fn history_converges() {
+        let mut rng = Rng::new(3);
+        let res = power_method(|v| v.iter().map(|&x| 2.0 * x).collect(), 3, 50, &mut rng);
+        assert_eq!(res.iters, 50);
+        let last = res.history.last().unwrap();
+        assert!((last - 2.0).abs() < 1e-9);
+    }
+}

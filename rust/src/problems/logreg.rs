@@ -1,0 +1,292 @@
+//! ℓ2-regularized logistic regression — the paper's flagship bi-level
+//! benchmark (eq. 2; Fig. 1, Fig. 2-left, Fig. E.1).
+//!
+//! Inner problem (θ is the *log* regularization strength, as in HOAG):
+//!
+//! ```text
+//! r_θ(z) = (1/n) Σᵢ log(1 + exp(−yᵢ xᵢᵀz)) + ½ e^θ ‖z‖²
+//! g_θ(z) = ∇_z r_θ(z) = (1/n) Xᵀ σ' + e^θ z
+//! J_{g_θ}(z) = (1/n) Xᵀ D X + e^θ I    (symmetric positive definite)
+//! ```
+//!
+//! Outer loss: unregularized validation logistic loss; the test split is
+//! only used for the reported curves, exactly as footnote 5 warns.
+
+use crate::linalg::csr::Csr;
+use crate::problems::{InnerProblem, OuterLoss};
+
+/// σ(x) numerically-stable.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// log(1 + exp(−m)) numerically-stable.
+#[inline]
+pub fn log1pexp_neg(m: f64) -> f64 {
+    if m > 0.0 {
+        (-m).exp().ln_1p()
+    } else {
+        -m + m.exp().ln_1p()
+    }
+}
+
+/// A labelled sparse dataset split. Labels in {−1, +1}.
+pub struct LogRegData {
+    pub x: Csr,
+    pub y: Vec<f64>,
+}
+
+impl LogRegData {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    /// Mean logistic loss (no regularization).
+    pub fn loss(&self, z: &[f64]) -> f64 {
+        let n = self.n();
+        let mut acc = 0.0;
+        for i in 0..n {
+            let m = self.y[i] * self.x.row_dot(i, z);
+            acc += log1pexp_neg(m);
+        }
+        acc / n as f64
+    }
+
+    /// ∇ of the mean logistic loss.
+    pub fn loss_grad(&self, z: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let mut coeff = vec![0.0; n];
+        for i in 0..n {
+            let m = self.y[i] * self.x.row_dot(i, z);
+            // dℓ/dm = −σ(−m); chain through m = y·xᵀz.
+            coeff[i] = -self.y[i] * sigmoid(-m) / n as f64;
+        }
+        let mut out = vec![0.0; self.x.cols];
+        self.x.matvec_t(&coeff, &mut out);
+        out
+    }
+
+    /// Classification error rate (for accuracy reporting).
+    pub fn error_rate(&self, z: &[f64]) -> f64 {
+        let n = self.n();
+        let wrong = (0..n)
+            .filter(|&i| self.y[i] * self.x.row_dot(i, z) <= 0.0)
+            .count();
+        wrong as f64 / n as f64
+    }
+}
+
+/// The bi-level LR problem: train split defines the inner problem.
+pub struct LogRegInner {
+    pub train: LogRegData,
+}
+
+impl LogRegInner {
+    fn reg(&self, theta: &[f64]) -> f64 {
+        theta[0].exp()
+    }
+
+    /// The per-sample Hessian weights D_ii = σ(mᵢ)(1 − σ(mᵢ)).
+    fn hess_weights(&self, z: &[f64]) -> Vec<f64> {
+        let n = self.train.n();
+        (0..n)
+            .map(|i| {
+                let m = self.train.x.row_dot(i, z);
+                let s = sigmoid(m);
+                s * (1.0 - s) / n as f64
+            })
+            .collect()
+    }
+}
+
+impl InnerProblem for LogRegInner {
+    fn dim(&self) -> usize {
+        self.train.x.cols
+    }
+    fn theta_dim(&self) -> usize {
+        1
+    }
+    fn is_symmetric(&self) -> bool {
+        true
+    }
+    fn g(&self, theta: &[f64], z: &[f64]) -> Vec<f64> {
+        let mut g = self.train.loss_grad(z);
+        let lam = self.reg(theta);
+        for (gi, zi) in g.iter_mut().zip(z) {
+            *gi += lam * zi;
+        }
+        g
+    }
+    fn inner_value(&self, theta: &[f64], z: &[f64]) -> Option<f64> {
+        let lam = self.reg(theta);
+        Some(self.train.loss(z) + 0.5 * lam * crate::linalg::vecops::dot(z, z))
+    }
+    fn jvp(&self, theta: &[f64], z: &[f64], v: &[f64]) -> Vec<f64> {
+        // (1/n) Xᵀ D X v + e^θ v
+        let d = self.hess_weights(z);
+        let mut tmp = vec![0.0; self.train.n()];
+        let mut out = vec![0.0; self.dim()];
+        self.train.x.hvp(&d, v, &mut tmp, &mut out);
+        let lam = self.reg(theta);
+        for (oi, vi) in out.iter_mut().zip(v) {
+            *oi += lam * vi;
+        }
+        out
+    }
+    fn vjp(&self, theta: &[f64], z: &[f64], v: &[f64]) -> Vec<f64> {
+        self.jvp(theta, z, v) // Hessian is symmetric
+    }
+    fn vjp_theta(&self, theta: &[f64], z: &[f64], w: &[f64]) -> Vec<f64> {
+        // ∂g/∂θ = e^θ z
+        vec![self.reg(theta) * crate::linalg::vecops::dot(w, z)]
+    }
+    fn dg_dtheta_col(&self, theta: &[f64], z: &[f64], j: usize) -> Vec<f64> {
+        assert_eq!(j, 0);
+        let lam = self.reg(theta);
+        z.iter().map(|&x| lam * x).collect()
+    }
+}
+
+/// Outer loss: validation logistic loss (gradient used for the
+/// hypergradient), test logistic loss for reporting.
+pub struct LogRegOuter {
+    pub val: LogRegData,
+    pub test: LogRegData,
+}
+
+impl OuterLoss for LogRegOuter {
+    fn value(&self, z: &[f64]) -> f64 {
+        self.val.loss(z)
+    }
+    fn grad(&self, z: &[f64]) -> Vec<f64> {
+        self.val.loss_grad(z)
+    }
+    fn test_value(&self, z: &[f64]) -> f64 {
+        self.test.loss(z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::csr::Csr;
+    use crate::problems::fd_check_jvp;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn toy_data(rng: &mut Rng, n: usize, d: usize) -> LogRegData {
+        let mut entries = Vec::new();
+        let truth = rng.normal_vec(d);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut m = 0.0;
+            for j in 0..d {
+                if rng.uniform() < 0.5 {
+                    let v = rng.normal();
+                    entries.push((i, j, v));
+                    m += v * truth[j];
+                }
+            }
+            y.push(if m + 0.3 * rng.normal() > 0.0 { 1.0 } else { -1.0 });
+        }
+        LogRegData {
+            x: Csr::from_rows(n, d, entries),
+            y,
+        }
+    }
+
+    #[test]
+    fn gradient_matches_fd() {
+        prop::check("lr-grad-fd", 8, |rng| {
+            let data = toy_data(rng, 20, 6);
+            let prob = LogRegInner { train: data };
+            let theta = [rng.normal() * 0.5 - 1.0];
+            let z = rng.normal_vec(6);
+            let g = prob.g(&theta, &z);
+            let eps = 1e-6;
+            for i in 0..6 {
+                let mut zp = z.clone();
+                zp[i] += eps;
+                let mut zm = z.clone();
+                zm[i] -= eps;
+                let fd = (prob.inner_value(&theta, &zp).unwrap()
+                    - prob.inner_value(&theta, &zm).unwrap())
+                    / (2.0 * eps);
+                prop::ensure_close(g[i], fd, 1e-4, "grad vs fd")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hessian_vp_matches_fd() {
+        prop::check("lr-hvp-fd", 8, |rng| {
+            let data = toy_data(rng, 25, 5);
+            let prob = LogRegInner { train: data };
+            let theta = [-1.0];
+            let z = rng.normal_vec(5);
+            let v = rng.normal_vec(5);
+            let (fd, jvp) = fd_check_jvp(&prob, &theta, &z, &v, 1e-5);
+            prop::ensure_close_vec(&fd, &jvp, 1e-4, "hvp vs fd")
+        });
+    }
+
+    #[test]
+    fn dg_dtheta_matches_fd() {
+        prop::check("lr-dgdtheta-fd", 8, |rng| {
+            let data = toy_data(rng, 15, 4);
+            let prob = LogRegInner { train: data };
+            let theta = [0.2];
+            let z = rng.normal_vec(4);
+            let eps = 1e-6;
+            let gp = prob.g(&[theta[0] + eps], &z);
+            let gm = prob.g(&[theta[0] - eps], &z);
+            let fd: Vec<f64> = gp.iter().zip(&gm).map(|(a, b)| (a - b) / (2.0 * eps)).collect();
+            prop::ensure_close_vec(&fd, &prob.dg_dtheta_col(&theta, &z, 0), 1e-5, "∂g/∂θ")?;
+            // and wᵀ∂g/∂θ consistency
+            let w = rng.normal_vec(4);
+            let via_col = crate::linalg::vecops::dot(&w, &prob.dg_dtheta_col(&theta, &z, 0));
+            prop::ensure_close(prob.vjp_theta(&theta, &z, &w)[0], via_col, 1e-10, "vjp_theta")
+        });
+    }
+
+    #[test]
+    fn sigmoid_stable() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!(sigmoid(-800.0) >= 0.0 && sigmoid(-800.0) < 1e-300);
+        assert!((sigmoid(800.0) - 1.0).abs() < 1e-15);
+        assert!(log1pexp_neg(800.0) >= 0.0);
+        assert!((log1pexp_neg(-800.0) - 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn training_reduces_loss_and_error() {
+        let mut rng = Rng::new(33);
+        let data = toy_data(&mut rng, 200, 10);
+        let prob = LogRegInner { train: data };
+        let theta = [(-4.0f64)];
+        let obj = (10usize, |z: &[f64]| {
+            (
+                prob.inner_value(&theta, z).unwrap(),
+                prob.g(&theta, z),
+            )
+        });
+        let res = crate::solvers::minimize::lbfgs_minimize(
+            &obj,
+            &vec![0.0; 10],
+            &crate::solvers::minimize::MinimizeOptions::default(),
+            None,
+            None,
+        );
+        assert!(res.converged, "grad_norm={}", res.grad_norm);
+        let loss0 = prob.train.loss(&vec![0.0; 10]);
+        assert!(prob.train.loss(&res.z) < loss0 * 0.9);
+        assert!(prob.train.error_rate(&res.z) < 0.3);
+    }
+}

@@ -1,0 +1,74 @@
+//! Inner problems for the bi-level experiments.
+//!
+//! A bi-level problem (eq. 1 of the paper) is specified by an
+//! [`InnerProblem`] (`g_θ(z) = 0` defines `z*(θ)`) and an [`OuterLoss`]
+//! (`L(z*)` evaluated on validation data; test data used for reporting).
+//!
+//! * [`logreg`] — ℓ2-regularized logistic regression (eq. 2; Fig. 1, 2, E.1)
+//! * [`nls`] — regularized nonlinear least squares (eq. 12; Fig. E.2)
+//! * [`quadratic`] — synthetic quadratic with a closed-form hypergradient,
+//!   the oracle against which all hypergradient strategies are tested.
+
+pub mod logreg;
+pub mod nls;
+pub mod quadratic;
+
+/// The inner problem: `g_θ(z) = 0`. For smooth convex inner problems,
+/// `g_θ = ∇_z r_θ` and `J_{g_θ}` is the (symmetric) Hessian; for DEQs it is
+/// the (nonsymmetric) Jacobian of the root equation.
+pub trait InnerProblem: Sync {
+    /// dimension d of z
+    fn dim(&self) -> usize;
+    /// number of hyperparameters
+    fn theta_dim(&self) -> usize;
+    /// whether J_{g_θ} is symmetric (Hessian case → CG backward solver)
+    fn is_symmetric(&self) -> bool;
+    /// residual g_θ(z)
+    fn g(&self, theta: &[f64], z: &[f64]) -> Vec<f64>;
+    /// inner objective value r_θ(z), if this is a minimization problem
+    fn inner_value(&self, theta: &[f64], z: &[f64]) -> Option<f64>;
+    /// J_{g_θ}(z) · v
+    fn jvp(&self, theta: &[f64], z: &[f64], v: &[f64]) -> Vec<f64>;
+    /// J_{g_θ}(z)ᵀ · v  (== jvp for symmetric problems)
+    fn vjp(&self, theta: &[f64], z: &[f64], v: &[f64]) -> Vec<f64>;
+    /// wᵀ · ∂g_θ/∂θ|_z — returns a `theta_dim()` vector
+    fn vjp_theta(&self, theta: &[f64], z: &[f64], w: &[f64]) -> Vec<f64>;
+    /// column j of ∂g_θ/∂θ|_z — the OPA direction (eq. 5) for scalar θ
+    fn dg_dtheta_col(&self, theta: &[f64], z: &[f64], j: usize) -> Vec<f64>;
+}
+
+/// The outer objective `L` and its reporting twin.
+pub trait OuterLoss: Sync {
+    /// validation loss — the quantity hypergradient descent minimizes
+    fn value(&self, z: &[f64]) -> f64;
+    /// ∇_z L(z) on validation data
+    fn grad(&self, z: &[f64]) -> Vec<f64>;
+    /// held-out test loss — what the paper's figures plot
+    fn test_value(&self, z: &[f64]) -> f64;
+}
+
+/// Finite-difference check utility shared by the problem tests: directional
+/// derivative of g against jvp.
+#[cfg(test)]
+pub(crate) fn fd_check_jvp(
+    prob: &dyn InnerProblem,
+    theta: &[f64],
+    z: &[f64],
+    v: &[f64],
+    eps: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut z_p = z.to_vec();
+    let mut z_m = z.to_vec();
+    for i in 0..z.len() {
+        z_p[i] += eps * v[i];
+        z_m[i] -= eps * v[i];
+    }
+    let gp = prob.g(theta, &z_p);
+    let gm = prob.g(theta, &z_m);
+    let fd: Vec<f64> = gp
+        .iter()
+        .zip(&gm)
+        .map(|(a, b)| (a - b) / (2.0 * eps))
+        .collect();
+    (fd, prob.jvp(theta, z, v))
+}

@@ -1,0 +1,222 @@
+//! Regularized nonlinear least squares (eq. 12; Fig. E.2).
+//!
+//! Inner problem (θ = log regularization, σ = sigmoid):
+//!
+//! ```text
+//! r_θ(z) = (1/2n) Σⱼ (yⱼ − σ(zᵀxⱼ))² + ½ e^θ ‖z‖²,   y ∈ {0, 1}
+//! ```
+//!
+//! The inner problem is **non-convex** (its Hessian can be indefinite) —
+//! the paper uses it precisely because qN inverse-Hessian estimates are
+//! harder here, making OPA's benefit more pronounced (§E.2).
+
+use crate::linalg::csr::Csr;
+use crate::problems::{logreg::sigmoid, InnerProblem, OuterLoss};
+
+/// A labelled dataset with y ∈ {0, 1} (note: different label convention
+/// from LogReg's ±1, matching eq. 12).
+pub struct NlsData {
+    pub x: Csr,
+    pub y: Vec<f64>,
+}
+
+impl NlsData {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    /// (1/2n) Σ (y − σ(m))².
+    pub fn loss(&self, z: &[f64]) -> f64 {
+        let n = self.n();
+        let mut acc = 0.0;
+        for i in 0..n {
+            let s = sigmoid(self.x.row_dot(i, z));
+            acc += (self.y[i] - s) * (self.y[i] - s);
+        }
+        0.5 * acc / n as f64
+    }
+
+    /// Gradient of `loss`.
+    pub fn loss_grad(&self, z: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let mut coeff = vec![0.0; n];
+        for i in 0..n {
+            let s = sigmoid(self.x.row_dot(i, z));
+            // d/dm ½(y−σ)² = (σ−y)·σ(1−σ)
+            coeff[i] = (s - self.y[i]) * s * (1.0 - s) / n as f64;
+        }
+        let mut out = vec![0.0; self.x.cols];
+        self.x.matvec_t(&coeff, &mut out);
+        out
+    }
+}
+
+pub struct NlsInner {
+    pub train: NlsData,
+}
+
+impl NlsInner {
+    fn reg(&self, theta: &[f64]) -> f64 {
+        theta[0].exp()
+    }
+
+    /// Per-sample second-derivative weights of ℓ(m) = ½(y−σ(m))²:
+    /// ℓ''(m) = σ'(m)² + (σ−y)·σ''(m),  σ'' = σ(1−σ)(1−2σ).
+    fn hess_weights(&self, z: &[f64]) -> Vec<f64> {
+        let n = self.train.n();
+        (0..n)
+            .map(|i| {
+                let s = sigmoid(self.train.x.row_dot(i, z));
+                let sp = s * (1.0 - s);
+                let spp = sp * (1.0 - 2.0 * s);
+                (sp * sp + (s - self.train.y[i]) * spp) / n as f64
+            })
+            .collect()
+    }
+}
+
+impl InnerProblem for NlsInner {
+    fn dim(&self) -> usize {
+        self.train.x.cols
+    }
+    fn theta_dim(&self) -> usize {
+        1
+    }
+    fn is_symmetric(&self) -> bool {
+        true
+    }
+    fn g(&self, theta: &[f64], z: &[f64]) -> Vec<f64> {
+        let mut g = self.train.loss_grad(z);
+        let lam = self.reg(theta);
+        for (gi, zi) in g.iter_mut().zip(z) {
+            *gi += lam * zi;
+        }
+        g
+    }
+    fn inner_value(&self, theta: &[f64], z: &[f64]) -> Option<f64> {
+        Some(self.train.loss(z) + 0.5 * self.reg(theta) * crate::linalg::vecops::dot(z, z))
+    }
+    fn jvp(&self, theta: &[f64], z: &[f64], v: &[f64]) -> Vec<f64> {
+        let d = self.hess_weights(z);
+        let mut tmp = vec![0.0; self.train.n()];
+        let mut out = vec![0.0; self.dim()];
+        self.train.x.hvp(&d, v, &mut tmp, &mut out);
+        let lam = self.reg(theta);
+        for (oi, vi) in out.iter_mut().zip(v) {
+            *oi += lam * vi;
+        }
+        out
+    }
+    fn vjp(&self, theta: &[f64], z: &[f64], v: &[f64]) -> Vec<f64> {
+        self.jvp(theta, z, v)
+    }
+    fn vjp_theta(&self, theta: &[f64], z: &[f64], w: &[f64]) -> Vec<f64> {
+        vec![self.reg(theta) * crate::linalg::vecops::dot(w, z)]
+    }
+    fn dg_dtheta_col(&self, theta: &[f64], z: &[f64], j: usize) -> Vec<f64> {
+        assert_eq!(j, 0);
+        let lam = self.reg(theta);
+        z.iter().map(|&x| lam * x).collect()
+    }
+}
+
+pub struct NlsOuter {
+    pub val: NlsData,
+    pub test: NlsData,
+}
+
+impl OuterLoss for NlsOuter {
+    fn value(&self, z: &[f64]) -> f64 {
+        self.val.loss(z)
+    }
+    fn grad(&self, z: &[f64]) -> Vec<f64> {
+        self.val.loss_grad(z)
+    }
+    fn test_value(&self, z: &[f64]) -> f64 {
+        self.test.loss(z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::csr::Csr;
+    use crate::problems::fd_check_jvp;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn toy(rng: &mut Rng, n: usize, d: usize) -> NlsData {
+        let truth = rng.normal_vec(d);
+        let mut entries = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let mut m = 0.0;
+            for j in 0..d {
+                if rng.uniform() < 0.6 {
+                    let v = rng.normal();
+                    entries.push((i, j, v));
+                    m += v * truth[j];
+                }
+            }
+            y.push(if m > 0.0 { 1.0 } else { 0.0 });
+        }
+        NlsData {
+            x: Csr::from_rows(n, d, entries),
+            y,
+        }
+    }
+
+    #[test]
+    fn gradient_matches_fd() {
+        prop::check("nls-grad-fd", 8, |rng| {
+            let prob = NlsInner { train: toy(rng, 20, 5) };
+            let theta = [-1.0];
+            let z = rng.normal_vec(5);
+            let g = prob.g(&theta, &z);
+            let eps = 1e-6;
+            for i in 0..5 {
+                let mut zp = z.clone();
+                zp[i] += eps;
+                let mut zm = z.clone();
+                zm[i] -= eps;
+                let fd = (prob.inner_value(&theta, &zp).unwrap()
+                    - prob.inner_value(&theta, &zm).unwrap())
+                    / (2.0 * eps);
+                prop::ensure_close(g[i], fd, 1e-4, "grad vs fd")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hvp_matches_fd() {
+        prop::check("nls-hvp-fd", 8, |rng| {
+            let prob = NlsInner { train: toy(rng, 30, 6) };
+            let theta = [-0.5];
+            let z = rng.normal_vec(6);
+            let v = rng.normal_vec(6);
+            let (fd, jvp) = fd_check_jvp(&prob, &theta, &z, &v, 1e-5);
+            prop::ensure_close_vec(&fd, &jvp, 1e-3, "hvp vs fd")
+        });
+    }
+
+    #[test]
+    fn hessian_can_be_indefinite() {
+        // The defining feature of this benchmark: find a point where some
+        // per-sample weight is negative (so the unregularized Hessian can be
+        // indefinite). With y=1 and large positive margin, (σ−y)σ'' > 0 but
+        // at y=0, small margins give negative curvature contributions.
+        let mut rng = Rng::new(12);
+        let prob = NlsInner { train: toy(&mut rng, 50, 8) };
+        let mut found_negative = false;
+        for _ in 0..50 {
+            let z = rng.normal_vec(8);
+            let w = prob.hess_weights(&z);
+            if w.iter().any(|&x| x < 0.0) {
+                found_negative = true;
+                break;
+            }
+        }
+        assert!(found_negative, "nonconvexity witness not found");
+    }
+}

@@ -1,0 +1,203 @@
+//! Synthetic quadratic bi-level problem with closed-form everything —
+//! the oracle for testing hypergradient strategies.
+//!
+//! Inner:  r_θ(z) = ½ zᵀ A z − bᵀ z + ½ e^θ ‖z‖²
+//!   ⇒ g_θ(z) = (A + e^θ I) z − b,  J_{g_θ} = A + e^θ I (symmetric),
+//!     z*(θ) = (A + e^θ I)⁻¹ b.
+//! Outer:  L(z) = ½ ‖z − t‖²  (t = validation target)
+//!   ⇒ exact hypergradient via implicit differentiation:
+//!     dL/dθ = −∇L(z*)ᵀ J⁻¹ (e^θ z*) = −e^θ (z*−t)ᵀ (A+e^θI)⁻¹ z*.
+
+use crate::linalg::dmat::DMat;
+use crate::linalg::lu::Lu;
+use crate::problems::{InnerProblem, OuterLoss};
+use crate::util::rng::Rng;
+
+pub struct QuadraticBilevel {
+    pub a: DMat,
+    pub b: Vec<f64>,
+    pub target: Vec<f64>,
+}
+
+impl QuadraticBilevel {
+    pub fn random(n: usize, rng: &mut Rng) -> Self {
+        QuadraticBilevel {
+            a: DMat::random_spd(n, 0.3, 5.0, rng),
+            b: rng.normal_vec(n),
+            target: rng.normal_vec(n),
+        }
+    }
+
+    fn reg(&self, theta: &[f64]) -> f64 {
+        theta[0].exp()
+    }
+
+    /// Closed-form inner solution z*(θ).
+    pub fn z_star(&self, theta: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        let mut m = self.a.clone();
+        let lam = self.reg(theta);
+        for i in 0..n {
+            m[(i, i)] += lam;
+        }
+        Lu::factor(&m).unwrap().solve(&self.b)
+    }
+
+    /// Exact hypergradient dL/dθ at θ (oracle).
+    pub fn exact_hypergrad(&self, theta: &[f64]) -> f64 {
+        let n = self.dim();
+        let lam = self.reg(theta);
+        let z = self.z_star(theta);
+        let mut m = self.a.clone();
+        for i in 0..n {
+            m[(i, i)] += lam;
+        }
+        let lu = Lu::factor(&m).unwrap();
+        // w = J⁻ᵀ ∇L = J⁻¹ ∇L (symmetric)
+        let grad_l: Vec<f64> = z.iter().zip(&self.target).map(|(a, b)| a - b).collect();
+        let w = lu.solve(&grad_l);
+        // dL/dθ = − wᵀ ∂g/∂θ = − wᵀ (λ z)
+        -lam * crate::linalg::vecops::dot(&w, &z)
+    }
+}
+
+impl InnerProblem for QuadraticBilevel {
+    fn dim(&self) -> usize {
+        self.b.len()
+    }
+    fn theta_dim(&self) -> usize {
+        1
+    }
+    fn is_symmetric(&self) -> bool {
+        true
+    }
+    fn g(&self, theta: &[f64], z: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        let mut out = vec![0.0; n];
+        self.a.matvec(z, &mut out);
+        let lam = self.reg(theta);
+        for i in 0..n {
+            out[i] += lam * z[i] - self.b[i];
+        }
+        out
+    }
+    fn inner_value(&self, theta: &[f64], z: &[f64]) -> Option<f64> {
+        let n = self.dim();
+        let mut az = vec![0.0; n];
+        self.a.matvec(z, &mut az);
+        let quad = 0.5 * crate::linalg::vecops::dot(z, &az);
+        let lin = crate::linalg::vecops::dot(&self.b, z);
+        let reg = 0.5 * self.reg(theta) * crate::linalg::vecops::dot(z, z);
+        Some(quad - lin + reg)
+    }
+    fn jvp(&self, theta: &[f64], _z: &[f64], v: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        let mut out = vec![0.0; n];
+        self.a.matvec(v, &mut out);
+        let lam = self.reg(theta);
+        for i in 0..n {
+            out[i] += lam * v[i];
+        }
+        out
+    }
+    fn vjp(&self, theta: &[f64], z: &[f64], v: &[f64]) -> Vec<f64> {
+        self.jvp(theta, z, v) // symmetric
+    }
+    fn vjp_theta(&self, theta: &[f64], z: &[f64], w: &[f64]) -> Vec<f64> {
+        // ∂g/∂θ = e^θ z  ⇒  wᵀ ∂g/∂θ = e^θ ⟨w, z⟩
+        vec![self.reg(theta) * crate::linalg::vecops::dot(w, z)]
+    }
+    fn dg_dtheta_col(&self, theta: &[f64], z: &[f64], j: usize) -> Vec<f64> {
+        assert_eq!(j, 0);
+        let lam = self.reg(theta);
+        z.iter().map(|&x| lam * x).collect()
+    }
+}
+
+/// Outer loss for the quadratic oracle problem.
+pub struct QuadraticOuter {
+    pub target: Vec<f64>,
+}
+
+impl OuterLoss for QuadraticOuter {
+    fn value(&self, z: &[f64]) -> f64 {
+        0.5 * z
+            .iter()
+            .zip(&self.target)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+    }
+    fn grad(&self, z: &[f64]) -> Vec<f64> {
+        z.iter().zip(&self.target).map(|(a, b)| a - b).collect()
+    }
+    fn test_value(&self, z: &[f64]) -> f64 {
+        self.value(z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::fd_check_jvp;
+    use crate::util::prop;
+
+    #[test]
+    fn g_is_gradient_of_inner_value() {
+        prop::check("quad-grad", 10, |rng| {
+            let p = QuadraticBilevel::random(6, rng);
+            let theta = [rng.normal() * 0.5];
+            let z = rng.normal_vec(6);
+            let g = p.g(&theta, &z);
+            let eps = 1e-6;
+            for i in 0..6 {
+                let mut zp = z.clone();
+                zp[i] += eps;
+                let mut zm = z.clone();
+                zm[i] -= eps;
+                let fd = (p.inner_value(&theta, &zp).unwrap()
+                    - p.inner_value(&theta, &zm).unwrap())
+                    / (2.0 * eps);
+                prop::ensure_close(g[i], fd, 1e-5, "∇r vs fd")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn jvp_matches_fd() {
+        prop::check("quad-jvp", 10, |rng| {
+            let p = QuadraticBilevel::random(8, rng);
+            let theta = [0.1];
+            let z = rng.normal_vec(8);
+            let v = rng.normal_vec(8);
+            let (fd, jvp) = fd_check_jvp(&p, &theta, &z, &v, 1e-6);
+            prop::ensure_close_vec(&fd, &jvp, 1e-5, "jvp vs fd")
+        });
+    }
+
+    #[test]
+    fn z_star_is_root() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        let p = QuadraticBilevel::random(10, &mut rng);
+        let theta = [-0.3];
+        let z = p.z_star(&theta);
+        let g = p.g(&theta, &z);
+        assert!(crate::linalg::vecops::nrm2(&g) < 1e-9);
+    }
+
+    #[test]
+    fn exact_hypergrad_matches_fd_on_outer() {
+        prop::check("quad-hypergrad-fd", 10, |rng| {
+            let p = QuadraticBilevel::random(7, rng);
+            let outer = QuadraticOuter {
+                target: p.target.clone(),
+            };
+            let theta = [rng.normal() * 0.3];
+            let eps = 1e-6;
+            let lp = outer.value(&p.z_star(&[theta[0] + eps]));
+            let lm = outer.value(&p.z_star(&[theta[0] - eps]));
+            let fd = (lp - lm) / (2.0 * eps);
+            prop::ensure_close(p.exact_hypergrad(&theta), fd, 1e-4, "hypergrad vs fd")
+        });
+    }
+}

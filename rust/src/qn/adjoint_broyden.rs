@@ -1,0 +1,258 @@
+//! Adjoint Broyden method (Schlenkrich, Griewank & Walther 2010) with the
+//! paper's OPA secant condition (§2.3, eqs. (7)–(8); Theorem 4).
+//!
+//! The direct update for a direction σ is
+//!
+//! ```text
+//! B_{n+1} = B_n + σ (σᵀ(J(z_{n+1}) − B_n)) / ‖σ‖²
+//! ```
+//!
+//! which enforces the *adjoint* secant condition  σᵀ B_{n+1} = σᵀ J(z_{n+1}).
+//! OPA chooses σ = v_n with v_nᵀ = ∇_z L(z_n) B_n⁻¹ — the exact direction in
+//! which the hypergradient formula (3) applies the inverse Jacobian from the
+//! left. The row σᵀJ is obtained with one VJP (auto-diff in the DEQ case,
+//! an analytic Hessian-vector product in the bi-level case) — the extra cost
+//! the paper notes for this method.
+//!
+//! We maintain **both** the direct factors (B = I + Σ aᵢbᵢᵀ, needed to form
+//! σᵀB_n) and the inverse (H = B⁻¹, via Sherman–Morrison) so SHINE can apply
+//! H and Hᵀ in O(m·d).
+
+use crate::linalg::vecops::{dot, nrm2};
+use crate::qn::low_rank::LowRank;
+use crate::qn::{InvOp, MemoryPolicy};
+
+#[derive(Clone, Debug)]
+pub struct AdjointBroyden {
+    dim: usize,
+    /// Direct low-rank factors: B = I + Σ a_i b_iᵀ.
+    a_facs: Vec<Vec<f64>>,
+    b_facs: Vec<Vec<f64>>,
+    /// Inverse estimate maintained by Sherman–Morrison.
+    h: LowRank,
+    max_mem: usize,
+    pub denom_eps: f64,
+    pub skipped: usize,
+}
+
+impl AdjointBroyden {
+    pub fn new(dim: usize, max_mem: usize, policy: MemoryPolicy) -> Self {
+        AdjointBroyden {
+            dim,
+            a_facs: Vec::new(),
+            b_facs: Vec::new(),
+            h: LowRank::identity(dim, max_mem, policy),
+            max_mem,
+            denom_eps: 1e-10,
+            skipped: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn rank(&self) -> usize {
+        self.a_facs.len()
+    }
+
+    /// out = σᵀ B_n  (row-vector result stored as a plain vector).
+    pub fn left_apply_direct(&self, sigma: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(sigma);
+        for i in 0..self.a_facs.len() {
+            let c = dot(&self.a_facs[i], sigma);
+            if c != 0.0 {
+                crate::linalg::vecops::axpy(c, &self.b_facs[i], out);
+            }
+        }
+    }
+
+    /// Update with direction σ and the row `sigma_j = σᵀ J(z_{n+1})`
+    /// (computed by the caller through a VJP). Returns false if skipped.
+    pub fn update(&mut self, sigma: &[f64], sigma_j: &[f64]) -> bool {
+        let ns2 = dot(sigma, sigma);
+        if ns2 <= 1e-300 {
+            self.skipped += 1;
+            return false;
+        }
+        if self.a_facs.len() >= self.max_mem {
+            // Freeze (mirror of the Broyden forward behaviour): both the
+            // direct and inverse stacks stop growing together.
+            self.skipped += 1;
+            return false;
+        }
+        // c = σᵀJ − σᵀB  (the row correction)
+        let mut c = vec![0.0; self.dim];
+        self.left_apply_direct(sigma, &mut c);
+        for i in 0..self.dim {
+            c[i] = sigma_j[i] - c[i];
+        }
+        // a = σ / ‖σ‖²
+        let a: Vec<f64> = sigma.iter().map(|&x| x / ns2).collect();
+        // Sherman–Morrison for the inverse: denom = 1 + cᵀ H a.
+        let ha = self.h.apply_vec(&a);
+        let denom = 1.0 + dot(&c, &ha);
+        if denom.abs() <= self.denom_eps * (1.0 + nrm2(&c) * nrm2(&ha)) {
+            self.skipped += 1;
+            return false;
+        }
+        let cth = self.h.apply_t_vec(&c); // (cᵀ H)ᵀ = Hᵀ c
+        let u: Vec<f64> = ha.iter().map(|&x| -x / denom).collect();
+        self.h.push(u, cth);
+        self.a_facs.push(a);
+        self.b_facs.push(c);
+        true
+    }
+
+    /// Step direction p = −H g (forward iteration).
+    pub fn direction(&self, g: &[f64], out: &mut [f64]) {
+        self.h.apply(g, out);
+        for v in out.iter_mut() {
+            *v = -*v;
+        }
+    }
+
+    pub fn low_rank(&self) -> &LowRank {
+        &self.h
+    }
+
+    /// Dense materialization of B (test/diagnostic use only).
+    pub fn dense_direct(&self) -> crate::linalg::dmat::DMat {
+        let mut m = crate::linalg::dmat::DMat::eye(self.dim);
+        for i in 0..self.a_facs.len() {
+            for r in 0..self.dim {
+                for c in 0..self.dim {
+                    m[(r, c)] += self.a_facs[i][r] * self.b_facs[i][c];
+                }
+            }
+        }
+        m
+    }
+}
+
+impl InvOp for AdjointBroyden {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        self.h.apply(x, out)
+    }
+    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+        self.h.apply_t(x, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dmat::DMat;
+    use crate::linalg::lu::Lu;
+    use crate::util::prop;
+
+    #[test]
+    fn adjoint_secant_condition() {
+        // After update(σ, σᵀJ):  σᵀ B_{n+1} = σᵀ J.
+        prop::check("adjbroyden-secant", 20, |rng| {
+            let n = 3 + rng.below(10);
+            let j = DMat::randn(n, n, 1.0, rng);
+            let mut ab = AdjointBroyden::new(n, 32, MemoryPolicy::Freeze);
+            for _ in 0..4 {
+                let sigma = rng.normal_vec(n);
+                let mut sigma_j = vec![0.0; n];
+                j.matvec_t(&sigma, &mut sigma_j); // σᵀJ = (Jᵀσ)ᵀ
+                if ab.update(&sigma, &sigma_j) {
+                    let mut sb = vec![0.0; n];
+                    ab.left_apply_direct(&sigma, &mut sb);
+                    prop::ensure_close_vec(&sb, &sigma_j, 1e-8, "σᵀB = σᵀJ")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inverse_tracks_direct() {
+        // H must equal B⁻¹ exactly (Sherman–Morrison bookkeeping).
+        prop::check("adjbroyden-inverse", 15, |rng| {
+            let n = 3 + rng.below(8);
+            let j = DMat::randn(n, n, 1.0, rng);
+            let mut ab = AdjointBroyden::new(n, 32, MemoryPolicy::Freeze);
+            for _ in 0..5 {
+                let sigma = rng.normal_vec(n);
+                let mut sigma_j = vec![0.0; n];
+                j.matvec_t(&sigma, &mut sigma_j);
+                ab.update(&sigma, &sigma_j);
+            }
+            let b_dense = ab.dense_direct();
+            let b_inv = match Lu::factor(&b_dense) {
+                Ok(lu) => lu.inverse(),
+                Err(_) => return Ok(()),
+            };
+            let x = rng.normal_vec(n);
+            let mut want = vec![0.0; n];
+            b_inv.matvec(&x, &mut want);
+            prop::ensure_close_vec(&ab.apply_vec(&x), &want, 1e-6, "H = B⁻¹")
+        });
+    }
+
+    #[test]
+    fn opa_direction_improves_left_inverse() {
+        // The whole point of OPA (Thm 4): after an extra update in direction
+        // σ = (∇L B⁻ᵀ)... the left-application σᵀB matches σᵀJ, hence
+        // ∇Lᵀ B⁻¹ ≈ ∇Lᵀ J⁻¹ in that direction. Verify error decreases.
+        prop::check("adjbroyden-opa", 10, |rng| {
+            let n = 8;
+            let j = DMat::random_spd(n, 0.5, 4.0, rng);
+            let lu = Lu::factor(&j).unwrap();
+            let grad = rng.normal_vec(n);
+            let exact = lu.solve_t(&grad); // J⁻ᵀ ∇L
+
+            let mut ab = AdjointBroyden::new(n, 32, MemoryPolicy::Freeze);
+            // a couple of generic updates first
+            for _ in 0..2 {
+                let sigma = rng.normal_vec(n);
+                let mut sigma_j = vec![0.0; n];
+                j.matvec_t(&sigma, &mut sigma_j);
+                ab.update(&sigma, &sigma_j);
+            }
+            let before = {
+                let approx = ab.apply_t_vec(&grad);
+                crate::linalg::vecops::dist2(&approx, &exact)
+            };
+            // OPA extra update: σ = Hᵀ ∇L  (v_nᵀ = ∇L B⁻¹  ⇒ v_n = B⁻ᵀ ∇L)
+            let sigma = ab.apply_t_vec(&grad);
+            let mut sigma_j = vec![0.0; n];
+            j.matvec_t(&sigma, &mut sigma_j);
+            ab.update(&sigma, &sigma_j);
+            let after = {
+                let approx = ab.apply_t_vec(&grad);
+                crate::linalg::vecops::dist2(&approx, &exact)
+            };
+            prop::ensure(
+                after <= before + 1e-12,
+                &format!("OPA did not improve: before={before:.3e} after={after:.3e}"),
+            )
+        });
+    }
+
+    #[test]
+    fn memory_freeze() {
+        let mut ab = AdjointBroyden::new(4, 1, MemoryPolicy::Freeze);
+        let j = DMat::eye(4);
+        let sigma = vec![1.0, 0.0, 0.0, 0.0];
+        let mut sigma_j = vec![0.0; 4];
+        j.matvec_t(&sigma, &mut sigma_j);
+        // First update has zero correction (B starts at I and J = I) —
+        // becomes a no-op rank push; use a scaled J to force a real update.
+        let j2 = DMat::from_rows(&[
+            &[2.0, 0.0, 0.0, 0.0],
+            &[0.0, 2.0, 0.0, 0.0],
+            &[0.0, 0.0, 2.0, 0.0],
+            &[0.0, 0.0, 0.0, 2.0],
+        ]);
+        j2.matvec_t(&sigma, &mut sigma_j);
+        assert!(ab.update(&sigma, &sigma_j));
+        assert!(!ab.update(&[0.0, 1.0, 0.0, 0.0], &[0.0, 2.0, 0.0, 0.0]));
+        assert_eq!(ab.rank(), 1);
+    }
+}

@@ -1,0 +1,192 @@
+//! Broyden's "good" method in inverse form — the DEQ forward solver.
+//!
+//! Maintains `H_n ≈ J⁻¹` directly via the Sherman–Morrison form used in the
+//! Deep Equilibrium implementation of Bai et al.:
+//!
+//! ```text
+//! H_{n+1} = H_n + (s_n − H_n y_n) (s_nᵀ H_n) / (s_nᵀ H_n y_n)
+//! ```
+//!
+//! which keeps `H` as identity-plus-low-rank ([`LowRank`]), so both `H x`
+//! (the forward step direction) and `Hᵀ x` (the SHINE backward direction)
+//! are O(m·d). The matrix this represents satisfies the secant condition
+//! `H_{n+1} y_n = s_n` — tested below against the dense update.
+
+use crate::linalg::vecops::{dot, nrm2};
+use crate::qn::low_rank::LowRank;
+use crate::qn::{InvOp, MemoryPolicy};
+
+#[derive(Clone, Debug)]
+pub struct BroydenInverse {
+    h: LowRank,
+    /// Guard for the Sherman–Morrison denominator `sᵀHy`.
+    pub denom_eps: f64,
+    /// Count of skipped (ill-conditioned) updates.
+    pub skipped: usize,
+}
+
+impl BroydenInverse {
+    pub fn new(dim: usize, max_mem: usize, policy: MemoryPolicy) -> Self {
+        BroydenInverse {
+            h: LowRank::identity(dim, max_mem, policy),
+            denom_eps: 1e-10,
+            skipped: 0,
+        }
+    }
+
+    /// Start from an existing inverse estimate (the refine strategy warm
+    /// starts the backward solver's qN matrix from the forward pass's).
+    pub fn from_low_rank(h: LowRank) -> Self {
+        BroydenInverse {
+            h,
+            denom_eps: 1e-10,
+            skipped: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.h.dim()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.h.rank()
+    }
+
+    /// Update with a step pair (s, y) = (z⁺ − z, g⁺ − g).
+    /// Returns false if the update was skipped (tiny denominator or frozen).
+    pub fn update(&mut self, s: &[f64], y: &[f64]) -> bool {
+        let hy = self.h.apply_vec(y);
+        let sth = self.h.apply_t_vec(s); // vᵀ = sᵀH  ⇔  v = Hᵀs
+        let denom = dot(s, &hy);
+        // Scale-aware guard: compare against ‖s‖·‖Hy‖.
+        if denom.abs() <= self.denom_eps * (nrm2(s) * nrm2(&hy)).max(1e-300) {
+            self.skipped += 1;
+            return false;
+        }
+        let mut u = vec![0.0; s.len()];
+        for i in 0..s.len() {
+            u[i] = (s[i] - hy[i]) / denom;
+        }
+        self.h.push(u, sth)
+    }
+
+    /// The inverse estimate (for SHINE / refine warm starts).
+    pub fn low_rank(&self) -> &LowRank {
+        &self.h
+    }
+
+    pub fn into_low_rank(self) -> LowRank {
+        self.h
+    }
+
+    /// Step direction p = −H g.
+    pub fn direction(&self, g: &[f64], out: &mut [f64]) {
+        self.h.apply(g, out);
+        for v in out.iter_mut() {
+            *v = -*v;
+        }
+    }
+}
+
+impl InvOp for BroydenInverse {
+    fn dim(&self) -> usize {
+        self.h.dim()
+    }
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        self.h.apply(x, out)
+    }
+    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+        self.h.apply_t(x, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn secant_condition_holds() {
+        // After update(s, y): H y = s exactly.
+        prop::check("broyden-secant", 25, |rng| {
+            let n = 3 + rng.below(15);
+            let mut b = BroydenInverse::new(n, 32, MemoryPolicy::Freeze);
+            for _ in 0..5 {
+                let s = rng.normal_vec(n);
+                let y = rng.normal_vec(n);
+                if b.update(&s, &y) {
+                    let hy = b.apply_vec(&y);
+                    prop::ensure_close_vec(&hy, &s, 1e-8, "secant Hy=s")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_on_linear_system_after_d_steps() {
+        // For linear g(z) = A z − b, Broyden converges and H approximates A⁻¹
+        // in the directions visited; the iteration must find the root.
+        prop::check("broyden-linear", 10, |rng| {
+            let n = 4 + rng.below(6);
+            let a = crate::linalg::dmat::DMat::random_spd(n, 0.5, 3.0, rng);
+            let x_star = rng.normal_vec(n);
+            let mut b_vec = vec![0.0; n];
+            a.matvec(&x_star, &mut b_vec);
+            let g = |z: &[f64]| {
+                let mut out = vec![0.0; n];
+                a.matvec(z, &mut out);
+                for i in 0..n {
+                    out[i] -= b_vec[i];
+                }
+                out
+            };
+            let mut bro = BroydenInverse::new(n, 64, MemoryPolicy::Freeze);
+            let mut z = vec![0.0; n];
+            let mut gz = g(&z);
+            let mut p = vec![0.0; n];
+            for _ in 0..(4 * n) {
+                bro.direction(&gz, &mut p);
+                // Damped step for robustness on random conditioning.
+                let mut z_new = z.clone();
+                crate::linalg::vecops::axpy(1.0, &p, &mut z_new);
+                let g_new = g(&z_new);
+                let s: Vec<f64> = z_new.iter().zip(&z).map(|(a, b)| a - b).collect();
+                let y: Vec<f64> = g_new.iter().zip(&gz).map(|(a, b)| a - b).collect();
+                bro.update(&s, &y);
+                z = z_new;
+                gz = g_new;
+                if nrm2(&gz) < 1e-10 {
+                    break;
+                }
+            }
+            prop::ensure(nrm2(&gz) < 1e-6, &format!("converged, |g|={}", nrm2(&gz)))
+        });
+    }
+
+    #[test]
+    fn skips_degenerate_updates() {
+        let mut b = BroydenInverse::new(3, 8, MemoryPolicy::Freeze);
+        // y such that H y ⟂ s → denominator 0 → skip.
+        assert!(!b.update(&[1.0, 0.0, 0.0], &[0.0, 1.0, 0.0]));
+        assert_eq!(b.skipped, 1);
+        assert_eq!(b.rank(), 0);
+    }
+
+    #[test]
+    fn transpose_apply_consistent() {
+        prop::check("broyden-transpose", 10, |rng| {
+            let n = 5;
+            let mut b = BroydenInverse::new(n, 8, MemoryPolicy::Freeze);
+            for _ in 0..4 {
+                b.update(&rng.normal_vec(n), &rng.normal_vec(n));
+            }
+            // ⟨Hx, y⟩ == ⟨x, Hᵀy⟩ for all x, y.
+            let x = rng.normal_vec(n);
+            let y = rng.normal_vec(n);
+            let lhs = dot(&b.apply_vec(&x), &y);
+            let rhs = dot(&x, &b.apply_t_vec(&y));
+            prop::ensure_close(lhs, rhs, 1e-10, "adjoint identity")
+        });
+    }
+}

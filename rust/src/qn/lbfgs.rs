@@ -1,0 +1,312 @@
+//! (Limited-memory) BFGS inverse-Hessian estimate with the paper's **OPA**
+//! extra updates (Appendix A, Algorithm LBFGS; Theorem 3).
+//!
+//! The estimate is stored as the usual (s, y) pair history and applied with
+//! the two-loop recursion, which realizes exactly the inverse-BFGS update
+//!
+//! ```text
+//! H⁺ = (I − ρ s yᵀ) H (I − ρ y sᵀ) + ρ s sᵀ,   ρ = 1/(yᵀ s)
+//! ```
+//!
+//! OPA inserts *extra* pairs `(e_n, ŷ_n)` with `e_n = t_n H ∂g/∂θ|_{z_n}`
+//! and `ŷ_n = g(z_n + e_n) − g(z_n)` every `M` regular updates — improving
+//! the approximation of `H` in precisely the direction the hypergradient
+//! formula (3) needs. Extra updates change `H` but not the iterate `z_n`.
+
+use crate::linalg::vecops::dot;
+use crate::qn::InvOp;
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug)]
+struct Pair {
+    s: Vec<f64>,
+    y: Vec<f64>,
+    rho: f64,
+    /// true if this is an OPA extra update (kept distinct for diagnostics
+    /// and for the paper's eviction rule which counts all updates).
+    extra: bool,
+}
+
+/// Configuration of the OPA extra updates (Algorithm LBFGS inputs).
+#[derive(Clone, Copy, Debug)]
+pub struct OpaConfig {
+    /// Apply an extra update every `freq` regular updates (M in the paper).
+    pub freq: usize,
+    /// t_0; subsequent t_n = ‖s_{n−1}‖ (the paper's suggested choice).
+    pub t0: f64,
+}
+
+impl Default for OpaConfig {
+    fn default() -> Self {
+        OpaConfig { freq: 5, t0: 1.0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LbfgsInverse {
+    dim: usize,
+    max_mem: usize,
+    pairs: VecDeque<Pair>,
+    /// H₀ = gamma·I. The paper's theory takes B₀ = I (gamma = 1); classical
+    /// L-BFGS uses the Barzilai–Borwein-style scaling. Both are supported;
+    /// SHINE experiments default to 1 to match the theorems.
+    pub gamma: f64,
+    /// Curvature guard: pairs with yᵀs ≤ curvature_eps·‖y‖‖s‖ are rejected
+    /// (the `r_n > 0` test in Algorithm LBFGS).
+    pub curvature_eps: f64,
+    pub skipped: usize,
+    pub n_extra: usize,
+}
+
+impl LbfgsInverse {
+    pub fn new(dim: usize, max_mem: usize) -> Self {
+        LbfgsInverse {
+            dim,
+            max_mem,
+            pairs: VecDeque::new(),
+            gamma: 1.0,
+            curvature_eps: 1e-12,
+            skipped: 0,
+            n_extra: 0,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.pairs.len()
+    }
+
+    fn push(&mut self, s: Vec<f64>, y: Vec<f64>, extra: bool) -> bool {
+        let sy = dot(&s, &y);
+        let guard = self.curvature_eps
+            * (crate::linalg::vecops::nrm2(&s) * crate::linalg::vecops::nrm2(&y)).max(1e-300);
+        if sy <= guard {
+            self.skipped += 1;
+            return false;
+        }
+        if self.pairs.len() >= self.max_mem {
+            // Paper's rule: "if n ≥ L remove update n − L" — drop the oldest.
+            self.pairs.pop_front();
+        }
+        if extra {
+            self.n_extra += 1;
+        }
+        self.pairs.push_back(Pair {
+            rho: 1.0 / sy,
+            s,
+            y,
+            extra,
+        });
+        true
+    }
+
+    /// Regular update from an accepted step.
+    pub fn update(&mut self, s: &[f64], y: &[f64]) -> bool {
+        self.push(s.to_vec(), y.to_vec(), false)
+    }
+
+    /// OPA extra update from the pair (e_n, ŷ_n). The caller (the solver
+    /// driving g evaluations) computes ŷ_n = g(z+e) − g(z).
+    pub fn update_extra(&mut self, e: &[f64], y_hat: &[f64]) -> bool {
+        self.push(e.to_vec(), y_hat.to_vec(), true)
+    }
+
+    /// Number of stored pairs that are OPA extras.
+    pub fn extra_pairs_stored(&self) -> usize {
+        self.pairs.iter().filter(|p| p.extra).count()
+    }
+
+    /// Two-loop recursion: out = H x.
+    fn two_loop(&self, x: &[f64], out: &mut [f64]) {
+        let m = self.pairs.len();
+        let mut q = x.to_vec();
+        let mut alphas = vec![0.0; m];
+        for (i, p) in self.pairs.iter().enumerate().rev() {
+            let alpha = p.rho * dot(&p.s, &q);
+            alphas[i] = alpha;
+            for k in 0..self.dim {
+                q[k] -= alpha * p.y[k];
+            }
+        }
+        for v in q.iter_mut() {
+            *v *= self.gamma;
+        }
+        for (i, p) in self.pairs.iter().enumerate() {
+            let beta = p.rho * dot(&p.y, &q);
+            let coeff = alphas[i] - beta;
+            for k in 0..self.dim {
+                q[k] += coeff * p.s[k];
+            }
+        }
+        out.copy_from_slice(&q);
+    }
+}
+
+impl InvOp for LbfgsInverse {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        self.two_loop(x, out)
+    }
+    /// BFGS inverse estimates are symmetric: Hᵀ = H.
+    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+        self.two_loop(x, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dmat::DMat;
+    use crate::util::prop;
+
+    /// Dense inverse-BFGS oracle: H⁺ = (I−ρsyᵀ) H (I−ρysᵀ) + ρssᵀ.
+    fn dense_bfgs_update(h: &DMat, s: &[f64], y: &[f64]) -> DMat {
+        let n = s.len();
+        let rho = 1.0 / dot(s, y);
+        let mut a = DMat::eye(n); // I − ρ s yᵀ
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] -= rho * s[i] * y[j];
+            }
+        }
+        let mut out = a.matmul(h).matmul(&a.transpose());
+        for i in 0..n {
+            for j in 0..n {
+                out[(i, j)] += rho * s[i] * s[j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn two_loop_matches_dense_oracle() {
+        prop::check("lbfgs-dense-oracle", 15, |rng| {
+            let n = 3 + rng.below(10);
+            let mut lb = LbfgsInverse::new(n, 64);
+            let mut h = DMat::eye(n);
+            for _ in 0..6 {
+                let s = rng.normal_vec(n);
+                // Force curvature: y = s + small noise keeps yᵀs > 0 mostly.
+                let mut y = rng.normal_vec(n);
+                if dot(&s, &y) <= 0.0 {
+                    for k in 0..n {
+                        y[k] = -y[k];
+                    }
+                }
+                if lb.update(&s, &y) {
+                    h = dense_bfgs_update(&h, &s, &y);
+                }
+            }
+            let x = rng.normal_vec(n);
+            let mut want = vec![0.0; n];
+            h.matvec(&x, &mut want);
+            prop::ensure_close_vec(&lb.apply_vec(&x), &want, 1e-8, "two-loop vs dense")
+        });
+    }
+
+    #[test]
+    fn secant_condition_on_last_pair() {
+        prop::check("lbfgs-secant", 15, |rng| {
+            let n = 4 + rng.below(8);
+            let mut lb = LbfgsInverse::new(n, 64);
+            let mut last: Option<(Vec<f64>, Vec<f64>)> = None;
+            for _ in 0..5 {
+                let s = rng.normal_vec(n);
+                let mut y = rng.normal_vec(n);
+                if dot(&s, &y) <= 0.0 {
+                    for v in y.iter_mut() {
+                        *v = -*v;
+                    }
+                }
+                if lb.update(&s, &y) {
+                    last = Some((s, y));
+                }
+            }
+            if let Some((s, y)) = last {
+                prop::ensure_close_vec(&lb.apply_vec(&y), &s, 1e-8, "H y = s")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejects_nonpositive_curvature() {
+        let mut lb = LbfgsInverse::new(3, 8);
+        let s = vec![1.0, 0.0, 0.0];
+        let y = vec![-1.0, 0.0, 0.0]; // yᵀs < 0
+        assert!(!lb.update(&s, &y));
+        assert_eq!(lb.skipped, 1);
+        assert_eq!(lb.rank(), 0);
+    }
+
+    #[test]
+    fn positive_definite_with_positive_curvature() {
+        prop::check("lbfgs-pd", 15, |rng| {
+            let n = 5;
+            let mut lb = LbfgsInverse::new(n, 16);
+            for _ in 0..6 {
+                let s = rng.normal_vec(n);
+                let mut y = rng.normal_vec(n);
+                if dot(&s, &y) <= 0.0 {
+                    for v in y.iter_mut() {
+                        *v = -*v;
+                    }
+                }
+                lb.update(&s, &y);
+            }
+            let x = rng.normal_vec(n);
+            let hx = lb.apply_vec(&x);
+            prop::ensure(dot(&x, &hx) > 0.0, "xᵀHx > 0")
+        });
+    }
+
+    #[test]
+    fn memory_eviction() {
+        let n = 4;
+        let mut lb = LbfgsInverse::new(n, 2);
+        for i in 0..5 {
+            let mut s = vec![0.0; n];
+            s[i % n] = 1.0;
+            let y = s.clone();
+            lb.update(&s, &y);
+        }
+        assert_eq!(lb.rank(), 2);
+    }
+
+    #[test]
+    fn extra_updates_counted() {
+        let mut lb = LbfgsInverse::new(3, 8);
+        lb.update(&[1.0, 0.0, 0.0], &[1.0, 0.0, 0.0]);
+        lb.update_extra(&[0.0, 1.0, 0.0], &[0.0, 2.0, 0.0]);
+        assert_eq!(lb.n_extra, 1);
+        assert_eq!(lb.extra_pairs_stored(), 1);
+        assert_eq!(lb.rank(), 2);
+    }
+
+    #[test]
+    fn symmetric_apply() {
+        prop::check("lbfgs-symmetric", 10, |rng| {
+            let n = 6;
+            let mut lb = LbfgsInverse::new(n, 8);
+            for _ in 0..4 {
+                let s = rng.normal_vec(n);
+                let mut y = rng.normal_vec(n);
+                if dot(&s, &y) <= 0.0 {
+                    for v in y.iter_mut() {
+                        *v = -*v;
+                    }
+                }
+                lb.update(&s, &y);
+            }
+            let x = rng.normal_vec(n);
+            let y = rng.normal_vec(n);
+            prop::ensure_close(
+                dot(&lb.apply_vec(&x), &y),
+                dot(&x, &lb.apply_vec(&y)),
+                1e-10,
+                "symmetry",
+            )
+        });
+    }
+}

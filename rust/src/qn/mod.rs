@@ -1,0 +1,88 @@
+//! Quasi-Newton substrate — the heart of SHINE.
+//!
+//! The paper's key observation (§2.1): the qN matrices `B_n` built by the
+//! *forward* solver are low-rank perturbations of the identity whose inverse
+//! can be applied in O(m·d) by Sherman–Morrison, so the backward pass can
+//! reuse them (`p_θ = ∇L(z*) B⁻¹ ∂g/∂θ`, eq. 4) instead of running an
+//! iterative inversion of the true Jacobian.
+//!
+//! Three families are implemented, matching Algorithm 1 and Appendix A:
+//! * [`broyden`] — Broyden's "good" method in inverse form (the DEQ forward
+//!   solver of Bai et al. 2019/2020),
+//! * [`lbfgs`] — (L)BFGS on inverse-Hessian form with the paper's **OPA**
+//!   extra updates (Algorithm LBFGS, Theorem 3),
+//! * [`adjoint_broyden`] — Adjoint Broyden à la Schlenkrich et al. with the
+//!   OPA secant (7)/(8) (Theorem 4).
+
+pub mod adjoint_broyden;
+pub mod broyden;
+pub mod lbfgs;
+pub mod low_rank;
+
+pub use adjoint_broyden::AdjointBroyden;
+pub use broyden::BroydenInverse;
+pub use lbfgs::LbfgsInverse;
+pub use low_rank::LowRank;
+
+/// An estimate of the *inverse* Jacobian/Hessian that can be applied to
+/// vectors from both sides. This is what the forward pass hands to the
+/// backward pass under SHINE.
+pub trait InvOp {
+    /// dimension d of the underlying operator
+    fn dim(&self) -> usize;
+    /// out = H x   (approximates J⁻¹ x)
+    fn apply(&self, x: &[f64], out: &mut [f64]);
+    /// out = Hᵀ x  (approximates J⁻ᵀ x; the direction eq. (3) needs)
+    fn apply_t(&self, x: &[f64], out: &mut [f64]);
+
+    /// Convenience allocating forms.
+    fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; x.len()];
+        self.apply(x, &mut out);
+        out
+    }
+    fn apply_t_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; x.len()];
+        self.apply_t(x, &mut out);
+        out
+    }
+}
+
+/// The identity operator — the Jacobian-Free method's "inverse estimate"
+/// (Fung et al. 2021): J⁻¹ ≈ I.
+pub struct IdentityOp(pub usize);
+
+impl InvOp for IdentityOp {
+    fn dim(&self) -> usize {
+        self.0
+    }
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(x);
+    }
+    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(x);
+    }
+}
+
+/// Memory policy when the update buffer is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemoryPolicy {
+    /// Stop accepting updates (the MDEQ limited-memory Broyden behaviour).
+    Freeze,
+    /// Evict the oldest update (the classical L-BFGS behaviour).
+    Evict,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_op_is_identity() {
+        let id = IdentityOp(3);
+        let x = [1.0, -2.0, 3.0];
+        assert_eq!(id.apply_vec(&x), x.to_vec());
+        assert_eq!(id.apply_t_vec(&x), x.to_vec());
+        assert_eq!(id.dim(), 3);
+    }
+}

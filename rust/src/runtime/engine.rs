@@ -1,0 +1,222 @@
+//! PJRT execution engine.
+//!
+//! Owns the CPU PJRT client and a lazy cache of compiled executables, one
+//! per artifact. Artifacts are HLO *text* (see aot.py for why), parsed with
+//! `HloModuleProto::from_text_file` and compiled once; subsequent calls
+//! reuse the compiled executable — compilation is O(100ms), execution is
+//! the hot path.
+
+use crate::runtime::manifest::Manifest;
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// A shaped f32 tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Build from f64 slice (the qN stack is f64; PJRT artifacts are f32).
+    pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> Tensor {
+        Tensor {
+            shape,
+            data: data.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.data.iter().map(|&x| x as f64).collect()
+    }
+}
+
+/// PJRT engine with executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: String,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// cumulative number of artifact executions (perf accounting)
+    pub calls: RefCell<HashMap<String, usize>>,
+}
+
+impl Engine {
+    /// Load the manifest and connect the PJRT CPU client.
+    pub fn load(dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: dir.to_string(),
+            cache: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact directory (env override: SHINE_ARTIFACTS).
+    pub fn default_dir() -> String {
+        std::env::var("SHINE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        let rec = self.manifest.artifact(name)?;
+        let path = format!("{}/{}", self.dir, rec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile every artifact of a variant (so timing runs do not
+    /// pay compilation inside the measured region).
+    pub fn warmup_variant(&self, variant: &str) -> Result<()> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .keys()
+            .filter(|k| k.starts_with(&format!("{variant}_")))
+            .cloned()
+            .collect();
+        for n in names {
+            if !self.cache.borrow().contains_key(&n) {
+                self.compile(&n)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` with the given inputs; returns one Tensor per
+    /// output in the manifest's output order.
+    pub fn call(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let rec = self.manifest.artifact(name)?.clone();
+        // Shape check against the manifest ABI.
+        if inputs.len() != rec.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                rec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, want)) in inputs.iter().zip(&rec.inputs).enumerate() {
+            if &t.shape != want {
+                return Err(anyhow!(
+                    "{name}: input {i} shape {:?} != manifest {:?}",
+                    t.shape,
+                    want
+                ));
+            }
+        }
+        if !self.cache.borrow().contains_key(name) {
+            self.compile(name)?;
+        }
+        *self
+            .calls
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let lit = xla::Literal::vec1(&t.data);
+                if t.shape.len() == 1 {
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("tuple decompose {name}: {e:?}"))?;
+        if parts.len() != rec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: {} outputs vs manifest {}",
+                parts.len(),
+                rec.outputs.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(&rec.outputs)
+            .map(|(lit, shape)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output to_vec {name}: {e:?}"))?;
+                if data.len() != shape.iter().product::<usize>() {
+                    return Err(anyhow!(
+                        "{name}: output len {} vs manifest shape {:?}",
+                        data.len(),
+                        shape
+                    ));
+                }
+                Ok(Tensor::new(shape.clone(), data))
+            })
+            .collect()
+    }
+
+    /// Total artifact calls so far (per name).
+    pub fn call_counts(&self) -> HashMap<String, usize> {
+        self.calls.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip_f64() {
+        let t = Tensor::from_f64(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.to_f64(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = Tensor::zeros(vec![3, 5]);
+        assert_eq!(t.len(), 15);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+    // Engine execution is exercised by rust/tests/runtime_integration.rs
+    // (requires built artifacts).
+}

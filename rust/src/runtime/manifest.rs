@@ -1,0 +1,234 @@
+//! Typed view of `artifacts/manifest.json` — the ABI between the JAX
+//! compile path and the Rust run path. Every artifact call is shape-checked
+//! against this manifest before it reaches PJRT (a wrong shape would
+//! otherwise surface as an opaque XLA error deep in the C API).
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct VariantCfg {
+    pub name: String,
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c_in: usize,
+    pub patch: usize,
+    pub c: usize,
+    pub n_classes: usize,
+    pub unroll: usize,
+    pub pixels: usize,
+    pub patch_channels: usize,
+    pub fixed_point_dim: usize,
+    /// (name, shape) in the canonical parameter order.
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    /// names of the parameters f_theta depends on (w1..beta)
+    pub f_param_names: Vec<String>,
+}
+
+impl VariantCfg {
+    /// Flattened length of parameter `name`.
+    pub fn param_len(&self, name: &str) -> usize {
+        self.param_shapes
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.iter().product())
+            .unwrap_or_else(|| panic!("unknown param {name}"))
+    }
+
+    /// Index of parameter `name` in the canonical order.
+    pub fn param_index(&self, name: &str) -> usize {
+        self.param_shapes
+            .iter()
+            .position(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("unknown param {name}"))
+    }
+
+    /// shape of the fixed point tensor (batch, pixels, c)
+    pub fn z_shape(&self) -> Vec<usize> {
+        vec![self.batch, self.pixels, self.c]
+    }
+
+    pub fn x_shape(&self) -> Vec<usize> {
+        vec![self.batch, self.h * self.w * self.c_in]
+    }
+
+    pub fn y_shape(&self) -> Vec<usize> {
+        vec![self.batch, self.n_classes]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactRec {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub variants: BTreeMap<String, VariantCfg>,
+    pub artifacts: BTreeMap<String, ArtifactRec>,
+}
+
+fn shapes_from(j: &Json) -> Result<Vec<Vec<usize>>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array of shapes"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow!("expected shape array"))
+                .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let j = json::read_file(&path).with_context(|| {
+            format!("loading {path}; run `make artifacts` to build the AOT artifacts")
+        })?;
+        let mut variants = BTreeMap::new();
+        for (name, v) in j
+            .get("variants")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing variants"))?
+        {
+            let get = |k: &str| -> Result<usize> {
+                v.get(k)
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow!("variant {name} missing {k}"))
+            };
+            let param_names: Vec<String> = v
+                .get("param_names")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("missing param_names"))?
+                .iter()
+                .filter_map(|s| s.as_str().map(String::from))
+                .collect();
+            let shapes_obj = v
+                .get("param_shapes")
+                .and_then(|x| x.as_obj())
+                .ok_or_else(|| anyhow!("missing param_shapes"))?;
+            let param_shapes: Vec<(String, Vec<usize>)> = param_names
+                .iter()
+                .map(|n| {
+                    let dims = shapes_obj
+                        .get(n)
+                        .and_then(|s| s.as_arr())
+                        .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+                        .unwrap_or_default();
+                    (n.clone(), dims)
+                })
+                .collect();
+            let f_param_names = v
+                .get("f_param_names")
+                .and_then(|x| x.as_arr())
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            variants.insert(
+                name.clone(),
+                VariantCfg {
+                    name: name.clone(),
+                    batch: get("batch")?,
+                    h: get("h")?,
+                    w: get("w")?,
+                    c_in: get("c_in")?,
+                    patch: get("patch")?,
+                    c: get("c")?,
+                    n_classes: get("n_classes")?,
+                    unroll: get("unroll")?,
+                    pixels: get("pixels")?,
+                    patch_channels: get("patch_channels")?,
+                    fixed_point_dim: get("fixed_point_dim")?,
+                    param_shapes,
+                    f_param_names,
+                },
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactRec {
+                    file: a
+                        .get("file")
+                        .and_then(|f| f.as_str())
+                        .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                        .to_string(),
+                    inputs: shapes_from(a.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                    outputs: shapes_from(a.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+                },
+            );
+        }
+        Ok(Manifest {
+            variants,
+            artifacts,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantCfg> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown variant '{name}' (have: {:?})", self.variants.keys()))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactRec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature manifest for parser tests (real manifests are covered by
+    /// the integration tests that need built artifacts).
+    const DOC: &str = r#"{
+      "version": 1,
+      "variants": {
+        "tiny": {
+          "batch": 4, "h": 8, "w": 8, "c_in": 3, "patch": 2, "c": 8,
+          "n_classes": 4, "unroll": 4, "pixels": 16, "patch_channels": 12,
+          "fixed_point_dim": 512,
+          "param_names": ["wemb", "bemb"],
+          "f_param_names": ["w1"],
+          "param_shapes": {"wemb": [12, 8], "bemb": [8]}
+        }
+      },
+      "artifacts": {
+        "tiny_f_fwd": {
+          "file": "tiny_f_fwd.hlo.txt",
+          "inputs": [[8, 8], [8]],
+          "outputs": [[4, 16, 8]],
+          "sha256": "abc"
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("shine_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), DOC).unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        let v = m.variant("tiny").unwrap();
+        assert_eq!(v.fixed_point_dim, 512);
+        assert_eq!(v.param_len("wemb"), 96);
+        assert_eq!(v.param_index("bemb"), 1);
+        assert_eq!(v.z_shape(), vec![4, 16, 8]);
+        let a = m.artifact("tiny_f_fwd").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.outputs[0], vec![4, 16, 8]);
+        assert!(m.variant("nope").is_err());
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the Rust hot path. Python never runs here.
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json` (shapes, param
+//!   layout, variant configs — the ABI shared with the python side).
+//! * [`engine`] — PJRT CPU client + per-artifact compiled-executable cache +
+//!   `Literal` ⇄ `Vec<f32>` conversion.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Tensor};
+pub use manifest::{ArtifactRec, Manifest, VariantCfg};

@@ -1,0 +1,229 @@
+//! Forward root solve driven by the **Adjoint Broyden** method with optional
+//! OPA extra updates (§2.3, Theorem 4) — the variant evaluated in
+//! Table E.3 / Fig. E.3.
+//!
+//! Each regular iteration performs one VJP (σᵀJ) in addition to the function
+//! evaluation — the extra cost the paper points out for this method ("we
+//! have to store the activations of g_θ(z) ... but also perform the
+//! vector-Jacobian product in addition to the function evaluation").
+
+use crate::linalg::vecops::{axpy, nrm2};
+use crate::qn::adjoint_broyden::AdjointBroyden;
+use crate::qn::{InvOp, MemoryPolicy};
+use crate::solvers::Trace;
+use crate::util::timer::Stopwatch;
+
+/// Direction used for the regular adjoint-Broyden updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SigmaChoice {
+    /// σ_n = s_n (the step) — the tangent flavour.
+    Step,
+    /// σ_n = g(z_{n+1}) (the new residual) — Schlenkrich's adjoint residual.
+    Residual,
+}
+
+#[derive(Clone, Debug)]
+pub struct AdjointFpOptions {
+    pub tol: f64,
+    pub max_iters: usize,
+    pub memory: usize,
+    pub sigma: SigmaChoice,
+    /// OPA: apply an extra update in the direction v_n = B⁻ᵀ ∇L(z_n)
+    /// (eq. 8) every `freq` iterations.
+    pub opa_freq: Option<usize>,
+}
+
+impl Default for AdjointFpOptions {
+    fn default() -> Self {
+        AdjointFpOptions {
+            tol: 1e-8,
+            max_iters: 200,
+            memory: 60,
+            sigma: SigmaChoice::Step,
+            opa_freq: None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct AdjointFpResult {
+    pub z: Vec<f64>,
+    pub g_norm: f64,
+    pub iters: usize,
+    pub converged: bool,
+    pub qn: AdjointBroyden,
+    pub trace: Trace,
+    pub n_vjps: usize,
+}
+
+/// Solve g(z) = 0 with Adjoint Broyden.
+///
+/// * `g` — residual evaluation.
+/// * `vjp` — `(z, σ) ↦ σᵀ J_g(z)` (auto-diff VJP in the DEQ case).
+/// * `outer_grad` — `z ↦ ∇_z L(z)` for the OPA direction; required when
+///   `opts.opa_freq` is set.
+pub fn adjoint_broyden_solve(
+    mut g: impl FnMut(&[f64]) -> Vec<f64>,
+    mut vjp: impl FnMut(&[f64], &[f64]) -> Vec<f64>,
+    mut outer_grad: Option<&mut dyn FnMut(&[f64]) -> Vec<f64>>,
+    z0: &[f64],
+    opts: &AdjointFpOptions,
+) -> AdjointFpResult {
+    let d = z0.len();
+    let sw = Stopwatch::start();
+    let mut qn = AdjointBroyden::new(d, opts.memory, MemoryPolicy::Freeze);
+    let mut z = z0.to_vec();
+    let mut gz = g(&z);
+    let mut g_norm = nrm2(&gz);
+    let mut trace = Trace::default();
+    trace.push(g_norm, sw.elapsed());
+    let mut p = vec![0.0; d];
+    let mut iters = 0;
+    let mut n_vjps = 0;
+    while g_norm > opts.tol && iters < opts.max_iters {
+        qn.direction(&gz, &mut p);
+        let mut z_new = z.clone();
+        axpy(1.0, &p, &mut z_new);
+        let g_new = g(&z_new);
+        // Regular adjoint update at z_{n+1}.
+        let sigma: Vec<f64> = match opts.sigma {
+            SigmaChoice::Step => z_new.iter().zip(&z).map(|(a, b)| a - b).collect(),
+            SigmaChoice::Residual => g_new.clone(),
+        };
+        if nrm2(&sigma) > 0.0 {
+            let sigma_j = vjp(&z_new, &sigma);
+            n_vjps += 1;
+            qn.update(&sigma, &sigma_j);
+        }
+        // OPA extra update (eq. 7/8): σ = B⁻ᵀ ∇L(z_{n+1}).
+        if let (Some(freq), Some(og)) = (opts.opa_freq, outer_grad.as_deref_mut()) {
+            if freq > 0 && iters % freq == 0 {
+                let grad_l = og(&z_new);
+                let v = qn.apply_t_vec(&grad_l);
+                if nrm2(&v) > 0.0 {
+                    let v_j = vjp(&z_new, &v);
+                    n_vjps += 1;
+                    qn.update(&v, &v_j);
+                }
+            }
+        }
+        z = z_new;
+        gz = g_new;
+        g_norm = nrm2(&gz);
+        iters += 1;
+        trace.push(g_norm, sw.elapsed());
+    }
+    AdjointFpResult {
+        converged: g_norm <= opts.tol,
+        z,
+        g_norm,
+        iters,
+        qn,
+        trace,
+        n_vjps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dmat::DMat;
+    use crate::util::prop;
+
+    /// g(z) = z − (Az + b): J = I − A constant, easy VJP.
+    fn linear_case(
+        rng: &mut crate::util::rng::Rng,
+        n: usize,
+    ) -> (DMat, Vec<f64>, Vec<f64>) {
+        let a = DMat::randn(n, n, 0.3 / (n as f64).sqrt(), rng);
+        let b = rng.normal_vec(n);
+        let mut ia = DMat::eye(n);
+        for i in 0..n {
+            for j in 0..n {
+                ia[(i, j)] -= a[(i, j)];
+            }
+        }
+        let z_star = crate::linalg::lu::Lu::factor(&ia).unwrap().solve(&b);
+        (a, b, z_star)
+    }
+
+    #[test]
+    fn converges_without_opa() {
+        prop::check("adjfp-plain", 8, |rng| {
+            let n = 8 + rng.below(10);
+            let (a, b, z_star) = linear_case(rng, n);
+            let res = adjoint_broyden_solve(
+                |z| {
+                    let mut az = vec![0.0; n];
+                    a.matvec(z, &mut az);
+                    (0..n).map(|i| z[i] - az[i] - b[i]).collect()
+                },
+                |_z, sigma| {
+                    // σᵀ(I − A) = σ − Aᵀσ
+                    let mut at_s = vec![0.0; n];
+                    a.matvec_t(sigma, &mut at_s);
+                    (0..n).map(|i| sigma[i] - at_s[i]).collect()
+                },
+                None,
+                &vec![0.0; n],
+                &AdjointFpOptions {
+                    max_iters: 30 * n,
+                    memory: 40 * n,
+                    ..Default::default()
+                },
+            );
+            prop::ensure(res.converged, &format!("|g|={}", res.g_norm))?;
+            prop::ensure_close_vec(&res.z, &z_star, 1e-5, "fixed point")
+        });
+    }
+
+    #[test]
+    fn opa_improves_left_inversion() {
+        // With OPA updates in the direction v = B⁻ᵀ∇L, the SHINE estimate
+        // ∇Lᵀ B⁻¹ should be closer to ∇Lᵀ J⁻¹ than without OPA (Fig. E.3).
+        prop::check("adjfp-opa-quality", 5, |rng| {
+            let n = 12;
+            let (a, b, _z_star) = linear_case(rng, n);
+            let grad_l = rng.normal_vec(n);
+            let mut ia = DMat::eye(n);
+            for i in 0..n {
+                for j in 0..n {
+                    ia[(i, j)] -= a[(i, j)];
+                }
+            }
+            let exact = crate::linalg::lu::Lu::factor(&ia).unwrap().solve_t(&grad_l);
+            let run = |opa: Option<usize>| {
+                let gl = grad_l.clone();
+                let mut og = move |_z: &[f64]| gl.clone();
+                let res = adjoint_broyden_solve(
+                    |z| {
+                        let mut az = vec![0.0; n];
+                        a.matvec(z, &mut az);
+                        (0..n).map(|i| z[i] - az[i] - b[i]).collect()
+                    },
+                    |_z, sigma| {
+                        let mut at_s = vec![0.0; n];
+                        a.matvec_t(sigma, &mut at_s);
+                        (0..n).map(|i| sigma[i] - at_s[i]).collect()
+                    },
+                    Some(&mut og),
+                    &vec![0.0; n],
+                    &AdjointFpOptions {
+                        max_iters: 25,
+                        memory: 400,
+                        opa_freq: opa,
+                        ..Default::default()
+                    },
+                );
+                let approx = res.qn.apply_t_vec(&grad_l);
+                crate::linalg::vecops::dist2(&approx, &exact)
+            };
+            let err_opa = run(Some(1));
+            let err_plain = run(None);
+            prop::ensure(
+                err_opa <= err_plain * 1.2 + 1e-9,
+                &format!("opa {err_opa:.3e} vs plain {err_plain:.3e}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,317 @@
+//! Root / fixed-point solvers for the DEQ forward pass.
+//!
+//! The primary solver is Broyden's method ([`broyden_solve`]) exactly as in
+//! the DEQ line of work: limited memory, identity initialization, optional
+//! derivative-free backtracking. It returns the final iterate *and* the qN
+//! inverse estimate — the object SHINE shares with the backward pass.
+//!
+//! [`anderson_solve`] and [`picard_solve`] are baselines used in tests and
+//! ablations.
+
+use crate::linalg::vecops::{axpy, nrm2};
+use crate::qn::broyden::BroydenInverse;
+use crate::qn::MemoryPolicy;
+use crate::solvers::Trace;
+use crate::util::timer::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct FpOptions {
+    /// Absolute tolerance on ‖g(z)‖ (the DEQ code stops on absolute residual
+    /// scaled by √d; we expose the raw threshold).
+    pub tol: f64,
+    pub max_iters: usize,
+    /// qN memory (paper: 30 for accelerated methods, Appendix C).
+    pub memory: usize,
+    pub policy: MemoryPolicy,
+    /// Enable derivative-free backtracking line search.
+    pub line_search: bool,
+}
+
+impl Default for FpOptions {
+    fn default() -> Self {
+        FpOptions {
+            tol: 1e-8,
+            max_iters: 200,
+            memory: 30,
+            policy: MemoryPolicy::Freeze,
+            line_search: false,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct FpResult {
+    pub z: Vec<f64>,
+    pub g_norm: f64,
+    pub iters: usize,
+    pub converged: bool,
+    /// Forward quasi-Newton estimate (H ≈ J_g⁻¹) — what SHINE reuses.
+    pub qn: BroydenInverse,
+    pub trace: Trace,
+    /// Number of g evaluations (≠ iters when line search is active).
+    pub n_g_evals: usize,
+}
+
+/// Broyden root solve of g(z) = 0 starting from `z0`.
+pub fn broyden_solve(
+    mut g: impl FnMut(&[f64]) -> Vec<f64>,
+    z0: &[f64],
+    opts: &FpOptions,
+) -> FpResult {
+    let d = z0.len();
+    let sw = Stopwatch::start();
+    let mut qn = BroydenInverse::new(d, opts.memory, opts.policy);
+    let mut z = z0.to_vec();
+    let mut gz = g(&z);
+    let mut n_g_evals = 1usize;
+    let mut g_norm = nrm2(&gz);
+    let mut trace = Trace::default();
+    trace.push(g_norm, sw.elapsed());
+    let mut p = vec![0.0; d];
+    let mut iters = 0;
+    while g_norm > opts.tol && iters < opts.max_iters {
+        qn.direction(&gz, &mut p);
+        let alpha = if opts.line_search {
+            let z_ref = &z;
+            let p_ref = &p;
+            let g_fn = &mut g;
+            let mut evals = 0usize;
+            let a = crate::solvers::line_search::backtrack_residual(
+                g_norm,
+                |a| {
+                    evals += 1;
+                    let mut zt = z_ref.clone();
+                    axpy(a, p_ref, &mut zt);
+                    nrm2(&g_fn(&zt))
+                },
+                0.5,
+                1e-4,
+                8,
+            );
+            n_g_evals += evals;
+            a
+        } else {
+            1.0
+        };
+        let mut z_new = z.clone();
+        axpy(alpha, &p, &mut z_new);
+        let g_new = g(&z_new);
+        n_g_evals += 1;
+        let s: Vec<f64> = z_new.iter().zip(&z).map(|(a, b)| a - b).collect();
+        let y: Vec<f64> = g_new.iter().zip(&gz).map(|(a, b)| a - b).collect();
+        qn.update(&s, &y);
+        z = z_new;
+        gz = g_new;
+        g_norm = nrm2(&gz);
+        iters += 1;
+        trace.push(g_norm, sw.elapsed());
+    }
+    FpResult {
+        converged: g_norm <= opts.tol,
+        z,
+        g_norm,
+        iters,
+        qn,
+        trace,
+        n_g_evals,
+    }
+}
+
+/// Damped Picard iteration z ← z − τ g(z) (baseline / pre-training warmup).
+pub fn picard_solve(
+    mut g: impl FnMut(&[f64]) -> Vec<f64>,
+    z0: &[f64],
+    tau: f64,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, f64, usize) {
+    let mut z = z0.to_vec();
+    let mut iters = 0;
+    loop {
+        let gz = g(&z);
+        let n = nrm2(&gz);
+        if n <= tol || iters >= max_iters {
+            return (z, n, iters);
+        }
+        axpy(-tau, &gz, &mut z);
+        iters += 1;
+    }
+}
+
+/// Anderson acceleration (type-II) on the fixed-point map  z ↦ z − g(z).
+/// Baseline forward solver for ablations.
+pub fn anderson_solve(
+    mut g: impl FnMut(&[f64]) -> Vec<f64>,
+    z0: &[f64],
+    m: usize,
+    tol: f64,
+    max_iters: usize,
+    beta: f64,
+) -> (Vec<f64>, f64, usize) {
+    let d = z0.len();
+    let mut z = z0.to_vec();
+    let mut hist_z: Vec<Vec<f64>> = Vec::new(); // iterates
+    let mut hist_r: Vec<Vec<f64>> = Vec::new(); // residuals g(z)
+    let mut iters = 0;
+    loop {
+        let r = g(&z);
+        let rn = nrm2(&r);
+        if rn <= tol || iters >= max_iters {
+            return (z, rn, iters);
+        }
+        hist_z.push(z.clone());
+        hist_r.push(r.clone());
+        if hist_z.len() > m {
+            hist_z.remove(0);
+            hist_r.remove(0);
+        }
+        let k = hist_z.len();
+        // Solve min ‖Σ αᵢ rᵢ‖² s.t. Σ αᵢ = 1 via normal equations on
+        // differences (small k×k dense system with Tikhonov damping).
+        let alphas = if k == 1 {
+            vec![1.0]
+        } else {
+            let kk = k - 1;
+            // ΔR columns: r_{i+1} − r_i
+            let mut gram = crate::linalg::dmat::DMat::zeros(kk, kk);
+            let mut rhs = vec![0.0; kk];
+            let dr: Vec<Vec<f64>> = (0..kk)
+                .map(|i| {
+                    (0..d)
+                        .map(|j| hist_r[i + 1][j] - hist_r[i][j])
+                        .collect::<Vec<f64>>()
+                })
+                .collect();
+            for i in 0..kk {
+                for j in 0..kk {
+                    gram[(i, j)] = crate::linalg::vecops::dot(&dr[i], &dr[j]);
+                }
+                gram[(i, i)] += 1e-10;
+                rhs[i] = crate::linalg::vecops::dot(&dr[i], &hist_r[k - 1]);
+            }
+            let gamma = match crate::linalg::lu::Lu::factor(&gram) {
+                Ok(lu) => lu.solve(&rhs),
+                Err(_) => vec![0.0; kk],
+            };
+            // α from γ: α_i are the barycentric weights.
+            let mut a = vec![0.0; k];
+            a[k - 1] = 1.0;
+            for i in 0..kk {
+                a[i + 1] -= gamma[i];
+                a[i] += gamma[i];
+            }
+            // flip: standard construction gives weights on iterates.
+            a
+        };
+        let mut z_new = vec![0.0; d];
+        for (i, alpha) in alphas.iter().enumerate() {
+            // mixing: z⁺ = Σ αᵢ (zᵢ − β rᵢ)
+            for j in 0..d {
+                z_new[j] += alpha * (hist_z[i][j] - beta * hist_r[i][j]);
+            }
+        }
+        z = z_new;
+        iters += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Contractive test map: g(z) = z − (Az + b) with ‖A‖ < 1.
+    fn contractive_g(rng: &mut Rng, n: usize) -> (impl Fn(&[f64]) -> Vec<f64>, Vec<f64>) {
+        let a = crate::linalg::dmat::DMat::randn(n, n, 0.3 / (n as f64).sqrt(), rng);
+        let b = rng.normal_vec(n);
+        // Fixed point solves (I − A) z = b.
+        let mut ia = crate::linalg::dmat::DMat::eye(n);
+        for i in 0..n {
+            for j in 0..n {
+                ia[(i, j)] -= a[(i, j)];
+            }
+        }
+        let z_star = crate::linalg::lu::Lu::factor(&ia).unwrap().solve(&b);
+        let g = move |z: &[f64]| {
+            let mut az = vec![0.0; n];
+            a.matvec(z, &mut az);
+            (0..n).map(|i| z[i] - az[i] - b[i]).collect()
+        };
+        (g, z_star)
+    }
+
+    #[test]
+    fn broyden_finds_fixed_point() {
+        prop::check("broyden-fp", 10, |rng| {
+            let n = 5 + rng.below(20);
+            let (g, z_star) = contractive_g(rng, n);
+            let res = broyden_solve(g, &vec![0.0; n], &FpOptions::default());
+            prop::ensure(res.converged, "converged")?;
+            prop::ensure_close_vec(&res.z, &z_star, 1e-5, "fixed point")
+        });
+    }
+
+    #[test]
+    fn broyden_beats_picard_iterations() {
+        let mut rng = Rng::new(42);
+        let n = 30;
+        let (g, _) = contractive_g(&mut rng, n);
+        let res = broyden_solve(&g, &vec![0.0; n], &FpOptions::default());
+        let (_, _, picard_iters) = picard_solve(&g, &vec![0.0; n], 1.0, 1e-8, 500);
+        assert!(
+            res.iters < picard_iters,
+            "broyden {} vs picard {picard_iters}",
+            res.iters
+        );
+    }
+
+    #[test]
+    fn line_search_variant_converges() {
+        prop::check("broyden-fp-ls", 5, |rng| {
+            let n = 10;
+            let (g, z_star) = contractive_g(rng, n);
+            let opts = FpOptions {
+                line_search: true,
+                ..FpOptions::default()
+            };
+            let res = broyden_solve(g, &vec![0.0; n], &opts);
+            prop::ensure(res.converged, "converged")?;
+            prop::ensure_close_vec(&res.z, &z_star, 1e-5, "fixed point")
+        });
+    }
+
+    #[test]
+    fn anderson_converges() {
+        prop::check("anderson-fp", 5, |rng| {
+            let n = 12;
+            let (g, z_star) = contractive_g(rng, n);
+            let (z, rn, _) = anderson_solve(g, &vec![0.0; n], 5, 1e-9, 300, 1.0);
+            prop::ensure(rn < 1e-8, &format!("residual {rn}"))?;
+            prop::ensure_close_vec(&z, &z_star, 1e-5, "fixed point")
+        });
+    }
+
+    #[test]
+    fn trace_is_recorded() {
+        let mut rng = Rng::new(3);
+        let (g, _) = contractive_g(&mut rng, 8);
+        let res = broyden_solve(g, &vec![0.0; 8], &FpOptions::default());
+        assert_eq!(res.trace.len(), res.iters + 1);
+        assert!(res.trace.residuals[0] >= res.trace.residuals[res.iters]);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        // g has no root: the solver must stop exactly at max_iters.
+        let g = |z: &[f64]| vec![z[0] * z[0] + 1.0];
+        let opts = FpOptions {
+            max_iters: 3,
+            tol: 1e-300,
+            ..Default::default()
+        };
+        let res = broyden_solve(g, &[0.0], &opts);
+        assert_eq!(res.iters, 3);
+        assert!(!res.converged);
+    }
+}

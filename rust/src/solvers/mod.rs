@@ -1,0 +1,38 @@
+//! Inner-problem solvers (the *forward pass* of the bi-level problem).
+//!
+//! * [`fixed_point`] — Broyden root solver (DEQ forward), plus Anderson
+//!   acceleration and damped Picard iteration as baselines.
+//! * [`minimize`] — LBFGS minimizer with Wolfe line search and the paper's
+//!   OPA extra updates (hyperparameter-optimization forward).
+//! * [`adjoint`] — forward solve driven by the Adjoint Broyden method
+//!   (needed for Theorem 4 / Table E.3 experiments).
+//! * [`linear`] — the backward-pass linear solvers: CG (symmetric case) and
+//!   Broyden-on-VJPs (general case), both warm-startable — the *refine*
+//!   strategy is exactly "warm start these from the forward estimate".
+//! * [`line_search`] — Wolfe and backtracking line searches.
+
+pub mod adjoint;
+pub mod fixed_point;
+pub mod line_search;
+pub mod linear;
+pub mod minimize;
+
+/// Shared solver telemetry: per-iteration residual + wall time.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub residuals: Vec<f64>,
+    pub times: Vec<f64>,
+}
+
+impl Trace {
+    pub fn push(&mut self, res: f64, t: f64) {
+        self.residuals.push(res);
+        self.times.push(t);
+    }
+    pub fn len(&self) -> usize {
+        self.residuals.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.residuals.is_empty()
+    }
+}

@@ -1,0 +1,179 @@
+//! Benchmark harness (offline replacement for `criterion`).
+//!
+//! All `benches/*.rs` targets are `harness = false` binaries built on this
+//! module. It provides: warmup, fixed-count or time-budget measurement,
+//! robust summary statistics (median + IQR, the statistic the paper reports
+//! for pass timings), and a table printer that emits both a human-readable
+//! table and a machine-readable JSON file under `results/bench/`.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::time::Instant;
+
+/// One measured series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Seconds per iteration.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median_ms(&self) -> f64 {
+        stats::median(&self.samples) * 1e3
+    }
+    pub fn p25_ms(&self) -> f64 {
+        stats::quantile(&self.samples, 0.25) * 1e3
+    }
+    pub fn p75_ms(&self) -> f64 {
+        stats::quantile(&self.samples, 0.75) * 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        stats::mean(&self.samples) * 1e3
+    }
+}
+
+/// Bench runner with warmup + sample count policy.
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+    /// Optional wall-clock cap in seconds; sampling stops early once hit.
+    pub max_seconds: f64,
+    measurements: Vec<Measurement>,
+    title: String,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        Bench {
+            warmup: 3,
+            samples: 30,
+            max_seconds: 60.0,
+            measurements: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn with_samples(mut self, warmup: usize, samples: usize) -> Self {
+        self.warmup = warmup;
+        self.samples = samples;
+        self
+    }
+
+    pub fn with_budget(mut self, seconds: f64) -> Self {
+        self.max_seconds = seconds;
+        self
+    }
+
+    /// Measure `f` (each call = one iteration). `f` may return a value which
+    /// is black-boxed to prevent the optimizer from deleting the work.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        let budget_start = Instant::now();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if budget_start.elapsed().as_secs_f64() > self.max_seconds {
+                break;
+            }
+        }
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            samples,
+        });
+        self.measurements.last().unwrap()
+    }
+
+    /// Record a pre-measured series (e.g. timings captured inside a trainer).
+    pub fn record(&mut self, name: &str, samples_secs: Vec<f64>) {
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            samples: samples_secs,
+        });
+    }
+
+    /// Print the summary table and persist JSON to `results/bench/<slug>.json`.
+    pub fn finish(&self) {
+        println!("\n== {} ==", self.title);
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>6}",
+            "benchmark", "median", "p25", "p75", "n"
+        );
+        for m in &self.measurements {
+            println!(
+                "{:<44} {:>8.3}ms {:>8.3}ms {:>8.3}ms {:>6}",
+                m.name,
+                m.median_ms(),
+                m.p25_ms(),
+                m.p75_ms(),
+                m.samples.len()
+            );
+        }
+        let slug: String = self
+            .title
+            .to_lowercase()
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        let mut j = Json::obj();
+        j.set("title", self.title.as_str());
+        let rows: Vec<Json> = self
+            .measurements
+            .iter()
+            .map(|m| {
+                let mut r = Json::obj();
+                r.set("name", m.name.as_str())
+                    .set("median_ms", m.median_ms())
+                    .set("p25_ms", m.p25_ms())
+                    .set("p75_ms", m.p75_ms())
+                    .set("mean_ms", m.mean_ms())
+                    .set("n", m.samples.len());
+                r
+            })
+            .collect();
+        j.set("rows", Json::Arr(rows));
+        let path = format!("results/bench/{}.json", slug);
+        if let Err(e) = crate::util::json::write_file(&path, &j) {
+            eprintln!("warning: could not write {path}: {e}");
+        } else {
+            println!("(wrote {path})");
+        }
+    }
+
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.measurements
+    }
+}
+
+/// Optimizer barrier (stable-Rust equivalent of `std::hint::black_box` —
+/// available since 1.66, re-exported here so benches have one import).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_summarizes() {
+        let mut b = Bench::new("test bench").with_samples(1, 5);
+        b.run("noop", || 1 + 1);
+        let m = &b.measurements()[0];
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.median_ms() >= 0.0);
+        assert!(m.p75_ms() >= m.p25_ms());
+    }
+
+    #[test]
+    fn records_external_series() {
+        let mut b = Bench::new("rec");
+        b.record("series", vec![0.001, 0.002, 0.003]);
+        assert!((b.measurements()[0].median_ms() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,208 @@
+//! Declarative command-line flag parser (offline replacement for `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, defaults, and auto-generated `--help` text. Intentionally tiny:
+//! the `shine` CLI has a handful of subcommands with flat flag sets.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Flag-set definition + parse result.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+    about: String,
+}
+
+impl Args {
+    pub fn new(about: &str) -> Self {
+        Args {
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare a string/number flag with a default value.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required flag (no default).
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (default false).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nFlags:\n", self.about);
+        for spec in &self.specs {
+            let d = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_else(|| " [required]".to_string());
+            s.push_str(&format!("  --{:<24} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse a token stream (excluding argv[0] / the subcommand).
+    pub fn parse(mut self, argv: &[String]) -> anyhow::Result<Args> {
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                self.values.insert(spec.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n{}", self.usage()))?
+                    .clone();
+                let val = if let Some(v) = inline_val {
+                    v
+                } else if spec.is_bool {
+                    "true".to_string()
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .ok_or_else(|| anyhow::anyhow!("flag --{name} requires a value"))?
+                        .clone()
+                };
+                self.values.insert(name, val);
+            } else {
+                self.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        for spec in &self.specs {
+            if !self.values.contains_key(&spec.name) {
+                anyhow::bail!("missing required flag --{}\n{}", spec.name, self.usage());
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("flag --{name} is not a number"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("flag --{name} is not an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("flag --{name} is not an integer"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name) == "true"
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t")
+            .flag("seed", "42", "seed")
+            .flag("tol", "1e-6", "tolerance")
+            .switch("verbose", "chatty")
+            .parse(&argv(&["--seed", "7", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_u64("seed"), 7);
+        assert_eq!(a.get_f64("tol"), 1e-6);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let a = Args::new("t")
+            .flag("n", "1", "count")
+            .parse(&argv(&["pos1", "--n=5", "pos2"]))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), 5);
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let r = Args::new("t").parse(&argv(&["--nope", "1"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let r = Args::new("t").required("must", "x").parse(&argv(&[]));
+        assert!(r.is_err());
+        let ok = Args::new("t")
+            .required("must", "x")
+            .parse(&argv(&["--must", "v"]))
+            .unwrap();
+        assert_eq!(ok.get("must"), "v");
+    }
+}

@@ -1,0 +1,13 @@
+//! Offline substrates: the registry cache in this build environment only
+//! contains the `xla` crate's dependency closure, so the usual ecosystem
+//! crates (`rand`, `serde_json`, `clap`, `criterion`, `proptest`) are
+//! re-implemented here at the scale this project needs. See DESIGN.md §4.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod threads;

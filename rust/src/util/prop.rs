@@ -1,0 +1,131 @@
+//! Property-testing harness (offline replacement for `proptest`).
+//!
+//! `check(name, cases, |rng| ...)` runs a property over `cases` independently
+//! seeded inputs; on failure it panics with the failing case index and seed
+//! so the exact case can be replayed with `replay(seed, ...)`. A lightweight
+//! numeric shrinker is provided for scalar-parameterised properties.
+//!
+//! Used across the repo for the coordinator invariants DESIGN.md §6 lists
+//! (secant conditions, SHINE==exact on quadratics, fallback guard, ...).
+
+use crate::util::rng::Rng;
+
+/// Run `prop` for `cases` independent seeded RNGs. `prop` returns
+/// `Err(description)` to signal failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = 0x5111_4E5E_EDu64; // stable base seed: reproducible CI
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}): {msg}\n\
+                 replay with: shine::util::prop::replay({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper: closeness with context, for use inside properties.
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let denom = 1.0f64.max(a.abs()).max(b.abs());
+    if !((a - b).abs() / denom <= tol) {
+        return Err(format!("{what}: {a} vs {b} (rel tol {tol})"));
+    }
+    Ok(())
+}
+
+/// Assert helper: vector closeness in relative l2 norm.
+pub fn ensure_close_vec(a: &[f64], b: &[f64], tol: f64, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    let diff: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt();
+    let scale = 1.0f64
+        .max(a.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .max(b.iter().map(|x| x * x).sum::<f64>().sqrt());
+    if !(diff / scale <= tol) {
+        return Err(format!(
+            "{what}: ||a-b||={diff:.3e} scale={scale:.3e} rel tol {tol}"
+        ));
+    }
+    Ok(())
+}
+
+/// Assert helper: plain boolean with message.
+pub fn ensure(cond: bool, what: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+/// Shrink a failing scalar parameter toward `lo` by bisection; returns the
+/// smallest value (within `steps` bisections) that still fails `fails`.
+pub fn shrink_scalar(mut hi: f64, lo: f64, steps: usize, mut fails: impl FnMut(f64) -> bool) -> f64 {
+    debug_assert!(fails(hi));
+    let mut good_lo = lo;
+    for _ in 0..steps {
+        let mid = 0.5 * (good_lo + hi);
+        if fails(mid) {
+            hi = mid;
+        } else {
+            good_lo = mid;
+        }
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.uniform();
+            let b = rng.uniform();
+            ensure_close(a + b, b + a, 1e-15, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn ensure_close_vec_catches_mismatch() {
+        assert!(ensure_close_vec(&[1.0, 2.0], &[1.0, 2.0], 1e-12, "eq").is_ok());
+        assert!(ensure_close_vec(&[1.0], &[2.0], 1e-6, "neq").is_err());
+        assert!(ensure_close_vec(&[1.0], &[1.0, 2.0], 1e-6, "len").is_err());
+    }
+
+    #[test]
+    fn shrinker_finds_threshold() {
+        // Property "x >= 0.5 fails": shrinker should approach 0.5 from above.
+        let s = shrink_scalar(1.0, 0.0, 40, |x| x >= 0.5);
+        assert!((s - 0.5).abs() < 1e-9, "s={s}");
+    }
+}

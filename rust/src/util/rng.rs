@@ -1,0 +1,273 @@
+//! Deterministic PRNG substrate (offline replacement for the `rand` crate).
+//!
+//! Implements xoshiro256++ seeded through SplitMix64, plus the sampling
+//! helpers the experiments need (uniform, normal, permutation, categorical).
+//! Every experiment in the repo threads an explicit seed through this type so
+//! that results are bit-reproducible, mirroring the paper's reproducibility
+//! statement ("we made sure to use seeds").
+
+/// xoshiro256++ PRNG (Blackman & Vigna). 2^256-1 period, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+/// SplitMix64 step, used for seeding and stream derivation.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent child stream (e.g. per experiment repetition).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mut sm = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n). Unbiased via rejection.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "Rng::below(0)");
+        let n = n as u64;
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided: branch-free cost
+    /// is irrelevant here, correctness is what matters).
+    pub fn normal(&mut self) -> f64 {
+        // Draw u1 in (0,1] to avoid ln(0).
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with given mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Vector of iid standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Vector of iid standard normals, f32.
+    pub fn normal_vec_f32(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| (self.normal() as f32) * std).collect()
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Sample k distinct indices from 0..n (k <= n), order random.
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut p = self.permutation(n);
+        p.truncate(k);
+        p
+    }
+
+    /// Exponential with rate lambda.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.uniform()).ln() / lambda
+    }
+
+    /// Zipf-like categorical over 0..n with exponent `a` (power-law), used by
+    /// the synthetic text generator to mimic word-frequency statistics.
+    pub fn zipf(&mut self, n: usize, a: f64) -> usize {
+        // Inverse-CDF on precomputation-free approximation: rejection over
+        // continuous power law then clamp. Good enough for data synthesis.
+        loop {
+            let u = self.uniform().max(1e-12);
+            let x = ((n as f64).powf(1.0 - a) * u + (1.0 - u)).powf(1.0 / (1.0 - a));
+            let k = x.floor() as usize;
+            if k >= 1 && k <= n {
+                return k - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_clones() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.uniform()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 1e-2, "mean={mean}");
+        assert!((var - 1.0).abs() < 2e-2, "var={var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(5);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Rng::new(9);
+        let p = r.permutation(100);
+        let mut seen = vec![false; 100];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut base = Rng::new(13);
+        let mut a = base.fork(0);
+        let mut b = base.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut r = Rng::new(21);
+        let mut lo = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            let k = r.zipf(1000, 1.2);
+            assert!(k < 1000);
+            if k < 10 {
+                lo += 1;
+            }
+        }
+        // Power law: small indices must dominate.
+        assert!(lo > n / 4, "lo={lo}");
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Rng::new(2);
+        let ks = r.choose_k(50, 20);
+        assert_eq!(ks.len(), 20);
+        let mut s = ks.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+    }
+}

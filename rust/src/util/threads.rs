@@ -1,0 +1,78 @@
+//! Tiny scoped parallel-map (offline replacement for `rayon` where the
+//! experiments fan out over seeds). Uses `std::thread::scope`; work items
+//! are distributed round-robin to at most `max_threads` workers.
+
+/// Map `f` over `items` in parallel, preserving order of results.
+pub fn par_map<T, R, F>(items: Vec<T>, max_threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = max_threads.max(1).min(n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    // Partition round-robin into `workers` chunks.
+    let mut chunks: Vec<Vec<(usize, T)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, item) in work {
+        chunks[i % workers].push((i, item));
+    }
+    let results: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|chunk| {
+                let f = &f;
+                scope.spawn(move || {
+                    chunk
+                        .into_iter()
+                        .map(|(i, item)| (i, f(item)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for chunk in results {
+        for (i, r) in chunk {
+            slots[i] = Some(r);
+        }
+    }
+    slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
+/// Number of available CPUs (fallback 4).
+pub fn ncpus() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = par_map((0..100).collect(), 8, |x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<i32> = par_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+        assert_eq!(par_map(vec![7], 4, |x: i32| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        assert_eq!(par_map(vec![1, 2, 3], 1, |x: i32| x * x), vec![1, 4, 9]);
+    }
+}

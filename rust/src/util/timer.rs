@@ -1,0 +1,112 @@
+//! Wall-clock timing helpers: scoped timers and cumulative phase timers.
+//!
+//! The bi-level experiments (Fig. 1/2/E.1/E.2) report *wall-clock time to a
+//! given test loss*, so every outer iteration stamps `Stopwatch::elapsed`.
+//! The DEQ experiments (Table E.2) report per-phase medians, accumulated via
+//! `PhaseTimers`.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Simple stopwatch anchored at construction.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds since start.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds since start.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed() * 1e3
+    }
+}
+
+/// Named cumulative timers: `timers.time("backward", || ...)`.
+#[derive(Default, Debug)]
+pub struct PhaseTimers {
+    totals: BTreeMap<String, f64>,
+    counts: BTreeMap<String, usize>,
+    samples: BTreeMap<String, Vec<f64>>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, attribute its wall time to `phase`, return its value.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        *self.totals.entry(phase.to_string()).or_insert(0.0) += dt;
+        *self.counts.entry(phase.to_string()).or_insert(0) += 1;
+        self.samples.entry(phase.to_string()).or_default().push(dt);
+        out
+    }
+
+    /// Total seconds attributed to a phase.
+    pub fn total(&self, phase: &str) -> f64 {
+        self.totals.get(phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn count(&self, phase: &str) -> usize {
+        self.counts.get(phase).copied().unwrap_or(0)
+    }
+
+    /// Median of individual samples (paper reports medians for pass times).
+    pub fn median_ms(&self, phase: &str) -> f64 {
+        match self.samples.get(phase) {
+            Some(s) if !s.is_empty() => crate::util::stats::median(s) * 1e3,
+            _ => f64::NAN,
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64, usize)> {
+        self.totals
+            .iter()
+            .map(move |(k, &v)| (k.as_str(), v, self.count(k)))
+    }
+
+    /// Raw samples for a phase in seconds.
+    pub fn samples(&self, phase: &str) -> &[f64] {
+        self.samples.get(phase).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn phase_timers_accumulate() {
+        let mut t = PhaseTimers::new();
+        let x = t.time("p", || 41 + 1);
+        assert_eq!(x, 42);
+        t.time("p", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(t.count("p"), 2);
+        assert!(t.total("p") > 0.0);
+        assert!(t.median_ms("p") >= 0.0);
+        assert_eq!(t.count("missing"), 0);
+        assert!(t.median_ms("missing").is_nan());
+    }
+}

@@ -1,0 +1,183 @@
+//! Cross-module integration tests of the bi-level stack on realistic
+//! (generated) workloads — no artifacts needed; pure-Rust path.
+
+use shine::bilevel::hoag::{hoag_run, HoagOptions};
+use shine::data::split::{logreg_to_nls, split_logreg, split_nls};
+use shine::data::synth_text::{synth_text, TextConfig};
+use shine::hypergrad::{hypergrad, ForwardArtifacts, Strategy};
+use shine::problems::logreg::{LogRegInner, LogRegOuter};
+use shine::problems::nls::{NlsInner, NlsOuter};
+use shine::problems::InnerProblem;
+use shine::solvers::minimize::{lbfgs_minimize, MinimizeOptions};
+use shine::util::rng::Rng;
+
+fn small_cfg() -> TextConfig {
+    TextConfig {
+        n_docs: 240,
+        n_features: 400,
+        n_informative: 40,
+        len_lo: 15,
+        len_hi: 50,
+        zipf_a: 1.05,
+        label_noise: 0.02,
+        seed: 0,
+    }
+}
+
+fn lr_problem(seed: u64) -> (LogRegInner, LogRegOuter) {
+    let data = synth_text(&small_cfg(), seed);
+    let mut rng = Rng::new(seed ^ 7);
+    let (train, val, test) = split_logreg(&data, &mut rng);
+    (LogRegInner { train }, LogRegOuter { val, test })
+}
+
+/// SHINE's hypergradient on the real LR problem must correlate strongly
+/// with the full (exact iterative) hypergradient across theta values.
+#[test]
+fn shine_hypergrad_correlates_with_full_on_logreg() {
+    let (prob, outer) = lr_problem(1);
+    let d = prob.dim();
+    let mut sign_matches = 0;
+    let thetas = [-6.0, -4.0, -2.0, 0.0];
+    for &t in &thetas {
+        let theta = [t];
+        let obj = (d, |z: &[f64]| {
+            (prob.inner_value(&theta, z).unwrap(), prob.g(&theta, z))
+        });
+        let res = lbfgs_minimize(
+            &obj,
+            &vec![0.0; d],
+            &MinimizeOptions {
+                tol: 1e-9,
+                max_iters: 3000,
+                memory: 30,
+                ..Default::default()
+            },
+            None,
+            None,
+        );
+        assert!(res.grad_norm < 1e-6, "inner solve failed at theta={t}");
+        let arts = ForwardArtifacts {
+            z: &res.z,
+            inv: Some(&res.qn),
+            low_rank: None,
+        };
+        let full = hypergrad(
+            &prob,
+            &outer,
+            &theta,
+            &arts,
+            Strategy::Full {
+                tol: 1e-10,
+                max_iters: usize::MAX,
+            },
+            None,
+        );
+        let sh = hypergrad(&prob, &outer, &theta, &arts, Strategy::Shine, None);
+        if full.grad_theta[0] * sh.grad_theta[0] > 0.0 {
+            sign_matches += 1;
+        }
+    }
+    assert!(
+        sign_matches >= 3,
+        "SHINE disagreed in sign with full hypergrad too often ({sign_matches}/4)"
+    );
+}
+
+/// The headline Fig. 1 claim at integration scale: SHINE's backward pass
+/// costs zero matvecs while HOAG's full inversion costs many, and both
+/// optimize the validation loss.
+#[test]
+fn hoag_vs_shine_backward_cost_and_descent() {
+    let (prob, outer) = lr_problem(2);
+    let mk = |strategy| HoagOptions {
+        outer_iters: 12,
+        strategy,
+        ..Default::default()
+    };
+    let full = hoag_run(
+        &prob,
+        &outer,
+        &[-3.0],
+        &mk(Strategy::Full {
+            tol: 1e-8,
+            max_iters: usize::MAX,
+        }),
+    );
+    let shine = hoag_run(&prob, &outer, &[-3.0], &mk(Strategy::Shine));
+    let total_mv_full: usize = full.trace.iter().map(|p| p.backward_matvecs).sum();
+    let total_mv_shine: usize = shine.trace.iter().map(|p| p.backward_matvecs).sum();
+    assert!(total_mv_full > 0);
+    assert_eq!(total_mv_shine, 0);
+    // Both decrease validation loss from the first iterate.
+    for res in [&full, &shine] {
+        let first = res.trace.first().unwrap().val_loss;
+        let last = res.trace.last().unwrap().val_loss;
+        assert!(last <= first + 1e-9, "val loss increased: {first} -> {last}");
+    }
+}
+
+/// The fallback guard rarely fires on a healthy LR run with the paper's
+/// 1.3 ratio (it is a rare-event guard: 6.25e-5 firing rate in the paper).
+#[test]
+fn fallback_is_rare_on_healthy_runs() {
+    let (prob, outer) = lr_problem(3);
+    let opts = HoagOptions {
+        outer_iters: 10,
+        strategy: Strategy::ShineFallback { ratio: 1.3 },
+        ..Default::default()
+    };
+    let res = hoag_run(&prob, &outer, &[-3.0], &opts);
+    let fallbacks = res.trace.iter().filter(|p| p.fallback_used).count();
+    assert!(
+        fallbacks <= res.trace.len() / 2,
+        "fallback fired on {fallbacks}/{} iterations",
+        res.trace.len()
+    );
+}
+
+/// NLS (non-convex inner problem): OPA still produces a descending outer
+/// loop and its SHINE directions stay finite.
+#[test]
+fn nls_with_opa_descends() {
+    let data = logreg_to_nls(&synth_text(&small_cfg(), 5));
+    let mut rng = Rng::new(11);
+    let (train, val, test) = split_nls(&data, &mut rng);
+    let prob = NlsInner { train };
+    let outer = NlsOuter { val, test };
+    let opts = HoagOptions {
+        outer_iters: 10,
+        strategy: Strategy::Shine,
+        inner_memory: 60,
+        opa: Some(shine::qn::lbfgs::OpaConfig { freq: 5, t0: 1.0 }),
+        ..Default::default()
+    };
+    let res = hoag_run(&prob, &outer, &[-3.0], &opts);
+    assert!(res.trace.iter().all(|p| p.val_loss.is_finite()));
+    let first = res.trace.first().unwrap().val_loss;
+    let last = res.trace.last().unwrap().val_loss;
+    assert!(last <= first + 1e-9);
+}
+
+/// Grid search ends up in the same ballpark theta as hypergradient descent —
+/// a cross-validation of the whole bilevel stack.
+#[test]
+fn grid_and_hoag_agree_on_theta_region() {
+    let (prob, outer) = lr_problem(6);
+    let gs = shine::bilevel::search::grid_search(&prob, &outer, -8.0, 0.0, 9, 1e-7, 2000, 120.0);
+    let opts = HoagOptions {
+        outer_iters: 25,
+        strategy: Strategy::Full {
+            tol: 1e-8,
+            max_iters: usize::MAX,
+        },
+        ..Default::default()
+    };
+    let res = hoag_run(&prob, &outer, &[-4.0], &opts);
+    assert!(
+        (res.theta[0] - gs.best_theta).abs() < 3.0,
+        "hoag theta {} vs grid theta {}",
+        res.theta[0],
+        gs.best_theta
+    );
+}

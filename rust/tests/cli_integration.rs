@@ -1,0 +1,115 @@
+//! CLI integration: exercise the `shine` binary end-to-end through
+//! std::process (list, version, quick experiments, error paths).
+
+use std::process::Command;
+
+fn shine() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_shine"))
+}
+
+#[test]
+fn version_and_help() {
+    let out = shine().arg("version").output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("shine"));
+    let out = shine().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    for cmd in ["list", "run", "train", "hpo", "artifacts-check"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn list_contains_every_paper_artifact() {
+    let out = shine().arg("list").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    for id in [
+        "fig1",
+        "fig2-left",
+        "fig2-right",
+        "fig-e1",
+        "fig-e2",
+        "fig3-cifar",
+        "fig3-imagenet",
+        "table-e1",
+        "table-e2",
+        "table-e3",
+        "fig-e3",
+        "e2e",
+    ] {
+        assert!(text.contains(id), "list missing {id}");
+    }
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = shine().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn unknown_experiment_fails() {
+    let out = shine().args(["run", "not-an-exp", "--quick"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn quick_fig2_right_runs_and_writes_json() {
+    let tmp = std::env::temp_dir().join("shine_cli_test_results");
+    let _ = std::fs::remove_dir_all(&tmp);
+    let out = shine()
+        .args([
+            "run",
+            "fig2-right",
+            "--quick",
+            "--out",
+            tmp.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let json = std::fs::read_to_string(tmp.join("fig2-right.json")).unwrap();
+    let parsed = shine::util::json::parse(&json).unwrap();
+    assert!(parsed.at(&["prescribed", "median_cos"]).is_some());
+    // The paper's qualitative claim: prescribed-direction inversion is
+    // better than random-direction inversion.
+    let presc = parsed
+        .at(&["prescribed", "median_cos"])
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    let rand = parsed
+        .at(&["random", "median_cos"])
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(presc > rand, "prescribed {presc} vs random {rand}");
+}
+
+#[test]
+fn hpo_subcommand_runs() {
+    let out = shine()
+        .args([
+            "hpo",
+            "--dataset",
+            "news20",
+            "--strategy",
+            "shine",
+            "--outer-iters",
+            "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("final theta"));
+}

@@ -1,0 +1,274 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts must agree
+//! with the pure-Rust native mirror on random inputs (tiny variant), and the
+//! DEQ trainer must run end-to-end for every backward strategy.
+//!
+//! Requires `make artifacts` (skips gracefully with a loud message if the
+//! artifacts are missing, so plain `cargo test` works in a fresh checkout).
+
+use shine::data::synth_images::synth_images;
+use shine::deq::model::{DeqModel, Params};
+use shine::deq::native;
+use shine::deq::trainer::{BackwardKind, Trainer, TrainerConfig};
+use shine::runtime::engine::{Engine, Tensor};
+use shine::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    match Engine::load(&dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP: artifacts not available ({err}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn randv(rng: &mut Rng, n: usize, std: f32) -> Vec<f32> {
+    rng.normal_vec_f32(n, std)
+}
+
+#[test]
+fn inject_matches_native() {
+    let Some(eng) = engine() else { return };
+    let m = DeqModel::new(&eng, "tiny").unwrap();
+    let mut rng = Rng::new(1);
+    let p = Params::init(&m.v, &mut rng);
+    let x = randv(&mut rng, m.v.batch * m.v.h * m.v.w * m.v.c_in, 1.0);
+    let got = m.inject(&p, &x).unwrap();
+    let want = native::inject(&m.v, &p.get(&m.v, "wemb").data, &p.get(&m.v, "bemb").data, &x);
+    assert_eq!(got.len(), want.len());
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn f_fwd_matches_native() {
+    let Some(eng) = engine() else { return };
+    let m = DeqModel::new(&eng, "tiny").unwrap();
+    let mut rng = Rng::new(2);
+    let p = Params::init(&m.v, &mut rng);
+    let d = m.v.fixed_point_dim;
+    let z = randv(&mut rng, d, 1.0);
+    let u = randv(&mut rng, d, 1.0);
+    let got = m.f(&p, &z, &u).unwrap();
+    let np = p.native(&m.v);
+    let want = native::f_theta(&m.v, &np, &z, &u);
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-3, "idx {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn head_matches_native() {
+    let Some(eng) = engine() else { return };
+    let m = DeqModel::new(&eng, "tiny").unwrap();
+    let mut rng = Rng::new(3);
+    let p = Params::init(&m.v, &mut rng);
+    let z = randv(&mut rng, m.v.fixed_point_dim, 1.0);
+    let got = m.head_logits(&p, &z).unwrap();
+    let want = native::head_logits(
+        &m.v,
+        &p.get(&m.v, "whead").data,
+        &p.get(&m.v, "bhead").data,
+        &z,
+    );
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    // loss consistency
+    let labels: Vec<usize> = (0..m.v.batch).map(|i| i % m.v.n_classes).collect();
+    let y = native::one_hot(&labels, m.v.n_classes);
+    let (loss, dz, _, _) = m.head_loss_grad(&p, &z, &y).unwrap();
+    let want_loss = native::ce_loss(&want, &y, m.v.batch, m.v.n_classes);
+    assert!((loss - want_loss).abs() < 1e-4, "{loss} vs {want_loss}");
+    assert_eq!(dz.len(), z.len());
+}
+
+#[test]
+fn f_vjp_z_matches_finite_difference() {
+    let Some(eng) = engine() else { return };
+    let m = DeqModel::new(&eng, "tiny").unwrap();
+    let mut rng = Rng::new(4);
+    let p = Params::init(&m.v, &mut rng);
+    let d = m.v.fixed_point_dim;
+    let z = randv(&mut rng, d, 0.5);
+    let u = randv(&mut rng, d, 0.5);
+    let v = randv(&mut rng, d, 1.0);
+    let w = randv(&mut rng, d, 1.0);
+    // ⟨v, J w⟩ via finite differences vs ⟨Jᵀv, w⟩ via the artifact.
+    let eps = 1e-3f32;
+    let zp: Vec<f32> = z.iter().zip(&w).map(|(&a, &b)| a + eps * b).collect();
+    let zm: Vec<f32> = z.iter().zip(&w).map(|(&a, &b)| a - eps * b).collect();
+    let fp = m.f(&p, &zp, &u).unwrap();
+    let fm = m.f(&p, &zm, &u).unwrap();
+    let jw: Vec<f64> = fp
+        .iter()
+        .zip(&fm)
+        .map(|(&a, &b)| (a as f64 - b as f64) / (2.0 * eps as f64))
+        .collect();
+    let lhs: f64 = v.iter().zip(&jw).map(|(&a, &b)| a as f64 * b).sum();
+    let jtv = m.f_vjp_z(&p, &z, &u, &v).unwrap();
+    let rhs: f64 = jtv.iter().zip(&w).map(|(&a, &b)| a as f64 * b as f64).sum();
+    let scale = lhs.abs().max(rhs.abs()).max(1.0);
+    assert!(
+        (lhs - rhs).abs() / scale < 2e-2,
+        "adjoint mismatch: {lhs} vs {rhs}"
+    );
+}
+
+#[test]
+fn jvp_vjp_adjoint_identity() {
+    let Some(eng) = engine() else { return };
+    let m = DeqModel::new(&eng, "tiny").unwrap();
+    let mut rng = Rng::new(5);
+    let p = Params::init(&m.v, &mut rng);
+    let d = m.v.fixed_point_dim;
+    let z = randv(&mut rng, d, 0.5);
+    let u = randv(&mut rng, d, 0.5);
+    let v = randv(&mut rng, d, 1.0);
+    let w = randv(&mut rng, d, 1.0);
+    let jw = m.f_jvp(&p, &z, &u, &w).unwrap();
+    let jtv = m.f_vjp_z(&p, &z, &u, &v).unwrap();
+    let lhs: f64 = v.iter().zip(&jw).map(|(&a, &b)| a as f64 * b as f64).sum();
+    let rhs: f64 = jtv.iter().zip(&w).map(|(&a, &b)| a as f64 * b as f64).sum();
+    let scale = lhs.abs().max(rhs.abs()).max(1.0);
+    assert!((lhs - rhs).abs() / scale < 1e-3, "{lhs} vs {rhs}");
+}
+
+#[test]
+fn lowrank_artifact_matches_rust_lowrank() {
+    let Some(eng) = engine() else { return };
+    let m = DeqModel::new(&eng, "tiny").unwrap();
+    let d = m.v.fixed_point_dim;
+    let mut rng = Rng::new(6);
+    let mm = 30usize;
+    let v32 = randv(&mut rng, d, 1.0);
+    let us = randv(&mut rng, mm * d, 0.3);
+    let vs = randv(&mut rng, mm * d, 0.3);
+    let got = m.lowrank_apply(&v32, &us, &vs).unwrap();
+    // Rust-native: H = I + Σ uᵢ vᵢᵀ applied to v.
+    use shine::qn::{low_rank::LowRank, InvOp, MemoryPolicy};
+    let mut lr = LowRank::identity(d, mm, MemoryPolicy::Freeze);
+    for i in 0..mm {
+        lr.push(
+            us[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect(),
+            vs[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect(),
+        );
+    }
+    let v64: Vec<f64> = v32.iter().map(|&x| x as f64).collect();
+    let want = lr.apply_vec(&v64);
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (*a as f64 - b).abs() < 1e-2 * (1.0 + b.abs()),
+            "idx {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn pretrain_step_reduces_loss() {
+    let Some(eng) = engine() else { return };
+    let cfg = TrainerConfig {
+        variant: "tiny".into(),
+        lr: 5e-3,
+        total_steps: 100_000, // effectively constant LR for this check
+        seed: 7,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(&eng, cfg).unwrap();
+    let v = tr.model.v.clone();
+    let ds = synth_images(v.batch * 4, v.h, v.w, v.c_in, v.n_classes, 0.3, 11);
+    let mut rng = Rng::new(1);
+    let batches = ds.epoch_batches(v.batch, &mut rng);
+    let (x, labels) = ds.batch(&batches[0]);
+    let first = tr.pretrain_step(&x, &labels).unwrap();
+    let mut last = first;
+    for _ in 0..30 {
+        last = tr.pretrain_step(&x, &labels).unwrap();
+    }
+    assert!(
+        last < first * 0.9,
+        "pretraining did not reduce loss: {first} -> {last}"
+    );
+}
+
+#[test]
+fn train_step_runs_for_every_strategy() {
+    let Some(eng) = engine() else { return };
+    let strategies = [
+        BackwardKind::Original {
+            tol: 1e-6,
+            max_iters: 30,
+        },
+        BackwardKind::JacobianFree,
+        BackwardKind::Shine,
+        BackwardKind::ShineFallback { ratio: 1.3 },
+        BackwardKind::ShineRefine { iters: 3 },
+        BackwardKind::JacobianFreeRefine { iters: 3 },
+        BackwardKind::AdjointBroyden { opa_freq: None },
+    ];
+    for bk in strategies {
+        let cfg = TrainerConfig {
+            variant: "tiny".into(),
+            backward: bk,
+            fwd_max_iters: 12,
+            seed: 3,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(&eng, cfg).unwrap();
+        let v = tr.model.v.clone();
+        let ds = synth_images(v.batch * 2, v.h, v.w, v.c_in, v.n_classes, 0.3, 5);
+        let mut rng = Rng::new(2);
+        let batches = ds.epoch_batches(v.batch, &mut rng);
+        let (x, labels) = ds.batch(&batches[0]);
+        let s1 = tr.train_step(&x, &labels).unwrap();
+        let s2 = tr.train_step(&x, &labels).unwrap();
+        assert!(s1.loss.is_finite() && s2.loss.is_finite(), "{bk:?}");
+        assert!(s1.fwd_iters > 0, "{bk:?}");
+        // Training on the same batch twice must reduce (or at least not
+        // explode) the loss.
+        assert!(
+            s2.loss < s1.loss * 1.5,
+            "{bk:?}: loss {0} -> {1}",
+            s1.loss,
+            s2.loss
+        );
+    }
+}
+
+#[test]
+fn shine_backward_is_cheaper_than_original() {
+    let Some(eng) = engine() else { return };
+    let mk = |bk| TrainerConfig {
+        variant: "tiny".into(),
+        backward: bk,
+        fwd_max_iters: 15,
+        seed: 9,
+        ..Default::default()
+    };
+    let ds = synth_images(8, 8, 8, 3, 4, 0.3, 5);
+    let run = |cfg: TrainerConfig| -> shine::deq::trainer::StepStats {
+        let mut tr = Trainer::new(&eng, cfg).unwrap();
+        let v = tr.model.v.clone();
+        let mut rng = Rng::new(2);
+        let batches = ds.epoch_batches(v.batch, &mut rng);
+        let (x, labels) = ds.batch(&batches[0]);
+        tr.train_step(&x, &labels).unwrap()
+    };
+    let orig = run(mk(BackwardKind::Original {
+        tol: 1e-8,
+        max_iters: 50,
+    }));
+    let shine = run(mk(BackwardKind::Shine));
+    assert!(orig.bwd_matvecs > 0);
+    assert_eq!(shine.bwd_matvecs, 0);
+}
+
+#[test]
+fn engine_rejects_bad_shapes() {
+    let Some(eng) = engine() else { return };
+    let bad = vec![Tensor::new(vec![3], vec![0.0; 3])];
+    assert!(eng.call("tiny_inject", &bad).is_err());
+    assert!(eng.call("no_such_artifact", &[]).is_err());
+}
