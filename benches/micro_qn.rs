@@ -1,52 +1,180 @@
 //! Micro-benchmarks of the qN hot loops (the SHINE backward cost itself):
-//! low-rank apply across dims and ranks, Broyden updates, LBFGS two-loop,
-//! and native-vs-Pallas-artifact low-rank application.
+//! FactorPanel low-rank apply across dims and ranks versus the legacy
+//! `Vec<Vec<f64>>` baseline, Broyden panel updates, multi-RHS cotangent
+//! batches, LBFGS two-loop, and native-vs-Pallas-artifact application.
+//!
+//! Emits `BENCH_qn.json` at the repo root with per-case medians and
+//! panel-vs-legacy speedups — the acceptance gate for the FactorPanel
+//! refactor is `apply_speedup ≥ 2` at d=16384, m=30.
 
+use shine::linalg::vecops::{axpy, dot};
 use shine::qn::broyden::BroydenInverse;
 use shine::qn::lbfgs::LbfgsInverse;
 use shine::qn::low_rank::LowRank;
+use shine::qn::workspace::Workspace;
 use shine::qn::{InvOp, MemoryPolicy};
 use shine::runtime::engine::Engine;
 use shine::util::bench::Bench;
+use shine::util::json::Json;
 use shine::util::rng::Rng;
+
+/// The seed's storage layout, kept verbatim as the regression baseline:
+/// one heap vector per factor, applied factor by factor.
+struct LegacyLowRank {
+    us: Vec<Vec<f64>>,
+    vs: Vec<Vec<f64>>,
+}
+
+impl LegacyLowRank {
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(x);
+        for i in 0..self.us.len() {
+            let c = dot(&self.vs[i], x);
+            if c != 0.0 {
+                axpy(c, &self.us[i], out);
+            }
+        }
+    }
+
+    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(x);
+        for i in 0..self.us.len() {
+            let c = dot(&self.us[i], x);
+            if c != 0.0 {
+                axpy(c, &self.vs[i], out);
+            }
+        }
+    }
+}
 
 fn main() {
     let mut rng = Rng::new(1);
-    let mut b = Bench::new("micro qn hot loops").with_samples(3, 30);
-    for &(d, m) in &[(4096usize, 30usize), (65536, 30), (184320, 30)] {
+    let mut b = Bench::new("micro qn hot loops").with_samples(3, 20);
+    let mut cases: Vec<Json> = Vec::new();
+    let mut accept_apply = 0.0;
+    let mut accept_apply_t = 0.0;
+    // Layout-only (single-threaded) signal: the largest case below
+    // PAR_MIN_ELEMS, so the panel-vs-legacy comparison excludes threading.
+    let mut serial_apply = 0.0;
+    let mut serial_apply_t = 0.0;
+
+    for &(d, m) in &[
+        (256usize, 10usize),
+        (256, 30),
+        (4096, 10),
+        (4096, 30),
+        (16384, 10),
+        (16384, 30),
+    ] {
         let mut lr = LowRank::identity(d, m, MemoryPolicy::Freeze);
+        let mut legacy = LegacyLowRank {
+            us: Vec::with_capacity(m),
+            vs: Vec::with_capacity(m),
+        };
         for _ in 0..m {
-            lr.push(rng.normal_vec(d), rng.normal_vec(d));
+            let u = rng.normal_vec(d);
+            let v = rng.normal_vec(d);
+            lr.push(&u, &v);
+            legacy.us.push(u);
+            legacy.vs.push(v);
         }
         let x = rng.normal_vec(d);
         let mut out = vec![0.0; d];
-        b.run(&format!("lowrank_apply d={d} m={m}"), || {
-            lr.apply(&x, &mut out);
-            out[0]
-        });
-        b.run(&format!("lowrank_apply_t d={d} m={m}"), || {
-            lr.apply_t(&x, &mut out);
-            out[0]
-        });
+        let mut ws = Workspace::new();
+        let panel_apply = b
+            .run(&format!("panel_apply d={d} m={m}"), || {
+                lr.apply_into(&x, &mut out, &mut ws);
+                out[0]
+            })
+            .median_ms();
+        let panel_apply_t = b
+            .run(&format!("panel_apply_t d={d} m={m}"), || {
+                lr.apply_t_into(&x, &mut out, &mut ws);
+                out[0]
+            })
+            .median_ms();
+        let legacy_apply = b
+            .run(&format!("legacy_apply d={d} m={m}"), || {
+                legacy.apply(&x, &mut out);
+                out[0]
+            })
+            .median_ms();
+        let legacy_apply_t = b
+            .run(&format!("legacy_apply_t d={d} m={m}"), || {
+                legacy.apply_t(&x, &mut out);
+                out[0]
+            })
+            .median_ms();
+
+        // Multi-RHS: a batch of k cotangents in one panel sweep vs k
+        // single-RHS panel applies.
+        let k = 8usize;
+        let xs: Vec<f64> = (0..k * d).map(|_| rng.normal()).collect();
+        let mut outs = vec![0.0; k * d];
+        let multi = b
+            .run(&format!("panel_apply_multi k={k} d={d} m={m}"), || {
+                lr.apply_t_multi(&xs, &mut outs);
+                outs[0]
+            })
+            .median_ms();
+        let columnwise = b
+            .run(&format!("columnwise k={k} d={d} m={m}"), || {
+                for (xc, oc) in xs.chunks_exact(d).zip(outs.chunks_exact_mut(d)) {
+                    lr.apply_t(xc, oc);
+                }
+                outs[0]
+            })
+            .median_ms();
+
+        // Broyden update throughput at steady state: Evict keeps the rank at
+        // m, so each timed update is one O(1) eviction + one panel write.
+        let mut bro = BroydenInverse::new(d, m, MemoryPolicy::Evict);
+        for _ in 0..m {
+            bro.update_ws(&rng.normal_vec(d), &rng.normal_vec(d), &mut ws);
+        }
+        let s = rng.normal_vec(d);
+        let y = rng.normal_vec(d);
+        let update = b
+            .run(&format!("broyden_update_evict d={d} m={m}"), || {
+                bro.update_ws(&s, &y, &mut ws)
+            })
+            .median_ms();
+
+        let apply_speedup = legacy_apply / panel_apply.max(1e-12);
+        let apply_t_speedup = legacy_apply_t / panel_apply_t.max(1e-12);
+        if d == 16384 && m == 30 {
+            accept_apply = apply_speedup;
+            accept_apply_t = apply_t_speedup;
+        }
+        if d == 4096 && m == 30 {
+            serial_apply = apply_speedup;
+            serial_apply_t = apply_t_speedup;
+        }
+        let mut c = Json::obj();
+        c.set("d", d)
+            .set("m", m)
+            .set("panel_apply_ms", panel_apply)
+            .set("panel_apply_t_ms", panel_apply_t)
+            .set("legacy_apply_ms", legacy_apply)
+            .set("legacy_apply_t_ms", legacy_apply_t)
+            .set("apply_speedup", apply_speedup)
+            .set("apply_t_speedup", apply_t_speedup)
+            .set("apply_gflops", 4.0 * (m * d) as f64 / (panel_apply * 1e6).max(1e-12))
+            .set("multi_rhs_k", k)
+            .set("apply_t_multi_ms", multi)
+            .set("apply_t_columnwise_ms", columnwise)
+            .set("multi_speedup", columnwise / multi.max(1e-12))
+            .set("broyden_update_ms", update);
+        cases.push(c);
     }
-    // Broyden update cost (the forward-pass bookkeeping per iteration).
+
+    // LBFGS two-loop at DEQ-ish scale.
     let d = 65536;
-    let mut bro = BroydenInverse::new(d, 64, MemoryPolicy::Freeze);
-    for _ in 0..30 {
-        bro.update(&rng.normal_vec(d), &rng.normal_vec(d));
-    }
-    let s = rng.normal_vec(d);
-    let y = rng.normal_vec(d);
-    b.run("broyden_update d=65536 rank=30", || {
-        let mut b2 = bro.clone();
-        b2.update(&s, &y)
-    });
-    // LBFGS two-loop.
     let mut lb = LbfgsInverse::new(d, 30);
     for _ in 0..30 {
         let s = rng.normal_vec(d);
         let mut y = rng.normal_vec(d);
-        if shine::linalg::vecops::dot(&s, &y) < 0.0 {
+        if dot(&s, &y) < 0.0 {
             for v in y.iter_mut() {
                 *v = -*v;
             }
@@ -55,10 +183,12 @@ fn main() {
     }
     let x = rng.normal_vec(d);
     let mut out = vec![0.0; d];
+    let mut ws = Workspace::new();
     b.run("lbfgs_two_loop d=65536 m=30", || {
-        lb.apply(&x, &mut out);
+        lb.apply_into(&x, &mut out, &mut ws);
         out[0]
     });
+
     // Native vs Pallas-artifact low-rank apply (the L1 kernel), if available.
     if let Ok(eng) = Engine::load(&Engine::default_dir()) {
         if let Ok(model) = shine::deq::model::DeqModel::new(&eng, "tiny") {
@@ -72,10 +202,9 @@ fn main() {
             });
             let mut lrn = LowRank::identity(d, 30, MemoryPolicy::Freeze);
             for i in 0..30 {
-                lrn.push(
-                    us[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect(),
-                    vs[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect(),
-                );
+                let u64s: Vec<f64> = us[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect();
+                let v64s: Vec<f64> = vs[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect();
+                lrn.push(&u64s, &v64s);
             }
             let v64: Vec<f64> = v32.iter().map(|&x| x as f64).collect();
             let mut out = vec![0.0; d];
@@ -86,4 +215,34 @@ fn main() {
         }
     }
     b.finish();
+
+    // Machine-readable perf trajectory: BENCH_qn.json at the repo root.
+    let mut j = Json::obj();
+    j.set("bench", "micro_qn")
+        .set("cases", Json::Arr(cases))
+        .set(
+            "acceptance",
+            Json::obj()
+                .set("d", 16384usize)
+                .set("m", 30usize)
+                .set("apply_speedup_vs_legacy", accept_apply)
+                .set("apply_t_speedup_vs_legacy", accept_apply_t)
+                // The acceptance cell runs the thread-parallel panel path by
+                // design; these layout-only numbers (d=4096, m=30 — largest
+                // serial cell) separate contiguity wins from threading wins
+                // so a serial-kernel regression stays visible.
+                .set("serial_cell_apply_speedup_vs_legacy", serial_apply)
+                .set("serial_cell_apply_t_speedup_vs_legacy", serial_apply_t)
+                .set("target_speedup", 2.0)
+                .set("pass", accept_apply >= 2.0 && accept_apply_t >= 2.0)
+                .clone(),
+        );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_qn.json");
+    match shine::util::json::write_file(path, &j) {
+        Ok(()) => println!("(wrote {path})"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+    println!(
+        "acceptance d=16384 m=30: apply {accept_apply:.2}x, apply_t {accept_apply_t:.2}x vs legacy"
+    );
 }

@@ -33,12 +33,16 @@ fn main() {
     let mut radius = 0.0;
     b.run("power-method-20-iters", || {
         let res = power_method(
-            |vv| {
+            |vv, out| {
                 let vf: Vec<f32> = vv.iter().map(|&a| a as f32).collect();
-                tr.model
-                    .f_jvp(&tr.params, &fwd.z, &u, &vf)
-                    .map(|t| t.iter().map(|&a| a as f64).collect())
-                    .unwrap_or_else(|_| vv.to_vec())
+                match tr.model.f_jvp(&tr.params, &fwd.z, &u, &vf) {
+                    Ok(t) => {
+                        for (o, &a) in out.iter_mut().zip(t.iter()) {
+                            *o = a as f64;
+                        }
+                    }
+                    Err(_) => out.copy_from_slice(vv),
+                }
             },
             fwd.z.len(),
             20,

@@ -318,12 +318,16 @@ impl Experiment for TableE1 {
             let model = &tr.model;
             let params = &tr.params;
             let res = power_method(
-                |vv| {
+                |vv, out| {
                     let vf: Vec<f32> = vv.iter().map(|&a| a as f32).collect();
-                    model
-                        .f_jvp(params, &zf, &u, &vf)
-                        .map(|t| t.iter().map(|&a| a as f64).collect())
-                        .unwrap_or_else(|_| vv.to_vec())
+                    match model.f_jvp(params, &zf, &u, &vf) {
+                        Ok(t) => {
+                            for (o, &a) in out.iter_mut().zip(t.iter()) {
+                                *o = a as f64;
+                            }
+                        }
+                        Err(_) => out.copy_from_slice(vv),
+                    }
                 },
                 zf.len(),
                 power_iters,

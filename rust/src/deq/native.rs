@@ -61,41 +61,54 @@ pub fn inject(v: &VariantCfg, wemb: &[f32], bemb: &[f32], x: &[f32]) -> Vec<f32>
 }
 
 /// The fixed-point map f_θ(z; u) = LN(z + relu(z W1 + u + b1) W2 + b2).
+///
+/// Rows (batch × pixel sites) are independent, so above a size threshold the
+/// row loop fans out over threads with whole-row chunks; per-row f64
+/// accumulation makes the result bit-identical to the serial path.
 pub fn f_theta(v: &VariantCfg, np: &NativeParams, z: &[f32], u: &[f32]) -> Vec<f32> {
     let c = v.c;
     let rows = v.batch * v.pixels;
     debug_assert_eq!(z.len(), rows * c);
     let mut out = vec![0.0f32; rows * c];
-    let mut hrow = vec![0.0f64; c];
-    let mut xrow = vec![0.0f64; c];
-    for r in 0..rows {
-        let zr = &z[r * c..(r + 1) * c];
-        let ur = &u[r * c..(r + 1) * c];
-        // h = relu(z W1 + u + b1)
-        for j in 0..c {
-            let mut acc = ur[j] as f64 + np.b1[j] as f64;
-            for k in 0..c {
-                acc += zr[k] as f64 * np.w1[k * c + j] as f64;
+    let workers = if rows * c >= 1 << 14 {
+        crate::util::threads::ncpus().min(8)
+    } else {
+        1
+    };
+    crate::util::threads::par_row_chunks_mut(&mut out, c, workers, |row0, chunk| {
+        let mut hrow = vec![0.0f64; c];
+        let mut xrow = vec![0.0f64; c];
+        for (k, orow) in chunk.chunks_exact_mut(c).enumerate() {
+            let r = row0 + k;
+            let zr = &z[r * c..(r + 1) * c];
+            let ur = &u[r * c..(r + 1) * c];
+            // h = relu(z W1 + u + b1)
+            for j in 0..c {
+                let mut acc = ur[j] as f64 + np.b1[j] as f64;
+                for k in 0..c {
+                    acc += zr[k] as f64 * np.w1[k * c + j] as f64;
+                }
+                hrow[j] = acc.max(0.0);
             }
-            hrow[j] = acc.max(0.0);
-        }
-        // x = z + h W2 + b2
-        for j in 0..c {
-            let mut acc = zr[j] as f64 + np.b2[j] as f64;
-            for k in 0..c {
-                acc += hrow[k] * np.w2[k * c + j] as f64;
+            // x = z + h W2 + b2
+            for j in 0..c {
+                let mut acc = zr[j] as f64 + np.b2[j] as f64;
+                for k in 0..c {
+                    acc += hrow[k] * np.w2[k * c + j] as f64;
+                }
+                xrow[j] = acc;
             }
-            xrow[j] = acc;
+            // layer norm over channels
+            let mean: f64 = xrow.iter().sum::<f64>() / c as f64;
+            let var: f64 =
+                xrow.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / c as f64;
+            let inv = 1.0 / (var + LN_EPS).sqrt();
+            for j in 0..c {
+                orow[j] =
+                    (((xrow[j] - mean) * inv) * np.gamma[j] as f64 + np.beta[j] as f64) as f32;
+            }
         }
-        // layer norm over channels
-        let mean: f64 = xrow.iter().sum::<f64>() / c as f64;
-        let var: f64 = xrow.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / c as f64;
-        let inv = 1.0 / (var + LN_EPS).sqrt();
-        for j in 0..c {
-            out[r * c + j] =
-                (((xrow[j] - mean) * inv) * np.gamma[j] as f64 + np.beta[j] as f64) as f32;
-        }
-    }
+    });
     out
 }
 

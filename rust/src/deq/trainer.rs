@@ -20,14 +20,16 @@ use crate::deq::native;
 use crate::deq::optim::{cosine_lr, Adam, Optimizer, Sgd};
 use crate::linalg::vecops::nrm2;
 use crate::qn::low_rank::LowRank;
+use crate::qn::workspace::Workspace;
 use crate::qn::InvOp;
 use crate::runtime::engine::{Engine, Tensor};
-use crate::solvers::adjoint::{adjoint_broyden_solve, AdjointFpOptions, SigmaChoice};
-use crate::solvers::fixed_point::{broyden_solve, FpOptions};
-use crate::solvers::linear::broyden_solve_left;
+use crate::solvers::adjoint::{adjoint_broyden_solve_ws, AdjointFpOptions, SigmaChoice};
+use crate::solvers::fixed_point::{broyden_solve_ws, FpOptions};
+use crate::solvers::linear::broyden_solve_left_ws;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
+use std::cell::RefCell;
 
 /// Backward-pass strategy for the DEQ (the Fig. 3 method axis).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -127,6 +129,10 @@ pub struct Trainer<'e> {
     pub cfg: TrainerConfig,
     pub step_count: usize,
     pub stats: Vec<StepStats>,
+    /// Scratch arena shared across every forward/backward solve of this
+    /// trainer — the solver loops are allocation-free once it is warm.
+    /// RefCell because forward/backward run behind `&self` (evaluation).
+    ws: RefCell<Workspace>,
 }
 
 impl<'e> Trainer<'e> {
@@ -146,6 +152,7 @@ impl<'e> Trainer<'e> {
             cfg,
             step_count: 0,
             stats: Vec::new(),
+            ws: RefCell::new(Workspace::new()),
         })
     }
 
@@ -164,40 +171,52 @@ impl<'e> Trainer<'e> {
     }
 
     /// Forward pass: Broyden solve of z = f(z; u). Returns the flattened
-    /// fixed point and the shared inverse estimate.
+    /// fixed point and the shared inverse estimate. The f64↔f32 conversion
+    /// buffers at the artifact boundary are reused across iterations, and
+    /// the solver runs on the trainer's shared workspace.
     pub fn forward_solve(&self, u: &[f32]) -> Result<ForwardOutcome> {
         let d = self.model.v.fixed_point_dim;
         let sw = Stopwatch::start();
         let tol = self.cfg.fwd_tol * (d as f64).sqrt();
+        let mut ws = self.ws.borrow_mut();
         // g(z) = z − f(z; u) over f64 (qN stack) with f32 artifact calls.
         let mut err: Option<anyhow::Error> = None;
-        let g = |z: &[f64]| -> Vec<f64> {
-            let zf: Vec<f32> = z.iter().map(|&x| x as f32).collect();
+        let mut zf = vec![0.0f32; d];
+        let g = |z: &[f64], out: &mut [f64]| {
+            for (dst, &src) in zf.iter_mut().zip(z.iter()) {
+                *dst = src as f32;
+            }
             match self.model.f(&self.params, &zf, u) {
-                Ok(f) => z
-                    .iter()
-                    .zip(&f)
-                    .map(|(&zi, &fi)| zi - fi as f64)
-                    .collect(),
+                Ok(f) => {
+                    for i in 0..z.len() {
+                        out[i] = z[i] - f[i] as f64;
+                    }
+                }
                 Err(e) => {
                     err = Some(e);
-                    vec![0.0; z.len()]
+                    out.iter_mut().for_each(|o| *o = 0.0);
                 }
             }
         };
         let res = match self.cfg.backward {
             BackwardKind::AdjointBroyden { opa_freq } => {
                 // Forward with Adjoint Broyden (needs VJPs).
-                let vjp = |z: &[f64], sigma: &[f64]| -> Vec<f64> {
-                    let zf: Vec<f32> = z.iter().map(|&x| x as f32).collect();
-                    let sf: Vec<f32> = sigma.iter().map(|&x| x as f32).collect();
-                    match self.model.f_vjp_z(&self.params, &zf, u, &sf) {
-                        Ok(j) => sigma
-                            .iter()
-                            .zip(&j)
-                            .map(|(&si, &ji)| si - ji as f64)
-                            .collect(),
-                        Err(_) => sigma.to_vec(),
+                let mut zf2 = vec![0.0f32; d];
+                let mut sf = vec![0.0f32; d];
+                let vjp = |z: &[f64], sigma: &[f64], out: &mut [f64]| {
+                    for (dst, &src) in zf2.iter_mut().zip(z.iter()) {
+                        *dst = src as f32;
+                    }
+                    for (dst, &src) in sf.iter_mut().zip(sigma.iter()) {
+                        *dst = src as f32;
+                    }
+                    match self.model.f_vjp_z(&self.params, &zf2, u, &sf) {
+                        Ok(j) => {
+                            for i in 0..sigma.len() {
+                                out[i] = sigma[i] - j[i] as f64;
+                            }
+                        }
+                        Err(_) => out.copy_from_slice(sigma),
                     }
                 };
                 let opts = AdjointFpOptions {
@@ -211,7 +230,7 @@ impl<'e> Trainer<'e> {
                 // the most recent head gradient — a fixed approximation that
                 // avoids per-iteration head evaluations (cheap and faithful:
                 // the direction only steers *extra* updates).
-                let r = adjoint_broyden_solve(g, vjp, None, &vec![0.0; d], &opts);
+                let r = adjoint_broyden_solve_ws(g, vjp, None, &vec![0.0; d], &opts, &mut ws);
                 ForwardOutcome {
                     z: r.z.iter().map(|&x| x as f32).collect(),
                     h: r.qn.low_rank().clone(),
@@ -227,7 +246,7 @@ impl<'e> Trainer<'e> {
                     memory: self.cfg.memory,
                     ..Default::default()
                 };
-                let r = broyden_solve(g, &vec![0.0; d], &opts);
+                let r = broyden_solve_ws(g, &vec![0.0; d], &opts, &mut ws);
                 ForwardOutcome {
                     z: r.z.iter().map(|&x| x as f32).collect(),
                     h: r.qn.into_low_rank(),
@@ -252,21 +271,32 @@ impl<'e> Trainer<'e> {
         dz: &[f32],
     ) -> (Vec<f64>, usize, bool) {
         let dz64: Vec<f64> = dz.iter().map(|&x| x as f64).collect();
-        let vjp = |w: &[f64]| -> Vec<f64> {
-            let wf: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+        let d = dz64.len();
+        let mut ws = self.ws.borrow_mut();
+        let mut wf = vec![0.0f32; d];
+        let vjp = |w: &[f64], out: &mut [f64]| {
+            for (dst, &src) in wf.iter_mut().zip(w.iter()) {
+                *dst = src as f32;
+            }
             match self.model.f_vjp_z(&self.params, &fwd.z, u, &wf) {
-                Ok(j) => w.iter().zip(&j).map(|(&wi, &ji)| wi - ji as f64).collect(),
-                Err(_) => w.to_vec(),
+                Ok(j) => {
+                    for i in 0..w.len() {
+                        out[i] = w[i] - j[i] as f64;
+                    }
+                }
+                Err(_) => out.copy_from_slice(w),
             }
         };
-        let d = dz64.len();
         match self.cfg.backward {
             BackwardKind::JacobianFree => (dz64, 0, false),
             BackwardKind::Shine | BackwardKind::AdjointBroyden { .. } => {
-                (fwd.h.apply_t_vec(&dz64), 0, false)
+                let mut w = vec![0.0; d];
+                fwd.h.apply_t_into(&dz64, &mut w, &mut ws);
+                (w, 0, false)
             }
             BackwardKind::ShineFallback { ratio } => {
-                let w = fwd.h.apply_t_vec(&dz64);
+                let mut w = vec![0.0; d];
+                fwd.h.apply_t_into(&dz64, &mut w, &mut ws);
                 if nrm2(&w) > ratio * nrm2(&dz64) {
                     (dz64, 0, true)
                 } else {
@@ -274,16 +304,27 @@ impl<'e> Trainer<'e> {
                 }
             }
             BackwardKind::Original { tol, max_iters } => {
-                let r = broyden_solve_left(vjp, &dz64, None, None, tol, max_iters, max_iters + 8);
+                let r = broyden_solve_left_ws(
+                    vjp,
+                    &dz64,
+                    None,
+                    None,
+                    tol,
+                    max_iters,
+                    max_iters + 8,
+                    &mut ws,
+                );
                 (r.x, r.n_matvecs, false)
             }
             BackwardKind::ShineRefine { iters } => {
                 let w0 = fwd.h.apply_t_vec(&dz64);
-                let h_init = fwd.h.transposed().with_max_mem(
+                // Clone, then O(1) panel swap — the forward estimate in
+                // `fwd.h` stays usable for diagnostics.
+                let h_init = fwd.h.clone().into_transposed().with_max_mem(
                     self.cfg.memory + iters + 8,
                     crate::qn::MemoryPolicy::Freeze,
                 );
-                let r = broyden_solve_left(
+                let r = broyden_solve_left_ws(
                     vjp,
                     &dz64,
                     Some(&w0),
@@ -291,11 +332,12 @@ impl<'e> Trainer<'e> {
                     1e-12 * (d as f64).sqrt().max(1.0),
                     iters,
                     self.cfg.memory + iters + 8,
+                    &mut ws,
                 );
                 (r.x, r.n_matvecs, false)
             }
             BackwardKind::JacobianFreeRefine { iters } => {
-                let r = broyden_solve_left(
+                let r = broyden_solve_left_ws(
                     vjp,
                     &dz64,
                     Some(&dz64),
@@ -303,6 +345,7 @@ impl<'e> Trainer<'e> {
                     1e-12 * (d as f64).sqrt().max(1.0),
                     iters,
                     iters + 8,
+                    &mut ws,
                 );
                 (r.x, r.n_matvecs, false)
             }

@@ -21,7 +21,7 @@
 
 pub mod strategies;
 
-pub use strategies::{hypergrad, HypergradResult, Strategy};
+pub use strategies::{hypergrad, hypergrad_ws, HypergradResult, Strategy};
 
 use crate::qn::low_rank::LowRank;
 use crate::qn::InvOp;

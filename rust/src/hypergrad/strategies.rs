@@ -4,8 +4,9 @@
 use crate::hypergrad::ForwardArtifacts;
 use crate::linalg::vecops::nrm2;
 use crate::problems::{InnerProblem, OuterLoss};
-use crate::qn::MemoryPolicy;
-use crate::solvers::linear::{broyden_solve_left, cg_solve};
+use crate::qn::workspace::Workspace;
+use crate::qn::{InvOp, MemoryPolicy};
+use crate::solvers::linear::{broyden_solve_left_ws, cg_solve};
 
 /// Backward-pass strategy. `Full` with `max_iters = usize::MAX` is the
 /// Original / HOAG method; finite `max_iters` is the "limited backward"
@@ -44,7 +45,9 @@ pub struct HypergradResult {
     pub fallback_used: bool,
 }
 
-/// Compute the hypergradient dL/dθ for the given strategy.
+/// Compute the hypergradient dL/dθ for the given strategy (owns a scratch
+/// workspace; outer loops that call this every iteration should hold a
+/// [`Workspace`] and use [`hypergrad_ws`]).
 ///
 /// `warm_w` — previous outer iteration's w (HOAG warm-restarts the backward
 /// solve, Appendix C); only used by the iterative strategies.
@@ -56,6 +59,21 @@ pub fn hypergrad(
     strategy: Strategy,
     warm_w: Option<&[f64]>,
 ) -> HypergradResult {
+    let mut ws = Workspace::new();
+    hypergrad_ws(prob, outer, theta, fwd, strategy, warm_w, &mut ws)
+}
+
+/// [`hypergrad`] with a caller-provided scratch arena, threaded through the
+/// SHINE apply and the iterative backward solvers.
+pub fn hypergrad_ws(
+    prob: &dyn InnerProblem,
+    outer: &dyn OuterLoss,
+    theta: &[f64],
+    fwd: &ForwardArtifacts,
+    strategy: Strategy,
+    warm_w: Option<&[f64]>,
+    ws: &mut Workspace,
+) -> HypergradResult {
     let z = fwd.z;
     let grad_l = outer.grad(z);
     let mut fallback_used = false;
@@ -65,11 +83,14 @@ pub fn hypergrad(
         Strategy::JacobianFree => grad_l.clone(),
         Strategy::Shine => {
             let inv = fwd.inv.expect("SHINE requires a forward qN estimate");
-            inv.apply_t_vec(&grad_l)
+            let mut w = vec![0.0; grad_l.len()];
+            inv.apply_t_into(&grad_l, &mut w, ws);
+            w
         }
         Strategy::ShineFallback { ratio } => {
             let inv = fwd.inv.expect("SHINE requires a forward qN estimate");
-            let w_shine = inv.apply_t_vec(&grad_l);
+            let mut w_shine = vec![0.0; grad_l.len()];
+            inv.apply_t_into(&grad_l, &mut w_shine, ws);
             // Norm guard: the Jacobian-Free direction is ∇L itself, available
             // at no extra cost; a SHINE direction with a much larger norm is
             // the telltale sign of a bad inversion (§3).
@@ -83,16 +104,18 @@ pub fn hypergrad(
         Strategy::Full { tol, max_iters } => {
             solve_left(
                 prob, theta, z, &grad_l, warm_w, None, tol, max_iters,
-                &mut backward_matvecs,
+                &mut backward_matvecs, ws,
             )
         }
         Strategy::ShineRefine { iters, tol } => {
             let inv = fwd.inv.expect("refine requires a forward qN estimate");
             let w0 = inv.apply_t_vec(&grad_l);
-            let h_init = fwd.low_rank.map(|lr| lr.transposed());
+            // O(1) panel swap on a clone: the forward estimate stays intact
+            // while the backward solver grows its transposed copy.
+            let h_init = fwd.low_rank.map(|lr| lr.clone().into_transposed());
             solve_left(
                 prob, theta, z, &grad_l, Some(&w0), h_init, tol, iters,
-                &mut backward_matvecs,
+                &mut backward_matvecs, ws,
             )
         }
     };
@@ -110,7 +133,9 @@ pub fn hypergrad(
     }
 }
 
-/// Solve `Jᵀ w = ∇L` with the appropriate iterative solver.
+/// Solve `Jᵀ w = ∇L` with the appropriate iterative solver. The problem
+/// traits return owned vectors, so the adapter closures copy into the
+/// solver's buffers; the solver loops themselves stay allocation-free.
 #[allow(clippy::too_many_arguments)]
 fn solve_left(
     prob: &dyn InnerProblem,
@@ -122,12 +147,13 @@ fn solve_left(
     tol: f64,
     max_iters: usize,
     matvecs: &mut usize,
+    ws: &mut Workspace,
 ) -> Vec<f64> {
     let max_iters = max_iters.min(100_000);
     if prob.is_symmetric() {
         // CG on J w = ∇L (J symmetric ⇒ Jᵀ = J), as HOAG does.
         let res = cg_solve(
-            |v| prob.jvp(theta, z, v),
+            |v, out| out.copy_from_slice(&prob.jvp(theta, z, v)),
             grad_l,
             w0,
             tol,
@@ -136,14 +162,15 @@ fn solve_left(
         *matvecs += res.n_matvecs;
         res.x
     } else {
-        let res = broyden_solve_left(
-            |w| prob.vjp(theta, z, w),
+        let res = broyden_solve_left_ws(
+            |w, out| out.copy_from_slice(&prob.vjp(theta, z, w)),
             grad_l,
             w0,
             h_init.map(|h| h.with_max_mem(max_iters + 64, MemoryPolicy::Freeze)),
             tol,
             max_iters,
             max_iters + 64,
+            ws,
         );
         *matvecs += res.n_matvecs;
         res.x

@@ -15,7 +15,31 @@
 //!   block and the low-rank (Sherman–Morrison) inverse application.
 //!
 //! The `runtime` module loads the artifacts through the PJRT C API (`xla`
-//! crate); Python never runs on the experiment hot path.
+//! crate, behind the off-by-default `pjrt` feature — without it a stub
+//! engine errors on load and all artifact-dependent paths skip gracefully);
+//! Python never runs on the experiment hot path.
+//!
+//! ## Hot-path architecture (FactorPanel + Workspace)
+//!
+//! The crate's hottest path — applying and updating the identity-plus-low-
+//! rank inverse estimates `H = I + Σ uᵢvᵢᵀ` that SHINE shares between
+//! forward and backward passes — is built on two primitives in [`qn`]:
+//!
+//! * [`qn::FactorPanel`] — contiguous row-major factor storage behind a
+//!   ring buffer: `H x` is two streaming panel sweeps
+//!   (`linalg::vecops::panel_gemv` → `panel_gemv_t`, thread-parallel above
+//!   a size threshold via `util::threads::par_chunks_mut`), eviction is an
+//!   O(1) ring rotation, and multi-RHS application
+//!   (`qn::InvOp::apply_multi`) serves a whole batch of backward cotangents
+//!   in one sweep.
+//! * [`qn::Workspace`] — a LIFO scratch arena threaded through the solver
+//!   stack (`broyden_solve`, `anderson_solve`, the linear backward solvers,
+//!   the OPA updates, the hypergradient strategies, and the DEQ trainer).
+//!   Residuals use the write-into convention `g(z, out)`, so solver
+//!   iteration loops perform zero heap allocations after warm-up — enforced
+//!   by a counting-allocator test (`rust/tests/qn_alloc.rs`) and measured
+//!   against the legacy `Vec<Vec<f64>>` layout by `benches/micro_qn.rs`
+//!   (results in `BENCH_qn.json`).
 //!
 //! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
 //! paper-vs-measured results.

@@ -13,9 +13,16 @@ pub struct Lu {
     n: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("matrix is singular at pivot {0}")]
+#[derive(Debug)]
 pub struct SingularError(pub usize);
+
+impl std::fmt::Display for SingularError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix is singular at pivot {}", self.0)
+    }
+}
+
+impl std::error::Error for SingularError {}
 
 impl Lu {
     /// Factor a square matrix. O(n³).

@@ -82,6 +82,91 @@ pub fn zero(x: &mut [f64]) {
     }
 }
 
+// ---- panel (flat row-major m×d) kernels -----------------------------------
+//
+// These two primitives are the whole of SHINE's O(m·d) backward cost once the
+// factors live in a `FactorPanel`: `H x = x + Uᵀ (V x)` is one `panel_gemv`
+// (the coefficient sweep `c = V x`) followed by one `panel_gemv_t` (the
+// accumulation sweep `out += Uᵀ c`). Both stream the panel front to back, so
+// they run at memory bandwidth and auto-vectorize.
+
+/// `coeffs[i] = Σ_j panel[i·dim + j] · x[j]` for `i in 0..rows`
+/// (row-major panel–vector products; phase 1 of the low-rank apply).
+#[inline]
+pub fn panel_gemv(panel: &[f64], rows: usize, dim: usize, x: &[f64], coeffs: &mut [f64]) {
+    debug_assert!(panel.len() >= rows * dim);
+    debug_assert_eq!(x.len(), dim);
+    debug_assert!(coeffs.len() >= rows);
+    for i in 0..rows {
+        coeffs[i] = dot(&panel[i * dim..i * dim + dim], x);
+    }
+}
+
+/// `y[j] += Σ_i coeffs[i] · panel[i·dim + j]` (transposed panel–vector
+/// product; phase 2 of the low-rank apply — one contiguous axpy per row).
+#[inline]
+pub fn panel_gemv_t(panel: &[f64], rows: usize, dim: usize, coeffs: &[f64], y: &mut [f64]) {
+    debug_assert!(panel.len() >= rows * dim);
+    debug_assert!(coeffs.len() >= rows);
+    debug_assert_eq!(y.len(), dim);
+    for i in 0..rows {
+        let c = coeffs[i];
+        if c != 0.0 {
+            axpy(c, &panel[i * dim..i * dim + dim], y);
+        }
+    }
+}
+
+/// Multi-RHS variant of [`panel_gemv`]: `coeffs[i·k + r] = ⟨panelᵢ, xᵣ⟩` for
+/// `k` right-hand sides stored row-major in `xs` (`k × dim`). One pass over
+/// the panel serves every RHS — this is what makes a batch of SHINE backward
+/// cotangents a single panel sweep.
+#[inline]
+pub fn panel_gemv_multi(
+    panel: &[f64],
+    rows: usize,
+    dim: usize,
+    xs: &[f64],
+    k: usize,
+    coeffs: &mut [f64],
+) {
+    debug_assert!(panel.len() >= rows * dim);
+    debug_assert_eq!(xs.len(), k * dim);
+    debug_assert!(coeffs.len() >= rows * k);
+    for i in 0..rows {
+        let row = &panel[i * dim..i * dim + dim];
+        for (r, x) in xs.chunks_exact(dim).enumerate() {
+            coeffs[i * k + r] = dot(row, x);
+        }
+    }
+}
+
+/// Multi-RHS variant of [`panel_gemv_t`]: `ys[r] += Σ_i coeffs[i·k + r] ·
+/// panelᵢ` for `k` outputs stored row-major in `ys` (`k × dim`). Each panel
+/// row is read once and applied to all RHS while it is hot in cache.
+#[inline]
+pub fn panel_gemv_t_multi(
+    panel: &[f64],
+    rows: usize,
+    dim: usize,
+    coeffs: &[f64],
+    k: usize,
+    ys: &mut [f64],
+) {
+    debug_assert!(panel.len() >= rows * dim);
+    debug_assert_eq!(ys.len(), k * dim);
+    debug_assert!(coeffs.len() >= rows * k);
+    for i in 0..rows {
+        let row = &panel[i * dim..i * dim + dim];
+        for (r, y) in ys.chunks_exact_mut(dim).enumerate() {
+            let c = coeffs[i * k + r];
+            if c != 0.0 {
+                axpy(c, row, y);
+            }
+        }
+    }
+}
+
 // ---- f32 variants (DEQ hot path; accumulate dots in f64 for stability) ----
 
 #[inline]
@@ -147,6 +232,51 @@ mod tests {
         add(&a, &a, &mut out);
         assert_eq!(out, [6.0, 8.0]);
         assert!((dist2(&a, &b) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn panel_kernels_match_naive() {
+        // 3 factors of dim 4, panel row-major.
+        let panel = [
+            1.0, 2.0, 3.0, 4.0, //
+            0.5, -1.0, 0.0, 2.0, //
+            -1.0, 1.0, -1.0, 1.0,
+        ];
+        let x = [1.0, 0.0, -1.0, 2.0];
+        let mut c = [0.0; 3];
+        panel_gemv(&panel, 3, 4, &x, &mut c);
+        assert_eq!(c, [6.0, 4.5, 2.0]);
+        let mut y = [1.0; 4];
+        panel_gemv_t(&panel, 3, 4, &c, &mut y);
+        // y[j] = 1 + Σ_i c[i] * panel[i][j]
+        for j in 0..4 {
+            let want = 1.0 + c[0] * panel[j] + c[1] * panel[4 + j] + c[2] * panel[8 + j];
+            assert!((y[j] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn panel_multi_matches_single() {
+        let panel = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3 rows × dim 2
+        let xs = [1.0, -1.0, 2.0, 0.5]; // 2 RHS × dim 2
+        let mut cm = [0.0; 6];
+        panel_gemv_multi(&panel, 3, 2, &xs, 2, &mut cm);
+        for r in 0..2 {
+            let x = &xs[r * 2..r * 2 + 2];
+            let mut c1 = [0.0; 3];
+            panel_gemv(&panel, 3, 2, x, &mut c1);
+            for i in 0..3 {
+                assert_eq!(cm[i * 2 + r], c1[i]);
+            }
+        }
+        let mut ym = [0.0; 4];
+        panel_gemv_t_multi(&panel, 3, 2, &cm, 2, &mut ym);
+        for r in 0..2 {
+            let mut y1 = [0.0; 2];
+            let c1: Vec<f64> = (0..3).map(|i| cm[i * 2 + r]).collect();
+            panel_gemv_t(&panel, 3, 2, &c1, &mut y1);
+            assert_eq!(&ym[r * 2..r * 2 + 2], &y1);
+        }
     }
 
     #[test]

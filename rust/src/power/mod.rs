@@ -19,9 +19,11 @@ pub struct PowerResult {
     pub history: Vec<f64>,
 }
 
-/// Power method on a linear map given as a matvec closure.
+/// Power method on a linear map given as a write-into matvec closure
+/// `apply(v, out)`. The iterate is double-buffered, so the loop is
+/// allocation-free apart from whatever the operator itself does.
 pub fn power_method(
-    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+    mut apply: impl FnMut(&[f64], &mut [f64]),
     dim: usize,
     iters: usize,
     rng: &mut Rng,
@@ -29,16 +31,17 @@ pub fn power_method(
     let mut v = rng.normal_vec(dim);
     let n0 = nrm2(&v);
     scale(1.0 / n0.max(1e-300), &mut v);
+    let mut av = vec![0.0; dim];
     let mut history = Vec::with_capacity(iters);
     let mut radius = 0.0;
     for _ in 0..iters {
-        let av = apply(&v);
+        apply(&v, &mut av);
         radius = nrm2(&av);
         history.push(radius);
         if radius <= 1e-300 {
             break;
         }
-        v = av;
+        std::mem::swap(&mut v, &mut av);
         scale(1.0 / radius, &mut v);
     }
     PowerResult {
@@ -50,22 +53,29 @@ pub fn power_method(
 
 /// Nonlinear variant: the Jacobian map at z is approximated by finite
 /// differences of `f` (the paper's "power-method applied to a nonlinear
-/// function"). `f` must be the fixed-point map (not the residual).
+/// function"). `f(z, out)` must be the fixed-point map (not the residual).
 pub fn nonlinear_power_method(
-    mut f: impl FnMut(&[f64]) -> Vec<f64>,
+    mut f: impl FnMut(&[f64], &mut [f64]),
     z: &[f64],
     iters: usize,
     eps: f64,
     rng: &mut Rng,
 ) -> PowerResult {
-    let fz = f(z);
     let dim = z.len();
+    let mut fz = vec![0.0; dim];
+    f(z, &mut fz);
+    let mut zp = vec![0.0; dim];
+    let mut fp = vec![0.0; dim];
     power_method(
-        move |v| {
+        move |v, out| {
             // (f(z + εv) − f(z)) / ε
-            let zp: Vec<f64> = z.iter().zip(v).map(|(&a, &b)| a + eps * b).collect();
-            let fp = f(&zp);
-            fp.iter().zip(&fz).map(|(&a, &b)| (a - b) / eps).collect()
+            for i in 0..dim {
+                zp[i] = z[i] + eps * v[i];
+            }
+            f(&zp[..], &mut fp[..]);
+            for i in 0..dim {
+                out[i] = (fp[i] - fz[i]) / eps;
+            }
         },
         dim,
         iters,
@@ -84,7 +94,11 @@ mod tests {
         let mut rng = Rng::new(2);
         let diag = [5.0, 2.0, 1.0, 0.5];
         let res = power_method(
-            |v| v.iter().zip(&diag).map(|(&x, &d)| x * d).collect(),
+            |v, out| {
+                for i in 0..4 {
+                    out[i] = v[i] * diag[i];
+                }
+            },
             4,
             100,
             &mut rng,
@@ -97,16 +111,7 @@ mod tests {
         prop::check("power-spd", 8, |rng| {
             let n = 6;
             let a = DMat::random_spd(n, 0.1, 3.0, rng);
-            let res = power_method(
-                |v| {
-                    let mut out = vec![0.0; n];
-                    a.matvec(v, &mut out);
-                    out
-                },
-                n,
-                500,
-                rng,
-            );
+            let res = power_method(|v, out| a.matvec(v, out), n, 500, rng);
             // Rayleigh check: radius must be ≥ |Av|/|v| for a random probe
             // and equal to the max singular value within tolerance: verify
             // via ‖A x‖ ≤ radius·‖x‖ (1 + tol) for random x.
@@ -128,29 +133,10 @@ mod tests {
         // matrix may have complex dominant eigenvalues → oscillation).
         let a = DMat::random_spd(n, 0.2, 4.0, &mut rng);
         let z = rng.normal_vec(n);
-        let res = nonlinear_power_method(
-            |x| {
-                let mut out = vec![0.0; n];
-                a.matvec(x, &mut out);
-                out
-            },
-            &z,
-            200,
-            1e-6,
-            &mut rng,
-        );
+        let res = nonlinear_power_method(|x, out| a.matvec(x, out), &z, 200, 1e-6, &mut rng);
         // Compare against direct power method on A.
         let mut rng2 = Rng::new(8);
-        let lin = power_method(
-            |v| {
-                let mut out = vec![0.0; n];
-                a.matvec(v, &mut out);
-                out
-            },
-            n,
-            200,
-            &mut rng2,
-        );
+        let lin = power_method(|v, out| a.matvec(v, out), n, 200, &mut rng2);
         assert!(
             (res.radius - lin.radius).abs() / lin.radius < 1e-2,
             "{} vs {}",
@@ -162,7 +148,16 @@ mod tests {
     #[test]
     fn history_converges() {
         let mut rng = Rng::new(3);
-        let res = power_method(|v| v.iter().map(|&x| 2.0 * x).collect(), 3, 50, &mut rng);
+        let res = power_method(
+            |v, out| {
+                for i in 0..3 {
+                    out[i] = 2.0 * v[i];
+                }
+            },
+            3,
+            50,
+            &mut rng,
+        );
         assert_eq!(res.iters, 50);
         let last = res.history.last().unwrap();
         assert!((last - 2.0).abs() < 1e-9);

@@ -14,23 +14,26 @@
 //! an analytic Hessian-vector product in the bi-level case) — the extra cost
 //! the paper notes for this method.
 //!
-//! We maintain **both** the direct factors (B = I + Σ aᵢbᵢᵀ, needed to form
-//! σᵀB_n) and the inverse (H = B⁻¹, via Sherman–Morrison) so SHINE can apply
-//! H and Hᵀ in O(m·d).
+//! We maintain **both** the direct factors (B = I + Σ aᵢbᵢᵀ, in a
+//! [`FactorPanel`]) and the inverse (H = B⁻¹, via Sherman–Morrison in a
+//! [`LowRank`]) so SHINE can apply H and Hᵀ in O(m·d). The OPA update path
+//! ([`AdjointBroyden::update_ws`]) draws all of its temporaries from a
+//! [`Workspace`] and writes new factors straight into panel slots —
+//! allocation-free once warm.
 
-use crate::linalg::vecops::{dot, nrm2};
+use crate::linalg::vecops::{dot, nrm2, panel_gemv, panel_gemv_t};
 use crate::qn::low_rank::LowRank;
+use crate::qn::panel::FactorPanel;
+use crate::qn::workspace::Workspace;
 use crate::qn::{InvOp, MemoryPolicy};
 
 #[derive(Clone, Debug)]
 pub struct AdjointBroyden {
     dim: usize,
-    /// Direct low-rank factors: B = I + Σ a_i b_iᵀ.
-    a_facs: Vec<Vec<f64>>,
-    b_facs: Vec<Vec<f64>>,
+    /// Direct low-rank factors: B = I + Σ a_i b_iᵀ (u-rows = a, v-rows = b).
+    direct: FactorPanel,
     /// Inverse estimate maintained by Sherman–Morrison.
     h: LowRank,
-    max_mem: usize,
     pub denom_eps: f64,
     pub skipped: usize,
 }
@@ -39,10 +42,8 @@ impl AdjointBroyden {
     pub fn new(dim: usize, max_mem: usize, policy: MemoryPolicy) -> Self {
         AdjointBroyden {
             dim,
-            a_facs: Vec::new(),
-            b_facs: Vec::new(),
+            direct: FactorPanel::new(dim, max_mem),
             h: LowRank::identity(dim, max_mem, policy),
-            max_mem,
             denom_eps: 1e-10,
             skipped: 0,
         }
@@ -53,60 +54,108 @@ impl AdjointBroyden {
     }
 
     pub fn rank(&self) -> usize {
-        self.a_facs.len()
+        self.direct.len()
     }
 
     /// out = σᵀ B_n  (row-vector result stored as a plain vector).
     pub fn left_apply_direct(&self, sigma: &[f64], out: &mut [f64]) {
+        let mut coeffs = vec![0.0; self.direct.len()];
+        self.left_apply_direct_with(sigma, out, &mut coeffs);
+    }
+
+    /// Workspace-scratch variant of [`AdjointBroyden::left_apply_direct`].
+    pub fn left_apply_direct_into(&self, sigma: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let mut coeffs = ws.take(self.direct.coeff_len());
+        self.left_apply_direct_with(sigma, out, &mut coeffs);
+        ws.give(coeffs);
+    }
+
+    /// σᵀ B = σᵀ + Σᵢ (aᵢ·σ) bᵢᵀ — the same two-phase panel sweep as the
+    /// low-rank apply, over the direct factors.
+    fn left_apply_direct_with(&self, sigma: &[f64], out: &mut [f64], coeffs: &mut [f64]) {
         out.copy_from_slice(sigma);
-        for i in 0..self.a_facs.len() {
-            let c = dot(&self.a_facs[i], sigma);
-            if c != 0.0 {
-                crate::linalg::vecops::axpy(c, &self.b_facs[i], out);
-            }
+        let m = self.direct.len();
+        if m == 0 {
+            return;
         }
+        let coeffs = &mut coeffs[..m];
+        panel_gemv(self.direct.u_flat(), m, self.dim, sigma, coeffs);
+        panel_gemv_t(self.direct.v_flat(), m, self.dim, coeffs, out);
     }
 
     /// Update with direction σ and the row `sigma_j = σᵀ J(z_{n+1})`
-    /// (computed by the caller through a VJP). Returns false if skipped.
-    pub fn update(&mut self, sigma: &[f64], sigma_j: &[f64]) -> bool {
+    /// (computed by the caller through a VJP), drawing scratch from `ws`.
+    /// Returns false if skipped. Allocation-free once `ws` is warm.
+    pub fn update_ws(&mut self, sigma: &[f64], sigma_j: &[f64], ws: &mut Workspace) -> bool {
         let ns2 = dot(sigma, sigma);
         if ns2 <= 1e-300 {
             self.skipped += 1;
             return false;
         }
-        if self.a_facs.len() >= self.max_mem {
+        if self.direct.is_full() {
             // Freeze (mirror of the Broyden forward behaviour): both the
             // direct and inverse stacks stop growing together.
             self.skipped += 1;
             return false;
         }
+        let d = self.dim;
         // c = σᵀJ − σᵀB  (the row correction)
-        let mut c = vec![0.0; self.dim];
-        self.left_apply_direct(sigma, &mut c);
-        for i in 0..self.dim {
+        let mut c = ws.take(d);
+        self.left_apply_direct_into(sigma, &mut c, ws);
+        for i in 0..d {
             c[i] = sigma_j[i] - c[i];
         }
         // a = σ / ‖σ‖²
-        let a: Vec<f64> = sigma.iter().map(|&x| x / ns2).collect();
+        let mut a = ws.take(d);
+        for i in 0..d {
+            a[i] = sigma[i] / ns2;
+        }
         // Sherman–Morrison for the inverse: denom = 1 + cᵀ H a.
-        let ha = self.h.apply_vec(&a);
+        let mut ha = ws.take(d);
+        self.h.apply_into(&a, &mut ha, ws);
         let denom = 1.0 + dot(&c, &ha);
         if denom.abs() <= self.denom_eps * (1.0 + nrm2(&c) * nrm2(&ha)) {
             self.skipped += 1;
+            ws.give(c);
+            ws.give(a);
+            ws.give(ha);
             return false;
         }
-        let cth = self.h.apply_t_vec(&c); // (cᵀ H)ᵀ = Hᵀ c
-        let u: Vec<f64> = ha.iter().map(|&x| -x / denom).collect();
-        self.h.push(u, cth);
-        self.a_facs.push(a);
-        self.b_facs.push(c);
+        let mut cth = ws.take(d);
+        self.h.apply_t_into(&c, &mut cth, ws); // (cᵀ H)ᵀ = Hᵀ c
+        self.h.push_with(|u_slot, v_slot| {
+            for i in 0..d {
+                u_slot[i] = -ha[i] / denom;
+            }
+            v_slot.copy_from_slice(&cth);
+        });
+        let (_, a_slot, b_slot) = self.direct.advance();
+        a_slot.copy_from_slice(&a);
+        b_slot.copy_from_slice(&c);
+        ws.give(c);
+        ws.give(a);
+        ws.give(ha);
+        ws.give(cth);
         true
+    }
+
+    /// Allocating convenience wrapper over [`AdjointBroyden::update_ws`].
+    pub fn update(&mut self, sigma: &[f64], sigma_j: &[f64]) -> bool {
+        let mut ws = Workspace::new();
+        self.update_ws(sigma, sigma_j, &mut ws)
     }
 
     /// Step direction p = −H g (forward iteration).
     pub fn direction(&self, g: &[f64], out: &mut [f64]) {
         self.h.apply(g, out);
+        for v in out.iter_mut() {
+            *v = -*v;
+        }
+    }
+
+    /// Step direction p = −H g with workspace scratch (allocation-free).
+    pub fn direction_ws(&self, g: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        self.h.apply_into(g, out, ws);
         for v in out.iter_mut() {
             *v = -*v;
         }
@@ -119,10 +168,10 @@ impl AdjointBroyden {
     /// Dense materialization of B (test/diagnostic use only).
     pub fn dense_direct(&self) -> crate::linalg::dmat::DMat {
         let mut m = crate::linalg::dmat::DMat::eye(self.dim);
-        for i in 0..self.a_facs.len() {
+        for (a, b) in self.direct.rows() {
             for r in 0..self.dim {
                 for c in 0..self.dim {
-                    m[(r, c)] += self.a_facs[i][r] * self.b_facs[i][c];
+                    m[(r, c)] += a[r] * b[c];
                 }
             }
         }
@@ -139,6 +188,18 @@ impl InvOp for AdjointBroyden {
     }
     fn apply_t(&self, x: &[f64], out: &mut [f64]) {
         self.h.apply_t(x, out)
+    }
+    fn apply_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        self.h.apply_into(x, out, ws)
+    }
+    fn apply_t_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        self.h.apply_t_into(x, out, ws)
+    }
+    fn apply_multi(&self, xs: &[f64], out: &mut [f64]) {
+        self.h.apply_multi(xs, out)
+    }
+    fn apply_t_multi(&self, xs: &[f64], out: &mut [f64]) {
+        self.h.apply_t_multi(xs, out)
     }
 }
 
@@ -171,6 +232,49 @@ mod tests {
     }
 
     #[test]
+    fn adjoint_identity_on_inverse() {
+        // ⟨Hx, y⟩ == ⟨x, Hᵀy⟩ for the maintained inverse estimate — mirrors
+        // broyden.rs's transpose_apply_consistent for the adjoint family.
+        prop::check("adjbroyden-adjoint-identity", 15, |rng| {
+            let n = 4 + rng.below(8);
+            let j = DMat::randn(n, n, 1.0, rng);
+            let mut ab = AdjointBroyden::new(n, 32, MemoryPolicy::Freeze);
+            for _ in 0..5 {
+                let sigma = rng.normal_vec(n);
+                let mut sigma_j = vec![0.0; n];
+                j.matvec_t(&sigma, &mut sigma_j);
+                ab.update(&sigma, &sigma_j);
+            }
+            let x = rng.normal_vec(n);
+            let y = rng.normal_vec(n);
+            let lhs = dot(&ab.apply_vec(&x), &y);
+            let rhs = dot(&x, &ab.apply_t_vec(&y));
+            prop::ensure_close(lhs, rhs, 1e-10, "adjoint identity")
+        });
+    }
+
+    #[test]
+    fn update_ws_matches_update() {
+        prop::check("adjbroyden-update-ws", 8, |rng| {
+            let n = 6;
+            let j = DMat::randn(n, n, 1.0, rng);
+            let mut a = AdjointBroyden::new(n, 16, MemoryPolicy::Freeze);
+            let mut b = AdjointBroyden::new(n, 16, MemoryPolicy::Freeze);
+            let mut ws = Workspace::new();
+            for _ in 0..5 {
+                let sigma = rng.normal_vec(n);
+                let mut sigma_j = vec![0.0; n];
+                j.matvec_t(&sigma, &mut sigma_j);
+                let ra = a.update(&sigma, &sigma_j);
+                let rb = b.update_ws(&sigma, &sigma_j, &mut ws);
+                prop::ensure(ra == rb, "same accept/skip decision")?;
+            }
+            let x = rng.normal_vec(n);
+            prop::ensure_close_vec(&a.apply_vec(&x), &b.apply_vec(&x), 1e-14, "same operator")
+        });
+    }
+
+    #[test]
     fn inverse_tracks_direct() {
         // H must equal B⁻¹ exactly (Sherman–Morrison bookkeeping).
         prop::check("adjbroyden-inverse", 15, |rng| {
@@ -192,6 +296,35 @@ mod tests {
             let mut want = vec![0.0; n];
             b_inv.matvec(&x, &mut want);
             prop::ensure_close_vec(&ab.apply_vec(&x), &want, 1e-6, "H = B⁻¹")
+        });
+    }
+
+    #[test]
+    fn apply_multi_matches_columnwise() {
+        prop::check("adjbroyden-multi", 8, |rng| {
+            let n = 6;
+            let k = 3;
+            let j = DMat::randn(n, n, 1.0, rng);
+            let mut ab = AdjointBroyden::new(n, 16, MemoryPolicy::Freeze);
+            for _ in 0..5 {
+                let sigma = rng.normal_vec(n);
+                let mut sigma_j = vec![0.0; n];
+                j.matvec_t(&sigma, &mut sigma_j);
+                ab.update(&sigma, &sigma_j);
+            }
+            let xs: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+            let mut got = vec![0.0; k * n];
+            ab.apply_multi(&xs, &mut got);
+            for r in 0..k {
+                let want = ab.apply_vec(&xs[r * n..(r + 1) * n]);
+                prop::ensure_close_vec(&got[r * n..(r + 1) * n], &want, 1e-12, "multi col")?;
+            }
+            ab.apply_t_multi(&xs, &mut got);
+            for r in 0..k {
+                let want = ab.apply_t_vec(&xs[r * n..(r + 1) * n]);
+                prop::ensure_close_vec(&got[r * n..(r + 1) * n], &want, 1e-12, "multi_t col")?;
+            }
+            Ok(())
         });
     }
 

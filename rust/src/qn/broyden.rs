@@ -11,9 +11,15 @@
 //! (the forward step direction) and `Hᵀ x` (the SHINE backward direction)
 //! are O(m·d). The matrix this represents satisfies the secant condition
 //! `H_{n+1} y_n = s_n` — tested below against the dense update.
+//!
+//! The hot-path entry points are [`BroydenInverse::update_ws`] and
+//! [`BroydenInverse::direction_ws`]: all scratch comes from a
+//! [`Workspace`], and the new factor is written straight into the panel
+//! slots, so a solver iteration performs no heap allocation.
 
 use crate::linalg::vecops::{dot, nrm2};
 use crate::qn::low_rank::LowRank;
+use crate::qn::workspace::Workspace;
 use crate::qn::{InvOp, MemoryPolicy};
 
 #[derive(Clone, Debug)]
@@ -52,22 +58,37 @@ impl BroydenInverse {
         self.h.rank()
     }
 
-    /// Update with a step pair (s, y) = (z⁺ − z, g⁺ − g).
-    /// Returns false if the update was skipped (tiny denominator or frozen).
-    pub fn update(&mut self, s: &[f64], y: &[f64]) -> bool {
-        let hy = self.h.apply_vec(y);
-        let sth = self.h.apply_t_vec(s); // vᵀ = sᵀH  ⇔  v = Hᵀs
+    /// Update with a step pair (s, y) = (z⁺ − z, g⁺ − g), drawing scratch
+    /// from `ws`. Returns false if the update was skipped (tiny denominator
+    /// or frozen). Allocation-free once `ws` is warm.
+    pub fn update_ws(&mut self, s: &[f64], y: &[f64], ws: &mut Workspace) -> bool {
+        let d = s.len();
+        let mut hy = ws.take(d);
+        self.h.apply_into(y, &mut hy, ws);
         let denom = dot(s, &hy);
         // Scale-aware guard: compare against ‖s‖·‖Hy‖.
         if denom.abs() <= self.denom_eps * (nrm2(s) * nrm2(&hy)).max(1e-300) {
             self.skipped += 1;
+            ws.give(hy);
             return false;
         }
-        let mut u = vec![0.0; s.len()];
-        for i in 0..s.len() {
-            u[i] = (s[i] - hy[i]) / denom;
-        }
-        self.h.push(u, sth)
+        let mut sth = ws.take(d);
+        self.h.apply_t_into(s, &mut sth, ws); // vᵀ = sᵀH  ⇔  v = Hᵀs
+        let pushed = self.h.push_with(|u_slot, v_slot| {
+            for i in 0..d {
+                u_slot[i] = (s[i] - hy[i]) / denom;
+            }
+            v_slot.copy_from_slice(&sth);
+        });
+        ws.give(hy);
+        ws.give(sth);
+        pushed
+    }
+
+    /// Allocating convenience wrapper over [`BroydenInverse::update_ws`].
+    pub fn update(&mut self, s: &[f64], y: &[f64]) -> bool {
+        let mut ws = Workspace::new();
+        self.update_ws(s, y, &mut ws)
     }
 
     /// The inverse estimate (for SHINE / refine warm starts).
@@ -86,6 +107,14 @@ impl BroydenInverse {
             *v = -*v;
         }
     }
+
+    /// Step direction p = −H g with workspace scratch (allocation-free).
+    pub fn direction_ws(&self, g: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        self.h.apply_into(g, out, ws);
+        for v in out.iter_mut() {
+            *v = -*v;
+        }
+    }
 }
 
 impl InvOp for BroydenInverse {
@@ -97,6 +126,18 @@ impl InvOp for BroydenInverse {
     }
     fn apply_t(&self, x: &[f64], out: &mut [f64]) {
         self.h.apply_t(x, out)
+    }
+    fn apply_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        self.h.apply_into(x, out, ws)
+    }
+    fn apply_t_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        self.h.apply_t_into(x, out, ws)
+    }
+    fn apply_multi(&self, xs: &[f64], out: &mut [f64]) {
+        self.h.apply_multi(xs, out)
+    }
+    fn apply_t_multi(&self, xs: &[f64], out: &mut [f64]) {
+        self.h.apply_t_multi(xs, out)
     }
 }
 
@@ -120,6 +161,25 @@ mod tests {
                 }
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn update_ws_matches_update() {
+        prop::check("broyden-update-ws", 10, |rng| {
+            let n = 6;
+            let mut a = BroydenInverse::new(n, 16, MemoryPolicy::Freeze);
+            let mut b = BroydenInverse::new(n, 16, MemoryPolicy::Freeze);
+            let mut ws = Workspace::new();
+            for _ in 0..5 {
+                let s = rng.normal_vec(n);
+                let y = rng.normal_vec(n);
+                let ra = a.update(&s, &y);
+                let rb = b.update_ws(&s, &y, &mut ws);
+                prop::ensure(ra == rb, "same accept/skip decision")?;
+            }
+            let x = rng.normal_vec(n);
+            prop::ensure_close_vec(&a.apply_vec(&x), &b.apply_vec(&x), 1e-14, "same operator")
         });
     }
 
@@ -187,6 +247,31 @@ mod tests {
             let lhs = dot(&b.apply_vec(&x), &y);
             let rhs = dot(&x, &b.apply_t_vec(&y));
             prop::ensure_close(lhs, rhs, 1e-10, "adjoint identity")
+        });
+    }
+
+    #[test]
+    fn apply_multi_matches_columnwise() {
+        prop::check("broyden-multi", 8, |rng| {
+            let n = 7;
+            let k = 3;
+            let mut b = BroydenInverse::new(n, 16, MemoryPolicy::Freeze);
+            for _ in 0..5 {
+                b.update(&rng.normal_vec(n), &rng.normal_vec(n));
+            }
+            let xs: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+            let mut got = vec![0.0; k * n];
+            b.apply_multi(&xs, &mut got);
+            for r in 0..k {
+                let want = b.apply_vec(&xs[r * n..(r + 1) * n]);
+                prop::ensure_close_vec(&got[r * n..(r + 1) * n], &want, 1e-12, "multi col")?;
+            }
+            b.apply_t_multi(&xs, &mut got);
+            for r in 0..k {
+                let want = b.apply_t_vec(&xs[r * n..(r + 1) * n]);
+                prop::ensure_close_vec(&got[r * n..(r + 1) * n], &want, 1e-12, "multi_t col")?;
+            }
+            Ok(())
         });
     }
 }

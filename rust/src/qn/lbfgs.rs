@@ -12,20 +12,17 @@
 //! and `ŷ_n = g(z_n + e_n) − g(z_n)` every `M` regular updates — improving
 //! the approximation of `H` in precisely the direction the hypergradient
 //! formula (3) needs. Extra updates change `H` but not the iterate `z_n`.
+//!
+//! The (s, y) history lives in a [`FactorPanel`] (u-rows = s, v-rows = y)
+//! with per-slot `ρ` and OPA flags in parallel rings, so accepting an update
+//! writes panel slots in place (O(1) eviction, zero allocation) and the
+//! two-loop recursion streams contiguous rows. [`LbfgsInverse::apply_into`]
+//! draws its two scratch vectors from a [`Workspace`].
 
-use crate::linalg::vecops::dot;
+use crate::linalg::vecops::{axpy, dot, scale};
+use crate::qn::panel::FactorPanel;
+use crate::qn::workspace::Workspace;
 use crate::qn::InvOp;
-use std::collections::VecDeque;
-
-#[derive(Clone, Debug)]
-struct Pair {
-    s: Vec<f64>,
-    y: Vec<f64>,
-    rho: f64,
-    /// true if this is an OPA extra update (kept distinct for diagnostics
-    /// and for the paper's eviction rule which counts all updates).
-    extra: bool,
-}
 
 /// Configuration of the OPA extra updates (Algorithm LBFGS inputs).
 #[derive(Clone, Copy, Debug)]
@@ -45,8 +42,13 @@ impl Default for OpaConfig {
 #[derive(Clone, Debug)]
 pub struct LbfgsInverse {
     dim: usize,
-    max_mem: usize,
-    pairs: VecDeque<Pair>,
+    /// (s, y) pair history: panel u-rows are s, v-rows are y.
+    pairs: FactorPanel,
+    /// ρ = 1/(yᵀs) per pair, indexed by *physical* panel row.
+    rho: Vec<f64>,
+    /// OPA-extra flag per pair, indexed by physical panel row (kept distinct
+    /// for diagnostics; the paper's eviction rule counts all updates).
+    extra: Vec<bool>,
     /// H₀ = gamma·I. The paper's theory takes B₀ = I (gamma = 1); classical
     /// L-BFGS uses the Barzilai–Borwein-style scaling. Both are supported;
     /// SHINE experiments default to 1 to match the theorems.
@@ -62,8 +64,9 @@ impl LbfgsInverse {
     pub fn new(dim: usize, max_mem: usize) -> Self {
         LbfgsInverse {
             dim,
-            max_mem,
-            pairs: VecDeque::new(),
+            pairs: FactorPanel::new(dim, max_mem),
+            rho: vec![0.0; max_mem],
+            extra: vec![false; max_mem],
             gamma: 1.0,
             curvature_eps: 1e-12,
             skipped: 0,
@@ -75,69 +78,64 @@ impl LbfgsInverse {
         self.pairs.len()
     }
 
-    fn push(&mut self, s: Vec<f64>, y: Vec<f64>, extra: bool) -> bool {
-        let sy = dot(&s, &y);
+    fn push(&mut self, s: &[f64], y: &[f64], extra: bool) -> bool {
+        let sy = dot(s, y);
         let guard = self.curvature_eps
-            * (crate::linalg::vecops::nrm2(&s) * crate::linalg::vecops::nrm2(&y)).max(1e-300);
+            * (crate::linalg::vecops::nrm2(s) * crate::linalg::vecops::nrm2(y)).max(1e-300);
         if sy <= guard {
             self.skipped += 1;
             return false;
         }
-        if self.pairs.len() >= self.max_mem {
-            // Paper's rule: "if n ≥ L remove update n − L" — drop the oldest.
-            self.pairs.pop_front();
-        }
+        // Paper's rule: "if n ≥ L remove update n − L" — the panel ring
+        // drops the oldest pair in O(1) when full.
+        let (phys, s_slot, y_slot) = self.pairs.advance();
+        s_slot.copy_from_slice(s);
+        y_slot.copy_from_slice(y);
+        self.rho[phys] = 1.0 / sy;
+        self.extra[phys] = extra;
         if extra {
             self.n_extra += 1;
         }
-        self.pairs.push_back(Pair {
-            rho: 1.0 / sy,
-            s,
-            y,
-            extra,
-        });
         true
     }
 
-    /// Regular update from an accepted step.
+    /// Regular update from an accepted step. Allocation-free: the pair is
+    /// copied straight into the panel slots.
     pub fn update(&mut self, s: &[f64], y: &[f64]) -> bool {
-        self.push(s.to_vec(), y.to_vec(), false)
+        self.push(s, y, false)
     }
 
     /// OPA extra update from the pair (e_n, ŷ_n). The caller (the solver
     /// driving g evaluations) computes ŷ_n = g(z+e) − g(z).
     pub fn update_extra(&mut self, e: &[f64], y_hat: &[f64]) -> bool {
-        self.push(e.to_vec(), y_hat.to_vec(), true)
+        self.push(e, y_hat, true)
     }
 
     /// Number of stored pairs that are OPA extras.
     pub fn extra_pairs_stored(&self) -> usize {
-        self.pairs.iter().filter(|p| p.extra).count()
+        (0..self.pairs.len())
+            .filter(|&i| self.extra[self.pairs.phys(i)])
+            .count()
     }
 
-    /// Two-loop recursion: out = H x.
-    fn two_loop(&self, x: &[f64], out: &mut [f64]) {
+    /// Two-loop recursion: out = H x, with `q`/`alphas` scratch provided by
+    /// the caller (q: dim, alphas: ≥ rank).
+    fn two_loop_into(&self, x: &[f64], out: &mut [f64], q: &mut [f64], alphas: &mut [f64]) {
         let m = self.pairs.len();
-        let mut q = x.to_vec();
-        let mut alphas = vec![0.0; m];
-        for (i, p) in self.pairs.iter().enumerate().rev() {
-            let alpha = p.rho * dot(&p.s, &q);
+        q.copy_from_slice(x);
+        for i in (0..m).rev() {
+            let (s, y) = self.pairs.row(i);
+            let alpha = self.rho[self.pairs.phys(i)] * dot(s, q);
             alphas[i] = alpha;
-            for k in 0..self.dim {
-                q[k] -= alpha * p.y[k];
-            }
+            axpy(-alpha, y, q);
         }
-        for v in q.iter_mut() {
-            *v *= self.gamma;
+        scale(self.gamma, q);
+        for i in 0..m {
+            let (s, y) = self.pairs.row(i);
+            let beta = self.rho[self.pairs.phys(i)] * dot(y, q);
+            axpy(alphas[i] - beta, s, q);
         }
-        for (i, p) in self.pairs.iter().enumerate() {
-            let beta = p.rho * dot(&p.y, &q);
-            let coeff = alphas[i] - beta;
-            for k in 0..self.dim {
-                q[k] += coeff * p.s[k];
-            }
-        }
-        out.copy_from_slice(&q);
+        out.copy_from_slice(q);
     }
 }
 
@@ -146,11 +144,25 @@ impl InvOp for LbfgsInverse {
         self.dim
     }
     fn apply(&self, x: &[f64], out: &mut [f64]) {
-        self.two_loop(x, out)
+        let mut q = vec![0.0; self.dim];
+        let mut alphas = vec![0.0; self.pairs.len()];
+        self.two_loop_into(x, out, &mut q, &mut alphas);
     }
     /// BFGS inverse estimates are symmetric: Hᵀ = H.
     fn apply_t(&self, x: &[f64], out: &mut [f64]) {
-        self.two_loop(x, out)
+        self.apply(x, out);
+    }
+    fn apply_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        let mut q = ws.take(self.dim);
+        // Power-of-two-quantized take keeps the workspace buffer size stable
+        // while the history fills.
+        let mut alphas = ws.take(self.pairs.coeff_len());
+        self.two_loop_into(x, out, &mut q, &mut alphas);
+        ws.give(q);
+        ws.give(alphas);
+    }
+    fn apply_t_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        self.apply_into(x, out, ws);
     }
 }
 
@@ -231,6 +243,80 @@ mod tests {
     }
 
     #[test]
+    fn adjoint_identity() {
+        // ⟨Hx, y⟩ == ⟨x, Hᵀy⟩ — trivially from symmetry for BFGS, but the
+        // property pins the InvOp contract for all qN families alike.
+        prop::check("lbfgs-adjoint", 15, |rng| {
+            let n = 4 + rng.below(10);
+            let mut lb = LbfgsInverse::new(n, 8);
+            for _ in 0..6 {
+                let s = rng.normal_vec(n);
+                let mut y = rng.normal_vec(n);
+                if dot(&s, &y) <= 0.0 {
+                    for v in y.iter_mut() {
+                        *v = -*v;
+                    }
+                }
+                lb.update(&s, &y);
+            }
+            let x = rng.normal_vec(n);
+            let y = rng.normal_vec(n);
+            let lhs = dot(&lb.apply_vec(&x), &y);
+            let rhs = dot(&x, &lb.apply_t_vec(&y));
+            prop::ensure_close(lhs, rhs, 1e-10, "adjoint identity")
+        });
+    }
+
+    #[test]
+    fn apply_into_matches_apply() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        let n = 10;
+        let mut lb = LbfgsInverse::new(n, 4);
+        for _ in 0..7 {
+            let s = rng.normal_vec(n);
+            let mut y = rng.normal_vec(n);
+            if dot(&s, &y) <= 0.0 {
+                for v in y.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            lb.update(&s, &y);
+        }
+        let x = rng.normal_vec(n);
+        let mut ws = Workspace::new();
+        let mut got = vec![0.0; n];
+        lb.apply_into(&x, &mut got, &mut ws);
+        assert_eq!(got, lb.apply_vec(&x));
+    }
+
+    #[test]
+    fn apply_multi_matches_columnwise() {
+        prop::check("lbfgs-multi", 8, |rng| {
+            let n = 6;
+            let k = 4;
+            let mut lb = LbfgsInverse::new(n, 8);
+            for _ in 0..5 {
+                let s = rng.normal_vec(n);
+                let mut y = rng.normal_vec(n);
+                if dot(&s, &y) <= 0.0 {
+                    for v in y.iter_mut() {
+                        *v = -*v;
+                    }
+                }
+                lb.update(&s, &y);
+            }
+            let xs: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+            let mut got = vec![0.0; k * n];
+            lb.apply_multi(&xs, &mut got);
+            for r in 0..k {
+                let want = lb.apply_vec(&xs[r * n..(r + 1) * n]);
+                prop::ensure_close_vec(&got[r * n..(r + 1) * n], &want, 1e-12, "multi col")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn rejects_nonpositive_curvature() {
         let mut lb = LbfgsInverse::new(3, 8);
         let s = vec![1.0, 0.0, 0.0];
@@ -272,6 +358,39 @@ mod tests {
             lb.update(&s, &y);
         }
         assert_eq!(lb.rank(), 2);
+    }
+
+    #[test]
+    fn eviction_matches_dense_on_survivors() {
+        // The ring-buffer eviction must behave exactly like rebuilding the
+        // estimate from the newest `mem` accepted pairs.
+        prop::check("lbfgs-evict-dense", 10, |rng| {
+            let n = 5;
+            let mem = 3;
+            let mut lb = LbfgsInverse::new(n, mem);
+            let mut accepted: Vec<(Vec<f64>, Vec<f64>)> = Vec::new();
+            for _ in 0..8 {
+                let s = rng.normal_vec(n);
+                let mut y = rng.normal_vec(n);
+                if dot(&s, &y) <= 0.0 {
+                    for v in y.iter_mut() {
+                        *v = -*v;
+                    }
+                }
+                if lb.update(&s, &y) {
+                    accepted.push((s, y));
+                }
+            }
+            let start = accepted.len().saturating_sub(mem);
+            let mut h = DMat::eye(n);
+            for (s, y) in &accepted[start..] {
+                h = dense_bfgs_update(&h, s, y);
+            }
+            let x = rng.normal_vec(n);
+            let mut want = vec![0.0; n];
+            h.matvec(&x, &mut want);
+            prop::ensure_close_vec(&lb.apply_vec(&x), &want, 1e-8, "evicted two-loop vs dense")
+        });
     }
 
     #[test]

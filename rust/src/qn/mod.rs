@@ -13,16 +13,37 @@
 //!   extra updates (Algorithm LBFGS, Theorem 3),
 //! * [`adjoint_broyden`] — Adjoint Broyden à la Schlenkrich et al. with the
 //!   OPA secant (7)/(8) (Theorem 4).
+//!
+//! # Storage and execution architecture
+//!
+//! All three families store their rank-one factors in a
+//! [`panel::FactorPanel`]: two flat row-major `m × d` panels behind a ring
+//! buffer, so applying `H`/`Hᵀ` is a pair of contiguous panel sweeps
+//! (`panel_gemv` → `panel_gemv_t` in [`crate::linalg::vecops`], thread-
+//! parallel above a size threshold) and eviction is an O(1) ring rotation.
+//! Updates write into panel slots in place, and every scratch vector a
+//! solver iteration needs comes from a [`workspace::Workspace`] arena —
+//! after warm-up, the hot loops of `broyden_solve` and friends perform zero
+//! heap allocations (enforced by the counting-allocator test in
+//! `rust/tests/qn_alloc.rs`).
+//!
+//! For serving many cotangents at once, [`InvOp`] also exposes multi-RHS
+//! application (`apply_multi`/`apply_t_multi`): a whole batch of SHINE
+//! backward directions is computed in one panel sweep.
 
 pub mod adjoint_broyden;
 pub mod broyden;
 pub mod lbfgs;
 pub mod low_rank;
+pub mod panel;
+pub mod workspace;
 
 pub use adjoint_broyden::AdjointBroyden;
 pub use broyden::BroydenInverse;
 pub use lbfgs::LbfgsInverse;
 pub use low_rank::LowRank;
+pub use panel::FactorPanel;
+pub use workspace::Workspace;
 
 /// An estimate of the *inverse* Jacobian/Hessian that can be applied to
 /// vectors from both sides. This is what the forward pass hands to the
@@ -34,6 +55,42 @@ pub trait InvOp {
     fn apply(&self, x: &[f64], out: &mut [f64]);
     /// out = Hᵀ x  (approximates J⁻ᵀ x; the direction eq. (3) needs)
     fn apply_t(&self, x: &[f64], out: &mut [f64]);
+
+    /// out = H x, drawing every scratch buffer from `ws` — allocation-free
+    /// after the workspace has warmed up. Implementations that need no
+    /// scratch fall through to [`InvOp::apply`].
+    fn apply_into(&self, x: &[f64], out: &mut [f64], _ws: &mut Workspace) {
+        self.apply(x, out);
+    }
+
+    /// out = Hᵀ x with workspace-provided scratch (see [`InvOp::apply_into`]).
+    fn apply_t_into(&self, x: &[f64], out: &mut [f64], _ws: &mut Workspace) {
+        self.apply_t(x, out);
+    }
+
+    /// Apply `H` to `k = xs.len() / dim()` right-hand sides stored row-major
+    /// (`k × d`) into `out` (same layout). The default loops column by
+    /// column; panel-backed implementations override this with a single
+    /// blocked sweep so a batch of SHINE cotangents costs one pass over the
+    /// factors.
+    fn apply_multi(&self, xs: &[f64], out: &mut [f64]) {
+        let d = self.dim();
+        debug_assert_eq!(xs.len() % d, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        for (x, o) in xs.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+            self.apply(x, o);
+        }
+    }
+
+    /// Multi-RHS `Hᵀ` application (see [`InvOp::apply_multi`]).
+    fn apply_t_multi(&self, xs: &[f64], out: &mut [f64]) {
+        let d = self.dim();
+        debug_assert_eq!(xs.len() % d, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        for (x, o) in xs.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+            self.apply_t(x, o);
+        }
+    }
 
     /// Convenience allocating forms.
     fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
@@ -84,5 +141,25 @@ mod tests {
         assert_eq!(id.apply_vec(&x), x.to_vec());
         assert_eq!(id.apply_t_vec(&x), x.to_vec());
         assert_eq!(id.dim(), 3);
+    }
+
+    #[test]
+    fn default_multi_loops_columns() {
+        let id = IdentityOp(2);
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let mut out = [0.0; 4];
+        id.apply_multi(&xs, &mut out);
+        assert_eq!(out, xs);
+        id.apply_t_multi(&xs, &mut out);
+        assert_eq!(out, xs);
+    }
+
+    #[test]
+    fn default_into_falls_through() {
+        let id = IdentityOp(3);
+        let mut ws = Workspace::new();
+        let mut out = [0.0; 3];
+        id.apply_into(&[1.0, 2.0, 3.0], &mut out, &mut ws);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
     }
 }

@@ -1,0 +1,333 @@
+//! Contiguous factor storage for identity-plus-low-rank operators.
+//!
+//! [`FactorPanel`] keeps the rank-one factors of `H = I + Σᵢ uᵢ vᵢᵀ` in two
+//! flat row-major panels (`m × d` each) backed by a ring buffer:
+//!
+//! * **apply is one linear sweep** — the kernels in
+//!   [`crate::linalg::vecops`] (`panel_gemv` / `panel_gemv_t`) stream the
+//!   panels front to back, so the O(m·d) low-rank application that SHINE's
+//!   speed claim rests on (PAPER §2.1, Fig. 3) runs at memory bandwidth
+//!   instead of chasing `Vec<Vec<f64>>` pointers;
+//! * **evict is O(1)** — replacing the oldest factor overwrites one row and
+//!   bumps the ring head, where the old representation paid an O(m·d)
+//!   `Vec::remove(0)` memmove per eviction;
+//! * **pushes are allocation-free at steady state** — storage grows
+//!   geometrically up to the fixed capacity while the rank's high-water mark
+//!   rises; once it stops rising (or the ring is full), pushing factors
+//!   inside a solver loop never touches the allocator.
+//!
+//! Invariant: `head != 0` only once the ring is full (`len == cap`), so the
+//! *physical* rows `0..len` are always exactly the live factors. Summation
+//! order does not matter for `H x`, which lets the kernels ignore the ring
+//! structure entirely; logical (oldest → newest) order is available through
+//! [`FactorPanel::row`] / [`FactorPanel::phys`] for the update rules that
+//! need it (L-BFGS two-loop recursion).
+
+/// Flat row-major storage of up to `cap` factor pairs `(uᵢ, vᵢ)` of
+/// dimension `dim`. Backing storage grows geometrically up to `cap` as rows
+/// are pushed (callers routinely pass generous caps like `max_iters + 64`,
+/// which would be gigabytes if allocated eagerly at DEQ-scale `dim`);
+/// once the high-water mark is reached, pushes never allocate again.
+#[derive(Clone, Debug)]
+pub struct FactorPanel {
+    dim: usize,
+    cap: usize,
+    len: usize,
+    /// Ring start: logical row 0 lives at physical row `head`.
+    head: usize,
+    /// Row-major panel of u-factors (allocated rows × dim).
+    u: Vec<f64>,
+    /// Row-major panel of v-factors (allocated rows × dim).
+    v: Vec<f64>,
+}
+
+impl FactorPanel {
+    /// Create a panel for up to `cap` factors of dimension `dim`.
+    pub fn new(dim: usize, cap: usize) -> FactorPanel {
+        FactorPanel {
+            dim,
+            cap,
+            len: 0,
+            head: 0,
+            u: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    /// Scratch size for a coefficient buffer covering every live row, quantized
+    /// to powers of two (bounded by `cap`) so repeated workspace takes keep a
+    /// stable size while the rank grows.
+    pub fn coeff_len(&self) -> usize {
+        self.len.next_power_of_two().min(self.cap)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.cap
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.head = 0;
+    }
+
+    /// Physical row index of logical row `i` (0 = oldest).
+    #[inline]
+    pub fn phys(&self, i: usize) -> usize {
+        debug_assert!(i < self.len);
+        let p = self.head + i;
+        if p >= self.cap {
+            p - self.cap
+        } else {
+            p
+        }
+    }
+
+    /// Logical row `i` (0 = oldest, `len-1` = newest) as `(uᵢ, vᵢ)` slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[f64], &[f64]) {
+        let p = self.phys(i) * self.dim;
+        (&self.u[p..p + self.dim], &self.v[p..p + self.dim])
+    }
+
+    /// Iterate rows in logical (oldest → newest) order.
+    pub fn rows(&self) -> impl Iterator<Item = (&[f64], &[f64])> + '_ {
+        (0..self.len).map(move |i| self.row(i))
+    }
+
+    /// The live portion of the u-panel as one contiguous `len × dim` block
+    /// (physical order — valid for order-independent sweeps only).
+    #[inline]
+    pub fn u_flat(&self) -> &[f64] {
+        &self.u[..self.len * self.dim]
+    }
+
+    /// The live portion of the v-panel as one contiguous `len × dim` block.
+    #[inline]
+    pub fn v_flat(&self) -> &[f64] {
+        &self.v[..self.len * self.dim]
+    }
+
+    /// Claim the slot for a new newest factor, evicting the oldest in O(1)
+    /// when full. Returns `(physical_row, u_slot, v_slot)`; the caller fills
+    /// the slots in place. Allocation only happens while the storage
+    /// high-water mark is still rising (geometric growth, bounded by `cap`);
+    /// at steady state — ring full, or rank no longer growing — this never
+    /// touches the allocator.
+    pub fn advance(&mut self) -> (usize, &mut [f64], &mut [f64]) {
+        assert!(self.cap > 0, "FactorPanel::advance on zero-capacity panel");
+        let phys = if self.len < self.cap {
+            // Ring is not full: head is still 0, rows are 0..len.
+            debug_assert_eq!(self.head, 0);
+            let p = self.len;
+            self.len += 1;
+            p
+        } else {
+            // Overwrite the oldest row and rotate the ring head.
+            let p = self.head;
+            self.head = if self.head + 1 >= self.cap {
+                0
+            } else {
+                self.head + 1
+            };
+            p
+        };
+        let need = (phys + 1) * self.dim;
+        if self.u.len() < need {
+            let have_rows = if self.dim == 0 { 0 } else { self.u.len() / self.dim };
+            let new_rows = (have_rows * 2).max(4).max(phys + 1).min(self.cap);
+            self.u.resize(new_rows * self.dim, 0.0);
+            self.v.resize(new_rows * self.dim, 0.0);
+        }
+        let o = phys * self.dim;
+        (
+            phys,
+            &mut self.u[o..o + self.dim],
+            &mut self.v[o..o + self.dim],
+        )
+    }
+
+    /// Copy-push a factor pair (convenience over [`FactorPanel::advance`]).
+    pub fn push(&mut self, u: &[f64], v: &[f64]) {
+        debug_assert_eq!(u.len(), self.dim);
+        debug_assert_eq!(v.len(), self.dim);
+        let (_, us, vs) = self.advance();
+        us.copy_from_slice(u);
+        vs.copy_from_slice(v);
+    }
+
+    /// Change the capacity in place. Growing an unwrapped ring (`head == 0`)
+    /// is O(1) — storage already grows lazily on demand; shrinking, or
+    /// growing after the ring has wrapped, falls back to an O(m·d) rebuild
+    /// that keeps the newest factors.
+    pub fn resize_cap(&mut self, cap: usize) {
+        if cap == self.cap {
+            return;
+        }
+        if cap > self.cap && self.head == 0 {
+            self.cap = cap;
+            return;
+        }
+        *self = self.with_cap(cap);
+    }
+
+    /// Rebuild into a panel of capacity `cap`, keeping the newest
+    /// `min(len, cap)` factors in logical order. O(m·d) — used only when a
+    /// strategy resizes its memory budget, never inside a solver loop.
+    pub fn with_cap(&self, cap: usize) -> FactorPanel {
+        let mut out = FactorPanel::new(self.dim, cap);
+        let keep = self.len.min(cap);
+        for i in (self.len - keep)..self.len {
+            let (u, v) = self.row(i);
+            out.push(u, v);
+        }
+        out
+    }
+
+    /// Swap the u/v panels in place — the zero-copy transpose
+    /// `(I + Σ u vᵀ)ᵀ = I + Σ v uᵀ`.
+    pub fn swap_uv(&mut self) {
+        std::mem::swap(&mut self.u, &mut self.v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rowvec(p: &FactorPanel, i: usize) -> (Vec<f64>, Vec<f64>) {
+        let (u, v) = p.row(i);
+        (u.to_vec(), v.to_vec())
+    }
+
+    #[test]
+    fn push_and_logical_order() {
+        let mut p = FactorPanel::new(2, 3);
+        assert!(p.is_empty());
+        for k in 0..3 {
+            p.push(&[k as f64, 0.0], &[0.0, k as f64]);
+        }
+        assert!(p.is_full());
+        for k in 0..3 {
+            let (u, v) = rowvec(&p, k);
+            assert_eq!(u, vec![k as f64, 0.0]);
+            assert_eq!(v, vec![0.0, k as f64]);
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_in_place() {
+        let mut p = FactorPanel::new(1, 2);
+        p.push(&[1.0], &[10.0]);
+        p.push(&[2.0], &[20.0]);
+        p.push(&[3.0], &[30.0]); // evicts 1.0
+        assert_eq!(p.len(), 2);
+        assert_eq!(rowvec(&p, 0).0, vec![2.0]);
+        assert_eq!(rowvec(&p, 1).0, vec![3.0]);
+        p.push(&[4.0], &[40.0]); // evicts 2.0
+        assert_eq!(rowvec(&p, 0).0, vec![3.0]);
+        assert_eq!(rowvec(&p, 1).0, vec![4.0]);
+    }
+
+    #[test]
+    fn flat_views_cover_live_rows() {
+        let mut p = FactorPanel::new(2, 2);
+        p.push(&[1.0, 2.0], &[5.0, 6.0]);
+        assert_eq!(p.u_flat(), &[1.0, 2.0]);
+        p.push(&[3.0, 4.0], &[7.0, 8.0]);
+        p.push(&[9.0, 9.0], &[9.0, 9.0]); // wraps: physical order now mixed
+        assert_eq!(p.u_flat().len(), 4);
+        // Sum over the flat view equals sum over logical rows.
+        let flat_sum: f64 = p.u_flat().iter().sum();
+        let logical_sum: f64 = p.rows().map(|(u, _)| u.iter().sum::<f64>()).sum();
+        assert_eq!(flat_sum, logical_sum);
+    }
+
+    #[test]
+    fn with_cap_keeps_newest() {
+        let mut p = FactorPanel::new(1, 4);
+        for k in 0..4 {
+            p.push(&[k as f64], &[k as f64]);
+        }
+        let small = p.with_cap(2);
+        assert_eq!(small.len(), 2);
+        assert_eq!(rowvec(&small, 0).0, vec![2.0]);
+        assert_eq!(rowvec(&small, 1).0, vec![3.0]);
+        let big = p.with_cap(8);
+        assert_eq!(big.len(), 4);
+        assert_eq!(rowvec(&big, 0).0, vec![0.0]);
+    }
+
+    #[test]
+    fn resize_cap_grow_and_shrink() {
+        // Unwrapped ring: grow is in place, factors and order untouched.
+        let mut p = FactorPanel::new(1, 2);
+        p.push(&[1.0], &[1.0]);
+        p.push(&[2.0], &[2.0]);
+        p.resize_cap(5);
+        assert_eq!(p.cap(), 5);
+        assert_eq!(p.len(), 2);
+        p.push(&[3.0], &[3.0]);
+        assert_eq!(
+            p.rows().map(|(u, _)| u[0]).collect::<Vec<_>>(),
+            vec![1.0, 2.0, 3.0]
+        );
+        // Wrapped ring: grow rebuilds, keeping logical order.
+        let mut w = FactorPanel::new(1, 2);
+        for k in 0..3 {
+            w.push(&[k as f64], &[k as f64]); // wraps: head != 0
+        }
+        w.resize_cap(4);
+        assert_eq!(w.len(), 2);
+        assert_eq!(
+            w.rows().map(|(u, _)| u[0]).collect::<Vec<_>>(),
+            vec![1.0, 2.0]
+        );
+        w.push(&[9.0], &[9.0]);
+        assert_eq!(w.len(), 3);
+        // Shrink keeps the newest.
+        w.resize_cap(2);
+        assert_eq!(
+            w.rows().map(|(u, _)| u[0]).collect::<Vec<_>>(),
+            vec![2.0, 9.0]
+        );
+    }
+
+    #[test]
+    fn swap_uv_transposes() {
+        let mut p = FactorPanel::new(2, 2);
+        p.push(&[1.0, 2.0], &[3.0, 4.0]);
+        p.swap_uv();
+        let (u, v) = p.row(0);
+        assert_eq!(u, &[3.0, 4.0]);
+        assert_eq!(v, &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn advance_returns_fillable_slots() {
+        let mut p = FactorPanel::new(3, 1);
+        {
+            let (phys, us, vs) = p.advance();
+            assert_eq!(phys, 0);
+            us.copy_from_slice(&[1.0, 2.0, 3.0]);
+            vs.copy_from_slice(&[4.0, 5.0, 6.0]);
+        }
+        assert_eq!(p.row(0).0, &[1.0, 2.0, 3.0]);
+        assert_eq!(p.row(0).1, &[4.0, 5.0, 6.0]);
+    }
+}

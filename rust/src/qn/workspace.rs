@@ -1,0 +1,80 @@
+//! Reusable scratch arena for the solver hot loops.
+//!
+//! Every quasi-Newton update and every solver iteration needs a handful of
+//! d-length temporaries (`Hy`, `Hᵀs`, step/secant differences, …). The seed
+//! implementation allocated fresh `Vec`s for each of them on every iteration;
+//! [`Workspace`] replaces that with a small LIFO pool of buffers that are
+//! checked out with [`Workspace::take`] and returned with
+//! [`Workspace::give`]. After the first few iterations the pool capacities
+//! stabilize and the loop performs **zero heap allocations** (verified by the
+//! counting-allocator test in `rust/tests/qn_alloc.rs`).
+//!
+//! The arena is deliberately dumb: buffers are plain `Vec<f64>` so callers
+//! keep full-slice ergonomics, `take` zero-fills (an O(n) memset, negligible
+//! next to the O(m·d) panel sweeps it brackets), and nothing is lifetime-
+//! tracked — forgetting a `give` merely re-allocates on the next `take`.
+
+/// LIFO pool of reusable `f64` buffers.
+#[derive(Clone, Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f64>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace {
+            pool: Vec::with_capacity(16),
+        }
+    }
+
+    /// Check out a zero-filled buffer of length `n`. Reuses the most
+    /// recently returned buffer when one is available (its capacity is kept
+    /// across uses, so steady-state takes never allocate).
+    pub fn take(&mut self, n: usize) -> Vec<f64> {
+        let mut b = self.pool.pop().unwrap_or_default();
+        b.clear();
+        b.resize(n, 0.0);
+        b
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn give(&mut self, b: Vec<f64>) {
+        self.pool.push(b);
+    }
+
+    /// Number of buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_sized() {
+        let mut ws = Workspace::new();
+        let mut b = ws.take(5);
+        assert_eq!(b, vec![0.0; 5]);
+        b[0] = 7.0;
+        ws.give(b);
+        // Reuse must be re-zeroed even though the buffer is recycled.
+        let b2 = ws.take(3);
+        assert_eq!(b2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn reuses_capacity() {
+        let mut ws = Workspace::new();
+        let b = ws.take(100);
+        let ptr = b.as_ptr();
+        ws.give(b);
+        let b2 = ws.take(50);
+        // Same backing allocation serves the smaller request.
+        assert_eq!(b2.as_ptr(), ptr);
+        assert_eq!(ws.pooled(), 0);
+        ws.give(b2);
+        assert_eq!(ws.pooled(), 1);
+    }
+}

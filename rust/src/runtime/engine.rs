@@ -5,6 +5,14 @@
 //! `HloModuleProto::from_text_file` and compiled once; subsequent calls
 //! reuse the compiled executable — compilation is O(100ms), execution is
 //! the hot path.
+//!
+//! The PJRT path requires the external `xla` crate (heavy, pulls the PJRT C
+//! API). It is gated behind the off-by-default `pjrt` cargo feature so the
+//! crate builds hermetically; without it [`Engine::load`] returns an error
+//! and every consumer (trainer, DEQ experiments, integration tests) skips
+//! gracefully, exactly as they do when the AOT artifacts are missing. To
+//! enable: add the `xla` dependency in Cargo.toml and build with
+//! `--features pjrt`.
 
 use crate::runtime::manifest::Manifest;
 use anyhow::{anyhow, Result};
@@ -53,7 +61,49 @@ impl Tensor {
     }
 }
 
+/// Stub engine compiled when the `pjrt` feature is off: keeps the full API
+/// surface so callers typecheck, but `load` always errors and downstream
+/// code takes its artifact-missing skip path.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    pub manifest: Manifest,
+    /// cumulative number of artifact executions (perf accounting)
+    pub calls: RefCell<HashMap<String, usize>>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always fails: the PJRT client is not compiled in.
+    pub fn load(_dir: &str) -> Result<Engine> {
+        Err(anyhow!(
+            "PJRT runtime not available: crate built without the `pjrt` feature \
+             (add the `xla` dependency and build with --features pjrt)"
+        ))
+    }
+
+    /// Default artifact directory (env override: SHINE_ARTIFACTS).
+    pub fn default_dir() -> String {
+        std::env::var("SHINE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+
+    pub fn warmup_variant(&self, _variant: &str) -> Result<()> {
+        Err(anyhow!("PJRT runtime not available (`pjrt` feature off)"))
+    }
+
+    pub fn call(&self, name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Err(anyhow!(
+            "PJRT runtime not available (`pjrt` feature off): cannot execute artifact '{name}'"
+        ))
+    }
+
+    /// Total artifact calls so far (per name).
+    pub fn call_counts(&self) -> HashMap<String, usize> {
+        self.calls.borrow().clone()
+    }
+}
+
 /// PJRT engine with executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
@@ -63,6 +113,7 @@ pub struct Engine {
     pub calls: RefCell<HashMap<String, usize>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load the manifest and connect the PJRT CPU client.
     pub fn load(dir: &str) -> Result<Engine> {

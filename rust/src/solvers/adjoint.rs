@@ -6,9 +6,15 @@
 //! evaluation — the extra cost the paper points out for this method ("we
 //! have to store the activations of g_θ(z) ... but also perform the
 //! vector-Jacobian product in addition to the function evaluation").
+//!
+//! Residuals and VJPs use the write-into convention (`g(z, out)`,
+//! `vjp(z, σ, out)`); the loop state is preallocated and the qN updates draw
+//! scratch from a [`Workspace`], mirroring
+//! [`crate::solvers::fixed_point::broyden_solve_ws`].
 
-use crate::linalg::vecops::{axpy, nrm2};
+use crate::linalg::vecops::{nrm2, sub};
 use crate::qn::adjoint_broyden::AdjointBroyden;
+use crate::qn::workspace::Workspace;
 use crate::qn::{InvOp, MemoryPolicy};
 use crate::solvers::Trace;
 use crate::util::timer::Stopwatch;
@@ -56,59 +62,80 @@ pub struct AdjointFpResult {
     pub n_vjps: usize,
 }
 
-/// Solve g(z) = 0 with Adjoint Broyden.
+/// Solve g(z) = 0 with Adjoint Broyden (owns its workspace).
 ///
-/// * `g` — residual evaluation.
-/// * `vjp` — `(z, σ) ↦ σᵀ J_g(z)` (auto-diff VJP in the DEQ case).
-/// * `outer_grad` — `z ↦ ∇_z L(z)` for the OPA direction; required when
-///   `opts.opa_freq` is set.
+/// * `g` — residual evaluation, `g(z, out)`.
+/// * `vjp` — `(z, σ, out) ↦ out = σᵀ J_g(z)` (auto-diff VJP in the DEQ case).
+/// * `outer_grad` — `(z, out) ↦ out = ∇_z L(z)` for the OPA direction;
+///   required when `opts.opa_freq` is set.
 pub fn adjoint_broyden_solve(
-    mut g: impl FnMut(&[f64]) -> Vec<f64>,
-    mut vjp: impl FnMut(&[f64], &[f64]) -> Vec<f64>,
-    mut outer_grad: Option<&mut dyn FnMut(&[f64]) -> Vec<f64>>,
+    g: impl FnMut(&[f64], &mut [f64]),
+    vjp: impl FnMut(&[f64], &[f64], &mut [f64]),
+    outer_grad: Option<&mut dyn FnMut(&[f64], &mut [f64])>,
     z0: &[f64],
     opts: &AdjointFpOptions,
+) -> AdjointFpResult {
+    let mut ws = Workspace::new();
+    adjoint_broyden_solve_ws(g, vjp, outer_grad, z0, opts, &mut ws)
+}
+
+/// [`adjoint_broyden_solve`] with a caller-provided scratch arena.
+pub fn adjoint_broyden_solve_ws(
+    mut g: impl FnMut(&[f64], &mut [f64]),
+    mut vjp: impl FnMut(&[f64], &[f64], &mut [f64]),
+    mut outer_grad: Option<&mut dyn FnMut(&[f64], &mut [f64])>,
+    z0: &[f64],
+    opts: &AdjointFpOptions,
+    ws: &mut Workspace,
 ) -> AdjointFpResult {
     let d = z0.len();
     let sw = Stopwatch::start();
     let mut qn = AdjointBroyden::new(d, opts.memory, MemoryPolicy::Freeze);
     let mut z = z0.to_vec();
-    let mut gz = g(&z);
+    let mut gz = vec![0.0; d];
+    g(&z, &mut gz);
     let mut g_norm = nrm2(&gz);
-    let mut trace = Trace::default();
+    let mut trace = Trace::with_capacity(opts.max_iters.saturating_add(1).min(1 << 16));
     trace.push(g_norm, sw.elapsed());
     let mut p = vec![0.0; d];
+    let mut z_new = vec![0.0; d];
+    let mut g_new = vec![0.0; d];
+    let mut sigma = vec![0.0; d];
+    let mut sigma_j = vec![0.0; d];
+    let mut grad_l = vec![0.0; d];
+    let mut v_dir = vec![0.0; d];
     let mut iters = 0;
     let mut n_vjps = 0;
     while g_norm > opts.tol && iters < opts.max_iters {
-        qn.direction(&gz, &mut p);
-        let mut z_new = z.clone();
-        axpy(1.0, &p, &mut z_new);
-        let g_new = g(&z_new);
+        qn.direction_ws(&gz, &mut p, ws);
+        for i in 0..d {
+            z_new[i] = z[i] + p[i];
+        }
+        g(&z_new, &mut g_new);
         // Regular adjoint update at z_{n+1}.
-        let sigma: Vec<f64> = match opts.sigma {
-            SigmaChoice::Step => z_new.iter().zip(&z).map(|(a, b)| a - b).collect(),
-            SigmaChoice::Residual => g_new.clone(),
-        };
+        match opts.sigma {
+            SigmaChoice::Step => sub(&z_new, &z, &mut sigma),
+            SigmaChoice::Residual => sigma.copy_from_slice(&g_new),
+        }
         if nrm2(&sigma) > 0.0 {
-            let sigma_j = vjp(&z_new, &sigma);
+            vjp(&z_new, &sigma, &mut sigma_j);
             n_vjps += 1;
-            qn.update(&sigma, &sigma_j);
+            qn.update_ws(&sigma, &sigma_j, ws);
         }
         // OPA extra update (eq. 7/8): σ = B⁻ᵀ ∇L(z_{n+1}).
         if let (Some(freq), Some(og)) = (opts.opa_freq, outer_grad.as_deref_mut()) {
             if freq > 0 && iters % freq == 0 {
-                let grad_l = og(&z_new);
-                let v = qn.apply_t_vec(&grad_l);
-                if nrm2(&v) > 0.0 {
-                    let v_j = vjp(&z_new, &v);
+                og(&z_new, &mut grad_l);
+                qn.apply_t_into(&grad_l, &mut v_dir, ws);
+                if nrm2(&v_dir) > 0.0 {
+                    vjp(&z_new, &v_dir, &mut sigma_j);
                     n_vjps += 1;
-                    qn.update(&v, &v_j);
+                    qn.update_ws(&v_dir, &sigma_j, ws);
                 }
             }
         }
-        z = z_new;
-        gz = g_new;
+        std::mem::swap(&mut z, &mut z_new);
+        std::mem::swap(&mut gz, &mut g_new);
         g_norm = nrm2(&gz);
         iters += 1;
         trace.push(g_norm, sw.elapsed());
@@ -153,16 +180,18 @@ mod tests {
             let n = 8 + rng.below(10);
             let (a, b, z_star) = linear_case(rng, n);
             let res = adjoint_broyden_solve(
-                |z| {
-                    let mut az = vec![0.0; n];
-                    a.matvec(z, &mut az);
-                    (0..n).map(|i| z[i] - az[i] - b[i]).collect()
+                |z, out| {
+                    a.matvec(z, out); // out = Az
+                    for i in 0..n {
+                        out[i] = z[i] - out[i] - b[i];
+                    }
                 },
-                |_z, sigma| {
+                |_z, sigma, out| {
                     // σᵀ(I − A) = σ − Aᵀσ
-                    let mut at_s = vec![0.0; n];
-                    a.matvec_t(sigma, &mut at_s);
-                    (0..n).map(|i| sigma[i] - at_s[i]).collect()
+                    a.matvec_t(sigma, out);
+                    for i in 0..n {
+                        out[i] = sigma[i] - out[i];
+                    }
                 },
                 None,
                 &vec![0.0; n],
@@ -194,17 +223,19 @@ mod tests {
             let exact = crate::linalg::lu::Lu::factor(&ia).unwrap().solve_t(&grad_l);
             let run = |opa: Option<usize>| {
                 let gl = grad_l.clone();
-                let mut og = move |_z: &[f64]| gl.clone();
+                let mut og = move |_z: &[f64], out: &mut [f64]| out.copy_from_slice(&gl);
                 let res = adjoint_broyden_solve(
-                    |z| {
-                        let mut az = vec![0.0; n];
-                        a.matvec(z, &mut az);
-                        (0..n).map(|i| z[i] - az[i] - b[i]).collect()
+                    |z, out| {
+                        a.matvec(z, out);
+                        for i in 0..n {
+                            out[i] = z[i] - out[i] - b[i];
+                        }
                     },
-                    |_z, sigma| {
-                        let mut at_s = vec![0.0; n];
-                        a.matvec_t(sigma, &mut at_s);
-                        (0..n).map(|i| sigma[i] - at_s[i]).collect()
+                    |_z, sigma, out| {
+                        a.matvec_t(sigma, out);
+                        for i in 0..n {
+                            out[i] = sigma[i] - out[i];
+                        }
                     },
                     Some(&mut og),
                     &vec![0.0; n],

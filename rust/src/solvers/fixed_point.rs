@@ -5,11 +5,19 @@
 //! derivative-free backtracking. It returns the final iterate *and* the qN
 //! inverse estimate — the object SHINE shares with the backward pass.
 //!
+//! Residual evaluations use the write-into convention `g(z, out)` so the
+//! solver loops are allocation-free: every iterate/residual/step buffer is
+//! preallocated and double-buffered with `mem::swap`, and the qN update draws
+//! its scratch from a [`Workspace`] (see `rust/tests/qn_alloc.rs` for the
+//! counting-allocator proof). Use [`broyden_solve_ws`] to share one workspace
+//! across many solves (the DEQ trainer does this across training steps).
+//!
 //! [`anderson_solve`] and [`picard_solve`] are baselines used in tests and
 //! ablations.
 
-use crate::linalg::vecops::{axpy, nrm2};
+use crate::linalg::vecops::{nrm2, sub};
 use crate::qn::broyden::BroydenInverse;
+use crate::qn::workspace::Workspace;
 use crate::qn::MemoryPolicy;
 use crate::solvers::Trace;
 use crate::util::timer::Stopwatch;
@@ -52,37 +60,57 @@ pub struct FpResult {
     pub n_g_evals: usize,
 }
 
-/// Broyden root solve of g(z) = 0 starting from `z0`.
+/// Broyden root solve of g(z) = 0 starting from `z0` (owns its workspace).
 pub fn broyden_solve(
-    mut g: impl FnMut(&[f64]) -> Vec<f64>,
+    g: impl FnMut(&[f64], &mut [f64]),
     z0: &[f64],
     opts: &FpOptions,
+) -> FpResult {
+    let mut ws = Workspace::new();
+    broyden_solve_ws(g, z0, opts, &mut ws)
+}
+
+/// Broyden root solve with a caller-provided scratch arena. After the first
+/// one or two iterations warm the workspace, the loop performs zero heap
+/// allocations.
+pub fn broyden_solve_ws(
+    mut g: impl FnMut(&[f64], &mut [f64]),
+    z0: &[f64],
+    opts: &FpOptions,
+    ws: &mut Workspace,
 ) -> FpResult {
     let d = z0.len();
     let sw = Stopwatch::start();
     let mut qn = BroydenInverse::new(d, opts.memory, opts.policy);
     let mut z = z0.to_vec();
-    let mut gz = g(&z);
+    let mut gz = vec![0.0; d];
+    g(&z, &mut gz);
     let mut n_g_evals = 1usize;
     let mut g_norm = nrm2(&gz);
-    let mut trace = Trace::default();
+    let mut trace = Trace::with_capacity(opts.max_iters.saturating_add(1).min(1 << 16));
     trace.push(g_norm, sw.elapsed());
+    // All loop state is preallocated here; the iteration below only swaps.
     let mut p = vec![0.0; d];
+    let mut z_new = vec![0.0; d];
+    let mut g_new = vec![0.0; d];
+    let mut s = vec![0.0; d];
+    let mut y = vec![0.0; d];
+    let mut zt = vec![0.0; d]; // line-search trial point
+    let mut gt = vec![0.0; d]; // line-search trial residual
     let mut iters = 0;
     while g_norm > opts.tol && iters < opts.max_iters {
-        qn.direction(&gz, &mut p);
+        qn.direction_ws(&gz, &mut p, ws);
         let alpha = if opts.line_search {
-            let z_ref = &z;
-            let p_ref = &p;
-            let g_fn = &mut g;
             let mut evals = 0usize;
             let a = crate::solvers::line_search::backtrack_residual(
                 g_norm,
                 |a| {
                     evals += 1;
-                    let mut zt = z_ref.clone();
-                    axpy(a, p_ref, &mut zt);
-                    nrm2(&g_fn(&zt))
+                    for i in 0..d {
+                        zt[i] = z[i] + a * p[i];
+                    }
+                    g(&zt[..], &mut gt[..]);
+                    nrm2(&gt)
                 },
                 0.5,
                 1e-4,
@@ -93,15 +121,16 @@ pub fn broyden_solve(
         } else {
             1.0
         };
-        let mut z_new = z.clone();
-        axpy(alpha, &p, &mut z_new);
-        let g_new = g(&z_new);
+        for i in 0..d {
+            z_new[i] = z[i] + alpha * p[i];
+        }
+        g(&z_new, &mut g_new);
         n_g_evals += 1;
-        let s: Vec<f64> = z_new.iter().zip(&z).map(|(a, b)| a - b).collect();
-        let y: Vec<f64> = g_new.iter().zip(&gz).map(|(a, b)| a - b).collect();
-        qn.update(&s, &y);
-        z = z_new;
-        gz = g_new;
+        sub(&z_new, &z, &mut s);
+        sub(&g_new, &gz, &mut y);
+        qn.update_ws(&s, &y, ws);
+        std::mem::swap(&mut z, &mut z_new);
+        std::mem::swap(&mut gz, &mut g_new);
         g_norm = nrm2(&gz);
         iters += 1;
         trace.push(g_norm, sw.elapsed());
@@ -119,52 +148,81 @@ pub fn broyden_solve(
 
 /// Damped Picard iteration z ← z − τ g(z) (baseline / pre-training warmup).
 pub fn picard_solve(
-    mut g: impl FnMut(&[f64]) -> Vec<f64>,
+    mut g: impl FnMut(&[f64], &mut [f64]),
     z0: &[f64],
     tau: f64,
     tol: f64,
     max_iters: usize,
 ) -> (Vec<f64>, f64, usize) {
+    let d = z0.len();
     let mut z = z0.to_vec();
+    let mut gz = vec![0.0; d];
     let mut iters = 0;
     loop {
-        let gz = g(&z);
+        g(&z, &mut gz);
         let n = nrm2(&gz);
         if n <= tol || iters >= max_iters {
             return (z, n, iters);
         }
-        axpy(-tau, &gz, &mut z);
+        for i in 0..d {
+            z[i] -= tau * gz[i];
+        }
         iters += 1;
     }
 }
 
-/// Anderson acceleration (type-II) on the fixed-point map  z ↦ z − g(z).
-/// Baseline forward solver for ablations.
+/// Anderson acceleration (type-II) on the fixed-point map  z ↦ z − g(z)
+/// (owns its workspace).
 pub fn anderson_solve(
-    mut g: impl FnMut(&[f64]) -> Vec<f64>,
+    g: impl FnMut(&[f64], &mut [f64]),
     z0: &[f64],
     m: usize,
     tol: f64,
     max_iters: usize,
     beta: f64,
 ) -> (Vec<f64>, f64, usize) {
+    let mut ws = Workspace::new();
+    anderson_solve_ws(g, z0, m, tol, max_iters, beta, &mut ws)
+}
+
+/// Anderson acceleration with a caller-provided workspace. The iterate and
+/// residual histories live in recycled buffers (O(1) eviction by rotating
+/// the oldest buffer to the back); only the small k×k Gram system still
+/// allocates per iteration.
+pub fn anderson_solve_ws(
+    mut g: impl FnMut(&[f64], &mut [f64]),
+    z0: &[f64],
+    m: usize,
+    tol: f64,
+    max_iters: usize,
+    beta: f64,
+    ws: &mut Workspace,
+) -> (Vec<f64>, f64, usize) {
     let d = z0.len();
     let mut z = z0.to_vec();
-    let mut hist_z: Vec<Vec<f64>> = Vec::new(); // iterates
-    let mut hist_r: Vec<Vec<f64>> = Vec::new(); // residuals g(z)
+    let mut r = vec![0.0; d];
+    let mut z_next = vec![0.0; d];
+    let mut hist_z: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+    let mut hist_r: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+    // ΔR difference rows, reused across iterations.
+    let mut dr: Vec<Vec<f64>> = Vec::with_capacity(m);
     let mut iters = 0;
-    loop {
-        let r = g(&z);
+    let rn = loop {
+        g(&z, &mut r);
         let rn = nrm2(&r);
         if rn <= tol || iters >= max_iters {
-            return (z, rn, iters);
+            break rn;
         }
-        hist_z.push(z.clone());
-        hist_r.push(r.clone());
-        if hist_z.len() > m {
-            hist_z.remove(0);
-            hist_r.remove(0);
-        }
+        // Append (z, r) to the history, recycling the evicted buffers.
+        let (mut zb, mut rb) = if hist_z.len() >= m && !hist_z.is_empty() {
+            (hist_z.remove(0), hist_r.remove(0))
+        } else {
+            (ws.take(d), ws.take(d))
+        };
+        zb.copy_from_slice(&z);
+        rb.copy_from_slice(&r);
+        hist_z.push(zb);
+        hist_r.push(rb);
         let k = hist_z.len();
         // Solve min ‖Σ αᵢ rᵢ‖² s.t. Σ αᵢ = 1 via normal equations on
         // differences (small k×k dense system with Tikhonov damping).
@@ -172,16 +230,14 @@ pub fn anderson_solve(
             vec![1.0]
         } else {
             let kk = k - 1;
-            // ΔR columns: r_{i+1} − r_i
+            while dr.len() < kk {
+                dr.push(ws.take(d));
+            }
+            for (i, row) in dr.iter_mut().enumerate().take(kk) {
+                sub(&hist_r[i + 1], &hist_r[i], row);
+            }
             let mut gram = crate::linalg::dmat::DMat::zeros(kk, kk);
             let mut rhs = vec![0.0; kk];
-            let dr: Vec<Vec<f64>> = (0..kk)
-                .map(|i| {
-                    (0..d)
-                        .map(|j| hist_r[i + 1][j] - hist_r[i][j])
-                        .collect::<Vec<f64>>()
-                })
-                .collect();
             for i in 0..kk {
                 for j in 0..kk {
                     gram[(i, j)] = crate::linalg::vecops::dot(&dr[i], &dr[j]);
@@ -200,19 +256,24 @@ pub fn anderson_solve(
                 a[i + 1] -= gamma[i];
                 a[i] += gamma[i];
             }
-            // flip: standard construction gives weights on iterates.
             a
         };
-        let mut z_new = vec![0.0; d];
+        z_next.iter_mut().for_each(|v| *v = 0.0);
         for (i, alpha) in alphas.iter().enumerate() {
             // mixing: z⁺ = Σ αᵢ (zᵢ − β rᵢ)
             for j in 0..d {
-                z_new[j] += alpha * (hist_z[i][j] - beta * hist_r[i][j]);
+                z_next[j] += alpha * (hist_z[i][j] - beta * hist_r[i][j]);
             }
         }
-        z = z_new;
+        std::mem::swap(&mut z, &mut z_next);
         iters += 1;
+    };
+    // Park the history buffers back in the pool so a shared workspace stays
+    // warm across repeated solves.
+    for b in hist_z.drain(..).chain(hist_r.drain(..)).chain(dr.drain(..)) {
+        ws.give(b);
     }
+    (z, rn, iters)
 }
 
 #[cfg(test)]
@@ -221,8 +282,12 @@ mod tests {
     use crate::util::prop;
     use crate::util::rng::Rng;
 
-    /// Contractive test map: g(z) = z − (Az + b) with ‖A‖ < 1.
-    fn contractive_g(rng: &mut Rng, n: usize) -> (impl Fn(&[f64]) -> Vec<f64>, Vec<f64>) {
+    /// Contractive test map: g(z) = z − (Az + b) with ‖A‖ < 1, evaluated
+    /// allocation-free into the caller's buffer.
+    fn contractive_g(
+        rng: &mut Rng,
+        n: usize,
+    ) -> (impl Fn(&[f64], &mut [f64]), Vec<f64>) {
         let a = crate::linalg::dmat::DMat::randn(n, n, 0.3 / (n as f64).sqrt(), rng);
         let b = rng.normal_vec(n);
         // Fixed point solves (I − A) z = b.
@@ -233,10 +298,11 @@ mod tests {
             }
         }
         let z_star = crate::linalg::lu::Lu::factor(&ia).unwrap().solve(&b);
-        let g = move |z: &[f64]| {
-            let mut az = vec![0.0; n];
-            a.matvec(z, &mut az);
-            (0..n).map(|i| z[i] - az[i] - b[i]).collect()
+        let g = move |z: &[f64], out: &mut [f64]| {
+            a.matvec(z, out); // out = Az
+            for i in 0..n {
+                out[i] = z[i] - out[i] - b[i];
+            }
         };
         (g, z_star)
     }
@@ -264,6 +330,23 @@ mod tests {
             "broyden {} vs picard {picard_iters}",
             res.iters
         );
+    }
+
+    #[test]
+    fn shared_workspace_reproduces_owned_run() {
+        let mut rng = Rng::new(8);
+        let n = 16;
+        let (g, _) = contractive_g(&mut rng, n);
+        let opts = FpOptions::default();
+        let owned = broyden_solve(&g, &vec![0.0; n], &opts);
+        let mut ws = Workspace::new();
+        // Reusing one workspace across repeated solves must not change
+        // results (buffers are re-zeroed on take).
+        let first = broyden_solve_ws(&g, &vec![0.0; n], &opts, &mut ws);
+        let second = broyden_solve_ws(&g, &vec![0.0; n], &opts, &mut ws);
+        assert_eq!(owned.z, first.z);
+        assert_eq!(first.z, second.z);
+        assert_eq!(first.iters, second.iters);
     }
 
     #[test]
@@ -304,7 +387,7 @@ mod tests {
     #[test]
     fn respects_max_iters() {
         // g has no root: the solver must stop exactly at max_iters.
-        let g = |z: &[f64]| vec![z[0] * z[0] + 1.0];
+        let g = |z: &[f64], out: &mut [f64]| out[0] = z[0] * z[0] + 1.0;
         let opts = FpOptions {
             max_iters: 3,
             tol: 1e-300,

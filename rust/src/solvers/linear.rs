@@ -8,10 +8,15 @@
 //! * general `J` (DEQ) — Broyden's method on the linear residual
 //!   `r(w) = Jᵀ w − c`, driven by vector–Jacobian products, as in the DEQ
 //!   implementation of Bai et al.
+//!
+//! Operators use the write-into convention (`apply_a(x, out)` / `vjp(w, out)`)
+//! and both solvers preallocate their loop state, so iterations are
+//! allocation-free apart from whatever the operator itself does.
 
-use crate::linalg::vecops::{axpy, dot, nrm2};
+use crate::linalg::vecops::{axpy, dot, nrm2, sub};
 use crate::qn::broyden::BroydenInverse;
 use crate::qn::low_rank::LowRank;
+use crate::qn::workspace::Workspace;
 use crate::qn::MemoryPolicy;
 
 #[derive(Debug)]
@@ -29,7 +34,7 @@ pub struct LinSolveResult {
 /// `x0` warm start (HOAG warm-restarts the Hessian inversion across outer
 /// iterations, Appendix C). Stops on ‖Ax − b‖ ≤ tol or `max_iters`.
 pub fn cg_solve(
-    mut apply_a: impl FnMut(&[f64]) -> Vec<f64>,
+    mut apply_a: impl FnMut(&[f64], &mut [f64]),
     b: &[f64],
     x0: Option<&[f64]>,
     tol: f64,
@@ -37,14 +42,15 @@ pub fn cg_solve(
 ) -> LinSolveResult {
     let n = b.len();
     let mut x = x0.map(|v| v.to_vec()).unwrap_or_else(|| vec![0.0; n]);
-    let ax = apply_a(&x);
+    let mut ap = vec![0.0; n];
+    apply_a(&x, &mut ap);
     let mut n_matvecs = 1;
-    let mut r: Vec<f64> = (0..n).map(|i| b[i] - ax[i]).collect();
+    let mut r: Vec<f64> = (0..n).map(|i| b[i] - ap[i]).collect();
     let mut p = r.clone();
     let mut rs = dot(&r, &r);
     let mut iters = 0;
     while rs.sqrt() > tol && iters < max_iters {
-        let ap = apply_a(&p);
+        apply_a(&p, &mut ap);
         n_matvecs += 1;
         let p_ap = dot(&p, &ap);
         if p_ap <= 0.0 {
@@ -71,20 +77,38 @@ pub fn cg_solve(
 }
 
 /// Broyden solve of the left-inversion system `Jᵀ w = c` given a VJP oracle
-/// `vjp(w) = Jᵀ w` (one VJP per iteration — the expensive unit of the DEQ
-/// backward pass).
+/// `vjp(w, out)` writing `Jᵀ w` (one VJP per iteration — the expensive unit
+/// of the DEQ backward pass). Owns its workspace; see
+/// [`broyden_solve_left_ws`] to share one across backward passes.
 ///
 /// * `w0` — warm start for the iterate (refine: `B⁻ᵀ∇L`; HOAG: previous w).
 /// * `h_init` — warm start for the qN *matrix* (refine strategy: the
 ///   transposed forward estimate, since (Jᵀ)⁻¹ = (J⁻¹)ᵀ ≈ Hᵀ).
+#[allow(clippy::too_many_arguments)]
 pub fn broyden_solve_left(
-    mut vjp: impl FnMut(&[f64]) -> Vec<f64>,
+    vjp: impl FnMut(&[f64], &mut [f64]),
     c: &[f64],
     w0: Option<&[f64]>,
     h_init: Option<LowRank>,
     tol: f64,
     max_iters: usize,
     memory: usize,
+) -> LinSolveResult {
+    let mut ws = Workspace::new();
+    broyden_solve_left_ws(vjp, c, w0, h_init, tol, max_iters, memory, &mut ws)
+}
+
+/// [`broyden_solve_left`] with a caller-provided scratch arena.
+#[allow(clippy::too_many_arguments)]
+pub fn broyden_solve_left_ws(
+    mut vjp: impl FnMut(&[f64], &mut [f64]),
+    c: &[f64],
+    w0: Option<&[f64]>,
+    h_init: Option<LowRank>,
+    tol: f64,
+    max_iters: usize,
+    memory: usize,
+    ws: &mut Workspace,
 ) -> LinSolveResult {
     let n = c.len();
     let mut qn = match h_init {
@@ -94,24 +118,32 @@ pub fn broyden_solve_left(
         None => BroydenInverse::new(n, memory, MemoryPolicy::Freeze),
     };
     let mut w = w0.map(|v| v.to_vec()).unwrap_or_else(|| vec![0.0; n]);
-    let jw = vjp(&w);
+    let mut jw = vec![0.0; n];
+    vjp(&w, &mut jw);
     let mut n_matvecs = 1;
     let mut r: Vec<f64> = (0..n).map(|i| jw[i] - c[i]).collect();
     let mut r_norm = nrm2(&r);
     let mut p = vec![0.0; n];
+    let mut w_new = vec![0.0; n];
+    let mut r_new = vec![0.0; n];
+    let mut s = vec![0.0; n];
+    let mut y = vec![0.0; n];
     let mut iters = 0;
     while r_norm > tol && iters < max_iters {
-        qn.direction(&r, &mut p);
-        let mut w_new = w.clone();
-        axpy(1.0, &p, &mut w_new);
-        let jw_new = vjp(&w_new);
+        qn.direction_ws(&r, &mut p, ws);
+        for i in 0..n {
+            w_new[i] = w[i] + p[i];
+        }
+        vjp(&w_new, &mut jw);
         n_matvecs += 1;
-        let r_new: Vec<f64> = (0..n).map(|i| jw_new[i] - c[i]).collect();
-        let s: Vec<f64> = w_new.iter().zip(&w).map(|(a, b)| a - b).collect();
-        let y: Vec<f64> = r_new.iter().zip(&r).map(|(a, b)| a - b).collect();
-        qn.update(&s, &y);
-        w = w_new;
-        r = r_new;
+        for i in 0..n {
+            r_new[i] = jw[i] - c[i];
+        }
+        sub(&w_new, &w, &mut s);
+        sub(&r_new, &r, &mut y);
+        qn.update_ws(&s, &y, ws);
+        std::mem::swap(&mut w, &mut w_new);
+        std::mem::swap(&mut r, &mut r_new);
         r_norm = nrm2(&r);
         iters += 1;
     }
@@ -141,11 +173,7 @@ mod tests {
             let mut b = vec![0.0; n];
             a.matvec(&x_true, &mut b);
             let res = cg_solve(
-                |v| {
-                    let mut out = vec![0.0; n];
-                    a.matvec(v, &mut out);
-                    out
-                },
+                |v, out| a.matvec(v, out),
                 &b,
                 None,
                 1e-10,
@@ -164,11 +192,7 @@ mod tests {
         let x_true = rng.normal_vec(n);
         let mut b = vec![0.0; n];
         a.matvec(&x_true, &mut b);
-        let apply = |v: &[f64]| {
-            let mut out = vec![0.0; n];
-            a.matvec(v, &mut out);
-            out
-        };
+        let apply = |v: &[f64], out: &mut [f64]| a.matvec(v, out);
         let cold = cg_solve(apply, &b, None, 1e-9, 500);
         // Warm start near the solution.
         let near: Vec<f64> = x_true.iter().map(|&x| x + 1e-4).collect();
@@ -187,11 +211,7 @@ mod tests {
             }
             let c = rng.normal_vec(n);
             let res = broyden_solve_left(
-                |w| {
-                    let mut out = vec![0.0; n];
-                    j.matvec_t(w, &mut out);
-                    out
-                },
+                |w, out| j.matvec_t(w, out),
                 &c,
                 None,
                 None,
@@ -216,24 +236,19 @@ mod tests {
             j[(i, i)] += 1.0;
         }
         let c = rng.normal_vec(n);
-        let vjp = |w: &[f64]| {
-            let mut out = vec![0.0; n];
-            j.matvec_t(w, &mut out);
-            out
-        };
+        let vjp = |w: &[f64], out: &mut [f64]| j.matvec_t(w, out);
         let cold = broyden_solve_left(vjp, &c, None, None, 1e-9, 500, 200);
         assert!(cold.converged);
         // Build a forward-like estimate of J⁻¹ by running Broyden on the
-        // *right* system J z = b for some b, then transpose it.
+        // *right* system J z = b for some b, then transpose it (O(1) panel
+        // swap on a clone of the forward estimate).
         let b = rng.normal_vec(n);
         let fwd = crate::solvers::fixed_point::broyden_solve(
-            |z| {
-                let mut out = vec![0.0; n];
-                j.matvec(z, &mut out);
+            |z: &[f64], out: &mut [f64]| {
+                j.matvec(z, out);
                 for i in 0..n {
                     out[i] -= b[i];
                 }
-                out
             },
             &vec![0.0; n],
             &crate::solvers::fixed_point::FpOptions {
@@ -244,7 +259,7 @@ mod tests {
             },
         );
         assert!(fwd.converged);
-        let h_t = fwd.qn.low_rank().transposed();
+        let h_t = fwd.qn.low_rank().clone().into_transposed();
         let w0 = h_t.apply_vec(&c);
         let warm = broyden_solve_left(vjp, &c, Some(&w0), Some(h_t), 1e-9, 500, 200);
         assert!(warm.converged);

@@ -8,8 +8,9 @@
 //! q-superlinear convergence of the iterates *and* convergence of the SHINE
 //! direction to the true hypergradient.
 
-use crate::linalg::vecops::{axpy, dot, nrm2};
+use crate::linalg::vecops::{axpy, dot, nrm2, scale, sub};
 use crate::qn::lbfgs::{LbfgsInverse, OpaConfig};
+use crate::qn::workspace::Workspace;
 use crate::qn::InvOp;
 use crate::solvers::line_search::wolfe;
 use crate::solvers::Trace;
@@ -92,13 +93,23 @@ pub fn lbfgs_minimize(
 ) -> MinimizeResult {
     let d = obj.dim();
     let sw = Stopwatch::start();
+    let mut ws = Workspace::new();
     let mut qn = qn_init.unwrap_or_else(|| LbfgsInverse::new(d, opts.memory));
     let mut z = z0.to_vec();
     let (mut f, mut grad) = obj.value_grad(&z);
     let mut n_evals = 1usize;
-    let mut trace = Trace::default();
+    let mut trace = Trace::with_capacity(opts.max_iters.saturating_add(1).min(1 << 16));
     let mut g_norm = nrm2(&grad);
     trace.push(g_norm, sw.elapsed());
+    // Preallocated loop state: the two-loop recursion and the OPA extra
+    // updates draw any remaining scratch from the workspace, so the solver
+    // itself adds no per-iteration allocations on top of the Objective's.
+    let mut p = vec![0.0; d];
+    let mut e = vec![0.0; d];
+    let mut z_pert = vec![0.0; d];
+    let mut y_hat = vec![0.0; d];
+    let mut s = vec![0.0; d];
+    let mut y = vec![0.0; d];
     let mut iters = 0;
     let mut prev_step_norm = opa.as_ref().map(|o| o.config.t0).unwrap_or(1.0);
     let mut regular_updates = 0usize;
@@ -108,15 +119,16 @@ pub fn lbfgs_minimize(
         if let Some(hooks) = opa.as_mut() {
             if regular_updates % hooks.config.freq.max(1) == 0 {
                 let dgdt = (hooks.dg_dtheta)(&z);
-                let mut e = qn.apply_vec(&dgdt);
+                qn.apply_into(&dgdt, &mut e, &mut ws);
                 let t_n = prev_step_norm.min(1.0).max(1e-12);
-                crate::linalg::vecops::scale(t_n / nrm2(&e).max(1e-300), &mut e);
+                scale(t_n / nrm2(&e).max(1e-300), &mut e);
                 // ŷ = ∇r(z+e) − ∇r(z)
-                let mut z_pert = z.clone();
-                axpy(1.0, &e, &mut z_pert);
+                for i in 0..d {
+                    z_pert[i] = z[i] + e[i];
+                }
                 let (_, g_pert) = obj.value_grad(&z_pert);
                 n_evals += 1;
-                let y_hat: Vec<f64> = g_pert.iter().zip(&grad).map(|(a, b)| a - b).collect();
+                sub(&g_pert, &grad, &mut y_hat);
                 qn.update_extra(&e, &y_hat);
             }
         }
@@ -125,14 +137,16 @@ pub fn lbfgs_minimize(
         if opts.scale_gamma && qn.rank() == 0 {
             qn.gamma = 1.0;
         }
-        let mut p = qn.apply_vec(&grad);
+        qn.apply_into(&grad, &mut p, &mut ws);
         for v in p.iter_mut() {
             *v = -*v;
         }
         let mut dphi0 = dot(&grad, &p);
         if dphi0 >= 0.0 {
             // Defensive restart: direction is not a descent direction.
-            p = grad.iter().map(|&g| -g).collect();
+            for (pi, gi) in p.iter_mut().zip(&grad) {
+                *pi = -*gi;
+            }
             dphi0 = -dot(&grad, &grad);
         }
 
@@ -176,8 +190,8 @@ pub fn lbfgs_minimize(
                 (ft, zt, gt)
             }
         };
-        let s: Vec<f64> = z_new.iter().zip(&z).map(|(a, b)| a - b).collect();
-        let y: Vec<f64> = g_new.iter().zip(&grad).map(|(a, b)| a - b).collect();
+        sub(&z_new, &z, &mut s);
+        sub(&g_new, &grad, &mut y);
         prev_step_norm = nrm2(&s);
         if prev_step_norm == 0.0 || (f_new == f && nrm2(&y) == 0.0) {
             // Floating-point stall: no representable progress remains.

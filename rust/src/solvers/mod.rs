@@ -25,6 +25,15 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// Preallocate for `n` samples so recording inside an allocation-free
+    /// solver loop never grows the vectors.
+    pub fn with_capacity(n: usize) -> Trace {
+        Trace {
+            residuals: Vec::with_capacity(n),
+            times: Vec::with_capacity(n),
+        }
+    }
+
     pub fn push(&mut self, res: f64, t: f64) {
         self.residuals.push(res);
         self.times.push(t);

@@ -47,6 +47,73 @@ where
     slots.into_iter().map(|s| s.unwrap()).collect()
 }
 
+/// Run `f` over near-equal contiguous chunks of `data` on scoped threads,
+/// one chunk per worker; `f(offset, chunk)` receives the chunk's start index
+/// in `data`. Used by the low-rank panel kernels to split a big apply across
+/// rows/columns above a size threshold — below it, callers should stay on the
+/// single-threaded path (spawning threads allocates and would defeat the
+/// allocation-free solver loops).
+pub fn par_chunks_mut<T, F>(data: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = data
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(i, c)| scope.spawn(move || f(i * chunk, c)))
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+/// Row-aligned variant of [`par_chunks_mut`]: `data` is a flat row-major
+/// `rows × row_len` buffer and each worker receives a whole number of rows;
+/// `f(first_row, chunk)` gets the index of its first row. Used by the DEQ
+/// residual block where every output row is independent.
+pub fn par_row_chunks_mut<T, F>(data: &mut [T], row_len: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() || row_len == 0 {
+        return;
+    }
+    debug_assert_eq!(data.len() % row_len, 0);
+    let rows = data.len() / row_len;
+    let workers = workers.max(1).min(rows);
+    if workers == 1 {
+        f(0, data);
+        return;
+    }
+    let rows_per = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = data
+            .chunks_mut(rows_per * row_len)
+            .enumerate()
+            .map(|(i, c)| scope.spawn(move || f(i * rows_per, c)))
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
 /// Number of available CPUs (fallback 4).
 pub fn ncpus() -> usize {
     std::thread::available_parallelism()
@@ -74,5 +141,41 @@ mod tests {
     #[test]
     fn single_thread_path() {
         assert_eq!(par_map(vec![1, 2, 3], 1, |x: i32| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn par_row_chunks_mut_is_row_aligned() {
+        // 10 rows × 3 cols; every worker must see whole rows.
+        let mut data = vec![0usize; 30];
+        par_row_chunks_mut(&mut data, 3, 4, |row0, chunk| {
+            assert_eq!(chunk.len() % 3, 0);
+            for (k, row) in chunk.chunks_exact_mut(3).enumerate() {
+                for x in row.iter_mut() {
+                    *x = row0 + k;
+                }
+            }
+        });
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i / 3);
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all_offsets() {
+        let mut data = vec![0usize; 103];
+        par_chunks_mut(&mut data, 7, |off, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = off + i;
+            }
+        });
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+        // Degenerate worker counts.
+        let mut one = vec![0i32; 5];
+        par_chunks_mut(&mut one, 1, |off, c| c[0] = off as i32 + 1);
+        assert_eq!(one[0], 1);
+        let mut empty: Vec<i32> = Vec::new();
+        par_chunks_mut(&mut empty, 4, |_, _| panic!("must not run"));
     }
 }

@@ -1,0 +1,124 @@
+//! Counting-allocator proof that the qN hot loops are allocation-free.
+//!
+//! A wrapping global allocator counts alloc/realloc events. The key
+//! assertion: running `broyden_solve_ws` for 30 iterations costs exactly as
+//! many allocation events as running it for 6 — i.e. the iteration loop
+//! itself performs **zero heap allocations** once the workspace and panels
+//! are warm (everything else — panels, iterate buffers, trace — is set up
+//! front-loaded and identical for both runs).
+//!
+//! Everything lives in a single #[test] because the counter is global: a
+//! second test running on a sibling thread would pollute the counts.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use shine::qn::broyden::BroydenInverse;
+use shine::qn::workspace::Workspace;
+use shine::qn::{InvOp, LowRank, MemoryPolicy};
+use shine::solvers::fixed_point::{broyden_solve_ws, FpOptions};
+
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocation events (allocs + reallocs; deallocs don't count) during `f`.
+fn alloc_events<T>(f: impl FnOnce() -> T) -> (usize, T) {
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    let r = f();
+    (ALLOC_EVENTS.load(Ordering::SeqCst) - before, r)
+}
+
+/// Run the Broyden solver on an allocation-free contractive map for exactly
+/// `iters` iterations; returns the allocation events of the whole call.
+fn solver_events(iters: usize, b: &[f64], ws: &mut Workspace) -> usize {
+    let d = b.len();
+    let g = |z: &[f64], out: &mut [f64]| {
+        for i in 0..d {
+            let zn = z[(i + 1) % d];
+            out[i] = z[i] - 0.3 * zn - b[i];
+        }
+    };
+    let opts = FpOptions {
+        tol: -1.0, // unreachable even at an exact root: run the full budget
+        max_iters: iters,
+        memory: 4,
+        ..Default::default()
+    };
+    let (events, res) = alloc_events(|| broyden_solve_ws(g, &vec![0.0; d], &opts, ws));
+    assert_eq!(res.iters, iters, "solver must not converge early");
+    events
+}
+
+#[test]
+fn qn_hot_loops_do_not_allocate() {
+    let d = 32;
+    let b: Vec<f64> = (0..d).map(|i| ((i as f64) * 0.37).sin()).collect();
+
+    // --- (1) broyden_solve: iterations past warm-up add zero allocations.
+    let mut ws = Workspace::new();
+    let _warm = solver_events(6, &b, &mut ws); // warms the shared workspace
+    let short = solver_events(6, &b, &mut ws);
+    let long = solver_events(30, &b, &mut ws);
+    assert_eq!(
+        short, long,
+        "broyden_solve iteration loop allocated: {short} events for 6 iters vs {long} for 30"
+    );
+
+    // --- (2) LowRank::apply_into / apply_t_into are allocation-free with a
+    // warm workspace (serial path below the parallel threshold).
+    let mut rng = shine::util::rng::Rng::new(9);
+    let n = 64;
+    let mut lr = LowRank::identity(n, 8, MemoryPolicy::Evict);
+    for _ in 0..8 {
+        lr.push(&rng.normal_vec(n), &rng.normal_vec(n));
+    }
+    let x = rng.normal_vec(n);
+    let mut out = vec![0.0; n];
+    lr.apply_into(&x, &mut out, &mut ws); // warm for this size
+    lr.apply_t_into(&x, &mut out, &mut ws);
+    let (events, _) = alloc_events(|| {
+        for _ in 0..16 {
+            lr.apply_into(&x, &mut out, &mut ws);
+            lr.apply_t_into(&x, &mut out, &mut ws);
+        }
+    });
+    assert_eq!(events, 0, "LowRank apply_into allocated {events} times");
+
+    // --- (3) BroydenInverse::update_ws at steady state (Evict ring full)
+    // writes factors in place: zero allocations.
+    let mut bro = BroydenInverse::new(n, 6, MemoryPolicy::Evict);
+    let s = rng.normal_vec(n);
+    let y = rng.normal_vec(n);
+    for _ in 0..8 {
+        bro.update_ws(&s, &y, &mut ws);
+    }
+    let (events, _) = alloc_events(|| {
+        for _ in 0..16 {
+            bro.update_ws(&s, &y, &mut ws);
+        }
+    });
+    assert_eq!(events, 0, "update_ws allocated {events} times at steady state");
+    assert_eq!(bro.rank(), 6);
+}

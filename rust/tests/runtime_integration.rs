@@ -151,10 +151,9 @@ fn lowrank_artifact_matches_rust_lowrank() {
     use shine::qn::{low_rank::LowRank, InvOp, MemoryPolicy};
     let mut lr = LowRank::identity(d, mm, MemoryPolicy::Freeze);
     for i in 0..mm {
-        lr.push(
-            us[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect(),
-            vs[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect(),
-        );
+        let u64s: Vec<f64> = us[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect();
+        let v64s: Vec<f64> = vs[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect();
+        lr.push(&u64s, &v64s);
     }
     let v64: Vec<f64> = v32.iter().map(|&x| x as f64).collect();
     let want = lr.apply_vec(&v64);

@@ -1,0 +1,170 @@
+//! Minimal offline stand-in for the `anyhow` crate, API-compatible with the
+//! subset this repository uses:
+//!
+//! * [`Error`] — message + optional source, `Display`/`Debug`, `From<E>` for
+//!   any `std::error::Error` (so `?` converts),
+//! * [`Result`] — `Result<T, Error>` alias with the same default-parameter
+//!   shape as anyhow's,
+//! * [`anyhow!`] / [`bail!`] — format-style constructors,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result<T, Error>`.
+//!
+//! Like the real anyhow, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket `From` impl coherent.
+
+use std::fmt;
+
+type Source = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// A message-carrying error with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Source>,
+}
+
+impl Error {
+    /// Build from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error {
+            msg: e.to_string(),
+            source: Some(Box::new(e)),
+        }
+    }
+
+    /// Prepend context to the message, keeping the source.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+            source: self.source,
+        }
+    }
+
+    /// The wrapped source error, if any.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match &self.source {
+            Some(b) => {
+                let e: &(dyn std::error::Error + 'static) = b.as_ref();
+                Some(e)
+            }
+            None => None,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut src = self.source();
+        while let Some(e) = src {
+            write!(f, "\n\ncaused by: {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+// Coherent because `Error` itself does not implement `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide fallible return type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazy or eager context to an error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e: Result<()> = Err(anyhow!("inner {}", 42));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 42");
+        let e2: Result<()> = Err(anyhow!("x"));
+        let e2 = e2.with_context(|| format!("ctx {}", 1)).unwrap_err();
+        assert_eq!(e2.to_string(), "ctx 1: x");
+    }
+
+    #[test]
+    fn bail_early_returns() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("boom {flag}");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(f(true).unwrap_err().to_string(), "boom true");
+    }
+
+    #[test]
+    fn debug_prints_chain() {
+        let e = io_fail().unwrap_err().context("loading config");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("loading config"));
+        assert!(dbg.contains("caused by"));
+    }
+}
