@@ -1,11 +1,14 @@
 //! Micro-benchmarks of the qN hot loops (the SHINE backward cost itself):
 //! FactorPanel low-rank apply across dims and ranks versus the legacy
-//! `Vec<Vec<f64>>` baseline, Broyden panel updates, multi-RHS cotangent
-//! batches, LBFGS two-loop, and native-vs-Pallas-artifact application.
+//! `Vec<Vec<f64>>` baseline, the f32-storage panel path versus the f64 one
+//! (the precision-generic `Elem` stack), Broyden panel updates, multi-RHS
+//! cotangent batches, LBFGS two-loop, and native-vs-Pallas-artifact
+//! application.
 //!
 //! Emits `BENCH_qn.json` at the repo root with per-case medians and
-//! panel-vs-legacy speedups — the acceptance gate for the FactorPanel
-//! refactor is `apply_speedup ≥ 2` at d=16384, m=30.
+//! speedups — the acceptance gates are `apply_speedup ≥ 2` vs the legacy
+//! layout and `f32_apply_speedup_vs_f64 ≥ 1.5` (half the panel bytes moved)
+//! at d=16384, m=30.
 
 use shine::linalg::vecops::{axpy, dot};
 use shine::qn::broyden::BroydenInverse;
@@ -53,6 +56,8 @@ fn main() {
     let mut cases: Vec<Json> = Vec::new();
     let mut accept_apply = 0.0;
     let mut accept_apply_t = 0.0;
+    let mut accept_f32_apply = 0.0;
+    let mut accept_f32_apply_t = 0.0;
     // Layout-only (single-threaded) signal: the largest case below
     // PAR_MIN_ELEMS, so the panel-vs-legacy comparison excludes threading.
     let mut serial_apply = 0.0;
@@ -67,6 +72,7 @@ fn main() {
         (16384, 30),
     ] {
         let mut lr = LowRank::identity(d, m, MemoryPolicy::Freeze);
+        let mut lr32: LowRank<f32> = LowRank::identity(d, m, MemoryPolicy::Freeze);
         let mut legacy = LegacyLowRank {
             us: Vec::with_capacity(m),
             vs: Vec::with_capacity(m),
@@ -74,13 +80,19 @@ fn main() {
         for _ in 0..m {
             let u = rng.normal_vec(d);
             let v = rng.normal_vec(d);
+            let u32v: Vec<f32> = u.iter().map(|&a| a as f32).collect();
+            let v32v: Vec<f32> = v.iter().map(|&a| a as f32).collect();
             lr.push(&u, &v);
+            lr32.push(&u32v, &v32v);
             legacy.us.push(u);
             legacy.vs.push(v);
         }
         let x = rng.normal_vec(d);
+        let x32: Vec<f32> = x.iter().map(|&a| a as f32).collect();
         let mut out = vec![0.0; d];
+        let mut out32 = vec![0.0f32; d];
         let mut ws = Workspace::new();
+        let mut ws32: Workspace<f32> = Workspace::new();
         let panel_apply = b
             .run(&format!("panel_apply d={d} m={m}"), || {
                 lr.apply_into(&x, &mut out, &mut ws);
@@ -91,6 +103,19 @@ fn main() {
             .run(&format!("panel_apply_t d={d} m={m}"), || {
                 lr.apply_t_into(&x, &mut out, &mut ws);
                 out[0]
+            })
+            .median_ms();
+        // f32 storage, f64 accumulation: same sweeps, half the bytes.
+        let panel_apply_f32 = b
+            .run(&format!("panel_apply_f32 d={d} m={m}"), || {
+                lr32.apply_into(&x32, &mut out32, &mut ws32);
+                out32[0]
+            })
+            .median_ms();
+        let panel_apply_t_f32 = b
+            .run(&format!("panel_apply_t_f32 d={d} m={m}"), || {
+                lr32.apply_t_into(&x32, &mut out32, &mut ws32);
+                out32[0]
             })
             .median_ms();
         let legacy_apply = b
@@ -107,14 +132,23 @@ fn main() {
             .median_ms();
 
         // Multi-RHS: a batch of k cotangents in one panel sweep vs k
-        // single-RHS panel applies.
+        // single-RHS panel applies (both precisions; the multi kernels shard
+        // across threads above the size threshold).
         let k = 8usize;
         let xs: Vec<f64> = (0..k * d).map(|_| rng.normal()).collect();
+        let xs32: Vec<f32> = xs.iter().map(|&a| a as f32).collect();
         let mut outs = vec![0.0; k * d];
+        let mut outs32 = vec![0.0f32; k * d];
         let multi = b
             .run(&format!("panel_apply_multi k={k} d={d} m={m}"), || {
                 lr.apply_t_multi(&xs, &mut outs);
                 outs[0]
+            })
+            .median_ms();
+        let multi_f32 = b
+            .run(&format!("panel_apply_multi_f32 k={k} d={d} m={m}"), || {
+                lr32.apply_t_multi(&xs32, &mut outs32);
+                outs32[0]
             })
             .median_ms();
         let columnwise = b
@@ -129,22 +163,39 @@ fn main() {
         // Broyden update throughput at steady state: Evict keeps the rank at
         // m, so each timed update is one O(1) eviction + one panel write.
         let mut bro = BroydenInverse::new(d, m, MemoryPolicy::Evict);
+        let mut bro32: BroydenInverse<f32> = BroydenInverse::new(d, m, MemoryPolicy::Evict);
         for _ in 0..m {
-            bro.update_ws(&rng.normal_vec(d), &rng.normal_vec(d), &mut ws);
+            let s = rng.normal_vec(d);
+            let y = rng.normal_vec(d);
+            let s32: Vec<f32> = s.iter().map(|&a| a as f32).collect();
+            let y32: Vec<f32> = y.iter().map(|&a| a as f32).collect();
+            bro.update_ws(&s, &y, &mut ws);
+            bro32.update_ws(&s32, &y32, &mut ws32);
         }
         let s = rng.normal_vec(d);
         let y = rng.normal_vec(d);
+        let s32: Vec<f32> = s.iter().map(|&a| a as f32).collect();
+        let y32: Vec<f32> = y.iter().map(|&a| a as f32).collect();
         let update = b
             .run(&format!("broyden_update_evict d={d} m={m}"), || {
                 bro.update_ws(&s, &y, &mut ws)
             })
             .median_ms();
+        let update_f32 = b
+            .run(&format!("broyden_update_evict_f32 d={d} m={m}"), || {
+                bro32.update_ws(&s32, &y32, &mut ws32)
+            })
+            .median_ms();
 
         let apply_speedup = legacy_apply / panel_apply.max(1e-12);
         let apply_t_speedup = legacy_apply_t / panel_apply_t.max(1e-12);
+        let f32_apply_speedup = panel_apply / panel_apply_f32.max(1e-12);
+        let f32_apply_t_speedup = panel_apply_t / panel_apply_t_f32.max(1e-12);
         if d == 16384 && m == 30 {
             accept_apply = apply_speedup;
             accept_apply_t = apply_t_speedup;
+            accept_f32_apply = f32_apply_speedup;
+            accept_f32_apply_t = f32_apply_t_speedup;
         }
         if d == 4096 && m == 30 {
             serial_apply = apply_speedup;
@@ -155,16 +206,22 @@ fn main() {
             .set("m", m)
             .set("panel_apply_ms", panel_apply)
             .set("panel_apply_t_ms", panel_apply_t)
+            .set("panel_apply_f32_ms", panel_apply_f32)
+            .set("panel_apply_t_f32_ms", panel_apply_t_f32)
             .set("legacy_apply_ms", legacy_apply)
             .set("legacy_apply_t_ms", legacy_apply_t)
             .set("apply_speedup", apply_speedup)
             .set("apply_t_speedup", apply_t_speedup)
+            .set("f32_apply_speedup_vs_f64", f32_apply_speedup)
+            .set("f32_apply_t_speedup_vs_f64", f32_apply_t_speedup)
             .set("apply_gflops", 4.0 * (m * d) as f64 / (panel_apply * 1e6).max(1e-12))
             .set("multi_rhs_k", k)
             .set("apply_t_multi_ms", multi)
+            .set("apply_t_multi_f32_ms", multi_f32)
             .set("apply_t_columnwise_ms", columnwise)
             .set("multi_speedup", columnwise / multi.max(1e-12))
-            .set("broyden_update_ms", update);
+            .set("broyden_update_ms", update)
+            .set("broyden_update_f32_ms", update_f32);
         cases.push(c);
     }
 
@@ -200,17 +257,15 @@ fn main() {
             b.run(&format!("lowrank artifact (pallas) d={d}"), || {
                 model.lowrank_apply(&v32, &us, &vs).unwrap().len()
             });
-            let mut lrn = LowRank::identity(d, 30, MemoryPolicy::Freeze);
+            // Native f32 panels — the exact layout the DEQ trainer now runs.
+            let mut lrn: LowRank<f32> = LowRank::identity(d, 30, MemoryPolicy::Freeze);
             for i in 0..30 {
-                let u64s: Vec<f64> = us[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect();
-                let v64s: Vec<f64> = vs[i * d..(i + 1) * d].iter().map(|&x| x as f64).collect();
-                lrn.push(&u64s, &v64s);
+                lrn.push(&us[i * d..(i + 1) * d], &vs[i * d..(i + 1) * d]);
             }
-            let v64: Vec<f64> = v32.iter().map(|&x| x as f64).collect();
-            let mut out = vec![0.0; d];
-            b.run(&format!("lowrank native d={d}"), || {
-                lrn.apply(&v64, &mut out);
-                out[0]
+            let mut out32 = vec![0.0f32; d];
+            b.run(&format!("lowrank native f32 d={d}"), || {
+                lrn.apply(&v32, &mut out32);
+                out32[0]
             });
         }
     }
@@ -235,6 +290,12 @@ fn main() {
                 .set("serial_cell_apply_t_speedup_vs_legacy", serial_apply_t)
                 .set("target_speedup", 2.0)
                 .set("pass", accept_apply >= 2.0 && accept_apply_t >= 2.0)
+                // f32-panel gate: the half-traffic path must move ≥1.5x
+                // faster than the f64 panel apply at MDEQ-ish scale.
+                .set("f32_apply_speedup_vs_f64", accept_f32_apply)
+                .set("f32_apply_t_speedup_vs_f64", accept_f32_apply_t)
+                .set("f32_target_speedup", 1.5)
+                .set("f32_pass", accept_f32_apply >= 1.5)
                 .clone(),
         );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_qn.json");
@@ -243,6 +304,7 @@ fn main() {
         Err(e) => eprintln!("warning: could not write {path}: {e}"),
     }
     println!(
-        "acceptance d=16384 m=30: apply {accept_apply:.2}x, apply_t {accept_apply_t:.2}x vs legacy"
+        "acceptance d=16384 m=30: apply {accept_apply:.2}x, apply_t {accept_apply_t:.2}x vs \
+         legacy; f32 panel {accept_f32_apply:.2}x / {accept_f32_apply_t:.2}x vs f64 panel"
     );
 }

@@ -33,16 +33,9 @@ fn main() {
     let mut radius = 0.0;
     b.run("power-method-20-iters", || {
         let res = power_method(
-            |vv, out| {
-                let vf: Vec<f32> = vv.iter().map(|&a| a as f32).collect();
-                match tr.model.f_jvp(&tr.params, &fwd.z, &u, &vf) {
-                    Ok(t) => {
-                        for (o, &a) in out.iter_mut().zip(t.iter()) {
-                            *o = a as f64;
-                        }
-                    }
-                    Err(_) => out.copy_from_slice(vv),
-                }
+            |vv: &[f32], out: &mut [f32]| match tr.model.f_jvp(&tr.params, &fwd.z, &u, vv) {
+                Ok(t) => out.copy_from_slice(&t),
+                Err(_) => out.copy_from_slice(vv),
             },
             fwd.z.len(),
             20,

@@ -317,17 +317,12 @@ impl Experiment for TableE1 {
             let zf = fwd.z.clone();
             let model = &tr.model;
             let params = &tr.params;
+            // f32 end-to-end: the probe vector feeds the f_jvp artifact
+            // directly (the power method is precision-generic).
             let res = power_method(
-                |vv, out| {
-                    let vf: Vec<f32> = vv.iter().map(|&a| a as f32).collect();
-                    match model.f_jvp(params, &zf, &u, &vf) {
-                        Ok(t) => {
-                            for (o, &a) in out.iter_mut().zip(t.iter()) {
-                                *o = a as f64;
-                            }
-                        }
-                        Err(_) => out.copy_from_slice(vv),
-                    }
+                |vv: &[f32], out: &mut [f32]| match model.f_jvp(params, &zf, &u, vv) {
+                    Ok(t) => out.copy_from_slice(&t),
+                    Err(_) => out.copy_from_slice(vv),
                 },
                 zf.len(),
                 power_iters,
@@ -578,13 +573,14 @@ impl Experiment for FigE3 {
                 let fwd = tr.forward_solve(&u)?;
                 let (_, dz, _, _) = tr.model.head_loss_grad(&tr.params, &fwd.z, &y)?;
                 let (w, _, _) = tr.backward_direction(&fwd, &u, &dz);
-                // residual r = w^T J_g - dz = w - w^T J_f - dz  (one VJP)
-                let wf: Vec<f32> = w.iter().map(|&a| a as f32).collect();
-                let jw = tr.model.f_vjp_z(&tr.params, &fwd.z, &u, &wf)?;
+                // residual r = w^T J_g - dz = w - w^T J_f - dz  (one VJP;
+                // w is f32 now, so it feeds the VJP artifact directly —
+                // the diagnostic norms below still widen to f64)
+                let jw = tr.model.f_vjp_z(&tr.params, &fwd.z, &u, &w)?;
                 let dz_norm: f64 = dz.iter().map(|&a| (a as f64) * (a as f64)).sum::<f64>().sqrt();
                 let res_norm: f64 = (0..w.len())
                     .map(|i| {
-                        let r = w[i] - jw[i] as f64 - dz[i] as f64;
+                        let r = w[i] as f64 - jw[i] as f64 - dz[i] as f64;
                         r * r
                     })
                     .sum::<f64>()

@@ -1,9 +1,9 @@
 //! Deep Equilibrium model training system (the Fig. 3 / Tables E.1–E.3
 //! experiments), built on the PJRT runtime.
 //!
-//! * [`native`] — pure-Rust mirror of the JAX model (f64): the numerical
-//!   oracle for the integration tests and a runtime-free path for small
-//!   benches.
+//! * [`native`] — pure-Rust mirror of the JAX model (f32 storage, f64 row
+//!   accumulation): the numerical oracle for the integration tests and a
+//!   runtime-free path for small benches.
 //! * [`model`] — artifact-backed model: every entry point of
 //!   `python/compile/model.py` as a typed method.
 //! * [`optim`] — Adam / SGD(momentum) with cosine schedule (App. D).

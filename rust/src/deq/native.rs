@@ -1,10 +1,17 @@
 //! Pure-Rust mirror of the JAX DEQ model (python/compile/model.py).
 //!
 //! Bit-for-bit architecture parity (patchify layout, LayerNorm eps, pooling,
-//! softmax CE), computed in f64 and cast to f32 at the boundary. The
-//! integration tests assert the PJRT artifacts agree with this mirror to
-//! f32 tolerance on random inputs — the strongest end-to-end check that the
-//! three-layer stack computes the model the paper's math assumes.
+//! softmax CE). Everything at this boundary speaks **f32 storage with f64
+//! accumulation** — the same contract as the precision-generic qN stack
+//! ([`crate::linalg::vecops::Elem`]): inputs/outputs are f32 tensors, while
+//! each row's matmul/LayerNorm reductions are carried in f64 before the
+//! single narrowing write. Since the solver stack runs at `E = f32`, the
+//! residual/cotangent path between this module and the panel kernels is
+//! cast-free end-to-end (the trainer hands solver iterates straight to
+//! `f_theta`/VJP calls). The integration tests assert the PJRT artifacts
+//! agree with this mirror to f32 tolerance on random inputs — the strongest
+//! end-to-end check that the three-layer stack computes the model the
+//! paper's math assumes.
 
 use crate::runtime::manifest::VariantCfg;
 

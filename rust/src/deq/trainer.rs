@@ -14,6 +14,16 @@
 //! 5. parameter gradients by pullback: `dθ_f = wᵀ ∂f/∂θ`,
 //!    `demb = (wᵀ ∂f/∂u) ∂u/∂emb`, head grads from step 3;
 //! 6. Adam/SGD step with cosine LR.
+//!
+//! # Precision
+//!
+//! The whole solver path runs at **f32 storage** (`LowRank<f32>`,
+//! `Workspace<f32>`, f32 panels) with f64 accumulation inside every dot —
+//! the fixed point is f32 at the artifact boundary anyway, so the old
+//! f64↔f32 conversion buffers around every `f`/VJP call are gone and the
+//! panel sweeps of the SHINE backward move half the bytes. Residual norms,
+//! tolerances and Sherman–Morrison denominators stay f64 per the
+//! [`crate::linalg::vecops::Elem`] contract.
 
 use crate::deq::model::{DeqModel, Params};
 use crate::deq::native;
@@ -113,10 +123,11 @@ pub struct StepStats {
     pub fallback_used: bool,
 }
 
-/// Result of a forward solve: flattened f32 fixed point + inverse estimate.
+/// Result of a forward solve: flattened f32 fixed point + inverse estimate
+/// (f32 panels — exactly what the f32 cotangent path applies).
 pub struct ForwardOutcome {
     pub z: Vec<f32>,
-    pub h: LowRank,
+    pub h: LowRank<f32>,
     pub iters: usize,
     pub residual: f64,
     pub seconds: f64,
@@ -130,9 +141,10 @@ pub struct Trainer<'e> {
     pub step_count: usize,
     pub stats: Vec<StepStats>,
     /// Scratch arena shared across every forward/backward solve of this
-    /// trainer — the solver loops are allocation-free once it is warm.
+    /// trainer — the solver loops are allocation-free once it is warm. f32
+    /// storage pool + f64 accumulator pool, matching the artifact precision.
     /// RefCell because forward/backward run behind `&self` (evaluation).
-    ws: RefCell<Workspace>,
+    ws: RefCell<Workspace<f32>>,
 }
 
 impl<'e> Trainer<'e> {
@@ -171,49 +183,36 @@ impl<'e> Trainer<'e> {
     }
 
     /// Forward pass: Broyden solve of z = f(z; u). Returns the flattened
-    /// fixed point and the shared inverse estimate. The f64↔f32 conversion
-    /// buffers at the artifact boundary are reused across iterations, and
-    /// the solver runs on the trainer's shared workspace.
+    /// fixed point and the shared inverse estimate. The residual closure
+    /// hands the solver's f32 iterate straight to the artifact call — no
+    /// conversion buffers, no casts — and the solver runs at f32 storage on
+    /// the trainer's shared workspace.
     pub fn forward_solve(&self, u: &[f32]) -> Result<ForwardOutcome> {
         let d = self.model.v.fixed_point_dim;
         let sw = Stopwatch::start();
         let tol = self.cfg.fwd_tol * (d as f64).sqrt();
         let mut ws = self.ws.borrow_mut();
-        // g(z) = z − f(z; u) over f64 (qN stack) with f32 artifact calls.
+        // g(z) = z − f(z; u), f32 end-to-end.
         let mut err: Option<anyhow::Error> = None;
-        let mut zf = vec![0.0f32; d];
-        let g = |z: &[f64], out: &mut [f64]| {
-            for (dst, &src) in zf.iter_mut().zip(z.iter()) {
-                *dst = src as f32;
+        let g = |z: &[f32], out: &mut [f32]| match self.model.f(&self.params, z, u) {
+            Ok(f) => {
+                for i in 0..z.len() {
+                    out[i] = z[i] - f[i];
+                }
             }
-            match self.model.f(&self.params, &zf, u) {
-                Ok(f) => {
-                    for i in 0..z.len() {
-                        out[i] = z[i] - f[i] as f64;
-                    }
-                }
-                Err(e) => {
-                    err = Some(e);
-                    out.iter_mut().for_each(|o| *o = 0.0);
-                }
+            Err(e) => {
+                err = Some(e);
+                out.iter_mut().for_each(|o| *o = 0.0);
             }
         };
         let res = match self.cfg.backward {
             BackwardKind::AdjointBroyden { opa_freq } => {
                 // Forward with Adjoint Broyden (needs VJPs).
-                let mut zf2 = vec![0.0f32; d];
-                let mut sf = vec![0.0f32; d];
-                let vjp = |z: &[f64], sigma: &[f64], out: &mut [f64]| {
-                    for (dst, &src) in zf2.iter_mut().zip(z.iter()) {
-                        *dst = src as f32;
-                    }
-                    for (dst, &src) in sf.iter_mut().zip(sigma.iter()) {
-                        *dst = src as f32;
-                    }
-                    match self.model.f_vjp_z(&self.params, &zf2, u, &sf) {
+                let vjp = |z: &[f32], sigma: &[f32], out: &mut [f32]| {
+                    match self.model.f_vjp_z(&self.params, z, u, sigma) {
                         Ok(j) => {
                             for i in 0..sigma.len() {
-                                out[i] = sigma[i] - j[i] as f64;
+                                out[i] = sigma[i] - j[i];
                             }
                         }
                         Err(_) => out.copy_from_slice(sigma),
@@ -230,9 +229,9 @@ impl<'e> Trainer<'e> {
                 // the most recent head gradient — a fixed approximation that
                 // avoids per-iteration head evaluations (cheap and faithful:
                 // the direction only steers *extra* updates).
-                let r = adjoint_broyden_solve_ws(g, vjp, None, &vec![0.0; d], &opts, &mut ws);
+                let r = adjoint_broyden_solve_ws(g, vjp, None, &vec![0.0f32; d], &opts, &mut ws);
                 ForwardOutcome {
-                    z: r.z.iter().map(|&x| x as f32).collect(),
+                    z: r.z,
                     h: r.qn.low_rank().clone(),
                     iters: r.iters,
                     residual: r.g_norm,
@@ -246,9 +245,9 @@ impl<'e> Trainer<'e> {
                     memory: self.cfg.memory,
                     ..Default::default()
                 };
-                let r = broyden_solve_ws(g, &vec![0.0; d], &opts, &mut ws);
+                let r = broyden_solve_ws(g, &vec![0.0f32; d], &opts, &mut ws);
                 ForwardOutcome {
-                    z: r.z.iter().map(|&x| x as f32).collect(),
+                    z: r.z,
                     h: r.qn.into_low_rank(),
                     iters: r.iters,
                     residual: r.g_norm,
@@ -262,43 +261,41 @@ impl<'e> Trainer<'e> {
         Ok(res)
     }
 
-    /// Backward pass: compute w ≈ J_g⁻ᵀ ∇L per the configured strategy.
-    /// Returns (w, matvecs, fallback_used).
+    /// Backward pass: compute w ≈ J_g⁻ᵀ ∇L per the configured strategy,
+    /// entirely in f32 storage (the head gradient arrives as f32, the f32
+    /// panels apply it, and the result feeds the f32 pullback artifact —
+    /// zero casts on the cotangent path). Returns (w, matvecs,
+    /// fallback_used).
     pub fn backward_direction(
         &self,
         fwd: &ForwardOutcome,
         u: &[f32],
         dz: &[f32],
-    ) -> (Vec<f64>, usize, bool) {
-        let dz64: Vec<f64> = dz.iter().map(|&x| x as f64).collect();
-        let d = dz64.len();
+    ) -> (Vec<f32>, usize, bool) {
+        let d = dz.len();
         let mut ws = self.ws.borrow_mut();
-        let mut wf = vec![0.0f32; d];
-        let vjp = |w: &[f64], out: &mut [f64]| {
-            for (dst, &src) in wf.iter_mut().zip(w.iter()) {
-                *dst = src as f32;
-            }
-            match self.model.f_vjp_z(&self.params, &fwd.z, u, &wf) {
+        let vjp = |w: &[f32], out: &mut [f32]| {
+            match self.model.f_vjp_z(&self.params, &fwd.z, u, w) {
                 Ok(j) => {
                     for i in 0..w.len() {
-                        out[i] = w[i] - j[i] as f64;
+                        out[i] = w[i] - j[i];
                     }
                 }
                 Err(_) => out.copy_from_slice(w),
             }
         };
         match self.cfg.backward {
-            BackwardKind::JacobianFree => (dz64, 0, false),
+            BackwardKind::JacobianFree => (dz.to_vec(), 0, false),
             BackwardKind::Shine | BackwardKind::AdjointBroyden { .. } => {
-                let mut w = vec![0.0; d];
-                fwd.h.apply_t_into(&dz64, &mut w, &mut ws);
+                let mut w = vec![0.0f32; d];
+                fwd.h.apply_t_into(dz, &mut w, &mut ws);
                 (w, 0, false)
             }
             BackwardKind::ShineFallback { ratio } => {
-                let mut w = vec![0.0; d];
-                fwd.h.apply_t_into(&dz64, &mut w, &mut ws);
-                if nrm2(&w) > ratio * nrm2(&dz64) {
-                    (dz64, 0, true)
+                let mut w = vec![0.0f32; d];
+                fwd.h.apply_t_into(dz, &mut w, &mut ws);
+                if nrm2(&w) > ratio * nrm2(dz) {
+                    (dz.to_vec(), 0, true)
                 } else {
                     (w, 0, false)
                 }
@@ -306,7 +303,7 @@ impl<'e> Trainer<'e> {
             BackwardKind::Original { tol, max_iters } => {
                 let r = broyden_solve_left_ws(
                     vjp,
-                    &dz64,
+                    dz,
                     None,
                     None,
                     tol,
@@ -317,7 +314,7 @@ impl<'e> Trainer<'e> {
                 (r.x, r.n_matvecs, false)
             }
             BackwardKind::ShineRefine { iters } => {
-                let w0 = fwd.h.apply_t_vec(&dz64);
+                let w0 = fwd.h.apply_t_vec(dz);
                 // Clone, then O(1) panel swap — the forward estimate in
                 // `fwd.h` stays usable for diagnostics.
                 let h_init = fwd.h.clone().into_transposed().with_max_mem(
@@ -326,7 +323,7 @@ impl<'e> Trainer<'e> {
                 );
                 let r = broyden_solve_left_ws(
                     vjp,
-                    &dz64,
+                    dz,
                     Some(&w0),
                     Some(h_init),
                     1e-12 * (d as f64).sqrt().max(1.0),
@@ -339,8 +336,8 @@ impl<'e> Trainer<'e> {
             BackwardKind::JacobianFreeRefine { iters } => {
                 let r = broyden_solve_left_ws(
                     vjp,
-                    &dz64,
-                    Some(&dz64),
+                    dz,
+                    Some(dz),
                     None,
                     1e-12 * (d as f64).sqrt().max(1.0),
                     iters,
@@ -362,9 +359,8 @@ impl<'e> Trainer<'e> {
         let sw = Stopwatch::start();
         let (loss, dz, dwhead, dbhead) = self.model.head_loss_grad(&self.params, &fwd.z, &y)?;
         let (w, matvecs, fallback_used) = self.backward_direction(&fwd, &u, &dz);
-        let wf: Vec<f32> = w.iter().map(|&x| x as f32).collect();
         // dθ_f = wᵀ ∂f/∂θ  (sign: dL/dθ = −wᵀ∂g/∂θ = +wᵀ∂f/∂θ since g = z−f)
-        let (fgrads, du) = self.model.f_vjp_params_u(&self.params, &fwd.z, &u, &wf)?;
+        let (fgrads, du) = self.model.f_vjp_params_u(&self.params, &fwd.z, &u, &w)?;
         let (dwemb, dbemb) = self.model.inject_vjp(&self.params, x, &du)?;
         let bwd_seconds = sw.elapsed();
 

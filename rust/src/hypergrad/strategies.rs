@@ -151,9 +151,11 @@ fn solve_left(
 ) -> Vec<f64> {
     let max_iters = max_iters.min(100_000);
     if prob.is_symmetric() {
-        // CG on J w = ∇L (J symmetric ⇒ Jᵀ = J), as HOAG does.
+        // CG on J w = ∇L (J symmetric ⇒ Jᵀ = J), as HOAG does. The bi-level
+        // stack instantiates the precision-generic solvers at E = f64 (the
+        // DEQ trainer runs the same code at f32).
         let res = cg_solve(
-            |v, out| out.copy_from_slice(&prob.jvp(theta, z, v)),
+            |v: &[f64], out: &mut [f64]| out.copy_from_slice(&prob.jvp(theta, z, v)),
             grad_l,
             w0,
             tol,
@@ -163,7 +165,7 @@ fn solve_left(
         res.x
     } else {
         let res = broyden_solve_left_ws(
-            |w, out| out.copy_from_slice(&prob.vjp(theta, z, w)),
+            |w: &[f64], out: &mut [f64]| out.copy_from_slice(&prob.vjp(theta, z, w)),
             grad_l,
             w0,
             h_init.map(|h| h.with_max_mem(max_iters + 64, MemoryPolicy::Freeze)),

@@ -19,27 +19,36 @@
 //! engine errors on load and all artifact-dependent paths skip gracefully);
 //! Python never runs on the experiment hot path.
 //!
-//! ## Hot-path architecture (FactorPanel + Workspace)
+//! ## Hot-path architecture (Elem + FactorPanel + Workspace)
 //!
 //! The crate's hottest path — applying and updating the identity-plus-low-
 //! rank inverse estimates `H = I + Σ uᵢvᵢᵀ` that SHINE shares between
-//! forward and backward passes — is built on two primitives in [`qn`]:
+//! forward and backward passes — is built on three primitives:
 //!
+//! * [`linalg::vecops::Elem`] — the storage scalar (`f32`/`f64`) the whole
+//!   qN/solver stack is generic over, with the *store narrow, accumulate
+//!   wide* contract: panels and iterates in `E`, every reduction in f64.
+//!   The DEQ path runs `E = f32` end-to-end (half the panel traffic, no
+//!   boundary casts against the f32 artifacts); the bi-level/HOAG path
+//!   keeps the `f64` default. `rust/tests/precision_parity.rs` proves the
+//!   instantiations agree to f32 tolerance.
 //! * [`qn::FactorPanel`] — contiguous row-major factor storage behind a
 //!   ring buffer: `H x` is two streaming panel sweeps
 //!   (`linalg::vecops::panel_gemv` → `panel_gemv_t`, thread-parallel above
 //!   a size threshold via `util::threads::par_chunks_mut`), eviction is an
 //!   O(1) ring rotation, and multi-RHS application
 //!   (`qn::InvOp::apply_multi`) serves a whole batch of backward cotangents
-//!   in one sweep.
+//!   in one sweep — itself sharded across threads for large batches.
 //! * [`qn::Workspace`] — a LIFO scratch arena threaded through the solver
 //!   stack (`broyden_solve`, `anderson_solve`, the linear backward solvers,
-//!   the OPA updates, the hypergradient strategies, and the DEQ trainer).
-//!   Residuals use the write-into convention `g(z, out)`, so solver
-//!   iteration loops perform zero heap allocations after warm-up — enforced
-//!   by a counting-allocator test (`rust/tests/qn_alloc.rs`) and measured
-//!   against the legacy `Vec<Vec<f64>>` layout by `benches/micro_qn.rs`
-//!   (results in `BENCH_qn.json`).
+//!   the OPA updates, the hypergradient strategies, and the DEQ trainer),
+//!   with a storage pool in `E` and an f64 accumulator pool for
+//!   coefficients and the Anderson Gram system. Residuals use the
+//!   write-into convention `g(z, out)`, so solver iteration loops perform
+//!   zero heap allocations after warm-up — enforced in both precisions by a
+//!   counting-allocator test (`rust/tests/qn_alloc.rs`) and measured
+//!   against the legacy `Vec<Vec<f64>>` layout and the f64 panels by
+//!   `benches/micro_qn.rs` (results in `BENCH_qn.json`).
 //!
 //! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
 //! paper-vs-measured results.

@@ -1,74 +1,183 @@
-//! BLAS-1 style vector kernels over plain slices (f64 for the optimization
-//! stack, a few f32 variants for the DEQ/artifact path). These are the hot
-//! inner loops of the quasi-Newton updates; they are written allocation-free
-//! and auto-vectorize cleanly (verified in the §Perf pass).
+//! Precision-generic BLAS-1 / panel kernels over plain slices.
+//!
+//! # The `Elem` precision contract
+//!
+//! Every vector kernel in this module — and through it the whole qN /
+//! solver / DEQ stack — is generic over a storage scalar [`Elem`] with two
+//! instantiations, `f64` and `f32`. The contract is **store narrow,
+//! accumulate wide**:
+//!
+//! * *storage* (panels, iterates, residuals, cotangents) is `E`;
+//! * every *reduction* (dot products, norms, Gram entries) is carried in the
+//!   wide accumulator `Elem::Acc` — pinned to `f64` for both instantiations —
+//!   and every *coefficient* derived from a reduction (Sherman–Morrison
+//!   denominators, two-loop α/β, `ρ = 1/yᵀs`, mixing weights) stays `f64`
+//!   until the final element-wise write-back narrows it to `E`.
+//!
+//! This is exactly the trade the DEQ literature shows the backward pass
+//! tolerates (Jacobian-Free training, inexact/implicit gradients): f32
+//! panels halve the memory traffic of the O(m·d) low-rank sweeps that
+//! dominate SHINE's backward cost at MDEQ scale, while f64 accumulation
+//! keeps the dot products as accurate as the old all-f64 path. The bi-level
+//! experiments instantiate the same code at `E = f64` and are bit-compatible
+//! with the pre-generic implementation (`to_f64`/`from_f64` are identity for
+//! `f64` and compile away).
+//!
+//! # Kernels
+//!
+//! The BLAS-1 kernels (`dot`, `axpy`, …) are the hot inner loops of the
+//! quasi-Newton updates; they are allocation-free and auto-vectorize
+//! cleanly. The panel kernels (`panel_gemv` / `panel_gemv_t` and their
+//! `_multi` variants) stream flat row-major `m × d` factor panels front to
+//! back and are the whole of SHINE's backward cost once the factors live in
+//! a [`crate::qn::FactorPanel`]. The `_multi` variants shard across threads
+//! (via [`crate::util::threads::par_row_chunks_mut`]) once the panel
+//! exceeds [`PAR_MIN_ELEMS`], so a large batch of cotangents uses every
+//! core.
 
-/// dot(a, b)
+use crate::util::threads;
+
+/// Storage scalar of the low-rank engine: `f32` or `f64` panels, always with
+/// `f64` accumulation (see the module docs for the full contract).
+///
+/// `to_f64`/`from_f64` are the only arithmetic surface — generic code widens
+/// operands, computes in `f64`, and narrows results. For `E = f64` both are
+/// identities and the optimizer erases them; for `E = f32` they compile to
+/// single convert instructions that vanish inside the memory-bound sweeps.
+pub trait Elem:
+    Copy + PartialEq + PartialOrd + Send + Sync + std::fmt::Debug + 'static
+{
+    /// Wide accumulator type for reductions. Pinned to `f64` for every
+    /// supported storage type; a future f16/bf16 storage would keep it at
+    /// `f64` too — the contract is that `Acc` never narrows below f64.
+    /// Because every impl pins it, the kernel/coefficient signatures below
+    /// spell the accumulator as plain `f64`; the associated type exists to
+    /// mark the contract (and the seam a non-f64 accumulator would thread
+    /// through), not as a second code path.
+    type Acc: Copy + Send + Sync + std::fmt::Debug + 'static;
+    /// Additive identity in storage precision.
+    const ZERO: Self;
+    /// Multiplicative identity in storage precision.
+    const ONE: Self;
+    /// Narrow an accumulator value to storage precision.
+    fn from_f64(x: f64) -> Self;
+    /// Widen a stored value into the accumulator.
+    fn to_f64(self) -> f64;
+}
+
+impl Elem for f64 {
+    type Acc = f64;
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    #[inline(always)]
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+impl Elem for f32 {
+    type Acc = f64;
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    #[inline(always)]
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+/// dot(a, b), accumulated in f64 regardless of storage precision.
 #[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+pub fn dot<E: Elem>(a: &[E], b: &[E]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
+    let mut acc = 0.0f64;
     for i in 0..a.len() {
-        acc += a[i] * b[i];
+        acc += a[i].to_f64() * b[i].to_f64();
     }
     acc
 }
 
-/// y += alpha * x
+/// y += alpha * x (alpha in accumulator precision, one narrowing per write).
 #[inline]
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+pub fn axpy<E: Elem>(alpha: f64, x: &[E], y: &mut [E]) {
     debug_assert_eq!(x.len(), y.len());
     for i in 0..x.len() {
-        y[i] += alpha * x[i];
+        y[i] = E::from_f64(y[i].to_f64() + alpha * x[i].to_f64());
     }
 }
 
 /// y = x
 #[inline]
-pub fn copy(x: &[f64], y: &mut [f64]) {
+pub fn copy<E: Elem>(x: &[E], y: &mut [E]) {
     y.copy_from_slice(x);
 }
 
 /// x *= alpha
 #[inline]
-pub fn scale(alpha: f64, x: &mut [f64]) {
+pub fn scale<E: Elem>(alpha: f64, x: &mut [E]) {
     for v in x.iter_mut() {
-        *v *= alpha;
+        *v = E::from_f64(v.to_f64() * alpha);
+    }
+}
+
+/// x = −x
+#[inline]
+pub fn negate<E: Elem>(x: &mut [E]) {
+    for v in x.iter_mut() {
+        *v = E::from_f64(-v.to_f64());
     }
 }
 
 /// out = a - b
 #[inline]
-pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+pub fn sub<E: Elem>(a: &[E], b: &[E], out: &mut [E]) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(a.len(), out.len());
     for i in 0..a.len() {
-        out[i] = a[i] - b[i];
+        out[i] = E::from_f64(a[i].to_f64() - b[i].to_f64());
     }
 }
 
 /// out = a + b
 #[inline]
-pub fn add(a: &[f64], b: &[f64], out: &mut [f64]) {
+pub fn add<E: Elem>(a: &[E], b: &[E], out: &mut [E]) {
     debug_assert_eq!(a.len(), b.len());
     for i in 0..a.len() {
-        out[i] = a[i] + b[i];
+        out[i] = E::from_f64(a[i].to_f64() + b[i].to_f64());
     }
 }
 
-/// ||x||_2
+/// out = a + alpha·b — the step-update idiom of every solver loop
+/// (`z⁺ = z + α p`), computed in accumulator precision.
 #[inline]
-pub fn nrm2(x: &[f64]) -> f64 {
+pub fn add_scaled<E: Elem>(a: &[E], alpha: f64, b: &[E], out: &mut [E]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = E::from_f64(a[i].to_f64() + alpha * b[i].to_f64());
+    }
+}
+
+/// ||x||_2 (f64 accumulation).
+#[inline]
+pub fn nrm2<E: Elem>(x: &[E]) -> f64 {
     dot(x, x).sqrt()
 }
 
-/// ||a - b||_2
+/// ||a - b||_2 (f64 accumulation).
 #[inline]
-pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+pub fn dist2<E: Elem>(a: &[E], b: &[E]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
+    let mut acc = 0.0f64;
     for i in 0..a.len() {
-        let d = a[i] - b[i];
+        let d = a[i].to_f64() - b[i].to_f64();
         acc += d * d;
     }
     acc.sqrt()
@@ -76,24 +185,33 @@ pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
 
 /// Fill with zeros.
 #[inline]
-pub fn zero(x: &mut [f64]) {
+pub fn zero<E: Elem>(x: &mut [E]) {
     for v in x.iter_mut() {
-        *v = 0.0;
+        *v = E::ZERO;
     }
 }
 
 // ---- panel (flat row-major m×d) kernels -----------------------------------
 //
-// These two primitives are the whole of SHINE's O(m·d) backward cost once the
+// These primitives are the whole of SHINE's O(m·d) backward cost once the
 // factors live in a `FactorPanel`: `H x = x + Uᵀ (V x)` is one `panel_gemv`
 // (the coefficient sweep `c = V x`) followed by one `panel_gemv_t` (the
 // accumulation sweep `out += Uᵀ c`). Both stream the panel front to back, so
-// they run at memory bandwidth and auto-vectorize.
+// they run at memory bandwidth and auto-vectorize. Coefficients live in f64
+// (they are dot results — accumulator precision per the `Elem` contract)
+// while the panels and vectors are in storage precision.
+
+/// Panels above this many elements (`rank × dim`) may be swept with scoped
+/// threads (the `_multi` kernels below and the single-RHS paths in
+/// [`crate::qn::low_rank`]). Below it the kernels stay single-threaded:
+/// spawning scoped threads costs more than the sweep and would break the
+/// allocation-free guarantee of the solver inner loops.
+pub const PAR_MIN_ELEMS: usize = 1 << 17;
 
 /// `coeffs[i] = Σ_j panel[i·dim + j] · x[j]` for `i in 0..rows`
 /// (row-major panel–vector products; phase 1 of the low-rank apply).
 #[inline]
-pub fn panel_gemv(panel: &[f64], rows: usize, dim: usize, x: &[f64], coeffs: &mut [f64]) {
+pub fn panel_gemv<E: Elem>(panel: &[E], rows: usize, dim: usize, x: &[E], coeffs: &mut [f64]) {
     debug_assert!(panel.len() >= rows * dim);
     debug_assert_eq!(x.len(), dim);
     debug_assert!(coeffs.len() >= rows);
@@ -105,7 +223,7 @@ pub fn panel_gemv(panel: &[f64], rows: usize, dim: usize, x: &[f64], coeffs: &mu
 /// `y[j] += Σ_i coeffs[i] · panel[i·dim + j]` (transposed panel–vector
 /// product; phase 2 of the low-rank apply — one contiguous axpy per row).
 #[inline]
-pub fn panel_gemv_t(panel: &[f64], rows: usize, dim: usize, coeffs: &[f64], y: &mut [f64]) {
+pub fn panel_gemv_t<E: Elem>(panel: &[E], rows: usize, dim: usize, coeffs: &[f64], y: &mut [E]) {
     debug_assert!(panel.len() >= rows * dim);
     debug_assert!(coeffs.len() >= rows);
     debug_assert_eq!(y.len(), dim);
@@ -120,19 +238,40 @@ pub fn panel_gemv_t(panel: &[f64], rows: usize, dim: usize, coeffs: &[f64], y: &
 /// Multi-RHS variant of [`panel_gemv`]: `coeffs[i·k + r] = ⟨panelᵢ, xᵣ⟩` for
 /// `k` right-hand sides stored row-major in `xs` (`k × dim`). One pass over
 /// the panel serves every RHS — this is what makes a batch of SHINE backward
-/// cotangents a single panel sweep.
+/// cotangents a single panel sweep. Above [`PAR_MIN_ELEMS`] panel elements
+/// the sweep is sharded across threads by blocks of panel rows (each block
+/// owns a contiguous run of `coeffs` rows, so workers never share a write).
 #[inline]
-pub fn panel_gemv_multi(
-    panel: &[f64],
+pub fn panel_gemv_multi<E: Elem>(
+    panel: &[E],
     rows: usize,
     dim: usize,
-    xs: &[f64],
+    xs: &[E],
     k: usize,
     coeffs: &mut [f64],
 ) {
     debug_assert!(panel.len() >= rows * dim);
     debug_assert_eq!(xs.len(), k * dim);
     debug_assert!(coeffs.len() >= rows * k);
+    if rows * dim >= PAR_MIN_ELEMS && rows >= 2 {
+        let workers = threads::ncpus().min(16).min(rows);
+        threads::par_row_chunks_mut(&mut coeffs[..rows * k], k, workers, |row0, cc| {
+            gemv_multi_serial(&panel[row0 * dim..], cc.len() / k, dim, xs, k, cc);
+        });
+    } else {
+        gemv_multi_serial(panel, rows, dim, xs, k, coeffs);
+    }
+}
+
+#[inline]
+fn gemv_multi_serial<E: Elem>(
+    panel: &[E],
+    rows: usize,
+    dim: usize,
+    xs: &[E],
+    k: usize,
+    coeffs: &mut [f64],
+) {
     for i in 0..rows {
         let row = &panel[i * dim..i * dim + dim];
         for (r, x) in xs.chunks_exact(dim).enumerate() {
@@ -143,67 +282,54 @@ pub fn panel_gemv_multi(
 
 /// Multi-RHS variant of [`panel_gemv_t`]: `ys[r] += Σ_i coeffs[i·k + r] ·
 /// panelᵢ` for `k` outputs stored row-major in `ys` (`k × dim`). Each panel
-/// row is read once and applied to all RHS while it is hot in cache.
+/// row is read once per worker and applied to that worker's RHS rows while
+/// it is hot in cache. Above [`PAR_MIN_ELEMS`] panel elements the kernel is
+/// sharded across threads over the RHS rows (the output rows are disjoint
+/// whole rows of `ys`, so the split is a `par_row_chunks_mut`) — the useful
+/// regime is large `k`, where each of up to `k` workers streams the panel
+/// once for `k/workers` outputs.
 #[inline]
-pub fn panel_gemv_t_multi(
-    panel: &[f64],
+pub fn panel_gemv_t_multi<E: Elem>(
+    panel: &[E],
     rows: usize,
     dim: usize,
     coeffs: &[f64],
     k: usize,
-    ys: &mut [f64],
+    ys: &mut [E],
 ) {
     debug_assert!(panel.len() >= rows * dim);
     debug_assert_eq!(ys.len(), k * dim);
     debug_assert!(coeffs.len() >= rows * k);
+    if rows * dim >= PAR_MIN_ELEMS && k >= 2 {
+        let workers = threads::ncpus().min(16).min(k);
+        threads::par_row_chunks_mut(ys, dim, workers, |r0, chunk| {
+            gemv_t_multi_sharded(panel, rows, dim, coeffs, k, r0, chunk);
+        });
+    } else {
+        gemv_t_multi_sharded(panel, rows, dim, coeffs, k, 0, ys);
+    }
+}
+
+/// Serial body of [`panel_gemv_t_multi`] over the RHS rows `r0..` held in
+/// `ys_chunk` (whole rows of the full `k × dim` output).
+#[inline]
+fn gemv_t_multi_sharded<E: Elem>(
+    panel: &[E],
+    rows: usize,
+    dim: usize,
+    coeffs: &[f64],
+    k: usize,
+    r0: usize,
+    ys_chunk: &mut [E],
+) {
     for i in 0..rows {
         let row = &panel[i * dim..i * dim + dim];
-        for (r, y) in ys.chunks_exact_mut(dim).enumerate() {
-            let c = coeffs[i * k + r];
+        for (rl, y) in ys_chunk.chunks_exact_mut(dim).enumerate() {
+            let c = coeffs[i * k + r0 + rl];
             if c != 0.0 {
                 axpy(c, row, y);
             }
         }
-    }
-}
-
-// ---- f32 variants (DEQ hot path; accumulate dots in f64 for stability) ----
-
-#[inline]
-pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for i in 0..a.len() {
-        acc += a[i] as f64 * b[i] as f64;
-    }
-    acc
-}
-
-#[inline]
-pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
-    }
-}
-
-#[inline]
-pub fn sub_f32(a: &[f32], b: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(a.len(), b.len());
-    for i in 0..a.len() {
-        out[i] = a[i] - b[i];
-    }
-}
-
-#[inline]
-pub fn nrm2_f32(x: &[f32]) -> f64 {
-    dot_f32(x, x).sqrt()
-}
-
-#[inline]
-pub fn scale_f32(alpha: f32, x: &mut [f32]) {
-    for v in x.iter_mut() {
-        *v *= alpha;
     }
 }
 
@@ -232,6 +358,11 @@ mod tests {
         add(&a, &a, &mut out);
         assert_eq!(out, [6.0, 8.0]);
         assert!((dist2(&a, &b) - 5.0).abs() < 1e-12);
+        add_scaled(&a, 2.0, &a, &mut out);
+        assert_eq!(out, [9.0, 12.0]);
+        let mut n = a;
+        negate(&mut n);
+        assert_eq!(n, [-3.0, -4.0]);
     }
 
     #[test]
@@ -280,11 +411,65 @@ mod tests {
     }
 
     #[test]
-    fn f32_ops_accumulate_in_f64() {
-        // 1e6 elements of 1e-3: f32 naive accumulation loses precision badly.
+    fn f32_kernels_accumulate_in_f64() {
+        // 1e6 elements of 1e-3: f32 naive accumulation loses precision badly;
+        // the generic dot must carry the reduction in f64.
         let n = 1_000_000;
         let a = vec![1e-3f32; n];
-        let d = dot_f32(&a, &a);
+        let d = dot(&a, &a);
         assert!((d - 1e-6 * n as f64).abs() / (1e-6 * n as f64) < 1e-6);
+    }
+
+    #[test]
+    fn f32_panel_matches_f64_panel() {
+        // Same factors in both precisions: the f32 sweep must agree with the
+        // f64 one to f32 storage tolerance (exactly-representable inputs keep
+        // the dots identical; only output narrowing differs).
+        let panel64 = [0.5, -1.25, 2.0, 0.75, 1.5, -0.5];
+        let panel32: Vec<f32> = panel64.iter().map(|&x| x as f32).collect();
+        let x64 = [1.0, -2.0, 0.5];
+        let x32: Vec<f32> = x64.iter().map(|&x| x as f32).collect();
+        let mut c64 = [0.0; 2];
+        let mut c32 = [0.0; 2];
+        panel_gemv(&panel64, 2, 3, &x64, &mut c64);
+        panel_gemv(&panel32, 2, 3, &x32, &mut c32);
+        assert_eq!(c64, c32); // dyadic inputs: f64-accumulated dots match exactly
+        let mut y64 = [0.25; 3];
+        let mut y32 = [0.25f32; 3];
+        panel_gemv_t(&panel64, 2, 3, &c64, &mut y64);
+        panel_gemv_t(&panel32, 2, 3, &c32, &mut y32);
+        for j in 0..3 {
+            assert!((y64[j] - y32[j] as f64).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn multi_parallel_path_matches_serial() {
+        // Cross the PAR_MIN_ELEMS threshold so the sharded path runs, and
+        // compare against per-RHS serial kernels. f64 dots are computed
+        // identically regardless of chunking, so results are exact.
+        let rows = 6;
+        let dim = PAR_MIN_ELEMS / 4; // rows*dim comfortably above threshold
+        let k = 3;
+        let mut rng = crate::util::rng::Rng::new(0x9E37);
+        let panel: Vec<f64> = (0..rows * dim).map(|_| rng.normal()).collect();
+        let xs: Vec<f64> = (0..k * dim).map(|_| rng.normal()).collect();
+        let mut cm = vec![0.0; rows * k];
+        panel_gemv_multi(&panel, rows, dim, &xs, k, &mut cm);
+        for r in 0..k {
+            let mut c1 = vec![0.0; rows];
+            panel_gemv(&panel, rows, dim, &xs[r * dim..(r + 1) * dim], &mut c1);
+            for i in 0..rows {
+                assert_eq!(cm[i * k + r], c1[i], "coeff ({i},{r})");
+            }
+        }
+        let mut ym = vec![0.0; k * dim];
+        panel_gemv_t_multi(&panel, rows, dim, &cm, k, &mut ym);
+        for r in 0..k {
+            let mut y1 = vec![0.0; dim];
+            let c1: Vec<f64> = (0..rows).map(|i| cm[i * k + r]).collect();
+            panel_gemv_t(&panel, rows, dim, &c1, &mut y1);
+            assert_eq!(&ym[r * dim..(r + 1) * dim], &y1[..], "rhs {r}");
+        }
     }
 }

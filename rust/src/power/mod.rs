@@ -5,8 +5,12 @@
 //! (Fung et al. 2021) by applying the power method to f_θ around z*: if the
 //! dominant singular value of ∂f/∂z exceeds 1, the network is not
 //! contractive (the paper measures 194–234 — not contractive at all).
+//!
+//! Generic over the storage precision [`Elem`]: the DEQ path probes the
+//! f32 `f_jvp` artifact directly (no f64↔f32 shuttle per iteration), dense
+//! test oracles run at f64. Radius estimates are f64 norms either way.
 
-use crate::linalg::vecops::{nrm2, scale};
+use crate::linalg::vecops::{nrm2, scale, Elem};
 use crate::util::rng::Rng;
 
 /// Result of a power-method run.
@@ -22,16 +26,16 @@ pub struct PowerResult {
 /// Power method on a linear map given as a write-into matvec closure
 /// `apply(v, out)`. The iterate is double-buffered, so the loop is
 /// allocation-free apart from whatever the operator itself does.
-pub fn power_method(
-    mut apply: impl FnMut(&[f64], &mut [f64]),
+pub fn power_method<E: Elem>(
+    mut apply: impl FnMut(&[E], &mut [E]),
     dim: usize,
     iters: usize,
     rng: &mut Rng,
 ) -> PowerResult {
-    let mut v = rng.normal_vec(dim);
+    let mut v: Vec<E> = (0..dim).map(|_| E::from_f64(rng.normal())).collect();
     let n0 = nrm2(&v);
     scale(1.0 / n0.max(1e-300), &mut v);
-    let mut av = vec![0.0; dim];
+    let mut av = vec![E::ZERO; dim];
     let mut history = Vec::with_capacity(iters);
     let mut radius = 0.0;
     for _ in 0..iters {
@@ -54,27 +58,27 @@ pub fn power_method(
 /// Nonlinear variant: the Jacobian map at z is approximated by finite
 /// differences of `f` (the paper's "power-method applied to a nonlinear
 /// function"). `f(z, out)` must be the fixed-point map (not the residual).
-pub fn nonlinear_power_method(
-    mut f: impl FnMut(&[f64], &mut [f64]),
-    z: &[f64],
+pub fn nonlinear_power_method<E: Elem>(
+    mut f: impl FnMut(&[E], &mut [E]),
+    z: &[E],
     iters: usize,
     eps: f64,
     rng: &mut Rng,
 ) -> PowerResult {
     let dim = z.len();
-    let mut fz = vec![0.0; dim];
+    let mut fz = vec![E::ZERO; dim];
     f(z, &mut fz);
-    let mut zp = vec![0.0; dim];
-    let mut fp = vec![0.0; dim];
+    let mut zp = vec![E::ZERO; dim];
+    let mut fp = vec![E::ZERO; dim];
     power_method(
-        move |v, out| {
+        move |v: &[E], out: &mut [E]| {
             // (f(z + εv) − f(z)) / ε
             for i in 0..dim {
-                zp[i] = z[i] + eps * v[i];
+                zp[i] = E::from_f64(z[i].to_f64() + eps * v[i].to_f64());
             }
             f(&zp[..], &mut fp[..]);
             for i in 0..dim {
-                out[i] = (fp[i] - fz[i]) / eps;
+                out[i] = E::from_f64((fp[i].to_f64() - fz[i].to_f64()) / eps);
             }
         },
         dim,
@@ -94,7 +98,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let diag = [5.0, 2.0, 1.0, 0.5];
         let res = power_method(
-            |v, out| {
+            |v: &[f64], out: &mut [f64]| {
                 for i in 0..4 {
                     out[i] = v[i] * diag[i];
                 }
@@ -111,7 +115,7 @@ mod tests {
         prop::check("power-spd", 8, |rng| {
             let n = 6;
             let a = DMat::random_spd(n, 0.1, 3.0, rng);
-            let res = power_method(|v, out| a.matvec(v, out), n, 500, rng);
+            let res = power_method(|v: &[f64], out: &mut [f64]| a.matvec(v, out), n, 500, rng);
             // Rayleigh check: radius must be ≥ |Av|/|v| for a random probe
             // and equal to the max singular value within tolerance: verify
             // via ‖A x‖ ≤ radius·‖x‖ (1 + tol) for random x.
@@ -133,10 +137,16 @@ mod tests {
         // matrix may have complex dominant eigenvalues → oscillation).
         let a = DMat::random_spd(n, 0.2, 4.0, &mut rng);
         let z = rng.normal_vec(n);
-        let res = nonlinear_power_method(|x, out| a.matvec(x, out), &z, 200, 1e-6, &mut rng);
+        let res = nonlinear_power_method(
+            |x: &[f64], out: &mut [f64]| a.matvec(x, out),
+            &z,
+            200,
+            1e-6,
+            &mut rng,
+        );
         // Compare against direct power method on A.
         let mut rng2 = Rng::new(8);
-        let lin = power_method(|v, out| a.matvec(v, out), n, 200, &mut rng2);
+        let lin = power_method(|v: &[f64], out: &mut [f64]| a.matvec(v, out), n, 200, &mut rng2);
         assert!(
             (res.radius - lin.radius).abs() / lin.radius < 1e-2,
             "{} vs {}",
@@ -146,10 +156,28 @@ mod tests {
     }
 
     #[test]
+    fn f32_power_method_runs_in_storage_precision() {
+        // A diagonal f32 map: the radius must come out in f64 but the
+        // iterate stays f32 end-to-end.
+        let mut rng = Rng::new(9);
+        let res = power_method(
+            |v: &[f32], out: &mut [f32]| {
+                for i in 0..3 {
+                    out[i] = v[i] * 3.0;
+                }
+            },
+            3,
+            60,
+            &mut rng,
+        );
+        assert!((res.radius - 3.0).abs() < 1e-4, "radius={}", res.radius);
+    }
+
+    #[test]
     fn history_converges() {
         let mut rng = Rng::new(3);
         let res = power_method(
-            |v, out| {
+            |v: &[f64], out: &mut [f64]| {
                 for i in 0..3 {
                     out[i] = 2.0 * v[i];
                 }

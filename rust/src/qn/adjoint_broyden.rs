@@ -16,29 +16,32 @@
 //!
 //! We maintain **both** the direct factors (B = I + Σ aᵢbᵢᵀ, in a
 //! [`FactorPanel`]) and the inverse (H = B⁻¹, via Sherman–Morrison in a
-//! [`LowRank`]) so SHINE can apply H and Hᵀ in O(m·d). The OPA update path
+//! [`LowRank`]) so SHINE can apply H and Hᵀ in O(m·d). Generic over the
+//! storage precision [`Elem`] like the rest of the family stack (f32 panels
+//! on the DEQ path, f64 default elsewhere; ‖σ‖², the Sherman–Morrison
+//! denominator and the row coefficients are always f64). The OPA update path
 //! ([`AdjointBroyden::update_ws`]) draws all of its temporaries from a
 //! [`Workspace`] and writes new factors straight into panel slots —
 //! allocation-free once warm.
 
-use crate::linalg::vecops::{dot, nrm2, panel_gemv, panel_gemv_t};
+use crate::linalg::vecops::{dot, negate, nrm2, panel_gemv, panel_gemv_t, Elem};
 use crate::qn::low_rank::LowRank;
 use crate::qn::panel::FactorPanel;
 use crate::qn::workspace::Workspace;
 use crate::qn::{InvOp, MemoryPolicy};
 
 #[derive(Clone, Debug)]
-pub struct AdjointBroyden {
+pub struct AdjointBroyden<E: Elem = f64> {
     dim: usize,
     /// Direct low-rank factors: B = I + Σ a_i b_iᵀ (u-rows = a, v-rows = b).
-    direct: FactorPanel,
+    direct: FactorPanel<E>,
     /// Inverse estimate maintained by Sherman–Morrison.
-    h: LowRank,
+    h: LowRank<E>,
     pub denom_eps: f64,
     pub skipped: usize,
 }
 
-impl AdjointBroyden {
+impl<E: Elem> AdjointBroyden<E> {
     pub fn new(dim: usize, max_mem: usize, policy: MemoryPolicy) -> Self {
         AdjointBroyden {
             dim,
@@ -58,21 +61,21 @@ impl AdjointBroyden {
     }
 
     /// out = σᵀ B_n  (row-vector result stored as a plain vector).
-    pub fn left_apply_direct(&self, sigma: &[f64], out: &mut [f64]) {
-        let mut coeffs = vec![0.0; self.direct.len()];
+    pub fn left_apply_direct(&self, sigma: &[E], out: &mut [E]) {
+        let mut coeffs = vec![0.0f64; self.direct.len()];
         self.left_apply_direct_with(sigma, out, &mut coeffs);
     }
 
     /// Workspace-scratch variant of [`AdjointBroyden::left_apply_direct`].
-    pub fn left_apply_direct_into(&self, sigma: &[f64], out: &mut [f64], ws: &mut Workspace) {
-        let mut coeffs = ws.take(self.direct.coeff_len());
+    pub fn left_apply_direct_into(&self, sigma: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+        let mut coeffs = ws.take_acc(self.direct.coeff_len());
         self.left_apply_direct_with(sigma, out, &mut coeffs);
-        ws.give(coeffs);
+        ws.give_acc(coeffs);
     }
 
     /// σᵀ B = σᵀ + Σᵢ (aᵢ·σ) bᵢᵀ — the same two-phase panel sweep as the
-    /// low-rank apply, over the direct factors.
-    fn left_apply_direct_with(&self, sigma: &[f64], out: &mut [f64], coeffs: &mut [f64]) {
+    /// low-rank apply, over the direct factors (f64 coefficients).
+    fn left_apply_direct_with(&self, sigma: &[E], out: &mut [E], coeffs: &mut [f64]) {
         out.copy_from_slice(sigma);
         let m = self.direct.len();
         if m == 0 {
@@ -86,9 +89,14 @@ impl AdjointBroyden {
     /// Update with direction σ and the row `sigma_j = σᵀ J(z_{n+1})`
     /// (computed by the caller through a VJP), drawing scratch from `ws`.
     /// Returns false if skipped. Allocation-free once `ws` is warm.
-    pub fn update_ws(&mut self, sigma: &[f64], sigma_j: &[f64], ws: &mut Workspace) -> bool {
+    pub fn update_ws(&mut self, sigma: &[E], sigma_j: &[E], ws: &mut Workspace<E>) -> bool {
         let ns2 = dot(sigma, sigma);
-        if ns2 <= 1e-300 {
+        // Scale-aware degenerate-σ guard: a = σ/‖σ‖² has ‖a‖ = 1/‖σ‖, so the
+        // update is only representable when that magnitude fits the storage
+        // precision — for f32 a merely-tiny (not zero) σ would narrow to inf
+        // and poison the panels. `from_f64` is identity for f64, where the
+        // second test can only fire after the 1e-300 floor already has.
+        if ns2 <= 1e-300 || !E::from_f64(1.0 / ns2.sqrt()).to_f64().is_finite() {
             self.skipped += 1;
             return false;
         }
@@ -103,12 +111,12 @@ impl AdjointBroyden {
         let mut c = ws.take(d);
         self.left_apply_direct_into(sigma, &mut c, ws);
         for i in 0..d {
-            c[i] = sigma_j[i] - c[i];
+            c[i] = E::from_f64(sigma_j[i].to_f64() - c[i].to_f64());
         }
         // a = σ / ‖σ‖²
         let mut a = ws.take(d);
         for i in 0..d {
-            a[i] = sigma[i] / ns2;
+            a[i] = E::from_f64(sigma[i].to_f64() / ns2);
         }
         // Sherman–Morrison for the inverse: denom = 1 + cᵀ H a.
         let mut ha = ws.take(d);
@@ -116,62 +124,58 @@ impl AdjointBroyden {
         let denom = 1.0 + dot(&c, &ha);
         if denom.abs() <= self.denom_eps * (1.0 + nrm2(&c) * nrm2(&ha)) {
             self.skipped += 1;
-            ws.give(c);
-            ws.give(a);
             ws.give(ha);
+            ws.give(a);
+            ws.give(c);
             return false;
         }
         let mut cth = ws.take(d);
         self.h.apply_t_into(&c, &mut cth, ws); // (cᵀ H)ᵀ = Hᵀ c
         self.h.push_with(|u_slot, v_slot| {
             for i in 0..d {
-                u_slot[i] = -ha[i] / denom;
+                u_slot[i] = E::from_f64(-ha[i].to_f64() / denom);
             }
             v_slot.copy_from_slice(&cth);
         });
         let (_, a_slot, b_slot) = self.direct.advance();
         a_slot.copy_from_slice(&a);
         b_slot.copy_from_slice(&c);
-        ws.give(c);
-        ws.give(a);
-        ws.give(ha);
         ws.give(cth);
+        ws.give(ha);
+        ws.give(a);
+        ws.give(c);
         true
     }
 
     /// Allocating convenience wrapper over [`AdjointBroyden::update_ws`].
-    pub fn update(&mut self, sigma: &[f64], sigma_j: &[f64]) -> bool {
+    pub fn update(&mut self, sigma: &[E], sigma_j: &[E]) -> bool {
         let mut ws = Workspace::new();
         self.update_ws(sigma, sigma_j, &mut ws)
     }
 
     /// Step direction p = −H g (forward iteration).
-    pub fn direction(&self, g: &[f64], out: &mut [f64]) {
+    pub fn direction(&self, g: &[E], out: &mut [E]) {
         self.h.apply(g, out);
-        for v in out.iter_mut() {
-            *v = -*v;
-        }
+        negate(out);
     }
 
     /// Step direction p = −H g with workspace scratch (allocation-free).
-    pub fn direction_ws(&self, g: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    pub fn direction_ws(&self, g: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         self.h.apply_into(g, out, ws);
-        for v in out.iter_mut() {
-            *v = -*v;
-        }
+        negate(out);
     }
 
-    pub fn low_rank(&self) -> &LowRank {
+    pub fn low_rank(&self) -> &LowRank<E> {
         &self.h
     }
 
-    /// Dense materialization of B (test/diagnostic use only).
+    /// Dense materialization of B (test/diagnostic use only; widens to f64).
     pub fn dense_direct(&self) -> crate::linalg::dmat::DMat {
         let mut m = crate::linalg::dmat::DMat::eye(self.dim);
         for (a, b) in self.direct.rows() {
             for r in 0..self.dim {
                 for c in 0..self.dim {
-                    m[(r, c)] += a[r] * b[c];
+                    m[(r, c)] += a[r].to_f64() * b[c].to_f64();
                 }
             }
         }
@@ -179,26 +183,26 @@ impl AdjointBroyden {
     }
 }
 
-impl InvOp for AdjointBroyden {
+impl<E: Elem> InvOp<E> for AdjointBroyden<E> {
     fn dim(&self) -> usize {
         self.dim
     }
-    fn apply(&self, x: &[f64], out: &mut [f64]) {
+    fn apply(&self, x: &[E], out: &mut [E]) {
         self.h.apply(x, out)
     }
-    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+    fn apply_t(&self, x: &[E], out: &mut [E]) {
         self.h.apply_t(x, out)
     }
-    fn apply_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    fn apply_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         self.h.apply_into(x, out, ws)
     }
-    fn apply_t_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    fn apply_t_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         self.h.apply_t_into(x, out, ws)
     }
-    fn apply_multi(&self, xs: &[f64], out: &mut [f64]) {
+    fn apply_multi(&self, xs: &[E], out: &mut [E]) {
         self.h.apply_multi(xs, out)
     }
-    fn apply_t_multi(&self, xs: &[f64], out: &mut [f64]) {
+    fn apply_t_multi(&self, xs: &[E], out: &mut [E]) {
         self.h.apply_t_multi(xs, out)
     }
 }
@@ -366,6 +370,22 @@ mod tests {
                 &format!("OPA did not improve: before={before:.3e} after={after:.3e}"),
             )
         });
+    }
+
+    #[test]
+    fn f32_guard_rejects_unrepresentable_sigma() {
+        // σ tiny-but-nonzero: ‖a‖ = 1/‖σ‖ overflows f32, so the update must
+        // be skipped instead of writing inf factors into the panels.
+        let mut ab: AdjointBroyden<f32> = AdjointBroyden::new(3, 4, MemoryPolicy::Freeze);
+        let sigma = [1e-40f32, 0.0, 0.0];
+        let sigma_j = [2e-40f32, 0.0, 0.0];
+        assert!(!ab.update(&sigma, &sigma_j));
+        assert_eq!(ab.skipped, 1);
+        assert_eq!(ab.rank(), 0);
+        // A healthy σ is still accepted and the operator stays finite.
+        assert!(ab.update(&[1.0, 0.0, 0.0], &[2.0, 0.0, 0.0]));
+        let y = ab.apply_vec(&[1.0f32, 1.0, 1.0]);
+        assert!(y.iter().all(|v| v.is_finite()));
     }
 
     #[test]

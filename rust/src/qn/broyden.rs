@@ -12,26 +12,31 @@
 //! are O(m·d). The matrix this represents satisfies the secant condition
 //! `H_{n+1} y_n = s_n` — tested below against the dense update.
 //!
+//! Generic over the storage precision [`Elem`]: the DEQ trainer runs
+//! `BroydenInverse<f32>` (half the panel traffic), the bi-level stack stays
+//! on the `f64` default. The Sherman–Morrison denominator and the update
+//! coefficients are always computed in f64.
+//!
 //! The hot-path entry points are [`BroydenInverse::update_ws`] and
 //! [`BroydenInverse::direction_ws`]: all scratch comes from a
 //! [`Workspace`], and the new factor is written straight into the panel
 //! slots, so a solver iteration performs no heap allocation.
 
-use crate::linalg::vecops::{dot, nrm2};
+use crate::linalg::vecops::{dot, negate, nrm2, Elem};
 use crate::qn::low_rank::LowRank;
 use crate::qn::workspace::Workspace;
 use crate::qn::{InvOp, MemoryPolicy};
 
 #[derive(Clone, Debug)]
-pub struct BroydenInverse {
-    h: LowRank,
+pub struct BroydenInverse<E: Elem = f64> {
+    h: LowRank<E>,
     /// Guard for the Sherman–Morrison denominator `sᵀHy`.
     pub denom_eps: f64,
     /// Count of skipped (ill-conditioned) updates.
     pub skipped: usize,
 }
 
-impl BroydenInverse {
+impl<E: Elem> BroydenInverse<E> {
     pub fn new(dim: usize, max_mem: usize, policy: MemoryPolicy) -> Self {
         BroydenInverse {
             h: LowRank::identity(dim, max_mem, policy),
@@ -42,7 +47,7 @@ impl BroydenInverse {
 
     /// Start from an existing inverse estimate (the refine strategy warm
     /// starts the backward solver's qN matrix from the forward pass's).
-    pub fn from_low_rank(h: LowRank) -> Self {
+    pub fn from_low_rank(h: LowRank<E>) -> Self {
         BroydenInverse {
             h,
             denom_eps: 1e-10,
@@ -51,7 +56,7 @@ impl BroydenInverse {
     }
 
     pub fn dim(&self) -> usize {
-        self.h.dim()
+        InvOp::dim(&self.h)
     }
 
     pub fn rank(&self) -> usize {
@@ -61,7 +66,7 @@ impl BroydenInverse {
     /// Update with a step pair (s, y) = (z⁺ − z, g⁺ − g), drawing scratch
     /// from `ws`. Returns false if the update was skipped (tiny denominator
     /// or frozen). Allocation-free once `ws` is warm.
-    pub fn update_ws(&mut self, s: &[f64], y: &[f64], ws: &mut Workspace) -> bool {
+    pub fn update_ws(&mut self, s: &[E], y: &[E], ws: &mut Workspace<E>) -> bool {
         let d = s.len();
         let mut hy = ws.take(d);
         self.h.apply_into(y, &mut hy, ws);
@@ -76,67 +81,63 @@ impl BroydenInverse {
         self.h.apply_t_into(s, &mut sth, ws); // vᵀ = sᵀH  ⇔  v = Hᵀs
         let pushed = self.h.push_with(|u_slot, v_slot| {
             for i in 0..d {
-                u_slot[i] = (s[i] - hy[i]) / denom;
+                u_slot[i] = E::from_f64((s[i].to_f64() - hy[i].to_f64()) / denom);
             }
             v_slot.copy_from_slice(&sth);
         });
-        ws.give(hy);
         ws.give(sth);
+        ws.give(hy);
         pushed
     }
 
     /// Allocating convenience wrapper over [`BroydenInverse::update_ws`].
-    pub fn update(&mut self, s: &[f64], y: &[f64]) -> bool {
+    pub fn update(&mut self, s: &[E], y: &[E]) -> bool {
         let mut ws = Workspace::new();
         self.update_ws(s, y, &mut ws)
     }
 
     /// The inverse estimate (for SHINE / refine warm starts).
-    pub fn low_rank(&self) -> &LowRank {
+    pub fn low_rank(&self) -> &LowRank<E> {
         &self.h
     }
 
-    pub fn into_low_rank(self) -> LowRank {
+    pub fn into_low_rank(self) -> LowRank<E> {
         self.h
     }
 
     /// Step direction p = −H g.
-    pub fn direction(&self, g: &[f64], out: &mut [f64]) {
+    pub fn direction(&self, g: &[E], out: &mut [E]) {
         self.h.apply(g, out);
-        for v in out.iter_mut() {
-            *v = -*v;
-        }
+        negate(out);
     }
 
     /// Step direction p = −H g with workspace scratch (allocation-free).
-    pub fn direction_ws(&self, g: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    pub fn direction_ws(&self, g: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         self.h.apply_into(g, out, ws);
-        for v in out.iter_mut() {
-            *v = -*v;
-        }
+        negate(out);
     }
 }
 
-impl InvOp for BroydenInverse {
+impl<E: Elem> InvOp<E> for BroydenInverse<E> {
     fn dim(&self) -> usize {
-        self.h.dim()
+        InvOp::dim(&self.h)
     }
-    fn apply(&self, x: &[f64], out: &mut [f64]) {
+    fn apply(&self, x: &[E], out: &mut [E]) {
         self.h.apply(x, out)
     }
-    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+    fn apply_t(&self, x: &[E], out: &mut [E]) {
         self.h.apply_t(x, out)
     }
-    fn apply_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    fn apply_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         self.h.apply_into(x, out, ws)
     }
-    fn apply_t_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    fn apply_t_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         self.h.apply_t_into(x, out, ws)
     }
-    fn apply_multi(&self, xs: &[f64], out: &mut [f64]) {
+    fn apply_multi(&self, xs: &[E], out: &mut [E]) {
         self.h.apply_multi(xs, out)
     }
-    fn apply_t_multi(&self, xs: &[f64], out: &mut [f64]) {
+    fn apply_t_multi(&self, xs: &[E], out: &mut [E]) {
         self.h.apply_t_multi(xs, out)
     }
 }
@@ -226,7 +227,7 @@ mod tests {
 
     #[test]
     fn skips_degenerate_updates() {
-        let mut b = BroydenInverse::new(3, 8, MemoryPolicy::Freeze);
+        let mut b: BroydenInverse = BroydenInverse::new(3, 8, MemoryPolicy::Freeze);
         // y such that H y ⟂ s → denominator 0 → skip.
         assert!(!b.update(&[1.0, 0.0, 0.0], &[0.0, 1.0, 0.0]));
         assert_eq!(b.skipped, 1);

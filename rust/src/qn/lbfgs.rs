@@ -13,13 +13,16 @@
 //! the approximation of `H` in precisely the direction the hypergradient
 //! formula (3) needs. Extra updates change `H` but not the iterate `z_n`.
 //!
-//! The (s, y) history lives in a [`FactorPanel`] (u-rows = s, v-rows = y)
+//! The (s, y) history lives in a [`FactorPanel<E>`] (u-rows = s, v-rows = y)
 //! with per-slot `ρ` and OPA flags in parallel rings, so accepting an update
 //! writes panel slots in place (O(1) eviction, zero allocation) and the
-//! two-loop recursion streams contiguous rows. [`LbfgsInverse::apply_into`]
-//! draws its two scratch vectors from a [`Workspace`].
+//! two-loop recursion streams contiguous rows. Per the [`Elem`] contract the
+//! pair history is stored in `E` while `ρ`, the curvature guard, and the
+//! two-loop α/β coefficients stay f64. [`InvOp::apply_into`] draws its two
+//! scratch vectors from a [`Workspace`] (`q` in storage precision, α's from
+//! the accumulator pool).
 
-use crate::linalg::vecops::{axpy, dot, scale};
+use crate::linalg::vecops::{axpy, dot, nrm2, scale, Elem};
 use crate::qn::panel::FactorPanel;
 use crate::qn::workspace::Workspace;
 use crate::qn::InvOp;
@@ -40,11 +43,12 @@ impl Default for OpaConfig {
 }
 
 #[derive(Clone, Debug)]
-pub struct LbfgsInverse {
+pub struct LbfgsInverse<E: Elem = f64> {
     dim: usize,
     /// (s, y) pair history: panel u-rows are s, v-rows are y.
-    pairs: FactorPanel,
-    /// ρ = 1/(yᵀs) per pair, indexed by *physical* panel row.
+    pairs: FactorPanel<E>,
+    /// ρ = 1/(yᵀs) per pair, indexed by *physical* panel row. Kept in f64
+    /// for both storage precisions (it is a reduction result).
     rho: Vec<f64>,
     /// OPA-extra flag per pair, indexed by physical panel row (kept distinct
     /// for diagnostics; the paper's eviction rule counts all updates).
@@ -60,7 +64,7 @@ pub struct LbfgsInverse {
     pub n_extra: usize,
 }
 
-impl LbfgsInverse {
+impl<E: Elem> LbfgsInverse<E> {
     pub fn new(dim: usize, max_mem: usize) -> Self {
         LbfgsInverse {
             dim,
@@ -78,10 +82,9 @@ impl LbfgsInverse {
         self.pairs.len()
     }
 
-    fn push(&mut self, s: &[f64], y: &[f64], extra: bool) -> bool {
+    fn push(&mut self, s: &[E], y: &[E], extra: bool) -> bool {
         let sy = dot(s, y);
-        let guard = self.curvature_eps
-            * (crate::linalg::vecops::nrm2(s) * crate::linalg::vecops::nrm2(y)).max(1e-300);
+        let guard = self.curvature_eps * (nrm2(s) * nrm2(y)).max(1e-300);
         if sy <= guard {
             self.skipped += 1;
             return false;
@@ -101,13 +104,13 @@ impl LbfgsInverse {
 
     /// Regular update from an accepted step. Allocation-free: the pair is
     /// copied straight into the panel slots.
-    pub fn update(&mut self, s: &[f64], y: &[f64]) -> bool {
+    pub fn update(&mut self, s: &[E], y: &[E]) -> bool {
         self.push(s, y, false)
     }
 
     /// OPA extra update from the pair (e_n, ŷ_n). The caller (the solver
     /// driving g evaluations) computes ŷ_n = g(z+e) − g(z).
-    pub fn update_extra(&mut self, e: &[f64], y_hat: &[f64]) -> bool {
+    pub fn update_extra(&mut self, e: &[E], y_hat: &[E]) -> bool {
         self.push(e, y_hat, true)
     }
 
@@ -119,8 +122,8 @@ impl LbfgsInverse {
     }
 
     /// Two-loop recursion: out = H x, with `q`/`alphas` scratch provided by
-    /// the caller (q: dim, alphas: ≥ rank).
-    fn two_loop_into(&self, x: &[f64], out: &mut [f64], q: &mut [f64], alphas: &mut [f64]) {
+    /// the caller (q: dim, alphas: ≥ rank; α's are f64 — reduction results).
+    fn two_loop_into(&self, x: &[E], out: &mut [E], q: &mut [E], alphas: &mut [f64]) {
         let m = self.pairs.len();
         q.copy_from_slice(x);
         for i in (0..m).rev() {
@@ -139,29 +142,29 @@ impl LbfgsInverse {
     }
 }
 
-impl InvOp for LbfgsInverse {
+impl<E: Elem> InvOp<E> for LbfgsInverse<E> {
     fn dim(&self) -> usize {
         self.dim
     }
-    fn apply(&self, x: &[f64], out: &mut [f64]) {
-        let mut q = vec![0.0; self.dim];
-        let mut alphas = vec![0.0; self.pairs.len()];
+    fn apply(&self, x: &[E], out: &mut [E]) {
+        let mut q = vec![E::ZERO; self.dim];
+        let mut alphas = vec![0.0f64; self.pairs.len()];
         self.two_loop_into(x, out, &mut q, &mut alphas);
     }
     /// BFGS inverse estimates are symmetric: Hᵀ = H.
-    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+    fn apply_t(&self, x: &[E], out: &mut [E]) {
         self.apply(x, out);
     }
-    fn apply_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    fn apply_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         let mut q = ws.take(self.dim);
         // Power-of-two-quantized take keeps the workspace buffer size stable
         // while the history fills.
-        let mut alphas = ws.take(self.pairs.coeff_len());
+        let mut alphas = ws.take_acc(self.pairs.coeff_len());
         self.two_loop_into(x, out, &mut q, &mut alphas);
+        ws.give_acc(alphas);
         ws.give(q);
-        ws.give(alphas);
     }
-    fn apply_t_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    fn apply_t_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         self.apply_into(x, out, ws);
     }
 }

@@ -1,40 +1,45 @@
-//! Limited-memory low-rank representation `H = I + Σᵢ uᵢ vᵢᵀ`.
+//! Limited-memory low-rank representation `H = I + Σᵢ uᵢ vᵢᵀ`, generic over
+//! the storage precision.
 //!
 //! Both Broyden's inverse form and the Sherman–Morrison-maintained inverse of
 //! the Adjoint Broyden matrix live in this structure. Applying `H` or `Hᵀ`
 //! costs `O(m·d)` — this is exactly why SHINE's backward pass is ~10× cheaper
 //! than the iterative inversion (Fig. 3, Table E.2).
 //!
-//! Since the FactorPanel refactor the factors live in two flat row-major
-//! panels ([`crate::qn::panel::FactorPanel`]): `H x` is a two-phase blocked
-//! kernel — the coefficient sweep `c = V x` ([`vecops::panel_gemv`]) followed
-//! by the accumulation sweep `out = x + Uᵀ c` ([`vecops::panel_gemv_t`]) —
-//! parallelized over row/column chunks with
+//! The factors live in two flat row-major panels
+//! ([`crate::qn::panel::FactorPanel`]): `H x` is a two-phase blocked
+//! kernel — the coefficient sweep `c = V x` ([`panel_gemv`], f64
+//! coefficients) followed by the accumulation sweep `out = x + Uᵀ c`
+//! ([`panel_gemv_t`]) — parallelized over row/column chunks with
 //! [`crate::util::threads::par_chunks_mut`] once the panel exceeds
 //! [`PAR_MIN_ELEMS`]. Eviction is O(1) (ring rotation), and
 //! [`LowRank::push_with`] fills the new factor's panel slots in place so
-//! solver loops never allocate.
+//! solver loops never allocate. At `E = f32` the sweeps move half the bytes
+//! of the f64 instantiation while every dot still accumulates in f64 (the
+//! [`Elem`] contract).
 
-use crate::linalg::vecops::{axpy, panel_gemv, panel_gemv_multi, panel_gemv_t, panel_gemv_t_multi};
+use crate::linalg::vecops::{
+    axpy, panel_gemv, panel_gemv_multi, panel_gemv_t, panel_gemv_t_multi, Elem,
+};
 use crate::qn::panel::FactorPanel;
 use crate::qn::workspace::Workspace;
 use crate::qn::{InvOp, MemoryPolicy};
 use crate::util::threads;
 
-/// Below this many panel elements (`rank × dim`) the apply kernels stay
-/// single-threaded: spawning scoped threads costs more than the sweep and
-/// would break the allocation-free guarantee of the solver inner loops.
-pub const PAR_MIN_ELEMS: usize = 1 << 17;
+/// Re-export of the kernel threading threshold (the constant moved to
+/// [`crate::linalg::vecops`] when the multi-RHS kernels grew their own
+/// thread paths; this alias keeps the historical `qn::low_rank` path alive).
+pub use crate::linalg::vecops::PAR_MIN_ELEMS;
 
 #[derive(Clone, Debug)]
-pub struct LowRank {
-    panel: FactorPanel,
+pub struct LowRank<E: Elem = f64> {
+    panel: FactorPanel<E>,
     policy: MemoryPolicy,
     /// Number of updates rejected because the buffer was frozen.
     pub frozen_rejects: usize,
 }
 
-impl LowRank {
+impl<E: Elem> LowRank<E> {
     pub fn identity(dim: usize, max_mem: usize, policy: MemoryPolicy) -> Self {
         LowRank {
             panel: FactorPanel::new(dim, max_mem),
@@ -64,7 +69,7 @@ impl LowRank {
     /// [`MemoryPolicy::Evict`] a full buffer drops its oldest factor in O(1);
     /// under [`MemoryPolicy::Freeze`] the update is rejected (returns false)
     /// and `fill` is never called.
-    pub fn push_with(&mut self, fill: impl FnOnce(&mut [f64], &mut [f64])) -> bool {
+    pub fn push_with(&mut self, fill: impl FnOnce(&mut [E], &mut [E])) -> bool {
         if self.panel.is_full() && self.policy == MemoryPolicy::Freeze {
             self.frozen_rejects += 1;
             return false;
@@ -75,7 +80,7 @@ impl LowRank {
     }
 
     /// Append a rank-one term `u vᵀ`. Returns false if frozen-full.
-    pub fn push(&mut self, u: &[f64], v: &[f64]) -> bool {
+    pub fn push(&mut self, u: &[E], v: &[E]) -> bool {
         debug_assert_eq!(u.len(), self.panel.dim());
         debug_assert_eq!(v.len(), self.panel.dim());
         self.push_with(|us, vs| {
@@ -87,7 +92,7 @@ impl LowRank {
     /// Factor pairs in logical (oldest → newest) order. Direct access for
     /// warm-starting a backward solver from the forward estimate (the
     /// *refine* strategy) and for dense test oracles.
-    pub fn rows(&self) -> impl Iterator<Item = (&[f64], &[f64])> + '_ {
+    pub fn rows(&self) -> impl Iterator<Item = (&[E], &[E])> + '_ {
         self.panel.rows()
     }
 
@@ -99,7 +104,7 @@ impl LowRank {
     /// Zero-copy view of the transposed operator
     /// `(I + Σ u vᵀ)ᵀ = I + Σ v uᵀ` — apply/apply_t swapped, no storage
     /// touched. Use when the backward pass only needs to *apply* `Hᵀ`.
-    pub fn t(&self) -> TransposedView<'_> {
+    pub fn t(&self) -> TransposedView<'_, E> {
         TransposedView(self)
     }
 
@@ -108,7 +113,7 @@ impl LowRank {
     /// retained) when the transposed matrix seeds a solver that will push
     /// further updates, e.g. the refine strategy's warm-started backward
     /// Broyden.
-    pub fn into_transposed(mut self) -> LowRank {
+    pub fn into_transposed(mut self) -> LowRank<E> {
         self.panel.swap_uv();
         self
     }
@@ -116,7 +121,7 @@ impl LowRank {
     /// Grow/shrink the memory budget (refine adds room for new updates on
     /// top of the forward estimate). Keeps the newest factors on shrink;
     /// growing an unwrapped (Freeze-built) estimate is O(1).
-    pub fn with_max_mem(mut self, max_mem: usize, policy: MemoryPolicy) -> LowRank {
+    pub fn with_max_mem(mut self, max_mem: usize, policy: MemoryPolicy) -> LowRank<E> {
         self.panel.resize_cap(max_mem);
         self.policy = policy;
         self
@@ -124,7 +129,7 @@ impl LowRank {
 
     /// Pack factors into flat row-major (m, d) buffers in logical order —
     /// the layout the `lowrank_apply` Pallas artifact consumes.
-    pub fn pack(&self) -> (Vec<f64>, Vec<f64>) {
+    pub fn pack(&self) -> (Vec<E>, Vec<E>) {
         let d = self.panel.dim();
         let mut u = Vec::with_capacity(self.rank() * d);
         let mut v = Vec::with_capacity(self.rank() * d);
@@ -137,8 +142,10 @@ impl LowRank {
 
     /// Two-phase blocked kernel shared by apply/apply_t: with
     /// `transpose == false` computes `out = x + Uᵀ (V x)`, with `true` the
-    /// roles of the panels swap. `coeffs` must hold at least `rank()` slots.
-    fn apply_impl(&self, transpose: bool, x: &[f64], out: &mut [f64], coeffs: &mut [f64]) {
+    /// roles of the panels swap. `coeffs` must hold at least `rank()` f64
+    /// slots (coefficients are reduction results and stay in accumulator
+    /// precision).
+    fn apply_impl(&self, transpose: bool, x: &[E], out: &mut [E], coeffs: &mut [f64]) {
         out.copy_from_slice(x);
         let m = self.panel.len();
         if m == 0 {
@@ -172,8 +179,9 @@ impl LowRank {
 
     /// Shared multi-RHS kernel: one coefficient sweep and one accumulation
     /// sweep over the panels serve all `k` right-hand sides (`xs`, `out` are
-    /// row-major `k × d`).
-    fn apply_multi_impl(&self, transpose: bool, xs: &[f64], out: &mut [f64]) {
+    /// row-major `k × d`). The sweeps themselves shard across threads above
+    /// [`PAR_MIN_ELEMS`] (see [`panel_gemv_multi`] / [`panel_gemv_t_multi`]).
+    fn apply_multi_impl(&self, transpose: bool, xs: &[E], out: &mut [E]) {
         out.copy_from_slice(xs);
         let m = self.panel.len();
         if m == 0 {
@@ -187,75 +195,75 @@ impl LowRank {
         } else {
             (self.panel.v_flat(), self.panel.u_flat())
         };
-        let mut coeffs = vec![0.0; m * k];
+        let mut coeffs = vec![0.0f64; m * k];
         panel_gemv_multi(coef_panel, m, d, xs, k, &mut coeffs);
         panel_gemv_t_multi(acc_panel, m, d, &coeffs, k, out);
     }
 }
 
-impl InvOp for LowRank {
+impl<E: Elem> InvOp<E> for LowRank<E> {
     fn dim(&self) -> usize {
         self.panel.dim()
     }
 
-    fn apply(&self, x: &[f64], out: &mut [f64]) {
-        let mut coeffs = vec![0.0; self.panel.len()];
+    fn apply(&self, x: &[E], out: &mut [E]) {
+        let mut coeffs = vec![0.0f64; self.panel.len()];
         self.apply_impl(false, x, out, &mut coeffs);
     }
 
-    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
-        let mut coeffs = vec![0.0; self.panel.len()];
+    fn apply_t(&self, x: &[E], out: &mut [E]) {
+        let mut coeffs = vec![0.0f64; self.panel.len()];
         self.apply_impl(true, x, out, &mut coeffs);
     }
 
-    fn apply_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    fn apply_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         // Power-of-two-quantized coefficient buffer: its size stays stable
         // while the rank grows, so the workspace stops reallocating after the
         // first few iterations of a solver run.
-        let mut coeffs = ws.take(self.panel.coeff_len());
+        let mut coeffs = ws.take_acc(self.panel.coeff_len());
         self.apply_impl(false, x, out, &mut coeffs);
-        ws.give(coeffs);
+        ws.give_acc(coeffs);
     }
 
-    fn apply_t_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
-        let mut coeffs = ws.take(self.panel.coeff_len());
+    fn apply_t_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+        let mut coeffs = ws.take_acc(self.panel.coeff_len());
         self.apply_impl(true, x, out, &mut coeffs);
-        ws.give(coeffs);
+        ws.give_acc(coeffs);
     }
 
-    fn apply_multi(&self, xs: &[f64], out: &mut [f64]) {
+    fn apply_multi(&self, xs: &[E], out: &mut [E]) {
         self.apply_multi_impl(false, xs, out);
     }
 
-    fn apply_t_multi(&self, xs: &[f64], out: &mut [f64]) {
+    fn apply_t_multi(&self, xs: &[E], out: &mut [E]) {
         self.apply_multi_impl(true, xs, out);
     }
 }
 
 /// Zero-copy transposed view of a [`LowRank`]: `apply` and `apply_t` swap.
 /// Created by [`LowRank::t`].
-pub struct TransposedView<'a>(&'a LowRank);
+pub struct TransposedView<'a, E: Elem = f64>(&'a LowRank<E>);
 
-impl InvOp for TransposedView<'_> {
+impl<E: Elem> InvOp<E> for TransposedView<'_, E> {
     fn dim(&self) -> usize {
-        self.0.dim()
+        InvOp::dim(self.0)
     }
-    fn apply(&self, x: &[f64], out: &mut [f64]) {
+    fn apply(&self, x: &[E], out: &mut [E]) {
         self.0.apply_t(x, out)
     }
-    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+    fn apply_t(&self, x: &[E], out: &mut [E]) {
         self.0.apply(x, out)
     }
-    fn apply_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    fn apply_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         self.0.apply_t_into(x, out, ws)
     }
-    fn apply_t_into(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+    fn apply_t_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
         self.0.apply_into(x, out, ws)
     }
-    fn apply_multi(&self, xs: &[f64], out: &mut [f64]) {
+    fn apply_multi(&self, xs: &[E], out: &mut [E]) {
         self.0.apply_t_multi(xs, out)
     }
-    fn apply_t_multi(&self, xs: &[f64], out: &mut [f64]) {
+    fn apply_t_multi(&self, xs: &[E], out: &mut [E]) {
         self.0.apply_multi(xs, out)
     }
 }
@@ -269,7 +277,7 @@ mod tests {
 
     /// Dense materialization for oracle comparison.
     fn dense(lr: &LowRank) -> DMat {
-        let n = lr.dim();
+        let n = InvOp::dim(lr);
         let mut m = DMat::eye(n);
         for (u, v) in lr.rows() {
             for i in 0..n {
@@ -421,7 +429,7 @@ mod tests {
         let view = lr.t();
         assert_eq!(view.apply_vec(&x), want_t);
         assert_eq!(view.apply_t_vec(&x), want);
-        assert_eq!(view.dim(), n);
+        assert_eq!(InvOp::dim(&view), n);
         // Owned O(1) transpose: same operator.
         let owned = lr.clone().into_transposed();
         assert_eq!(owned.apply_vec(&x), want_t);
@@ -483,6 +491,39 @@ mod tests {
                 "idx {i}: {} vs {}",
                 got[i],
                 want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn f32_instantiation_tracks_f64() {
+        // The same factor stream through LowRank<f32> and LowRank<f64> must
+        // produce operators that agree to f32 tolerance (the precision-
+        // parity integration test covers the full solver stack; this is the
+        // in-module smoke check).
+        let mut rng = Rng::new(41);
+        let n = 24;
+        let mut lr64 = LowRank::identity(n, 6, MemoryPolicy::Evict);
+        let mut lr32: LowRank<f32> = LowRank::identity(n, 6, MemoryPolicy::Evict);
+        for _ in 0..8 {
+            let u = rng.normal_vec(n);
+            let v = rng.normal_vec(n);
+            let u32v: Vec<f32> = u.iter().map(|&a| a as f32).collect();
+            let v32v: Vec<f32> = v.iter().map(|&a| a as f32).collect();
+            lr64.push(&u, &v);
+            lr32.push(&u32v, &v32v);
+        }
+        let x = rng.normal_vec(n);
+        let x32: Vec<f32> = x.iter().map(|&a| a as f32).collect();
+        let want = lr64.apply_vec(&x);
+        let got = lr32.apply_vec(&x32);
+        for i in 0..n {
+            let w = want[i];
+            assert!(
+                (got[i] as f64 - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                "idx {i}: {} vs {}",
+                got[i],
+                w
             );
         }
     }

@@ -16,20 +16,37 @@
 //!
 //! # Storage and execution architecture
 //!
+//! The whole family stack is **precision-generic** over the storage scalar
+//! [`crate::linalg::vecops::Elem`] (`f32` or `f64`), with defaults of `f64`
+//! everywhere so the bi-level/HOAG experiments read exactly as before. The
+//! precision contract is *store narrow, accumulate wide*: panels, iterates
+//! and cotangents live in `E`, while every reduction (dot products, norms,
+//! Sherman–Morrison denominators, `ρ = 1/yᵀs`, two-loop α/β) is carried in
+//! `f64` — see [`crate::linalg::vecops`]. The DEQ path instantiates the
+//! stack at `E = f32` end-to-end (the fixed point is f32 at the artifact
+//! boundary anyway), halving the panel memory traffic that dominates the
+//! backward cost at MDEQ scale; the bi-level path stays at `E = f64`. Both
+//! instantiations coexist — `LowRank<f32>` and `LowRank<f64>` are
+//! independent monomorphizations of the same kernels, proven equivalent to
+//! f32 tolerance by `rust/tests/precision_parity.rs`.
+//!
 //! All three families store their rank-one factors in a
-//! [`panel::FactorPanel`]: two flat row-major `m × d` panels behind a ring
-//! buffer, so applying `H`/`Hᵀ` is a pair of contiguous panel sweeps
+//! [`panel::FactorPanel<E>`]: two flat row-major `m × d` panels behind a
+//! ring buffer, so applying `H`/`Hᵀ` is a pair of contiguous panel sweeps
 //! (`panel_gemv` → `panel_gemv_t` in [`crate::linalg::vecops`], thread-
 //! parallel above a size threshold) and eviction is an O(1) ring rotation.
 //! Updates write into panel slots in place, and every scratch vector a
-//! solver iteration needs comes from a [`workspace::Workspace`] arena —
-//! after warm-up, the hot loops of `broyden_solve` and friends perform zero
-//! heap allocations (enforced by the counting-allocator test in
+//! solver iteration needs comes from a [`workspace::Workspace<E>`] arena —
+//! storage scratch in `E`, reduction scratch in `f64` via
+//! [`workspace::Workspace::take_acc`]. After warm-up, the hot loops of
+//! `broyden_solve` and friends perform zero heap allocations in **both**
+//! precisions (enforced by the counting-allocator test in
 //! `rust/tests/qn_alloc.rs`).
 //!
 //! For serving many cotangents at once, [`InvOp`] also exposes multi-RHS
 //! application (`apply_multi`/`apply_t_multi`): a whole batch of SHINE
-//! backward directions is computed in one panel sweep.
+//! backward directions is computed in one panel sweep, sharded across
+//! threads for large batches (`panel_gemv_multi`/`panel_gemv_t_multi`).
 
 pub mod adjoint_broyden;
 pub mod broyden;
@@ -45,26 +62,30 @@ pub use low_rank::LowRank;
 pub use panel::FactorPanel;
 pub use workspace::Workspace;
 
+use crate::linalg::vecops::Elem;
+
 /// An estimate of the *inverse* Jacobian/Hessian that can be applied to
-/// vectors from both sides. This is what the forward pass hands to the
-/// backward pass under SHINE.
-pub trait InvOp {
+/// vectors from both sides, generic over the storage precision `E`
+/// (defaulting to `f64`, so `dyn InvOp` keeps meaning the double-precision
+/// operator). This is what the forward pass hands to the backward pass
+/// under SHINE.
+pub trait InvOp<E: Elem = f64> {
     /// dimension d of the underlying operator
     fn dim(&self) -> usize;
     /// out = H x   (approximates J⁻¹ x)
-    fn apply(&self, x: &[f64], out: &mut [f64]);
+    fn apply(&self, x: &[E], out: &mut [E]);
     /// out = Hᵀ x  (approximates J⁻ᵀ x; the direction eq. (3) needs)
-    fn apply_t(&self, x: &[f64], out: &mut [f64]);
+    fn apply_t(&self, x: &[E], out: &mut [E]);
 
     /// out = H x, drawing every scratch buffer from `ws` — allocation-free
     /// after the workspace has warmed up. Implementations that need no
     /// scratch fall through to [`InvOp::apply`].
-    fn apply_into(&self, x: &[f64], out: &mut [f64], _ws: &mut Workspace) {
+    fn apply_into(&self, x: &[E], out: &mut [E], _ws: &mut Workspace<E>) {
         self.apply(x, out);
     }
 
     /// out = Hᵀ x with workspace-provided scratch (see [`InvOp::apply_into`]).
-    fn apply_t_into(&self, x: &[f64], out: &mut [f64], _ws: &mut Workspace) {
+    fn apply_t_into(&self, x: &[E], out: &mut [E], _ws: &mut Workspace<E>) {
         self.apply_t(x, out);
     }
 
@@ -73,7 +94,7 @@ pub trait InvOp {
     /// column; panel-backed implementations override this with a single
     /// blocked sweep so a batch of SHINE cotangents costs one pass over the
     /// factors.
-    fn apply_multi(&self, xs: &[f64], out: &mut [f64]) {
+    fn apply_multi(&self, xs: &[E], out: &mut [E]) {
         let d = self.dim();
         debug_assert_eq!(xs.len() % d, 0);
         debug_assert_eq!(xs.len(), out.len());
@@ -83,7 +104,7 @@ pub trait InvOp {
     }
 
     /// Multi-RHS `Hᵀ` application (see [`InvOp::apply_multi`]).
-    fn apply_t_multi(&self, xs: &[f64], out: &mut [f64]) {
+    fn apply_t_multi(&self, xs: &[E], out: &mut [E]) {
         let d = self.dim();
         debug_assert_eq!(xs.len() % d, 0);
         debug_assert_eq!(xs.len(), out.len());
@@ -93,30 +114,31 @@ pub trait InvOp {
     }
 
     /// Convenience allocating forms.
-    fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0; x.len()];
+    fn apply_vec(&self, x: &[E]) -> Vec<E> {
+        let mut out = vec![E::ZERO; x.len()];
         self.apply(x, &mut out);
         out
     }
-    fn apply_t_vec(&self, x: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0; x.len()];
+    fn apply_t_vec(&self, x: &[E]) -> Vec<E> {
+        let mut out = vec![E::ZERO; x.len()];
         self.apply_t(x, &mut out);
         out
     }
 }
 
 /// The identity operator — the Jacobian-Free method's "inverse estimate"
-/// (Fung et al. 2021): J⁻¹ ≈ I.
+/// (Fung et al. 2021): J⁻¹ ≈ I. Implements [`InvOp`] at every storage
+/// precision.
 pub struct IdentityOp(pub usize);
 
-impl InvOp for IdentityOp {
+impl<E: Elem> InvOp<E> for IdentityOp {
     fn dim(&self) -> usize {
         self.0
     }
-    fn apply(&self, x: &[f64], out: &mut [f64]) {
+    fn apply(&self, x: &[E], out: &mut [E]) {
         out.copy_from_slice(x);
     }
-    fn apply_t(&self, x: &[f64], out: &mut [f64]) {
+    fn apply_t(&self, x: &[E], out: &mut [E]) {
         out.copy_from_slice(x);
     }
 }
@@ -137,17 +159,20 @@ mod tests {
     #[test]
     fn identity_op_is_identity() {
         let id = IdentityOp(3);
-        let x = [1.0, -2.0, 3.0];
+        let x = [1.0f64, -2.0, 3.0];
         assert_eq!(id.apply_vec(&x), x.to_vec());
         assert_eq!(id.apply_t_vec(&x), x.to_vec());
-        assert_eq!(id.dim(), 3);
+        assert_eq!(InvOp::<f64>::dim(&id), 3);
+        // The same operator serves f32 storage.
+        let x32 = [1.0f32, -2.0, 3.0];
+        assert_eq!(id.apply_vec(&x32), x32.to_vec());
     }
 
     #[test]
     fn default_multi_loops_columns() {
         let id = IdentityOp(2);
-        let xs = [1.0, 2.0, 3.0, 4.0];
-        let mut out = [0.0; 4];
+        let xs = [1.0f64, 2.0, 3.0, 4.0];
+        let mut out = [0.0f64; 4];
         id.apply_multi(&xs, &mut out);
         assert_eq!(out, xs);
         id.apply_t_multi(&xs, &mut out);
@@ -158,7 +183,7 @@ mod tests {
     fn default_into_falls_through() {
         let id = IdentityOp(3);
         let mut ws = Workspace::new();
-        let mut out = [0.0; 3];
+        let mut out = [0.0f64; 3];
         id.apply_into(&[1.0, 2.0, 3.0], &mut out, &mut ws);
         assert_eq!(out, [1.0, 2.0, 3.0]);
     }

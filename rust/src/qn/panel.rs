@@ -1,13 +1,17 @@
 //! Contiguous factor storage for identity-plus-low-rank operators.
 //!
 //! [`FactorPanel`] keeps the rank-one factors of `H = I + Σᵢ uᵢ vᵢᵀ` in two
-//! flat row-major panels (`m × d` each) backed by a ring buffer:
+//! flat row-major panels (`m × d` each) backed by a ring buffer, generic
+//! over the storage precision [`Elem`] (f32 panels for the DEQ path, f64
+//! for the bi-level experiments — same code, see the precision contract in
+//! [`crate::linalg::vecops`]):
 //!
 //! * **apply is one linear sweep** — the kernels in
 //!   [`crate::linalg::vecops`] (`panel_gemv` / `panel_gemv_t`) stream the
 //!   panels front to back, so the O(m·d) low-rank application that SHINE's
 //!   speed claim rests on (PAPER §2.1, Fig. 3) runs at memory bandwidth
-//!   instead of chasing `Vec<Vec<f64>>` pointers;
+//!   instead of chasing `Vec<Vec<f64>>` pointers — and at half the bytes
+//!   per element in the f32 instantiation;
 //! * **evict is O(1)** — replacing the oldest factor overwrites one row and
 //!   bumps the ring head, where the old representation paid an O(m·d)
 //!   `Vec::remove(0)` memmove per eviction;
@@ -23,27 +27,30 @@
 //! [`FactorPanel::row`] / [`FactorPanel::phys`] for the update rules that
 //! need it (L-BFGS two-loop recursion).
 
+use crate::linalg::vecops::Elem;
+
 /// Flat row-major storage of up to `cap` factor pairs `(uᵢ, vᵢ)` of
-/// dimension `dim`. Backing storage grows geometrically up to `cap` as rows
-/// are pushed (callers routinely pass generous caps like `max_iters + 64`,
-/// which would be gigabytes if allocated eagerly at DEQ-scale `dim`);
-/// once the high-water mark is reached, pushes never allocate again.
+/// dimension `dim`, in storage precision `E`. Backing storage grows
+/// geometrically up to `cap` as rows are pushed (callers routinely pass
+/// generous caps like `max_iters + 64`, which would be gigabytes if
+/// allocated eagerly at DEQ-scale `dim`); once the high-water mark is
+/// reached, pushes never allocate again.
 #[derive(Clone, Debug)]
-pub struct FactorPanel {
+pub struct FactorPanel<E: Elem = f64> {
     dim: usize,
     cap: usize,
     len: usize,
     /// Ring start: logical row 0 lives at physical row `head`.
     head: usize,
     /// Row-major panel of u-factors (allocated rows × dim).
-    u: Vec<f64>,
+    u: Vec<E>,
     /// Row-major panel of v-factors (allocated rows × dim).
-    v: Vec<f64>,
+    v: Vec<E>,
 }
 
-impl FactorPanel {
+impl<E: Elem> FactorPanel<E> {
     /// Create a panel for up to `cap` factors of dimension `dim`.
-    pub fn new(dim: usize, cap: usize) -> FactorPanel {
+    pub fn new(dim: usize, cap: usize) -> FactorPanel<E> {
         FactorPanel {
             dim,
             cap,
@@ -100,26 +107,26 @@ impl FactorPanel {
 
     /// Logical row `i` (0 = oldest, `len-1` = newest) as `(uᵢ, vᵢ)` slices.
     #[inline]
-    pub fn row(&self, i: usize) -> (&[f64], &[f64]) {
+    pub fn row(&self, i: usize) -> (&[E], &[E]) {
         let p = self.phys(i) * self.dim;
         (&self.u[p..p + self.dim], &self.v[p..p + self.dim])
     }
 
     /// Iterate rows in logical (oldest → newest) order.
-    pub fn rows(&self) -> impl Iterator<Item = (&[f64], &[f64])> + '_ {
+    pub fn rows(&self) -> impl Iterator<Item = (&[E], &[E])> + '_ {
         (0..self.len).map(move |i| self.row(i))
     }
 
     /// The live portion of the u-panel as one contiguous `len × dim` block
     /// (physical order — valid for order-independent sweeps only).
     #[inline]
-    pub fn u_flat(&self) -> &[f64] {
+    pub fn u_flat(&self) -> &[E] {
         &self.u[..self.len * self.dim]
     }
 
     /// The live portion of the v-panel as one contiguous `len × dim` block.
     #[inline]
-    pub fn v_flat(&self) -> &[f64] {
+    pub fn v_flat(&self) -> &[E] {
         &self.v[..self.len * self.dim]
     }
 
@@ -129,7 +136,7 @@ impl FactorPanel {
     /// high-water mark is still rising (geometric growth, bounded by `cap`);
     /// at steady state — ring full, or rank no longer growing — this never
     /// touches the allocator.
-    pub fn advance(&mut self) -> (usize, &mut [f64], &mut [f64]) {
+    pub fn advance(&mut self) -> (usize, &mut [E], &mut [E]) {
         assert!(self.cap > 0, "FactorPanel::advance on zero-capacity panel");
         let phys = if self.len < self.cap {
             // Ring is not full: head is still 0, rows are 0..len.
@@ -151,8 +158,8 @@ impl FactorPanel {
         if self.u.len() < need {
             let have_rows = if self.dim == 0 { 0 } else { self.u.len() / self.dim };
             let new_rows = (have_rows * 2).max(4).max(phys + 1).min(self.cap);
-            self.u.resize(new_rows * self.dim, 0.0);
-            self.v.resize(new_rows * self.dim, 0.0);
+            self.u.resize(new_rows * self.dim, E::ZERO);
+            self.v.resize(new_rows * self.dim, E::ZERO);
         }
         let o = phys * self.dim;
         (
@@ -163,7 +170,7 @@ impl FactorPanel {
     }
 
     /// Copy-push a factor pair (convenience over [`FactorPanel::advance`]).
-    pub fn push(&mut self, u: &[f64], v: &[f64]) {
+    pub fn push(&mut self, u: &[E], v: &[E]) {
         debug_assert_eq!(u.len(), self.dim);
         debug_assert_eq!(v.len(), self.dim);
         let (_, us, vs) = self.advance();
@@ -189,7 +196,7 @@ impl FactorPanel {
     /// Rebuild into a panel of capacity `cap`, keeping the newest
     /// `min(len, cap)` factors in logical order. O(m·d) — used only when a
     /// strategy resizes its memory budget, never inside a solver loop.
-    pub fn with_cap(&self, cap: usize) -> FactorPanel {
+    pub fn with_cap(&self, cap: usize) -> FactorPanel<E> {
         let mut out = FactorPanel::new(self.dim, cap);
         let keep = self.len.min(cap);
         for i in (self.len - keep)..self.len {
@@ -320,7 +327,7 @@ mod tests {
 
     #[test]
     fn advance_returns_fillable_slots() {
-        let mut p = FactorPanel::new(3, 1);
+        let mut p: FactorPanel = FactorPanel::new(3, 1);
         {
             let (phys, us, vs) = p.advance();
             assert_eq!(phys, 0);
@@ -329,5 +336,18 @@ mod tests {
         }
         assert_eq!(p.row(0).0, &[1.0, 2.0, 3.0]);
         assert_eq!(p.row(0).1, &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn f32_panel_round_trips() {
+        let mut p: FactorPanel<f32> = FactorPanel::new(2, 2);
+        p.push(&[1.5, -2.0], &[0.5, 4.0]);
+        p.push(&[3.0, 0.25], &[-1.0, 2.0]);
+        p.push(&[7.0, 8.0], &[9.0, 10.0]); // evicts the first pair
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.row(0).0, &[3.0f32, 0.25]);
+        assert_eq!(p.row(1).1, &[9.0f32, 10.0]);
+        p.swap_uv();
+        assert_eq!(p.row(1).0, &[9.0f32, 10.0]);
     }
 }

@@ -9,42 +9,84 @@
 //! stabilize and the loop performs **zero heap allocations** (verified by the
 //! counting-allocator test in `rust/tests/qn_alloc.rs`).
 //!
-//! The arena is deliberately dumb: buffers are plain `Vec<f64>` so callers
-//! keep full-slice ergonomics, `take` zero-fills (an O(n) memset, negligible
-//! next to the O(m·d) panel sweeps it brackets), and nothing is lifetime-
-//! tracked — forgetting a `give` merely re-allocates on the next `take`.
+//! The arena is generic over the storage precision [`Elem`] and keeps **two
+//! pools**, mirroring the crate's precision contract (see
+//! [`crate::linalg::vecops`]):
+//!
+//! * the *storage pool* (`take`/`give`) hands out `Vec<E>` buffers for
+//!   iterates, residuals and panel slots — f32 on the DEQ path, f64 on the
+//!   bi-level path;
+//! * the *accumulator pool* (`take_acc`/`give_acc`) hands out `Vec<f64>`
+//!   buffers for reduction results — panel-sweep coefficients, two-loop
+//!   α's, Anderson Gram systems — which stay in wide precision even when
+//!   storage is f32.
+//!
+//! The arena is deliberately dumb: buffers are plain `Vec`s so callers keep
+//! full-slice ergonomics, `take` zero-fills (an O(n) memset, negligible next
+//! to the O(m·d) panel sweeps it brackets), and nothing is lifetime-tracked
+//! — forgetting a `give` merely re-allocates on the next `take`. One
+//! LIFO discipline matters for staying allocation-free: return buffers in
+//! the reverse order you took them when their lengths differ, so the next
+//! round of takes pops buffers whose capacity already fits.
 
-/// LIFO pool of reusable `f64` buffers.
-#[derive(Clone, Debug, Default)]
-pub struct Workspace {
-    pool: Vec<Vec<f64>>,
+use crate::linalg::vecops::Elem;
+
+/// LIFO pool of reusable buffers in storage precision `E`, plus a secondary
+/// pool of `f64` accumulator buffers.
+#[derive(Clone, Debug)]
+pub struct Workspace<E: Elem = f64> {
+    pool: Vec<Vec<E>>,
+    acc: Vec<Vec<f64>>,
 }
 
-impl Workspace {
-    pub fn new() -> Workspace {
+impl<E: Elem> Workspace<E> {
+    pub fn new() -> Workspace<E> {
         Workspace {
             pool: Vec::with_capacity(16),
+            acc: Vec::with_capacity(8),
         }
     }
 
-    /// Check out a zero-filled buffer of length `n`. Reuses the most
+    /// Check out a zero-filled storage buffer of length `n`. Reuses the most
     /// recently returned buffer when one is available (its capacity is kept
     /// across uses, so steady-state takes never allocate).
-    pub fn take(&mut self, n: usize) -> Vec<f64> {
+    pub fn take(&mut self, n: usize) -> Vec<E> {
         let mut b = self.pool.pop().unwrap_or_default();
+        b.clear();
+        b.resize(n, E::ZERO);
+        b
+    }
+
+    /// Return a storage buffer to the pool for reuse.
+    pub fn give(&mut self, b: Vec<E>) {
+        self.pool.push(b);
+    }
+
+    /// Check out a zero-filled `f64` accumulator buffer of length `n` (for
+    /// dot-product coefficients, Gram matrices, …). Same LIFO reuse as
+    /// [`Workspace::take`], drawn from a separate pool so narrow storage
+    /// buffers and wide accumulator buffers never alias.
+    pub fn take_acc(&mut self, n: usize) -> Vec<f64> {
+        let mut b = self.acc.pop().unwrap_or_default();
         b.clear();
         b.resize(n, 0.0);
         b
     }
 
-    /// Return a buffer to the pool for reuse.
-    pub fn give(&mut self, b: Vec<f64>) {
-        self.pool.push(b);
+    /// Return an accumulator buffer to the pool for reuse.
+    pub fn give_acc(&mut self, b: Vec<f64>) {
+        self.acc.push(b);
     }
 
-    /// Number of buffers currently parked in the pool.
+    /// Number of storage buffers currently parked in the pool.
     pub fn pooled(&self) -> usize {
         self.pool.len()
+    }
+}
+
+impl<E: Elem> Default for Workspace<E> {
+    fn default() -> Self {
+        Workspace::new()
     }
 }
 
@@ -66,7 +108,7 @@ mod tests {
 
     #[test]
     fn reuses_capacity() {
-        let mut ws = Workspace::new();
+        let mut ws: Workspace = Workspace::new();
         let b = ws.take(100);
         let ptr = b.as_ptr();
         ws.give(b);
@@ -75,6 +117,24 @@ mod tests {
         assert_eq!(b2.as_ptr(), ptr);
         assert_eq!(ws.pooled(), 0);
         ws.give(b2);
+        assert_eq!(ws.pooled(), 1);
+    }
+
+    #[test]
+    fn acc_pool_is_separate() {
+        // An f32 workspace still hands out f64 accumulator scratch, and the
+        // two pools never mix.
+        let mut ws: Workspace<f32> = Workspace::new();
+        let s = ws.take(4);
+        assert_eq!(s, vec![0.0f32; 4]);
+        let a = ws.take_acc(4);
+        assert_eq!(a, vec![0.0f64; 4]);
+        ws.give(s);
+        ws.give_acc(a);
+        assert_eq!(ws.pooled(), 1);
+        let a2 = ws.take_acc(2);
+        assert_eq!(a2.len(), 2);
+        // Storage pool untouched by the acc take.
         assert_eq!(ws.pooled(), 1);
     }
 }

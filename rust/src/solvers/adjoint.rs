@@ -7,12 +7,16 @@
 //! have to store the activations of g_θ(z) ... but also perform the
 //! vector-Jacobian product in addition to the function evaluation").
 //!
+//! Generic over the storage precision [`Elem`] like the rest of the solver
+//! stack: the DEQ trainer instantiates it at `f32` so residuals, VJPs and
+//! the qN panels all stay in artifact precision with no boundary casts.
+//!
 //! Residuals and VJPs use the write-into convention (`g(z, out)`,
 //! `vjp(z, σ, out)`); the loop state is preallocated and the qN updates draw
 //! scratch from a [`Workspace`], mirroring
 //! [`crate::solvers::fixed_point::broyden_solve_ws`].
 
-use crate::linalg::vecops::{nrm2, sub};
+use crate::linalg::vecops::{add, nrm2, sub, Elem};
 use crate::qn::adjoint_broyden::AdjointBroyden;
 use crate::qn::workspace::Workspace;
 use crate::qn::{InvOp, MemoryPolicy};
@@ -52,12 +56,12 @@ impl Default for AdjointFpOptions {
 }
 
 #[derive(Debug)]
-pub struct AdjointFpResult {
-    pub z: Vec<f64>,
+pub struct AdjointFpResult<E: Elem = f64> {
+    pub z: Vec<E>,
     pub g_norm: f64,
     pub iters: usize,
     pub converged: bool,
-    pub qn: AdjointBroyden,
+    pub qn: AdjointBroyden<E>,
     pub trace: Trace,
     pub n_vjps: usize,
 }
@@ -68,49 +72,47 @@ pub struct AdjointFpResult {
 /// * `vjp` — `(z, σ, out) ↦ out = σᵀ J_g(z)` (auto-diff VJP in the DEQ case).
 /// * `outer_grad` — `(z, out) ↦ out = ∇_z L(z)` for the OPA direction;
 ///   required when `opts.opa_freq` is set.
-pub fn adjoint_broyden_solve(
-    g: impl FnMut(&[f64], &mut [f64]),
-    vjp: impl FnMut(&[f64], &[f64], &mut [f64]),
-    outer_grad: Option<&mut dyn FnMut(&[f64], &mut [f64])>,
-    z0: &[f64],
+pub fn adjoint_broyden_solve<E: Elem>(
+    g: impl FnMut(&[E], &mut [E]),
+    vjp: impl FnMut(&[E], &[E], &mut [E]),
+    outer_grad: Option<&mut dyn FnMut(&[E], &mut [E])>,
+    z0: &[E],
     opts: &AdjointFpOptions,
-) -> AdjointFpResult {
+) -> AdjointFpResult<E> {
     let mut ws = Workspace::new();
     adjoint_broyden_solve_ws(g, vjp, outer_grad, z0, opts, &mut ws)
 }
 
 /// [`adjoint_broyden_solve`] with a caller-provided scratch arena.
-pub fn adjoint_broyden_solve_ws(
-    mut g: impl FnMut(&[f64], &mut [f64]),
-    mut vjp: impl FnMut(&[f64], &[f64], &mut [f64]),
-    mut outer_grad: Option<&mut dyn FnMut(&[f64], &mut [f64])>,
-    z0: &[f64],
+pub fn adjoint_broyden_solve_ws<E: Elem>(
+    mut g: impl FnMut(&[E], &mut [E]),
+    mut vjp: impl FnMut(&[E], &[E], &mut [E]),
+    mut outer_grad: Option<&mut dyn FnMut(&[E], &mut [E])>,
+    z0: &[E],
     opts: &AdjointFpOptions,
-    ws: &mut Workspace,
-) -> AdjointFpResult {
+    ws: &mut Workspace<E>,
+) -> AdjointFpResult<E> {
     let d = z0.len();
     let sw = Stopwatch::start();
     let mut qn = AdjointBroyden::new(d, opts.memory, MemoryPolicy::Freeze);
     let mut z = z0.to_vec();
-    let mut gz = vec![0.0; d];
+    let mut gz = vec![E::ZERO; d];
     g(&z, &mut gz);
     let mut g_norm = nrm2(&gz);
     let mut trace = Trace::with_capacity(opts.max_iters.saturating_add(1).min(1 << 16));
     trace.push(g_norm, sw.elapsed());
-    let mut p = vec![0.0; d];
-    let mut z_new = vec![0.0; d];
-    let mut g_new = vec![0.0; d];
-    let mut sigma = vec![0.0; d];
-    let mut sigma_j = vec![0.0; d];
-    let mut grad_l = vec![0.0; d];
-    let mut v_dir = vec![0.0; d];
+    let mut p = vec![E::ZERO; d];
+    let mut z_new = vec![E::ZERO; d];
+    let mut g_new = vec![E::ZERO; d];
+    let mut sigma = vec![E::ZERO; d];
+    let mut sigma_j = vec![E::ZERO; d];
+    let mut grad_l = vec![E::ZERO; d];
+    let mut v_dir = vec![E::ZERO; d];
     let mut iters = 0;
     let mut n_vjps = 0;
     while g_norm > opts.tol && iters < opts.max_iters {
         qn.direction_ws(&gz, &mut p, ws);
-        for i in 0..d {
-            z_new[i] = z[i] + p[i];
-        }
+        add(&z, &p, &mut z_new);
         g(&z_new, &mut g_new);
         // Regular adjoint update at z_{n+1}.
         match opts.sigma {
@@ -158,10 +160,7 @@ mod tests {
     use crate::util::prop;
 
     /// g(z) = z − (Az + b): J = I − A constant, easy VJP.
-    fn linear_case(
-        rng: &mut crate::util::rng::Rng,
-        n: usize,
-    ) -> (DMat, Vec<f64>, Vec<f64>) {
+    fn linear_case(rng: &mut crate::util::rng::Rng, n: usize) -> (DMat, Vec<f64>, Vec<f64>) {
         let a = DMat::randn(n, n, 0.3 / (n as f64).sqrt(), rng);
         let b = rng.normal_vec(n);
         let mut ia = DMat::eye(n);
@@ -180,13 +179,13 @@ mod tests {
             let n = 8 + rng.below(10);
             let (a, b, z_star) = linear_case(rng, n);
             let res = adjoint_broyden_solve(
-                |z, out| {
+                |z: &[f64], out: &mut [f64]| {
                     a.matvec(z, out); // out = Az
                     for i in 0..n {
                         out[i] = z[i] - out[i] - b[i];
                     }
                 },
-                |_z, sigma, out| {
+                |_z: &[f64], sigma: &[f64], out: &mut [f64]| {
                     // σᵀ(I − A) = σ − Aᵀσ
                     a.matvec_t(sigma, out);
                     for i in 0..n {
@@ -225,13 +224,13 @@ mod tests {
                 let gl = grad_l.clone();
                 let mut og = move |_z: &[f64], out: &mut [f64]| out.copy_from_slice(&gl);
                 let res = adjoint_broyden_solve(
-                    |z, out| {
+                    |z: &[f64], out: &mut [f64]| {
                         a.matvec(z, out);
                         for i in 0..n {
                             out[i] = z[i] - out[i] - b[i];
                         }
                     },
-                    |_z, sigma, out| {
+                    |_z: &[f64], sigma: &[f64], out: &mut [f64]| {
                         a.matvec_t(sigma, out);
                         for i in 0..n {
                             out[i] = sigma[i] - out[i];

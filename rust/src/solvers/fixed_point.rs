@@ -5,6 +5,11 @@
 //! derivative-free backtracking. It returns the final iterate *and* the qN
 //! inverse estimate — the object SHINE shares with the backward pass.
 //!
+//! Every solver here is generic over the storage precision
+//! [`Elem`] (`f32` for the DEQ path, `f64` default elsewhere); residual
+//! norms, mixing weights and the Anderson Gram system stay in f64 per the
+//! crate's precision contract ([`crate::linalg::vecops`]).
+//!
 //! Residual evaluations use the write-into convention `g(z, out)` so the
 //! solver loops are allocation-free: every iterate/residual/step buffer is
 //! preallocated and double-buffered with `mem::swap`, and the qN update draws
@@ -13,9 +18,14 @@
 //! across many solves (the DEQ trainer does this across training steps).
 //!
 //! [`anderson_solve`] and [`picard_solve`] are baselines used in tests and
-//! ablations.
+//! ablations. Since the incremental-Gram rework, [`anderson_solve_ws`] is
+//! allocation-free per iteration too: the k×k Gram matrix persists in the
+//! workspace's accumulator pool and is updated by a row/column shift per
+//! evicted history entry plus one fresh row of dots — O(k·d) per iteration
+//! instead of the old O(k²·d) rebuild — and the small solve runs in place
+//! (no `DMat`/LU allocation).
 
-use crate::linalg::vecops::{nrm2, sub};
+use crate::linalg::vecops::{add_scaled, axpy, dot, nrm2, sub, zero, Elem};
 use crate::qn::broyden::BroydenInverse;
 use crate::qn::workspace::Workspace;
 use crate::qn::MemoryPolicy;
@@ -48,24 +58,24 @@ impl Default for FpOptions {
 }
 
 #[derive(Debug)]
-pub struct FpResult {
-    pub z: Vec<f64>,
+pub struct FpResult<E: Elem = f64> {
+    pub z: Vec<E>,
     pub g_norm: f64,
     pub iters: usize,
     pub converged: bool,
     /// Forward quasi-Newton estimate (H ≈ J_g⁻¹) — what SHINE reuses.
-    pub qn: BroydenInverse,
+    pub qn: BroydenInverse<E>,
     pub trace: Trace,
     /// Number of g evaluations (≠ iters when line search is active).
     pub n_g_evals: usize,
 }
 
 /// Broyden root solve of g(z) = 0 starting from `z0` (owns its workspace).
-pub fn broyden_solve(
-    g: impl FnMut(&[f64], &mut [f64]),
-    z0: &[f64],
+pub fn broyden_solve<E: Elem>(
+    g: impl FnMut(&[E], &mut [E]),
+    z0: &[E],
     opts: &FpOptions,
-) -> FpResult {
+) -> FpResult<E> {
     let mut ws = Workspace::new();
     broyden_solve_ws(g, z0, opts, &mut ws)
 }
@@ -73,30 +83,30 @@ pub fn broyden_solve(
 /// Broyden root solve with a caller-provided scratch arena. After the first
 /// one or two iterations warm the workspace, the loop performs zero heap
 /// allocations.
-pub fn broyden_solve_ws(
-    mut g: impl FnMut(&[f64], &mut [f64]),
-    z0: &[f64],
+pub fn broyden_solve_ws<E: Elem>(
+    mut g: impl FnMut(&[E], &mut [E]),
+    z0: &[E],
     opts: &FpOptions,
-    ws: &mut Workspace,
-) -> FpResult {
+    ws: &mut Workspace<E>,
+) -> FpResult<E> {
     let d = z0.len();
     let sw = Stopwatch::start();
     let mut qn = BroydenInverse::new(d, opts.memory, opts.policy);
     let mut z = z0.to_vec();
-    let mut gz = vec![0.0; d];
+    let mut gz = vec![E::ZERO; d];
     g(&z, &mut gz);
     let mut n_g_evals = 1usize;
     let mut g_norm = nrm2(&gz);
     let mut trace = Trace::with_capacity(opts.max_iters.saturating_add(1).min(1 << 16));
     trace.push(g_norm, sw.elapsed());
     // All loop state is preallocated here; the iteration below only swaps.
-    let mut p = vec![0.0; d];
-    let mut z_new = vec![0.0; d];
-    let mut g_new = vec![0.0; d];
-    let mut s = vec![0.0; d];
-    let mut y = vec![0.0; d];
-    let mut zt = vec![0.0; d]; // line-search trial point
-    let mut gt = vec![0.0; d]; // line-search trial residual
+    let mut p = vec![E::ZERO; d];
+    let mut z_new = vec![E::ZERO; d];
+    let mut g_new = vec![E::ZERO; d];
+    let mut s = vec![E::ZERO; d];
+    let mut y = vec![E::ZERO; d];
+    let mut zt = vec![E::ZERO; d]; // line-search trial point
+    let mut gt = vec![E::ZERO; d]; // line-search trial residual
     let mut iters = 0;
     while g_norm > opts.tol && iters < opts.max_iters {
         qn.direction_ws(&gz, &mut p, ws);
@@ -106,9 +116,7 @@ pub fn broyden_solve_ws(
                 g_norm,
                 |a| {
                     evals += 1;
-                    for i in 0..d {
-                        zt[i] = z[i] + a * p[i];
-                    }
+                    add_scaled(&z, a, &p, &mut zt);
                     g(&zt[..], &mut gt[..]);
                     nrm2(&gt)
                 },
@@ -121,9 +129,7 @@ pub fn broyden_solve_ws(
         } else {
             1.0
         };
-        for i in 0..d {
-            z_new[i] = z[i] + alpha * p[i];
-        }
+        add_scaled(&z, alpha, &p, &mut z_new);
         g(&z_new, &mut g_new);
         n_g_evals += 1;
         sub(&z_new, &z, &mut s);
@@ -147,16 +153,16 @@ pub fn broyden_solve_ws(
 }
 
 /// Damped Picard iteration z ← z − τ g(z) (baseline / pre-training warmup).
-pub fn picard_solve(
-    mut g: impl FnMut(&[f64], &mut [f64]),
-    z0: &[f64],
+pub fn picard_solve<E: Elem>(
+    mut g: impl FnMut(&[E], &mut [E]),
+    z0: &[E],
     tau: f64,
     tol: f64,
     max_iters: usize,
-) -> (Vec<f64>, f64, usize) {
+) -> (Vec<E>, f64, usize) {
     let d = z0.len();
     let mut z = z0.to_vec();
-    let mut gz = vec![0.0; d];
+    let mut gz = vec![E::ZERO; d];
     let mut iters = 0;
     loop {
         g(&z, &mut gz);
@@ -164,48 +170,63 @@ pub fn picard_solve(
         if n <= tol || iters >= max_iters {
             return (z, n, iters);
         }
-        for i in 0..d {
-            z[i] -= tau * gz[i];
-        }
+        axpy(-tau, &gz, &mut z);
         iters += 1;
     }
 }
 
 /// Anderson acceleration (type-II) on the fixed-point map  z ↦ z − g(z)
 /// (owns its workspace).
-pub fn anderson_solve(
-    g: impl FnMut(&[f64], &mut [f64]),
-    z0: &[f64],
+pub fn anderson_solve<E: Elem>(
+    g: impl FnMut(&[E], &mut [E]),
+    z0: &[E],
     m: usize,
     tol: f64,
     max_iters: usize,
     beta: f64,
-) -> (Vec<f64>, f64, usize) {
+) -> (Vec<E>, f64, usize) {
     let mut ws = Workspace::new();
     anderson_solve_ws(g, z0, m, tol, max_iters, beta, &mut ws)
 }
 
-/// Anderson acceleration with a caller-provided workspace. The iterate and
-/// residual histories live in recycled buffers (O(1) eviction by rotating
-/// the oldest buffer to the back); only the small k×k Gram system still
-/// allocates per iteration.
-pub fn anderson_solve_ws(
-    mut g: impl FnMut(&[f64], &mut [f64]),
-    z0: &[f64],
+/// Anderson acceleration with a caller-provided workspace — allocation-free
+/// per iteration once the workspace is warm:
+///
+/// * the iterate/residual histories live in recycled buffers (O(1) eviction
+///   by rotating the oldest buffer to the back);
+/// * the k×k Gram matrix of the ΔR difference rows **persists across
+///   iterations** in the workspace's f64 accumulator pool — evicting the
+///   oldest history entry shifts it one row+column up-left in place, and
+///   each iteration appends a single fresh row/column of dots (O(k·d)
+///   instead of rebuilding all k² entries);
+/// * the damped normal-equation solve runs by in-place Gaussian elimination
+///   on a workspace scratch copy — no `DMat`/LU allocation.
+pub fn anderson_solve_ws<E: Elem>(
+    mut g: impl FnMut(&[E], &mut [E]),
+    z0: &[E],
     m: usize,
     tol: f64,
     max_iters: usize,
     beta: f64,
-    ws: &mut Workspace,
-) -> (Vec<f64>, f64, usize) {
+    ws: &mut Workspace<E>,
+) -> (Vec<E>, f64, usize) {
     let d = z0.len();
     let mut z = z0.to_vec();
-    let mut r = vec![0.0; d];
-    let mut z_next = vec![0.0; d];
-    let mut hist_z: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
-    let mut hist_r: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
-    // ΔR difference rows, reused across iterations.
-    let mut dr: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut r = vec![E::ZERO; d];
+    let mut z_next = vec![E::ZERO; d];
+    let mut hist_z: Vec<Vec<E>> = Vec::with_capacity(m + 1);
+    let mut hist_r: Vec<Vec<E>> = Vec::with_capacity(m + 1);
+    // ΔR difference rows (logical oldest → newest), at most m−1 live.
+    let mut dr: Vec<Vec<E>> = Vec::with_capacity(m);
+    let mut ndr = 0usize;
+    // Persistent small-system scratch (f64 accumulator pool). `gs` is the
+    // Gram stride; give-backs below run in reverse take order so the pool
+    // hands the same capacities back on the next solve.
+    let gs = m.max(1);
+    let mut gram = ws.take_acc(gs * gs);
+    let mut lu = ws.take_acc(gs * gs);
+    let mut rhs = ws.take_acc(gs);
+    let mut alphas = ws.take_acc(gs + 1);
     let mut iters = 0;
     let rn = loop {
         g(&z, &mut r);
@@ -213,7 +234,35 @@ pub fn anderson_solve_ws(
         if rn <= tol || iters >= max_iters {
             break rn;
         }
-        // Append (z, r) to the history, recycling the evicted buffers.
+        // --- incremental ΔR / Gram maintenance (only defined for m ≥ 2).
+        if m >= 2 && !hist_r.is_empty() {
+            if ndr + 1 >= m {
+                // The oldest history entry is about to be evicted: drop ΔR₀
+                // by shifting the Gram block up-left and rotating the row
+                // buffer to the back for reuse as the new newest row.
+                for i in 1..ndr {
+                    for j in 1..ndr {
+                        gram[(i - 1) * gs + (j - 1)] = gram[i * gs + j];
+                    }
+                }
+                dr[..ndr].rotate_left(1);
+                ndr -= 1;
+            }
+            if dr.len() == ndr {
+                dr.push(ws.take(d));
+            }
+            // ΔR_new = r − r_prev (the history still ends at r_prev here).
+            let prev = hist_r.last().unwrap();
+            sub(&r, prev, &mut dr[ndr]);
+            for j in 0..ndr {
+                let gij = dot(&dr[ndr], &dr[j]);
+                gram[ndr * gs + j] = gij;
+                gram[j * gs + ndr] = gij;
+            }
+            gram[ndr * gs + ndr] = dot(&dr[ndr], &dr[ndr]);
+            ndr += 1;
+        }
+        // --- append (z, r) to the history, recycling the evicted buffers.
         let (mut zb, mut rb) = if hist_z.len() >= m && !hist_z.is_empty() {
             (hist_z.remove(0), hist_r.remove(0))
         } else {
@@ -224,56 +273,104 @@ pub fn anderson_solve_ws(
         hist_z.push(zb);
         hist_r.push(rb);
         let k = hist_z.len();
-        // Solve min ‖Σ αᵢ rᵢ‖² s.t. Σ αᵢ = 1 via normal equations on
-        // differences (small k×k dense system with Tikhonov damping).
-        let alphas = if k == 1 {
-            vec![1.0]
-        } else {
-            let kk = k - 1;
-            while dr.len() < kk {
-                dr.push(ws.take(d));
-            }
-            for (i, row) in dr.iter_mut().enumerate().take(kk) {
-                sub(&hist_r[i + 1], &hist_r[i], row);
-            }
-            let mut gram = crate::linalg::dmat::DMat::zeros(kk, kk);
-            let mut rhs = vec![0.0; kk];
+        debug_assert!(m < 2 || ndr == k - 1);
+        // --- solve min ‖Σ αᵢ rᵢ‖² s.t. Σ αᵢ = 1 via the damped normal
+        // equations on the persistent Gram (solution γ lands in `rhs`).
+        let kk = ndr;
+        for a in alphas.iter_mut().take(k) {
+            *a = 0.0;
+        }
+        alphas[k - 1] = 1.0;
+        if kk > 0 {
             for i in 0..kk {
                 for j in 0..kk {
-                    gram[(i, j)] = crate::linalg::vecops::dot(&dr[i], &dr[j]);
+                    lu[i * kk + j] = gram[i * gs + j];
                 }
-                gram[(i, i)] += 1e-10;
-                rhs[i] = crate::linalg::vecops::dot(&dr[i], &hist_r[k - 1]);
+                lu[i * kk + i] += 1e-10;
+                rhs[i] = dot(&dr[i], &r);
             }
-            let gamma = match crate::linalg::lu::Lu::factor(&gram) {
-                Ok(lu) => lu.solve(&rhs),
-                Err(_) => vec![0.0; kk],
-            };
-            // α from γ: α_i are the barycentric weights.
-            let mut a = vec![0.0; k];
-            a[k - 1] = 1.0;
-            for i in 0..kk {
-                a[i + 1] -= gamma[i];
-                a[i] += gamma[i];
+            if solve_in_place(&mut lu[..kk * kk], kk, &mut rhs[..kk]) {
+                // α from γ: barycentric weights (singular systems keep the
+                // plain-mixing fallback α = e_{k−1}).
+                for i in 0..kk {
+                    alphas[i + 1] -= rhs[i];
+                    alphas[i] += rhs[i];
+                }
             }
-            a
-        };
-        z_next.iter_mut().for_each(|v| *v = 0.0);
-        for (i, alpha) in alphas.iter().enumerate() {
-            // mixing: z⁺ = Σ αᵢ (zᵢ − β rᵢ)
-            for j in 0..d {
-                z_next[j] += alpha * (hist_z[i][j] - beta * hist_r[i][j]);
+        }
+        // --- mixing: z⁺ = Σ αᵢ (zᵢ − β rᵢ), accumulated in f64.
+        zero(&mut z_next);
+        for i in 0..k {
+            let a = alphas[i];
+            if a != 0.0 {
+                for j in 0..d {
+                    z_next[j] = E::from_f64(
+                        z_next[j].to_f64()
+                            + a * (hist_z[i][j].to_f64() - beta * hist_r[i][j].to_f64()),
+                    );
+                }
             }
         }
         std::mem::swap(&mut z, &mut z_next);
         iters += 1;
     };
-    // Park the history buffers back in the pool so a shared workspace stays
-    // warm across repeated solves.
+    // Park every buffer back in the pools so a shared workspace stays warm
+    // across repeated solves (acc buffers in reverse take order).
     for b in hist_z.drain(..).chain(hist_r.drain(..)).chain(dr.drain(..)) {
         ws.give(b);
     }
+    ws.give_acc(alphas);
+    ws.give_acc(rhs);
+    ws.give_acc(lu);
+    ws.give_acc(gram);
     (z, rn, iters)
+}
+
+/// In-place Gaussian elimination with partial pivoting on a dense row-major
+/// `n×n` system; the solution overwrites `b`. Returns false on a vanishing
+/// pivot (caller falls back to plain mixing). Allocation-free — this is the
+/// small Anderson Gram system, k ≤ m.
+fn solve_in_place(a: &mut [f64], n: usize, b: &mut [f64]) -> bool {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    for col in 0..n {
+        let mut piv = col;
+        let mut best = a[col * n + col].abs();
+        for row in col + 1..n {
+            let v = a[row * n + col].abs();
+            if v > best {
+                best = v;
+                piv = row;
+            }
+        }
+        if !best.is_finite() || !(best > 1e-300) {
+            return false;
+        }
+        if piv != col {
+            for j in 0..n {
+                a.swap(col * n + j, piv * n + j);
+            }
+            b.swap(col, piv);
+        }
+        let inv = 1.0 / a[col * n + col];
+        for row in col + 1..n {
+            let f = a[row * n + col] * inv;
+            if f != 0.0 {
+                for j in col..n {
+                    a[row * n + j] -= f * a[col * n + j];
+                }
+                b[row] -= f * b[col];
+            }
+        }
+    }
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for j in row + 1..n {
+            acc -= a[row * n + j] * b[j];
+        }
+        b[row] = acc / a[row * n + row];
+    }
+    true
 }
 
 #[cfg(test)]
@@ -284,10 +381,7 @@ mod tests {
 
     /// Contractive test map: g(z) = z − (Az + b) with ‖A‖ < 1, evaluated
     /// allocation-free into the caller's buffer.
-    fn contractive_g(
-        rng: &mut Rng,
-        n: usize,
-    ) -> (impl Fn(&[f64], &mut [f64]), Vec<f64>) {
+    fn contractive_g(rng: &mut Rng, n: usize) -> (impl Fn(&[f64], &mut [f64]), Vec<f64>) {
         let a = crate::linalg::dmat::DMat::randn(n, n, 0.3 / (n as f64).sqrt(), rng);
         let b = rng.normal_vec(n);
         // Fixed point solves (I − A) z = b.
@@ -350,6 +444,38 @@ mod tests {
     }
 
     #[test]
+    fn f32_broyden_converges_on_contractive_map() {
+        // The f32 instantiation must reach an f32-appropriate residual on
+        // the same map (full parity with the f64 reference is covered by
+        // rust/tests/precision_parity.rs).
+        let mut rng = Rng::new(12);
+        let n = 16;
+        let (g, z_star) = contractive_g(&mut rng, n);
+        let g32 = |z: &[f32], out: &mut [f32]| {
+            let z64: Vec<f64> = z.iter().map(|&x| x as f64).collect();
+            let mut o64 = vec![0.0; z.len()];
+            g(&z64, &mut o64);
+            for (o, &v) in out.iter_mut().zip(o64.iter()) {
+                *o = v as f32;
+            }
+        };
+        let opts = FpOptions {
+            tol: 1e-4,
+            ..Default::default()
+        };
+        let res = broyden_solve(g32, &vec![0.0f32; n], &opts);
+        assert!(res.converged, "|g|={}", res.g_norm);
+        for i in 0..n {
+            assert!(
+                (res.z[i] as f64 - z_star[i]).abs() < 1e-3 * (1.0 + z_star[i].abs()),
+                "idx {i}: {} vs {}",
+                res.z[i],
+                z_star[i]
+            );
+        }
+    }
+
+    #[test]
     fn line_search_variant_converges() {
         prop::check("broyden-fp-ls", 5, |rng| {
             let n = 10;
@@ -376,6 +502,24 @@ mod tests {
     }
 
     #[test]
+    fn anderson_incremental_gram_matches_small_histories() {
+        // The incremental Gram must behave exactly like the full rebuild it
+        // replaced: runs with different history sizes still converge to the
+        // same fixed point, and a shared workspace reproduces an owned run.
+        prop::check("anderson-incr-gram", 5, |rng| {
+            let n = 10;
+            let (g, z_star) = contractive_g(rng, n);
+            let mut ws = Workspace::new();
+            for m in [1usize, 2, 3, 6] {
+                let (z, rn, _) = anderson_solve_ws(&g, &vec![0.0; n], m, 1e-9, 400, 1.0, &mut ws);
+                prop::ensure(rn < 1e-8, &format!("m={m} residual {rn}"))?;
+                prop::ensure_close_vec(&z, &z_star, 1e-5, "fixed point (shared ws)")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn trace_is_recorded() {
         let mut rng = Rng::new(3);
         let (g, _) = contractive_g(&mut rng, 8);
@@ -396,5 +540,26 @@ mod tests {
         let res = broyden_solve(g, &[0.0], &opts);
         assert_eq!(res.iters, 3);
         assert!(!res.converged);
+    }
+
+    #[test]
+    fn solve_in_place_matches_direct() {
+        // 3×3 system with known solution.
+        let mut a = [2.0, 1.0, 0.0, 1.0, 3.0, 1.0, 0.0, 1.0, 2.0];
+        let x_true = [1.0, -2.0, 3.0];
+        let mut b = [0.0; 3];
+        for i in 0..3 {
+            for j in 0..3 {
+                b[i] += a[i * 3 + j] * x_true[j];
+            }
+        }
+        assert!(solve_in_place(&mut a, 3, &mut b));
+        for i in 0..3 {
+            assert!((b[i] - x_true[i]).abs() < 1e-12, "x[{i}] = {}", b[i]);
+        }
+        // Singular system reports failure instead of NaNs.
+        let mut s = [1.0, 2.0, 2.0, 4.0];
+        let mut sb = [1.0, 2.0];
+        assert!(!solve_in_place(&mut s, 2, &mut sb));
     }
 }

@@ -9,19 +9,24 @@
 //!   `r(w) = Jᵀ w − c`, driven by vector–Jacobian products, as in the DEQ
 //!   implementation of Bai et al.
 //!
+//! Both solvers are generic over the storage precision [`Elem`]: the DEQ
+//! trainer runs them at `f32` against the artifact VJPs (no boundary casts),
+//! the bi-level/HOAG stack at the `f64` default. CG scalars (α, β, residual
+//! norms) are always f64 reductions.
+//!
 //! Operators use the write-into convention (`apply_a(x, out)` / `vjp(w, out)`)
 //! and both solvers preallocate their loop state, so iterations are
 //! allocation-free apart from whatever the operator itself does.
 
-use crate::linalg::vecops::{axpy, dot, nrm2, sub};
+use crate::linalg::vecops::{add, axpy, dot, nrm2, sub, Elem};
 use crate::qn::broyden::BroydenInverse;
 use crate::qn::low_rank::LowRank;
 use crate::qn::workspace::Workspace;
 use crate::qn::MemoryPolicy;
 
 #[derive(Debug)]
-pub struct LinSolveResult {
-    pub x: Vec<f64>,
+pub struct LinSolveResult<E: Elem = f64> {
+    pub x: Vec<E>,
     pub residual: f64,
     pub iters: usize,
     pub converged: bool,
@@ -33,19 +38,20 @@ pub struct LinSolveResult {
 ///
 /// `x0` warm start (HOAG warm-restarts the Hessian inversion across outer
 /// iterations, Appendix C). Stops on ‖Ax − b‖ ≤ tol or `max_iters`.
-pub fn cg_solve(
-    mut apply_a: impl FnMut(&[f64], &mut [f64]),
-    b: &[f64],
-    x0: Option<&[f64]>,
+pub fn cg_solve<E: Elem>(
+    mut apply_a: impl FnMut(&[E], &mut [E]),
+    b: &[E],
+    x0: Option<&[E]>,
     tol: f64,
     max_iters: usize,
-) -> LinSolveResult {
+) -> LinSolveResult<E> {
     let n = b.len();
-    let mut x = x0.map(|v| v.to_vec()).unwrap_or_else(|| vec![0.0; n]);
-    let mut ap = vec![0.0; n];
+    let mut x = x0.map(|v| v.to_vec()).unwrap_or_else(|| vec![E::ZERO; n]);
+    let mut ap = vec![E::ZERO; n];
     apply_a(&x, &mut ap);
     let mut n_matvecs = 1;
-    let mut r: Vec<f64> = (0..n).map(|i| b[i] - ap[i]).collect();
+    let mut r = vec![E::ZERO; n];
+    sub(b, &ap, &mut r);
     let mut p = r.clone();
     let mut rs = dot(&r, &r);
     let mut iters = 0;
@@ -62,7 +68,7 @@ pub fn cg_solve(
         let rs_new = dot(&r, &r);
         let beta = rs_new / rs;
         for i in 0..n {
-            p[i] = r[i] + beta * p[i];
+            p[i] = E::from_f64(r[i].to_f64() + beta * p[i].to_f64());
         }
         rs = rs_new;
         iters += 1;
@@ -85,31 +91,31 @@ pub fn cg_solve(
 /// * `h_init` — warm start for the qN *matrix* (refine strategy: the
 ///   transposed forward estimate, since (Jᵀ)⁻¹ = (J⁻¹)ᵀ ≈ Hᵀ).
 #[allow(clippy::too_many_arguments)]
-pub fn broyden_solve_left(
-    vjp: impl FnMut(&[f64], &mut [f64]),
-    c: &[f64],
-    w0: Option<&[f64]>,
-    h_init: Option<LowRank>,
+pub fn broyden_solve_left<E: Elem>(
+    vjp: impl FnMut(&[E], &mut [E]),
+    c: &[E],
+    w0: Option<&[E]>,
+    h_init: Option<LowRank<E>>,
     tol: f64,
     max_iters: usize,
     memory: usize,
-) -> LinSolveResult {
+) -> LinSolveResult<E> {
     let mut ws = Workspace::new();
     broyden_solve_left_ws(vjp, c, w0, h_init, tol, max_iters, memory, &mut ws)
 }
 
 /// [`broyden_solve_left`] with a caller-provided scratch arena.
 #[allow(clippy::too_many_arguments)]
-pub fn broyden_solve_left_ws(
-    mut vjp: impl FnMut(&[f64], &mut [f64]),
-    c: &[f64],
-    w0: Option<&[f64]>,
-    h_init: Option<LowRank>,
+pub fn broyden_solve_left_ws<E: Elem>(
+    mut vjp: impl FnMut(&[E], &mut [E]),
+    c: &[E],
+    w0: Option<&[E]>,
+    h_init: Option<LowRank<E>>,
     tol: f64,
     max_iters: usize,
     memory: usize,
-    ws: &mut Workspace,
-) -> LinSolveResult {
+    ws: &mut Workspace<E>,
+) -> LinSolveResult<E> {
     let n = c.len();
     let mut qn = match h_init {
         Some(h) => BroydenInverse::from_low_rank(
@@ -117,28 +123,25 @@ pub fn broyden_solve_left_ws(
         ),
         None => BroydenInverse::new(n, memory, MemoryPolicy::Freeze),
     };
-    let mut w = w0.map(|v| v.to_vec()).unwrap_or_else(|| vec![0.0; n]);
-    let mut jw = vec![0.0; n];
+    let mut w = w0.map(|v| v.to_vec()).unwrap_or_else(|| vec![E::ZERO; n]);
+    let mut jw = vec![E::ZERO; n];
     vjp(&w, &mut jw);
     let mut n_matvecs = 1;
-    let mut r: Vec<f64> = (0..n).map(|i| jw[i] - c[i]).collect();
+    let mut r = vec![E::ZERO; n];
+    sub(&jw, c, &mut r);
     let mut r_norm = nrm2(&r);
-    let mut p = vec![0.0; n];
-    let mut w_new = vec![0.0; n];
-    let mut r_new = vec![0.0; n];
-    let mut s = vec![0.0; n];
-    let mut y = vec![0.0; n];
+    let mut p = vec![E::ZERO; n];
+    let mut w_new = vec![E::ZERO; n];
+    let mut r_new = vec![E::ZERO; n];
+    let mut s = vec![E::ZERO; n];
+    let mut y = vec![E::ZERO; n];
     let mut iters = 0;
     while r_norm > tol && iters < max_iters {
         qn.direction_ws(&r, &mut p, ws);
-        for i in 0..n {
-            w_new[i] = w[i] + p[i];
-        }
+        add(&w, &p, &mut w_new);
         vjp(&w_new, &mut jw);
         n_matvecs += 1;
-        for i in 0..n {
-            r_new[i] = jw[i] - c[i];
-        }
+        sub(&jw, c, &mut r_new);
         sub(&w_new, &w, &mut s);
         sub(&r_new, &r, &mut y);
         qn.update_ws(&s, &y, ws);
@@ -173,7 +176,7 @@ mod tests {
             let mut b = vec![0.0; n];
             a.matvec(&x_true, &mut b);
             let res = cg_solve(
-                |v, out| a.matvec(v, out),
+                |v: &[f64], out: &mut [f64]| a.matvec(v, out),
                 &b,
                 None,
                 1e-10,
@@ -211,7 +214,7 @@ mod tests {
             }
             let c = rng.normal_vec(n);
             let res = broyden_solve_left(
-                |w, out| j.matvec_t(w, out),
+                |w: &[f64], out: &mut [f64]| j.matvec_t(w, out),
                 &c,
                 None,
                 None,

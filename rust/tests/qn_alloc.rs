@@ -5,7 +5,9 @@
 //! many allocation events as running it for 6 — i.e. the iteration loop
 //! itself performs **zero heap allocations** once the workspace and panels
 //! are warm (everything else — panels, iterate buffers, trace — is set up
-//! front-loaded and identical for both runs).
+//! front-loaded and identical for both runs). The proof runs for **both
+//! precision instantiations** (f64 and f32 storage) and, since the
+//! incremental-Gram rework, for `anderson_solve_ws` too.
 //!
 //! Everything lives in a single #[test] because the counter is global: a
 //! second test running on a sibling thread would pollute the counts.
@@ -13,10 +15,11 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use shine::linalg::vecops::Elem;
 use shine::qn::broyden::BroydenInverse;
 use shine::qn::workspace::Workspace;
 use shine::qn::{InvOp, LowRank, MemoryPolicy};
-use shine::solvers::fixed_point::{broyden_solve_ws, FpOptions};
+use shine::solvers::fixed_point::{anderson_solve_ws, broyden_solve_ws, FpOptions};
 
 struct CountingAlloc;
 
@@ -51,13 +54,14 @@ fn alloc_events<T>(f: impl FnOnce() -> T) -> (usize, T) {
 }
 
 /// Run the Broyden solver on an allocation-free contractive map for exactly
-/// `iters` iterations; returns the allocation events of the whole call.
-fn solver_events(iters: usize, b: &[f64], ws: &mut Workspace) -> usize {
+/// `iters` iterations (both precisions — the map widens/narrows per element,
+/// which costs no allocation); returns the allocation events of the call.
+fn solver_events<E: Elem>(iters: usize, b: &[E], ws: &mut Workspace<E>) -> usize {
     let d = b.len();
-    let g = |z: &[f64], out: &mut [f64]| {
+    let g = |z: &[E], out: &mut [E]| {
         for i in 0..d {
             let zn = z[(i + 1) % d];
-            out[i] = z[i] - 0.3 * zn - b[i];
+            out[i] = E::from_f64(z[i].to_f64() - 0.3 * zn.to_f64() - b[i].to_f64());
         }
     };
     let opts = FpOptions {
@@ -66,8 +70,24 @@ fn solver_events(iters: usize, b: &[f64], ws: &mut Workspace) -> usize {
         memory: 4,
         ..Default::default()
     };
-    let (events, res) = alloc_events(|| broyden_solve_ws(g, &vec![0.0; d], &opts, ws));
+    let (events, res) = alloc_events(|| broyden_solve_ws(g, &vec![E::ZERO; d], &opts, ws));
     assert_eq!(res.iters, iters, "solver must not converge early");
+    events
+}
+
+/// Same proof for Anderson acceleration: with the persistent incremental
+/// Gram, iterations past warm-up must add zero allocation events.
+fn anderson_events(iters: usize, b: &[f64], ws: &mut Workspace) -> usize {
+    let d = b.len();
+    let g = |z: &[f64], out: &mut [f64]| {
+        for i in 0..d {
+            let zn = z[(i + 1) % d];
+            out[i] = z[i] - 0.3 * zn - b[i];
+        }
+    };
+    let (events, (_z, _rn, it)) =
+        alloc_events(|| anderson_solve_ws(g, &vec![0.0; d], 4, -1.0, iters, 1.0, ws));
+    assert_eq!(it, iters, "anderson must not converge early");
     events
 }
 
@@ -75,19 +95,43 @@ fn solver_events(iters: usize, b: &[f64], ws: &mut Workspace) -> usize {
 fn qn_hot_loops_do_not_allocate() {
     let d = 32;
     let b: Vec<f64> = (0..d).map(|i| ((i as f64) * 0.37).sin()).collect();
+    let b32: Vec<f32> = b.iter().map(|&x| x as f32).collect();
 
-    // --- (1) broyden_solve: iterations past warm-up add zero allocations.
+    // --- (1) broyden_solve (f64): iterations past warm-up add zero allocs.
     let mut ws = Workspace::new();
     let _warm = solver_events(6, &b, &mut ws); // warms the shared workspace
     let short = solver_events(6, &b, &mut ws);
     let long = solver_events(30, &b, &mut ws);
     assert_eq!(
         short, long,
-        "broyden_solve iteration loop allocated: {short} events for 6 iters vs {long} for 30"
+        "broyden_solve<f64> iteration loop allocated: {short} events for 6 iters vs {long} for 30"
+    );
+
+    // --- (1b) broyden_solve (f32): the f32 instantiation gives the same
+    // zero-allocation guarantee through its own Workspace<f32>.
+    let mut ws32: Workspace<f32> = Workspace::new();
+    let _warm = solver_events(6, &b32, &mut ws32);
+    let short32 = solver_events(6, &b32, &mut ws32);
+    let long32 = solver_events(30, &b32, &mut ws32);
+    assert_eq!(
+        short32, long32,
+        "broyden_solve<f32> iteration loop allocated: {short32} events for 6 iters vs {long32} for 30"
+    );
+
+    // --- (1c) anderson_solve_ws: persistent incremental Gram + in-place
+    // solve — iterations past warm-up add zero allocation events.
+    let mut ws_and = Workspace::new();
+    let _warm = anderson_events(6, &b, &mut ws_and);
+    let short_and = anderson_events(6, &b, &mut ws_and);
+    let long_and = anderson_events(30, &b, &mut ws_and);
+    assert_eq!(
+        short_and, long_and,
+        "anderson_solve_ws iteration loop allocated: {short_and} events for 6 iters vs {long_and} for 30"
     );
 
     // --- (2) LowRank::apply_into / apply_t_into are allocation-free with a
-    // warm workspace (serial path below the parallel threshold).
+    // warm workspace (serial path below the parallel threshold), in both
+    // precisions.
     let mut rng = shine::util::rng::Rng::new(9);
     let n = 64;
     let mut lr = LowRank::identity(n, 8, MemoryPolicy::Evict);
@@ -104,10 +148,26 @@ fn qn_hot_loops_do_not_allocate() {
             lr.apply_t_into(&x, &mut out, &mut ws);
         }
     });
-    assert_eq!(events, 0, "LowRank apply_into allocated {events} times");
+    assert_eq!(events, 0, "LowRank<f64> apply_into allocated {events} times");
+
+    let mut lr32: LowRank<f32> = LowRank::identity(n, 8, MemoryPolicy::Evict);
+    for _ in 0..8 {
+        lr32.push(&rng.normal_vec_f32(n, 1.0), &rng.normal_vec_f32(n, 1.0));
+    }
+    let x32 = rng.normal_vec_f32(n, 1.0);
+    let mut out32 = vec![0.0f32; n];
+    lr32.apply_into(&x32, &mut out32, &mut ws32);
+    lr32.apply_t_into(&x32, &mut out32, &mut ws32);
+    let (events, _) = alloc_events(|| {
+        for _ in 0..16 {
+            lr32.apply_into(&x32, &mut out32, &mut ws32);
+            lr32.apply_t_into(&x32, &mut out32, &mut ws32);
+        }
+    });
+    assert_eq!(events, 0, "LowRank<f32> apply_into allocated {events} times");
 
     // --- (3) BroydenInverse::update_ws at steady state (Evict ring full)
-    // writes factors in place: zero allocations.
+    // writes factors in place: zero allocations, in both precisions.
     let mut bro = BroydenInverse::new(n, 6, MemoryPolicy::Evict);
     let s = rng.normal_vec(n);
     let y = rng.normal_vec(n);
@@ -119,6 +179,20 @@ fn qn_hot_loops_do_not_allocate() {
             bro.update_ws(&s, &y, &mut ws);
         }
     });
-    assert_eq!(events, 0, "update_ws allocated {events} times at steady state");
+    assert_eq!(events, 0, "update_ws<f64> allocated {events} times at steady state");
     assert_eq!(bro.rank(), 6);
+
+    let mut bro32: BroydenInverse<f32> = BroydenInverse::new(n, 6, MemoryPolicy::Evict);
+    let s32 = rng.normal_vec_f32(n, 1.0);
+    let y32 = rng.normal_vec_f32(n, 1.0);
+    for _ in 0..8 {
+        bro32.update_ws(&s32, &y32, &mut ws32);
+    }
+    let (events, _) = alloc_events(|| {
+        for _ in 0..16 {
+            bro32.update_ws(&s32, &y32, &mut ws32);
+        }
+    });
+    assert_eq!(events, 0, "update_ws<f32> allocated {events} times at steady state");
+    assert_eq!(bro32.rank(), 6);
 }
