@@ -1,0 +1,129 @@
+//! Batched DEQ serving throughput: closed-loop load through the
+//! scheduler + ServeEngine pipeline at batch widths B ∈ {1, 8, 32}
+//! (d = 4096, f32 serving precision), plus a micro comparison of the
+//! one-sweep multi-RHS SHINE backward against per-request panel applies.
+//!
+//! Emits `BENCH_serve.json` at the repo root with requests/sec,
+//! per-request latency and the batched-vs-sequential speedup — the
+//! acceptance gate is ≥ 2x throughput at B = 32 over the B = 1 baseline.
+
+use shine::qn::low_rank::LowRank;
+use shine::qn::workspace::Workspace;
+use shine::qn::{InvOp, MemoryPolicy};
+use shine::serve::run_suite;
+use shine::util::bench::Bench;
+use shine::util::json::Json;
+use shine::util::rng::Rng;
+
+fn main() {
+    let d = 4096usize;
+    let block = 64usize;
+    let total = 192usize;
+    let tol = 1e-5;
+    let batch_sizes = [1usize, 8, 32];
+
+    eprintln!(
+        "serve_throughput: d={d} block={block} requests/case={total} B={batch_sizes:?} \
+         (closed-loop, f32 serving precision)"
+    );
+    let rows = run_suite::<f32>(d, block, &batch_sizes, total, tol, 1);
+
+    let mut cases: Vec<Json> = Vec::new();
+    let mut accept_speedup = 0.0;
+    let mut all_converged = true;
+    println!(
+        "{:>6} {:>12} {:>10} {:>12} {:>12} {:>10}",
+        "B", "req/s", "speedup", "p50 ms", "p95 ms", "iters/req"
+    );
+    for row in &rows {
+        let r = &row.report;
+        println!(
+            "{:>6} {:>12.1} {:>9.2}x {:>12.3} {:>12.3} {:>10.1}",
+            row.b, r.rps, row.speedup_vs_baseline, r.p50_latency_ms, r.p95_latency_ms,
+            r.fwd_iters_mean
+        );
+        if row.b == 32 {
+            accept_speedup = row.speedup_vs_baseline;
+        }
+        all_converged &= r.all_converged;
+        let mut c = Json::obj();
+        c.set("b", row.b)
+            .set("requests", r.requests)
+            .set("rps", r.rps)
+            .set("speedup_vs_sequential", row.speedup_vs_baseline)
+            .set("p50_latency_ms", r.p50_latency_ms)
+            .set("p95_latency_ms", r.p95_latency_ms)
+            .set("batches", r.batches)
+            .set("mean_batch", r.mean_batch)
+            .set("fwd_iters_mean", r.fwd_iters_mean)
+            .set("all_converged", r.all_converged);
+        cases.push(c);
+    }
+
+    // Micro view of the serving backward: ONE apply_t_multi sweep for k=32
+    // cotangents vs 32 per-request panel applies (m=30 estimate, f32).
+    let mut b = Bench::new("serve throughput micro").with_samples(3, 20);
+    let m = 30usize;
+    let k = 32usize;
+    let mut rng = Rng::new(3);
+    let mut lr: LowRank<f32> = LowRank::identity(d, m, MemoryPolicy::Freeze);
+    for _ in 0..m {
+        lr.push(&rng.normal_vec_f32(d, 0.2), &rng.normal_vec_f32(d, 0.2));
+    }
+    let cots = rng.normal_vec_f32(k * d, 1.0);
+    let mut outs = vec![0.0f32; k * d];
+    let mut ws: Workspace<f32> = Workspace::new();
+    let one_sweep = b
+        .run(&format!("backward one-sweep k={k} d={d} m={m}"), || {
+            lr.apply_t_multi_into(&cots, &mut outs, &mut ws);
+            outs[0]
+        })
+        .median_ms();
+    let per_request = b
+        .run(&format!("backward per-request k={k} d={d} m={m}"), || {
+            for (xc, oc) in cots.chunks_exact(d).zip(outs.chunks_exact_mut(d)) {
+                lr.apply_t_into(xc, oc, &mut ws);
+            }
+            outs[0]
+        })
+        .median_ms();
+    b.finish();
+    let backward_speedup = per_request / one_sweep.max(1e-12);
+
+    let mut j = Json::obj();
+    j.set("bench", "serve_throughput")
+        .set("d", d)
+        .set("block", block)
+        .set("requests_per_case", total)
+        .set("tol", tol)
+        .set("cases", Json::Arr(cases))
+        .set(
+            "backward_micro",
+            Json::obj()
+                .set("k", k)
+                .set("m", m)
+                .set("one_sweep_ms", one_sweep)
+                .set("per_request_ms", per_request)
+                .set("one_sweep_speedup", backward_speedup)
+                .clone(),
+        )
+        .set(
+            "acceptance",
+            Json::obj()
+                .set("b", 32usize)
+                .set("speedup_vs_sequential", accept_speedup)
+                .set("target_speedup", 2.0)
+                .set("pass", accept_speedup >= 2.0)
+                .set("all_converged", all_converged)
+                .clone(),
+        );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    match shine::util::json::write_file(path, &j) {
+        Ok(()) => println!("(wrote {path})"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+    println!(
+        "acceptance B=32: {accept_speedup:.2}x batched-vs-sequential throughput \
+         (target 2.0x); backward one-sweep {backward_speedup:.2}x vs per-request"
+    );
+}

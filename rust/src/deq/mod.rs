@@ -3,7 +3,12 @@
 //!
 //! * [`native`] — pure-Rust mirror of the JAX model (f32 storage, f64 row
 //!   accumulation): the numerical oracle for the integration tests and a
-//!   runtime-free path for small benches.
+//!   runtime-free path for small benches. Its batched form
+//!   (`native::f_theta_batch_into`) evaluates a whole k-wide serving block
+//!   in one parallel region — the shape the batched solvers of
+//!   [`crate::serve`] consume (per-request input injections gathered
+//!   through the ids slice; wired end-to-end in
+//!   `rust/tests/serve_batch.rs`).
 //! * [`model`] — artifact-backed model: every entry point of
 //!   `python/compile/model.py` as a typed method.
 //! * [`optim`] — Adam / SGD(momentum) with cosine schedule (App. D).

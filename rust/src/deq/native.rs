@@ -67,55 +67,106 @@ pub fn inject(v: &VariantCfg, wemb: &[f32], bemb: &[f32], x: &[f32]) -> Vec<f32>
     u
 }
 
+/// One row (pixel site) of the fixed-point map — the shared body of
+/// [`f_theta`] and [`f_theta_batch_into`]: h = relu(z W1 + u + b1),
+/// x = z + h W2 + b2, then LayerNorm over channels, all accumulated in f64
+/// before the single narrowing write per output element.
+#[inline]
+fn f_theta_row(
+    np: &NativeParams,
+    c: usize,
+    zr: &[f32],
+    ur: &[f32],
+    hrow: &mut [f64],
+    xrow: &mut [f64],
+    orow: &mut [f32],
+) {
+    // h = relu(z W1 + u + b1)
+    for j in 0..c {
+        let mut acc = ur[j] as f64 + np.b1[j] as f64;
+        for k in 0..c {
+            acc += zr[k] as f64 * np.w1[k * c + j] as f64;
+        }
+        hrow[j] = acc.max(0.0);
+    }
+    // x = z + h W2 + b2
+    for j in 0..c {
+        let mut acc = zr[j] as f64 + np.b2[j] as f64;
+        for k in 0..c {
+            acc += hrow[k] * np.w2[k * c + j] as f64;
+        }
+        xrow[j] = acc;
+    }
+    // layer norm over channels
+    let mean: f64 = xrow.iter().sum::<f64>() / c as f64;
+    let var: f64 = xrow.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / c as f64;
+    let inv = 1.0 / (var + LN_EPS).sqrt();
+    for j in 0..c {
+        orow[j] = (((xrow[j] - mean) * inv) * np.gamma[j] as f64 + np.beta[j] as f64) as f32;
+    }
+}
+
 /// The fixed-point map f_θ(z; u) = LN(z + relu(z W1 + u + b1) W2 + b2).
 ///
 /// Rows (batch × pixel sites) are independent, so above a size threshold the
 /// row loop fans out over threads with whole-row chunks; per-row f64
 /// accumulation makes the result bit-identical to the serial path.
 pub fn f_theta(v: &VariantCfg, np: &NativeParams, z: &[f32], u: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; v.batch * v.pixels * v.c];
+    f_theta_batch_into(v, np, z, u, 1, &mut out);
+    out
+}
+
+/// Batched write-into form of [`f_theta`] over `k` stacked request states:
+/// `zs`/`us`/`out` are `k` contiguous blocks of `batch·pixels·c` (the
+/// serving engine's d × k state block). Every row of every request is
+/// independent, so the whole k-wide block fans out in ONE parallel region —
+/// the thread-spawn cost a single request's block may be too small to
+/// amortize is paid once per batch iteration instead of once per request.
+/// Per-row f64 accumulation keeps the result bit-identical to `k`
+/// independent [`f_theta`] calls at any worker count.
+pub fn f_theta_batch_into(
+    v: &VariantCfg,
+    np: &NativeParams,
+    zs: &[f32],
+    us: &[f32],
+    k: usize,
+    out: &mut [f32],
+) {
     let c = v.c;
-    let rows = v.batch * v.pixels;
-    debug_assert_eq!(z.len(), rows * c);
-    let mut out = vec![0.0f32; rows * c];
-    let workers = if rows * c >= 1 << 14 {
-        crate::util::threads::ncpus().min(8)
-    } else {
-        1
-    };
-    crate::util::threads::par_row_chunks_mut(&mut out, c, workers, |row0, chunk| {
+    let rows = v.batch * v.pixels * k;
+    debug_assert_eq!(zs.len(), rows * c);
+    debug_assert_eq!(us.len(), rows * c);
+    debug_assert_eq!(out.len(), rows * c);
+    let workers = crate::util::threads::workers_for(rows * c, 1 << 14, 8);
+    crate::util::threads::par_row_chunks_mut(out, c, workers, |row0, chunk| {
         let mut hrow = vec![0.0f64; c];
         let mut xrow = vec![0.0f64; c];
-        for (k, orow) in chunk.chunks_exact_mut(c).enumerate() {
-            let r = row0 + k;
-            let zr = &z[r * c..(r + 1) * c];
-            let ur = &u[r * c..(r + 1) * c];
-            // h = relu(z W1 + u + b1)
-            for j in 0..c {
-                let mut acc = ur[j] as f64 + np.b1[j] as f64;
-                for k in 0..c {
-                    acc += zr[k] as f64 * np.w1[k * c + j] as f64;
-                }
-                hrow[j] = acc.max(0.0);
-            }
-            // x = z + h W2 + b2
-            for j in 0..c {
-                let mut acc = zr[j] as f64 + np.b2[j] as f64;
-                for k in 0..c {
-                    acc += hrow[k] * np.w2[k * c + j] as f64;
-                }
-                xrow[j] = acc;
-            }
-            // layer norm over channels
-            let mean: f64 = xrow.iter().sum::<f64>() / c as f64;
-            let var: f64 =
-                xrow.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / c as f64;
-            let inv = 1.0 / (var + LN_EPS).sqrt();
-            for j in 0..c {
-                orow[j] =
-                    (((xrow[j] - mean) * inv) * np.gamma[j] as f64 + np.beta[j] as f64) as f32;
-            }
+        for (i, orow) in chunk.chunks_exact_mut(c).enumerate() {
+            let r = row0 + i;
+            f_theta_row(
+                np,
+                c,
+                &zs[r * c..(r + 1) * c],
+                &us[r * c..(r + 1) * c],
+                &mut hrow,
+                &mut xrow,
+                orow,
+            );
         }
     });
+}
+
+/// Allocating convenience form of [`f_theta_batch_into`].
+pub fn f_theta_batch(
+    v: &VariantCfg,
+    np: &NativeParams,
+    zs: &[f32],
+    us: &[f32],
+    k: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; zs.len()];
+    f_theta_batch_into(v, np, zs, us, k, &mut out);
     out
 }
 
@@ -275,6 +326,43 @@ mod tests {
         let total_x: f64 = x.iter().map(|&v| v as f64).sum();
         let total_u: f64 = u.iter().map(|&v| v as f64).sum::<f64>() / v.c as f64;
         assert!((total_x - total_u).abs() / total_x < 1e-5);
+    }
+
+    #[test]
+    fn f_theta_batch_matches_stacked_singles() {
+        // k stacked requests through one batched evaluation must equal k
+        // independent f_theta calls bit-for-bit (per-row f64 accumulation is
+        // worker-count independent).
+        let v = tiny_cfg();
+        let c = v.c;
+        let d = v.batch * v.pixels * c;
+        let k = 3;
+        let mut rng = crate::util::rng::Rng::new(7);
+        let zs: Vec<f32> = (0..k * d).map(|_| rng.normal() as f32).collect();
+        let us: Vec<f32> = (0..k * d).map(|_| rng.normal() as f32).collect();
+        let w1: Vec<f32> = (0..c * c).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let w2: Vec<f32> = (0..c * c).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let b1: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let b2: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let gamma: Vec<f32> = (0..c).map(|_| (1.0 + 0.1 * rng.normal()) as f32).collect();
+        let beta: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+        let np = NativeParams {
+            wemb: &[],
+            bemb: &[],
+            w1: &w1,
+            b1: &b1,
+            w2: &w2,
+            b2: &b2,
+            gamma: &gamma,
+            beta: &beta,
+            whead: &[],
+            bhead: &[],
+        };
+        let batched = f_theta_batch(&v, &np, &zs, &us, k);
+        for r in 0..k {
+            let single = f_theta(&v, &np, &zs[r * d..(r + 1) * d], &us[r * d..(r + 1) * d]);
+            assert_eq!(&batched[r * d..(r + 1) * d], &single[..], "request {r}");
+        }
     }
 
     #[test]

@@ -50,6 +50,16 @@
 //!   against the legacy `Vec<Vec<f64>>` layout and the f64 panels by
 //!   `benches/micro_qn.rs` (results in `BENCH_qn.json`).
 //!
+//! On top of these primitives, [`serve`] packages the stack as a batched
+//! serving tier: B concurrent DEQ requests become one contiguous d × B
+//! state block solved by the batched fixed-point solvers (one residual
+//! evaluation per iteration for the whole block, converged columns retired
+//! by swap-to-back compaction), and every SHINE backward cotangent of the
+//! batch is answered by a single `apply_t_multi` panel sweep against a
+//! shared calibration estimate — zero heap allocations per batch once the
+//! engine is warm (`rust/tests/qn_alloc.rs`), batched-vs-sequential
+//! throughput tracked by `benches/serve_throughput.rs` (`BENCH_serve.json`).
+//!
 //! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
@@ -63,6 +73,7 @@ pub mod power;
 pub mod runtime;
 pub mod problems;
 pub mod qn;
+pub mod serve;
 pub mod solvers;
 pub mod util;
 

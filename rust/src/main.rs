@@ -84,7 +84,12 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
         "train" => {
             let a = common_flags(Args::new("shine train — ad-hoc DEQ training"))
                 .flag("variant", "cifar", "model variant (tiny|cifar|imagenet)")
-                .flag("backward", "shine", "backward strategy (original|original-limited|jacobian-free|shine|shine-fallback|shine-refine|adj-broyden|adj-broyden-opa)")
+                .flag(
+                    "backward",
+                    "shine",
+                    "backward strategy (original|original-limited|jacobian-free|shine|\
+                     shine-fallback|shine-refine|adj-broyden|adj-broyden-opa)",
+                )
                 .flag("pretrain-steps", "20", "unrolled pretraining steps")
                 .flag("steps", "50", "equilibrium training steps")
                 .flag("lr", "1e-3", "base learning rate")
@@ -95,17 +100,38 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
         "hpo" => {
             let a = common_flags(Args::new("shine hpo — ad-hoc bi-level HPO"))
                 .flag("dataset", "news20", "dataset (news20|realsim)")
-                .flag("strategy", "shine", "hypergrad strategy (full|shine|shine-refine|jacobian-free)")
+                .flag(
+                    "strategy",
+                    "shine",
+                    "hypergrad strategy (full|shine|shine-refine|jacobian-free)",
+                )
                 .switch("opa", "enable OPA extra updates")
                 .flag("outer-iters", "40", "outer iterations")
                 .parse(rest)?;
             cmd_hpo(&a)
         }
         "report" => {
-            let a = common_flags(Args::new("shine report — render tables from results/")).parse(rest)?;
+            let a =
+                common_flags(Args::new("shine report — render tables from results/")).parse(rest)?;
             let text = shine::coordinator::report::render(a.get("out"))?;
             println!("{text}");
             Ok(())
+        }
+        "serve-bench" => {
+            let a = Args::new("shine serve-bench — synthetic closed-loop DEQ serving load")
+                .flag("d", "4096", "fixed-point dimension per request")
+                .flag("block", "64", "dense mixing block width of the synthetic model")
+                .flag("requests", "192", "requests served per batch-size case")
+                .flag(
+                    "batch-sizes",
+                    "1,8,32",
+                    "comma-separated batch widths (first = sequential baseline)",
+                )
+                .flag("tol", "1e-5", "forward residual tolerance")
+                .flag("seed", "0", "base RNG seed")
+                .switch("smoke", "tiny sizes for CI (overrides d/block/requests/batch-sizes)")
+                .parse(rest)?;
+            cmd_serve_bench(&a)
         }
         "artifacts-check" => {
             let a = common_flags(Args::new("shine artifacts-check")).parse(rest)?;
@@ -121,6 +147,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                  report            render paper-style tables from results/\n  \
                  train             ad-hoc DEQ training\n  \
                  hpo               ad-hoc bi-level HPO\n  \
+                 serve-bench       batched DEQ serving throughput (closed-loop load)\n  \
                  artifacts-check   smoke-test every AOT artifact\n  \
                  version",
                 shine::version()
@@ -273,6 +300,65 @@ fn cmd_hpo(a: &Args) -> anyhow::Result<()> {
         );
     }
     println!("final theta: {:+.4}", res.theta[0]);
+    Ok(())
+}
+
+fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
+    use shine::serve::run_suite;
+
+    let smoke = a.get_bool("smoke");
+    let d = if smoke { 256 } else { a.get_usize("d") };
+    let block = if smoke { 32 } else { a.get_usize("block") };
+    let total = if smoke { 48 } else { a.get_usize("requests") };
+    let batch_sizes: Vec<usize> = if smoke {
+        vec![1, 8]
+    } else {
+        a.get("batch-sizes")
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad batch size '{s}'"))
+            })
+            .collect::<Result<_, _>>()?
+    };
+    if batch_sizes.is_empty() {
+        anyhow::bail!("need at least one batch size");
+    }
+    if block == 0 || d % block != 0 {
+        anyhow::bail!("--block must divide --d");
+    }
+    let tol = a.get_f64("tol");
+    eprintln!(
+        "serve-bench: d={d} block={block} requests/case={total} batch sizes {batch_sizes:?} \
+         (f32 serving precision; first width is the sequential baseline)"
+    );
+    let rows = run_suite::<f32>(d, block, &batch_sizes, total, tol, a.get_u64("seed"));
+    println!(
+        "{:>6} {:>12} {:>10} {:>12} {:>12} {:>10} {:>6}",
+        "B", "req/s", "speedup", "p50 ms", "p95 ms", "iters/req", "conv"
+    );
+    for row in &rows {
+        let r = &row.report;
+        println!(
+            "{:>6} {:>12.1} {:>9.2}x {:>12.3} {:>12.3} {:>10.1} {:>6}",
+            row.b,
+            r.rps,
+            row.speedup_vs_baseline,
+            r.p50_latency_ms,
+            r.p95_latency_ms,
+            r.fwd_iters_mean,
+            if r.all_converged { "yes" } else { "NO" }
+        );
+    }
+    // Hard failure, not a warning: the CI smoke step gates on this exit
+    // code, so a serving-path convergence regression must turn the run red.
+    if let Some(bad) = rows.iter().find(|r| !r.report.all_converged) {
+        anyhow::bail!(
+            "batch width {} had unconverged columns (tol {tol})",
+            bad.b
+        );
+    }
     Ok(())
 }
 

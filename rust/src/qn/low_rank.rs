@@ -179,9 +179,10 @@ impl<E: Elem> LowRank<E> {
 
     /// Shared multi-RHS kernel: one coefficient sweep and one accumulation
     /// sweep over the panels serve all `k` right-hand sides (`xs`, `out` are
-    /// row-major `k × d`). The sweeps themselves shard across threads above
+    /// row-major `k × d`); `coeffs` must hold at least `rank() · k` f64
+    /// slots. The sweeps themselves shard across threads above
     /// [`PAR_MIN_ELEMS`] (see [`panel_gemv_multi`] / [`panel_gemv_t_multi`]).
-    fn apply_multi_impl(&self, transpose: bool, xs: &[E], out: &mut [E]) {
+    fn apply_multi_impl(&self, transpose: bool, xs: &[E], out: &mut [E], coeffs: &mut [f64]) {
         out.copy_from_slice(xs);
         let m = self.panel.len();
         if m == 0 {
@@ -195,9 +196,20 @@ impl<E: Elem> LowRank<E> {
         } else {
             (self.panel.v_flat(), self.panel.u_flat())
         };
-        let mut coeffs = vec![0.0f64; m * k];
-        panel_gemv_multi(coef_panel, m, d, xs, k, &mut coeffs);
-        panel_gemv_t_multi(acc_panel, m, d, &coeffs, k, out);
+        let coeffs = &mut coeffs[..m * k];
+        panel_gemv_multi(coef_panel, m, d, xs, k, coeffs);
+        panel_gemv_t_multi(acc_panel, m, d, coeffs, k, out);
+    }
+
+    /// Right-hand-side count of a multi-RHS call (`xs.len() / dim`, robust
+    /// to the empty-panel case the kernels early-return on).
+    fn multi_k(&self, xs: &[E]) -> usize {
+        let d = self.panel.dim();
+        if d == 0 {
+            0
+        } else {
+            xs.len() / d
+        }
     }
 }
 
@@ -232,11 +244,27 @@ impl<E: Elem> InvOp<E> for LowRank<E> {
     }
 
     fn apply_multi(&self, xs: &[E], out: &mut [E]) {
-        self.apply_multi_impl(false, xs, out);
+        let mut coeffs = vec![0.0f64; self.panel.len() * self.multi_k(xs)];
+        self.apply_multi_impl(false, xs, out, &mut coeffs);
     }
 
     fn apply_t_multi(&self, xs: &[E], out: &mut [E]) {
-        self.apply_multi_impl(true, xs, out);
+        let mut coeffs = vec![0.0f64; self.panel.len() * self.multi_k(xs)];
+        self.apply_multi_impl(true, xs, out, &mut coeffs);
+    }
+
+    fn apply_multi_into(&self, xs: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+        // coeff_len-quantized block: stable take size while the rank grows,
+        // so the serving loop's per-batch takes never reallocate.
+        let mut coeffs = ws.take_acc(self.panel.coeff_len() * self.multi_k(xs));
+        self.apply_multi_impl(false, xs, out, &mut coeffs);
+        ws.give_acc(coeffs);
+    }
+
+    fn apply_t_multi_into(&self, xs: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+        let mut coeffs = ws.take_acc(self.panel.coeff_len() * self.multi_k(xs));
+        self.apply_multi_impl(true, xs, out, &mut coeffs);
+        ws.give_acc(coeffs);
     }
 }
 
@@ -265,6 +293,12 @@ impl<E: Elem> InvOp<E> for TransposedView<'_, E> {
     }
     fn apply_t_multi(&self, xs: &[E], out: &mut [E]) {
         self.0.apply_multi(xs, out)
+    }
+    fn apply_multi_into(&self, xs: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+        self.0.apply_t_multi_into(xs, out, ws)
+    }
+    fn apply_t_multi_into(&self, xs: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+        self.0.apply_multi_into(xs, out, ws)
     }
 }
 
@@ -412,6 +446,33 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn apply_multi_into_matches_apply_multi() {
+        // The workspace-scratch multi form must be bit-identical to the
+        // allocating form (same kernels, coefficients merely live in the
+        // accumulator pool) — in both orientations and through the view.
+        let mut rng = Rng::new(31);
+        let n = 14;
+        let k = 5;
+        let mut lr = LowRank::identity(n, 6, MemoryPolicy::Evict);
+        for _ in 0..7 {
+            lr.push(&rng.normal_vec(n), &rng.normal_vec(n));
+        }
+        let xs: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0; k * n];
+        let mut got = vec![0.0; k * n];
+        let mut ws = Workspace::new();
+        lr.apply_multi(&xs, &mut want);
+        lr.apply_multi_into(&xs, &mut got, &mut ws);
+        assert_eq!(got, want);
+        lr.apply_t_multi(&xs, &mut want);
+        lr.apply_t_multi_into(&xs, &mut got, &mut ws);
+        assert_eq!(got, want);
+        // Transposed view swaps the orientations.
+        lr.t().apply_multi_into(&xs, &mut got, &mut ws);
+        assert_eq!(got, want);
     }
 
     #[test]

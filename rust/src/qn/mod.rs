@@ -47,6 +47,10 @@
 //! application (`apply_multi`/`apply_t_multi`): a whole batch of SHINE
 //! backward directions is computed in one panel sweep, sharded across
 //! threads for large batches (`panel_gemv_multi`/`panel_gemv_t_multi`).
+//! The workspace forms (`apply_multi_into`/`apply_t_multi_into`) draw the
+//! coefficient block from a [`Workspace`], which is what lets the batched
+//! serving engine ([`crate::serve`]) answer every cotangent of a batch with
+//! one sweep and zero allocations per batch.
 
 pub mod adjoint_broyden;
 pub mod broyden;
@@ -111,6 +115,22 @@ pub trait InvOp<E: Elem = f64> {
         for (x, o) in xs.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
             self.apply_t(x, o);
         }
+    }
+
+    /// Multi-RHS `H` application drawing every scratch buffer from `ws` —
+    /// allocation-free after warm-up for panel-backed implementations.
+    /// Implementations with no scratch fall through to
+    /// [`InvOp::apply_multi`].
+    fn apply_multi_into(&self, xs: &[E], out: &mut [E], _ws: &mut Workspace<E>) {
+        self.apply_multi(xs, out);
+    }
+
+    /// Multi-RHS `Hᵀ` application with workspace-provided scratch (see
+    /// [`InvOp::apply_multi_into`]). This is the serving-path backward: a
+    /// whole batch of SHINE cotangents answered by one call — a single
+    /// panel sweep with zero heap allocations once the workspace is warm.
+    fn apply_t_multi_into(&self, xs: &[E], out: &mut [E], _ws: &mut Workspace<E>) {
+        self.apply_t_multi(xs, out);
     }
 
     /// Convenience allocating forms.

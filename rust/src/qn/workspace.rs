@@ -28,15 +28,23 @@
 //! LIFO discipline matters for staying allocation-free: return buffers in
 //! the reverse order you took them when their lengths differ, so the next
 //! round of takes pops buffers whose capacity already fits.
+//!
+//! The serving path adds a third pool of `usize` buffers
+//! ([`Workspace::take_idx`]/[`Workspace::give_idx`]): the batched
+//! fixed-point solvers track which caller-side column each physical column
+//! of the compacted state block holds (retired columns swap to the back),
+//! and that permutation must live somewhere allocation-free too.
 
 use crate::linalg::vecops::Elem;
 
 /// LIFO pool of reusable buffers in storage precision `E`, plus a secondary
-/// pool of `f64` accumulator buffers.
+/// pool of `f64` accumulator buffers and a small pool of `usize` index
+/// buffers (column permutations of the batched solvers).
 #[derive(Clone, Debug)]
 pub struct Workspace<E: Elem = f64> {
     pool: Vec<Vec<E>>,
     acc: Vec<Vec<f64>>,
+    idx: Vec<Vec<usize>>,
 }
 
 impl<E: Elem> Workspace<E> {
@@ -44,6 +52,7 @@ impl<E: Elem> Workspace<E> {
         Workspace {
             pool: Vec::with_capacity(16),
             acc: Vec::with_capacity(8),
+            idx: Vec::with_capacity(4),
         }
     }
 
@@ -76,6 +85,21 @@ impl<E: Elem> Workspace<E> {
     /// Return an accumulator buffer to the pool for reuse.
     pub fn give_acc(&mut self, b: Vec<f64>) {
         self.acc.push(b);
+    }
+
+    /// Check out a zero-filled `usize` index buffer of length `n` (column
+    /// permutations of the batched solvers). Same LIFO reuse as
+    /// [`Workspace::take`], drawn from its own pool.
+    pub fn take_idx(&mut self, n: usize) -> Vec<usize> {
+        let mut b = self.idx.pop().unwrap_or_default();
+        b.clear();
+        b.resize(n, 0);
+        b
+    }
+
+    /// Return an index buffer to the pool for reuse.
+    pub fn give_idx(&mut self, b: Vec<usize>) {
+        self.idx.push(b);
     }
 
     /// Number of storage buffers currently parked in the pool.
@@ -136,5 +160,21 @@ mod tests {
         assert_eq!(a2.len(), 2);
         // Storage pool untouched by the acc take.
         assert_eq!(ws.pooled(), 1);
+    }
+
+    #[test]
+    fn idx_pool_recycles() {
+        let mut ws: Workspace = Workspace::new();
+        let mut ids = ws.take_idx(6);
+        assert_eq!(ids, vec![0usize; 6]);
+        ids[3] = 7;
+        let ptr = ids.as_ptr();
+        ws.give_idx(ids);
+        // Recycled buffer is re-zeroed and reuses the same allocation.
+        let ids2 = ws.take_idx(4);
+        assert_eq!(ids2, vec![0usize; 4]);
+        assert_eq!(ids2.as_ptr(), ptr);
+        // Storage/acc pools untouched.
+        assert_eq!(ws.pooled(), 0);
     }
 }

@@ -1,0 +1,415 @@
+//! The batch-serving engine: batched fixed-point forward + one-sweep SHINE
+//! backward over a shared calibration estimate (module-level contract in
+//! [`crate::serve`]).
+
+use crate::linalg::vecops::{nrm2, Elem};
+use crate::qn::workspace::Workspace;
+use crate::qn::{InvOp, LowRank};
+use crate::solvers::fixed_point::{
+    broyden_solve_ws, picard_solve_batch, AndersonBatch, ColStats, FpOptions,
+};
+use crate::util::timer::Stopwatch;
+
+/// Forward solver the engine runs on the batched state block.
+#[derive(Clone, Copy, Debug)]
+pub enum ForwardSolver {
+    /// Damped Picard iteration z ← z − τ g(z): the cheapest batchable
+    /// forward; the whole active block updates with one fused axpy.
+    Picard { tau: f64 },
+    /// Anderson(m) acceleration with mixing parameter β; per-column state
+    /// persists inside the engine across batches.
+    Anderson { m: usize, beta: f64 },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Widest batch `process` accepts (Anderson state is sized for it).
+    pub max_batch: usize,
+    /// Per-column residual tolerance of the forward solve.
+    pub tol: f64,
+    /// Per-column forward iteration budget.
+    pub max_iters: usize,
+    pub solver: ForwardSolver,
+    /// Broyden memory of the calibration probe whose inverse estimate the
+    /// batch backward reuses (paper default 30).
+    pub calib_memory: usize,
+    /// Iteration budget of the calibration probe solve.
+    pub calib_max_iters: usize,
+    /// SHINE fallback guard per column (paper §3): a cotangent whose panel
+    /// answer grows beyond `ratio · ‖dz‖` reverts to the Jacobian-free
+    /// direction. `None` disables the guard.
+    pub fallback_ratio: Option<f64>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 32,
+            tol: 1e-6,
+            max_iters: 200,
+            solver: ForwardSolver::Picard { tau: 1.0 },
+            calib_memory: 30,
+            calib_max_iters: 60,
+            fallback_ratio: None,
+        }
+    }
+}
+
+/// Telemetry for one served batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchReport {
+    /// Columns in this batch.
+    pub batch: usize,
+    /// Forward iterations of the slowest column (= solver sweeps run).
+    pub fwd_iters_max: usize,
+    /// Sum of per-column forward iterations (what a sequential server would
+    /// have paid in residual evaluations).
+    pub fwd_col_iters_total: usize,
+    pub all_converged: bool,
+    /// Columns reverted to the Jacobian-free direction by the guard.
+    pub fallback_cols: usize,
+    pub fwd_seconds: f64,
+    pub bwd_seconds: f64,
+}
+
+/// Serves batches of DEQ requests against one residual map: batched forward
+/// solve on a contiguous state block, then a single multi-RHS panel sweep
+/// answering every SHINE cotangent. Holds the shared calibration estimate,
+/// the workspace and (for Anderson) the per-column solver states — nothing
+/// is allocated per batch once warm.
+pub struct ServeEngine<E: Elem> {
+    d: usize,
+    cfg: EngineConfig,
+    /// Shared SHINE estimate `H ≈ J_g⁻¹` from the calibration probe; `None`
+    /// serves the Jacobian-free direction (w = dz).
+    h: Option<LowRank<E>>,
+    ws: Workspace<E>,
+    anderson: Option<AndersonBatch<E>>,
+}
+
+impl<E: Elem> ServeEngine<E> {
+    pub fn new(d: usize, cfg: EngineConfig) -> ServeEngine<E> {
+        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        let mut ws = Workspace::new();
+        let anderson = match cfg.solver {
+            ForwardSolver::Anderson { m, beta } => {
+                Some(AndersonBatch::new(d, m, beta, cfg.max_batch, &mut ws))
+            }
+            ForwardSolver::Picard { .. } => None,
+        };
+        ServeEngine {
+            d,
+            cfg,
+            h: None,
+            ws,
+            anderson,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// The shared inverse estimate (None until [`ServeEngine::calibrate`]).
+    pub fn estimate(&self) -> Option<&LowRank<E>> {
+        self.h.as_ref()
+    }
+
+    /// Capture the shared SHINE estimate: one Broyden probe solve of the
+    /// single-request residual `g1` from `z0`, whose forward qN estimate
+    /// (`H ≈ J_g⁻¹`, exactly what SHINE shares with the backward pass)
+    /// becomes the operator every batch backward applies. Returns the
+    /// probe's (iterations, final residual). Re-calibrate whenever the
+    /// served model's parameters move.
+    pub fn calibrate(&mut self, g1: impl FnMut(&[E], &mut [E]), z0: &[E]) -> (usize, f64) {
+        debug_assert_eq!(z0.len(), self.d);
+        let opts = FpOptions {
+            tol: self.cfg.tol,
+            max_iters: self.cfg.calib_max_iters,
+            memory: self.cfg.calib_memory,
+            ..Default::default()
+        };
+        let res = broyden_solve_ws(g1, z0, &opts, &mut self.ws);
+        let out = (res.iters, res.g_norm);
+        self.h = Some(res.qn.into_low_rank());
+        out
+    }
+
+    /// Serve one batch.
+    ///
+    /// * `g` — batched residual: `g(block, ids, out)` evaluates
+    ///   `ids.len()` active columns in one call (`ids[p]` = caller-side
+    ///   column at physical position `p`, for per-request context lookup).
+    /// * `zs` — d × B column-major initial iterates, overwritten with the
+    ///   fixed points (submission order).
+    /// * `cotangents` / `w_out` — d × B blocks: per-request backward seeds
+    ///   `dz` and their SHINE directions `w ≈ J_g⁻ᵀ dz`, answered by ONE
+    ///   `apply_t_multi` panel sweep for the whole batch (no per-request
+    ///   panel applies).
+    /// * `stats` — per-column forward outcomes (length ≥ B).
+    ///
+    /// Allocation-free once the engine is warm (see the module contract).
+    pub fn process(
+        &mut self,
+        g: impl FnMut(&[E], &[usize], &mut [E]),
+        zs: &mut [E],
+        cotangents: &[E],
+        w_out: &mut [E],
+        stats: &mut [ColStats],
+    ) -> BatchReport {
+        let d = self.d;
+        assert_eq!(zs.len() % d, 0, "state block must be a whole number of columns");
+        let b = zs.len() / d;
+        assert!(b <= self.cfg.max_batch, "batch {b} exceeds max_batch {}", self.cfg.max_batch);
+        assert_eq!(cotangents.len(), b * d);
+        assert_eq!(w_out.len(), b * d);
+        assert!(stats.len() >= b);
+        let sw = Stopwatch::start();
+        match self.cfg.solver {
+            ForwardSolver::Picard { tau } => {
+                picard_solve_batch(
+                    g,
+                    zs,
+                    d,
+                    tau,
+                    self.cfg.tol,
+                    self.cfg.max_iters,
+                    &mut self.ws,
+                    stats,
+                );
+            }
+            ForwardSolver::Anderson { .. } => {
+                let anderson = self.anderson.as_mut().expect("Anderson state for Anderson solver");
+                anderson.solve(g, zs, self.cfg.tol, self.cfg.max_iters, &mut self.ws, stats);
+            }
+        }
+        let fwd_seconds = sw.elapsed();
+
+        let sw = Stopwatch::start();
+        // Backward: the whole batch of cotangents through ONE multi-RHS
+        // panel sweep against the shared forward estimate — this is the
+        // SHINE serving contract (uncalibrated engines answer with the
+        // Jacobian-free identity direction).
+        match &self.h {
+            Some(h) => h.apply_t_multi_into(cotangents, w_out, &mut self.ws),
+            None => w_out.copy_from_slice(cotangents),
+        }
+        let mut fallback_cols = 0usize;
+        if let Some(ratio) = self.cfg.fallback_ratio {
+            if self.h.is_some() {
+                for j in 0..b {
+                    let dzn = nrm2(&cotangents[j * d..(j + 1) * d]);
+                    let wn = nrm2(&w_out[j * d..(j + 1) * d]);
+                    if wn > ratio * dzn {
+                        w_out[j * d..(j + 1) * d]
+                            .copy_from_slice(&cotangents[j * d..(j + 1) * d]);
+                        fallback_cols += 1;
+                    }
+                }
+            }
+        }
+        let bwd_seconds = sw.elapsed();
+
+        let mut fwd_iters_max = 0usize;
+        let mut fwd_col_iters_total = 0usize;
+        let mut all_converged = true;
+        for s in stats.iter().take(b) {
+            fwd_iters_max = fwd_iters_max.max(s.iters);
+            fwd_col_iters_total += s.iters;
+            all_converged &= s.converged;
+        }
+        BatchReport {
+            batch: b,
+            fwd_iters_max,
+            fwd_col_iters_total,
+            all_converged,
+            fallback_cols,
+            fwd_seconds,
+            bwd_seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::fixed_point::picard_solve;
+    use crate::util::rng::Rng;
+
+    /// Positional contractive residual shared by every column:
+    /// g(z)[i] = z[i] − 0.3·z[(i+1) mod d] − bias[i mod d].
+    fn test_g(bias: &[f64], block: &[f64], d: usize, out: &mut [f64]) {
+        let k = block.len() / d;
+        for p in 0..k {
+            for i in 0..d {
+                let zn = block[p * d + (i + 1) % d];
+                out[p * d + i] = block[p * d + i] - 0.3 * zn - bias[i];
+            }
+        }
+    }
+
+    #[test]
+    fn uncalibrated_engine_serves_jacobian_free() {
+        let d = 16;
+        let b = 3;
+        let mut rng = Rng::new(1);
+        let bias = rng.normal_vec(d);
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: b,
+                tol: 1e-10,
+                ..Default::default()
+            },
+        );
+        let mut zs = vec![0.0; b * d];
+        let cots: Vec<f64> = (0..b * d).map(|_| rng.normal()).collect();
+        let mut w = vec![0.0; b * d];
+        let mut stats = vec![ColStats::default(); b];
+        let rep = eng.process(
+            |block, _ids, out| test_g(&bias, block, d, out),
+            &mut zs,
+            &cots,
+            &mut w,
+            &mut stats,
+        );
+        assert!(rep.all_converged);
+        assert_eq!(w, cots); // identity backward without calibration
+        // Forward parity with the sequential solver, column by column.
+        for j in 0..b {
+            let (z, _, it) = picard_solve(
+                |z: &[f64], out: &mut [f64]| test_g(&bias, z, d, out),
+                &vec![0.0; d],
+                1.0,
+                1e-10,
+                200,
+            );
+            assert_eq!(&zs[j * d..(j + 1) * d], &z[..]);
+            assert_eq!(stats[j].iters, it);
+        }
+    }
+
+    #[test]
+    fn calibrated_backward_is_one_shared_sweep() {
+        use crate::qn::InvOp;
+        let d = 20;
+        let b = 4;
+        let mut rng = Rng::new(2);
+        let bias = rng.normal_vec(d);
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: b,
+                tol: 1e-11,
+                calib_memory: 10,
+                ..Default::default()
+            },
+        );
+        let (it, rn) = eng.calibrate(
+            |z: &[f64], out: &mut [f64]| test_g(&bias, z, d, out),
+            &vec![0.0; d],
+        );
+        assert!(rn <= 1e-11, "probe residual {rn} after {it} iters");
+        let mut zs = vec![0.0; b * d];
+        let cots: Vec<f64> = (0..b * d).map(|_| rng.normal()).collect();
+        let mut w = vec![0.0; b * d];
+        let mut stats = vec![ColStats::default(); b];
+        eng.process(
+            |block, _ids, out| test_g(&bias, block, d, out),
+            &mut zs,
+            &cots,
+            &mut w,
+            &mut stats,
+        );
+        // The one-sweep multi answer must equal per-column H^T applies.
+        let h = eng.estimate().unwrap();
+        for j in 0..b {
+            let want = h.apply_t_vec(&cots[j * d..(j + 1) * d]);
+            assert_eq!(&w[j * d..(j + 1) * d], &want[..], "col {j}");
+        }
+    }
+
+    #[test]
+    fn anderson_engine_converges_and_reuses_state() {
+        let d = 14;
+        let b = 3;
+        let mut rng = Rng::new(3);
+        let bias = rng.normal_vec(d);
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: b,
+                tol: 1e-10,
+                solver: ForwardSolver::Anderson { m: 4, beta: 1.0 },
+                ..Default::default()
+            },
+        );
+        let cots = vec![0.0; b * d];
+        let mut w = vec![0.0; b * d];
+        let mut stats = vec![ColStats::default(); b];
+        let mut zs1 = vec![0.0; b * d];
+        let r1 = eng.process(
+            |block, _ids, out| test_g(&bias, block, d, out),
+            &mut zs1,
+            &cots,
+            &mut w,
+            &mut stats,
+        );
+        assert!(r1.all_converged);
+        // Second batch through the SAME engine (persistent Anderson state)
+        // must reproduce the first bit-for-bit.
+        let mut zs2 = vec![0.0; b * d];
+        let r2 = eng.process(
+            |block, _ids, out| test_g(&bias, block, d, out),
+            &mut zs2,
+            &cots,
+            &mut w,
+            &mut stats,
+        );
+        assert_eq!(zs1, zs2);
+        assert_eq!(r1.fwd_iters_max, r2.fwd_iters_max);
+    }
+
+    #[test]
+    fn fallback_guard_reverts_blown_up_columns() {
+        let d = 8;
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: 2,
+                tol: 1e-9,
+                fallback_ratio: Some(1.5),
+                ..Default::default()
+            },
+        );
+        // Hand the engine a pathological estimate: H = I + 10·e0 e0^T blows
+        // up any cotangent with mass on coordinate 0.
+        let mut h = LowRank::identity(d, 2, crate::qn::MemoryPolicy::Evict);
+        let mut e0 = vec![0.0; d];
+        e0[0] = 1.0;
+        let u: Vec<f64> = e0.iter().map(|x| 10.0 * x).collect();
+        h.push(&u, &e0);
+        eng.h = Some(h);
+        let mut zs = vec![0.0; 2 * d];
+        let mut cots = vec![0.0; 2 * d];
+        cots[0] = 1.0; // col 0: all mass on coordinate 0 → 11x growth
+        cots[d + 1] = 1.0; // col 1: orthogonal to the factor → untouched
+        let mut w = vec![0.0; 2 * d];
+        let mut stats = vec![ColStats::default(); 2];
+        let bias = vec![0.1; d];
+        let rep = eng.process(
+            |block, _ids, out| test_g(&bias, block, d, out),
+            &mut zs,
+            &cots,
+            &mut w,
+            &mut stats,
+        );
+        assert_eq!(rep.fallback_cols, 1);
+        assert_eq!(&w[..d], &cots[..d]); // reverted to Jacobian-free
+        assert_eq!(w[d + 1], 1.0); // untouched column passes through
+    }
+}

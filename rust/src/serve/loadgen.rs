@@ -1,0 +1,291 @@
+//! Synthetic closed-loop load driver: N clients, each with one outstanding
+//! request, pushed through [`Scheduler`] + [`ServeEngine`] against a
+//! [`SynthDeq`] model. Shared by the `serve-bench` CLI subcommand and
+//! `benches/serve_throughput.rs` so both report the same numbers.
+//!
+//! Closed-loop means a client resubmits the moment its previous request
+//! completes, so the offered load self-paces to the server's capacity and
+//! throughput is a clean function of batch width. The scheduler still runs
+//! its real admission policy; the one concession to the closed loop is that
+//! a partial batch is released immediately when the queue cannot grow
+//! (every non-completed request is already queued — waiting out the
+//! deadline would only add dead time to the measurement).
+
+use crate::linalg::vecops::Elem;
+use crate::serve::engine::{EngineConfig, ForwardSolver, ServeEngine};
+use crate::serve::scheduler::{Scheduler, SchedulerConfig};
+use crate::serve::synth::SynthDeq;
+use crate::solvers::fixed_point::ColStats;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::timer::Stopwatch;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LoadConfig {
+    /// Concurrent closed-loop clients (= maximum in-flight requests).
+    pub clients: usize,
+    /// Total requests to serve before stopping.
+    pub total: usize,
+    /// Scheduler batch cap (usually = clients; 1 gives the sequential
+    /// baseline).
+    pub max_batch: usize,
+    /// Scheduler partial-batch deadline in seconds.
+    pub max_wait: f64,
+}
+
+/// What one closed-loop run measured.
+#[derive(Clone, Debug, Default)]
+pub struct ThroughputReport {
+    pub requests: usize,
+    pub seconds: f64,
+    /// Requests per second of wall time.
+    pub rps: f64,
+    pub batches: usize,
+    /// Mean served batch width.
+    pub mean_batch: f64,
+    /// Median end-to-end request latency (queue wait + batch service), ms.
+    pub p50_latency_ms: f64,
+    /// p95 end-to-end request latency, ms.
+    pub p95_latency_ms: f64,
+    /// Mean forward iterations per request.
+    pub fwd_iters_mean: f64,
+    pub all_converged: bool,
+}
+
+/// Drive `lc.total` requests from `lc.clients` closed-loop clients through
+/// scheduler + engine. Requests start from z₀ = 0 with a fixed random
+/// cotangent per client; all heavy blocks are preallocated, so the loop
+/// measures the serving path, not the harness.
+pub fn run_closed_loop<E: Elem>(
+    engine: &mut ServeEngine<E>,
+    model: &SynthDeq<E>,
+    lc: &LoadConfig,
+    seed: u64,
+) -> ThroughputReport {
+    let d = engine.dim();
+    assert_eq!(model.dim(), d);
+    assert!(lc.clients >= 1 && lc.max_batch >= 1);
+    assert!(lc.max_batch <= engine.config().max_batch);
+    let mut rng = Rng::new(seed ^ 0x10AD);
+    let cots: Vec<E> = (0..lc.clients * d).map(|_| E::from_f64(rng.normal())).collect();
+    let mut zs = vec![E::ZERO; lc.max_batch * d];
+    let mut cot_block = vec![E::ZERO; lc.max_batch * d];
+    let mut w_block = vec![E::ZERO; lc.max_batch * d];
+    let mut col_stats = vec![ColStats::default(); lc.max_batch];
+    let mut sched: Scheduler<usize> = Scheduler::new(SchedulerConfig {
+        max_batch: lc.max_batch,
+        max_wait: lc.max_wait,
+        queue_cap: lc.clients.max(lc.max_batch),
+    });
+    let mut batch_items: Vec<(f64, usize)> = Vec::with_capacity(lc.max_batch);
+    let mut latencies: Vec<f64> = Vec::with_capacity(lc.total);
+
+    let sw = Stopwatch::start();
+    let initial = lc.clients.min(lc.total);
+    for cid in 0..initial {
+        sched
+            .push(sw.elapsed(), cid)
+            .unwrap_or_else(|_| panic!("queue sized for all clients"));
+    }
+    let mut submitted = initial;
+    let mut completed = 0usize;
+    let mut batches = 0usize;
+    let mut iters_total = 0usize;
+    let mut all_converged = true;
+    while completed < lc.total {
+        let now = sw.elapsed();
+        let mut n = sched.ready(now);
+        if n == 0 {
+            // Closed loop: nothing new can arrive while we sit here, so
+            // release the partial batch instead of sleeping out max_wait.
+            n = sched.len().min(lc.max_batch);
+        }
+        assert!(n > 0, "closed loop drained with work outstanding");
+        batch_items.clear();
+        sched.drain_into(n, now, &mut batch_items);
+        for (p, &(_, cid)) in batch_items.iter().enumerate() {
+            for z in zs[p * d..(p + 1) * d].iter_mut() {
+                *z = E::ZERO;
+            }
+            cot_block[p * d..(p + 1) * d].copy_from_slice(&cots[cid * d..(cid + 1) * d]);
+        }
+        let t0 = sw.elapsed();
+        let report = engine.process(
+            |block: &[E], _ids: &[usize], out: &mut [E]| {
+                model.residual_batch(block, block.len() / d, out)
+            },
+            &mut zs[..n * d],
+            &cot_block[..n * d],
+            &mut w_block[..n * d],
+            &mut col_stats[..n],
+        );
+        let t1 = sw.elapsed();
+        batches += 1;
+        iters_total += report.fwd_col_iters_total;
+        all_converged &= report.all_converged;
+        let service = t1 - t0;
+        for &(wait, cid) in batch_items.iter() {
+            latencies.push(wait + service);
+            completed += 1;
+            if submitted < lc.total {
+                // The client's next request enters the queue immediately.
+                let _ = sched.push(t1, cid);
+                submitted += 1;
+            }
+        }
+    }
+    let seconds = sw.elapsed();
+    ThroughputReport {
+        requests: completed,
+        seconds,
+        rps: completed as f64 / seconds.max(1e-12),
+        batches,
+        mean_batch: completed as f64 / (batches.max(1)) as f64,
+        p50_latency_ms: stats::median(&latencies) * 1e3,
+        p95_latency_ms: stats::quantile(&latencies, 0.95) * 1e3,
+        fwd_iters_mean: iters_total as f64 / (completed.max(1)) as f64,
+        all_converged,
+    }
+}
+
+/// One row of the batched-vs-sequential suite.
+#[derive(Clone, Debug)]
+pub struct SuiteRow {
+    pub b: usize,
+    pub report: ThroughputReport,
+    /// Throughput relative to the suite's first row (conventionally B = 1,
+    /// the sequential baseline).
+    pub speedup_vs_baseline: f64,
+}
+
+/// Run the closed-loop load at each batch width in `batch_sizes` (first
+/// entry = sequential baseline) against one shared [`SynthDeq`] model:
+/// fresh engine per width, calibrated before timing, with a short warm-up
+/// run so pools/caches don't bill the measured pass.
+pub fn run_suite<E: Elem>(
+    d: usize,
+    block: usize,
+    batch_sizes: &[usize],
+    total_per_case: usize,
+    tol: f64,
+    seed: u64,
+) -> Vec<SuiteRow> {
+    let model: SynthDeq<E> = SynthDeq::new(d, block, seed);
+    let mut rows: Vec<SuiteRow> = Vec::with_capacity(batch_sizes.len());
+    let mut base_rps = 0.0;
+    for &bsz in batch_sizes {
+        let mut engine: ServeEngine<E> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: bsz,
+                tol,
+                max_iters: 200,
+                solver: ForwardSolver::Picard { tau: 1.0 },
+                calib_memory: 30,
+                calib_max_iters: 60,
+                fallback_ratio: None,
+            },
+        );
+        engine.calibrate(
+            |z: &[E], out: &mut [E]| model.residual_batch(z, 1, out),
+            &vec![E::ZERO; d],
+        );
+        let warm = LoadConfig {
+            clients: bsz,
+            total: 2 * bsz,
+            max_batch: bsz,
+            max_wait: 1e-3,
+        };
+        let _ = run_closed_loop(&mut engine, &model, &warm, seed ^ 1);
+        let lc = LoadConfig {
+            clients: bsz,
+            total: total_per_case,
+            max_batch: bsz,
+            max_wait: 1e-3,
+        };
+        let report = run_closed_loop(&mut engine, &model, &lc, seed ^ 2);
+        if rows.is_empty() {
+            base_rps = report.rps;
+        }
+        let speedup_vs_baseline = report.rps / base_rps.max(1e-12);
+        rows.push(SuiteRow {
+            b: bsz,
+            report,
+            speedup_vs_baseline,
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_serves_every_request() {
+        let d = 64;
+        let model: SynthDeq<f32> = SynthDeq::new(d, 16, 21);
+        let mut engine: ServeEngine<f32> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: 4,
+                tol: 1e-4,
+                ..Default::default()
+            },
+        );
+        engine.calibrate(
+            |z: &[f32], out: &mut [f32]| model.residual_batch(z, 1, out),
+            &vec![0.0f32; d],
+        );
+        let lc = LoadConfig {
+            clients: 4,
+            total: 13, // not a multiple of the batch: exercises partial tail
+            max_batch: 4,
+            max_wait: 1e-4,
+        };
+        let rep = run_closed_loop(&mut engine, &model, &lc, 1);
+        assert_eq!(rep.requests, 13);
+        assert!(rep.all_converged);
+        assert!(rep.rps > 0.0);
+        assert!(rep.batches >= 4); // at least ceil(13/4)
+        assert!(rep.p50_latency_ms >= 0.0);
+        assert!(rep.fwd_iters_mean > 1.0);
+    }
+
+    #[test]
+    fn suite_reports_baseline_relative_speedups() {
+        let rows = run_suite::<f32>(64, 16, &[1, 2], 8, 1e-4, 5);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].b, 1);
+        assert!((rows[0].speedup_vs_baseline - 1.0).abs() < 1e-12);
+        assert!(rows[1].report.requests == 8);
+        assert!(rows[1].speedup_vs_baseline > 0.0);
+    }
+
+    #[test]
+    fn fewer_clients_than_batch_cap_still_completes() {
+        // clients < max_batch: the scheduler would wait max_wait for a full
+        // batch; the closed-loop driver releases the partial batch instead.
+        let d = 48;
+        let model: SynthDeq<f32> = SynthDeq::new(d, 12, 2);
+        let mut engine: ServeEngine<f32> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: 8,
+                tol: 1e-4,
+                ..Default::default()
+            },
+        );
+        let lc = LoadConfig {
+            clients: 3,
+            total: 9,
+            max_batch: 8,
+            max_wait: 10.0, // would stall for seconds if honored blindly
+        };
+        let sw = crate::util::timer::Stopwatch::start();
+        let rep = run_closed_loop(&mut engine, &model, &lc, 7);
+        assert_eq!(rep.requests, 9);
+        assert!(sw.elapsed() < 5.0, "partial batches must not wait out max_wait");
+        assert!(rep.mean_batch <= 3.0 + 1e-9);
+    }
+}

@@ -1,0 +1,81 @@
+//! Batched DEQ serving engine: B concurrent requests as matrix-level work.
+//!
+//! The repo's fastest kernels — the contiguous `FactorPanel` sweeps, the
+//! multi-RHS `apply_t_multi`, the thread-sharded batched residual — all
+//! batch well, but below this module nothing amortized many per-request
+//! solves into shared sweeps. This subsystem closes that gap and turns the
+//! SHINE machinery into a traffic-serving scenario:
+//!
+//! * **Batched forward** — requests are packed into one contiguous d × B
+//!   column-major state block and solved by [`picard_solve_batch`] /
+//!   [`AndersonBatch`] (see [`crate::solvers::fixed_point`]): the model
+//!   residual is evaluated ONCE per iteration over the whole block (one
+//!   thread fan-out per iteration instead of one per request), converged
+//!   columns retire by swap-to-back compaction so late iterations only
+//!   touch stragglers, and every column's trajectory is bit-identical to a
+//!   sequential solve.
+//! * **One-sweep SHINE backward** — the engine holds a single
+//!   `LowRank` inverse estimate captured from a Broyden calibration probe
+//!   (the forward pass's qN estimate, exactly what SHINE shares per the
+//!   paper) and answers ALL B cotangents of a batch with one
+//!   `apply_t_multi_into` panel sweep: the factor panels are streamed once
+//!   per batch, not once per request, and the coefficient block comes from
+//!   the engine's [`Workspace`] so a steady-state batch allocates nothing.
+//! * **Micro-batching front end** — [`Scheduler`] drains a bounded FIFO
+//!   queue into batches by max-batch-size / max-wait, and
+//!   [`loadgen::run_closed_loop`] drives a synthetic closed-loop load
+//!   through scheduler + engine (the `serve-bench` CLI subcommand and
+//!   `benches/serve_throughput.rs` both sit on it).
+//!
+//! # Invariants and contracts
+//!
+//! **Retirement / compaction** (both batched solvers): the active columns
+//! always form the prefix `0..active` of the block; a column whose residual
+//! reaches `tol` (or whose iteration budget is exhausted) swaps with column
+//! `active-1` — state, residual and (for Anderson) per-column solver state
+//! travel together — and `active` shrinks. `ids[p]` names the caller-side
+//! column physically at `p`; the residual closure receives it so
+//! per-request context (input injections) can be looked up per column. On
+//! return the block is un-permuted to submission order (cycle walk), so
+//! callers never observe the compaction.
+//!
+//! **Workspace reuse**: one `Workspace` lives in the engine and is threaded
+//! through every forward solve and backward sweep. All transient state —
+//! the residual block, the column-id permutation ([`Workspace::take_idx`]),
+//! Anderson histories/Gram systems, multi-RHS panel coefficients — is
+//! drawn from its pools, and the Anderson per-column states persist across
+//! batches inside the engine ([`AndersonBatch`]), recycling their history
+//! buffers on reset. After the first full-depth batch, `process` performs
+//! **zero heap allocations per batch** (proven by the serving case in
+//! `rust/tests/qn_alloc.rs`).
+//!
+//! **Scheduler semantics**: bounded FIFO queue; `push` rejects when full
+//! (backpressure, never unbounded growth). A full batch (`max_batch`
+//! requests) is releasable immediately; a partial batch only once the
+//! *oldest* queued request has waited `max_wait`. Draining hands back
+//! per-request queue latency so the load generator can report end-to-end
+//! latency (queue wait + batch service).
+//!
+//! **Shared-estimate approximation**: serving reuses ONE calibration
+//! estimate `H ≈ J_g⁻¹` for every request — the serving-side analogue of
+//! SHINE's forward/backward sharing. Requests whose Jacobian drifts from
+//! the calibration point degrade toward the Jacobian-free direction
+//! (Fung et al., 2021); the per-column fallback guard
+//! ([`EngineConfig::fallback_ratio`], paper §3) caps the blow-up by
+//! reverting any cotangent whose panel answer grows beyond
+//! `ratio · ‖dz‖`.
+//!
+//! [`picard_solve_batch`]: crate::solvers::fixed_point::picard_solve_batch
+//! [`AndersonBatch`]: crate::solvers::fixed_point::AndersonBatch
+//! [`Workspace`]: crate::qn::Workspace
+//! [`Workspace::take_idx`]: crate::qn::Workspace::take_idx
+
+pub mod engine;
+pub mod loadgen;
+pub mod scheduler;
+pub mod synth;
+
+pub use engine::{BatchReport, EngineConfig, ForwardSolver, ServeEngine};
+pub use loadgen::{run_closed_loop, run_suite, LoadConfig, SuiteRow, ThroughputReport};
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use synth::SynthDeq;

@@ -1,0 +1,199 @@
+//! Micro-batching admission queue: a bounded FIFO drained into batches by
+//! max-batch-size / max-wait (semantics in the [`crate::serve`] contract).
+//!
+//! The scheduler is deliberately clock-agnostic — every operation takes
+//! `now` as a parameter — so the same code runs against wall time in the
+//! serving loop and against a manual clock in tests.
+
+use std::collections::VecDeque;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Maximum requests released as one batch (engine `max_batch`).
+    pub max_batch: usize,
+    /// Seconds the oldest queued request may wait before a partial batch is
+    /// released anyway (the latency/throughput knob).
+    pub max_wait: f64,
+    /// Bounded queue capacity; pushes beyond it are rejected (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 32,
+            max_wait: 2e-3,
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// Bounded FIFO request queue with batch-formation policy. Generic over the
+/// request payload (the serving loop uses small client ids and keeps the
+/// heavy state in preallocated blocks).
+#[derive(Debug)]
+pub struct Scheduler<T> {
+    cfg: SchedulerConfig,
+    /// (arrival time, payload), oldest at the front.
+    queue: VecDeque<(f64, T)>,
+    /// Admission telemetry.
+    pub accepted: usize,
+    pub rejected: usize,
+}
+
+impl<T> Scheduler<T> {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler<T> {
+        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        assert!(
+            cfg.queue_cap >= cfg.max_batch,
+            "queue_cap must fit at least one full batch"
+        );
+        Scheduler {
+            cfg,
+            queue: VecDeque::with_capacity(cfg.queue_cap),
+            accepted: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Admit a request at time `now`. Rejects (returning the payload) when
+    /// the bounded queue is full — callers shed load instead of queueing
+    /// unboundedly.
+    pub fn push(&mut self, now: f64, item: T) -> Result<(), T> {
+        if self.queue.len() >= self.cfg.queue_cap {
+            self.rejected += 1;
+            return Err(item);
+        }
+        self.queue.push_back((now, item));
+        self.accepted += 1;
+        Ok(())
+    }
+
+    /// Number of requests releasable as one batch at time `now`:
+    /// `max_batch` as soon as a full batch is queued, the whole (partial)
+    /// queue once the oldest request has waited `max_wait`, 0 otherwise.
+    pub fn ready(&self, now: f64) -> usize {
+        let n = self.queue.len();
+        if n == 0 {
+            return 0;
+        }
+        if n >= self.cfg.max_batch {
+            return self.cfg.max_batch;
+        }
+        let oldest = self.queue.front().expect("non-empty").0;
+        if now - oldest >= self.cfg.max_wait {
+            n
+        } else {
+            0
+        }
+    }
+
+    /// Earliest time a currently-queued partial batch becomes releasable
+    /// (`None` when the queue is empty or already holds a full batch — then
+    /// [`Scheduler::ready`] is the authority).
+    pub fn next_deadline(&self) -> Option<f64> {
+        if self.queue.is_empty() || self.queue.len() >= self.cfg.max_batch {
+            return None;
+        }
+        Some(self.queue.front().expect("non-empty").0 + self.cfg.max_wait)
+    }
+
+    /// Drain up to `n` oldest requests (FIFO) into `out` as
+    /// `(queue latency at now, payload)` pairs.
+    pub fn drain_into(&mut self, n: usize, now: f64, out: &mut Vec<(f64, T)>) {
+        for _ in 0..n.min(self.queue.len()) {
+            let (t, item) = self.queue.pop_front().expect("len checked");
+            out.push((now - t, item));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(max_batch: usize, max_wait: f64, cap: usize) -> Scheduler<u32> {
+        Scheduler::new(SchedulerConfig {
+            max_batch,
+            max_wait,
+            queue_cap: cap,
+        })
+    }
+
+    #[test]
+    fn full_batch_releases_immediately() {
+        let mut s = sched(4, 1.0, 16);
+        for i in 0..3 {
+            s.push(0.0, i).unwrap();
+        }
+        assert_eq!(s.ready(0.0), 0); // partial, no wait elapsed
+        s.push(0.0, 3).unwrap();
+        assert_eq!(s.ready(0.0), 4); // full batch, no waiting
+        // Overfull queue still releases max_batch at a time.
+        for i in 4..10 {
+            s.push(0.0, i).unwrap();
+        }
+        assert_eq!(s.ready(0.0), 4);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_oldest_deadline() {
+        let mut s = sched(8, 0.5, 16);
+        s.push(1.0, 1).unwrap();
+        s.push(1.2, 2).unwrap();
+        assert_eq!(s.ready(1.4), 0);
+        assert_eq!(s.next_deadline(), Some(1.5));
+        assert_eq!(s.ready(1.5), 2); // oldest waited max_wait → release all
+    }
+
+    #[test]
+    fn bounded_queue_rejects_with_backpressure() {
+        let mut s = sched(2, 1.0, 3);
+        assert!(s.push(0.0, 1).is_ok());
+        assert!(s.push(0.0, 2).is_ok());
+        assert!(s.push(0.0, 3).is_ok());
+        assert_eq!(s.push(0.0, 4), Err(4));
+        assert_eq!(s.accepted, 3);
+        assert_eq!(s.rejected, 1);
+        // Draining frees capacity.
+        let mut out = Vec::new();
+        s.drain_into(2, 0.0, &mut out);
+        assert!(s.push(0.0, 4).is_ok());
+    }
+
+    #[test]
+    fn drain_is_fifo_with_latency() {
+        let mut s = sched(3, 1.0, 8);
+        s.push(0.0, 10).unwrap();
+        s.push(0.5, 20).unwrap();
+        s.push(0.75, 30).unwrap();
+        let mut out = Vec::new();
+        s.drain_into(s.ready(0.75), 1.0, &mut out);
+        assert_eq!(out, vec![(1.0, 10), (0.5, 20), (0.25, 30)]);
+        assert!(s.is_empty());
+        assert_eq!(s.ready(2.0), 0);
+        assert_eq!(s.next_deadline(), None);
+    }
+
+    #[test]
+    fn full_queue_has_no_deadline() {
+        let mut s = sched(2, 1.0, 8);
+        s.push(0.0, 1).unwrap();
+        assert!(s.next_deadline().is_some());
+        s.push(0.0, 2).unwrap();
+        assert_eq!(s.next_deadline(), None); // full batch: ready now
+        assert_eq!(s.ready(0.0), 2);
+    }
+}

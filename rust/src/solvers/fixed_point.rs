@@ -24,6 +24,14 @@
 //! evicted history entry plus one fresh row of dots — O(k·d) per iteration
 //! instead of the old O(k²·d) rebuild — and the small solve runs in place
 //! (no `DMat`/LU allocation).
+//!
+//! The batched serving path ([`crate::serve`]) runs the same two methods
+//! over a contiguous d × B column-major state block:
+//! [`picard_solve_batch`] and [`anderson_solve_batch`] / [`AndersonBatch`]
+//! evaluate the residual ONCE per iteration for every active column, retire
+//! converged columns by swap-to-back compaction, and keep each column's
+//! trajectory bit-identical to its sequential counterpart (Anderson shares
+//! the literal iteration body through the private `AndersonState` machine).
 
 use crate::linalg::vecops::{add_scaled, axpy, dot, nrm2, sub, zero, Elem};
 use crate::qn::broyden::BroydenInverse;
@@ -201,6 +209,11 @@ pub fn anderson_solve<E: Elem>(
 ///   instead of rebuilding all k² entries);
 /// * the damped normal-equation solve runs by in-place Gaussian elimination
 ///   on a workspace scratch copy — no `DMat`/LU allocation.
+///
+/// The iteration body lives in [`AndersonState`], the per-column state
+/// machine the batched serving solver ([`anderson_solve_batch`]) drives for
+/// B columns against one shared residual evaluation — one code path, so the
+/// batched solve is bit-identical to B sequential runs.
 pub fn anderson_solve_ws<E: Elem>(
     mut g: impl FnMut(&[E], &mut [E]),
     z0: &[E],
@@ -213,20 +226,7 @@ pub fn anderson_solve_ws<E: Elem>(
     let d = z0.len();
     let mut z = z0.to_vec();
     let mut r = vec![E::ZERO; d];
-    let mut z_next = vec![E::ZERO; d];
-    let mut hist_z: Vec<Vec<E>> = Vec::with_capacity(m + 1);
-    let mut hist_r: Vec<Vec<E>> = Vec::with_capacity(m + 1);
-    // ΔR difference rows (logical oldest → newest), at most m−1 live.
-    let mut dr: Vec<Vec<E>> = Vec::with_capacity(m);
-    let mut ndr = 0usize;
-    // Persistent small-system scratch (f64 accumulator pool). `gs` is the
-    // Gram stride; give-backs below run in reverse take order so the pool
-    // hands the same capacities back on the next solve.
-    let gs = m.max(1);
-    let mut gram = ws.take_acc(gs * gs);
-    let mut lu = ws.take_acc(gs * gs);
-    let mut rhs = ws.take_acc(gs);
-    let mut alphas = ws.take_acc(gs + 1);
+    let mut st = AndersonState::new(d, m, ws);
     let mut iters = 0;
     let rn = loop {
         g(&z, &mut r);
@@ -234,96 +234,461 @@ pub fn anderson_solve_ws<E: Elem>(
         if rn <= tol || iters >= max_iters {
             break rn;
         }
+        st.advance(&mut z, &r, beta, ws);
+        iters += 1;
+    };
+    st.release(ws);
+    (z, rn, iters)
+}
+
+/// Per-column Anderson(m) state machine: exactly the iteration body of
+/// [`anderson_solve_ws`], factored out so the batched solver can drive B
+/// independent columns against one shared residual evaluation while each
+/// column follows the bit-identical sequential trajectory.
+///
+/// All d-length buffers come from the caller's [`Workspace`]; on
+/// [`AndersonState::reset`] they are parked on an internal spare list, so a
+/// state that lives across repeated solves (the serving engine keeps one
+/// per batch slot) allocates nothing after its first full-depth solve.
+struct AndersonState<E: Elem> {
+    m: usize,
+    d: usize,
+    /// Gram stride (`m.max(1)`).
+    gs: usize,
+    /// Iterate / residual history, logical oldest → newest, at most m live.
+    hist_z: Vec<Vec<E>>,
+    hist_r: Vec<Vec<E>>,
+    /// ΔR difference rows (logical oldest → newest), at most m−1 live.
+    dr: Vec<Vec<E>>,
+    ndr: usize,
+    /// Persistent small-system scratch (f64 accumulator pool); the Gram
+    /// block survives across iterations (incremental row/col updates).
+    gram: Vec<f64>,
+    lu: Vec<f64>,
+    rhs: Vec<f64>,
+    alphas: Vec<f64>,
+    z_next: Vec<E>,
+    /// Recycled d-buffers from a previous solve through this state.
+    spare: Vec<Vec<E>>,
+}
+
+impl<E: Elem> AndersonState<E> {
+    fn new(d: usize, m: usize, ws: &mut Workspace<E>) -> AndersonState<E> {
+        let gs = m.max(1);
+        // Take order gram → lu → rhs → alphas; release() gives back in
+        // reverse so the acc pool hands the same capacities to the next
+        // construction.
+        AndersonState {
+            m,
+            d,
+            gs,
+            hist_z: Vec::with_capacity(m.max(1)),
+            hist_r: Vec::with_capacity(m.max(1)),
+            dr: Vec::with_capacity(m.max(1)),
+            ndr: 0,
+            gram: ws.take_acc(gs * gs),
+            lu: ws.take_acc(gs * gs),
+            rhs: ws.take_acc(gs),
+            alphas: ws.take_acc(gs + 1),
+            z_next: ws.take(d),
+            spare: Vec::with_capacity(3 * m.max(1) + 2),
+        }
+    }
+
+    /// One Anderson mixing step given the fresh residual `r` at iterate `z`
+    /// (the post-tolerance-check body of the [`anderson_solve_ws`] loop);
+    /// the mixed iterate is written back into `z`.
+    fn advance(&mut self, z: &mut [E], r: &[E], beta: f64, ws: &mut Workspace<E>) {
+        let m = self.m;
+        let gs = self.gs;
+        let d = self.d;
+        debug_assert_eq!(z.len(), d);
+        debug_assert_eq!(r.len(), d);
         // --- incremental ΔR / Gram maintenance (only defined for m ≥ 2).
-        if m >= 2 && !hist_r.is_empty() {
-            if ndr + 1 >= m {
+        if m >= 2 && !self.hist_r.is_empty() {
+            if self.ndr + 1 >= m {
                 // The oldest history entry is about to be evicted: drop ΔR₀
                 // by shifting the Gram block up-left and rotating the row
                 // buffer to the back for reuse as the new newest row.
-                for i in 1..ndr {
-                    for j in 1..ndr {
-                        gram[(i - 1) * gs + (j - 1)] = gram[i * gs + j];
+                let n = self.ndr;
+                for i in 1..n {
+                    for j in 1..n {
+                        self.gram[(i - 1) * gs + (j - 1)] = self.gram[i * gs + j];
                     }
                 }
-                dr[..ndr].rotate_left(1);
-                ndr -= 1;
+                self.dr[..n].rotate_left(1);
+                self.ndr -= 1;
             }
-            if dr.len() == ndr {
-                dr.push(ws.take(d));
+            if self.dr.len() == self.ndr {
+                let buf = self.spare.pop().unwrap_or_else(|| ws.take(d));
+                self.dr.push(buf);
             }
-            // ΔR_new = r − r_prev (the history still ends at r_prev here).
-            let prev = hist_r.last().unwrap();
-            sub(&r, prev, &mut dr[ndr]);
-            for j in 0..ndr {
-                let gij = dot(&dr[ndr], &dr[j]);
-                gram[ndr * gs + j] = gij;
-                gram[j * gs + ndr] = gij;
+            let n = self.ndr;
+            {
+                // ΔR_new = r − r_prev (the history still ends at r_prev).
+                let prev = self.hist_r.last().unwrap();
+                sub(r, prev, &mut self.dr[n]);
             }
-            gram[ndr * gs + ndr] = dot(&dr[ndr], &dr[ndr]);
-            ndr += 1;
+            for j in 0..n {
+                let gij = dot(&self.dr[n], &self.dr[j]);
+                self.gram[n * gs + j] = gij;
+                self.gram[j * gs + n] = gij;
+            }
+            self.gram[n * gs + n] = dot(&self.dr[n], &self.dr[n]);
+            self.ndr += 1;
         }
         // --- append (z, r) to the history, recycling the evicted buffers.
-        let (mut zb, mut rb) = if hist_z.len() >= m && !hist_z.is_empty() {
-            (hist_z.remove(0), hist_r.remove(0))
+        let (mut zb, mut rb) = if self.hist_z.len() >= m && !self.hist_z.is_empty() {
+            (self.hist_z.remove(0), self.hist_r.remove(0))
         } else {
-            (ws.take(d), ws.take(d))
+            let zb = self.spare.pop().unwrap_or_else(|| ws.take(d));
+            let rb = self.spare.pop().unwrap_or_else(|| ws.take(d));
+            (zb, rb)
         };
-        zb.copy_from_slice(&z);
-        rb.copy_from_slice(&r);
-        hist_z.push(zb);
-        hist_r.push(rb);
-        let k = hist_z.len();
-        debug_assert!(m < 2 || ndr == k - 1);
+        zb.copy_from_slice(z);
+        rb.copy_from_slice(r);
+        self.hist_z.push(zb);
+        self.hist_r.push(rb);
+        let k = self.hist_z.len();
+        debug_assert!(m < 2 || self.ndr == k - 1);
         // --- solve min ‖Σ αᵢ rᵢ‖² s.t. Σ αᵢ = 1 via the damped normal
         // equations on the persistent Gram (solution γ lands in `rhs`).
-        let kk = ndr;
-        for a in alphas.iter_mut().take(k) {
+        let kk = self.ndr;
+        for a in self.alphas.iter_mut().take(k) {
             *a = 0.0;
         }
-        alphas[k - 1] = 1.0;
+        self.alphas[k - 1] = 1.0;
         if kk > 0 {
             for i in 0..kk {
                 for j in 0..kk {
-                    lu[i * kk + j] = gram[i * gs + j];
+                    self.lu[i * kk + j] = self.gram[i * gs + j];
                 }
-                lu[i * kk + i] += 1e-10;
-                rhs[i] = dot(&dr[i], &r);
+                self.lu[i * kk + i] += 1e-10;
+                self.rhs[i] = dot(&self.dr[i], r);
             }
-            if solve_in_place(&mut lu[..kk * kk], kk, &mut rhs[..kk]) {
+            if solve_in_place(&mut self.lu[..kk * kk], kk, &mut self.rhs[..kk]) {
                 // α from γ: barycentric weights (singular systems keep the
                 // plain-mixing fallback α = e_{k−1}).
                 for i in 0..kk {
-                    alphas[i + 1] -= rhs[i];
-                    alphas[i] += rhs[i];
+                    self.alphas[i + 1] -= self.rhs[i];
+                    self.alphas[i] += self.rhs[i];
                 }
             }
         }
         // --- mixing: z⁺ = Σ αᵢ (zᵢ − β rᵢ), accumulated in f64.
-        zero(&mut z_next);
+        zero(&mut self.z_next);
         for i in 0..k {
-            let a = alphas[i];
+            let a = self.alphas[i];
             if a != 0.0 {
                 for j in 0..d {
-                    z_next[j] = E::from_f64(
-                        z_next[j].to_f64()
-                            + a * (hist_z[i][j].to_f64() - beta * hist_r[i][j].to_f64()),
+                    self.z_next[j] = E::from_f64(
+                        self.z_next[j].to_f64()
+                            + a * (self.hist_z[i][j].to_f64()
+                                - beta * self.hist_r[i][j].to_f64()),
                     );
                 }
             }
         }
-        std::mem::swap(&mut z, &mut z_next);
-        iters += 1;
-    };
-    // Park every buffer back in the pools so a shared workspace stays warm
-    // across repeated solves (acc buffers in reverse take order).
-    for b in hist_z.drain(..).chain(hist_r.drain(..)).chain(dr.drain(..)) {
-        ws.give(b);
+        z.copy_from_slice(&self.z_next);
     }
-    ws.give_acc(alphas);
-    ws.give_acc(rhs);
-    ws.give_acc(lu);
-    ws.give_acc(gram);
-    (z, rn, iters)
+
+    /// Forget the solve history, parking every d-buffer on the spare list so
+    /// the next solve through this state allocates nothing.
+    fn reset(&mut self) {
+        self.spare.extend(self.hist_z.drain(..));
+        self.spare.extend(self.hist_r.drain(..));
+        self.spare.extend(self.dr.drain(..));
+        self.ndr = 0;
+    }
+
+    /// Give every buffer back to the workspace (acc buffers in reverse take
+    /// order, per the pool's LIFO discipline).
+    fn release(mut self, ws: &mut Workspace<E>) {
+        self.reset();
+        for b in self.spare.drain(..) {
+            ws.give(b);
+        }
+        ws.give(self.z_next);
+        ws.give_acc(self.alphas);
+        ws.give_acc(self.rhs);
+        ws.give_acc(self.lu);
+        ws.give_acc(self.gram);
+    }
+}
+
+// ---- batched (serving) fixed-point solvers --------------------------------
+//
+// The serving engine treats B concurrent DEQ requests as one contiguous
+// d × B column-major state block (column j = `zs[j*d..(j+1)*d]`) so the
+// model residual is evaluated ONCE per iteration over the whole block — the
+// batching that turns B vector solves into matrix-level work. Converged
+// columns retire by swapping behind the active prefix (O(d) per
+// retirement), so late iterations only touch the stragglers; the block is
+// returned in submission order (the permutation is undone by a cycle walk).
+// Every column follows exactly the trajectory of its sequential solver, so
+// per-column results and iteration counts are bit-identical to B
+// independent runs (pinned by `rust/tests/serve_batch.rs`).
+
+/// Per-column outcome of a batched fixed-point solve, indexed by the
+/// column's position in the caller's original block (the solvers compact
+/// internally but report in submission order).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ColStats {
+    /// Iterations this column ran before retiring.
+    pub iters: usize,
+    /// Final residual norm ‖g(z)‖ at retirement.
+    pub residual: f64,
+    pub converged: bool,
+}
+
+/// Swap columns `a` and `b` (`a < b`) of a contiguous block of d-columns.
+fn swap_cols<E: Elem>(zs: &mut [E], d: usize, a: usize, b: usize) {
+    debug_assert!(a < b);
+    let (lo, hi) = zs.split_at_mut(b * d);
+    lo[a * d..(a + 1) * d].swap_with_slice(&mut hi[..d]);
+}
+
+/// Undo the retirement permutation: physical column `p` currently holds the
+/// caller's logical column `ids[p]`; cycle-walk until every column is home
+/// (`ids` becomes the identity). O(B) column swaps, allocation-free.
+fn unpermute_cols<E: Elem>(zs: &mut [E], d: usize, ids: &mut [usize]) {
+    for p in 0..ids.len() {
+        while ids[p] != p {
+            let q = ids[p];
+            // Positions < p are already home, so the displaced column's
+            // destination is always to the right.
+            debug_assert!(q > p);
+            swap_cols(zs, d, p, q);
+            ids.swap(p, q);
+        }
+    }
+}
+
+/// Per-solver hooks of the shared batched driver ([`batch_solve_driver`]):
+/// how per-column solver state travels with a compaction swap, and how the
+/// active block advances given its freshly evaluated residuals.
+trait BatchCols<E: Elem> {
+    /// Columns `j` and `k` swapped in the block — swap any per-column state.
+    fn swap(&mut self, j: usize, k: usize);
+    /// Advance the active prefix (`zs`/`r` are `active × d`) one iteration.
+    fn update(&mut self, zs: &mut [E], r: &[E], d: usize, ws: &mut Workspace<E>);
+}
+
+/// The one retirement/compaction loop both batched solvers share — keeping
+/// the bit-parity contract (per-column trajectories, residuals and
+/// iteration counts identical to sequential runs) in a single place.
+///
+/// Per iteration: evaluate `g` once over the active prefix, retire every
+/// column whose residual reaches `tol` (or whose budget is exhausted) by
+/// swapping it behind the prefix — state, residual, ids and per-solver
+/// state travel together — then let `ops.update` advance the survivors.
+/// On return the block is un-permuted back to submission order.
+fn batch_solve_driver<E: Elem>(
+    mut g: impl FnMut(&[E], &[usize], &mut [E]),
+    zs: &mut [E],
+    d: usize,
+    tol: f64,
+    max_iters: usize,
+    ws: &mut Workspace<E>,
+    stats: &mut [ColStats],
+    ops: &mut impl BatchCols<E>,
+) {
+    if zs.is_empty() || d == 0 {
+        return;
+    }
+    debug_assert_eq!(zs.len() % d, 0);
+    let b = zs.len() / d;
+    debug_assert!(stats.len() >= b);
+    let mut r = ws.take(b * d);
+    let mut ids = ws.take_idx(b);
+    for (j, id) in ids.iter_mut().enumerate() {
+        *id = j;
+    }
+    let mut active = b;
+    let mut iters = 0usize;
+    while active > 0 {
+        g(&zs[..active * d], &ids[..active], &mut r[..active * d]);
+        let mut j = 0;
+        while j < active {
+            let n = nrm2(&r[j * d..(j + 1) * d]);
+            if n <= tol || iters >= max_iters {
+                stats[ids[j]] = ColStats {
+                    iters,
+                    residual: n,
+                    converged: n <= tol,
+                };
+                active -= 1;
+                if j != active {
+                    swap_cols(zs, d, j, active);
+                    swap_cols(&mut r, d, j, active);
+                    ids.swap(j, active);
+                    ops.swap(j, active);
+                }
+                // Re-examine position j: it now holds the swapped-in column
+                // (whose residual from this sweep moved with it).
+            } else {
+                j += 1;
+            }
+        }
+        if active == 0 {
+            break;
+        }
+        ops.update(&mut zs[..active * d], &r[..active * d], d, ws);
+        iters += 1;
+    }
+    unpermute_cols(zs, d, &mut ids);
+    ws.give_idx(ids);
+    ws.give(r);
+}
+
+/// Damped Picard iteration over a whole batch of fixed-point problems.
+///
+/// `zs` is the contiguous d × B column-major state block (in: initial
+/// iterates, out: solutions in submission order). The batched residual
+/// closure `g(block, ids, out)` evaluates `ids.len()` active columns in one
+/// call; `ids[p]` is the caller-side column that physical column `p`
+/// currently holds, so per-request context (e.g. the DEQ input injection)
+/// can be looked up per column. Columns whose residual reaches `tol` retire
+/// by swap-to-back compaction and stop being touched; each column's
+/// trajectory, final residual and iteration count are exactly those of an
+/// independent [`picard_solve`] run with the same `tau`/`tol`/`max_iters`.
+/// Per-column outcomes land in `stats` (length ≥ B). Allocation-free once
+/// `ws` is warm.
+pub fn picard_solve_batch<E: Elem>(
+    g: impl FnMut(&[E], &[usize], &mut [E]),
+    zs: &mut [E],
+    d: usize,
+    tau: f64,
+    tol: f64,
+    max_iters: usize,
+    ws: &mut Workspace<E>,
+    stats: &mut [ColStats],
+) {
+    /// Stateless per-column ops: the whole active block updates with one
+    /// fused axpy (z ← z − τ g(z)), elementwise-identical to the sequential
+    /// [`picard_solve`] update.
+    struct PicardOps {
+        tau: f64,
+    }
+    impl<E: Elem> BatchCols<E> for PicardOps {
+        fn swap(&mut self, _j: usize, _k: usize) {}
+        fn update(&mut self, zs: &mut [E], r: &[E], _d: usize, _ws: &mut Workspace<E>) {
+            axpy(-self.tau, r, zs);
+        }
+    }
+    batch_solve_driver(g, zs, d, tol, max_iters, ws, stats, &mut PicardOps { tau });
+}
+
+/// Reusable batched Anderson(m) driver: one [`AndersonState`] per batch
+/// slot, kept alive across batches by the serving engine so a steady-state
+/// batch solve performs zero heap allocations (the states recycle their own
+/// history buffers on reset).
+pub struct AndersonBatch<E: Elem> {
+    d: usize,
+    beta: f64,
+    states: Vec<AndersonState<E>>,
+}
+
+impl<E: Elem> AndersonBatch<E> {
+    /// Allocate per-column state for up to `max_cols` concurrent columns of
+    /// dimension `d` with history depth `m` and mixing parameter `beta`.
+    pub fn new(d: usize, m: usize, beta: f64, max_cols: usize, ws: &mut Workspace<E>) -> Self {
+        let states = (0..max_cols).map(|_| AndersonState::new(d, m, ws)).collect();
+        AndersonBatch { d, beta, states }
+    }
+
+    pub fn max_cols(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Batched Anderson solve on the d × B column-major block `zs`
+    /// (B ≤ `max_cols`). Same contract as [`picard_solve_batch`] — one
+    /// residual evaluation per iteration over the active block, swap-to-back
+    /// retirement (per-column states travel with their columns), per-column
+    /// trajectories bit-identical to independent [`anderson_solve_ws`] runs.
+    pub fn solve(
+        &mut self,
+        g: impl FnMut(&[E], &[usize], &mut [E]),
+        zs: &mut [E],
+        tol: f64,
+        max_iters: usize,
+        ws: &mut Workspace<E>,
+        stats: &mut [ColStats],
+    ) {
+        let d = self.d;
+        if zs.is_empty() || d == 0 {
+            return;
+        }
+        debug_assert_eq!(zs.len() % d, 0);
+        let b = zs.len() / d;
+        assert!(
+            b <= self.states.len(),
+            "batch of {b} columns exceeds AndersonBatch capacity {}",
+            self.states.len()
+        );
+        for st in self.states.iter_mut().take(b) {
+            st.reset();
+        }
+        /// Per-column ops: the Anderson states travel with their columns on
+        /// compaction swaps, and each active column advances through its
+        /// own state machine (bit-identical to [`anderson_solve_ws`]).
+        struct AndersonOps<'a, E: Elem> {
+            states: &'a mut [AndersonState<E>],
+            beta: f64,
+        }
+        impl<E: Elem> BatchCols<E> for AndersonOps<'_, E> {
+            fn swap(&mut self, j: usize, k: usize) {
+                self.states.swap(j, k);
+            }
+            fn update(&mut self, zs: &mut [E], r: &[E], d: usize, ws: &mut Workspace<E>) {
+                let active = zs.len() / d;
+                for j in 0..active {
+                    self.states[j].advance(
+                        &mut zs[j * d..(j + 1) * d],
+                        &r[j * d..(j + 1) * d],
+                        self.beta,
+                        ws,
+                    );
+                }
+            }
+        }
+        let mut ops = AndersonOps {
+            states: &mut self.states[..b],
+            beta: self.beta,
+        };
+        batch_solve_driver(g, zs, d, tol, max_iters, ws, stats, &mut ops);
+    }
+
+    /// Return every internal buffer to the workspace (reverse construction
+    /// order, keeping the pools warm for the next `new`).
+    pub fn release(self, ws: &mut Workspace<E>) {
+        for st in self.states.into_iter().rev() {
+            st.release(ws);
+        }
+    }
+}
+
+/// One-shot batched Anderson solve (owns its per-column states for the call;
+/// serving engines hold a persistent [`AndersonBatch`] instead so repeated
+/// batches stay allocation-free).
+pub fn anderson_solve_batch<E: Elem>(
+    g: impl FnMut(&[E], &[usize], &mut [E]),
+    zs: &mut [E],
+    d: usize,
+    m: usize,
+    beta: f64,
+    tol: f64,
+    max_iters: usize,
+    ws: &mut Workspace<E>,
+    stats: &mut [ColStats],
+) {
+    if zs.is_empty() || d == 0 {
+        return;
+    }
+    let b = zs.len() / d;
+    let mut batch = AndersonBatch::new(d, m, beta, b, ws);
+    batch.solve(g, zs, tol, max_iters, ws, stats);
+    batch.release(ws);
 }
 
 /// In-place Gaussian elimination with partial pivoting on a dense row-major
@@ -540,6 +905,240 @@ mod tests {
         let res = broyden_solve(g, &[0.0], &opts);
         assert_eq!(res.iters, 3);
         assert!(!res.converged);
+    }
+
+    #[test]
+    fn unpermute_cols_restores_submission_order() {
+        // Block of 5 columns of width 3, scrambled by a known permutation.
+        let d = 3;
+        let perm = [3usize, 0, 4, 1, 2]; // physical p holds logical perm[p]
+        let mut zs = vec![0.0f64; 5 * d];
+        for (p, &l) in perm.iter().enumerate() {
+            for i in 0..d {
+                zs[p * d + i] = (l * 10 + i) as f64;
+            }
+        }
+        let mut ids = perm.to_vec();
+        unpermute_cols(&mut zs, d, &mut ids);
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        for l in 0..5 {
+            for i in 0..d {
+                assert_eq!(zs[l * d + i], (l * 10 + i) as f64);
+            }
+        }
+    }
+
+    /// Per-column linear test map with per-column contraction factor:
+    /// g(z)[i] = z[i] − c·z[(i+1) mod d] − b[i]. Evaluated positionally in
+    /// the batch closure through the ids slice.
+    fn col_g(c: f64, b: &[f64], z: &[f64], out: &mut [f64]) {
+        let d = z.len();
+        for i in 0..d {
+            out[i] = z[i] - c * z[(i + 1) % d] - b[i];
+        }
+    }
+
+    #[test]
+    fn picard_batch_matches_sequential_columns() {
+        prop::check("picard-batch-parity", 5, |rng| {
+            let d = 8 + rng.below(12);
+            let nb = 2 + rng.below(5);
+            let tau = 1.0;
+            let tol = 1e-10;
+            let max_iters = 400;
+            // Per-column problems with spread-out difficulty so retirement
+            // actually happens at different iterations.
+            let cs: Vec<f64> = (0..nb).map(|j| 0.15 + 0.1 * j as f64 / nb as f64).collect();
+            let bs: Vec<Vec<f64>> = (0..nb).map(|_| rng.normal_vec(d)).collect();
+            let z0s: Vec<Vec<f64>> = (0..nb).map(|_| rng.normal_vec(d)).collect();
+            let mut zs: Vec<f64> = Vec::with_capacity(nb * d);
+            for z0 in &z0s {
+                zs.extend_from_slice(z0);
+            }
+            let mut stats = vec![ColStats::default(); nb];
+            let mut ws = Workspace::new();
+            let g_batch = |block: &[f64], ids: &[usize], out: &mut [f64]| {
+                for (p, &id) in ids.iter().enumerate() {
+                    let (z, o) = (&block[p * d..(p + 1) * d], &mut out[p * d..(p + 1) * d]);
+                    col_g(cs[id], &bs[id], z, o);
+                }
+            };
+            picard_solve_batch(g_batch, &mut zs, d, tau, tol, max_iters, &mut ws, &mut stats);
+            for j in 0..nb {
+                let (z, rn, it) = picard_solve(
+                    |z: &[f64], out: &mut [f64]| col_g(cs[j], &bs[j], z, out),
+                    &z0s[j],
+                    tau,
+                    tol,
+                    max_iters,
+                );
+                prop::ensure(zs[j * d..(j + 1) * d] == z[..], "batched z == sequential z")?;
+                prop::ensure(stats[j].iters == it, &format!("iters {} vs {it}", stats[j].iters))?;
+                prop::ensure(stats[j].residual == rn, "residual bits")?;
+                prop::ensure(stats[j].converged, "converged")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn anderson_batch_matches_sequential_columns() {
+        prop::check("anderson-batch-parity", 5, |rng| {
+            let d = 10;
+            let nb = 4;
+            let m = 4;
+            let beta = 1.0;
+            let tol = 1e-9;
+            let max_iters = 200;
+            let cs: Vec<f64> = (0..nb).map(|j| 0.2 + 0.12 * j as f64).collect();
+            let bs: Vec<Vec<f64>> = (0..nb).map(|_| rng.normal_vec(d)).collect();
+            let mut zs = vec![0.0f64; nb * d];
+            let mut stats = vec![ColStats::default(); nb];
+            let mut ws = Workspace::new();
+            let g_batch = |block: &[f64], ids: &[usize], out: &mut [f64]| {
+                for (p, &id) in ids.iter().enumerate() {
+                    let (z, o) = (&block[p * d..(p + 1) * d], &mut out[p * d..(p + 1) * d]);
+                    col_g(cs[id], &bs[id], z, o);
+                }
+            };
+            anderson_solve_batch(
+                g_batch, &mut zs, d, m, beta, tol, max_iters, &mut ws, &mut stats,
+            );
+            let mut seq_ws = Workspace::new();
+            for j in 0..nb {
+                let (z, rn, it) = anderson_solve_ws(
+                    |z: &[f64], out: &mut [f64]| col_g(cs[j], &bs[j], z, out),
+                    &vec![0.0; d],
+                    m,
+                    tol,
+                    max_iters,
+                    beta,
+                    &mut seq_ws,
+                );
+                prop::ensure(zs[j * d..(j + 1) * d] == z[..], "batched z == sequential z")?;
+                prop::ensure(stats[j].iters == it, &format!("iters {} vs {it}", stats[j].iters))?;
+                prop::ensure(stats[j].residual == rn, "residual bits")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_retirement_handles_non_converging_columns() {
+        // One divergence-free but slow column (c = 0.97) retired by
+        // max_iters alongside fast ones: stats must mark it unconverged with
+        // iters == max_iters, and the fast columns keep their exact counts.
+        // (For this map ‖r_k‖ = |c|^k·‖r₀‖ exactly, so the fast columns
+        // converge at iterations 7 and 9 — genuinely different retirement
+        // points — while c = 0.97 cannot reach tol within the budget.)
+        let d = 6;
+        let cs = [0.15, 0.97, 0.25];
+        let bs: Vec<Vec<f64>> = (0..3).map(|j| vec![0.5 + 0.2 * j as f64; d]).collect();
+        let max_iters = 12;
+        let tol = 1e-5;
+        let mut zs = vec![0.0f64; 3 * d];
+        let mut stats = vec![ColStats::default(); 3];
+        let mut ws = Workspace::new();
+        picard_solve_batch(
+            |block: &[f64], ids: &[usize], out: &mut [f64]| {
+                for (p, &id) in ids.iter().enumerate() {
+                    let (z, o) = (&block[p * d..(p + 1) * d], &mut out[p * d..(p + 1) * d]);
+                    col_g(cs[id], &bs[id], z, o);
+                }
+            },
+            &mut zs,
+            d,
+            1.0,
+            tol,
+            max_iters,
+            &mut ws,
+            &mut stats,
+        );
+        assert!(!stats[1].converged);
+        assert_eq!(stats[1].iters, max_iters);
+        for j in [0usize, 2] {
+            let (z, _, it) = picard_solve(
+                |z: &[f64], out: &mut [f64]| col_g(cs[j], &bs[j], z, out),
+                &vec![0.0; d],
+                1.0,
+                tol,
+                max_iters,
+            );
+            assert_eq!(stats[j].iters, it, "col {j}");
+            assert_eq!(&zs[j * d..(j + 1) * d], &z[..], "col {j}");
+        }
+    }
+
+    #[test]
+    fn anderson_batch_reuse_is_deterministic() {
+        // A persistent AndersonBatch driven across two batches must
+        // reproduce the fresh-state result on the second batch (reset()
+        // fully forgets the first solve).
+        let d = 9;
+        let nb = 3;
+        let m = 3;
+        let (tol, max_iters, beta) = (1e-9, 150, 1.0);
+        let mut rng = Rng::new(77);
+        let bs: Vec<Vec<f64>> = (0..nb).map(|_| rng.normal_vec(d)).collect();
+        let g = |block: &[f64], ids: &[usize], out: &mut [f64]| {
+            for (p, &id) in ids.iter().enumerate() {
+                col_g(0.3, &bs[id], &block[p * d..(p + 1) * d], &mut out[p * d..(p + 1) * d]);
+            }
+        };
+        let mut ws = Workspace::new();
+        let mut batch = AndersonBatch::new(d, m, beta, nb, &mut ws);
+        let mut stats = vec![ColStats::default(); nb];
+        let mut zs1 = vec![0.0f64; nb * d];
+        batch.solve(&g, &mut zs1, tol, max_iters, &mut ws, &mut stats);
+        let iters1: Vec<usize> = stats.iter().map(|s| s.iters).collect();
+        let mut zs2 = vec![0.0f64; nb * d];
+        batch.solve(&g, &mut zs2, tol, max_iters, &mut ws, &mut stats);
+        assert_eq!(zs1, zs2);
+        assert_eq!(iters1, stats.iter().map(|s| s.iters).collect::<Vec<_>>());
+        batch.release(&mut ws);
+    }
+
+    #[test]
+    fn picard_batch_f32_matches_sequential() {
+        // The f32 instantiation of the batched solver keeps the same
+        // bit-parity guarantee against its own sequential runs.
+        let d = 12;
+        let nb = 3;
+        let mut rng = Rng::new(5);
+        let bs: Vec<Vec<f32>> = (0..nb).map(|_| rng.normal_vec_f32(d, 0.5)).collect();
+        let g1 = |id: usize, z: &[f32], out: &mut [f32]| {
+            for i in 0..d {
+                out[i] = z[i] - 0.25 * z[(i + 1) % d] - bs[id][i];
+            }
+        };
+        let mut zs = vec![0.0f32; nb * d];
+        let mut stats = vec![ColStats::default(); nb];
+        let mut ws: Workspace<f32> = Workspace::new();
+        picard_solve_batch(
+            |block: &[f32], ids: &[usize], out: &mut [f32]| {
+                for (p, &id) in ids.iter().enumerate() {
+                    g1(id, &block[p * d..(p + 1) * d], &mut out[p * d..(p + 1) * d]);
+                }
+            },
+            &mut zs,
+            d,
+            1.0,
+            1e-5,
+            300,
+            &mut ws,
+            &mut stats,
+        );
+        for j in 0..nb {
+            let (z, _, it) = picard_solve(
+                |z: &[f32], out: &mut [f32]| g1(j, z, out),
+                &vec![0.0f32; d],
+                1.0,
+                1e-5,
+                300,
+            );
+            assert_eq!(&zs[j * d..(j + 1) * d], &z[..], "col {j}");
+            assert_eq!(stats[j].iters, it, "col {j}");
+        }
     }
 
     #[test]

@@ -121,6 +121,21 @@ pub fn ncpus() -> usize {
         .unwrap_or(4)
 }
 
+/// Worker-count heuristic shared by the residual/panel block evaluators:
+/// 1 below `min_elems` total elements (spawning scoped threads costs more
+/// than the sweep and would break the allocation-free hot loops), otherwise
+/// up to `cap` workers bounded by the machine width. This is the lever that
+/// makes *batched* serving faster than per-request dispatch: a single
+/// request's block often sits below `min_elems`, while the same residual
+/// over a B-wide state block crosses it and fans out.
+pub fn workers_for(elems: usize, min_elems: usize, cap: usize) -> usize {
+    if elems < min_elems {
+        1
+    } else {
+        ncpus().min(cap).max(1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +192,14 @@ mod tests {
         assert_eq!(one[0], 1);
         let mut empty: Vec<i32> = Vec::new();
         par_chunks_mut(&mut empty, 4, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn workers_for_thresholds() {
+        assert_eq!(workers_for(100, 1000, 8), 1);
+        let w = workers_for(1000, 1000, 8);
+        assert!((1..=8).contains(&w));
+        // cap bounds the fan-out even on wide machines
+        assert_eq!(workers_for(1 << 20, 1, 1), 1);
     }
 }

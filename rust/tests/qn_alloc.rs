@@ -19,7 +19,8 @@ use shine::linalg::vecops::Elem;
 use shine::qn::broyden::BroydenInverse;
 use shine::qn::workspace::Workspace;
 use shine::qn::{InvOp, LowRank, MemoryPolicy};
-use shine::solvers::fixed_point::{anderson_solve_ws, broyden_solve_ws, FpOptions};
+use shine::serve::{EngineConfig, ForwardSolver, ServeEngine};
+use shine::solvers::fixed_point::{anderson_solve_ws, broyden_solve_ws, ColStats, FpOptions};
 
 struct CountingAlloc;
 
@@ -195,4 +196,71 @@ fn qn_hot_loops_do_not_allocate() {
     });
     assert_eq!(events, 0, "update_ws<f32> allocated {events} times at steady state");
     assert_eq!(bro32.rank(), 6);
+
+    // --- (4) serving path: a whole batch — batched fixed-point forward
+    // (Picard and Anderson) + ONE apply_t_multi panel sweep answering every
+    // cotangent — performs zero heap allocations per batch once the engine
+    // is warm. Sizes stay below every thread threshold (scoped spawns
+    // allocate) and tol = -1.0 pins the iteration count.
+    serving_batch_is_allocation_free(ForwardSolver::Picard { tau: 1.0 }, "picard");
+    serving_batch_is_allocation_free(ForwardSolver::Anderson { m: 4, beta: 1.0 }, "anderson");
+}
+
+/// Build a small f32 serving engine, warm it with two batches, then assert
+/// the third batch allocates nothing: forward block solve, retirement
+/// bookkeeping (idx pool), the shared-estimate multi-RHS backward and the
+/// fallback-guard scan all run out of the engine's pools.
+fn serving_batch_is_allocation_free(solver: ForwardSolver, name: &str) {
+    let d = 48usize;
+    let bsz = 4usize;
+    let bias: Vec<f32> = (0..d).map(|i| ((i as f32) * 0.13).cos() * 0.1).collect();
+    let g_batch = |block: &[f32], _ids: &[usize], out: &mut [f32]| {
+        let k = block.len() / d;
+        for p in 0..k {
+            for i in 0..d {
+                let zn = block[p * d + (i + 1) % d];
+                out[p * d + i] = block[p * d + i] - 0.3 * zn - bias[i];
+            }
+        }
+    };
+    let mut eng: ServeEngine<f32> = ServeEngine::new(
+        d,
+        EngineConfig {
+            max_batch: bsz,
+            tol: -1.0, // unreachable: every column runs the full budget
+            max_iters: 12,
+            solver,
+            calib_memory: 4,
+            calib_max_iters: 6,
+            fallback_ratio: Some(1e30), // guard scan runs, never triggers
+        },
+    );
+    eng.calibrate(
+        |z: &[f32], out: &mut [f32]| {
+            for i in 0..d {
+                out[i] = z[i] - 0.3 * z[(i + 1) % d] - bias[i];
+            }
+        },
+        &vec![0.0f32; d],
+    );
+    let mut rng = shine::util::rng::Rng::new(17);
+    let cots = rng.normal_vec_f32(bsz * d, 1.0);
+    let mut zs = vec![0.0f32; bsz * d];
+    let mut w = vec![0.0f32; bsz * d];
+    let mut stats = vec![ColStats::default(); bsz];
+    // Two warm batches populate every pool at its steady-state capacity.
+    for _ in 0..2 {
+        zs.iter_mut().for_each(|z| *z = 0.0);
+        let rep = eng.process(&g_batch, &mut zs, &cots, &mut w, &mut stats);
+        assert_eq!(rep.fwd_iters_max, 12, "{name}: full budget must run");
+    }
+    zs.iter_mut().for_each(|z| *z = 0.0);
+    let (events, rep) =
+        alloc_events(|| eng.process(&g_batch, &mut zs, &cots, &mut w, &mut stats));
+    assert_eq!(
+        events, 0,
+        "{name} serving batch allocated {events} times after warm-up"
+    );
+    assert_eq!(rep.batch, bsz);
+    assert_eq!(rep.fallback_cols, 0);
 }

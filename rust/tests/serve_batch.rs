@@ -1,0 +1,316 @@
+//! Batched-vs-sequential parity for the serving solvers (ISSUE 4 satellite):
+//! `picard_solve_batch` / `anderson_solve_batch` on B random per-column
+//! problems must agree **column-for-column** with B independent
+//! `picard_solve` / `anderson_solve_ws` runs — bit-identical iterates,
+//! residuals and iteration counts — in both storage precisions (the
+//! Anderson pair shares its literal iteration body, so any drift between
+//! the two paths is a real regression). Plus an end-to-end check that the
+//! scheduler + engine pipeline serves the same answers a per-request
+//! server would.
+
+use shine::linalg::vecops::Elem;
+use shine::qn::workspace::Workspace;
+use shine::qn::InvOp;
+use shine::serve::{EngineConfig, ForwardSolver, ServeEngine, SynthDeq};
+use shine::solvers::fixed_point::{
+    anderson_solve_batch, anderson_solve_ws, picard_solve, picard_solve_batch, ColStats,
+};
+use shine::util::rng::Rng;
+
+/// Per-column linear contractive map with per-column factor and shift:
+/// g(z)[i] = z[i] − c·z[(i+1) mod d] − b[i], in any storage precision.
+fn col_g<E: Elem>(c: f64, b: &[E], z: &[E], out: &mut [E]) {
+    let d = z.len();
+    for i in 0..d {
+        out[i] = E::from_f64(z[i].to_f64() - c * z[(i + 1) % d].to_f64() - b[i].to_f64());
+    }
+}
+
+/// Random per-column problem set: factors spread over [0.15, 0.55] so
+/// columns retire at genuinely different iterations (exercising the
+/// swap-to-back compaction), plus random shifts and initial iterates.
+struct Problems<E: Elem> {
+    d: usize,
+    cs: Vec<f64>,
+    bs: Vec<Vec<E>>,
+    z0s: Vec<Vec<E>>,
+}
+
+impl<E: Elem> Problems<E> {
+    fn new(d: usize, nb: usize, seed: u64) -> Problems<E> {
+        let mut rng = Rng::new(seed);
+        let cs = (0..nb).map(|j| 0.15 + 0.4 * j as f64 / nb as f64).collect();
+        let bs = (0..nb)
+            .map(|_| (0..d).map(|_| E::from_f64(rng.normal())).collect())
+            .collect();
+        let z0s = (0..nb)
+            .map(|_| (0..d).map(|_| E::from_f64(rng.normal() * 0.5)).collect())
+            .collect();
+        Problems { d, cs, bs, z0s }
+    }
+
+    fn pack_z0(&self) -> Vec<E> {
+        let mut zs = Vec::with_capacity(self.bs.len() * self.d);
+        for z0 in &self.z0s {
+            zs.extend_from_slice(z0);
+        }
+        zs
+    }
+
+    fn batch_g(&self) -> impl FnMut(&[E], &[usize], &mut [E]) + '_ {
+        let d = self.d;
+        move |block: &[E], ids: &[usize], out: &mut [E]| {
+            for (p, &id) in ids.iter().enumerate() {
+                col_g(
+                    self.cs[id],
+                    &self.bs[id],
+                    &block[p * d..(p + 1) * d],
+                    &mut out[p * d..(p + 1) * d],
+                );
+            }
+        }
+    }
+}
+
+fn picard_parity<E: Elem>(seed: u64, tol: f64) {
+    let d = 20;
+    let nb = 6;
+    let (tau, max_iters) = (1.0, 400);
+    let p: Problems<E> = Problems::new(d, nb, seed);
+    let mut zs = p.pack_z0();
+    let mut stats = vec![ColStats::default(); nb];
+    let mut ws: Workspace<E> = Workspace::new();
+    picard_solve_batch(p.batch_g(), &mut zs, d, tau, tol, max_iters, &mut ws, &mut stats);
+    for j in 0..nb {
+        let (z, rn, it) = picard_solve(
+            |z: &[E], out: &mut [E]| col_g(p.cs[j], &p.bs[j], z, out),
+            &p.z0s[j],
+            tau,
+            tol,
+            max_iters,
+        );
+        assert!(zs[j * d..(j + 1) * d] == z[..], "col {j}: iterate mismatch");
+        assert_eq!(stats[j].iters, it, "col {j}: iteration count");
+        assert_eq!(stats[j].residual, rn, "col {j}: residual bits");
+        assert!(stats[j].converged, "col {j} must converge");
+    }
+}
+
+fn anderson_parity<E: Elem>(seed: u64, tol: f64) {
+    let d = 16;
+    let nb = 5;
+    let m = 4;
+    let (beta, max_iters) = (1.0, 250);
+    let p: Problems<E> = Problems::new(d, nb, seed);
+    let mut zs = p.pack_z0();
+    let mut stats = vec![ColStats::default(); nb];
+    let mut ws: Workspace<E> = Workspace::new();
+    anderson_solve_batch(
+        p.batch_g(),
+        &mut zs,
+        d,
+        m,
+        beta,
+        tol,
+        max_iters,
+        &mut ws,
+        &mut stats,
+    );
+    let mut seq_ws: Workspace<E> = Workspace::new();
+    for j in 0..nb {
+        let (z, rn, it) = anderson_solve_ws(
+            |z: &[E], out: &mut [E]| col_g(p.cs[j], &p.bs[j], z, out),
+            &p.z0s[j],
+            m,
+            tol,
+            max_iters,
+            beta,
+            &mut seq_ws,
+        );
+        assert!(zs[j * d..(j + 1) * d] == z[..], "col {j}: iterate mismatch");
+        assert_eq!(stats[j].iters, it, "col {j}: iteration count");
+        assert_eq!(stats[j].residual, rn, "col {j}: residual bits");
+        assert!(stats[j].converged, "col {j} must converge");
+    }
+}
+
+#[test]
+fn picard_batch_parity_f64() {
+    for seed in [1u64, 2, 3] {
+        picard_parity::<f64>(seed, 1e-8);
+    }
+}
+
+#[test]
+fn picard_batch_parity_f32() {
+    // f32 iterates floor out near machine-eps·‖z‖, so the tolerance stays
+    // above that floor; the bit-parity asserts are precision-independent.
+    for seed in [4u64, 5, 6] {
+        picard_parity::<f32>(seed, 1e-4);
+    }
+}
+
+#[test]
+fn anderson_batch_parity_f64() {
+    for seed in [7u64, 8, 9] {
+        anderson_parity::<f64>(seed, 1e-7);
+    }
+}
+
+#[test]
+fn anderson_batch_parity_f32() {
+    for seed in [10u64, 11, 12] {
+        anderson_parity::<f32>(seed, 1e-4);
+    }
+}
+
+#[test]
+fn native_deq_residual_serves_through_engine() {
+    // The advertised batched-DEQ-serving integration, end to end: the
+    // native model's k-stacked residual (`f_theta_batch`) behind the
+    // engine's batched closure, with PER-REQUEST input injections looked up
+    // through the `ids` slice (each request has its own `u`, so the gather
+    // must follow the compaction permutation). Parity against sequential
+    // per-request Picard runs must hold column-for-column — convergence is
+    // deliberately not assumed (the LN map need not contract under plain
+    // Picard), only trajectory/iteration-count identity within a fixed
+    // budget, which is exactly the bit-parity contract.
+    use shine::deq::native::{self, NativeParams};
+    use shine::runtime::manifest::VariantCfg;
+
+    let v = VariantCfg {
+        name: "tiny".into(),
+        batch: 2,
+        h: 4,
+        w: 4,
+        c_in: 3,
+        patch: 2,
+        c: 8,
+        n_classes: 4,
+        unroll: 4,
+        pixels: 4,
+        patch_channels: 12,
+        fixed_point_dim: 2 * 4 * 8,
+        param_shapes: vec![],
+        f_param_names: vec![],
+    };
+    let c = v.c;
+    let d = v.fixed_point_dim;
+    let b = 4usize;
+    let mut rng = Rng::new(99);
+    let w1: Vec<f32> = (0..c * c).map(|_| (rng.normal() * 0.3) as f32).collect();
+    let w2: Vec<f32> = (0..c * c).map(|_| (rng.normal() * 0.3) as f32).collect();
+    let b1: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+    let b2: Vec<f32> = (0..c).map(|_| rng.normal() as f32).collect();
+    let gamma = vec![1.0f32; c];
+    let beta = vec![0.0f32; c];
+    let np = NativeParams {
+        wemb: &[],
+        bemb: &[],
+        w1: &w1,
+        b1: &b1,
+        w2: &w2,
+        b2: &b2,
+        gamma: &gamma,
+        beta: &beta,
+        whead: &[],
+        bhead: &[],
+    };
+    // Per-request input injections — the per-request context the ids slice
+    // exists for.
+    let us_all: Vec<f32> = rng.normal_vec_f32(b * d, 1.0);
+    let mut us_gather = vec![0.0f32; b * d];
+    let g_batch = |block: &[f32], ids: &[usize], out: &mut [f32]| {
+        let k = ids.len();
+        for (p, &id) in ids.iter().enumerate() {
+            us_gather[p * d..(p + 1) * d].copy_from_slice(&us_all[id * d..(id + 1) * d]);
+        }
+        let f = native::f_theta_batch(&v, &np, block, &us_gather[..k * d], k);
+        for i in 0..k * d {
+            out[i] = block[i] - f[i];
+        }
+    };
+    let (tau, tol, max_iters) = (0.5, 1e-4, 8);
+    let mut zs = vec![0.0f32; b * d];
+    let mut stats = vec![ColStats::default(); b];
+    let mut ws: Workspace<f32> = Workspace::new();
+    picard_solve_batch(g_batch, &mut zs, d, tau, tol, max_iters, &mut ws, &mut stats);
+    for j in 0..b {
+        let uj = &us_all[j * d..(j + 1) * d];
+        let (z_ref, rn, it) = picard_solve(
+            |z: &[f32], out: &mut [f32]| {
+                let f = native::f_theta(&v, &np, z, uj);
+                for i in 0..d {
+                    out[i] = z[i] - f[i];
+                }
+            },
+            &vec![0.0f32; d],
+            tau,
+            tol,
+            max_iters,
+        );
+        assert!(zs[j * d..(j + 1) * d] == z_ref[..], "request {j}: iterate mismatch");
+        assert_eq!(stats[j].iters, it, "request {j}: iteration count");
+        assert_eq!(stats[j].residual, rn, "request {j}: residual bits");
+    }
+}
+
+#[test]
+fn serving_pipeline_matches_per_request_reference() {
+    // End-to-end: a calibrated engine serving a batch must hand back, per
+    // request, exactly the fixed point a sequential Picard solve finds and
+    // exactly Hᵀ·dz for the shared calibration estimate H.
+    let d = 96;
+    let b = 6;
+    let model: SynthDeq<f32> = SynthDeq::new(d, 16, 42);
+    let mut engine: ServeEngine<f32> = ServeEngine::new(
+        d,
+        EngineConfig {
+            max_batch: b,
+            tol: 1e-5,
+            max_iters: 200,
+            solver: ForwardSolver::Picard { tau: 1.0 },
+            calib_memory: 20,
+            calib_max_iters: 40,
+            fallback_ratio: None,
+        },
+    );
+    engine.calibrate(
+        |z: &[f32], out: &mut [f32]| model.residual_batch(z, 1, out),
+        &vec![0.0f32; d],
+    );
+    let mut rng = Rng::new(13);
+    let z0s: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec_f32(d, 0.5)).collect();
+    let cots: Vec<f32> = rng.normal_vec_f32(b * d, 1.0);
+    let mut zs: Vec<f32> = Vec::new();
+    for z0 in &z0s {
+        zs.extend_from_slice(z0);
+    }
+    let mut w = vec![0.0f32; b * d];
+    let mut stats = vec![ColStats::default(); b];
+    let rep = engine.process(
+        |block: &[f32], _ids: &[usize], out: &mut [f32]| {
+            model.residual_batch(block, block.len() / d, out)
+        },
+        &mut zs,
+        &cots,
+        &mut w,
+        &mut stats,
+    );
+    assert!(rep.all_converged);
+    assert_eq!(rep.batch, b);
+    let h = engine.estimate().expect("calibrated");
+    for j in 0..b {
+        let (z_ref, _, it) = picard_solve(
+            |z: &[f32], out: &mut [f32]| model.residual_batch(z, 1, out),
+            &z0s[j],
+            1.0,
+            1e-5,
+            200,
+        );
+        assert!(zs[j * d..(j + 1) * d] == z_ref[..], "request {j}: fixed point");
+        assert_eq!(stats[j].iters, it, "request {j}: iterations");
+        let w_ref = h.apply_t_vec(&cots[j * d..(j + 1) * d]);
+        assert!(w[j * d..(j + 1) * d] == w_ref[..], "request {j}: backward");
+    }
+}
