@@ -11,6 +11,7 @@ use shine::qn::low_rank::LowRank;
 use shine::qn::workspace::Workspace;
 use shine::qn::{InvOp, MemoryPolicy};
 use shine::serve::run_suite;
+use shine::solvers::session::SolverSpec;
 use shine::util::bench::Bench;
 use shine::util::json::Json;
 use shine::util::rng::Rng;
@@ -26,7 +27,8 @@ fn main() {
         "serve_throughput: d={d} block={block} requests/case={total} B={batch_sizes:?} \
          (closed-loop, f32 serving precision)"
     );
-    let rows = run_suite::<f32>(d, block, &batch_sizes, total, tol, 1);
+    let solver = SolverSpec::picard(1.0).with_tol(tol).with_max_iters(200);
+    let rows = run_suite::<f32>(d, block, &batch_sizes, total, solver, 1);
 
     let mut cases: Vec<Json> = Vec::new();
     let mut accept_speedup = 0.0;

@@ -16,11 +16,11 @@
 //! The trace records wall-clock time and held-out test loss after every
 //! outer iteration — the paper's figures plot exactly this.
 
-use crate::hypergrad::{hypergrad_ws, ForwardArtifacts, Strategy};
+use crate::hypergrad::{hypergrad_session, ForwardArtifacts, Strategy};
 use crate::problems::{InnerProblem, OuterLoss};
 use crate::qn::lbfgs::OpaConfig;
-use crate::qn::workspace::Workspace;
 use crate::solvers::minimize::{lbfgs_minimize, MinimizeOptions, OpaHooks};
+use crate::solvers::session::Session;
 use crate::util::timer::Stopwatch;
 
 #[derive(Clone, Debug)]
@@ -102,10 +102,10 @@ pub fn hoag_run(
     let mut prev_val = f64::INFINITY;
     let mut warm_w: Option<Vec<f64>> = None;
     let mut trace = Vec::new();
-    // One scratch arena for every backward pass of the run (Appendix C warm
-    // restarts make consecutive backward solves the same size, so the pooled
-    // buffers are reused across outer iterations).
-    let mut ws = Workspace::new();
+    // One solve session for every backward pass of the run (Appendix C warm
+    // restarts make consecutive backward solves the same size, so the
+    // session's pooled buffers are reused across outer iterations).
+    let mut sess = Session::new();
 
     for k in 0..opts.outer_iters {
         if sw.elapsed() > opts.time_budget {
@@ -165,7 +165,8 @@ pub fn hoag_run(
             },
             s => s,
         };
-        let hg = hypergrad_ws(prob, outer, &theta, &fwd, strategy, warm_w.as_deref(), &mut ws);
+        let hg =
+            hypergrad_session(prob, outer, &theta, &fwd, strategy, warm_w.as_deref(), &mut sess);
         warm_w = Some(hg.w.clone());
 
         // ---- outer step with adaptive step size

@@ -4,7 +4,8 @@
 use crate::coordinator::{ExpCtx, Experiment};
 use crate::data::synth_images::{synth_images, ImageDataset};
 use crate::deq::trainer::{BackwardKind, Trainer, TrainerConfig};
-use crate::power::power_method;
+use crate::power::power_method_session;
+use crate::solvers::session::Session;
 
 use crate::runtime::engine::Engine;
 use crate::util::json::Json;
@@ -304,6 +305,9 @@ impl Experiment for TableE1 {
         ];
         let mut out = Json::obj();
         let power_iters = if ctx.quick { 10 } else { 40 };
+        // One probe session across all three trained models (the probes are
+        // the same size, so the pooled iterate buffers are reused).
+        let mut probe_sess: Session<f32> = Session::new();
         for (name, bk) in methods {
             let (tr, _) = equilibrium_train(&eng, &scale, &snapshot, bk, &train, ctx.seed)?;
             // Solve one batch to its fixed point, then power-method the
@@ -318,8 +322,9 @@ impl Experiment for TableE1 {
             let model = &tr.model;
             let params = &tr.params;
             // f32 end-to-end: the probe vector feeds the f_jvp artifact
-            // directly (the power method is precision-generic).
-            let res = power_method(
+            // directly (the power method is precision-generic and draws its
+            // iterate buffers from the shared probe session).
+            let res = power_method_session(
                 |vv: &[f32], out: &mut [f32]| match model.f_jvp(params, &zf, &u, vv) {
                     Ok(t) => out.copy_from_slice(&t),
                     Err(_) => out.copy_from_slice(vv),
@@ -327,6 +332,7 @@ impl Experiment for TableE1 {
                 zf.len(),
                 power_iters,
                 &mut rng,
+                &mut probe_sess,
             );
             eprintln!("  [table-e1] {name}: spectral radius {:.2}", res.radius);
             let mut j = Json::obj();

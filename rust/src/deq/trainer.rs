@@ -28,14 +28,13 @@
 use crate::deq::model::{DeqModel, Params};
 use crate::deq::native;
 use crate::deq::optim::{cosine_lr, Adam, Optimizer, Sgd};
-use crate::linalg::vecops::nrm2;
 use crate::qn::low_rank::LowRank;
-use crate::qn::workspace::Workspace;
-use crate::qn::InvOp;
 use crate::runtime::engine::{Engine, Tensor};
 use crate::solvers::adjoint::{adjoint_broyden_solve_ws, AdjointFpOptions, SigmaChoice};
-use crate::solvers::fixed_point::{broyden_solve_ws, FpOptions};
-use crate::solvers::linear::broyden_solve_left_ws;
+use crate::solvers::session::{
+    Backward, BackwardSpec, FallbackBackward, ForwardHandle, FullBackward, JacobianFreeBackward,
+    RefineBackward, RefineSeed, Session, ShineBackward, SolverSpec,
+};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
@@ -75,6 +74,20 @@ impl BackwardKind {
             BackwardKind::AdjointBroyden { opa_freq: Some(f) } => {
                 format!("shine-adj-broyden-opa-{f}")
             }
+        }
+    }
+
+    /// Lift a CLI-level [`BackwardSpec`] into the trainer's strategy with
+    /// the DEQ stack's historical tolerance conventions (trainer-specific
+    /// variants — adjoint Broyden, JF-refine — have no spec form and are
+    /// constructed directly).
+    pub fn from_spec(spec: &BackwardSpec) -> BackwardKind {
+        match *spec {
+            BackwardSpec::JacobianFree => BackwardKind::JacobianFree,
+            BackwardSpec::Shine => BackwardKind::Shine,
+            BackwardSpec::ShineFallback { ratio } => BackwardKind::ShineFallback { ratio },
+            BackwardSpec::ShineRefine { iters } => BackwardKind::ShineRefine { iters },
+            BackwardSpec::Full { tol, max_iters } => BackwardKind::Original { tol, max_iters },
         }
     }
 }
@@ -140,11 +153,12 @@ pub struct Trainer<'e> {
     pub cfg: TrainerConfig,
     pub step_count: usize,
     pub stats: Vec<StepStats>,
-    /// Scratch arena shared across every forward/backward solve of this
-    /// trainer — the solver loops are allocation-free once it is warm. f32
-    /// storage pool + f64 accumulator pool, matching the artifact precision.
-    /// RefCell because forward/backward run behind `&self` (evaluation).
-    ws: RefCell<Workspace<f32>>,
+    /// Solve session shared across every forward/backward pass of this
+    /// trainer (the session-API home of the scratch arena — the solver
+    /// loops are allocation-free once it is warm). f32 storage pool + f64
+    /// accumulator pool, matching the artifact precision. RefCell because
+    /// forward/backward run behind `&self` (evaluation).
+    sess: RefCell<Session<f32>>,
 }
 
 impl<'e> Trainer<'e> {
@@ -164,7 +178,7 @@ impl<'e> Trainer<'e> {
             cfg,
             step_count: 0,
             stats: Vec::new(),
-            ws: RefCell::new(Workspace::new()),
+            sess: RefCell::new(Session::new()),
         })
     }
 
@@ -182,19 +196,21 @@ impl<'e> Trainer<'e> {
         Ok(loss)
     }
 
-    /// Forward pass: Broyden solve of z = f(z; u). Returns the flattened
-    /// fixed point and the shared inverse estimate. The residual closure
-    /// hands the solver's f32 iterate straight to the artifact call — no
-    /// conversion buffers, no casts — and the solver runs at f32 storage on
-    /// the trainer's shared workspace.
+    /// Forward pass: Broyden solve of z = f(z; u) through the session API
+    /// (`SolverSpec::broyden` → `FixedPointSolver::solve`), whose
+    /// [`SolveOutcome`](crate::solvers::session::SolveOutcome) hands back
+    /// the captured inverse-estimate handle — the SHINE share. The residual
+    /// closure hands the solver's f32 iterate straight to the artifact call
+    /// — no conversion buffers, no casts — and the solver runs at f32
+    /// storage on the trainer's shared session.
     pub fn forward_solve(&self, u: &[f32]) -> Result<ForwardOutcome> {
         let d = self.model.v.fixed_point_dim;
         let sw = Stopwatch::start();
         let tol = self.cfg.fwd_tol * (d as f64).sqrt();
-        let mut ws = self.ws.borrow_mut();
+        let mut sess = self.sess.borrow_mut();
         // g(z) = z − f(z; u), f32 end-to-end.
         let mut err: Option<anyhow::Error> = None;
-        let g = |z: &[f32], out: &mut [f32]| match self.model.f(&self.params, z, u) {
+        let mut g = |z: &[f32], out: &mut [f32]| match self.model.f(&self.params, z, u) {
             Ok(f) => {
                 for i in 0..z.len() {
                     out[i] = z[i] - f[i];
@@ -207,7 +223,9 @@ impl<'e> Trainer<'e> {
         };
         let res = match self.cfg.backward {
             BackwardKind::AdjointBroyden { opa_freq } => {
-                // Forward with Adjoint Broyden (needs VJPs).
+                // Forward with Adjoint Broyden (needs VJPs). This solver is
+                // outside the SolverSpec family (Theorem 4 machinery), so it
+                // runs on the session's raw workspace.
                 let vjp = |z: &[f32], sigma: &[f32], out: &mut [f32]| {
                     match self.model.f_vjp_z(&self.params, z, u, sigma) {
                         Ok(j) => {
@@ -229,7 +247,14 @@ impl<'e> Trainer<'e> {
                 // the most recent head gradient — a fixed approximation that
                 // avoids per-iteration head evaluations (cheap and faithful:
                 // the direction only steers *extra* updates).
-                let r = adjoint_broyden_solve_ws(g, vjp, None, &vec![0.0f32; d], &opts, &mut ws);
+                let r = adjoint_broyden_solve_ws(
+                    &mut g,
+                    vjp,
+                    None,
+                    &vec![0.0f32; d],
+                    &opts,
+                    sess.workspace(),
+                );
                 ForwardOutcome {
                     z: r.z,
                     h: r.qn.low_rank().clone(),
@@ -239,18 +264,19 @@ impl<'e> Trainer<'e> {
                 }
             }
             _ => {
-                let opts = FpOptions {
-                    tol,
-                    max_iters: self.cfg.fwd_max_iters,
-                    memory: self.cfg.memory,
-                    ..Default::default()
-                };
-                let r = broyden_solve_ws(g, &vec![0.0f32; d], &opts, &mut ws);
+                let spec = SolverSpec::broyden(self.cfg.memory)
+                    .with_tol(tol)
+                    .with_max_iters(self.cfg.fwd_max_iters);
+                let mut solver = spec.build::<f32>();
+                let out = solver.solve(&mut sess, &mut g, &vec![0.0f32; d]);
                 ForwardOutcome {
-                    z: r.z,
-                    h: r.qn.into_low_rank(),
-                    iters: r.iters,
-                    residual: r.g_norm,
+                    z: out.z,
+                    h: out
+                        .estimate
+                        .expect("Broyden outcome carries the SHINE estimate")
+                        .into_low_rank(),
+                    iters: out.iters,
+                    residual: out.residual,
                     seconds: sw.elapsed(),
                 }
             }
@@ -261,11 +287,13 @@ impl<'e> Trainer<'e> {
         Ok(res)
     }
 
-    /// Backward pass: compute w ≈ J_g⁻ᵀ ∇L per the configured strategy,
-    /// entirely in f32 storage (the head gradient arrives as f32, the f32
-    /// panels apply it, and the result feeds the f32 pullback artifact —
-    /// zero casts on the cotangent path). Returns (w, matvecs,
-    /// fallback_used).
+    /// Backward pass: lower the configured [`BackwardKind`] to its
+    /// [`Backward`] trait object and run it against the forward estimate
+    /// handle — "share the inverse estimate" as a type-level contract, the
+    /// same objects the bi-level stack and serving tier use. Entirely in
+    /// f32 storage (the head gradient arrives as f32, the f32 panels apply
+    /// it, and the result feeds the f32 pullback artifact — zero casts on
+    /// the cotangent path). Returns (w, matvecs, fallback_used).
     pub fn backward_direction(
         &self,
         fwd: &ForwardOutcome,
@@ -273,8 +301,8 @@ impl<'e> Trainer<'e> {
         dz: &[f32],
     ) -> (Vec<f32>, usize, bool) {
         let d = dz.len();
-        let mut ws = self.ws.borrow_mut();
-        let vjp = |w: &[f32], out: &mut [f32]| {
+        let mut sess = self.sess.borrow_mut();
+        let mut vjp = |w: &[f32], out: &mut [f32]| {
             match self.model.f_vjp_z(&self.params, &fwd.z, u, w) {
                 Ok(j) => {
                     for i in 0..w.len() {
@@ -284,69 +312,45 @@ impl<'e> Trainer<'e> {
                 Err(_) => out.copy_from_slice(w),
             }
         };
-        match self.cfg.backward {
-            BackwardKind::JacobianFree => (dz.to_vec(), 0, false),
-            BackwardKind::Shine | BackwardKind::AdjointBroyden { .. } => {
-                let mut w = vec![0.0f32; d];
-                fwd.h.apply_t_into(dz, &mut w, &mut ws);
-                (w, 0, false)
-            }
-            BackwardKind::ShineFallback { ratio } => {
-                let mut w = vec![0.0f32; d];
-                fwd.h.apply_t_into(dz, &mut w, &mut ws);
-                if nrm2(&w) > ratio * nrm2(dz) {
-                    (dz.to_vec(), 0, true)
-                } else {
-                    (w, 0, false)
-                }
-            }
+        let refine_tol = 1e-12 * (d as f64).sqrt().max(1.0);
+        let mut backward: Box<dyn Backward<f32>> = match self.cfg.backward {
+            BackwardKind::JacobianFree => Box::new(JacobianFreeBackward),
+            // Adjoint Broyden's backward *is* SHINE on its own estimate.
+            BackwardKind::Shine | BackwardKind::AdjointBroyden { .. } => Box::new(ShineBackward),
+            BackwardKind::ShineFallback { ratio } => Box::new(FallbackBackward { ratio }),
             BackwardKind::Original { tol, max_iters } => {
-                let r = broyden_solve_left_ws(
-                    vjp,
-                    dz,
-                    None,
-                    None,
+                // Cap the budget like the bi-level path does: `--backward
+                // full` spells an unbounded solve as usize::MAX, which must
+                // not overflow the `+ 8` memory headroom.
+                let mi = max_iters.min(100_000);
+                Box::new(FullBackward {
                     tol,
-                    max_iters,
-                    max_iters + 8,
-                    &mut ws,
-                );
-                (r.x, r.n_matvecs, false)
+                    max_iters: mi,
+                    max_mem: mi + 8,
+                    symmetric: false,
+                })
             }
-            BackwardKind::ShineRefine { iters } => {
-                let w0 = fwd.h.apply_t_vec(dz);
-                // Clone, then O(1) panel swap — the forward estimate in
-                // `fwd.h` stays usable for diagnostics.
-                let h_init = fwd.h.clone().into_transposed().with_max_mem(
-                    self.cfg.memory + iters + 8,
-                    crate::qn::MemoryPolicy::Freeze,
-                );
-                let r = broyden_solve_left_ws(
-                    vjp,
-                    dz,
-                    Some(&w0),
-                    Some(h_init),
-                    1e-12 * (d as f64).sqrt().max(1.0),
-                    iters,
-                    self.cfg.memory + iters + 8,
-                    &mut ws,
-                );
-                (r.x, r.n_matvecs, false)
-            }
-            BackwardKind::JacobianFreeRefine { iters } => {
-                let r = broyden_solve_left_ws(
-                    vjp,
-                    dz,
-                    Some(dz),
-                    None,
-                    1e-12 * (d as f64).sqrt().max(1.0),
-                    iters,
-                    iters + 8,
-                    &mut ws,
-                );
-                (r.x, r.n_matvecs, false)
-            }
-        }
+            BackwardKind::ShineRefine { iters } => Box::new(RefineBackward {
+                iters,
+                tol: refine_tol,
+                max_mem: self.cfg.memory + iters + 8,
+                seed: RefineSeed::Estimate,
+                symmetric: false,
+            }),
+            BackwardKind::JacobianFreeRefine { iters } => Box::new(RefineBackward {
+                iters,
+                tol: refine_tol,
+                max_mem: iters + 8,
+                seed: RefineSeed::Identity,
+                symmetric: false,
+            }),
+        };
+        let handle = ForwardHandle {
+            inv: Some(&fwd.h),
+            low_rank: Some(&fwd.h),
+        };
+        let out = backward.direction(&mut sess, handle, dz, &mut vjp, None);
+        (out.w, out.matvecs, out.fallback_used)
     }
 
     /// One equilibrium training step.

@@ -18,15 +18,26 @@
 //! | `Shine`                      | `w = Hᵀ∇L`, H the forward qN estimate |
 //! | `ShineRefine{k}`             | k iterative steps warm-started at SHINE |
 //! | `ShineFallback{ratio}`       | SHINE, guarded: fall back to JF if `‖w‖ > ratio·‖∇L‖` (§3, "fallback strategy") |
+//!
+//! Since the session-API redesign the strategies are *implemented* by the
+//! [`crate::solvers::session::Backward`] trait family — [`Strategy`] is the
+//! bi-level-flavored spec that [`Strategy::to_backward`] lowers, and
+//! [`strategies::hypergrad_session`] is the entry point ([`hypergrad_ws`]
+//! remains as a workspace-shim). The same trait objects serve the DEQ
+//! trainer and the batch-serving tier, so "consume the forward estimate
+//! handle" is one contract across all three consumers.
 
 pub mod strategies;
 
-pub use strategies::{hypergrad, hypergrad_ws, HypergradResult, Strategy};
+pub use strategies::{hypergrad, hypergrad_session, hypergrad_ws, HypergradResult, Strategy};
 
 use crate::qn::low_rank::LowRank;
 use crate::qn::InvOp;
 
-/// What the forward pass hands to the backward pass.
+/// What the forward pass hands to the backward pass — the bi-level-side
+/// equivalent of [`crate::solvers::session::EstimateHandle::forward`]
+/// (assembled by hand here because the L-BFGS inner solver, not a
+/// fixed-point session solve, produces the estimate).
 pub struct ForwardArtifacts<'a> {
     /// the (approximate) root z* of g_θ
     pub z: &'a [f64],

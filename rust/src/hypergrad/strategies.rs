@@ -1,12 +1,21 @@
 //! Strategy dispatch for the hypergradient computation (see module docs of
 //! [`crate::hypergrad`] for the strategy table).
+//!
+//! Since the session-API redesign, [`Strategy`] is a *spec*: the dispatch
+//! lowers it to a [`crate::solvers::session::Backward`] trait object (the
+//! type-level "consume the forward estimate handle" contract shared with
+//! the DEQ trainer and the serving tier) and every strategy runs through
+//! [`Backward::direction`]. [`hypergrad_ws`] survives as a thin shim that
+//! lifts the caller's workspace into a [`Session`] and delegates to
+//! [`hypergrad_session`].
 
 use crate::hypergrad::ForwardArtifacts;
-use crate::linalg::vecops::nrm2;
 use crate::problems::{InnerProblem, OuterLoss};
 use crate::qn::workspace::Workspace;
-use crate::qn::{InvOp, MemoryPolicy};
-use crate::solvers::linear::{broyden_solve_left_ws, cg_solve};
+use crate::solvers::session::{
+    Backward, BackwardSpec, FallbackBackward, ForwardHandle, FullBackward, JacobianFreeBackward,
+    RefineBackward, RefineSeed, Session, ShineBackward,
+};
 
 /// Backward-pass strategy. `Full` with `max_iters = usize::MAX` is the
 /// Original / HOAG method; finite `max_iters` is the "limited backward"
@@ -31,6 +40,49 @@ impl Strategy {
             Strategy::ShineFallback { .. } => "shine-fallback",
         }
     }
+
+    /// Lift a CLI-level [`BackwardSpec`] into this module's strategy with
+    /// the bi-level stack's historical tolerance conventions.
+    pub fn from_spec(spec: &BackwardSpec) -> Strategy {
+        match *spec {
+            BackwardSpec::JacobianFree => Strategy::JacobianFree,
+            BackwardSpec::Shine => Strategy::Shine,
+            BackwardSpec::ShineFallback { ratio } => Strategy::ShineFallback { ratio },
+            BackwardSpec::ShineRefine { iters } => Strategy::ShineRefine { iters, tol: 1e-10 },
+            BackwardSpec::Full { tol, max_iters } => Strategy::Full { tol, max_iters },
+        }
+    }
+
+    /// Lower to the [`Backward`] trait object that implements this
+    /// strategy. Iterative-solve budgets are capped and the backward qN
+    /// memory follows the stack's historical `max_iters + 64` convention;
+    /// `symmetric` problems (the inner Hessian) run CG as in HOAG.
+    pub fn to_backward(self, symmetric: bool) -> Box<dyn Backward<f64>> {
+        match self {
+            Strategy::JacobianFree => Box::new(JacobianFreeBackward),
+            Strategy::Shine => Box::new(ShineBackward),
+            Strategy::ShineFallback { ratio } => Box::new(FallbackBackward { ratio }),
+            Strategy::Full { tol, max_iters } => {
+                let mi = max_iters.min(100_000);
+                Box::new(FullBackward {
+                    tol,
+                    max_iters: mi,
+                    max_mem: mi + 64,
+                    symmetric,
+                })
+            }
+            Strategy::ShineRefine { iters, tol } => {
+                let mi = iters.min(100_000);
+                Box::new(RefineBackward {
+                    iters: mi,
+                    tol,
+                    max_mem: mi + 64,
+                    seed: RefineSeed::Estimate,
+                    symmetric,
+                })
+            }
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -46,8 +98,8 @@ pub struct HypergradResult {
 }
 
 /// Compute the hypergradient dL/dθ for the given strategy (owns a scratch
-/// workspace; outer loops that call this every iteration should hold a
-/// [`Workspace`] and use [`hypergrad_ws`]).
+/// session; outer loops that call this every iteration should hold a
+/// [`Session`] and use [`hypergrad_session`]).
 ///
 /// `warm_w` — previous outer iteration's w (HOAG warm-restarts the backward
 /// solve, Appendix C); only used by the iterative strategies.
@@ -59,12 +111,12 @@ pub fn hypergrad(
     strategy: Strategy,
     warm_w: Option<&[f64]>,
 ) -> HypergradResult {
-    let mut ws = Workspace::new();
-    hypergrad_ws(prob, outer, theta, fwd, strategy, warm_w, &mut ws)
+    let mut sess = Session::new();
+    hypergrad_session(prob, outer, theta, fwd, strategy, warm_w, &mut sess)
 }
 
-/// [`hypergrad`] with a caller-provided scratch arena, threaded through the
-/// SHINE apply and the iterative backward solvers.
+/// **Deprecated shim**: [`hypergrad_session`] with the scratch arena passed
+/// as a raw [`Workspace`] — lifts it into a [`Session`] for the call.
 pub fn hypergrad_ws(
     prob: &dyn InnerProblem,
     outer: &dyn OuterLoss,
@@ -74,108 +126,57 @@ pub fn hypergrad_ws(
     warm_w: Option<&[f64]>,
     ws: &mut Workspace,
 ) -> HypergradResult {
+    let mut sess = Session::from_workspace(std::mem::take(ws));
+    let out = hypergrad_session(prob, outer, theta, fwd, strategy, warm_w, &mut sess);
+    *ws = sess.into_workspace();
+    out
+}
+
+/// [`hypergrad`] with a caller-provided session: lowers the strategy to its
+/// [`Backward`] trait object, runs [`Backward::direction`] against the
+/// forward artifacts (the estimate handle + optional low-rank factors),
+/// then contracts `dL/dθ = −wᵀ ∂g/∂θ`.
+pub fn hypergrad_session(
+    prob: &dyn InnerProblem,
+    outer: &dyn OuterLoss,
+    theta: &[f64],
+    fwd: &ForwardArtifacts,
+    strategy: Strategy,
+    warm_w: Option<&[f64]>,
+    sess: &mut Session,
+) -> HypergradResult {
     let z = fwd.z;
     let grad_l = outer.grad(z);
-    let mut fallback_used = false;
-    let mut backward_matvecs = 0usize;
-
-    let w: Vec<f64> = match strategy {
-        Strategy::JacobianFree => grad_l.clone(),
-        Strategy::Shine => {
-            let inv = fwd.inv.expect("SHINE requires a forward qN estimate");
-            let mut w = vec![0.0; grad_l.len()];
-            inv.apply_t_into(&grad_l, &mut w, ws);
-            w
-        }
-        Strategy::ShineFallback { ratio } => {
-            let inv = fwd.inv.expect("SHINE requires a forward qN estimate");
-            let mut w_shine = vec![0.0; grad_l.len()];
-            inv.apply_t_into(&grad_l, &mut w_shine, ws);
-            // Norm guard: the Jacobian-Free direction is ∇L itself, available
-            // at no extra cost; a SHINE direction with a much larger norm is
-            // the telltale sign of a bad inversion (§3).
-            if nrm2(&w_shine) > ratio * nrm2(&grad_l) {
-                fallback_used = true;
-                grad_l.clone()
-            } else {
-                w_shine
-            }
-        }
-        Strategy::Full { tol, max_iters } => {
-            solve_left(
-                prob, theta, z, &grad_l, warm_w, None, tol, max_iters,
-                &mut backward_matvecs, ws,
-            )
-        }
-        Strategy::ShineRefine { iters, tol } => {
-            let inv = fwd.inv.expect("refine requires a forward qN estimate");
-            let w0 = inv.apply_t_vec(&grad_l);
-            // O(1) panel swap on a clone: the forward estimate stays intact
-            // while the backward solver grows its transposed copy.
-            let h_init = fwd.low_rank.map(|lr| lr.clone().into_transposed());
-            solve_left(
-                prob, theta, z, &grad_l, Some(&w0), h_init, tol, iters,
-                &mut backward_matvecs, ws,
-            )
+    let symmetric = prob.is_symmetric();
+    // VJP oracle for the iterative strategies. For symmetric J (the inner
+    // Hessian) the oracle is the JVP — Jᵀ = J — and the Backward impls run
+    // CG on it, exactly as HOAG does. The problem traits return owned
+    // vectors, so the adapter copies into the solver's buffer; the solver
+    // loops themselves stay allocation-free.
+    let mut vjp = |w: &[f64], out: &mut [f64]| {
+        if symmetric {
+            out.copy_from_slice(&prob.jvp(theta, z, w));
+        } else {
+            out.copy_from_slice(&prob.vjp(theta, z, w));
         }
     };
+    let handle = ForwardHandle {
+        inv: fwd.inv,
+        low_rank: fwd.low_rank,
+    };
+    let mut backward = strategy.to_backward(symmetric);
+    let out = backward.direction(sess, handle, &grad_l, &mut vjp, warm_w);
 
     // dL/dθ = − wᵀ ∂g/∂θ
-    let mut grad_theta = prob.vjp_theta(theta, z, &w);
+    let mut grad_theta = prob.vjp_theta(theta, z, &out.w);
     for v in grad_theta.iter_mut() {
         *v = -*v;
     }
     HypergradResult {
         grad_theta,
-        w,
-        backward_matvecs,
-        fallback_used,
-    }
-}
-
-/// Solve `Jᵀ w = ∇L` with the appropriate iterative solver. The problem
-/// traits return owned vectors, so the adapter closures copy into the
-/// solver's buffers; the solver loops themselves stay allocation-free.
-#[allow(clippy::too_many_arguments)]
-fn solve_left(
-    prob: &dyn InnerProblem,
-    theta: &[f64],
-    z: &[f64],
-    grad_l: &[f64],
-    w0: Option<&[f64]>,
-    h_init: Option<crate::qn::low_rank::LowRank>,
-    tol: f64,
-    max_iters: usize,
-    matvecs: &mut usize,
-    ws: &mut Workspace,
-) -> Vec<f64> {
-    let max_iters = max_iters.min(100_000);
-    if prob.is_symmetric() {
-        // CG on J w = ∇L (J symmetric ⇒ Jᵀ = J), as HOAG does. The bi-level
-        // stack instantiates the precision-generic solvers at E = f64 (the
-        // DEQ trainer runs the same code at f32).
-        let res = cg_solve(
-            |v: &[f64], out: &mut [f64]| out.copy_from_slice(&prob.jvp(theta, z, v)),
-            grad_l,
-            w0,
-            tol,
-            max_iters,
-        );
-        *matvecs += res.n_matvecs;
-        res.x
-    } else {
-        let res = broyden_solve_left_ws(
-            |w: &[f64], out: &mut [f64]| out.copy_from_slice(&prob.vjp(theta, z, w)),
-            grad_l,
-            w0,
-            h_init.map(|h| h.with_max_mem(max_iters + 64, MemoryPolicy::Freeze)),
-            tol,
-            max_iters,
-            max_iters + 64,
-            ws,
-        );
-        *matvecs += res.n_matvecs;
-        res.x
+        w: out.w,
+        backward_matvecs: out.matvecs,
+        fallback_used: out.fallback_used,
     }
 }
 

@@ -19,11 +19,26 @@
 //! engine errors on load and all artifact-dependent paths skip gracefully);
 //! Python never runs on the experiment hot path.
 //!
-//! ## Hot-path architecture (Elem + FactorPanel + Workspace)
+//! ## Hot-path architecture (session API over Elem + FactorPanel + Workspace)
 //!
-//! The crate's hottest path — applying and updating the identity-plus-low-
-//! rank inverse estimates `H = I + Σ uᵢvᵢᵀ` that SHINE shares between
-//! forward and backward passes — is built on three primitives:
+//! The crate's solve surface is the **session API**
+//! ([`solvers::session`]): a [`solvers::session::SolverSpec`] (Picard |
+//! Anderson | Broyden, with the authoritative tol/budget) builds a
+//! [`solvers::session::FixedPointSolver`] trait object; its
+//! [`solvers::session::SolveOutcome`] carries the captured
+//! inverse-estimate handle ([`solvers::session::EstimateHandle`]); and the
+//! companion [`solvers::session::Backward`] trait (Shine | JacobianFree |
+//! Fallback | Refine | Full) consumes that handle — SHINE's "share the
+//! inverse estimate from the forward pass" as a type-level contract. The
+//! DEQ trainer, the HOAG outer loop (via `hypergrad_session`), the power
+//! probes, the coordinator experiments, the serving tier and the CLI
+//! (`--solver` / `--backward` specs) all go through it; the legacy free
+//! functions in [`solvers::fixed_point`] are deprecated shims that
+//! delegate (bit-identical, `rust/tests/session_parity.rs`).
+//!
+//! Underneath, the hottest path — applying and updating the
+//! identity-plus-low-rank inverse estimates `H = I + Σ uᵢvᵢᵀ` — is built
+//! on three primitives:
 //!
 //! * [`linalg::vecops::Elem`] — the storage scalar (`f32`/`f64`) the whole
 //!   qN/solver stack is generic over, with the *store narrow, accumulate
@@ -39,26 +54,31 @@
 //!   O(1) ring rotation, and multi-RHS application
 //!   (`qn::InvOp::apply_multi`) serves a whole batch of backward cotangents
 //!   in one sweep — itself sharded across threads for large batches.
-//! * [`qn::Workspace`] — a LIFO scratch arena threaded through the solver
-//!   stack (`broyden_solve`, `anderson_solve`, the linear backward solvers,
-//!   the OPA updates, the hypergradient strategies, and the DEQ trainer),
-//!   with a storage pool in `E` and an f64 accumulator pool for
-//!   coefficients and the Anderson Gram system. Residuals use the
-//!   write-into convention `g(z, out)`, so solver iteration loops perform
-//!   zero heap allocations after warm-up — enforced in both precisions by a
-//!   counting-allocator test (`rust/tests/qn_alloc.rs`) and measured
-//!   against the legacy `Vec<Vec<f64>>` layout and the f64 panels by
-//!   `benches/micro_qn.rs` (results in `BENCH_qn.json`).
+//! * [`qn::Workspace`] — a LIFO scratch arena owned by each
+//!   [`solvers::session::Session`] and threaded through the solver stack
+//!   (the session solvers, the linear backward solvers, the OPA updates,
+//!   the `Backward` strategies, and the DEQ trainer), with a storage pool
+//!   in `E` and an f64 accumulator pool for coefficients and the Anderson
+//!   Gram system. Residuals use the write-into convention `g(z, out)`, so
+//!   solver iteration loops perform zero heap allocations after warm-up —
+//!   enforced in both precisions by a counting-allocator test
+//!   (`rust/tests/qn_alloc.rs`) and measured against the legacy
+//!   `Vec<Vec<f64>>` layout and the f64 panels by `benches/micro_qn.rs`
+//!   (results in `BENCH_qn.json`).
 //!
-//! On top of these primitives, [`serve`] packages the stack as a batched
-//! serving tier: B concurrent DEQ requests become one contiguous d × B
-//! state block solved by the batched fixed-point solvers (one residual
-//! evaluation per iteration for the whole block, converged columns retired
-//! by swap-to-back compaction), and every SHINE backward cotangent of the
-//! batch is answered by a single `apply_t_multi` panel sweep against a
-//! shared calibration estimate — zero heap allocations per batch once the
-//! engine is warm (`rust/tests/qn_alloc.rs`), batched-vs-sequential
-//! throughput tracked by `benches/serve_throughput.rs` (`BENCH_serve.json`).
+//! On top of these, [`serve`] packages the stack as a batched,
+//! **multi-model** serving tier: B concurrent DEQ requests become one
+//! contiguous d × B state block driven through a spec-built solver (one
+//! residual evaluation per iteration for the whole block, converged
+//! columns retired by swap-to-back compaction), every SHINE backward
+//! cotangent of a batch is answered by a single `apply_t_multi` panel
+//! sweep against the per-model cached calibration estimate, and a
+//! [`serve::Router`] + [`serve::KeyedScheduler`] batch traffic per
+//! [`serve::ModelKey`] (model id + parameter version) with trip-rate-driven
+//! re-calibration — zero heap allocations per batch once an engine is warm
+//! (`rust/tests/qn_alloc.rs`), routing invariants pinned by
+//! `rust/tests/serve_routing.rs`, throughput tracked by
+//! `benches/serve_throughput.rs` (`BENCH_serve.json`).
 //!
 //! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
 //! paper-vs-measured results.

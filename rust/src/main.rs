@@ -88,7 +88,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                     "backward",
                     "shine",
                     "backward strategy (original|original-limited|jacobian-free|shine|\
-                     shine-fallback|shine-refine|adj-broyden|adj-broyden-opa)",
+                     shine-fallback[:ratio]|shine-refine[:iters]|full[:iters]|\
+                     adj-broyden|adj-broyden-opa)",
                 )
                 .flag("pretrain-steps", "20", "unrolled pretraining steps")
                 .flag("steps", "50", "equilibrium training steps")
@@ -103,7 +104,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                 .flag(
                     "strategy",
                     "shine",
-                    "hypergrad strategy (full|shine|shine-refine|jacobian-free)",
+                    "hypergrad strategy (full[:iters] | shine | shine-refine[:iters] | \
+                     shine-fallback[:ratio] | jacobian-free)",
                 )
                 .switch("opa", "enable OPA extra updates")
                 .flag("outer-iters", "40", "outer iterations")
@@ -127,9 +129,24 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                     "1,8,32",
                     "comma-separated batch widths (first = sequential baseline)",
                 )
+                .flag(
+                    "solver",
+                    "picard",
+                    "forward solver spec (picard[:tau] | anderson[:m[,beta]] | broyden[:mem])",
+                )
                 .flag("tol", "1e-5", "forward residual tolerance")
+                .flag(
+                    "models",
+                    "1",
+                    "distinct models: >1 runs the routed multi-model workload \
+                     (per-key engines + estimate cache behind one scheduler)",
+                )
                 .flag("seed", "0", "base RNG seed")
-                .switch("smoke", "tiny sizes for CI (overrides d/block/requests/batch-sizes)")
+                .switch(
+                    "smoke",
+                    "tiny sizes for CI (overrides d/block/requests/batch-sizes and \
+                     adds a two-model routed case)",
+                )
                 .parse(rest)?;
             cmd_serve_bench(&a)
         }
@@ -158,8 +175,13 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
     }
 }
 
+/// `--backward` parsing: trainer-specific strategies (adjoint Broyden, the
+/// legacy `original*` spellings) are named here; everything else goes
+/// through the session API's [`BackwardSpec`] parser and is lowered with
+/// `BackwardKind::from_spec`.
 fn parse_backward(s: &str) -> anyhow::Result<shine::deq::trainer::BackwardKind> {
     use shine::deq::trainer::BackwardKind as B;
+    use shine::solvers::session::BackwardSpec;
     Ok(match s {
         "original" => B::Original {
             tol: 1e-6,
@@ -169,13 +191,12 @@ fn parse_backward(s: &str) -> anyhow::Result<shine::deq::trainer::BackwardKind> 
             tol: 1e-6,
             max_iters: 5,
         },
-        "jacobian-free" => B::JacobianFree,
-        "shine" => B::Shine,
-        "shine-fallback" => B::ShineFallback { ratio: 1.3 },
-        "shine-refine" => B::ShineRefine { iters: 5 },
         "adj-broyden" => B::AdjointBroyden { opa_freq: None },
         "adj-broyden-opa" => B::AdjointBroyden { opa_freq: Some(5) },
-        other => anyhow::bail!("unknown backward strategy '{other}'"),
+        other => B::from_spec(
+            &BackwardSpec::parse(other)
+                .map_err(|e| anyhow::anyhow!("--backward: {e}"))?,
+        ),
     })
 }
 
@@ -269,19 +290,12 @@ fn cmd_hpo(a: &Args) -> anyhow::Result<()> {
     let (train, val, test) = split_logreg(&data, &mut rng);
     let prob = LogRegInner { train };
     let outer = LogRegOuter { val, test };
-    let strategy = match a.get("strategy") {
-        "full" => Strategy::Full {
-            tol: 1e-8,
-            max_iters: usize::MAX,
-        },
-        "shine" => Strategy::Shine,
-        "shine-refine" => Strategy::ShineRefine {
-            iters: 5,
-            tol: 1e-10,
-        },
-        "jacobian-free" => Strategy::JacobianFree,
-        other => anyhow::bail!("unknown strategy '{other}'"),
-    };
+    // `--strategy` is a session-API BackwardSpec; Strategy::from_spec
+    // applies the bi-level stack's tolerance conventions.
+    let strategy = Strategy::from_spec(
+        &shine::solvers::session::BackwardSpec::parse(a.get("strategy"))
+            .map_err(|e| anyhow::anyhow!("--strategy: {e}"))?,
+    );
     let opts = HoagOptions {
         outer_iters: a.get_usize("outer-iters"),
         strategy,
@@ -304,7 +318,11 @@ fn cmd_hpo(a: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
-    use shine::serve::run_suite;
+    use shine::serve::{
+        run_routed_closed_loop, run_suite, EngineConfig, ModelKey, RecalibPolicy,
+        RoutedLoadConfig, Router, SynthDeq,
+    };
+    use shine::solvers::session::SolverSpec;
 
     let smoke = a.get_bool("smoke");
     let d = if smoke { 256 } else { a.get_usize("d") };
@@ -329,11 +347,23 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
         anyhow::bail!("--block must divide --d");
     }
     let tol = a.get_f64("tol");
+    let solver = SolverSpec::parse(a.get("solver"))
+        .map_err(|e| anyhow::anyhow!("--solver: {e}"))?
+        .with_tol(tol)
+        .with_max_iters(200);
+    let seed = a.get_u64("seed");
+    // The smoke gate always exercises the routed two-model path on top of
+    // the single-model suite.
+    let models = if smoke { 2 } else { a.get_usize("models") };
+    if models == 0 {
+        anyhow::bail!("--models must be at least 1");
+    }
     eprintln!(
         "serve-bench: d={d} block={block} requests/case={total} batch sizes {batch_sizes:?} \
-         (f32 serving precision; first width is the sequential baseline)"
+         solver={} (f32 serving precision; first width is the sequential baseline)",
+        solver.method.name()
     );
-    let rows = run_suite::<f32>(d, block, &batch_sizes, total, tol, a.get_u64("seed"));
+    let rows = run_suite::<f32>(d, block, &batch_sizes, total, solver, seed);
     println!(
         "{:>6} {:>12} {:>10} {:>12} {:>12} {:>10} {:>6}",
         "B", "req/s", "speedup", "p50 ms", "p95 ms", "iters/req", "conv"
@@ -358,6 +388,45 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
             "batch width {} had unconverged columns (tol {tol})",
             bad.b
         );
+    }
+
+    if models > 1 {
+        // Routed multi-model workload: N synthetic models (distinct
+        // parameters) behind one keyed scheduler, per-key engines with a
+        // per-key calibration-estimate cache and trip-rate re-calibration.
+        let bsz = *batch_sizes.iter().max().expect("non-empty");
+        let cfg = EngineConfig {
+            max_batch: bsz,
+            solver,
+            calib: SolverSpec::broyden(30).with_tol(tol).with_max_iters(60),
+            fallback_ratio: Some(10.0),
+            recalib: Some(RecalibPolicy::default()),
+        };
+        let mut router: Router<f32> = Router::new(cfg);
+        let keys: Vec<ModelKey> = (0..models as u32).map(|m| ModelKey::new(m, 0)).collect();
+        for &k in &keys {
+            let (it, rn) =
+                router.register(k, Box::new(SynthDeq::<f32>::new(d, block, seed ^ k.model as u64)));
+            eprintln!("  routed: calibrated {k} in {it} iters (residual {rn:.2e})");
+        }
+        let lc = RoutedLoadConfig {
+            clients_per_model: bsz,
+            total,
+            max_batch: bsz,
+            max_wait: 1e-3,
+        };
+        let rep = run_routed_closed_loop(&mut router, &keys, &lc, seed ^ 0x2007);
+        println!(
+            "routed {models} models: {:.1} req/s over {} batches (p50 {:.3} ms, p95 {:.3} ms, \
+             {} re-calibrations)",
+            rep.rps, rep.batches, rep.p50_latency_ms, rep.p95_latency_ms, rep.recalibrations
+        );
+        for (k, n) in &rep.per_key_requests {
+            println!("  {k}: {n} requests");
+        }
+        if !rep.all_converged {
+            anyhow::bail!("routed workload had unconverged columns (tol {tol})");
+        }
     }
     Ok(())
 }

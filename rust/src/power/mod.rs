@@ -11,6 +11,7 @@
 //! test oracles run at f64. Radius estimates are f64 norms either way.
 
 use crate::linalg::vecops::{nrm2, scale, Elem};
+use crate::solvers::session::Session;
 use crate::util::rng::Rng;
 
 /// Result of a power-method run.
@@ -24,18 +25,37 @@ pub struct PowerResult {
 }
 
 /// Power method on a linear map given as a write-into matvec closure
-/// `apply(v, out)`. The iterate is double-buffered, so the loop is
-/// allocation-free apart from whatever the operator itself does.
+/// `apply(v, out)` (owns its session; probe loops that run many spectra
+/// should hold a [`Session`] and use [`power_method_session`]).
 pub fn power_method<E: Elem>(
-    mut apply: impl FnMut(&[E], &mut [E]),
+    apply: impl FnMut(&[E], &mut [E]),
     dim: usize,
     iters: usize,
     rng: &mut Rng,
 ) -> PowerResult {
-    let mut v: Vec<E> = (0..dim).map(|_| E::from_f64(rng.normal())).collect();
+    let mut sess = Session::new();
+    power_method_session(apply, dim, iters, rng, &mut sess)
+}
+
+/// [`power_method`] drawing its iterate buffers from a solve [`Session`] —
+/// the session-API form the coordinator probes use. The two d-length
+/// iterate buffers come from the session pools (recycled across probes);
+/// the returned per-iteration `history` is still allocated per call, as is
+/// whatever the operator itself does.
+pub fn power_method_session<E: Elem>(
+    mut apply: impl FnMut(&[E], &mut [E]),
+    dim: usize,
+    iters: usize,
+    rng: &mut Rng,
+    sess: &mut Session<E>,
+) -> PowerResult {
+    let mut v = sess.workspace().take(dim);
+    for vi in v.iter_mut() {
+        *vi = E::from_f64(rng.normal());
+    }
     let n0 = nrm2(&v);
     scale(1.0 / n0.max(1e-300), &mut v);
-    let mut av = vec![E::ZERO; dim];
+    let mut av = sess.workspace().take(dim);
     let mut history = Vec::with_capacity(iters);
     let mut radius = 0.0;
     for _ in 0..iters {
@@ -48,6 +68,8 @@ pub fn power_method<E: Elem>(
         std::mem::swap(&mut v, &mut av);
         scale(1.0 / radius, &mut v);
     }
+    sess.workspace().give(av);
+    sess.workspace().give(v);
     PowerResult {
         radius,
         iters: history.len(),

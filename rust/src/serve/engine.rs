@@ -1,57 +1,92 @@
 //! The batch-serving engine: batched fixed-point forward + one-sweep SHINE
 //! backward over a shared calibration estimate (module-level contract in
 //! [`crate::serve`]).
+//!
+//! Since the session-API redesign the engine is a consumer of
+//! [`crate::solvers::session`]: [`EngineConfig`] carries two
+//! [`SolverSpec`]s (the batched forward solver and the Broyden calibration
+//! probe — the **single source of truth** for tolerances and iteration
+//! budgets; nothing is restated here), the engine drives a built
+//! [`FixedPointSolver`] trait object over the state block, and the shared
+//! estimate is the [`EstimateHandle`] captured by the probe's
+//! `SolveOutcome` — the serving-side instance of the SHINE hand-off.
+//!
+//! The engine also tracks **estimate staleness**: the cumulative §3
+//! fallback-guard trip rate since the last calibration. A drifting model
+//! makes the shared estimate blow up more cotangents; when the trip rate
+//! crosses [`RecalibPolicy::trip_rate`] the estimate is flagged stale
+//! ([`BatchReport::estimate_stale`], [`ServeEngine::estimate_stale`]) and
+//! the owner — [`crate::serve::Router`] in the multi-model tier — evicts
+//! and re-calibrates it.
 
 use crate::linalg::vecops::{nrm2, Elem};
-use crate::qn::workspace::Workspace;
-use crate::qn::{InvOp, LowRank};
-use crate::solvers::fixed_point::{
-    broyden_solve_ws, picard_solve_batch, AndersonBatch, ColStats, FpOptions,
-};
+use crate::qn::InvOp;
+use crate::solvers::fixed_point::ColStats;
+use crate::solvers::session::{EstimateHandle, FixedPointSolver, Session, SolverSpec};
 use crate::util::timer::Stopwatch;
 
-/// Forward solver the engine runs on the batched state block.
+/// Continuous re-calibration policy: when the fallback-guard trip rate
+/// since calibration exceeds `trip_rate` (measured over at least
+/// `min_cols` guarded columns, so one unlucky batch cannot evict a fresh
+/// estimate), the shared estimate is considered stale.
 #[derive(Clone, Copy, Debug)]
-pub enum ForwardSolver {
-    /// Damped Picard iteration z ← z − τ g(z): the cheapest batchable
-    /// forward; the whole active block updates with one fused axpy.
-    Picard { tau: f64 },
-    /// Anderson(m) acceleration with mixing parameter β; per-column state
-    /// persists inside the engine across batches.
-    Anderson { m: usize, beta: f64 },
+pub struct RecalibPolicy {
+    /// Stale when trips / guarded columns exceeds this.
+    pub trip_rate: f64,
+    /// Minimum guarded columns before the rate is meaningful.
+    pub min_cols: usize,
+}
+
+impl Default for RecalibPolicy {
+    fn default() -> Self {
+        RecalibPolicy {
+            trip_rate: 0.25,
+            min_cols: 8,
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
-    /// Widest batch `process` accepts (Anderson state is sized for it).
+    /// Widest batch `process` accepts (per-column solver state is sized for
+    /// it up front).
     pub max_batch: usize,
-    /// Per-column residual tolerance of the forward solve.
-    pub tol: f64,
-    /// Per-column forward iteration budget.
-    pub max_iters: usize,
-    pub solver: ForwardSolver,
-    /// Broyden memory of the calibration probe whose inverse estimate the
-    /// batch backward reuses (paper default 30).
-    pub calib_memory: usize,
-    /// Iteration budget of the calibration probe solve.
-    pub calib_max_iters: usize,
+    /// The batched forward solver — method, tolerance and iteration budget
+    /// in one value (Picard/Anderson batch; a Broyden spec solves columns
+    /// sequentially).
+    pub solver: SolverSpec,
+    /// The calibration probe whose captured inverse estimate the batch
+    /// backward reuses (Broyden; paper memory 30).
+    pub calib: SolverSpec,
     /// SHINE fallback guard per column (paper §3): a cotangent whose panel
     /// answer grows beyond `ratio · ‖dz‖` reverts to the Jacobian-free
     /// direction. `None` disables the guard.
     pub fallback_ratio: Option<f64>,
+    /// Estimate-staleness policy driven by the guard trip rate. `None`
+    /// never flags the estimate stale.
+    pub recalib: Option<RecalibPolicy>,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             max_batch: 32,
-            tol: 1e-6,
-            max_iters: 200,
-            solver: ForwardSolver::Picard { tau: 1.0 },
-            calib_memory: 30,
-            calib_max_iters: 60,
+            solver: SolverSpec::picard(1.0).with_tol(1e-6).with_max_iters(200),
+            calib: SolverSpec::broyden(30).with_tol(1e-6).with_max_iters(60),
             fallback_ratio: None,
+            recalib: None,
         }
+    }
+}
+
+impl EngineConfig {
+    /// Set one tolerance on both the forward solver and the calibration
+    /// probe (the common case; callers needing different tolerances set the
+    /// specs directly).
+    pub fn with_tol(mut self, tol: f64) -> EngineConfig {
+        self.solver = self.solver.with_tol(tol);
+        self.calib = self.calib.with_tol(tol);
+        self
     }
 }
 
@@ -68,41 +103,58 @@ pub struct BatchReport {
     pub all_converged: bool,
     /// Columns reverted to the Jacobian-free direction by the guard.
     pub fallback_cols: usize,
+    /// This batch's guard trip rate (`fallback_cols / batch`).
+    pub fallback_rate: f64,
+    /// Whether the shared estimate crossed the staleness threshold
+    /// ([`RecalibPolicy`]) as of this batch — the owner should evict and
+    /// re-calibrate.
+    pub estimate_stale: bool,
     pub fwd_seconds: f64,
     pub bwd_seconds: f64,
 }
 
 /// Serves batches of DEQ requests against one residual map: batched forward
 /// solve on a contiguous state block, then a single multi-RHS panel sweep
-/// answering every SHINE cotangent. Holds the shared calibration estimate,
-/// the workspace and (for Anderson) the per-column solver states — nothing
-/// is allocated per batch once warm.
+/// answering every SHINE cotangent. Holds the built forward solver (whose
+/// per-column state persists across batches), the solve session and the
+/// shared calibration estimate — nothing is allocated per batch once warm.
 pub struct ServeEngine<E: Elem> {
     d: usize,
     cfg: EngineConfig,
-    /// Shared SHINE estimate `H ≈ J_g⁻¹` from the calibration probe; `None`
-    /// serves the Jacobian-free direction (w = dz).
-    h: Option<LowRank<E>>,
-    ws: Workspace<E>,
-    anderson: Option<AndersonBatch<E>>,
+    /// Shared SHINE estimate from the calibration probe; `None` serves the
+    /// Jacobian-free direction (w = dz).
+    h: Option<EstimateHandle<E>>,
+    sess: Session<E>,
+    solver: Box<dyn FixedPointSolver<E>>,
+    /// Guarded columns / guard trips since the last calibration (the
+    /// staleness counters the re-calibration policy reads).
+    guard_cols: usize,
+    guard_trips: usize,
+    /// Calibrations performed over this engine's lifetime.
+    calibrations: usize,
 }
 
 impl<E: Elem> ServeEngine<E> {
     pub fn new(d: usize, cfg: EngineConfig) -> ServeEngine<E> {
         assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
-        let mut ws = Workspace::new();
-        let anderson = match cfg.solver {
-            ForwardSolver::Anderson { m, beta } => {
-                Some(AndersonBatch::new(d, m, beta, cfg.max_batch, &mut ws))
-            }
-            ForwardSolver::Picard { .. } => None,
-        };
+        // Fail at construction, not mid-service: only a quasi-Newton probe
+        // captures the inverse estimate `calibrate` stores.
+        assert!(
+            matches!(cfg.calib.method, crate::solvers::session::SolverMethod::Broyden { .. }),
+            "calibration spec must be a Broyden method (it must capture an inverse estimate)"
+        );
+        let mut sess = Session::new();
+        let mut solver = cfg.solver.build::<E>();
+        solver.prepare_batch(d, cfg.max_batch, &mut sess);
         ServeEngine {
             d,
             cfg,
             h: None,
-            ws,
-            anderson,
+            sess,
+            solver,
+            guard_cols: 0,
+            guard_trips: 0,
+            calibrations: 0,
         }
     }
 
@@ -115,28 +167,72 @@ impl<E: Elem> ServeEngine<E> {
     }
 
     /// The shared inverse estimate (None until [`ServeEngine::calibrate`]).
-    pub fn estimate(&self) -> Option<&LowRank<E>> {
+    pub fn estimate(&self) -> Option<&EstimateHandle<E>> {
         self.h.as_ref()
     }
 
-    /// Capture the shared SHINE estimate: one Broyden probe solve of the
-    /// single-request residual `g1` from `z0`, whose forward qN estimate
-    /// (`H ≈ J_g⁻¹`, exactly what SHINE shares with the backward pass)
-    /// becomes the operator every batch backward applies. Returns the
-    /// probe's (iterations, final residual). Re-calibrate whenever the
-    /// served model's parameters move.
+    /// Fallback-guard trip rate since the last calibration.
+    pub fn trip_rate(&self) -> f64 {
+        self.guard_trips as f64 / self.guard_cols.max(1) as f64
+    }
+
+    /// Whether the configured [`RecalibPolicy`] currently flags the shared
+    /// estimate stale.
+    pub fn estimate_stale(&self) -> bool {
+        match self.cfg.recalib {
+            Some(p) => {
+                self.h.is_some()
+                    && self.guard_cols >= p.min_cols
+                    && self.trip_rate() > p.trip_rate
+            }
+            None => false,
+        }
+    }
+
+    /// Drop the shared estimate (serving falls back to the Jacobian-free
+    /// direction until the next [`ServeEngine::calibrate`]) and reset the
+    /// staleness counters.
+    pub fn invalidate_estimate(&mut self) {
+        self.h = None;
+        self.guard_cols = 0;
+        self.guard_trips = 0;
+    }
+
+    /// Calibrations performed over this engine's lifetime.
+    pub fn calibrations(&self) -> usize {
+        self.calibrations
+    }
+
+    /// Install an externally captured estimate (the router's per-key cache
+    /// hand-off; tests use it to inject adversarial estimates). Resets the
+    /// staleness counters — a fresh estimate starts with a clean record.
+    pub fn install_estimate(&mut self, h: EstimateHandle<E>) {
+        self.h = Some(h);
+        self.guard_cols = 0;
+        self.guard_trips = 0;
+    }
+
+    /// Capture the shared SHINE estimate: one Broyden probe solve
+    /// (`cfg.calib`) of the single-request residual `g1` from `z0`, whose
+    /// captured [`EstimateHandle`] (`H ≈ J_g⁻¹`, exactly what SHINE shares
+    /// with the backward pass) becomes the operator every batch backward
+    /// applies. Returns the probe's (iterations, final residual).
+    /// Re-calibrate whenever the served model's parameters move — or let
+    /// the [`RecalibPolicy`] trip-rate tracking tell you when.
     pub fn calibrate(&mut self, g1: impl FnMut(&[E], &mut [E]), z0: &[E]) -> (usize, f64) {
         debug_assert_eq!(z0.len(), self.d);
-        let opts = FpOptions {
-            tol: self.cfg.tol,
-            max_iters: self.cfg.calib_max_iters,
-            memory: self.cfg.calib_memory,
-            ..Default::default()
-        };
-        let res = broyden_solve_ws(g1, z0, &opts, &mut self.ws);
-        let out = (res.iters, res.g_norm);
-        self.h = Some(res.qn.into_low_rank());
-        out
+        let mut probe = self.cfg.calib.build::<E>();
+        let mut g1 = g1;
+        let out = probe.solve(&mut self.sess, &mut g1, z0);
+        let stats = (out.iters, out.residual);
+        self.h = Some(
+            out.estimate
+                .expect("calibration probe must capture an inverse estimate"),
+        );
+        self.guard_cols = 0;
+        self.guard_trips = 0;
+        self.calibrations += 1;
+        stats
     }
 
     /// Serve one batch.
@@ -155,7 +251,7 @@ impl<E: Elem> ServeEngine<E> {
     /// Allocation-free once the engine is warm (see the module contract).
     pub fn process(
         &mut self,
-        g: impl FnMut(&[E], &[usize], &mut [E]),
+        mut g: impl FnMut(&[E], &[usize], &mut [E]),
         zs: &mut [E],
         cotangents: &[E],
         w_out: &mut [E],
@@ -169,24 +265,9 @@ impl<E: Elem> ServeEngine<E> {
         assert_eq!(w_out.len(), b * d);
         assert!(stats.len() >= b);
         let sw = Stopwatch::start();
-        match self.cfg.solver {
-            ForwardSolver::Picard { tau } => {
-                picard_solve_batch(
-                    g,
-                    zs,
-                    d,
-                    tau,
-                    self.cfg.tol,
-                    self.cfg.max_iters,
-                    &mut self.ws,
-                    stats,
-                );
-            }
-            ForwardSolver::Anderson { .. } => {
-                let anderson = self.anderson.as_mut().expect("Anderson state for Anderson solver");
-                anderson.solve(g, zs, self.cfg.tol, self.cfg.max_iters, &mut self.ws, stats);
-            }
-        }
+        let solver = &mut self.solver;
+        let sess = &mut self.sess;
+        solver.solve_batch(sess, &mut g, zs, d, stats);
         let fwd_seconds = sw.elapsed();
 
         let sw = Stopwatch::start();
@@ -195,7 +276,7 @@ impl<E: Elem> ServeEngine<E> {
         // SHINE serving contract (uncalibrated engines answer with the
         // Jacobian-free identity direction).
         match &self.h {
-            Some(h) => h.apply_t_multi_into(cotangents, w_out, &mut self.ws),
+            Some(h) => h.apply_t_multi_into(cotangents, w_out, sess.workspace()),
             None => w_out.copy_from_slice(cotangents),
         }
         let mut fallback_cols = 0usize;
@@ -210,6 +291,10 @@ impl<E: Elem> ServeEngine<E> {
                         fallback_cols += 1;
                     }
                 }
+                // Staleness tracking: every guarded column counts toward the
+                // cumulative trip rate of this calibration.
+                self.guard_cols += b;
+                self.guard_trips += fallback_cols;
             }
         }
         let bwd_seconds = sw.elapsed();
@@ -228,6 +313,8 @@ impl<E: Elem> ServeEngine<E> {
             fwd_col_iters_total,
             all_converged,
             fallback_cols,
+            fallback_rate: fallback_cols as f64 / b.max(1) as f64,
+            estimate_stale: self.estimate_stale(),
             fwd_seconds,
             bwd_seconds,
         }
@@ -237,6 +324,7 @@ impl<E: Elem> ServeEngine<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::qn::{LowRank, MemoryPolicy};
     use crate::solvers::fixed_point::picard_solve;
     use crate::util::rng::Rng;
 
@@ -262,9 +350,9 @@ mod tests {
             d,
             EngineConfig {
                 max_batch: b,
-                tol: 1e-10,
                 ..Default::default()
-            },
+            }
+            .with_tol(1e-10),
         );
         let mut zs = vec![0.0; b * d];
         let cots: Vec<f64> = (0..b * d).map(|_| rng.normal()).collect();
@@ -300,20 +388,19 @@ mod tests {
         let b = 4;
         let mut rng = Rng::new(2);
         let bias = rng.normal_vec(d);
-        let mut eng: ServeEngine<f64> = ServeEngine::new(
-            d,
-            EngineConfig {
-                max_batch: b,
-                tol: 1e-11,
-                calib_memory: 10,
-                ..Default::default()
-            },
-        );
+        let mut cfg = EngineConfig {
+            max_batch: b,
+            ..Default::default()
+        }
+        .with_tol(1e-11);
+        cfg.calib = SolverSpec::broyden(10).with_tol(1e-11).with_max_iters(60);
+        let mut eng: ServeEngine<f64> = ServeEngine::new(d, cfg);
         let (it, rn) = eng.calibrate(
             |z: &[f64], out: &mut [f64]| test_g(&bias, z, d, out),
             &vec![0.0; d],
         );
         assert!(rn <= 1e-11, "probe residual {rn} after {it} iters");
+        assert_eq!(eng.calibrations(), 1);
         let mut zs = vec![0.0; b * d];
         let cots: Vec<f64> = (0..b * d).map(|_| rng.normal()).collect();
         let mut w = vec![0.0; b * d];
@@ -328,7 +415,7 @@ mod tests {
         // The one-sweep multi answer must equal per-column H^T applies.
         let h = eng.estimate().unwrap();
         for j in 0..b {
-            let want = h.apply_t_vec(&cots[j * d..(j + 1) * d]);
+            let want = h.low_rank().apply_t_vec(&cots[j * d..(j + 1) * d]);
             assert_eq!(&w[j * d..(j + 1) * d], &want[..], "col {j}");
         }
     }
@@ -339,15 +426,13 @@ mod tests {
         let b = 3;
         let mut rng = Rng::new(3);
         let bias = rng.normal_vec(d);
-        let mut eng: ServeEngine<f64> = ServeEngine::new(
-            d,
-            EngineConfig {
-                max_batch: b,
-                tol: 1e-10,
-                solver: ForwardSolver::Anderson { m: 4, beta: 1.0 },
-                ..Default::default()
-            },
-        );
+        let mut cfg = EngineConfig {
+            max_batch: b,
+            ..Default::default()
+        }
+        .with_tol(1e-10);
+        cfg.solver = SolverSpec::anderson(4, 1.0).with_tol(1e-10).with_max_iters(200);
+        let mut eng: ServeEngine<f64> = ServeEngine::new(d, cfg);
         let cots = vec![0.0; b * d];
         let mut w = vec![0.0; b * d];
         let mut stats = vec![ColStats::default(); b];
@@ -374,6 +459,17 @@ mod tests {
         assert_eq!(r1.fwd_iters_max, r2.fwd_iters_max);
     }
 
+    /// An adversarial estimate: H = I + 10·e0 e0ᵀ blows up any cotangent
+    /// with mass on coordinate 0.
+    fn blown_estimate(d: usize) -> EstimateHandle<f64> {
+        let mut h = LowRank::identity(d, 2, MemoryPolicy::Evict);
+        let mut e0 = vec![0.0; d];
+        e0[0] = 1.0;
+        let u: Vec<f64> = e0.iter().map(|x| 10.0 * x).collect();
+        h.push(&u, &e0);
+        EstimateHandle::new(h)
+    }
+
     #[test]
     fn fallback_guard_reverts_blown_up_columns() {
         let d = 8;
@@ -381,19 +477,12 @@ mod tests {
             d,
             EngineConfig {
                 max_batch: 2,
-                tol: 1e-9,
                 fallback_ratio: Some(1.5),
                 ..Default::default()
-            },
+            }
+            .with_tol(1e-9),
         );
-        // Hand the engine a pathological estimate: H = I + 10·e0 e0^T blows
-        // up any cotangent with mass on coordinate 0.
-        let mut h = LowRank::identity(d, 2, crate::qn::MemoryPolicy::Evict);
-        let mut e0 = vec![0.0; d];
-        e0[0] = 1.0;
-        let u: Vec<f64> = e0.iter().map(|x| 10.0 * x).collect();
-        h.push(&u, &e0);
-        eng.h = Some(h);
+        eng.install_estimate(blown_estimate(d));
         let mut zs = vec![0.0; 2 * d];
         let mut cots = vec![0.0; 2 * d];
         cots[0] = 1.0; // col 0: all mass on coordinate 0 → 11x growth
@@ -409,7 +498,77 @@ mod tests {
             &mut stats,
         );
         assert_eq!(rep.fallback_cols, 1);
+        assert!((rep.fallback_rate - 0.5).abs() < 1e-12);
         assert_eq!(&w[..d], &cots[..d]); // reverted to Jacobian-free
         assert_eq!(w[d + 1], 1.0); // untouched column passes through
+    }
+
+    #[test]
+    fn trip_rate_staleness_flags_and_resets() {
+        // Every cotangent has mass on coordinate 0, so the blown estimate
+        // trips the guard on every column: after enough guarded columns the
+        // policy must flag the estimate stale, and invalidation must reset
+        // the counters and drop back to Jacobian-free serving.
+        let d = 8;
+        let b = 4;
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: b,
+                fallback_ratio: Some(1.5),
+                recalib: Some(RecalibPolicy {
+                    trip_rate: 0.5,
+                    min_cols: 2 * b,
+                }),
+                ..Default::default()
+            }
+            .with_tol(1e-9),
+        );
+        eng.install_estimate(blown_estimate(d));
+        let bias = vec![0.1; d];
+        let mut cots = vec![0.0; b * d];
+        for j in 0..b {
+            cots[j * d] = 1.0;
+        }
+        let mut zs = vec![0.0; b * d];
+        let mut w = vec![0.0; b * d];
+        let mut stats = vec![ColStats::default(); b];
+        let rep1 = eng.process(
+            |block: &[f64], _ids: &[usize], out: &mut [f64]| test_g(&bias, block, d, out),
+            &mut zs,
+            &cots,
+            &mut w,
+            &mut stats,
+        );
+        // First batch trips 100% but has not reached min_cols yet.
+        assert_eq!(rep1.fallback_cols, b);
+        assert!((rep1.fallback_rate - 1.0).abs() < 1e-12);
+        assert!(!rep1.estimate_stale, "min_cols not reached after one batch");
+        zs.iter_mut().for_each(|z| *z = 0.0);
+        let rep2 = eng.process(
+            |block: &[f64], _ids: &[usize], out: &mut [f64]| test_g(&bias, block, d, out),
+            &mut zs,
+            &cots,
+            &mut w,
+            &mut stats,
+        );
+        assert!(rep2.estimate_stale, "2·b guarded columns at 100% trip rate");
+        assert!(eng.estimate_stale());
+        assert!(eng.trip_rate() > 0.99);
+        eng.invalidate_estimate();
+        assert!(!eng.estimate_stale());
+        assert!(eng.estimate().is_none());
+        assert_eq!(eng.trip_rate(), 0.0);
+        // Uncalibrated serving is Jacobian-free again.
+        zs.iter_mut().for_each(|z| *z = 0.0);
+        let rep3 = eng.process(
+            |block: &[f64], _ids: &[usize], out: &mut [f64]| test_g(&bias, block, d, out),
+            &mut zs,
+            &cots,
+            &mut w,
+            &mut stats,
+        );
+        assert_eq!(rep3.fallback_cols, 0);
+        assert_eq!(w, cots);
     }
 }

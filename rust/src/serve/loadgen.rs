@@ -12,10 +12,12 @@
 //! deadline would only add dead time to the measurement).
 
 use crate::linalg::vecops::Elem;
-use crate::serve::engine::{EngineConfig, ForwardSolver, ServeEngine};
+use crate::serve::engine::{EngineConfig, ServeEngine};
+use crate::serve::router::{KeyedScheduler, ModelKey, Router};
 use crate::serve::scheduler::{Scheduler, SchedulerConfig};
 use crate::serve::synth::SynthDeq;
 use crate::solvers::fixed_point::ColStats;
+use crate::solvers::session::SolverSpec;
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::timer::Stopwatch;
@@ -161,13 +163,15 @@ pub struct SuiteRow {
 /// Run the closed-loop load at each batch width in `batch_sizes` (first
 /// entry = sequential baseline) against one shared [`SynthDeq`] model:
 /// fresh engine per width, calibrated before timing, with a short warm-up
-/// run so pools/caches don't bill the measured pass.
+/// run so pools/caches don't bill the measured pass. `solver` is the
+/// forward [`SolverSpec`] (its tolerance also drives the calibration
+/// probe) — the CLI `--solver` flag lands here.
 pub fn run_suite<E: Elem>(
     d: usize,
     block: usize,
     batch_sizes: &[usize],
     total_per_case: usize,
-    tol: f64,
+    solver: SolverSpec,
     seed: u64,
 ) -> Vec<SuiteRow> {
     let model: SynthDeq<E> = SynthDeq::new(d, block, seed);
@@ -178,12 +182,10 @@ pub fn run_suite<E: Elem>(
             d,
             EngineConfig {
                 max_batch: bsz,
-                tol,
-                max_iters: 200,
-                solver: ForwardSolver::Picard { tau: 1.0 },
-                calib_memory: 30,
-                calib_max_iters: 60,
+                solver,
+                calib: SolverSpec::broyden(30).with_tol(solver.tol).with_max_iters(60),
                 fallback_ratio: None,
+                recalib: None,
             },
         );
         engine.calibrate(
@@ -217,6 +219,149 @@ pub fn run_suite<E: Elem>(
     rows
 }
 
+/// Config of one routed (multi-model) closed-loop run.
+#[derive(Clone, Copy, Debug)]
+pub struct RoutedLoadConfig {
+    /// Closed-loop clients pinned to EACH registered key.
+    pub clients_per_model: usize,
+    /// Total requests across all keys.
+    pub total: usize,
+    /// Scheduler batch cap (per key — batches never cross keys).
+    pub max_batch: usize,
+    /// Scheduler partial-batch deadline in seconds.
+    pub max_wait: f64,
+}
+
+/// What one routed closed-loop run measured.
+#[derive(Clone, Debug, Default)]
+pub struct RoutedReport {
+    pub requests: usize,
+    pub seconds: f64,
+    pub rps: f64,
+    pub batches: usize,
+    /// Requests served per key, in the caller's key order.
+    pub per_key_requests: Vec<(ModelKey, usize)>,
+    /// Stale-estimate re-calibrations performed across all keys.
+    pub recalibrations: usize,
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub all_converged: bool,
+}
+
+/// Drive a closed-loop multi-model load through ONE [`KeyedScheduler`] and
+/// a [`Router`]: `clients_per_model` clients per key, each pinned to its
+/// key and resubmitting on completion. Batches are formed per key (never
+/// cross-model) and served by that key's engine; the router's trip-rate
+/// policy may evict and re-calibrate estimates mid-run. All registered
+/// models must share one fixed-point dimension (one set of preallocated
+/// blocks serves every key).
+pub fn run_routed_closed_loop<E: Elem>(
+    router: &mut Router<E>,
+    keys: &[ModelKey],
+    lc: &RoutedLoadConfig,
+    seed: u64,
+) -> RoutedReport {
+    assert!(!keys.is_empty() && lc.clients_per_model >= 1 && lc.max_batch >= 1);
+    let d = router
+        .engine(keys[0])
+        .expect("key registered")
+        .dim();
+    for &k in keys {
+        assert_eq!(
+            router.engine(k).expect("key registered").dim(),
+            d,
+            "routed driver requires one shared fixed-point dimension"
+        );
+    }
+    let clients = keys.len() * lc.clients_per_model;
+    let mut rng = Rng::new(seed ^ 0x2007ED);
+    let cots: Vec<E> = (0..clients * d).map(|_| E::from_f64(rng.normal())).collect();
+    let mut zs = vec![E::ZERO; lc.max_batch * d];
+    let mut cot_block = vec![E::ZERO; lc.max_batch * d];
+    let mut w_block = vec![E::ZERO; lc.max_batch * d];
+    let mut col_stats = vec![ColStats::default(); lc.max_batch];
+    let mut sched: KeyedScheduler<usize> = KeyedScheduler::new(SchedulerConfig {
+        max_batch: lc.max_batch,
+        max_wait: lc.max_wait,
+        queue_cap: clients.max(lc.max_batch),
+    });
+    let client_key = |cid: usize| keys[cid % keys.len()];
+    let mut batch_items: Vec<(f64, usize)> = Vec::with_capacity(lc.max_batch);
+    let mut latencies: Vec<f64> = Vec::with_capacity(lc.total);
+    let mut per_key: Vec<(ModelKey, usize)> = keys.iter().map(|&k| (k, 0)).collect();
+
+    let sw = Stopwatch::start();
+    let initial = clients.min(lc.total);
+    for cid in 0..initial {
+        sched
+            .push(sw.elapsed(), client_key(cid), cid)
+            .unwrap_or_else(|_| panic!("queue sized for all clients"));
+    }
+    let mut submitted = initial;
+    let mut completed = 0usize;
+    let mut batches = 0usize;
+    let mut all_converged = true;
+    while completed < lc.total {
+        let now = sw.elapsed();
+        let (key, n) = match sched.ready(now) {
+            Some(kn) => kn,
+            None => {
+                // Closed loop: nothing new can arrive while we sit here, so
+                // release the oldest key's partial batch immediately.
+                let k = sched.front_key().expect("work outstanding");
+                (k, sched.count_key(k).min(lc.max_batch))
+            }
+        };
+        assert!(n > 0, "closed loop drained with work outstanding");
+        batch_items.clear();
+        sched.drain_key(key, n, now, &mut batch_items);
+        for (p, &(_, cid)) in batch_items.iter().enumerate() {
+            for z in zs[p * d..(p + 1) * d].iter_mut() {
+                *z = E::ZERO;
+            }
+            cot_block[p * d..(p + 1) * d].copy_from_slice(&cots[cid * d..(cid + 1) * d]);
+        }
+        let t0 = sw.elapsed();
+        let report = router
+            .process(
+                key,
+                &mut zs[..n * d],
+                &cot_block[..n * d],
+                &mut w_block[..n * d],
+                &mut col_stats[..n],
+            )
+            .expect("registered key");
+        let t1 = sw.elapsed();
+        batches += 1;
+        all_converged &= report.all_converged;
+        if let Some(e) = per_key.iter_mut().find(|(k, _)| *k == key) {
+            e.1 += report.batch;
+        }
+        let service = t1 - t0;
+        for &(wait, cid) in batch_items.iter() {
+            latencies.push(wait + service);
+            completed += 1;
+            if submitted < lc.total {
+                let _ = sched.push(t1, client_key(cid), cid);
+                submitted += 1;
+            }
+        }
+    }
+    let seconds = sw.elapsed();
+    let recalibrations: usize = keys.iter().map(|&k| router.recalibrations(k)).sum();
+    RoutedReport {
+        requests: completed,
+        seconds,
+        rps: completed as f64 / seconds.max(1e-12),
+        batches,
+        per_key_requests: per_key,
+        recalibrations,
+        p50_latency_ms: stats::median(&latencies) * 1e3,
+        p95_latency_ms: stats::quantile(&latencies, 0.95) * 1e3,
+        all_converged,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,9 +374,9 @@ mod tests {
             d,
             EngineConfig {
                 max_batch: 4,
-                tol: 1e-4,
                 ..Default::default()
-            },
+            }
+            .with_tol(1e-4),
         );
         engine.calibrate(
             |z: &[f32], out: &mut [f32]| model.residual_batch(z, 1, out),
@@ -254,12 +399,44 @@ mod tests {
 
     #[test]
     fn suite_reports_baseline_relative_speedups() {
-        let rows = run_suite::<f32>(64, 16, &[1, 2], 8, 1e-4, 5);
+        let solver = SolverSpec::picard(1.0).with_tol(1e-4).with_max_iters(200);
+        let rows = run_suite::<f32>(64, 16, &[1, 2], 8, solver, 5);
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].b, 1);
         assert!((rows[0].speedup_vs_baseline - 1.0).abs() < 1e-12);
         assert!(rows[1].report.requests == 8);
         assert!(rows[1].speedup_vs_baseline > 0.0);
+    }
+
+    #[test]
+    fn routed_closed_loop_serves_both_keys_without_cross_batching() {
+        let d = 48;
+        let cfg = EngineConfig {
+            max_batch: 4,
+            ..Default::default()
+        }
+        .with_tol(1e-4);
+        let mut router: Router<f32> = Router::new(cfg);
+        let ka = ModelKey::new(0, 0);
+        let kb = ModelKey::new(1, 0);
+        router.register(ka, Box::new(SynthDeq::<f32>::new(d, 12, 31)));
+        router.register(kb, Box::new(SynthDeq::<f32>::new(d, 12, 32)));
+        let lc = RoutedLoadConfig {
+            clients_per_model: 3,
+            total: 17, // odd total exercises the partial tail on both keys
+            max_batch: 4,
+            max_wait: 1e-4,
+        };
+        let rep = run_routed_closed_loop(&mut router, &[ka, kb], &lc, 9);
+        assert_eq!(rep.requests, 17);
+        assert!(rep.all_converged);
+        assert!(rep.rps > 0.0);
+        let served: usize = rep.per_key_requests.iter().map(|(_, n)| n).sum();
+        assert_eq!(served, 17);
+        // Both keys actually served traffic.
+        for (k, n) in &rep.per_key_requests {
+            assert!(*n > 0, "key {k} starved");
+        }
     }
 
     #[test]
@@ -272,9 +449,9 @@ mod tests {
             d,
             EngineConfig {
                 max_batch: 8,
-                tol: 1e-4,
                 ..Default::default()
-            },
+            }
+            .with_tol(1e-4),
         );
         let lc = LoadConfig {
             clients: 3,

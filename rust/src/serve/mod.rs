@@ -57,13 +57,28 @@
 //! latency (queue wait + batch service).
 //!
 //! **Shared-estimate approximation**: serving reuses ONE calibration
-//! estimate `H ≈ J_g⁻¹` for every request — the serving-side analogue of
-//! SHINE's forward/backward sharing. Requests whose Jacobian drifts from
-//! the calibration point degrade toward the Jacobian-free direction
-//! (Fung et al., 2021); the per-column fallback guard
+//! estimate `H ≈ J_g⁻¹` per [`ModelKey`] — the serving-side analogue of
+//! SHINE's forward/backward sharing, cached as the
+//! [`EstimateHandle`](crate::solvers::session::EstimateHandle) the
+//! calibration probe's `SolveOutcome` captured. Requests whose Jacobian
+//! drifts from the calibration point degrade toward the Jacobian-free
+//! direction (Fung et al., 2021); the per-column fallback guard
 //! ([`EngineConfig::fallback_ratio`], paper §3) caps the blow-up by
-//! reverting any cotangent whose panel answer grows beyond
-//! `ratio · ‖dz‖`.
+//! reverting any cotangent whose panel answer grows beyond `ratio · ‖dz‖`,
+//! and the guard's cumulative trip rate doubles as the **staleness signal**
+//! ([`RecalibPolicy`]): cross the threshold and the estimate is evicted and
+//! re-calibrated (the continuous re-calibration policy the [`Router`] runs
+//! per key).
+//!
+//! **Session API**: the engine is a consumer of
+//! [`crate::solvers::session`] — [`EngineConfig`] carries the forward and
+//! calibration [`SolverSpec`](crate::solvers::session::SolverSpec)s (the
+//! single source of truth for tolerances/budgets), the forward is a built
+//! [`FixedPointSolver`](crate::solvers::session::FixedPointSolver) driven
+//! over the block, and multi-model routing ([`ModelKey`] +
+//! [`KeyedScheduler`] + [`Router`]) is per-key engines whose estimate cache
+//! is keyed by model id + parameter version — a version bump invalidates
+//! exactly one key.
 //!
 //! [`picard_solve_batch`]: crate::solvers::fixed_point::picard_solve_batch
 //! [`AndersonBatch`]: crate::solvers::fixed_point::AndersonBatch
@@ -72,10 +87,15 @@
 
 pub mod engine;
 pub mod loadgen;
+pub mod router;
 pub mod scheduler;
 pub mod synth;
 
-pub use engine::{BatchReport, EngineConfig, ForwardSolver, ServeEngine};
-pub use loadgen::{run_closed_loop, run_suite, LoadConfig, SuiteRow, ThroughputReport};
+pub use engine::{BatchReport, EngineConfig, RecalibPolicy, ServeEngine};
+pub use loadgen::{
+    run_closed_loop, run_routed_closed_loop, run_suite, LoadConfig, RoutedLoadConfig,
+    RoutedReport, SuiteRow, ThroughputReport,
+};
+pub use router::{BatchResidual, KeyedScheduler, ModelKey, Router};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use synth::SynthDeq;

@@ -1,0 +1,475 @@
+//! Multi-model serve routing: several models (and several parameter
+//! versions of each) behind ONE admission queue, with a per-key
+//! calibration-estimate cache and a trip-rate-driven re-calibration policy.
+//!
+//! The ROADMAP follow-on the session API unlocks: because a serving engine
+//! is now "a [`crate::solvers::session::SolverSpec`]-built solver + an
+//! [`crate::solvers::session::EstimateHandle`]", a model version is just a
+//! cache key — [`ModelKey`] = model id + parameter version — and a routed
+//! tier is a map from keys to engines:
+//!
+//! * [`KeyedScheduler`] — one bounded FIFO admission queue for all models.
+//!   Batch formation **never crosses keys**: a batch is released either
+//!   when some key has `max_batch` requests queued, or when the oldest
+//!   request has waited `max_wait` (releasing the oldest request's key
+//!   only). FIFO order is preserved within each key.
+//! * [`Router`] — per-key [`ServeEngine`]s plus their residual models.
+//!   [`Router::register`] calibrates the new key's engine and **evicts any
+//!   older parameter version of the same model** (a version bump
+//!   invalidates exactly that model's cached estimate — other models keep
+//!   theirs, pinned by `rust/tests/serve_routing.rs`).
+//! * **Re-calibration policy** — after each routed batch the router checks
+//!   the engine's fallback-guard trip rate ([`crate::serve::RecalibPolicy`]);
+//!   a stale estimate is evicted and re-captured from a fresh probe solve,
+//!   implementing the ROADMAP "continuous re-calibration" seedling.
+//!
+//! The closed-loop routed load driver lives in
+//! [`crate::serve::loadgen::run_routed_closed_loop`] and backs the
+//! `serve-bench --models N` CLI path (CI runs the two-model smoke).
+
+use crate::linalg::vecops::Elem;
+use crate::serve::engine::{BatchReport, EngineConfig, ServeEngine};
+use crate::serve::scheduler::SchedulerConfig;
+use crate::serve::synth::SynthDeq;
+use crate::solvers::fixed_point::ColStats;
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+
+/// Identity of one servable model snapshot: which model, at which
+/// parameter version. The calibration-estimate cache is keyed by this, so
+/// bumping `version` naturally invalidates the stale estimate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelKey {
+    pub model: u32,
+    pub version: u32,
+}
+
+impl ModelKey {
+    pub fn new(model: u32, version: u32) -> ModelKey {
+        ModelKey { model, version }
+    }
+}
+
+impl std::fmt::Display for ModelKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "m{}v{}", self.model, self.version)
+    }
+}
+
+/// A servable model: the batched residual map one engine solves against.
+/// (The synthetic serving model implements this; the PJRT-backed DEQ can
+/// once the runtime wiring lands.)
+pub trait BatchResidual<E: Elem> {
+    fn dim(&self) -> usize;
+    /// Evaluate the residual over `k` stacked d-columns (see
+    /// [`crate::serve::SynthDeq::residual_batch`] for the contract).
+    fn residual_batch(&self, zs: &[E], k: usize, out: &mut [E]);
+}
+
+impl<E: Elem> BatchResidual<E> for SynthDeq<E> {
+    fn dim(&self) -> usize {
+        SynthDeq::dim(self)
+    }
+    fn residual_batch(&self, zs: &[E], k: usize, out: &mut [E]) {
+        SynthDeq::residual_batch(self, zs, k, out)
+    }
+}
+
+/// One admission queue for every model: a bounded FIFO of
+/// (arrival, key, payload) with per-key batch formation. Same
+/// clock-agnostic discipline as [`crate::serve::Scheduler`] — every
+/// operation takes `now` — and the same backpressure contract (`push`
+/// rejects when full).
+#[derive(Debug)]
+pub struct KeyedScheduler<T> {
+    cfg: SchedulerConfig,
+    queue: VecDeque<(f64, ModelKey, T)>,
+    /// Per-key queued counts, maintained incrementally by `push` /
+    /// `drain_key` (emptied keys are removed, so a key's position tracks
+    /// the arrival of its oldest queued cohort). Keeps every poll —
+    /// `ready` / `next_deadline` run once per serving-loop iteration —
+    /// O(#keys) and allocation-free at steady state.
+    counts: Vec<(ModelKey, usize)>,
+    pub accepted: usize,
+    pub rejected: usize,
+}
+
+impl<T> KeyedScheduler<T> {
+    pub fn new(cfg: SchedulerConfig) -> KeyedScheduler<T> {
+        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        assert!(
+            cfg.queue_cap >= cfg.max_batch,
+            "queue_cap must fit at least one full batch"
+        );
+        KeyedScheduler {
+            cfg,
+            queue: VecDeque::with_capacity(cfg.queue_cap),
+            counts: Vec::new(),
+            accepted: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Admit a request for `key` at time `now`; rejects (returning the
+    /// payload) when the shared queue is full.
+    pub fn push(&mut self, now: f64, key: ModelKey, item: T) -> Result<(), T> {
+        if self.queue.len() >= self.cfg.queue_cap {
+            self.rejected += 1;
+            return Err(item);
+        }
+        self.queue.push_back((now, key, item));
+        match self.counts.iter_mut().find(|(k, _)| *k == key) {
+            Some(e) => e.1 += 1,
+            None => self.counts.push((key, 1)),
+        }
+        self.accepted += 1;
+        Ok(())
+    }
+
+    /// Queued requests for one key (O(#keys) registry lookup).
+    pub fn count_key(&self, key: ModelKey) -> usize {
+        self.counts
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, c)| *c)
+            .unwrap_or(0)
+    }
+
+    /// The key of the oldest queued request.
+    pub fn front_key(&self) -> Option<ModelKey> {
+        self.queue.front().map(|(_, k, _)| *k)
+    }
+
+    /// The first key in the count registry with a full batch queued
+    /// (registry order tracks each key's oldest queued cohort). O(#keys),
+    /// allocation-free — the routed serving loop polls this every
+    /// iteration.
+    fn first_full_key(&self) -> Option<ModelKey> {
+        self.counts
+            .iter()
+            .find(|(_, c)| *c >= self.cfg.max_batch)
+            .map(|(k, _)| *k)
+    }
+
+    /// The batch releasable at time `now`, as `(key, count)` — never mixes
+    /// keys. A key with `max_batch` requests queued releases immediately
+    /// (earliest such key by arrival order of its first request); otherwise
+    /// once the *oldest* queued request has waited `max_wait`, its key
+    /// releases whatever it has queued. Allocation-free.
+    pub fn ready(&self, now: f64) -> Option<(ModelKey, usize)> {
+        if let Some(k) = self.first_full_key() {
+            return Some((k, self.cfg.max_batch));
+        }
+        let (t0, k0, _) = self.queue.front()?;
+        if now - t0 >= self.cfg.max_wait {
+            // Below a full batch by the check above, so release everything
+            // this key has queued.
+            return Some((*k0, self.count_key(*k0)));
+        }
+        None
+    }
+
+    /// Earliest time a currently-queued partial batch becomes releasable
+    /// (`None` when the queue is empty or some key already holds a full
+    /// batch — then [`KeyedScheduler::ready`] is the authority).
+    pub fn next_deadline(&self) -> Option<f64> {
+        if self.first_full_key().is_some() {
+            return None;
+        }
+        self.queue.front().map(|(t, _, _)| t + self.cfg.max_wait)
+    }
+
+    /// Drain up to `n` oldest requests of `key` (FIFO within the key) into
+    /// `out` as `(queue latency at now, payload)` pairs. Other keys'
+    /// requests keep their positions; the queue is edited in place (no
+    /// rebuild, no allocation beyond the caller's reused `out`).
+    pub fn drain_key(&mut self, key: ModelKey, n: usize, now: f64, out: &mut Vec<(f64, T)>) {
+        let mut taken = 0usize;
+        let mut i = 0usize;
+        while i < self.queue.len() && taken < n {
+            if self.queue[i].1 == key {
+                let (t, _, item) = self.queue.remove(i).expect("index in bounds");
+                out.push((now - t, item));
+                taken += 1;
+            } else {
+                i += 1;
+            }
+        }
+        if taken > 0 {
+            if let Some(pos) = self.counts.iter().position(|(k, _)| *k == key) {
+                self.counts[pos].1 -= taken.min(self.counts[pos].1);
+                if self.counts[pos].1 == 0 {
+                    // Emptied keys leave the registry so a later re-arrival
+                    // re-enters at the back (cohort arrival order).
+                    self.counts.remove(pos);
+                }
+            }
+        }
+    }
+}
+
+struct RouteEntry<E: Elem> {
+    key: ModelKey,
+    engine: ServeEngine<E>,
+    model: Box<dyn BatchResidual<E>>,
+    /// Stale-estimate evictions + re-calibrations performed by the policy.
+    recalibrations: usize,
+}
+
+/// Per-model serving engines behind one routing surface. Every registered
+/// [`ModelKey`] owns a [`ServeEngine`] (built from one shared
+/// [`EngineConfig`], so the [`crate::solvers::session::SolverSpec`]s stay
+/// the single source of truth) and its calibration estimate;
+/// [`Router::process`] dispatches a single-key batch and runs the
+/// continuous re-calibration policy.
+pub struct Router<E: Elem> {
+    cfg: EngineConfig,
+    entries: Vec<RouteEntry<E>>,
+}
+
+impl<E: Elem> Router<E> {
+    pub fn new(cfg: EngineConfig) -> Router<E> {
+        Router {
+            cfg,
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Registered keys, in registration order.
+    pub fn keys(&self) -> Vec<ModelKey> {
+        self.entries.iter().map(|e| e.key).collect()
+    }
+
+    pub fn engine(&self, key: ModelKey) -> Option<&ServeEngine<E>> {
+        self.entries.iter().find(|e| e.key == key).map(|e| &e.engine)
+    }
+
+    /// Stale-estimate re-calibrations performed for `key`.
+    pub fn recalibrations(&self, key: ModelKey) -> usize {
+        self.entries
+            .iter()
+            .find(|e| e.key == key)
+            .map(|e| e.recalibrations)
+            .unwrap_or(0)
+    }
+
+    /// Register (or roll) a model snapshot: builds its engine, calibrates
+    /// it from z₀ = 0, and **evicts any older (or same-version) snapshot of
+    /// the same model id** — the version bump invalidates exactly that
+    /// model's stale cache entries, never a different model's and never a
+    /// NEWER version (replaying a stale registration cannot tear down a
+    /// live engine). Returns the calibration probe's (iterations, final
+    /// residual).
+    pub fn register(&mut self, key: ModelKey, model: Box<dyn BatchResidual<E>>) -> (usize, f64) {
+        self.entries
+            .retain(|e| e.key.model != key.model || e.key.version > key.version);
+        let d = model.dim();
+        let mut engine = ServeEngine::new(d, self.cfg);
+        let probe = engine.calibrate(
+            |z: &[E], out: &mut [E]| model.residual_batch(z, 1, out),
+            &vec![E::ZERO; d],
+        );
+        self.entries.push(RouteEntry {
+            key,
+            engine,
+            model,
+            recalibrations: 0,
+        });
+        probe
+    }
+
+    /// Serve one single-key batch (same block contract as
+    /// [`ServeEngine::process`]); afterwards, if the engine's trip-rate
+    /// policy flags the shared estimate stale, evict it and re-calibrate
+    /// from a fresh probe solve (the continuous re-calibration policy).
+    pub fn process(
+        &mut self,
+        key: ModelKey,
+        zs: &mut [E],
+        cotangents: &[E],
+        w_out: &mut [E],
+        stats: &mut [ColStats],
+    ) -> Result<BatchReport> {
+        let entry = self
+            .entries
+            .iter_mut()
+            .find(|e| e.key == key)
+            .ok_or_else(|| anyhow!("no engine registered for {key}"))?;
+        let d = entry.model.dim();
+        let model = &entry.model;
+        let report = entry.engine.process(
+            |block: &[E], _ids: &[usize], out: &mut [E]| {
+                model.residual_batch(block, block.len() / d, out)
+            },
+            zs,
+            cotangents,
+            w_out,
+            stats,
+        );
+        if report.estimate_stale {
+            entry.engine.invalidate_estimate();
+            entry.engine.calibrate(
+                |z: &[E], out: &mut [E]| model.residual_batch(z, 1, out),
+                &vec![E::ZERO; d],
+            );
+            entry.recalibrations += 1;
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qn::InvOp;
+    use crate::serve::scheduler::SchedulerConfig;
+
+    fn ks(max_batch: usize, max_wait: f64, cap: usize) -> KeyedScheduler<u32> {
+        KeyedScheduler::new(SchedulerConfig {
+            max_batch,
+            max_wait,
+            queue_cap: cap,
+        })
+    }
+
+    const A: ModelKey = ModelKey { model: 0, version: 0 };
+    const B: ModelKey = ModelKey { model: 1, version: 0 };
+
+    #[test]
+    fn keyed_scheduler_never_mixes_keys() {
+        let mut s = ks(3, 1.0, 16);
+        // Interleave two keys: A B A B A → A reaches the full batch first.
+        for (i, k) in [A, B, A, B, A].iter().enumerate() {
+            s.push(0.1 * i as f64, *k, i as u32).unwrap();
+        }
+        let (k, n) = s.ready(0.5).expect("full batch for A");
+        assert_eq!(k, A);
+        assert_eq!(n, 3);
+        let mut out = Vec::new();
+        s.drain_key(k, n, 0.5, &mut out);
+        // FIFO within the key: A's payloads were 0, 2, 4.
+        assert_eq!(out.iter().map(|(_, p)| *p).collect::<Vec<_>>(), vec![0, 2, 4]);
+        // Only B's requests remain, in order.
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.front_key(), Some(B));
+        assert_eq!(s.count_key(A), 0);
+        assert_eq!(s.count_key(B), 2);
+    }
+
+    #[test]
+    fn keyed_scheduler_deadline_releases_oldest_key_only() {
+        let mut s = ks(8, 0.5, 16);
+        s.push(1.0, B, 10).unwrap();
+        s.push(1.1, A, 20).unwrap();
+        s.push(1.2, B, 30).unwrap();
+        assert_eq!(s.ready(1.4), None);
+        assert_eq!(s.next_deadline(), Some(1.5));
+        // Oldest (B) waited max_wait: release B's two requests, not A's.
+        let (k, n) = s.ready(1.5).expect("deadline release");
+        assert_eq!(k, B);
+        assert_eq!(n, 2);
+        let mut out = Vec::new();
+        s.drain_key(k, n, 1.5, &mut out);
+        assert_eq!(out.iter().map(|(_, p)| *p).collect::<Vec<_>>(), vec![10, 30]);
+        assert_eq!(s.count_key(A), 1);
+    }
+
+    #[test]
+    fn keyed_scheduler_backpressure() {
+        let mut s = ks(2, 1.0, 2);
+        assert!(s.push(0.0, A, 1).is_ok());
+        assert!(s.push(0.0, B, 2).is_ok());
+        assert_eq!(s.push(0.0, A, 3), Err(3));
+        assert_eq!(s.accepted, 2);
+        assert_eq!(s.rejected, 1);
+    }
+
+    fn router_cfg(b: usize) -> EngineConfig {
+        EngineConfig {
+            max_batch: b,
+            ..Default::default()
+        }
+        .with_tol(1e-6)
+    }
+
+    #[test]
+    fn version_bump_invalidates_only_that_models_estimate() {
+        let d = 32;
+        let mut router: Router<f64> = Router::new(router_cfg(4));
+        router.register(ModelKey::new(0, 0), Box::new(SynthDeq::<f64>::new(d, 8, 1)));
+        router.register(ModelKey::new(1, 0), Box::new(SynthDeq::<f64>::new(d, 8, 2)));
+        assert_eq!(router.keys(), vec![ModelKey::new(0, 0), ModelKey::new(1, 0)]);
+        // Snapshot model 1's cached estimate behaviour before the bump.
+        let probe: Vec<f64> = (0..d).map(|i| (i as f64 * 0.31).sin()).collect();
+        let before = router
+            .engine(ModelKey::new(1, 0))
+            .unwrap()
+            .estimate()
+            .unwrap()
+            .apply_t_vec(&probe);
+        // Parameter-version bump on model 0.
+        router.register(ModelKey::new(0, 1), Box::new(SynthDeq::<f64>::new(d, 8, 3)));
+        // (0,0) is gone, (0,1) live, (1,0) untouched — bit-identical cache.
+        assert!(router.engine(ModelKey::new(0, 0)).is_none());
+        assert!(router.engine(ModelKey::new(0, 1)).is_some());
+        let after = router
+            .engine(ModelKey::new(1, 0))
+            .unwrap()
+            .estimate()
+            .unwrap()
+            .apply_t_vec(&probe);
+        assert_eq!(before, after, "model 1's cached estimate must survive");
+    }
+
+    #[test]
+    fn stale_registration_cannot_evict_newer_version() {
+        let d = 32;
+        let mut router: Router<f64> = Router::new(router_cfg(4));
+        router.register(ModelKey::new(0, 1), Box::new(SynthDeq::<f64>::new(d, 8, 1)));
+        // Replaying an OLD snapshot must not tear down the live v1 engine.
+        router.register(ModelKey::new(0, 0), Box::new(SynthDeq::<f64>::new(d, 8, 2)));
+        assert!(router.engine(ModelKey::new(0, 1)).is_some(), "newer version survives");
+        assert!(router.engine(ModelKey::new(0, 0)).is_some(), "old snapshot coexists");
+        // Re-registering the SAME version replaces it (one entry per key).
+        router.register(ModelKey::new(0, 1), Box::new(SynthDeq::<f64>::new(d, 8, 3)));
+        assert_eq!(
+            router.keys().iter().filter(|k| **k == ModelKey::new(0, 1)).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn routed_batches_serve_and_unknown_key_errors() {
+        let d = 24;
+        let b = 3;
+        let mut router: Router<f32> = Router::new(router_cfg(b));
+        let k0 = ModelKey::new(7, 0);
+        router.register(k0, Box::new(SynthDeq::<f32>::new(d, 8, 5)));
+        let mut zs = vec![0.0f32; b * d];
+        let cots = vec![1.0f32; b * d];
+        let mut w = vec![0.0f32; b * d];
+        let mut stats = vec![ColStats::default(); b];
+        let rep = router.process(k0, &mut zs, &cots, &mut w, &mut stats).unwrap();
+        assert!(rep.all_converged);
+        assert_eq!(rep.batch, b);
+        assert!(router
+            .process(ModelKey::new(9, 9), &mut zs, &cots, &mut w, &mut stats)
+            .is_err());
+    }
+}

@@ -1,5 +1,15 @@
 //! Root / fixed-point solvers for the DEQ forward pass.
 //!
+//! **Entry-point status**: since the session-API redesign
+//! ([`crate::solvers::session`]), the public free functions here
+//! (`broyden_solve_ws`, `anderson_solve_ws`, `picard_solve`, the `*_batch`
+//! family) are thin deprecated shims that delegate to
+//! `SolverSpec::build()` → `FixedPointSolver::solve`/`solve_batch` — the
+//! iteration bodies live in `pub(crate)` cores the trait implementations
+//! drive, so both surfaces are one code path (bit-identical, pinned by
+//! `rust/tests/session_parity.rs`). In-tree consumers go through the
+//! session API; the shims exist for external snippets and the parity tests.
+//!
 //! The primary solver is Broyden's method ([`broyden_solve`]) exactly as in
 //! the DEQ line of work: limited memory, identity initialization, optional
 //! derivative-free backtracking. It returns the final iterate *and* the qN
@@ -37,6 +47,7 @@ use crate::linalg::vecops::{add_scaled, axpy, dot, nrm2, sub, zero, Elem};
 use crate::qn::broyden::BroydenInverse;
 use crate::qn::workspace::Workspace;
 use crate::qn::MemoryPolicy;
+use crate::solvers::session::{FixedPointSolver, Session, SolverSpec};
 use crate::solvers::Trace;
 use crate::util::timer::Stopwatch;
 
@@ -88,10 +99,35 @@ pub fn broyden_solve<E: Elem>(
     broyden_solve_ws(g, z0, opts, &mut ws)
 }
 
-/// Broyden root solve with a caller-provided scratch arena. After the first
+/// Broyden root solve with a caller-provided scratch arena.
+///
+/// **Deprecated shim**: new code should build a solver through the session
+/// API ([`SolverSpec::build`](crate::solvers::session::SolverSpec) →
+/// [`FixedPointSolver::solve`](crate::solvers::session::FixedPointSolver)),
+/// which returns the captured inverse estimate as a typed
+/// [`EstimateHandle`](crate::solvers::session::EstimateHandle). This entry
+/// point lifts the caller's workspace into a [`Session`] and delegates —
+/// bit-identical trajectories, pinned by `rust/tests/session_parity.rs`.
+pub fn broyden_solve_ws<E: Elem>(
+    g: impl FnMut(&[E], &mut [E]),
+    z0: &[E],
+    opts: &FpOptions,
+    ws: &mut Workspace<E>,
+) -> FpResult<E> {
+    let spec = SolverSpec::from_fp_options(opts);
+    let mut solver: Box<dyn FixedPointSolver<E>> = spec.build::<E>();
+    let mut sess = Session::from_workspace(std::mem::take(ws));
+    let mut g = g;
+    let out = solver.solve(&mut sess, &mut g, z0);
+    *ws = sess.into_workspace();
+    out.into_fp_result()
+}
+
+/// The Broyden iteration body (the session API's `BroydenSolver` drives
+/// this; the public shim above routes through the trait). After the first
 /// one or two iterations warm the workspace, the loop performs zero heap
 /// allocations.
-pub fn broyden_solve_ws<E: Elem>(
+pub(crate) fn broyden_core<E: Elem>(
     mut g: impl FnMut(&[E], &mut [E]),
     z0: &[E],
     opts: &FpOptions,
@@ -161,7 +197,26 @@ pub fn broyden_solve_ws<E: Elem>(
 }
 
 /// Damped Picard iteration z ← z − τ g(z) (baseline / pre-training warmup).
+///
+/// **Deprecated shim** over the session API (`SolverSpec::picard(tau)` →
+/// `build().solve(...)`); kept for callers that only want the iterate.
 pub fn picard_solve<E: Elem>(
+    g: impl FnMut(&[E], &mut [E]),
+    z0: &[E],
+    tau: f64,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<E>, f64, usize) {
+    let spec = SolverSpec::picard(tau).with_tol(tol).with_max_iters(max_iters);
+    let mut solver: Box<dyn FixedPointSolver<E>> = spec.build::<E>();
+    let mut sess: Session<E> = Session::new();
+    let mut g = g;
+    let out = solver.solve(&mut sess, &mut g, z0);
+    (out.z, out.residual, out.iters)
+}
+
+/// The Picard iteration body (driven by the session API's `PicardSolver`).
+pub(crate) fn picard_core<E: Elem>(
     mut g: impl FnMut(&[E], &mut [E]),
     z0: &[E],
     tau: f64,
@@ -214,7 +269,31 @@ pub fn anderson_solve<E: Elem>(
 /// machine the batched serving solver ([`anderson_solve_batch`]) drives for
 /// B columns against one shared residual evaluation — one code path, so the
 /// batched solve is bit-identical to B sequential runs.
+///
+/// **Deprecated shim** over the session API (`SolverSpec::anderson(m, beta)`
+/// → `build().solve(...)`); lifts the caller's workspace into a [`Session`]
+/// for the call.
 pub fn anderson_solve_ws<E: Elem>(
+    g: impl FnMut(&[E], &mut [E]),
+    z0: &[E],
+    m: usize,
+    tol: f64,
+    max_iters: usize,
+    beta: f64,
+    ws: &mut Workspace<E>,
+) -> (Vec<E>, f64, usize) {
+    let spec = SolverSpec::anderson(m, beta).with_tol(tol).with_max_iters(max_iters);
+    let mut solver: Box<dyn FixedPointSolver<E>> = spec.build::<E>();
+    let mut sess = Session::from_workspace(std::mem::take(ws));
+    let mut g = g;
+    let out = solver.solve(&mut sess, &mut g, z0);
+    *ws = sess.into_workspace();
+    (out.z, out.residual, out.iters)
+}
+
+/// The Anderson iteration body (driven by the session API's
+/// `AndersonSolver`).
+pub(crate) fn anderson_core<E: Elem>(
     mut g: impl FnMut(&[E], &mut [E]),
     z0: &[E],
     m: usize,
@@ -554,7 +633,29 @@ fn batch_solve_driver<E: Elem>(
 /// independent [`picard_solve`] run with the same `tau`/`tol`/`max_iters`.
 /// Per-column outcomes land in `stats` (length ≥ B). Allocation-free once
 /// `ws` is warm.
+///
+/// **Deprecated shim** over the session API
+/// ([`FixedPointSolver::solve_batch`](crate::solvers::session::FixedPointSolver::solve_batch)).
 pub fn picard_solve_batch<E: Elem>(
+    g: impl FnMut(&[E], &[usize], &mut [E]),
+    zs: &mut [E],
+    d: usize,
+    tau: f64,
+    tol: f64,
+    max_iters: usize,
+    ws: &mut Workspace<E>,
+    stats: &mut [ColStats],
+) {
+    let spec = SolverSpec::picard(tau).with_tol(tol).with_max_iters(max_iters);
+    let mut solver: Box<dyn FixedPointSolver<E>> = spec.build::<E>();
+    let mut sess = Session::from_workspace(std::mem::take(ws));
+    let mut g = g;
+    solver.solve_batch(&mut sess, &mut g, zs, d, stats);
+    *ws = sess.into_workspace();
+}
+
+/// The batched Picard body (driven by the session API's `PicardSolver`).
+pub(crate) fn picard_batch_core<E: Elem>(
     g: impl FnMut(&[E], &[usize], &mut [E]),
     zs: &mut [E],
     d: usize,
@@ -668,9 +769,12 @@ impl<E: Elem> AndersonBatch<E> {
     }
 }
 
-/// One-shot batched Anderson solve (owns its per-column states for the call;
-/// serving engines hold a persistent [`AndersonBatch`] instead so repeated
-/// batches stay allocation-free).
+/// One-shot batched Anderson solve (owns its per-column states for the
+/// call; long-lived consumers hold a session-API `AndersonSolver` — or the
+/// underlying [`AndersonBatch`] — so repeated batches stay allocation-free).
+///
+/// **Deprecated shim** over the session API
+/// ([`FixedPointSolver::solve_batch`](crate::solvers::session::FixedPointSolver::solve_batch)).
 pub fn anderson_solve_batch<E: Elem>(
     g: impl FnMut(&[E], &[usize], &mut [E]),
     zs: &mut [E],
@@ -682,13 +786,13 @@ pub fn anderson_solve_batch<E: Elem>(
     ws: &mut Workspace<E>,
     stats: &mut [ColStats],
 ) {
-    if zs.is_empty() || d == 0 {
-        return;
-    }
-    let b = zs.len() / d;
-    let mut batch = AndersonBatch::new(d, m, beta, b, ws);
-    batch.solve(g, zs, tol, max_iters, ws, stats);
-    batch.release(ws);
+    let spec = SolverSpec::anderson(m, beta).with_tol(tol).with_max_iters(max_iters);
+    let mut solver: Box<dyn FixedPointSolver<E>> = spec.build::<E>();
+    let mut sess = Session::from_workspace(std::mem::take(ws));
+    let mut g = g;
+    solver.solve_batch(&mut sess, &mut g, zs, d, stats);
+    solver.release(&mut sess);
+    *ws = sess.into_workspace();
 }
 
 /// In-place Gaussian elimination with partial pivoting on a dense row-major

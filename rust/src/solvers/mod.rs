@@ -1,14 +1,25 @@
 //! Inner-problem solvers (the *forward pass* of the bi-level problem).
 //!
-//! * [`fixed_point`] — Broyden root solver (DEQ forward), plus Anderson
-//!   acceleration and damped Picard iteration as baselines.
+//! * [`session`] — **the unified solve surface**: [`session::SolverSpec`]
+//!   (Picard | Anderson | Broyden, plus the authoritative tol/budget)
+//!   builds a [`session::FixedPointSolver`] trait object whose
+//!   [`session::SolveOutcome`] carries the captured inverse-estimate
+//!   handle; the companion [`session::Backward`] trait (Shine |
+//!   JacobianFree | Fallback | Refine | Full) consumes it. Every in-tree
+//!   consumer — DEQ trainer, HOAG, power probes, coordinator experiments,
+//!   the serving tier, the CLI — goes through this API.
+//! * [`fixed_point`] — the iteration bodies the session solvers drive, plus
+//!   the legacy free-function shims (`broyden_solve_ws`,
+//!   `anderson_solve_ws`, `picard_solve*`, `anderson_solve_batch`) that
+//!   delegate to the session API for source compatibility.
 //! * [`minimize`] — LBFGS minimizer with Wolfe line search and the paper's
 //!   OPA extra updates (hyperparameter-optimization forward).
 //! * [`adjoint`] — forward solve driven by the Adjoint Broyden method
 //!   (needed for Theorem 4 / Table E.3 experiments).
 //! * [`linear`] — the backward-pass linear solvers: CG (symmetric case) and
 //!   Broyden-on-VJPs (general case), both warm-startable — the *refine*
-//!   strategy is exactly "warm start these from the forward estimate".
+//!   strategy is exactly "warm start these from the forward estimate", and
+//!   the session [`session::Backward`] implementations are built on them.
 //! * [`line_search`] — Wolfe and backtracking line searches.
 
 pub mod adjoint;
@@ -16,6 +27,12 @@ pub mod fixed_point;
 pub mod line_search;
 pub mod linear;
 pub mod minimize;
+pub mod session;
+
+pub use session::{
+    Backward, BackwardOutcome, BackwardSpec, EstimateHandle, FixedPointSolver, ForwardHandle,
+    Session, SolveOutcome, SolverMethod, SolverSpec,
+};
 
 /// Shared solver telemetry: per-iteration residual + wall time.
 #[derive(Clone, Debug, Default)]

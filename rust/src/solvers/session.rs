@@ -1,0 +1,1176 @@
+//! The unified solve-session API: **`SolverSpec` → `FixedPointSolver` →
+//! `SolveOutcome` → `Backward`** — one surface for "solve the fixed point,
+//! capture the inverse estimate, share it with the backward pass".
+//!
+//! SHINE's core move (Ramzi et al., ICLR 2022, §3) is that the forward
+//! solver's quasi-Newton state *is* the backward operator. Before this
+//! module, forward and backward were disconnected free functions
+//! (`broyden_solve_ws`, `anderson_solve_ws`, the `*_batch` family, plus a
+//! separate `hypergrad::Strategy` dispatch) that every caller re-wired by
+//! hand. Here the solver family and the gradient strategy are swappable
+//! *values* behind two trait APIs, in the spirit of the solver registries in
+//! torchdeq / the original `mdeq` codebase:
+//!
+//! * [`SolverSpec`] — a plain config value (Picard | Anderson{m, β} |
+//!   Broyden{m, line-search} plus `tol`/`max_iters`, the **single source of
+//!   truth** for tolerances — consumers no longer restate them);
+//! * [`FixedPointSolver`] — the trait object [`SolverSpec::build`] produces:
+//!   `solve(&mut Session, g, z0) -> SolveOutcome` for one problem and
+//!   [`FixedPointSolver::solve_batch`] for a contiguous d × B column block
+//!   (the serving path);
+//! * [`SolveOutcome`] — the converged iterate, convergence telemetry and,
+//!   when the method builds one, the **captured inverse-estimate handle**
+//!   ([`EstimateHandle`]);
+//! * [`Backward`] — the companion trait (Shine | JacobianFree | Fallback |
+//!   Refine | Full) that consumes the handle, making "share the inverse
+//!   estimate" a type-level contract instead of a calling convention.
+//!
+//! A [`Session`] owns the [`Workspace`] scratch arena shared by forward and
+//! backward passes; the solver loops stay allocation-free once it is warm
+//! (see `rust/tests/qn_alloc.rs`).
+//!
+//! The legacy free functions in [`crate::solvers::fixed_point`] survive as
+//! thin deprecated shims that delegate here — bit-identical trajectories,
+//! pinned by `rust/tests/session_parity.rs` — so external snippets keep
+//! compiling while every in-tree consumer (DEQ trainer, HOAG, power probes,
+//! coordinator experiments, the serving tier, the CLI) goes through this
+//! API.
+
+use crate::linalg::vecops::Elem;
+use crate::qn::low_rank::LowRank;
+use crate::qn::workspace::Workspace;
+use crate::qn::{InvOp, MemoryPolicy};
+use crate::solvers::fixed_point::{
+    anderson_core, broyden_core, picard_batch_core, picard_core, AndersonBatch, ColStats,
+    FpOptions, FpResult,
+};
+use crate::solvers::linear::{broyden_solve_left_ws, cg_solve};
+use crate::solvers::Trace;
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// A solve session: the scratch arena shared by every forward solve and
+/// backward pass of one consumer (a trainer, an outer loop, a serving
+/// engine). Buffers pooled here are recycled across solves, so the hot
+/// loops perform zero heap allocations once the session is warm.
+#[derive(Debug, Default)]
+pub struct Session<E: Elem = f64> {
+    ws: Workspace<E>,
+}
+
+impl<E: Elem> Session<E> {
+    pub fn new() -> Session<E> {
+        Session {
+            ws: Workspace::new(),
+        }
+    }
+
+    /// Wrap an existing workspace (the legacy-shim path: the free functions
+    /// take `&mut Workspace`, so they lift it into a session for the call).
+    pub fn from_workspace(ws: Workspace<E>) -> Session<E> {
+        Session { ws }
+    }
+
+    /// Hand the workspace back (inverse of [`Session::from_workspace`]).
+    pub fn into_workspace(self) -> Workspace<E> {
+        self.ws
+    }
+
+    /// The underlying scratch arena (for code still written against raw
+    /// `Workspace` plumbing, e.g. the adjoint-Broyden forward).
+    pub fn workspace(&mut self) -> &mut Workspace<E> {
+        &mut self.ws
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SolverSpec
+// ---------------------------------------------------------------------------
+
+/// Which fixed-point iteration a [`SolverSpec`] builds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SolverMethod {
+    /// Damped Picard iteration z ← z − τ g(z).
+    Picard { tau: f64 },
+    /// Anderson(m) acceleration with mixing parameter β.
+    Anderson { m: usize, beta: f64 },
+    /// Broyden's method with limited memory and optional backtracking
+    /// line search — the only method that captures an inverse estimate.
+    Broyden {
+        memory: usize,
+        policy: MemoryPolicy,
+        line_search: bool,
+    },
+}
+
+impl SolverMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverMethod::Picard { .. } => "picard",
+            SolverMethod::Anderson { .. } => "anderson",
+            SolverMethod::Broyden { .. } => "broyden",
+        }
+    }
+}
+
+/// Config value describing one fixed-point solver: method plus the
+/// tolerance/budget that used to be restated at every call site. This is
+/// the single source of truth — `serve::EngineConfig`, the trainer and the
+/// CLI all carry a `SolverSpec` instead of loose `tol`/`max_iters` copies.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SolverSpec {
+    pub method: SolverMethod,
+    /// Absolute tolerance on ‖g(z)‖.
+    pub tol: f64,
+    /// Per-solve iteration budget.
+    pub max_iters: usize,
+}
+
+impl SolverSpec {
+    pub fn picard(tau: f64) -> SolverSpec {
+        SolverSpec {
+            method: SolverMethod::Picard { tau },
+            tol: 1e-8,
+            max_iters: 200,
+        }
+    }
+
+    pub fn anderson(m: usize, beta: f64) -> SolverSpec {
+        SolverSpec {
+            method: SolverMethod::Anderson { m, beta },
+            tol: 1e-8,
+            max_iters: 200,
+        }
+    }
+
+    /// Broyden with the paper's defaults (Freeze policy, no line search).
+    pub fn broyden(memory: usize) -> SolverSpec {
+        SolverSpec {
+            method: SolverMethod::Broyden {
+                memory,
+                policy: MemoryPolicy::Freeze,
+                line_search: false,
+            },
+            tol: 1e-8,
+            max_iters: 200,
+        }
+    }
+
+    pub fn with_tol(mut self, tol: f64) -> SolverSpec {
+        self.tol = tol;
+        self
+    }
+
+    pub fn with_max_iters(mut self, max_iters: usize) -> SolverSpec {
+        self.max_iters = max_iters;
+        self
+    }
+
+    pub fn with_line_search(mut self, ls: bool) -> SolverSpec {
+        if let SolverMethod::Broyden { line_search, .. } = &mut self.method {
+            *line_search = ls;
+        }
+        self
+    }
+
+    /// Lift the legacy Broyden option struct (shim path).
+    pub fn from_fp_options(opts: &FpOptions) -> SolverSpec {
+        SolverSpec {
+            method: SolverMethod::Broyden {
+                memory: opts.memory,
+                policy: opts.policy,
+                line_search: opts.line_search,
+            },
+            tol: opts.tol,
+            max_iters: opts.max_iters,
+        }
+    }
+
+    /// Lower to the legacy option struct (Broyden only; other methods get
+    /// the defaults with this spec's tol/budget).
+    pub fn fp_options(&self) -> FpOptions {
+        match self.method {
+            SolverMethod::Broyden {
+                memory,
+                policy,
+                line_search,
+            } => FpOptions {
+                tol: self.tol,
+                max_iters: self.max_iters,
+                memory,
+                policy,
+                line_search,
+            },
+            _ => FpOptions {
+                tol: self.tol,
+                max_iters: self.max_iters,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Parse a CLI-style spec: `picard[:tau]`, `anderson[:m[,beta]]`,
+    /// `broyden[:memory]` (tolerance/budget come from separate flags).
+    pub fn parse(s: &str) -> Result<SolverSpec, String> {
+        let (head, args) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "picard" => {
+                let tau = match args {
+                    Some(a) => a.parse::<f64>().map_err(|_| format!("bad tau '{a}'"))?,
+                    None => 1.0,
+                };
+                Ok(SolverSpec::picard(tau))
+            }
+            "anderson" => {
+                let (m, beta) = match args {
+                    Some(a) => match a.split_once(',') {
+                        Some((ms, bs)) => (
+                            ms.parse::<usize>().map_err(|_| format!("bad m '{ms}'"))?,
+                            bs.parse::<f64>().map_err(|_| format!("bad beta '{bs}'"))?,
+                        ),
+                        None => (a.parse::<usize>().map_err(|_| format!("bad m '{a}'"))?, 1.0),
+                    },
+                    None => (5, 1.0),
+                };
+                Ok(SolverSpec::anderson(m, beta))
+            }
+            "broyden" => {
+                let memory = match args {
+                    Some(a) => a.parse::<usize>().map_err(|_| format!("bad memory '{a}'"))?,
+                    None => 30,
+                };
+                Ok(SolverSpec::broyden(memory))
+            }
+            other => Err(format!(
+                "unknown solver '{other}' (picard[:tau] | anderson[:m[,beta]] | broyden[:memory])"
+            )),
+        }
+    }
+
+    /// Build the solver this spec describes.
+    pub fn build<E: Elem>(&self) -> Box<dyn FixedPointSolver<E>> {
+        match self.method {
+            SolverMethod::Picard { .. } => Box::new(PicardSolver { spec: *self }),
+            SolverMethod::Anderson { .. } => Box::new(AndersonSolver {
+                spec: *self,
+                batch: None,
+                batch_d: 0,
+            }),
+            SolverMethod::Broyden { .. } => Box::new(BroydenSolver { spec: *self }),
+        }
+    }
+}
+
+impl Default for SolverSpec {
+    /// The DEQ-paper default: Broyden(30), tol 1e-8, 200 iterations.
+    fn default() -> Self {
+        SolverSpec::broyden(30)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SolveOutcome + EstimateHandle
+// ---------------------------------------------------------------------------
+
+/// The captured forward inverse estimate `H ≈ J_g⁻¹` — the object SHINE
+/// shares with the backward pass. Holding one is proof a forward solve
+/// produced it; [`Backward`] strategies consume it through
+/// [`EstimateHandle::forward`], and the serving tier caches one per
+/// [`crate::serve::ModelKey`].
+#[derive(Clone, Debug)]
+pub struct EstimateHandle<E: Elem = f64> {
+    lr: LowRank<E>,
+}
+
+impl<E: Elem> EstimateHandle<E> {
+    pub fn new(lr: LowRank<E>) -> EstimateHandle<E> {
+        EstimateHandle { lr }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.lr.rank()
+    }
+
+    pub fn low_rank(&self) -> &LowRank<E> {
+        &self.lr
+    }
+
+    pub fn into_low_rank(self) -> LowRank<E> {
+        self.lr
+    }
+
+    /// Borrow as the artifact bundle a [`Backward`] strategy consumes.
+    pub fn forward(&self) -> ForwardHandle<'_, E> {
+        ForwardHandle {
+            inv: Some(&self.lr),
+            low_rank: Some(&self.lr),
+        }
+    }
+}
+
+impl<E: Elem> InvOp<E> for EstimateHandle<E> {
+    fn dim(&self) -> usize {
+        InvOp::dim(&self.lr)
+    }
+    fn apply(&self, x: &[E], out: &mut [E]) {
+        self.lr.apply(x, out)
+    }
+    fn apply_t(&self, x: &[E], out: &mut [E]) {
+        self.lr.apply_t(x, out)
+    }
+    fn apply_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+        self.lr.apply_into(x, out, ws)
+    }
+    fn apply_t_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+        self.lr.apply_t_into(x, out, ws)
+    }
+    fn apply_multi(&self, xs: &[E], out: &mut [E]) {
+        self.lr.apply_multi(xs, out)
+    }
+    fn apply_t_multi(&self, xs: &[E], out: &mut [E]) {
+        self.lr.apply_t_multi(xs, out)
+    }
+    fn apply_multi_into(&self, xs: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+        self.lr.apply_multi_into(xs, out, ws)
+    }
+    fn apply_t_multi_into(&self, xs: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+        self.lr.apply_t_multi_into(xs, out, ws)
+    }
+}
+
+/// What one [`FixedPointSolver::solve`] produced.
+#[derive(Debug)]
+pub struct SolveOutcome<E: Elem = f64> {
+    /// The final iterate.
+    pub z: Vec<E>,
+    /// Final residual norm ‖g(z)‖.
+    pub residual: f64,
+    pub iters: usize,
+    pub converged: bool,
+    /// Residual evaluations spent (≠ iters when line search is active).
+    pub n_g_evals: usize,
+    /// Per-iteration residual/time telemetry (empty for methods that do not
+    /// record one).
+    pub trace: Trace,
+    /// The captured inverse-estimate handle — `Some` only for quasi-Newton
+    /// methods (Broyden). This is the SHINE hand-off.
+    pub estimate: Option<EstimateHandle<E>>,
+}
+
+impl<E: Elem> SolveOutcome<E> {
+    /// Lower to the legacy Broyden result struct (shim path). Panics if the
+    /// solve captured no estimate — only Broyden outcomes convert.
+    pub fn into_fp_result(self) -> FpResult<E> {
+        let est = self
+            .estimate
+            .expect("only quasi-Newton outcomes carry an estimate");
+        FpResult {
+            z: self.z,
+            g_norm: self.residual,
+            iters: self.iters,
+            converged: self.converged,
+            qn: crate::qn::broyden::BroydenInverse::from_low_rank(est.into_low_rank()),
+            trace: self.trace,
+            n_g_evals: self.n_g_evals,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FixedPointSolver trait + implementations
+// ---------------------------------------------------------------------------
+
+/// A built fixed-point solver. Stateful: Anderson keeps its per-column
+/// batch states across calls (the serving engine relies on this for its
+/// zero-allocation steady state), so methods take `&mut self`.
+pub trait FixedPointSolver<E: Elem> {
+    /// The spec this solver was built from.
+    fn spec(&self) -> &SolverSpec;
+
+    /// Solve g(z) = 0 from `z0`, drawing scratch from the session.
+    fn solve(
+        &mut self,
+        sess: &mut Session<E>,
+        g: &mut dyn FnMut(&[E], &mut [E]),
+        z0: &[E],
+    ) -> SolveOutcome<E>;
+
+    /// Solve B independent problems packed as a contiguous d × B
+    /// column-major block (`zs`, in: initial iterates, out: solutions in
+    /// submission order). The batched residual `g(block, ids, out)`
+    /// evaluates `ids.len()` active columns in one call; `ids[p]` names the
+    /// caller-side column at physical position `p` (compaction permutes).
+    /// Per-column outcomes land in `stats` (length ≥ B); each column's
+    /// trajectory is bit-identical to a sequential [`FixedPointSolver::solve`]
+    /// with the same spec.
+    fn solve_batch(
+        &mut self,
+        sess: &mut Session<E>,
+        g: &mut dyn FnMut(&[E], &[usize], &mut [E]),
+        zs: &mut [E],
+        d: usize,
+        stats: &mut [ColStats],
+    );
+
+    /// Pre-size internal per-column state for batches up to `max_cols`
+    /// columns of dimension `d` (so the first real batch allocates
+    /// nothing). Stateless methods ignore this.
+    fn prepare_batch(&mut self, _d: usize, _max_cols: usize, _sess: &mut Session<E>) {}
+
+    /// Return internal buffers to the session pools (one-shot users; a
+    /// long-lived solver just keeps them).
+    fn release(&mut self, _sess: &mut Session<E>) {}
+}
+
+/// Damped Picard iteration (stateless).
+pub struct PicardSolver {
+    spec: SolverSpec,
+}
+
+impl PicardSolver {
+    fn tau(&self) -> f64 {
+        match self.spec.method {
+            SolverMethod::Picard { tau } => tau,
+            _ => unreachable!("PicardSolver built from a Picard spec"),
+        }
+    }
+}
+
+impl<E: Elem> FixedPointSolver<E> for PicardSolver {
+    fn spec(&self) -> &SolverSpec {
+        &self.spec
+    }
+
+    fn solve(
+        &mut self,
+        _sess: &mut Session<E>,
+        g: &mut dyn FnMut(&[E], &mut [E]),
+        z0: &[E],
+    ) -> SolveOutcome<E> {
+        let (z, residual, iters) =
+            picard_core(g, z0, self.tau(), self.spec.tol, self.spec.max_iters);
+        SolveOutcome {
+            converged: residual <= self.spec.tol,
+            z,
+            residual,
+            iters,
+            n_g_evals: iters + 1,
+            trace: Trace::default(),
+            estimate: None,
+        }
+    }
+
+    fn solve_batch(
+        &mut self,
+        sess: &mut Session<E>,
+        g: &mut dyn FnMut(&[E], &[usize], &mut [E]),
+        zs: &mut [E],
+        d: usize,
+        stats: &mut [ColStats],
+    ) {
+        picard_batch_core(
+            g,
+            zs,
+            d,
+            self.tau(),
+            self.spec.tol,
+            self.spec.max_iters,
+            &mut sess.ws,
+            stats,
+        );
+    }
+}
+
+/// Anderson(m) acceleration. Holds the per-column batch state machine
+/// across calls so repeated batch solves through one solver are
+/// allocation-free (the serving steady state).
+pub struct AndersonSolver<E: Elem> {
+    spec: SolverSpec,
+    batch: Option<AndersonBatch<E>>,
+    batch_d: usize,
+}
+
+impl<E: Elem> AndersonSolver<E> {
+    fn params(&self) -> (usize, f64) {
+        match self.spec.method {
+            SolverMethod::Anderson { m, beta } => (m, beta),
+            _ => unreachable!("AndersonSolver built from an Anderson spec"),
+        }
+    }
+
+    fn ensure_batch(&mut self, d: usize, cols: usize, ws: &mut Workspace<E>) {
+        let rebuild = match &self.batch {
+            Some(b) => self.batch_d != d || b.max_cols() < cols,
+            None => true,
+        };
+        if rebuild {
+            if let Some(old) = self.batch.take() {
+                old.release(ws);
+            }
+            let (m, beta) = self.params();
+            self.batch = Some(AndersonBatch::new(d, m, beta, cols, ws));
+            self.batch_d = d;
+        }
+    }
+}
+
+impl<E: Elem> FixedPointSolver<E> for AndersonSolver<E> {
+    fn spec(&self) -> &SolverSpec {
+        &self.spec
+    }
+
+    fn solve(
+        &mut self,
+        sess: &mut Session<E>,
+        g: &mut dyn FnMut(&[E], &mut [E]),
+        z0: &[E],
+    ) -> SolveOutcome<E> {
+        let (m, beta) = self.params();
+        let (z, residual, iters) = anderson_core(
+            g,
+            z0,
+            m,
+            self.spec.tol,
+            self.spec.max_iters,
+            beta,
+            &mut sess.ws,
+        );
+        SolveOutcome {
+            converged: residual <= self.spec.tol,
+            z,
+            residual,
+            iters,
+            n_g_evals: iters + 1,
+            trace: Trace::default(),
+            estimate: None,
+        }
+    }
+
+    fn solve_batch(
+        &mut self,
+        sess: &mut Session<E>,
+        g: &mut dyn FnMut(&[E], &[usize], &mut [E]),
+        zs: &mut [E],
+        d: usize,
+        stats: &mut [ColStats],
+    ) {
+        if zs.is_empty() || d == 0 {
+            return;
+        }
+        let b = zs.len() / d;
+        self.ensure_batch(d, b, &mut sess.ws);
+        let batch = self.batch.as_mut().expect("batch state just ensured");
+        batch.solve(g, zs, self.spec.tol, self.spec.max_iters, &mut sess.ws, stats);
+    }
+
+    fn prepare_batch(&mut self, d: usize, max_cols: usize, sess: &mut Session<E>) {
+        self.ensure_batch(d, max_cols, &mut sess.ws);
+    }
+
+    fn release(&mut self, sess: &mut Session<E>) {
+        if let Some(b) = self.batch.take() {
+            b.release(&mut sess.ws);
+        }
+        self.batch_d = 0;
+    }
+}
+
+/// Broyden's method — the quasi-Newton forward whose outcome carries the
+/// SHINE estimate handle.
+pub struct BroydenSolver {
+    spec: SolverSpec,
+}
+
+impl<E: Elem> FixedPointSolver<E> for BroydenSolver {
+    fn spec(&self) -> &SolverSpec {
+        &self.spec
+    }
+
+    fn solve(
+        &mut self,
+        sess: &mut Session<E>,
+        g: &mut dyn FnMut(&[E], &mut [E]),
+        z0: &[E],
+    ) -> SolveOutcome<E> {
+        let opts = self.spec.fp_options();
+        let res = broyden_core(g, z0, &opts, &mut sess.ws);
+        SolveOutcome {
+            converged: res.converged,
+            z: res.z,
+            residual: res.g_norm,
+            iters: res.iters,
+            n_g_evals: res.n_g_evals,
+            trace: res.trace,
+            estimate: Some(EstimateHandle::new(res.qn.into_low_rank())),
+        }
+    }
+
+    /// Column-by-column solve: Broyden's per-column qN state does not batch
+    /// into shared sweeps, so the block is solved sequentially (each column
+    /// still bit-identical to a standalone solve). Prefer Picard/Anderson
+    /// specs for wide serving batches.
+    fn solve_batch(
+        &mut self,
+        sess: &mut Session<E>,
+        g: &mut dyn FnMut(&[E], &[usize], &mut [E]),
+        zs: &mut [E],
+        d: usize,
+        stats: &mut [ColStats],
+    ) {
+        if zs.is_empty() || d == 0 {
+            return;
+        }
+        debug_assert_eq!(zs.len() % d, 0);
+        let b = zs.len() / d;
+        debug_assert!(stats.len() >= b);
+        let opts = self.spec.fp_options();
+        for j in 0..b {
+            let ids = [j];
+            let mut g1 = |z: &[E], out: &mut [E]| g(z, &ids, out);
+            let res = broyden_core(&mut g1, &zs[j * d..(j + 1) * d], &opts, &mut sess.ws);
+            zs[j * d..(j + 1) * d].copy_from_slice(&res.z);
+            stats[j] = ColStats {
+                iters: res.iters,
+                residual: res.g_norm,
+                converged: res.converged,
+            };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backward trait + implementations
+// ---------------------------------------------------------------------------
+
+/// Borrowed view of what a forward solve hands the backward pass: the
+/// inverse-estimate operator and (when available) its low-rank factors for
+/// warm-starting the refine solver. Obtained from
+/// [`EstimateHandle::forward`], or assembled by hand for non-session
+/// forwards (the L-BFGS bi-level path).
+#[derive(Clone, Copy)]
+pub struct ForwardHandle<'a, E: Elem = f64> {
+    pub inv: Option<&'a dyn InvOp<E>>,
+    pub low_rank: Option<&'a LowRank<E>>,
+}
+
+impl<'a, E: Elem> ForwardHandle<'a, E> {
+    /// A handle with no estimate (Jacobian-free serving / testing).
+    pub fn none() -> ForwardHandle<'a, E> {
+        ForwardHandle {
+            inv: None,
+            low_rank: None,
+        }
+    }
+}
+
+/// What one backward strategy produced.
+#[derive(Debug)]
+pub struct BackwardOutcome<E: Elem = f64> {
+    /// The left-solve direction w ≈ J_g⁻ᵀ dz.
+    pub w: Vec<E>,
+    /// Matrix–vector / VJP products spent (the paper's backward-cost unit).
+    pub matvecs: usize,
+    /// Whether the §3 fallback guard fired.
+    pub fallback_used: bool,
+}
+
+/// A backward strategy: given the forward handle, the cotangent `dz` and a
+/// VJP oracle (for the iterative strategies), produce the left-solve
+/// direction `w ≈ J_g⁻ᵀ dz`. The SHINE strategies never call `vjp`; the
+/// Full/Refine strategies spend one VJP per iteration.
+///
+/// `warm` is the caller's warm start (HOAG restarts the inversion from the
+/// previous outer iteration's w, Appendix C); only [`FullBackward`] uses it.
+pub trait Backward<E: Elem> {
+    fn name(&self) -> &'static str;
+
+    fn direction(
+        &mut self,
+        sess: &mut Session<E>,
+        fwd: ForwardHandle<'_, E>,
+        dz: &[E],
+        vjp: &mut dyn FnMut(&[E], &mut [E]),
+        warm: Option<&[E]>,
+    ) -> BackwardOutcome<E>;
+}
+
+/// Config value naming a backward strategy (the CLI `--backward` /
+/// `--strategy` surface). Consumers lower it to trait objects with their
+/// own tolerance/memory conventions (`hypergrad::Strategy::from_spec`,
+/// `deq::trainer::BackwardKind::from_spec`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BackwardSpec {
+    JacobianFree,
+    Shine,
+    ShineFallback { ratio: f64 },
+    ShineRefine { iters: usize },
+    Full { tol: f64, max_iters: usize },
+}
+
+impl BackwardSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackwardSpec::JacobianFree => "jacobian-free",
+            BackwardSpec::Shine => "shine",
+            BackwardSpec::ShineFallback { .. } => "shine-fallback",
+            BackwardSpec::ShineRefine { .. } => "shine-refine",
+            BackwardSpec::Full { .. } => "full",
+        }
+    }
+
+    /// Parse a CLI-style spec: `jacobian-free`, `shine`,
+    /// `shine-fallback[:ratio]`, `shine-refine[:iters]`,
+    /// `full[:max_iters]`.
+    pub fn parse(s: &str) -> Result<BackwardSpec, String> {
+        let (head, args) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "jacobian-free" | "jf" => Ok(BackwardSpec::JacobianFree),
+            "shine" => Ok(BackwardSpec::Shine),
+            "shine-fallback" => {
+                let ratio = match args {
+                    Some(a) => a.parse::<f64>().map_err(|_| format!("bad ratio '{a}'"))?,
+                    None => 1.3, // the paper's ImageNet setting (§3.2)
+                };
+                Ok(BackwardSpec::ShineFallback { ratio })
+            }
+            "shine-refine" => {
+                let iters = match args {
+                    Some(a) => a.parse::<usize>().map_err(|_| format!("bad iters '{a}'"))?,
+                    None => 5,
+                };
+                Ok(BackwardSpec::ShineRefine { iters })
+            }
+            "full" => {
+                let max_iters = match args {
+                    Some(a) => a
+                        .parse::<usize>()
+                        .map_err(|_| format!("bad max_iters '{a}'"))?,
+                    None => usize::MAX,
+                };
+                Ok(BackwardSpec::Full {
+                    tol: 1e-8,
+                    max_iters,
+                })
+            }
+            other => Err(format!(
+                "unknown backward strategy '{other}' (jacobian-free | shine | \
+                 shine-fallback[:ratio] | shine-refine[:iters] | full[:max_iters])"
+            )),
+        }
+    }
+}
+
+/// Jacobian-Free (Fung et al. 2021): w = dz. Needs no estimate and no VJPs.
+pub struct JacobianFreeBackward;
+
+impl<E: Elem> Backward<E> for JacobianFreeBackward {
+    fn name(&self) -> &'static str {
+        "jacobian-free"
+    }
+    fn direction(
+        &mut self,
+        _sess: &mut Session<E>,
+        _fwd: ForwardHandle<'_, E>,
+        dz: &[E],
+        _vjp: &mut dyn FnMut(&[E], &mut [E]),
+        _warm: Option<&[E]>,
+    ) -> BackwardOutcome<E> {
+        BackwardOutcome {
+            w: dz.to_vec(),
+            matvecs: 0,
+            fallback_used: false,
+        }
+    }
+}
+
+/// SHINE: w = Hᵀ dz against the captured forward estimate — zero VJPs.
+pub struct ShineBackward;
+
+impl<E: Elem> Backward<E> for ShineBackward {
+    fn name(&self) -> &'static str {
+        "shine"
+    }
+    fn direction(
+        &mut self,
+        sess: &mut Session<E>,
+        fwd: ForwardHandle<'_, E>,
+        dz: &[E],
+        _vjp: &mut dyn FnMut(&[E], &mut [E]),
+        _warm: Option<&[E]>,
+    ) -> BackwardOutcome<E> {
+        let inv = fwd.inv.expect("SHINE requires a forward qN estimate");
+        let mut w = vec![E::ZERO; dz.len()];
+        inv.apply_t_into(dz, &mut w, &mut sess.ws);
+        BackwardOutcome {
+            w,
+            matvecs: 0,
+            fallback_used: false,
+        }
+    }
+}
+
+/// SHINE with the §3 fallback guard: revert to the Jacobian-Free direction
+/// when ‖Hᵀdz‖ > ratio·‖dz‖ — a blown-up panel answer is the telltale sign
+/// of a bad inversion.
+pub struct FallbackBackward {
+    pub ratio: f64,
+}
+
+impl<E: Elem> Backward<E> for FallbackBackward {
+    fn name(&self) -> &'static str {
+        "shine-fallback"
+    }
+    fn direction(
+        &mut self,
+        sess: &mut Session<E>,
+        fwd: ForwardHandle<'_, E>,
+        dz: &[E],
+        _vjp: &mut dyn FnMut(&[E], &mut [E]),
+        _warm: Option<&[E]>,
+    ) -> BackwardOutcome<E> {
+        let inv = fwd.inv.expect("SHINE requires a forward qN estimate");
+        let mut w = vec![E::ZERO; dz.len()];
+        inv.apply_t_into(dz, &mut w, &mut sess.ws);
+        let fallback_used = crate::linalg::vecops::nrm2(&w)
+            > self.ratio * crate::linalg::vecops::nrm2(dz);
+        if fallback_used {
+            w.clear();
+            w.extend_from_slice(dz);
+        }
+        BackwardOutcome {
+            w,
+            matvecs: 0,
+            fallback_used,
+        }
+    }
+}
+
+/// Where the refine solver starts from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RefineSeed {
+    /// Warm start at the SHINE direction (and, when the low-rank factors
+    /// are in the handle, seed the backward qN matrix with Hᵀ).
+    Estimate,
+    /// Warm start at the Jacobian-Free direction (Fig. 3's "JF refine").
+    Identity,
+}
+
+/// k extra iterative-inversion steps warm-started per [`RefineSeed`].
+/// `symmetric` problems run CG on the oracle (J = Jᵀ), others Broyden on
+/// VJPs; `max_mem` is the backward qN memory cap (consumers keep their
+/// historical conventions).
+pub struct RefineBackward {
+    pub iters: usize,
+    pub tol: f64,
+    pub max_mem: usize,
+    pub seed: RefineSeed,
+    pub symmetric: bool,
+}
+
+impl<E: Elem> Backward<E> for RefineBackward {
+    fn name(&self) -> &'static str {
+        match self.seed {
+            RefineSeed::Estimate => "shine-refine",
+            RefineSeed::Identity => "jf-refine",
+        }
+    }
+    fn direction(
+        &mut self,
+        sess: &mut Session<E>,
+        fwd: ForwardHandle<'_, E>,
+        dz: &[E],
+        vjp: &mut dyn FnMut(&[E], &mut [E]),
+        _warm: Option<&[E]>,
+    ) -> BackwardOutcome<E> {
+        let (w0, h_init): (Vec<E>, Option<LowRank<E>>) = match self.seed {
+            RefineSeed::Estimate => {
+                let inv = fwd.inv.expect("refine requires a forward qN estimate");
+                // O(1) panel swap on a clone: the forward estimate stays
+                // intact while the backward solver grows its transposed
+                // copy. The symmetric (CG) branch never seeds a qN matrix,
+                // so skip the panel copy there.
+                let h = if self.symmetric {
+                    None
+                } else {
+                    fwd.low_rank.map(|lr| {
+                        lr.clone()
+                            .into_transposed()
+                            .with_max_mem(self.max_mem, MemoryPolicy::Freeze)
+                    })
+                };
+                (inv.apply_t_vec(dz), h)
+            }
+            RefineSeed::Identity => (dz.to_vec(), None),
+        };
+        if self.symmetric {
+            let res = cg_solve(vjp, dz, Some(&w0), self.tol, self.iters);
+            BackwardOutcome {
+                w: res.x,
+                matvecs: res.n_matvecs,
+                fallback_used: false,
+            }
+        } else {
+            let res = broyden_solve_left_ws(
+                vjp,
+                dz,
+                Some(&w0),
+                h_init,
+                self.tol,
+                self.iters,
+                self.max_mem,
+                &mut sess.ws,
+            );
+            BackwardOutcome {
+                w: res.x,
+                matvecs: res.n_matvecs,
+                fallback_used: false,
+            }
+        }
+    }
+}
+
+/// The Original / HOAG baseline: iterative inversion of `Jᵀ w = dz` to
+/// tolerance (truncated by `max_iters` — the "limited backward" baseline of
+/// Fig. E.1). The only strategy that honors the caller's warm start.
+pub struct FullBackward {
+    pub tol: f64,
+    pub max_iters: usize,
+    pub max_mem: usize,
+    pub symmetric: bool,
+}
+
+impl<E: Elem> Backward<E> for FullBackward {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+    fn direction(
+        &mut self,
+        sess: &mut Session<E>,
+        _fwd: ForwardHandle<'_, E>,
+        dz: &[E],
+        vjp: &mut dyn FnMut(&[E], &mut [E]),
+        warm: Option<&[E]>,
+    ) -> BackwardOutcome<E> {
+        if self.symmetric {
+            let res = cg_solve(vjp, dz, warm, self.tol, self.max_iters);
+            BackwardOutcome {
+                w: res.x,
+                matvecs: res.n_matvecs,
+                fallback_used: false,
+            }
+        } else {
+            let res = broyden_solve_left_ws(
+                vjp,
+                dz,
+                warm,
+                None,
+                self.tol,
+                self.max_iters,
+                self.max_mem,
+                &mut sess.ws,
+            );
+            BackwardOutcome {
+                w: res.x,
+                matvecs: res.n_matvecs,
+                fallback_used: false,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::nrm2;
+    use crate::util::rng::Rng;
+
+    fn contractive(d: usize, seed: u64) -> (impl Fn(&[f64], &mut [f64]), Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let b = rng.normal_vec(d);
+        let g = move |z: &[f64], out: &mut [f64]| {
+            for i in 0..d {
+                out[i] = z[i] - 0.3 * z[(i + 1) % d] - b[i];
+            }
+        };
+        let b2 = {
+            let mut rng = Rng::new(seed);
+            rng.normal_vec(d)
+        };
+        (g, b2)
+    }
+
+    #[test]
+    fn spec_parse_roundtrips() {
+        assert_eq!(
+            SolverSpec::parse("picard").unwrap().method,
+            SolverMethod::Picard { tau: 1.0 }
+        );
+        assert_eq!(
+            SolverSpec::parse("picard:0.5").unwrap().method,
+            SolverMethod::Picard { tau: 0.5 }
+        );
+        assert_eq!(
+            SolverSpec::parse("anderson:4,0.9").unwrap().method,
+            SolverMethod::Anderson { m: 4, beta: 0.9 }
+        );
+        assert!(matches!(
+            SolverSpec::parse("broyden:12").unwrap().method,
+            SolverMethod::Broyden { memory: 12, .. }
+        ));
+        assert!(SolverSpec::parse("nope").is_err());
+        assert_eq!(
+            BackwardSpec::parse("shine-fallback:2.0").unwrap(),
+            BackwardSpec::ShineFallback { ratio: 2.0 }
+        );
+        assert_eq!(
+            BackwardSpec::parse("shine-refine").unwrap(),
+            BackwardSpec::ShineRefine { iters: 5 }
+        );
+        assert!(BackwardSpec::parse("wat").is_err());
+    }
+
+    #[test]
+    fn built_solvers_converge_and_only_broyden_captures_estimate() {
+        let d = 12;
+        let (g, _) = contractive(d, 3);
+        let mut sess: Session<f64> = Session::new();
+        for (name, spec) in [
+            ("picard", SolverSpec::picard(1.0).with_tol(1e-10)),
+            ("anderson", SolverSpec::anderson(4, 1.0).with_tol(1e-10)),
+            ("broyden", SolverSpec::broyden(10).with_tol(1e-10)),
+        ] {
+            let mut solver = spec.build::<f64>();
+            let mut gm = |z: &[f64], out: &mut [f64]| g(z, out);
+            let out = solver.solve(&mut sess, &mut gm, &vec![0.0; d]);
+            assert!(out.converged, "{name} converged, residual {}", out.residual);
+            assert_eq!(
+                out.estimate.is_some(),
+                name == "broyden",
+                "{name} estimate presence"
+            );
+        }
+    }
+
+    #[test]
+    fn broyden_batch_is_columnwise_sequential() {
+        let d = 8;
+        let nb = 3;
+        let mut rng = Rng::new(11);
+        let bs: Vec<Vec<f64>> = (0..nb).map(|_| rng.normal_vec(d)).collect();
+        let spec = SolverSpec::broyden(8).with_tol(1e-10).with_max_iters(100);
+        let mut solver = spec.build::<f64>();
+        let mut sess: Session<f64> = Session::new();
+        let mut zs = vec![0.0; nb * d];
+        let mut stats = vec![ColStats::default(); nb];
+        let mut g = |block: &[f64], ids: &[usize], out: &mut [f64]| {
+            for (p, &id) in ids.iter().enumerate() {
+                for i in 0..d {
+                    out[p * d + i] =
+                        block[p * d + i] - 0.25 * block[p * d + (i + 1) % d] - bs[id][i];
+                }
+            }
+        };
+        solver.solve_batch(&mut sess, &mut g, &mut zs, d, &mut stats);
+        for j in 0..nb {
+            assert!(stats[j].converged, "col {j}");
+            let mut g1 = |z: &[f64], out: &mut [f64]| {
+                for i in 0..d {
+                    out[i] = z[i] - 0.25 * z[(i + 1) % d] - bs[j][i];
+                }
+            };
+            let mut s2 = spec.build::<f64>();
+            let single = s2.solve(&mut sess, &mut g1, &vec![0.0; d]);
+            assert_eq!(&zs[j * d..(j + 1) * d], &single.z[..], "col {j} bits");
+            assert_eq!(stats[j].iters, single.iters, "col {j} iters");
+        }
+    }
+
+    #[test]
+    fn shine_backward_applies_transposed_estimate() {
+        let d = 10;
+        let (g, _) = contractive(d, 7);
+        let mut sess: Session<f64> = Session::new();
+        let mut solver = SolverSpec::broyden(10).with_tol(1e-11).build::<f64>();
+        let mut gm = |z: &[f64], out: &mut [f64]| g(z, out);
+        let out = solver.solve(&mut sess, &mut gm, &vec![0.0; d]);
+        let est = out.estimate.expect("broyden estimate");
+        let mut rng = Rng::new(5);
+        let dz = rng.normal_vec(d);
+        let mut novjp = |_: &[f64], _: &mut [f64]| panic!("SHINE must not call vjp");
+        let bw = ShineBackward
+            .direction(&mut sess, est.forward(), &dz, &mut novjp, None);
+        assert_eq!(bw.matvecs, 0);
+        assert_eq!(bw.w, est.low_rank().apply_t_vec(&dz));
+        // Jacobian-free ignores the estimate entirely.
+        let jf =
+            JacobianFreeBackward.direction(&mut sess, ForwardHandle::none(), &dz, &mut novjp, None);
+        assert_eq!(jf.w, dz);
+    }
+
+    #[test]
+    fn fallback_guard_trips_on_blown_estimate() {
+        let d = 6;
+        let mut sess: Session<f64> = Session::new();
+        // H = I + 100·e0 e0ᵀ blows up any cotangent with mass on coord 0.
+        let mut lr = LowRank::identity(d, 2, MemoryPolicy::Evict);
+        let mut e0 = vec![0.0; d];
+        e0[0] = 1.0;
+        let u: Vec<f64> = e0.iter().map(|x| 100.0 * x).collect();
+        lr.push(&u, &e0);
+        let mut dz = vec![0.0; d];
+        dz[0] = 1.0;
+        let fwd = ForwardHandle {
+            inv: Some(&lr),
+            low_rank: Some(&lr),
+        };
+        let mut novjp = |_: &[f64], _: &mut [f64]| {};
+        let mut guard = FallbackBackward { ratio: 1.5 };
+        let out = guard.direction(&mut sess, fwd, &dz, &mut novjp, None);
+        assert!(out.fallback_used);
+        assert_eq!(out.w, dz);
+        // An orthogonal cotangent passes through untouched.
+        let mut dz2 = vec![0.0; d];
+        dz2[1] = 1.0;
+        let out2 = guard.direction(&mut sess, fwd, &dz2, &mut novjp, None);
+        assert!(!out2.fallback_used);
+        assert!(nrm2(&out2.w) > 0.0);
+    }
+
+    #[test]
+    fn anderson_solver_batch_state_persists_and_releases() {
+        let d = 9;
+        let nb = 3;
+        let spec = SolverSpec::anderson(3, 1.0).with_tol(1e-9).with_max_iters(150);
+        let mut solver = spec.build::<f64>();
+        let mut sess: Session<f64> = Session::new();
+        solver.prepare_batch(d, nb, &mut sess);
+        let mut rng = Rng::new(77);
+        let bs: Vec<Vec<f64>> = (0..nb).map(|_| rng.normal_vec(d)).collect();
+        let mut g = |block: &[f64], ids: &[usize], out: &mut [f64]| {
+            for (p, &id) in ids.iter().enumerate() {
+                for i in 0..d {
+                    out[p * d + i] =
+                        block[p * d + i] - 0.3 * block[p * d + (i + 1) % d] - bs[id][i];
+                }
+            }
+        };
+        let mut stats = vec![ColStats::default(); nb];
+        let mut zs1 = vec![0.0; nb * d];
+        solver.solve_batch(&mut sess, &mut g, &mut zs1, d, &mut stats);
+        let iters1: Vec<usize> = stats.iter().map(|s| s.iters).collect();
+        // Second batch through the SAME solver reproduces the first.
+        let mut zs2 = vec![0.0; nb * d];
+        solver.solve_batch(&mut sess, &mut g, &mut zs2, d, &mut stats);
+        assert_eq!(zs1, zs2);
+        assert_eq!(iters1, stats.iter().map(|s| s.iters).collect::<Vec<_>>());
+        solver.release(&mut sess);
+    }
+}

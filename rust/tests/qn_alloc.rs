@@ -19,8 +19,9 @@ use shine::linalg::vecops::Elem;
 use shine::qn::broyden::BroydenInverse;
 use shine::qn::workspace::Workspace;
 use shine::qn::{InvOp, LowRank, MemoryPolicy};
-use shine::serve::{EngineConfig, ForwardSolver, ServeEngine};
+use shine::serve::{EngineConfig, ServeEngine};
 use shine::solvers::fixed_point::{anderson_solve_ws, broyden_solve_ws, ColStats, FpOptions};
+use shine::solvers::session::SolverSpec;
 
 struct CountingAlloc;
 
@@ -202,15 +203,15 @@ fn qn_hot_loops_do_not_allocate() {
     // cotangent — performs zero heap allocations per batch once the engine
     // is warm. Sizes stay below every thread threshold (scoped spawns
     // allocate) and tol = -1.0 pins the iteration count.
-    serving_batch_is_allocation_free(ForwardSolver::Picard { tau: 1.0 }, "picard");
-    serving_batch_is_allocation_free(ForwardSolver::Anderson { m: 4, beta: 1.0 }, "anderson");
+    serving_batch_is_allocation_free(SolverSpec::picard(1.0), "picard");
+    serving_batch_is_allocation_free(SolverSpec::anderson(4, 1.0), "anderson");
 }
 
 /// Build a small f32 serving engine, warm it with two batches, then assert
 /// the third batch allocates nothing: forward block solve, retirement
 /// bookkeeping (idx pool), the shared-estimate multi-RHS backward and the
 /// fallback-guard scan all run out of the engine's pools.
-fn serving_batch_is_allocation_free(solver: ForwardSolver, name: &str) {
+fn serving_batch_is_allocation_free(solver: SolverSpec, name: &str) {
     let d = 48usize;
     let bsz = 4usize;
     let bias: Vec<f32> = (0..d).map(|i| ((i as f32) * 0.13).cos() * 0.1).collect();
@@ -227,12 +228,11 @@ fn serving_batch_is_allocation_free(solver: ForwardSolver, name: &str) {
         d,
         EngineConfig {
             max_batch: bsz,
-            tol: -1.0, // unreachable: every column runs the full budget
-            max_iters: 12,
-            solver,
-            calib_memory: 4,
-            calib_max_iters: 6,
+            // tol -1.0 is unreachable: every column runs the full budget.
+            solver: solver.with_tol(-1.0).with_max_iters(12),
+            calib: SolverSpec::broyden(4).with_tol(-1.0).with_max_iters(6),
             fallback_ratio: Some(1e30), // guard scan runs, never triggers
+            recalib: None,
         },
     );
     eng.calibrate(

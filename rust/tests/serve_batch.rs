@@ -11,10 +11,11 @@
 use shine::linalg::vecops::Elem;
 use shine::qn::workspace::Workspace;
 use shine::qn::InvOp;
-use shine::serve::{EngineConfig, ForwardSolver, ServeEngine, SynthDeq};
+use shine::serve::{EngineConfig, ServeEngine, SynthDeq};
 use shine::solvers::fixed_point::{
     anderson_solve_batch, anderson_solve_ws, picard_solve, picard_solve_batch, ColStats,
 };
+use shine::solvers::session::SolverSpec;
 use shine::util::rng::Rng;
 
 /// Per-column linear contractive map with per-column factor and shift:
@@ -267,12 +268,10 @@ fn serving_pipeline_matches_per_request_reference() {
         d,
         EngineConfig {
             max_batch: b,
-            tol: 1e-5,
-            max_iters: 200,
-            solver: ForwardSolver::Picard { tau: 1.0 },
-            calib_memory: 20,
-            calib_max_iters: 40,
+            solver: SolverSpec::picard(1.0).with_tol(1e-5).with_max_iters(200),
+            calib: SolverSpec::broyden(20).with_tol(1e-5).with_max_iters(40),
             fallback_ratio: None,
+            recalib: None,
         },
     );
     engine.calibrate(

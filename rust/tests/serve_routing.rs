@@ -1,0 +1,216 @@
+//! Multi-model routing invariants (ISSUE 5 satellite):
+//!
+//! 1. interleaved requests for ≥2 [`ModelKey`]s through ONE
+//!    [`KeyedScheduler`] are never cross-batched — every released batch is
+//!    single-key and each key's answers match its own model's sequential
+//!    reference;
+//! 2. a parameter-version bump invalidates only that key's cached
+//!    calibration estimate (the other model's estimate survives bit-for-bit);
+//! 3. the trip-rate re-calibration policy evicts and re-captures a stale
+//!    estimate through the [`Router`] while serving continues.
+
+use shine::qn::InvOp;
+use shine::serve::{
+    run_routed_closed_loop, EngineConfig, KeyedScheduler, ModelKey, RecalibPolicy,
+    RoutedLoadConfig, Router, Scheduler, SchedulerConfig, SynthDeq,
+};
+use shine::solvers::fixed_point::{picard_solve, ColStats};
+use shine::solvers::session::SolverSpec;
+use shine::util::rng::Rng;
+
+fn cfg(max_batch: usize, tol: f64) -> EngineConfig {
+    EngineConfig {
+        max_batch,
+        solver: SolverSpec::picard(1.0).with_tol(tol).with_max_iters(200),
+        calib: SolverSpec::broyden(20).with_tol(tol).with_max_iters(40),
+        fallback_ratio: None,
+        recalib: None,
+    }
+}
+
+#[test]
+fn interleaved_keys_never_cross_batch() {
+    // Two models with different parameters behind one keyed scheduler.
+    // Requests arrive interleaved A,B,A,B,…; every drained batch must be
+    // single-key, and each served answer must equal the sequential solve
+    // against THAT key's model (a cross-batched request would converge to
+    // the wrong model's fixed point).
+    let d = 40;
+    let tol = 1e-5;
+    let ka = ModelKey::new(0, 0);
+    let kb = ModelKey::new(1, 0);
+    let model_a: SynthDeq<f32> = SynthDeq::new(d, 8, 100);
+    let model_b: SynthDeq<f32> = SynthDeq::new(d, 8, 200);
+    let mut router: Router<f32> = Router::new(cfg(4, tol));
+    router.register(ka, Box::new(SynthDeq::<f32>::new(d, 8, 100)));
+    router.register(kb, Box::new(SynthDeq::<f32>::new(d, 8, 200)));
+
+    let mut sched: KeyedScheduler<u32> = KeyedScheduler::new(SchedulerConfig {
+        max_batch: 4,
+        max_wait: 0.0, // release whatever the oldest key has queued
+        queue_cap: 64,
+    });
+    let total = 14u32;
+    for i in 0..total {
+        let key = if i % 2 == 0 { ka } else { kb };
+        sched.push(i as f64 * 0.01, key, i).unwrap();
+    }
+    // Per-model sequential references (all requests start from z0 = 0, so
+    // each model has ONE reference fixed point).
+    let reference = |m: &SynthDeq<f32>| {
+        picard_solve(
+            |z: &[f32], out: &mut [f32]| m.residual_batch(z, 1, out),
+            &vec![0.0f32; d],
+            1.0,
+            tol,
+            200,
+        )
+        .0
+    };
+    let ref_a = reference(&model_a);
+    let ref_b = reference(&model_b);
+    assert!(ref_a != ref_b, "distinct models must have distinct fixed points");
+
+    let mut served = 0u32;
+    let mut items: Vec<(f64, u32)> = Vec::new();
+    while served < total {
+        let (key, n) = sched.ready(1e9).expect("work outstanding");
+        items.clear();
+        sched.drain_key(key, n, 1e9, &mut items);
+        assert!(!items.is_empty());
+        // The batch is single-key by construction of drain_key; check the
+        // payload parity (we enqueued evens on A, odds on B).
+        for &(_, payload) in &items {
+            assert_eq!(
+                payload % 2 == 0,
+                key == ka,
+                "request {payload} routed into a {key} batch"
+            );
+        }
+        let b = items.len();
+        let mut zs = vec![0.0f32; b * d];
+        let cots = vec![0.0f32; b * d];
+        let mut w = vec![0.0f32; b * d];
+        let mut stats = vec![ColStats::default(); b];
+        let rep = router.process(key, &mut zs, &cots, &mut w, &mut stats).unwrap();
+        assert!(rep.all_converged);
+        let want = if key == ka { &ref_a } else { &ref_b };
+        for j in 0..b {
+            assert!(
+                zs[j * d..(j + 1) * d] == want[..],
+                "batch for {key} solved against the wrong model"
+            );
+        }
+        served += b as u32;
+    }
+    assert_eq!(served, total);
+}
+
+#[test]
+fn version_bump_invalidates_only_that_key() {
+    let d = 36;
+    let mut router: Router<f64> = Router::new(cfg(4, 1e-7));
+    let m0v0 = ModelKey::new(0, 0);
+    let m1v0 = ModelKey::new(1, 0);
+    router.register(m0v0, Box::new(SynthDeq::<f64>::new(d, 6, 11)));
+    router.register(m1v0, Box::new(SynthDeq::<f64>::new(d, 6, 22)));
+    let mut rng = Rng::new(4);
+    let probe = rng.normal_vec(d);
+    let m1_before = router
+        .engine(m1v0)
+        .unwrap()
+        .estimate()
+        .unwrap()
+        .apply_t_vec(&probe);
+    let m0_before = router
+        .engine(m0v0)
+        .unwrap()
+        .estimate()
+        .unwrap()
+        .apply_t_vec(&probe);
+
+    // Roll model 0 to version 1 (new parameters → new key).
+    let m0v1 = ModelKey::new(0, 1);
+    router.register(m0v1, Box::new(SynthDeq::<f64>::new(d, 6, 33)));
+
+    // Exactly (0,0) was evicted; (0,1) has a FRESH estimate; (1,0) kept its
+    // cached estimate bit-for-bit.
+    assert!(router.engine(m0v0).is_none(), "old version must be evicted");
+    let m0_after = router
+        .engine(m0v1)
+        .unwrap()
+        .estimate()
+        .unwrap()
+        .apply_t_vec(&probe);
+    assert!(m0_after != m0_before, "new version must re-calibrate");
+    let m1_after = router
+        .engine(m1v0)
+        .unwrap()
+        .estimate()
+        .unwrap()
+        .apply_t_vec(&probe);
+    assert_eq!(m1_before, m1_after, "unrelated key's cache must survive");
+    assert_eq!(router.keys(), vec![m1v0, m0v1]);
+}
+
+#[test]
+fn routed_closed_loop_with_recalibration_policy() {
+    // End-to-end routed serving with an aggressive staleness policy: a
+    // pathological fallback ratio trips the guard on every cotangent, so
+    // the router must evict + re-calibrate mid-run and still serve every
+    // request to convergence.
+    let d = 32;
+    let mut config = cfg(3, 1e-4);
+    config.fallback_ratio = Some(1e-6); // everything "blows up" → trips
+    config.recalib = Some(RecalibPolicy {
+        trip_rate: 0.5,
+        min_cols: 4,
+    });
+    let mut router: Router<f32> = Router::new(config);
+    let ka = ModelKey::new(0, 0);
+    let kb = ModelKey::new(1, 0);
+    router.register(ka, Box::new(SynthDeq::<f32>::new(d, 8, 7)));
+    router.register(kb, Box::new(SynthDeq::<f32>::new(d, 8, 8)));
+    let lc = RoutedLoadConfig {
+        clients_per_model: 3,
+        total: 24,
+        max_batch: 3,
+        max_wait: 1e-4,
+    };
+    let rep = run_routed_closed_loop(&mut router, &[ka, kb], &lc, 3);
+    assert_eq!(rep.requests, 24);
+    assert!(rep.all_converged);
+    assert!(
+        rep.recalibrations > 0,
+        "the trip-rate policy must have re-calibrated at least once"
+    );
+    // Re-calibration restores a live estimate per key.
+    assert!(router.engine(ka).unwrap().estimate().is_some());
+    assert!(router.engine(kb).unwrap().estimate().is_some());
+    assert!(router.engine(ka).unwrap().calibrations() >= 2 || router.engine(kb).unwrap().calibrations() >= 2);
+}
+
+#[test]
+fn single_key_scheduler_matches_plain_scheduler_policy() {
+    // With one key, the keyed scheduler's policy must agree with the plain
+    // Scheduler on the same arrival trace (routing degenerates cleanly).
+    let k = ModelKey::new(0, 0);
+    let sc = SchedulerConfig {
+        max_batch: 3,
+        max_wait: 0.5,
+        queue_cap: 16,
+    };
+    let mut plain: Scheduler<u32> = Scheduler::new(sc);
+    let mut keyed: KeyedScheduler<u32> = KeyedScheduler::new(sc);
+    let arrivals = [(0.0, 1u32), (0.1, 2), (0.2, 3), (0.25, 4)];
+    for &(t, p) in &arrivals {
+        plain.push(t, p).unwrap();
+        keyed.push(t, k, p).unwrap();
+    }
+    for now in [0.2, 0.3, 0.6, 1.0] {
+        let plain_n = plain.ready(now);
+        let keyed_n = keyed.ready(now).map(|(_, n)| n).unwrap_or(0);
+        assert_eq!(plain_n, keyed_n, "policy divergence at t={now}");
+    }
+    assert_eq!(plain.next_deadline(), keyed.next_deadline());
+}

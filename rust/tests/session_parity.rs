@@ -1,0 +1,223 @@
+//! Shim-layer parity (ISSUE 5 satellite): the legacy free-function entry
+//! points (`broyden_solve_ws`, `anderson_solve_ws`, `picard_solve_batch`,
+//! `anderson_solve_batch`) must produce **bit-identical** iterates,
+//! residuals and iteration counts to the session API they now delegate to
+//! (`SolverSpec::build()` → `FixedPointSolver::solve`/`solve_batch`), in
+//! both storage precisions. The shims share the iteration cores with the
+//! trait implementations, so any drift between the two surfaces is a real
+//! regression in the delegation plumbing — exactly what this pins.
+
+use shine::linalg::vecops::Elem;
+use shine::qn::workspace::Workspace;
+use shine::qn::InvOp;
+use shine::solvers::fixed_point::{
+    anderson_solve_batch, anderson_solve_ws, broyden_solve_ws, picard_solve_batch, ColStats,
+    FpOptions,
+};
+use shine::solvers::session::{Session, SolverSpec};
+use shine::util::rng::Rng;
+
+/// Per-column linear contractive map g(z)[i] = z[i] − c·z[(i+1) mod d] − b[i].
+fn col_g<E: Elem>(c: f64, b: &[E], z: &[E], out: &mut [E]) {
+    let d = z.len();
+    for i in 0..d {
+        out[i] = E::from_f64(z[i].to_f64() - c * z[(i + 1) % d].to_f64() - b[i].to_f64());
+    }
+}
+
+fn problem<E: Elem>(d: usize, seed: u64) -> (Vec<E>, Vec<E>) {
+    let mut rng = Rng::new(seed);
+    let b = (0..d).map(|_| E::from_f64(rng.normal())).collect();
+    let z0 = (0..d).map(|_| E::from_f64(rng.normal() * 0.5)).collect();
+    (b, z0)
+}
+
+fn broyden_shim_parity<E: Elem>(seed: u64, tol: f64) {
+    let d = 18;
+    let (b, z0) = problem::<E>(d, seed);
+    let opts = FpOptions {
+        tol,
+        max_iters: 80,
+        memory: 10,
+        ..Default::default()
+    };
+    let mut ws: Workspace<E> = Workspace::new();
+    let shim = broyden_solve_ws(
+        |z: &[E], out: &mut [E]| col_g(0.3, &b, z, out),
+        &z0,
+        &opts,
+        &mut ws,
+    );
+    let spec = SolverSpec::from_fp_options(&opts);
+    let mut solver = spec.build::<E>();
+    let mut sess: Session<E> = Session::new();
+    let mut g = |z: &[E], out: &mut [E]| col_g(0.3, &b, z, out);
+    let api = solver.solve(&mut sess, &mut g, &z0);
+    assert!(shim.z == api.z, "iterate bits");
+    assert_eq!(shim.iters, api.iters, "iteration count");
+    assert_eq!(shim.g_norm, api.residual, "residual bits");
+    assert_eq!(shim.converged, api.converged);
+    assert_eq!(shim.n_g_evals, api.n_g_evals);
+    // The shim's reconstructed qN operator and the API's estimate handle
+    // are the same operator, bit for bit.
+    let mut rng = Rng::new(seed ^ 0xE5);
+    let x: Vec<E> = (0..d).map(|_| E::from_f64(rng.normal())).collect();
+    let est = api.estimate.expect("broyden captures an estimate");
+    assert!(shim.qn.apply_t_vec(&x) == est.low_rank().apply_t_vec(&x), "estimate bits");
+}
+
+fn anderson_shim_parity<E: Elem>(seed: u64, tol: f64) {
+    let d = 14;
+    let m = 4;
+    let (b, z0) = problem::<E>(d, seed);
+    let mut ws: Workspace<E> = Workspace::new();
+    let (z_shim, rn_shim, it_shim) = anderson_solve_ws(
+        |z: &[E], out: &mut [E]| col_g(0.25, &b, z, out),
+        &z0,
+        m,
+        tol,
+        150,
+        1.0,
+        &mut ws,
+    );
+    let spec = SolverSpec::anderson(m, 1.0).with_tol(tol).with_max_iters(150);
+    let mut solver = spec.build::<E>();
+    let mut sess: Session<E> = Session::new();
+    let mut g = |z: &[E], out: &mut [E]| col_g(0.25, &b, z, out);
+    let api = solver.solve(&mut sess, &mut g, &z0);
+    assert!(z_shim == api.z, "iterate bits");
+    assert_eq!(it_shim, api.iters, "iteration count");
+    assert_eq!(rn_shim, api.residual, "residual bits");
+}
+
+fn batch_problem<E: Elem>(d: usize, nb: usize, seed: u64) -> (Vec<f64>, Vec<Vec<E>>, Vec<E>) {
+    let mut rng = Rng::new(seed);
+    let cs = (0..nb).map(|j| 0.15 + 0.35 * j as f64 / nb as f64).collect();
+    let bs: Vec<Vec<E>> = (0..nb)
+        .map(|_| (0..d).map(|_| E::from_f64(rng.normal())).collect())
+        .collect();
+    let zs = (0..nb * d).map(|_| E::from_f64(rng.normal() * 0.5)).collect();
+    (cs, bs, zs)
+}
+
+fn picard_batch_shim_parity<E: Elem>(seed: u64, tol: f64) {
+    let d = 16;
+    let nb = 5;
+    let (cs, bs, zs0) = batch_problem::<E>(d, nb, seed);
+    let g = |block: &[E], ids: &[usize], out: &mut [E]| {
+        for (p, &id) in ids.iter().enumerate() {
+            col_g(
+                cs[id],
+                &bs[id],
+                &block[p * d..(p + 1) * d],
+                &mut out[p * d..(p + 1) * d],
+            );
+        }
+    };
+    let mut zs_shim = zs0.clone();
+    let mut stats_shim = vec![ColStats::default(); nb];
+    let mut ws: Workspace<E> = Workspace::new();
+    picard_solve_batch(g, &mut zs_shim, d, 1.0, tol, 300, &mut ws, &mut stats_shim);
+    let spec = SolverSpec::picard(1.0).with_tol(tol).with_max_iters(300);
+    let mut solver = spec.build::<E>();
+    let mut sess: Session<E> = Session::new();
+    let mut zs_api = zs0;
+    let mut stats_api = vec![ColStats::default(); nb];
+    let mut g2 = |block: &[E], ids: &[usize], out: &mut [E]| g(block, ids, out);
+    solver.solve_batch(&mut sess, &mut g2, &mut zs_api, d, &mut stats_api);
+    assert!(zs_shim == zs_api, "block bits");
+    for j in 0..nb {
+        assert_eq!(stats_shim[j].iters, stats_api[j].iters, "col {j} iters");
+        assert_eq!(stats_shim[j].residual, stats_api[j].residual, "col {j} residual");
+        assert_eq!(stats_shim[j].converged, stats_api[j].converged, "col {j}");
+    }
+}
+
+fn anderson_batch_shim_parity<E: Elem>(seed: u64, tol: f64) {
+    let d = 12;
+    let nb = 4;
+    let m = 3;
+    let (cs, bs, zs0) = batch_problem::<E>(d, nb, seed);
+    let g = |block: &[E], ids: &[usize], out: &mut [E]| {
+        for (p, &id) in ids.iter().enumerate() {
+            col_g(
+                cs[id],
+                &bs[id],
+                &block[p * d..(p + 1) * d],
+                &mut out[p * d..(p + 1) * d],
+            );
+        }
+    };
+    let mut zs_shim = zs0.clone();
+    let mut stats_shim = vec![ColStats::default(); nb];
+    let mut ws: Workspace<E> = Workspace::new();
+    anderson_solve_batch(g, &mut zs_shim, d, m, 1.0, tol, 200, &mut ws, &mut stats_shim);
+    let spec = SolverSpec::anderson(m, 1.0).with_tol(tol).with_max_iters(200);
+    let mut solver = spec.build::<E>();
+    let mut sess: Session<E> = Session::new();
+    let mut zs_api = zs0;
+    let mut stats_api = vec![ColStats::default(); nb];
+    let mut g2 = |block: &[E], ids: &[usize], out: &mut [E]| g(block, ids, out);
+    solver.solve_batch(&mut sess, &mut g2, &mut zs_api, d, &mut stats_api);
+    assert!(zs_shim == zs_api, "block bits");
+    for j in 0..nb {
+        assert_eq!(stats_shim[j].iters, stats_api[j].iters, "col {j} iters");
+        assert_eq!(stats_shim[j].residual, stats_api[j].residual, "col {j} residual");
+    }
+}
+
+#[test]
+fn broyden_shim_parity_f64() {
+    for seed in [1u64, 2, 3] {
+        broyden_shim_parity::<f64>(seed, 1e-9);
+    }
+}
+
+#[test]
+fn broyden_shim_parity_f32() {
+    for seed in [4u64, 5, 6] {
+        broyden_shim_parity::<f32>(seed, 1e-4);
+    }
+}
+
+#[test]
+fn anderson_shim_parity_f64() {
+    for seed in [7u64, 8, 9] {
+        anderson_shim_parity::<f64>(seed, 1e-8);
+    }
+}
+
+#[test]
+fn anderson_shim_parity_f32() {
+    for seed in [10u64, 11, 12] {
+        anderson_shim_parity::<f32>(seed, 1e-4);
+    }
+}
+
+#[test]
+fn picard_batch_shim_parity_f64() {
+    for seed in [13u64, 14] {
+        picard_batch_shim_parity::<f64>(seed, 1e-9);
+    }
+}
+
+#[test]
+fn picard_batch_shim_parity_f32() {
+    for seed in [15u64, 16] {
+        picard_batch_shim_parity::<f32>(seed, 1e-4);
+    }
+}
+
+#[test]
+fn anderson_batch_shim_parity_f64() {
+    for seed in [17u64, 18] {
+        anderson_batch_shim_parity::<f64>(seed, 1e-8);
+    }
+}
+
+#[test]
+fn anderson_batch_shim_parity_f32() {
+    for seed in [19u64, 20] {
+        anderson_batch_shim_parity::<f32>(seed, 1e-4);
+    }
+}
