@@ -78,7 +78,12 @@
 //! re-calibration — zero heap allocations per batch once an engine is warm
 //! (`rust/tests/qn_alloc.rs`), routing invariants pinned by
 //! `rust/tests/serve_routing.rs`, throughput tracked by
-//! `benches/serve_throughput.rs` (`BENCH_serve.json`).
+//! `benches/serve_throughput.rs` (`BENCH_serve.json`). The serving loop
+//! itself is **continuous batching**
+//! ([`serve::ServeEngine::process_streaming`]): requests are admitted into
+//! columns freed by retirement mid-solve, with per-column iteration
+//! budgets, straggler evict-and-retry and per-key adaptive width — see
+//! `docs/ARCHITECTURE.md` and `docs/adr/001-continuous-batching.md`.
 //!
 //! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
 //! paper-vs-measured results.

@@ -142,6 +142,25 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                      (per-key engines + estimate cache behind one scheduler)",
                 )
                 .flag("seed", "0", "base RNG seed")
+                .flag(
+                    "arrivals",
+                    "pareto",
+                    "open-loop interarrival process for the continuous-vs-discrete \
+                     tail-latency comparison (pareto | poisson | off)",
+                )
+                .flag("alpha", "2.5", "Pareto tail index (> 1; smaller = burstier)")
+                .flag(
+                    "rate",
+                    "0",
+                    "open-loop offered rate in req/s (0 = auto: 0.65x the measured \
+                     closed-loop capacity at the widest batch)",
+                )
+                .flag(
+                    "col-budget",
+                    "64",
+                    "continuous batching: iterations per block residency before a \
+                     straggler is evicted for retry (0 disables eviction)",
+                )
                 .switch(
                     "smoke",
                     "tiny sizes for CI (overrides d/block/requests/batch-sizes and \
@@ -164,7 +183,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                  report            render paper-style tables from results/\n  \
                  train             ad-hoc DEQ training\n  \
                  hpo               ad-hoc bi-level HPO\n  \
-                 serve-bench       batched DEQ serving throughput (closed-loop load)\n  \
+                 serve-bench       batched DEQ serving: closed-loop throughput + open-loop\n                    \
+                 continuous-batching tail latency\n  \
                  artifacts-check   smoke-test every AOT artifact\n  \
                  version",
                 shine::version()
@@ -319,8 +339,8 @@ fn cmd_hpo(a: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
     use shine::serve::{
-        run_routed_closed_loop, run_suite, EngineConfig, ModelKey, RecalibPolicy,
-        RoutedLoadConfig, Router, SynthDeq,
+        run_open_loop, run_routed_closed_loop, run_suite, Arrivals, EngineConfig, ModelKey,
+        OpenLoopConfig, RecalibPolicy, RoutedLoadConfig, Router, ServeEngine, SynthDeq,
     };
     use shine::solvers::session::SolverSpec;
 
@@ -390,6 +410,95 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
         );
     }
 
+    // Open-loop tail-latency comparison: the same arrival schedule through
+    // continuous batching (the default serving mode) and through discrete
+    // batch formation. Continuous is the headline number; discrete is the
+    // baseline it must beat on p95 under bursty arrivals.
+    let arrivals_kind = a.get("arrivals");
+    if arrivals_kind != "off" {
+        let bsz = *batch_sizes.iter().max().expect("non-empty");
+        let rate_flag = a.get_f64("rate");
+        let rate = if rate_flag > 0.0 {
+            rate_flag
+        } else {
+            // Auto: offer 65% of the measured closed-loop capacity at the
+            // widest batch — busy but stable, so the queueing tail is real
+            // without the backlog growing unboundedly.
+            0.65 * rows.last().expect("non-empty").report.rps
+        };
+        let arrivals = match arrivals_kind {
+            "poisson" => Arrivals::Poisson { rate },
+            "pareto" => Arrivals::Pareto {
+                rate,
+                alpha: a.get_f64("alpha"),
+            },
+            other => anyhow::bail!("--arrivals must be pareto, poisson or off (got '{other}')"),
+        };
+        let cb = a.get_usize("col-budget");
+        let col_budget = if cb == 0 { None } else { Some(cb) };
+        let model: SynthDeq<f32> = SynthDeq::new(d, block, seed);
+        let mk_engine = |col_budget| {
+            let mut e: ServeEngine<f32> = ServeEngine::new(
+                d,
+                EngineConfig {
+                    max_batch: bsz,
+                    solver,
+                    calib: SolverSpec::broyden(30).with_tol(tol).with_max_iters(60),
+                    fallback_ratio: None,
+                    recalib: None,
+                    col_budget,
+                },
+            );
+            e.calibrate(
+                |z: &[f32], out: &mut [f32]| model.residual_batch(z, 1, out),
+                &vec![0.0f32; d],
+            );
+            e
+        };
+        eprintln!(
+            "open-loop: {arrivals_kind} arrivals at {rate:.1} req/s, B={bsz}, \
+             col-budget {col_budget:?}"
+        );
+        println!(
+            "{:>12} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8} {:>6}",
+            "mode", "p50 ms", "p95 ms", "p99 ms", "width", "sweeps", "evict", "conv"
+        );
+        let mut reps = Vec::with_capacity(2);
+        for continuous in [true, false] {
+            let lc = OpenLoopConfig {
+                total,
+                arrivals,
+                max_batch: bsz,
+                max_wait: 1e-3,
+                continuous,
+            };
+            let mut engine = mk_engine(if continuous { col_budget } else { None });
+            let rep = run_open_loop(&mut engine, &model, &lc, seed);
+            println!(
+                "{:>12} {:>10.3} {:>10.3} {:>10.3} {:>10.2} {:>8} {:>8} {:>6}",
+                rep.mode,
+                rep.p50_latency_ms,
+                rep.p95_latency_ms,
+                rep.p99_latency_ms,
+                rep.mean_width,
+                rep.sweeps,
+                rep.evictions,
+                if rep.all_converged { "yes" } else { "NO" }
+            );
+            if !rep.all_converged {
+                anyhow::bail!("open-loop {} mode had unconverged requests (tol {tol})", rep.mode);
+            }
+            reps.push(rep);
+        }
+        let (cont, disc) = (&reps[0], &reps[1]);
+        println!(
+            "continuous vs discrete p95: {:.3} ms vs {:.3} ms ({:+.1}%)",
+            cont.p95_latency_ms,
+            disc.p95_latency_ms,
+            100.0 * (cont.p95_latency_ms - disc.p95_latency_ms) / disc.p95_latency_ms.max(1e-9)
+        );
+    }
+
     if models > 1 {
         // Routed multi-model workload: N synthetic models (distinct
         // parameters) behind one keyed scheduler, per-key engines with a
@@ -401,6 +510,7 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
             calib: SolverSpec::broyden(30).with_tol(tol).with_max_iters(60),
             fallback_ratio: Some(10.0),
             recalib: Some(RecalibPolicy::default()),
+            col_budget: None,
         };
         let mut router: Router<f32> = Router::new(cfg);
         let keys: Vec<ModelKey> = (0..models as u32).map(|m| ModelKey::new(m, 0)).collect();

@@ -21,7 +21,7 @@
 
 use crate::linalg::vecops::{nrm2, Elem};
 use crate::qn::InvOp;
-use crate::solvers::fixed_point::ColStats;
+use crate::solvers::fixed_point::{swap_cols, ColStats};
 use crate::solvers::session::{EstimateHandle, FixedPointSolver, Session, SolverSpec};
 use crate::util::timer::Stopwatch;
 
@@ -65,6 +65,14 @@ pub struct EngineConfig {
     /// Estimate-staleness policy driven by the guard trip rate. `None`
     /// never flags the estimate stale.
     pub recalib: Option<RecalibPolicy>,
+    /// Continuous batching only ([`ServeEngine::process_streaming`]):
+    /// iterations a column may spend in one block residency before the
+    /// streaming loop **evicts** it for retry, so a single hard request
+    /// cannot hold a slot for the solver's whole `max_iters` while admitted
+    /// work queues behind it. The evicted iterate is preserved and handed
+    /// back for re-admission. `None` disables eviction; the discrete
+    /// [`ServeEngine::process`] path ignores this.
+    pub col_budget: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -75,6 +83,7 @@ impl Default for EngineConfig {
             calib: SolverSpec::broyden(30).with_tol(1e-6).with_max_iters(60),
             fallback_ratio: None,
             recalib: None,
+            col_budget: None,
         }
     }
 }
@@ -88,6 +97,53 @@ impl EngineConfig {
         self.calib = self.calib.with_tol(tol);
         self
     }
+}
+
+/// What the admission callback hands [`ServeEngine::process_streaming`] for
+/// one injected request: the caller-side request id (threaded through the
+/// batched residual's `ids` slice and the retirement callback) and the
+/// iteration budget of this residency.
+#[derive(Clone, Copy, Debug)]
+pub struct Admission {
+    /// Caller-side request id.
+    pub id: usize,
+    /// Iterations this request may spend (across residencies) before it is
+    /// retired unconverged; re-admitted evictees pass their remaining
+    /// budget. Capped per residency by [`EngineConfig::col_budget`].
+    pub budget: usize,
+}
+
+/// Telemetry for one [`ServeEngine::process_streaming`] call (which serves
+/// many requests: the loop runs until the in-flight block drains and the
+/// admission callback reports no more work).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamReport {
+    /// Requests retired for good (converged or budget-exhausted);
+    /// evictions are not counted here.
+    pub served: usize,
+    /// Eviction events — stragglers that hit
+    /// [`EngineConfig::col_budget`] and were handed back for retry.
+    pub evictions: usize,
+    /// Residual sweeps over the active block (one batched `g` evaluation
+    /// each — the streaming analogue of `fwd_iters_max`).
+    pub sweeps: usize,
+    /// Mean active width per sweep (block utilisation under the offered
+    /// load; the continuous-batching win is keeping this high while
+    /// discrete batch formation idles).
+    pub mean_width: f64,
+    /// Sum of per-residency iteration counts across all retirements.
+    pub col_iters_total: usize,
+    /// Columns reverted to the Jacobian-free direction by the §3 guard.
+    pub fallback_cols: usize,
+    /// Every finally-retired request converged.
+    pub all_converged: bool,
+    /// Whether the shared estimate crossed the staleness threshold as of
+    /// the end of this call.
+    pub estimate_stale: bool,
+    /// Wall-clock of the whole call.
+    pub seconds: f64,
+    /// Wall-clock spent in the per-wave backward sweeps.
+    pub bwd_seconds: f64,
 }
 
 /// Telemetry for one served batch.
@@ -249,6 +305,43 @@ impl<E: Elem> ServeEngine<E> {
     /// * `stats` — per-column forward outcomes (length ≥ B).
     ///
     /// Allocation-free once the engine is warm (see the module contract).
+    ///
+    /// # Examples
+    ///
+    /// Migrating from the deprecated free-function surface: a pre-session
+    /// caller ran
+    /// [`picard_solve_batch`](crate::solvers::fixed_point::picard_solve_batch)
+    /// and then applied the shared panel once per request; the engine
+    /// replaces both with one call (batched forward + a single multi-RHS
+    /// backward sweep), with the solver and tolerances named once in
+    /// [`EngineConfig`]:
+    ///
+    /// ```
+    /// use shine::serve::{EngineConfig, ServeEngine, SynthDeq};
+    /// use shine::solvers::fixed_point::ColStats;
+    ///
+    /// let (d, b) = (24, 2);
+    /// let model: SynthDeq<f32> = SynthDeq::new(d, 6, 7);
+    /// let mut engine: ServeEngine<f32> = ServeEngine::new(
+    ///     d,
+    ///     EngineConfig { max_batch: b, ..Default::default() }.with_tol(1e-5),
+    /// );
+    /// // One Broyden probe captures the shared SHINE estimate H ≈ J_g⁻¹.
+    /// engine.calibrate(|z, out| model.residual_batch(z, 1, out), &vec![0.0f32; d]);
+    ///
+    /// let mut zs = vec![0.0f32; b * d]; // initial iterates, column-major
+    /// let cots = vec![1.0f32; b * d]; // per-request cotangents dz
+    /// let mut w = vec![0.0f32; b * d]; // receives w ≈ J_g⁻ᵀ dz per request
+    /// let mut stats = vec![ColStats::default(); b];
+    /// let report = engine.process(
+    ///     |block, _ids, out| model.residual_batch(block, block.len() / d, out),
+    ///     &mut zs,
+    ///     &cots,
+    ///     &mut w,
+    ///     &mut stats,
+    /// );
+    /// assert!(report.all_converged && report.batch == b);
+    /// ```
     pub fn process(
         &mut self,
         mut g: impl FnMut(&[E], &[usize], &mut [E]),
@@ -318,6 +411,222 @@ impl<E: Elem> ServeEngine<E> {
             fwd_seconds,
             bwd_seconds,
         }
+    }
+
+    /// Serve a continuous stream of requests — the continuous-batching
+    /// loop. Instead of drain → solve → drain discrete cycles, the engine
+    /// keeps a long-lived in-flight d × B block and admits new requests
+    /// directly into columns freed by retirement, **mid-solve**. Each
+    /// column carries its own iteration counter and budget; injected
+    /// columns get their per-column solver state reset
+    /// ([`FixedPointSolver::stream_admit`]) without perturbing neighbours'
+    /// trajectories, so every request still follows the bit-identical solo
+    /// trajectory from its injection point (pinned by the admission-parity
+    /// tests in `rust/tests/serve_batch.rs`).
+    ///
+    /// * `g` — batched residual, same contract as [`ServeEngine::process`]
+    ///   (`ids[p]` = the admitted request id at physical column `p`).
+    /// * `width` — polled once per sweep for the current admission cap
+    ///   (clamped to `1..=max_batch`): the hook for the per-key adaptive
+    ///   width controller ([`crate::serve::AdaptiveWidth`]). Shrinking it
+    ///   never evicts residents — the block just drains to the new cap.
+    /// * `admit` — called while slots are free: fill the column's initial
+    ///   iterate and cotangent (both `d`-slices) and return the
+    ///   [`Admission`], or `None` when no request is available right now.
+    /// * `retire` — `retire(id, z, w, stats, evicted)` for every column
+    ///   leaving the block. Final retirements get `w` = the SHINE
+    ///   direction of the admitted cotangent (answered in per-wave
+    ///   multi-RHS panel sweeps, §3 guard applied per column, exactly the
+    ///   [`ServeEngine::process`] backward contract); evictions
+    ///   (`evicted == true`: residency hit [`EngineConfig::col_budget`]
+    ///   with budget left) get an empty `w` and the preserved iterate `z`
+    ///   to re-admit with.
+    ///
+    /// Returns when the block is empty and `admit` reports no work — call
+    /// again when new requests arrive; solver state and buffers stay warm.
+    pub fn process_streaming(
+        &mut self,
+        mut g: impl FnMut(&[E], &[usize], &mut [E]),
+        mut width: impl FnMut() -> usize,
+        mut admit: impl FnMut(&mut [E], &mut [E]) -> Option<Admission>,
+        mut retire: impl FnMut(usize, &[E], &[E], ColStats, bool),
+    ) -> StreamReport {
+        assert!(
+            self.solver.supports_streaming(),
+            "solver '{}' does not support streaming (continuous batching needs \
+             per-column-independent updates; use picard or anderson)",
+            self.cfg.solver.method.name()
+        );
+        let d = self.d;
+        let cap = self.cfg.max_batch;
+        let tol = self.cfg.solver.tol;
+        let sw = Stopwatch::start();
+        // In-flight block state: iterates, residuals, cotangents, the
+        // retirement staging blocks, and the per-column id/counter/budget
+        // registers. All pooled; give-backs below run in reverse take
+        // order per the workspace's LIFO discipline.
+        let (mut zs, mut r, mut cot, mut stage_z, mut stage_cot, mut stage_w) = {
+            let ws = self.sess.workspace();
+            (
+                ws.take(cap * d),
+                ws.take(cap * d),
+                ws.take(cap * d),
+                ws.take(cap * d),
+                ws.take(cap * d),
+                ws.take(cap * d),
+            )
+        };
+        let (mut ids, mut iters_col, mut budgets) = {
+            let ws = self.sess.workspace();
+            (ws.take_idx(cap), ws.take_idx(cap), ws.take_idx(cap))
+        };
+        // Retirement wave of the current sweep: (request id, stats,
+        // evicted). One small allocation per call, not per batch.
+        let mut wave: Vec<(usize, ColStats, bool)> = Vec::with_capacity(cap);
+        let mut rep = StreamReport {
+            all_converged: true,
+            ..Default::default()
+        };
+        let mut occupancy = 0usize;
+        let mut active = 0usize;
+        loop {
+            // --- admission into freed tail slots, up to the polled width.
+            let w_cap = width().clamp(1, cap);
+            while active < w_cap {
+                let (zcol, ccol) = (
+                    &mut zs[active * d..(active + 1) * d],
+                    &mut cot[active * d..(active + 1) * d],
+                );
+                match admit(zcol, ccol) {
+                    Some(a) => {
+                        ids[active] = a.id;
+                        budgets[active] = a.budget;
+                        iters_col[active] = 0;
+                        self.solver.stream_admit(active);
+                        active += 1;
+                    }
+                    None => break,
+                }
+            }
+            if active == 0 {
+                break;
+            }
+            // --- one residual evaluation over the whole active prefix.
+            g(&zs[..active * d], &ids[..active], &mut r[..active * d]);
+            rep.sweeps += 1;
+            occupancy += active;
+            // --- retirement scan (re-examine j after each swap: the
+            // swapped-in column's residual moved with it).
+            wave.clear();
+            let mut bw = 0usize; // staged backward columns (non-evicted)
+            let mut j = 0usize;
+            while j < active {
+                let n = nrm2(&r[j * d..(j + 1) * d]);
+                let converged = n <= tol;
+                let exhausted = !converged && iters_col[j] >= budgets[j];
+                let evict = !converged
+                    && !exhausted
+                    && self.cfg.col_budget.is_some_and(|cb| iters_col[j] >= cb);
+                if converged || exhausted || evict {
+                    let wi = wave.len();
+                    let st = ColStats {
+                        iters: iters_col[j],
+                        residual: n,
+                        converged,
+                    };
+                    wave.push((ids[j], st, evict));
+                    stage_z[wi * d..(wi + 1) * d].copy_from_slice(&zs[j * d..(j + 1) * d]);
+                    if !evict {
+                        stage_cot[bw * d..(bw + 1) * d].copy_from_slice(&cot[j * d..(j + 1) * d]);
+                        bw += 1;
+                    }
+                    active -= 1;
+                    if j != active {
+                        swap_cols(&mut zs, d, j, active);
+                        swap_cols(&mut r, d, j, active);
+                        swap_cols(&mut cot, d, j, active);
+                        ids.swap(j, active);
+                        iters_col.swap(j, active);
+                        budgets.swap(j, active);
+                        self.solver.stream_swap(j, active);
+                    }
+                } else {
+                    j += 1;
+                }
+            }
+            // --- one multi-RHS backward sweep for this retirement wave,
+            // then the §3 guard per column (the `process` contract).
+            if bw > 0 {
+                let swb = Stopwatch::start();
+                match &self.h {
+                    Some(h) => h.apply_t_multi_into(
+                        &stage_cot[..bw * d],
+                        &mut stage_w[..bw * d],
+                        self.sess.workspace(),
+                    ),
+                    None => stage_w[..bw * d].copy_from_slice(&stage_cot[..bw * d]),
+                }
+                if let Some(ratio) = self.cfg.fallback_ratio {
+                    if self.h.is_some() {
+                        let mut trips = 0usize;
+                        for k in 0..bw {
+                            let dzn = nrm2(&stage_cot[k * d..(k + 1) * d]);
+                            let wn = nrm2(&stage_w[k * d..(k + 1) * d]);
+                            if wn > ratio * dzn {
+                                stage_w[k * d..(k + 1) * d]
+                                    .copy_from_slice(&stage_cot[k * d..(k + 1) * d]);
+                                trips += 1;
+                            }
+                        }
+                        self.guard_cols += bw;
+                        self.guard_trips += trips;
+                        rep.fallback_cols += trips;
+                    }
+                }
+                rep.bwd_seconds += swb.elapsed();
+            }
+            // --- hand every retired column back to the caller.
+            let mut k = 0usize;
+            for (wi, &(id, st, evicted)) in wave.iter().enumerate() {
+                let z_fin = &stage_z[wi * d..(wi + 1) * d];
+                rep.col_iters_total += st.iters;
+                if evicted {
+                    rep.evictions += 1;
+                    retire(id, z_fin, &[], st, true);
+                } else {
+                    rep.served += 1;
+                    rep.all_converged &= st.converged;
+                    retire(id, z_fin, &stage_w[k * d..(k + 1) * d], st, false);
+                    k += 1;
+                }
+            }
+            // --- advance the survivors one iteration.
+            if active > 0 {
+                self.solver.stream_advance(
+                    &mut self.sess,
+                    &mut zs[..active * d],
+                    &r[..active * d],
+                    d,
+                );
+                for it in iters_col.iter_mut().take(active) {
+                    *it += 1;
+                }
+            }
+        }
+        rep.mean_width = occupancy as f64 / rep.sweeps.max(1) as f64;
+        rep.estimate_stale = self.estimate_stale();
+        rep.seconds = sw.elapsed();
+        let ws = self.sess.workspace();
+        ws.give_idx(budgets);
+        ws.give_idx(iters_col);
+        ws.give_idx(ids);
+        ws.give(stage_w);
+        ws.give(stage_cot);
+        ws.give(stage_z);
+        ws.give(cot);
+        ws.give(r);
+        ws.give(zs);
+        rep
     }
 }
 
@@ -501,6 +810,134 @@ mod tests {
         assert!((rep.fallback_rate - 0.5).abs() < 1e-12);
         assert_eq!(&w[..d], &cots[..d]); // reverted to Jacobian-free
         assert_eq!(w[d + 1], 1.0); // untouched column passes through
+    }
+
+    #[test]
+    fn streaming_serves_queue_through_narrow_block() {
+        // Five requests stream through a width-2 block: admissions fill
+        // freed columns mid-solve and every request still matches its solo
+        // Picard run bit-for-bit.
+        let d = 12;
+        let mut rng = Rng::new(4);
+        let bias = rng.normal_vec(d);
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: 2,
+                ..Default::default()
+            }
+            .with_tol(1e-10),
+        );
+        let n_req = 5;
+        let z0s: Vec<Vec<f64>> = (0..n_req).map(|_| rng.normal_vec(d)).collect();
+        let mut next = 0usize;
+        let mut done: Vec<Option<(Vec<f64>, ColStats)>> = vec![None; n_req];
+        let rep = eng.process_streaming(
+            |block, _ids, out| test_g(&bias, block, d, out),
+            || 2,
+            |z, c| {
+                if next >= n_req {
+                    return None;
+                }
+                z.copy_from_slice(&z0s[next]);
+                c.iter_mut().for_each(|x| *x = 0.0);
+                let a = Admission {
+                    id: next,
+                    budget: 200,
+                };
+                next += 1;
+                Some(a)
+            },
+            |id, z, _w, st, evicted| {
+                assert!(!evicted);
+                done[id] = Some((z.to_vec(), st));
+            },
+        );
+        assert_eq!(rep.served, n_req);
+        assert_eq!(rep.evictions, 0);
+        assert!(rep.all_converged);
+        assert!(rep.mean_width > 1.0, "block mostly full: {}", rep.mean_width);
+        for (id, slot) in done.iter().enumerate() {
+            let (z, st) = slot.as_ref().expect("every request retires");
+            let (z_ref, rn, it) = picard_solve(
+                |z: &[f64], out: &mut [f64]| test_g(&bias, z, d, out),
+                &z0s[id],
+                1.0,
+                1e-10,
+                200,
+            );
+            assert_eq!(&z[..], &z_ref[..], "req {id}: iterate bits");
+            assert_eq!(st.iters, it, "req {id}: iteration count");
+            assert_eq!(st.residual, rn, "req {id}: residual bits");
+        }
+    }
+
+    #[test]
+    fn eviction_preserves_iterate_and_resume_matches_solo() {
+        // A col_budget below the iterations needed forces evict-and-retry:
+        // each residency runs exactly col_budget iterations, the evicted
+        // iterate is handed back intact, and the resumed trajectory lands
+        // on the solo fixed point with the same total iteration count.
+        let d = 10;
+        let col_budget = 7usize;
+        let mut rng = Rng::new(9);
+        let bias = rng.normal_vec(d);
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: 1,
+                col_budget: Some(col_budget),
+                ..Default::default()
+            }
+            .with_tol(1e-10),
+        );
+        let z0 = rng.normal_vec(d);
+        let (z_ref, rn_ref, it_ref) = picard_solve(
+            |z: &[f64], out: &mut [f64]| test_g(&bias, z, d, out),
+            &z0,
+            1.0,
+            1e-10,
+            200,
+        );
+        assert!(it_ref > col_budget, "need a straggler: {it_ref} iters");
+        let mut pending: Option<(Vec<f64>, usize)> = Some((z0.clone(), 200));
+        let mut done: Option<(Vec<f64>, ColStats)> = None;
+        let mut total_iters = 0usize;
+        let mut residencies = 0usize;
+        while done.is_none() {
+            let mut admit_src = pending.take();
+            let mut handoff: Option<Vec<f64>> = None;
+            let rep = eng.process_streaming(
+                |block, _ids, out| test_g(&bias, block, d, out),
+                || 1,
+                |z, c| {
+                    let (zi, budget) = admit_src.take()?;
+                    z.copy_from_slice(&zi);
+                    c.iter_mut().for_each(|x| *x = 0.0);
+                    Some(Admission { id: 0, budget })
+                },
+                |_id, z, _w, st, evicted| {
+                    total_iters += st.iters;
+                    if evicted {
+                        assert_eq!(st.iters, col_budget, "residency hits the cap");
+                        handoff = Some(z.to_vec());
+                    } else {
+                        done = Some((z.to_vec(), st));
+                    }
+                },
+            );
+            residencies += 1;
+            assert!(rep.sweeps > 0);
+            if let Some(z) = handoff {
+                pending = Some((z, 200 - total_iters));
+            }
+        }
+        let (z_fin, st) = done.unwrap();
+        assert_eq!(&z_fin[..], &z_ref[..], "resumed iterate bits");
+        assert_eq!(total_iters, it_ref, "total iterations across residencies");
+        assert_eq!(st.residual, rn_ref, "final residual bits");
+        assert!(st.converged);
+        assert_eq!(residencies, it_ref.div_ceil(col_budget));
     }
 
     #[test]

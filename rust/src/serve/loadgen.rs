@@ -10,9 +10,19 @@
 //! a partial batch is released immediately when the queue cannot grow
 //! (every non-completed request is already queued — waiting out the
 //! deadline would only add dead time to the measurement).
+//!
+//! The **open-loop** driver ([`run_open_loop`]) is the opposite discipline:
+//! requests arrive on a fixed schedule ([`Arrivals`] — Poisson or
+//! heavy-tailed Pareto interarrivals) whether or not the server keeps up,
+//! which is what exposes queueing-delay tails. It runs the same schedule
+//! through either **continuous batching**
+//! ([`ServeEngine::process_streaming`]: arrivals admitted into freed
+//! columns mid-solve) or **discrete batch formation** (the [`Scheduler`]'s
+//! drain → solve cycle), so the two modes' p95/p99 are directly
+//! comparable — same seed, same arrival instants, same cotangents.
 
 use crate::linalg::vecops::Elem;
-use crate::serve::engine::{EngineConfig, ServeEngine};
+use crate::serve::engine::{Admission, EngineConfig, ServeEngine};
 use crate::serve::router::{KeyedScheduler, ModelKey, Router};
 use crate::serve::scheduler::{Scheduler, SchedulerConfig};
 use crate::serve::synth::SynthDeq;
@@ -21,6 +31,8 @@ use crate::solvers::session::SolverSpec;
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::timer::Stopwatch;
+use std::cell::RefCell;
+use std::collections::VecDeque;
 
 #[derive(Clone, Copy, Debug)]
 pub struct LoadConfig {
@@ -186,6 +198,7 @@ pub fn run_suite<E: Elem>(
                 calib: SolverSpec::broyden(30).with_tol(solver.tol).with_max_iters(60),
                 fallback_ratio: None,
                 recalib: None,
+                col_budget: None,
             },
         );
         engine.calibrate(
@@ -217,6 +230,323 @@ pub fn run_suite<E: Elem>(
         });
     }
     rows
+}
+
+/// Interarrival process of the open-loop driver. Both variants offer the
+/// same nominal rate; they differ in burstiness.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Memoryless arrivals: exponential gaps with mean `1/rate`.
+    Poisson { rate: f64 },
+    /// Heavy-tailed arrivals: Lomax gaps
+    /// ([`crate::util::rng::Rng::pareto_interarrival`]) with mean `1/rate`
+    /// and tail index `alpha` (> 1). Bursts separated by occasional long
+    /// gaps — the shape that punishes discrete batch formation.
+    Pareto { rate: f64, alpha: f64 },
+}
+
+impl Arrivals {
+    /// Nominal offered rate (requests per second).
+    pub fn rate(&self) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate } => rate,
+            Arrivals::Pareto { rate, .. } => rate,
+        }
+    }
+
+    fn gap(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate } => rng.exponential(rate),
+            Arrivals::Pareto { rate, alpha } => rng.pareto_interarrival(1.0 / rate, alpha),
+        }
+    }
+}
+
+/// Config of one open-loop run.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoopConfig {
+    /// Total requests in the arrival schedule.
+    pub total: usize,
+    /// Interarrival process (both modes replay the identical schedule).
+    pub arrivals: Arrivals,
+    /// Block width cap (continuous) / batch cap (discrete); must not
+    /// exceed the engine's `max_batch`.
+    pub max_batch: usize,
+    /// Discrete mode only: partial-batch deadline in seconds.
+    pub max_wait: f64,
+    /// `true` → continuous batching ([`ServeEngine::process_streaming`]);
+    /// `false` → discrete drain → solve cycles through a [`Scheduler`].
+    pub continuous: bool,
+}
+
+/// What one open-loop run measured.
+#[derive(Clone, Debug, Default)]
+pub struct OpenLoopReport {
+    /// `"continuous"` or `"discrete"`.
+    pub mode: &'static str,
+    pub requests: usize,
+    pub seconds: f64,
+    /// Served requests per second of wall time.
+    pub rps: f64,
+    /// Nominal offered rate of the arrival schedule.
+    pub offered_rps: f64,
+    /// End-to-end latency quantiles (arrival → final retirement, across
+    /// evict-and-retry residencies), ms.
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    /// Straggler evictions (continuous mode with a `col_budget` only).
+    pub evictions: usize,
+    /// Mean active block width (continuous) / mean served batch (discrete).
+    pub mean_width: f64,
+    /// Residual sweeps (continuous) / served batches (discrete).
+    pub sweeps: usize,
+    pub all_converged: bool,
+}
+
+/// Shared mutable state of the continuous-mode closures: the engine calls
+/// `admit` and `retire` from inside one `&mut self` loop, so the driver
+/// side hands out interior-mutable borrows per call (never held across
+/// calls — the engine invokes the closures strictly sequentially).
+struct OpenState<E> {
+    /// Next unconsumed index into the arrival schedule.
+    next: usize,
+    /// Arrived-and-waiting request ids (evicted requests re-enter at the
+    /// back with their preserved iterate).
+    queue: VecDeque<usize>,
+    /// Preserved iterates of evicted requests, by id.
+    resume: Vec<Option<Vec<E>>>,
+    /// Remaining iteration budget per request, by id.
+    rem: Vec<usize>,
+    latencies: Vec<f64>,
+    evictions: usize,
+    served: usize,
+    all_converged: bool,
+}
+
+/// Drive one open-loop arrival schedule through the engine and report
+/// latency quantiles. The schedule (arrival instants and per-request
+/// cotangents) is precomputed from `seed`, so a continuous and a discrete
+/// run with the same config-but-`continuous` and seed measure the same
+/// offered load. Requests start from z₀ = 0.
+pub fn run_open_loop<E: Elem>(
+    engine: &mut ServeEngine<E>,
+    model: &SynthDeq<E>,
+    lc: &OpenLoopConfig,
+    seed: u64,
+) -> OpenLoopReport {
+    let d = engine.dim();
+    assert_eq!(model.dim(), d);
+    assert!(lc.total >= 1 && lc.max_batch >= 1);
+    assert!(lc.max_batch <= engine.config().max_batch);
+    let mut rng = Rng::new(seed ^ 0x09E17);
+    // Absolute arrival instants (prefix sums of the interarrival gaps; the
+    // first request arrives after one gap) and per-request cotangents —
+    // identical for both modes at one seed.
+    let mut arrivals = Vec::with_capacity(lc.total);
+    let mut t = 0.0f64;
+    for _ in 0..lc.total {
+        t += lc.arrivals.gap(&mut rng);
+        arrivals.push(t);
+    }
+    let cots: Vec<E> = (0..lc.total * d).map(|_| E::from_f64(rng.normal())).collect();
+    if lc.continuous {
+        run_open_continuous(engine, model, lc, &arrivals, &cots)
+    } else {
+        run_open_discrete(engine, model, lc, &arrivals, &cots)
+    }
+}
+
+fn run_open_continuous<E: Elem>(
+    engine: &mut ServeEngine<E>,
+    model: &SynthDeq<E>,
+    lc: &OpenLoopConfig,
+    arrivals: &[f64],
+    cots: &[E],
+) -> OpenLoopReport {
+    let d = engine.dim();
+    let budget0 = engine.config().solver.max_iters;
+    let st = RefCell::new(OpenState::<E> {
+        next: 0,
+        queue: VecDeque::with_capacity(lc.max_batch),
+        resume: vec![None; lc.total],
+        rem: vec![budget0; lc.total],
+        latencies: Vec::with_capacity(lc.total),
+        evictions: 0,
+        served: 0,
+        all_converged: true,
+    });
+    let width = lc.max_batch;
+    let sw = Stopwatch::start();
+    let mut sweeps = 0usize;
+    let mut occupancy = 0.0f64;
+    loop {
+        let rep = engine.process_streaming(
+            |block: &[E], _ids: &[usize], out: &mut [E]| {
+                model.residual_batch(block, block.len() / d, out)
+            },
+            || width,
+            |z: &mut [E], c: &mut [E]| {
+                let now = sw.elapsed();
+                let mut s = st.borrow_mut();
+                while s.next < arrivals.len() && arrivals[s.next] <= now {
+                    let id = s.next;
+                    s.queue.push_back(id);
+                    s.next += 1;
+                }
+                let id = s.queue.pop_front()?;
+                match s.resume[id].take() {
+                    Some(zi) => z.copy_from_slice(&zi),
+                    None => z.iter_mut().for_each(|x| *x = E::ZERO),
+                }
+                c.copy_from_slice(&cots[id * d..(id + 1) * d]);
+                let budget = s.rem[id];
+                Some(Admission { id, budget })
+            },
+            |id: usize, z: &[E], _w: &[E], cs: ColStats, evicted: bool| {
+                let now = sw.elapsed();
+                let mut s = st.borrow_mut();
+                if evicted {
+                    s.evictions += 1;
+                    s.rem[id] = s.rem[id].saturating_sub(cs.iters).max(1);
+                    s.resume[id] = Some(z.to_vec());
+                    s.queue.push_back(id);
+                } else {
+                    s.latencies.push(now - arrivals[id]);
+                    s.all_converged &= cs.converged;
+                    s.served += 1;
+                }
+            },
+        );
+        sweeps += rep.sweeps;
+        occupancy += rep.mean_width * rep.sweeps as f64;
+        let (served, next) = {
+            let s = st.borrow();
+            (s.served, s.next)
+        };
+        if served >= lc.total {
+            break;
+        }
+        // Block drained with requests still to come: sleep out the gap to
+        // the next arrival (the open-loop idle period).
+        if next < arrivals.len() {
+            let gap = arrivals[next] - sw.elapsed();
+            if gap > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(gap));
+            }
+        }
+    }
+    let seconds = sw.elapsed();
+    let s = st.into_inner();
+    OpenLoopReport {
+        mode: "continuous",
+        requests: s.served,
+        seconds,
+        rps: s.served as f64 / seconds.max(1e-12),
+        offered_rps: lc.arrivals.rate(),
+        p50_latency_ms: stats::median(&s.latencies) * 1e3,
+        p95_latency_ms: stats::quantile(&s.latencies, 0.95) * 1e3,
+        p99_latency_ms: stats::quantile(&s.latencies, 0.99) * 1e3,
+        evictions: s.evictions,
+        mean_width: occupancy / sweeps.max(1) as f64,
+        sweeps,
+        all_converged: s.all_converged,
+    }
+}
+
+fn run_open_discrete<E: Elem>(
+    engine: &mut ServeEngine<E>,
+    model: &SynthDeq<E>,
+    lc: &OpenLoopConfig,
+    arrivals: &[f64],
+    cots: &[E],
+) -> OpenLoopReport {
+    let d = engine.dim();
+    let total = arrivals.len();
+    let mut sched: Scheduler<usize> = Scheduler::new(SchedulerConfig {
+        max_batch: lc.max_batch,
+        max_wait: lc.max_wait,
+        queue_cap: total.max(lc.max_batch),
+    });
+    let mut zs = vec![E::ZERO; lc.max_batch * d];
+    let mut cot_block = vec![E::ZERO; lc.max_batch * d];
+    let mut w_block = vec![E::ZERO; lc.max_batch * d];
+    let mut col_stats = vec![ColStats::default(); lc.max_batch];
+    let mut batch_items: Vec<(f64, usize)> = Vec::with_capacity(lc.max_batch);
+    let mut latencies: Vec<f64> = Vec::with_capacity(total);
+    let mut next = 0usize;
+    let mut completed = 0usize;
+    let mut batches = 0usize;
+    let mut all_converged = true;
+    let sw = Stopwatch::start();
+    while completed < total {
+        let now = sw.elapsed();
+        while next < total && arrivals[next] <= now {
+            sched
+                .push(arrivals[next], next)
+                .unwrap_or_else(|_| panic!("queue sized for the whole schedule"));
+            next += 1;
+        }
+        let n = sched.ready(now);
+        if n == 0 {
+            // Nothing releasable: sleep to whichever comes first, the next
+            // arrival or the oldest partial batch's deadline.
+            let mut wake = f64::INFINITY;
+            if next < total {
+                wake = arrivals[next];
+            }
+            if let Some(dl) = sched.next_deadline() {
+                wake = wake.min(dl);
+            }
+            assert!(wake.is_finite(), "open loop stalled with work outstanding");
+            let gap = wake - sw.elapsed();
+            if gap > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(gap));
+            }
+            continue;
+        }
+        batch_items.clear();
+        sched.drain_into(n, now, &mut batch_items);
+        for (p, &(_, id)) in batch_items.iter().enumerate() {
+            for z in zs[p * d..(p + 1) * d].iter_mut() {
+                *z = E::ZERO;
+            }
+            cot_block[p * d..(p + 1) * d].copy_from_slice(&cots[id * d..(id + 1) * d]);
+        }
+        let t0 = sw.elapsed();
+        let report = engine.process(
+            |block: &[E], _ids: &[usize], out: &mut [E]| {
+                model.residual_batch(block, block.len() / d, out)
+            },
+            &mut zs[..n * d],
+            &cot_block[..n * d],
+            &mut w_block[..n * d],
+            &mut col_stats[..n],
+        );
+        let t1 = sw.elapsed();
+        batches += 1;
+        all_converged &= report.all_converged;
+        let service = t1 - t0;
+        for &(wait, _) in batch_items.iter() {
+            latencies.push(wait + service);
+            completed += 1;
+        }
+    }
+    let seconds = sw.elapsed();
+    OpenLoopReport {
+        mode: "discrete",
+        requests: completed,
+        seconds,
+        rps: completed as f64 / seconds.max(1e-12),
+        offered_rps: lc.arrivals.rate(),
+        p50_latency_ms: stats::median(&latencies) * 1e3,
+        p95_latency_ms: stats::quantile(&latencies, 0.95) * 1e3,
+        p99_latency_ms: stats::quantile(&latencies, 0.99) * 1e3,
+        evictions: 0,
+        mean_width: completed as f64 / batches.max(1) as f64,
+        sweeps: batches,
+        all_converged,
+    }
 }
 
 /// Config of one routed (multi-model) closed-loop run.

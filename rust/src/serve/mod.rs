@@ -26,6 +26,18 @@
 //!   [`loadgen::run_closed_loop`] drives a synthetic closed-loop load
 //!   through scheduler + engine (the `serve-bench` CLI subcommand and
 //!   `benches/serve_throughput.rs` both sit on it).
+//! * **Continuous batching** — [`ServeEngine::process_streaming`] keeps a
+//!   long-lived in-flight d × B block and admits requests into columns
+//!   freed by retirement **mid-solve** (no drain → solve → drain cycles):
+//!   each column carries its own iteration counter and budget, injected
+//!   columns have their per-column solver state reset without perturbing
+//!   neighbours (so every request follows the bit-identical solo
+//!   trajectory from its injection point), stragglers that exceed
+//!   [`EngineConfig::col_budget`] are **evicted for retry** with their
+//!   iterate preserved, and the admission width is polled per sweep — the
+//!   hook for the per-key [`AdaptiveWidth`] AIMD controller. The
+//!   [`loadgen::run_open_loop`] driver measures it against discrete batch
+//!   formation under Poisson/Pareto open-loop arrivals.
 //!
 //! # Invariants and contracts
 //!
@@ -54,7 +66,16 @@
 //! requests) is releasable immediately; a partial batch only once the
 //! *oldest* queued request has waited `max_wait`. Draining hands back
 //! per-request queue latency so the load generator can report end-to-end
-//! latency (queue wait + batch service).
+//! latency (queue wait + batch service). Streaming admission pulls single
+//! requests instead ([`KeyedScheduler::pop_front_key`]) and **never
+//! reorders FIFO within a key** (pinned in `rust/tests/serve_batch.rs`).
+//!
+//! **Streaming retirement ordering**: retirement classification runs
+//! *converged → budget-exhausted → evicted* per column, each sweep's
+//! retiring cotangents are answered in ONE multi-RHS panel sweep (the §3
+//! guard applied per wave column), and evicted columns leave with their
+//! iterate intact and an empty backward — re-admission continues the solo
+//! trajectory exactly where the residency ended.
 //!
 //! **Shared-estimate approximation**: serving reuses ONE calibration
 //! estimate `H ≈ J_g⁻¹` per [`ModelKey`] — the serving-side analogue of
@@ -91,11 +112,11 @@ pub mod router;
 pub mod scheduler;
 pub mod synth;
 
-pub use engine::{BatchReport, EngineConfig, RecalibPolicy, ServeEngine};
+pub use engine::{Admission, BatchReport, EngineConfig, RecalibPolicy, ServeEngine, StreamReport};
 pub use loadgen::{
-    run_closed_loop, run_routed_closed_loop, run_suite, LoadConfig, RoutedLoadConfig,
-    RoutedReport, SuiteRow, ThroughputReport,
+    run_closed_loop, run_open_loop, run_routed_closed_loop, run_suite, Arrivals, LoadConfig,
+    OpenLoopConfig, OpenLoopReport, RoutedLoadConfig, RoutedReport, SuiteRow, ThroughputReport,
 };
 pub use router::{BatchResidual, KeyedScheduler, ModelKey, Router};
-pub use scheduler::{Scheduler, SchedulerConfig};
+pub use scheduler::{AdaptiveWidth, AdaptiveWidthConfig, Scheduler, SchedulerConfig};
 pub use synth::SynthDeq;

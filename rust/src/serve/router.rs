@@ -29,7 +29,7 @@
 
 use crate::linalg::vecops::Elem;
 use crate::serve::engine::{BatchReport, EngineConfig, ServeEngine};
-use crate::serve::scheduler::SchedulerConfig;
+use crate::serve::scheduler::{AdaptiveWidth, AdaptiveWidthConfig, SchedulerConfig};
 use crate::serve::synth::SynthDeq;
 use crate::solvers::fixed_point::ColStats;
 use anyhow::{anyhow, Result};
@@ -191,6 +191,24 @@ impl<T> KeyedScheduler<T> {
         self.queue.front().map(|(t, _, _)| t + self.cfg.max_wait)
     }
 
+    /// Pop the single oldest request of `key` as a
+    /// `(queue latency at now, payload)` pair — the streaming-admission
+    /// primitive: [`crate::serve::ServeEngine::process_streaming`]'s admit
+    /// callback pulls requests one at a time as columns free up, and FIFO
+    /// within the key is preserved because this always takes the key's
+    /// front. Other keys' requests keep their positions.
+    pub fn pop_front_key(&mut self, key: ModelKey, now: f64) -> Option<(f64, T)> {
+        let i = self.queue.iter().position(|(_, k, _)| *k == key)?;
+        let (t, _, item) = self.queue.remove(i).expect("index in bounds");
+        if let Some(pos) = self.counts.iter().position(|(k, _)| *k == key) {
+            self.counts[pos].1 -= 1;
+            if self.counts[pos].1 == 0 {
+                self.counts.remove(pos);
+            }
+        }
+        Some((now - t, item))
+    }
+
     /// Drain up to `n` oldest requests of `key` (FIFO within the key) into
     /// `out` as `(queue latency at now, payload)` pairs. Other keys'
     /// requests keep their positions; the queue is edited in place (no
@@ -226,6 +244,9 @@ struct RouteEntry<E: Elem> {
     model: Box<dyn BatchResidual<E>>,
     /// Stale-estimate evictions + re-calibrations performed by the policy.
     recalibrations: usize,
+    /// Per-key AIMD width controller (None when the router was built
+    /// without [`Router::with_adaptive_width`]).
+    width: Option<AdaptiveWidth>,
 }
 
 /// Per-model serving engines behind one routing surface. Every registered
@@ -237,6 +258,9 @@ struct RouteEntry<E: Elem> {
 pub struct Router<E: Elem> {
     cfg: EngineConfig,
     entries: Vec<RouteEntry<E>>,
+    /// When set, every key registered afterwards gets its own
+    /// [`AdaptiveWidth`] controller fed from served-batch latency.
+    width_cfg: Option<AdaptiveWidthConfig>,
 }
 
 impl<E: Elem> Router<E> {
@@ -244,7 +268,34 @@ impl<E: Elem> Router<E> {
         Router {
             cfg,
             entries: Vec::new(),
+            width_cfg: None,
         }
+    }
+
+    /// Enable per-key adaptive batch width: each key registered after this
+    /// call carries an [`AdaptiveWidth`] controller that
+    /// [`Router::process`] feeds with the batch's per-request service
+    /// latency (`(fwd_seconds + bwd_seconds) / batch` from
+    /// [`BatchReport`]); [`Router::target_width`] exposes the width the
+    /// serving loop should form batches at.
+    pub fn with_adaptive_width(mut self, wc: AdaptiveWidthConfig) -> Router<E> {
+        assert!(
+            wc.max_width <= self.cfg.max_batch,
+            "adaptive max_width cannot exceed engine max_batch"
+        );
+        self.width_cfg = Some(wc);
+        self
+    }
+
+    /// The batch width `key`'s controller currently recommends (`None`
+    /// when adaptive width is off or the key is unregistered — form
+    /// batches at the scheduler's `max_batch` then).
+    pub fn target_width(&self, key: ModelKey) -> Option<usize> {
+        self.entries
+            .iter()
+            .find(|e| e.key == key)
+            .and_then(|e| e.width.as_ref())
+            .map(|w| w.width())
     }
 
     pub fn config(&self) -> &EngineConfig {
@@ -290,6 +341,7 @@ impl<E: Elem> Router<E> {
             engine,
             model,
             recalibrations: 0,
+            width: self.width_cfg.map(AdaptiveWidth::new),
         });
         probe
     }
@@ -329,6 +381,9 @@ impl<E: Elem> Router<E> {
                 &vec![E::ZERO; d],
             );
             entry.recalibrations += 1;
+        }
+        if let Some(w) = entry.width.as_mut() {
+            w.observe((report.fwd_seconds + report.bwd_seconds) / report.batch.max(1) as f64);
         }
         Ok(report)
     }
@@ -388,6 +443,30 @@ mod tests {
         s.drain_key(k, n, 1.5, &mut out);
         assert_eq!(out.iter().map(|(_, p)| *p).collect::<Vec<_>>(), vec![10, 30]);
         assert_eq!(s.count_key(A), 1);
+    }
+
+    #[test]
+    fn pop_front_key_is_fifo_and_keeps_registry_consistent() {
+        let mut s = ks(4, 1.0, 16);
+        for (i, k) in [A, B, A, B, A].iter().enumerate() {
+            s.push(0.1 * i as f64, *k, i as u32).unwrap();
+        }
+        // Streaming admission pulls A's requests one at a time, in FIFO
+        // order, without disturbing B's queue positions.
+        assert_eq!(s.pop_front_key(A, 1.0).map(|(_, p)| p), Some(0));
+        assert_eq!(s.pop_front_key(A, 1.0).map(|(_, p)| p), Some(2));
+        assert_eq!(s.count_key(A), 1);
+        assert_eq!(s.count_key(B), 2);
+        assert_eq!(s.front_key(), Some(B));
+        let (wait, p) = s.pop_front_key(A, 1.0).unwrap();
+        assert_eq!(p, 4);
+        assert!((wait - 0.6).abs() < 1e-12);
+        // A is drained: registry entry removed, further pops return None.
+        assert_eq!(s.count_key(A), 0);
+        assert_eq!(s.pop_front_key(A, 2.0), None);
+        assert_eq!(s.pop_front_key(B, 2.0).map(|(_, p)| p), Some(1));
+        assert_eq!(s.pop_front_key(B, 2.0).map(|(_, p)| p), Some(3));
+        assert!(s.is_empty());
     }
 
     #[test]
@@ -452,6 +531,35 @@ mod tests {
             router.keys().iter().filter(|k| **k == ModelKey::new(0, 1)).count(),
             1
         );
+    }
+
+    #[test]
+    fn adaptive_width_is_per_key_and_fed_by_served_batches() {
+        let d = 24;
+        let b = 4;
+        // A microsecond target no real solve can meet: every served batch
+        // must push its key's controller down, other keys untouched.
+        let wc = AdaptiveWidthConfig {
+            min_width: 1,
+            max_width: b,
+            target_latency: 1e-9,
+            alpha: 1.0,
+        };
+        let mut router: Router<f32> = Router::new(router_cfg(b)).with_adaptive_width(wc);
+        let k0 = ModelKey::new(0, 0);
+        let k1 = ModelKey::new(1, 0);
+        router.register(k0, Box::new(SynthDeq::<f32>::new(d, 8, 5)));
+        router.register(k1, Box::new(SynthDeq::<f32>::new(d, 8, 6)));
+        assert_eq!(router.target_width(k0), Some(b));
+        assert_eq!(router.target_width(k1), Some(b));
+        assert_eq!(router.target_width(ModelKey::new(9, 9)), None);
+        let mut zs = vec![0.0f32; b * d];
+        let cots = vec![1.0f32; b * d];
+        let mut w = vec![0.0f32; b * d];
+        let mut stats = vec![ColStats::default(); b];
+        router.process(k0, &mut zs, &cots, &mut w, &mut stats).unwrap();
+        assert_eq!(router.target_width(k0), Some(b / 2), "served key halves");
+        assert_eq!(router.target_width(k1), Some(b), "idle key untouched");
     }
 
     #[test]

@@ -120,6 +120,99 @@ impl<T> Scheduler<T> {
     }
 }
 
+/// Knobs of the [`AdaptiveWidth`] AIMD controller.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveWidthConfig {
+    /// Floor the controller never shrinks below (≥ 1).
+    pub min_width: usize,
+    /// Ceiling it never grows past (≤ engine `max_batch`).
+    pub max_width: usize,
+    /// Per-request service-latency target in seconds: EWMA above it
+    /// triggers the multiplicative decrease.
+    pub target_latency: f64,
+    /// EWMA smoothing factor in (0, 1]; 1 = no smoothing.
+    pub alpha: f64,
+}
+
+impl Default for AdaptiveWidthConfig {
+    fn default() -> Self {
+        AdaptiveWidthConfig {
+            min_width: 1,
+            max_width: 32,
+            target_latency: 5e-3,
+            alpha: 0.3,
+        }
+    }
+}
+
+/// AIMD batch-width controller driven by per-request service latency (the
+/// `BatchReport` `fwd_seconds + bwd_seconds` divided by the batch width).
+/// Classic congestion-control shape: an EWMA of observed latency above
+/// `target_latency` **halves** the width (fast escape when a wide block
+/// makes every co-batched request slow); comfortably below target
+/// (< 0.7 × target) it creeps back up by **one** column. The streaming
+/// engine polls [`AdaptiveWidth::width`] each sweep via its `width`
+/// closure, so the block geometry adapts mid-solve without reforming.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveWidth {
+    cfg: AdaptiveWidthConfig,
+    width: usize,
+    ewma: Option<f64>,
+}
+
+impl AdaptiveWidth {
+    /// Starts wide (at `max_width`): under light load width barely matters,
+    /// and under heavy load the first over-target observation halves it.
+    pub fn new(cfg: AdaptiveWidthConfig) -> AdaptiveWidth {
+        assert!(cfg.min_width >= 1, "min_width must be at least 1");
+        assert!(
+            cfg.max_width >= cfg.min_width,
+            "max_width must be at least min_width"
+        );
+        assert!(
+            cfg.alpha > 0.0 && cfg.alpha <= 1.0,
+            "alpha must be in (0, 1]"
+        );
+        assert!(cfg.target_latency > 0.0, "target_latency must be positive");
+        AdaptiveWidth {
+            cfg,
+            width: cfg.max_width,
+            ewma: None,
+        }
+    }
+
+    pub fn config(&self) -> &AdaptiveWidthConfig {
+        &self.cfg
+    }
+
+    /// Current admission width (always within `[min_width, max_width]`).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Smoothed latency the controller is acting on (`None` before the
+    /// first observation).
+    pub fn ewma_latency(&self) -> Option<f64> {
+        self.ewma
+    }
+
+    /// Feed one per-request service-latency observation (seconds) and
+    /// update the width: multiplicative decrease above target, additive
+    /// increase below 0.7 × target, hold in the comfort band between.
+    pub fn observe(&mut self, latency_s: f64) {
+        let e = match self.ewma {
+            Some(prev) => prev + self.cfg.alpha * (latency_s - prev),
+            None => latency_s,
+        };
+        self.ewma = Some(e);
+        if e > self.cfg.target_latency {
+            self.width = (self.width / 2).max(self.cfg.min_width);
+        } else if e < 0.7 * self.cfg.target_latency {
+            self.width = (self.width + 1).min(self.cfg.max_width);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +288,67 @@ mod tests {
         s.push(0.0, 2).unwrap();
         assert_eq!(s.next_deadline(), None); // full batch: ready now
         assert_eq!(s.ready(0.0), 2);
+    }
+
+    #[test]
+    fn adaptive_width_halves_under_overload() {
+        let cfg = AdaptiveWidthConfig {
+            min_width: 1,
+            max_width: 32,
+            target_latency: 1e-3,
+            alpha: 1.0, // no smoothing: each observation acts directly
+        };
+        let mut aw = AdaptiveWidth::new(cfg);
+        assert_eq!(aw.width(), 32);
+        aw.observe(5e-3); // over target → halve
+        assert_eq!(aw.width(), 16);
+        aw.observe(5e-3);
+        aw.observe(5e-3);
+        assert_eq!(aw.width(), 4);
+        for _ in 0..10 {
+            aw.observe(5e-3);
+        }
+        assert_eq!(aw.width(), 1, "multiplicative decrease floors at min");
+    }
+
+    #[test]
+    fn adaptive_width_climbs_additively_when_comfortable() {
+        let cfg = AdaptiveWidthConfig {
+            min_width: 1,
+            max_width: 8,
+            target_latency: 1e-3,
+            alpha: 1.0,
+        };
+        let mut aw = AdaptiveWidth::new(cfg);
+        for _ in 0..4 {
+            aw.observe(5e-3);
+        }
+        assert_eq!(aw.width(), 1);
+        // Comfortably under target (< 0.7×): +1 per observation, capped.
+        for k in 1..=10 {
+            aw.observe(1e-4);
+            assert_eq!(aw.width(), (1 + k).min(8));
+        }
+        // Comfort band (between 0.7× and 1× target): hold.
+        aw.observe(0.8e-3);
+        assert_eq!(aw.width(), 8);
+    }
+
+    #[test]
+    fn adaptive_width_ewma_smooths_spikes() {
+        let cfg = AdaptiveWidthConfig {
+            min_width: 1,
+            max_width: 16,
+            target_latency: 1e-3,
+            alpha: 0.3,
+        };
+        let mut aw = AdaptiveWidth::new(cfg);
+        aw.observe(0.5e-3); // seeds the EWMA under target
+        assert_eq!(aw.width(), 16);
+        // One 2× spike moves the EWMA to 0.5 + 0.3·(2−0.5) = 0.95 ms —
+        // still under target, so the width holds instead of halving.
+        aw.observe(2e-3);
+        assert!(aw.ewma_latency().unwrap() < 1e-3);
+        assert_eq!(aw.width(), 16);
     }
 }

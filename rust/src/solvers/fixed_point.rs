@@ -42,6 +42,11 @@
 //! converged columns by swap-to-back compaction, and keep each column's
 //! trajectory bit-identical to its sequential counterpart (Anderson shares
 //! the literal iteration body through the private `AndersonState` machine).
+//! For **continuous batching** the engine drives the same per-column state
+//! through the streaming hooks ([`AndersonBatch::reset_col`] /
+//! [`AndersonBatch::swap_state`] / [`AndersonBatch::advance_cols`]), so a
+//! request injected into a freed column mid-solve follows the bit-identical
+//! solo trajectory from its injection point.
 
 use crate::linalg::vecops::{add_scaled, axpy, dot, nrm2, sub, zero, Elem};
 use crate::qn::broyden::BroydenInverse;
@@ -521,7 +526,10 @@ pub struct ColStats {
 }
 
 /// Swap columns `a` and `b` (`a < b`) of a contiguous block of d-columns.
-fn swap_cols<E: Elem>(zs: &mut [E], d: usize, a: usize, b: usize) {
+/// `pub(crate)` because the serving engine's streaming-admission loop
+/// ([`crate::serve::engine::ServeEngine::process_streaming`]) performs the
+/// same swap-to-back compaction on its long-lived in-flight block.
+pub(crate) fn swap_cols<E: Elem>(zs: &mut [E], d: usize, a: usize, b: usize) {
     debug_assert!(a < b);
     let (lo, hi) = zs.split_at_mut(b * d);
     lo[a * d..(a + 1) * d].swap_with_slice(&mut hi[..d]);
@@ -765,6 +773,52 @@ impl<E: Elem> AndersonBatch<E> {
     pub fn release(self, ws: &mut Workspace<E>) {
         for st in self.states.into_iter().rev() {
             st.release(ws);
+        }
+    }
+
+    // ---- streaming-admission hooks (continuous batching) ------------------
+    //
+    // The discrete `solve` above owns the whole retirement loop; the serving
+    // engine's continuous-batching loop owns it instead (per-column iteration
+    // counters and deadlines live there) and drives the per-column Anderson
+    // states through these three hooks. Injecting a request into a freed
+    // column only touches that column's state — `reset_col` parks its
+    // history buffers for reuse and never reads a neighbour — so resident
+    // columns' trajectories are unperturbed (pinned by the mid-solve
+    // admission parity tests in `rust/tests/serve_batch.rs`).
+
+    /// Forget column `j`'s solve history ahead of admitting a new request
+    /// into that slot. Allocation-free: the history buffers are parked on
+    /// the state's spare list.
+    pub fn reset_col(&mut self, j: usize) {
+        self.states[j].reset();
+    }
+
+    /// Per-column state follows a compaction swap of block columns `a`/`b`.
+    pub fn swap_state(&mut self, a: usize, b: usize) {
+        self.states.swap(a, b);
+    }
+
+    /// Advance every column of the active prefix one Anderson step given the
+    /// freshly evaluated residual block `r` (same layout as `zs`). Exactly
+    /// the per-column body of the discrete batched solve.
+    pub fn advance_cols(&mut self, zs: &mut [E], r: &[E], ws: &mut Workspace<E>) {
+        let d = self.d;
+        debug_assert_eq!(zs.len(), r.len());
+        debug_assert_eq!(zs.len() % d, 0);
+        let active = zs.len() / d;
+        assert!(
+            active <= self.states.len(),
+            "active block of {active} columns exceeds AndersonBatch capacity {}",
+            self.states.len()
+        );
+        for j in 0..active {
+            self.states[j].advance(
+                &mut zs[j * d..(j + 1) * d],
+                &r[j * d..(j + 1) * d],
+                self.beta,
+                ws,
+            );
         }
     }
 }

@@ -119,6 +119,26 @@ impl SolverMethod {
 /// tolerance/budget that used to be restated at every call site. This is
 /// the single source of truth — `serve::EngineConfig`, the trainer and the
 /// CLI all carry a `SolverSpec` instead of loose `tol`/`max_iters` copies.
+///
+/// # Examples
+///
+/// Parse (or construct) a spec, tighten the tolerance, build the solver and
+/// run it — the whole forward surface in four lines:
+///
+/// ```
+/// use shine::solvers::session::{Session, SolverSpec};
+///
+/// let spec = SolverSpec::parse("anderson:5").unwrap().with_tol(1e-10);
+/// let mut solver = spec.build::<f64>();
+/// let mut sess: Session<f64> = Session::new();
+/// let mut g = |z: &[f64], out: &mut [f64]| {
+///     for i in 0..z.len() {
+///         out[i] = z[i] - 0.5 * z[(i + 1) % z.len()] - 1.0;
+///     }
+/// };
+/// let out = solver.solve(&mut sess, &mut g, &[0.0; 8]);
+/// assert!(out.converged && out.residual <= 1e-10);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SolverSpec {
     pub method: SolverMethod,
@@ -422,6 +442,44 @@ pub trait FixedPointSolver<E: Elem> {
     /// nothing). Stateless methods ignore this.
     fn prepare_batch(&mut self, _d: usize, _max_cols: usize, _sess: &mut Session<E>) {}
 
+    // ---- solve_streaming surface (continuous batching) --------------------
+    //
+    // The serving engine's continuous-batching loop
+    // ([`crate::serve::ServeEngine::process_streaming`]) owns the block,
+    // the per-column iteration counters and the retirement/compaction
+    // bookkeeping; the solver contributes exactly three things: reset a
+    // column's state when a request is injected mid-solve, move per-column
+    // state along with a compaction swap, and advance the active prefix one
+    // iteration. Picard and Anderson support this (their per-column updates
+    // are independent, so injection never perturbs a neighbour's
+    // trajectory); Broyden does not (its qN state spans the whole solve).
+
+    /// Whether this solver implements the streaming hooks below. Engines
+    /// must check before driving [`FixedPointSolver::stream_advance`].
+    fn supports_streaming(&self) -> bool {
+        false
+    }
+
+    /// A new request was admitted into block column `slot` mid-solve:
+    /// forget that column's solver state without touching any neighbour.
+    /// Default no-op (stateless methods have nothing to forget).
+    fn stream_admit(&mut self, _slot: usize) {}
+
+    /// Block columns `a` and `b` were swapped by retirement compaction —
+    /// swap any per-column solver state along with them. Default no-op.
+    fn stream_swap(&mut self, _a: usize, _b: usize) {}
+
+    /// Advance the active prefix (`zs`/`r` are `active × d`, column-major)
+    /// one iteration given the freshly evaluated residual block — the same
+    /// per-column update [`FixedPointSolver::solve_batch`] applies, so each
+    /// column's trajectory stays bit-identical to a solo solve.
+    fn stream_advance(&mut self, _sess: &mut Session<E>, _zs: &mut [E], _r: &[E], _d: usize) {
+        panic!(
+            "{} does not support streaming solves (check supports_streaming)",
+            self.spec().method.name()
+        );
+    }
+
     /// Return internal buffers to the session pools (one-shot users; a
     /// long-lived solver just keeps them).
     fn release(&mut self, _sess: &mut Session<E>) {}
@@ -483,6 +541,16 @@ impl<E: Elem> FixedPointSolver<E> for PicardSolver {
             &mut sess.ws,
             stats,
         );
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    /// One fused damped-Picard step over the active prefix — columnwise
+    /// independent, so mid-solve injection needs no state reset.
+    fn stream_advance(&mut self, _sess: &mut Session<E>, zs: &mut [E], r: &[E], _d: usize) {
+        crate::linalg::vecops::axpy(-self.tau(), r, zs);
     }
 }
 
@@ -570,6 +638,31 @@ impl<E: Elem> FixedPointSolver<E> for AndersonSolver<E> {
 
     fn prepare_batch(&mut self, d: usize, max_cols: usize, sess: &mut Session<E>) {
         self.ensure_batch(d, max_cols, &mut sess.ws);
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn stream_admit(&mut self, slot: usize) {
+        self.batch
+            .as_mut()
+            .expect("prepare_batch before streaming")
+            .reset_col(slot);
+    }
+
+    fn stream_swap(&mut self, a: usize, b: usize) {
+        self.batch
+            .as_mut()
+            .expect("prepare_batch before streaming")
+            .swap_state(a, b);
+    }
+
+    fn stream_advance(&mut self, sess: &mut Session<E>, zs: &mut [E], r: &[E], _d: usize) {
+        self.batch
+            .as_mut()
+            .expect("prepare_batch before streaming")
+            .advance_cols(zs, r, &mut sess.ws);
     }
 
     fn release(&mut self, sess: &mut Session<E>) {
@@ -686,6 +779,35 @@ pub struct BackwardOutcome<E: Elem = f64> {
 ///
 /// `warm` is the caller's warm start (HOAG restarts the inversion from the
 /// previous outer iteration's w, Appendix C); only [`FullBackward`] uses it.
+///
+/// # Examples
+///
+/// The SHINE hand-off end to end: a Broyden forward captures the inverse
+/// estimate, and the SHINE backward turns it into the left-solve direction
+/// with zero VJP calls:
+///
+/// ```
+/// use shine::qn::InvOp;
+/// use shine::solvers::session::{Backward, Session, ShineBackward, SolverSpec};
+///
+/// let mut sess: Session<f64> = Session::new();
+/// let mut g = |z: &[f64], out: &mut [f64]| {
+///     for i in 0..z.len() {
+///         out[i] = z[i] - 0.3 * z[(i + 1) % z.len()] - 1.0;
+///     }
+/// };
+/// let mut solver = SolverSpec::broyden(10).with_tol(1e-11).build::<f64>();
+/// let out = solver.solve(&mut sess, &mut g, &[0.0; 6]);
+/// let est = out.estimate.expect("quasi-Newton forwards capture H");
+///
+/// let dz = vec![1.0; 6];
+/// let mut no_vjp = |_: &[f64], _: &mut [f64]| unreachable!("SHINE spends no VJPs");
+/// let bw = ShineBackward.direction(&mut sess, est.forward(), &dz, &mut no_vjp, None);
+/// assert_eq!(bw.matvecs, 0);
+/// let mut w_ref = vec![0.0f64; 6];
+/// est.low_rank().apply_t(&dz, &mut w_ref); // w = Hᵀ dz, shared from the forward
+/// assert_eq!(bw.w, w_ref);
+/// ```
 pub trait Backward<E: Elem> {
     fn name(&self) -> &'static str;
 

@@ -233,6 +233,7 @@ fn serving_batch_is_allocation_free(solver: SolverSpec, name: &str) {
             calib: SolverSpec::broyden(4).with_tol(-1.0).with_max_iters(6),
             fallback_ratio: Some(1e30), // guard scan runs, never triggers
             recalib: None,
+            col_budget: None,
         },
     );
     eng.calibrate(

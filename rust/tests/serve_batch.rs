@@ -11,7 +11,7 @@
 use shine::linalg::vecops::Elem;
 use shine::qn::workspace::Workspace;
 use shine::qn::InvOp;
-use shine::serve::{EngineConfig, ServeEngine, SynthDeq};
+use shine::serve::{Admission, EngineConfig, ServeEngine, SynthDeq};
 use shine::solvers::fixed_point::{
     anderson_solve_batch, anderson_solve_ws, picard_solve, picard_solve_batch, ColStats,
 };
@@ -165,6 +165,214 @@ fn anderson_batch_parity_f32() {
     }
 }
 
+/// Serve every problem in `p` through [`ServeEngine::process_streaming`]
+/// with a block narrower than the problem count, so later requests are
+/// admitted **mid-solve** into columns freed by earlier retirements.
+/// Returns the per-request retirements (by request id) and how many were
+/// admitted while another column was already mid-flight.
+fn run_streaming<E: Elem>(
+    p: &Problems<E>,
+    spec: SolverSpec,
+    cap: usize,
+) -> (Vec<(Vec<E>, ColStats)>, usize) {
+    let nb = p.cs.len();
+    let d = p.d;
+    // Uncalibrated on purpose: this pins the forward trajectory (w = dz
+    // identity backward); the backward contract is pinned elsewhere.
+    let mut engine: ServeEngine<E> = ServeEngine::new(
+        d,
+        EngineConfig {
+            max_batch: cap,
+            solver: spec,
+            calib: SolverSpec::broyden(10).with_tol(spec.tol).with_max_iters(40),
+            fallback_ratio: None,
+            recalib: None,
+            col_budget: None,
+        },
+    );
+    let mut next = 0usize;
+    let mut midflight_admissions = 0usize;
+    // Columns in flight, tracked caller-side; a Cell because both the
+    // admit and the retire closure touch it.
+    let live = std::cell::Cell::new(0usize);
+    let mut done: Vec<Option<(Vec<E>, ColStats)>> = vec![None; nb];
+    let rep = engine.process_streaming(
+        p.batch_g(),
+        || cap,
+        |z: &mut [E], c: &mut [E]| {
+            if next >= nb {
+                return None;
+            }
+            let id = next;
+            z.copy_from_slice(&p.z0s[id]);
+            c.iter_mut().for_each(|x| *x = E::ZERO);
+            if live.get() > 0 {
+                midflight_admissions += 1;
+            }
+            live.set(live.get() + 1);
+            next += 1;
+            Some(Admission {
+                id,
+                budget: spec.max_iters,
+            })
+        },
+        |id, z, _w, st, evicted| {
+            assert!(!evicted, "no col_budget configured");
+            live.set(live.get() - 1);
+            done[id] = Some((z.to_vec(), st));
+        },
+    );
+    assert_eq!(rep.served, nb);
+    assert!(rep.all_converged);
+    (
+        done.into_iter().map(|s| s.expect("retired")).collect(),
+        midflight_admissions,
+    )
+}
+
+fn picard_streaming_parity<E: Elem>(seed: u64, tol: f64) {
+    let d = 20;
+    let nb = 6;
+    let p: Problems<E> = Problems::new(d, nb, seed);
+    let spec = SolverSpec::picard(1.0).with_tol(tol).with_max_iters(400);
+    let (done, midflight) = run_streaming(&p, spec, 2);
+    // With a width-2 block and factors spread over [0.15, 0.55), columns
+    // retire at different sweeps, so at least nb − 2 admissions land next
+    // to a mid-flight neighbour — the case the parity below is about.
+    assert!(midflight >= nb - 2, "only {midflight} mid-solve admissions");
+    for (j, (z, st)) in done.iter().enumerate() {
+        let (z_ref, rn, it) = picard_solve(
+            |z: &[E], out: &mut [E]| col_g(p.cs[j], &p.bs[j], z, out),
+            &p.z0s[j],
+            1.0,
+            tol,
+            400,
+        );
+        assert!(z[..] == z_ref[..], "req {j}: iterate mismatch");
+        assert_eq!(st.iters, it, "req {j}: iteration count");
+        assert_eq!(st.residual, rn, "req {j}: residual bits");
+        assert!(st.converged, "req {j} must converge");
+    }
+}
+
+fn anderson_streaming_parity<E: Elem>(seed: u64, tol: f64) {
+    let d = 16;
+    let nb = 5;
+    let m = 4;
+    let p: Problems<E> = Problems::new(d, nb, seed);
+    let spec = SolverSpec::anderson(m, 1.0).with_tol(tol).with_max_iters(250);
+    let (done, midflight) = run_streaming(&p, spec, 2);
+    assert!(midflight >= nb - 2, "only {midflight} mid-solve admissions");
+    let mut ws: Workspace<E> = Workspace::new();
+    for (j, (z, st)) in done.iter().enumerate() {
+        let (z_ref, rn, it) = anderson_solve_ws(
+            |z: &[E], out: &mut [E]| col_g(p.cs[j], &p.bs[j], z, out),
+            &p.z0s[j],
+            m,
+            tol,
+            250,
+            1.0,
+            &mut ws,
+        );
+        assert!(z[..] == z_ref[..], "req {j}: iterate mismatch");
+        assert_eq!(st.iters, it, "req {j}: iteration count");
+        assert_eq!(st.residual, rn, "req {j}: residual bits");
+        assert!(st.converged, "req {j} must converge");
+    }
+}
+
+#[test]
+fn picard_streaming_admission_parity_f64() {
+    for seed in [31u64, 32, 33] {
+        picard_streaming_parity::<f64>(seed, 1e-8);
+    }
+}
+
+#[test]
+fn picard_streaming_admission_parity_f32() {
+    for seed in [34u64, 35, 36] {
+        picard_streaming_parity::<f32>(seed, 1e-4);
+    }
+}
+
+#[test]
+fn anderson_streaming_admission_parity_f64() {
+    for seed in [37u64, 38, 39] {
+        anderson_streaming_parity::<f64>(seed, 1e-7);
+    }
+}
+
+#[test]
+fn anderson_streaming_admission_parity_f32() {
+    for seed in [40u64, 41, 42] {
+        anderson_streaming_parity::<f32>(seed, 1e-4);
+    }
+}
+
+#[test]
+fn streaming_admission_preserves_fifo_within_key() {
+    // Streaming admission pulls from the keyed queue one request at a time
+    // (KeyedScheduler::pop_front_key); admission order for the served key
+    // must be exactly its FIFO push order, and the other key's queue must
+    // come through untouched afterwards.
+    use shine::serve::{KeyedScheduler, ModelKey, SchedulerConfig};
+
+    let d = 20;
+    let nb = 6;
+    let p: Problems<f64> = Problems::new(d, nb, 55);
+    let ka = ModelKey::new(0, 0);
+    let kb = ModelKey::new(1, 0);
+    let mut sched: KeyedScheduler<usize> = KeyedScheduler::new(SchedulerConfig {
+        max_batch: 2,
+        max_wait: 1e-3,
+        queue_cap: 64,
+    });
+    // Interleave pushes: A gets ids 0..nb, B gets sentinel payloads.
+    for id in 0..nb {
+        sched.push(id as f64, ka, id).unwrap();
+        sched.push(id as f64 + 0.5, kb, 100 + id).unwrap();
+    }
+    let mut engine: ServeEngine<f64> = ServeEngine::new(
+        d,
+        EngineConfig {
+            max_batch: 2,
+            solver: SolverSpec::picard(1.0).with_tol(1e-8).with_max_iters(400),
+            ..Default::default()
+        },
+    );
+    let mut admitted: Vec<usize> = Vec::new();
+    let mut served: Vec<usize> = Vec::new();
+    let rep = engine.process_streaming(
+        p.batch_g(),
+        || 2,
+        |z: &mut [f64], c: &mut [f64]| {
+            let (_wait, id) = sched.pop_front_key(ka, 10.0)?;
+            z.copy_from_slice(&p.z0s[id]);
+            c.iter_mut().for_each(|x| *x = 0.0);
+            admitted.push(id);
+            Some(Admission { id, budget: 400 })
+        },
+        |id, _z, _w, st, _evicted| {
+            assert!(st.converged);
+            served.push(id);
+        },
+    );
+    assert_eq!(rep.served, nb);
+    // Admission is FIFO-within-key even though retirement frees columns in
+    // convergence order, not arrival order.
+    assert_eq!(admitted, (0..nb).collect::<Vec<_>>());
+    assert_eq!(served.len(), nb);
+    // Key B's queue is untouched and still FIFO.
+    assert_eq!(sched.count_key(ka), 0);
+    assert_eq!(sched.count_key(kb), nb);
+    let mut out = Vec::new();
+    sched.drain_key(kb, nb, 10.0, &mut out);
+    assert_eq!(
+        out.iter().map(|(_, p)| *p).collect::<Vec<_>>(),
+        (100..100 + nb).collect::<Vec<_>>()
+    );
+}
+
 #[test]
 fn native_deq_residual_serves_through_engine() {
     // The advertised batched-DEQ-serving integration, end to end: the
@@ -272,6 +480,7 @@ fn serving_pipeline_matches_per_request_reference() {
             calib: SolverSpec::broyden(20).with_tol(1e-5).with_max_iters(40),
             fallback_ratio: None,
             recalib: None,
+            col_budget: None,
         },
     );
     engine.calibrate(

@@ -25,6 +25,7 @@ fn cfg(max_batch: usize, tol: f64) -> EngineConfig {
         calib: SolverSpec::broyden(20).with_tol(tol).with_max_iters(40),
         fallback_ratio: None,
         recalib: None,
+        col_budget: None,
     }
 }
 
