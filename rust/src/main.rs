@@ -161,10 +161,24 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                     "continuous batching: iterations per block residency before a \
                      straggler is evicted for retry (0 disables eviction)",
                 )
+                .flag(
+                    "shards",
+                    "0",
+                    "scheduler shards for the sharded front-door cell (0 = skip; \
+                     N >= 1 replays the open-loop schedule through a ShardedRouter \
+                     with N worker threads)",
+                )
+                .flag(
+                    "swap-at",
+                    "0",
+                    "submission index at which model 0 rolls to a new version via \
+                     the zero-downtime swap (0 = no swap; needs --shards >= 1)",
+                )
                 .switch(
                     "smoke",
                     "tiny sizes for CI (overrides d/block/requests/batch-sizes and \
-                     adds a two-model routed case)",
+                     adds a two-model routed case plus a two-shard sharded cell \
+                     with one mid-run version swap)",
                 )
                 .parse(rest)?;
             cmd_serve_bench(&a)
@@ -339,10 +353,12 @@ fn cmd_hpo(a: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
     use shine::serve::{
-        run_open_loop, run_routed_closed_loop, run_suite, Arrivals, EngineConfig, ModelKey,
-        OpenLoopConfig, RecalibPolicy, RoutedLoadConfig, Router, ServeEngine, SynthDeq,
+        run_open_loop, run_routed_closed_loop, run_sharded_open_loop, run_suite, Arrivals,
+        EngineConfig, ModelKey, OpenLoopConfig, RecalibPolicy, RoutedLoadConfig, Router,
+        ServeEngine, ShardedLoadConfig, SharedModel, SynthDeq,
     };
     use shine::solvers::session::SolverSpec;
+    use std::sync::Arc;
 
     let smoke = a.get_bool("smoke");
     let d = if smoke { 256 } else { a.get_usize("d") };
@@ -536,6 +552,93 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
         }
         if !rep.all_converged {
             anyhow::bail!("routed workload had unconverged columns (tol {tol})");
+        }
+    }
+
+    // Sharded front door: the same open-loop discipline through a
+    // ShardedRouter with N worker shards (key-affinity routing, work
+    // stealing, zero-downtime version swap). The smoke run pins a
+    // two-shard, two-model cell with one mid-run swap and gates hard on
+    // it — convergence, full schedule served, and a completed cutover.
+    let shards = if smoke { 2 } else { a.get_usize("shards") };
+    let swap_at = if smoke { total / 2 } else { a.get_usize("swap-at") };
+    if shards > 0 {
+        let bsz = *batch_sizes.iter().max().expect("non-empty");
+        let engine_cfg = EngineConfig {
+            max_batch: bsz,
+            solver,
+            calib: SolverSpec::broyden(30).with_tol(tol).with_max_iters(60),
+            fallback_ratio: Some(10.0),
+            recalib: Some(RecalibPolicy::default()),
+            col_budget: None,
+        };
+        let sharded_models = models.max(2);
+        let mk = move |m: u32, v: u32| -> SharedModel<f32> {
+            Arc::new(SynthDeq::<f32>::new(
+                d,
+                block,
+                seed ^ m as u64 ^ ((v as u64) << 32),
+            ))
+        };
+        // Oversaturate the offered rate so the measured req/s reflects the
+        // router's aggregate capacity, not the arrival schedule.
+        let rate = 4.0 * rows.last().expect("non-empty").report.rps;
+        let lc = ShardedLoadConfig {
+            shards,
+            models: sharded_models,
+            total,
+            arrivals: Arrivals::Poisson { rate },
+            max_batch: bsz,
+            max_wait: 1e-3,
+            hot_share: None,
+            swap_at: if (1..total).contains(&swap_at) {
+                Some(swap_at)
+            } else {
+                None
+            },
+        };
+        eprintln!(
+            "sharded: {shards} shards, {sharded_models} models, poisson {rate:.1} req/s, \
+             swap at {:?}",
+            lc.swap_at
+        );
+        let rep = run_sharded_open_loop::<f32>(engine_cfg, &mk, &lc, seed ^ 0x5A4D);
+        println!(
+            "sharded {shards}x: {:.1} req/s (p50 {:.3} ms, p99 {:.3} ms, {} steals, \
+             {} calibrations, {} re-calibrations)",
+            rep.rps,
+            rep.p50_latency_ms,
+            rep.p99_latency_ms,
+            rep.steals,
+            rep.calibrations,
+            rep.recalibrations
+        );
+        for (i, n) in rep.per_shard_served.iter().enumerate() {
+            println!("  shard {i}: {n} requests");
+        }
+        if let Some(sw) = rep.swap {
+            println!(
+                "  swap requested at #{}: first new-version submission {:?}, \
+                 {} served old / {} served new, cutover completed: {}",
+                sw.requested_at, sw.cutover_at, sw.old_served, sw.new_served, sw.completed
+            );
+        }
+        if rep.requests != total {
+            anyhow::bail!("sharded cell served {}/{} requests", rep.requests, total);
+        }
+        if !rep.all_converged {
+            anyhow::bail!("sharded workload had unconverged columns (tol {tol})");
+        }
+        if let Some(sw) = rep.swap {
+            if !sw.completed {
+                anyhow::bail!("live swap never cut over to the new version");
+            }
+            if sw.old_served == 0 {
+                anyhow::bail!(
+                    "zero-downtime swap served nothing on the old version — \
+                     the roll was not actually live"
+                );
+            }
         }
     }
     Ok(())

@@ -20,11 +20,21 @@
 //! columns mid-solve) or **discrete batch formation** (the [`Scheduler`]'s
 //! drain → solve cycle), so the two modes' p95/p99 are directly
 //! comparable — same seed, same arrival instants, same cotangents.
+//!
+//! The **sharded** driver ([`run_sharded_open_loop`]) replays one open-loop
+//! schedule through the [`ShardedRouter`] front door: the schedule (arrival
+//! instants, per-request model choice with an optional hot-key skew, and
+//! cotangents) is precomputed from the seed, so runs that differ only in
+//! shard count measure the identical offered load — the shard-scaling cells
+//! of `BENCH_serve.json`. It can also roll the hot model to a new version
+//! mid-run ([`ShardedLoadConfig::swap_at`]) and report how the served
+//! traffic partitioned across the cutover.
 
 use crate::linalg::vecops::Elem;
 use crate::serve::engine::{Admission, EngineConfig, ServeEngine};
 use crate::serve::router::{KeyedScheduler, ModelKey, Router};
 use crate::serve::scheduler::{Scheduler, SchedulerConfig};
+use crate::serve::shard::{ShardConfig, ShardRequest, ShardedRouter, SharedModel};
 use crate::serve::synth::SynthDeq;
 use crate::solvers::fixed_point::ColStats;
 use crate::solvers::session::SolverSpec;
@@ -692,9 +702,198 @@ pub fn run_routed_closed_loop<E: Elem>(
     }
 }
 
+/// Config of one sharded open-loop run.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedLoadConfig {
+    /// Scheduler shards (worker threads) of the [`ShardedRouter`].
+    pub shards: usize,
+    /// Models registered up front (ids `0..models`, all at version 0).
+    pub models: usize,
+    /// Total requests in the arrival schedule.
+    pub total: usize,
+    /// Interarrival process (identical schedule across shard counts).
+    pub arrivals: Arrivals,
+    /// Per-shard scheduler batch cap; must not exceed the engine's.
+    pub max_batch: usize,
+    /// Partial-batch deadline in seconds.
+    pub max_wait: f64,
+    /// Probability a request targets model 0 (the rest spread uniformly
+    /// over the others) — the skew knob that exercises work stealing.
+    /// `None` spreads uniformly over all models.
+    pub hot_share: Option<f64>,
+    /// Submission index at which model 0 rolls to version 1 via the
+    /// zero-downtime [`ShardedRouter::swap`]. `None` = no swap.
+    pub swap_at: Option<usize>,
+}
+
+/// How the served traffic of model 0 partitioned across a mid-run swap.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SwapTelemetry {
+    /// Submission index at which the roll was requested.
+    pub requested_at: usize,
+    /// First submission index routed to the new version (`None` if the
+    /// background calibration outlasted the schedule).
+    pub cutover_at: Option<usize>,
+    /// Requests served on the old / new version of the rolled model.
+    pub old_served: usize,
+    pub new_served: usize,
+    /// The new version ended up the live route.
+    pub completed: bool,
+}
+
+/// What one sharded open-loop run measured.
+#[derive(Clone, Debug, Default)]
+pub struct ShardedReport {
+    pub shards: usize,
+    pub requests: usize,
+    pub seconds: f64,
+    /// Served requests per second of wall time.
+    pub rps: f64,
+    /// Nominal offered rate of the arrival schedule.
+    pub offered_rps: f64,
+    /// End-to-end latency quantiles (admission → batch completion), ms.
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    /// Whole-queue steals across all shards.
+    pub steals: usize,
+    /// Engines built + calibrated across all shards.
+    pub calibrations: usize,
+    /// Trip-rate re-calibrations across all shards.
+    pub recalibrations: usize,
+    /// Requests served per shard, index = shard id.
+    pub per_shard_served: Vec<usize>,
+    /// Present when [`ShardedLoadConfig::swap_at`] was set.
+    pub swap: Option<SwapTelemetry>,
+    pub all_converged: bool,
+}
+
+/// Replay one precomputed open-loop schedule through a [`ShardedRouter`]
+/// built to `lc.shards`. `mk_model(model, version)` constructs the
+/// parameter snapshot for a key — called for ids `0..models` at version 0
+/// up front, and again for `(0, 1)` if a mid-run swap is configured. All
+/// models must share one fixed-point dimension. The submission thread
+/// paces itself to the arrival instants; responses are collected after the
+/// full schedule is offered, so the router's own drain loops set the pace
+/// (open-loop discipline).
+pub fn run_sharded_open_loop<E: Elem>(
+    engine: EngineConfig,
+    mk_model: &dyn Fn(u32, u32) -> SharedModel<E>,
+    lc: &ShardedLoadConfig,
+    seed: u64,
+) -> ShardedReport {
+    assert!(lc.shards >= 1 && lc.models >= 1 && lc.total >= 1 && lc.max_batch >= 1);
+    if let Some(at) = lc.swap_at {
+        assert!(at < lc.total, "swap_at must fall inside the schedule");
+    }
+    let sched = SchedulerConfig {
+        max_batch: lc.max_batch,
+        max_wait: lc.max_wait,
+        // One shard could own (or steal) the whole schedule: never reject.
+        queue_cap: lc.total.max(lc.max_batch),
+    };
+    let router: ShardedRouter<E> = ShardedRouter::new(ShardConfig::new(lc.shards, engine, sched));
+    let d = mk_model(0, 0).dim();
+    for m in 0..lc.models as u32 {
+        let model = mk_model(m, 0);
+        assert_eq!(
+            model.dim(),
+            d,
+            "sharded driver requires one shared fixed-point dimension"
+        );
+        router.register(ModelKey::new(m, 0), model);
+    }
+    // Precompute the offered load — arrival instants, per-request model
+    // choice, cotangents — identical across shard counts at one seed.
+    let mut rng = Rng::new(seed ^ 0x54A2D);
+    let mut arrivals = Vec::with_capacity(lc.total);
+    let mut t = 0.0f64;
+    for _ in 0..lc.total {
+        t += lc.arrivals.gap(&mut rng);
+        arrivals.push(t);
+    }
+    let model_of: Vec<u32> = (0..lc.total)
+        .map(|_| match lc.hot_share {
+            Some(p) if lc.models > 1 => {
+                if rng.uniform() < p {
+                    0
+                } else {
+                    1 + rng.below(lc.models - 1) as u32
+                }
+            }
+            _ => rng.below(lc.models) as u32,
+        })
+        .collect();
+    let cots: Vec<E> = (0..lc.total * d).map(|_| E::from_f64(rng.normal())).collect();
+
+    let mut routed_key: Vec<ModelKey> = Vec::with_capacity(lc.total);
+    let sw = Stopwatch::start();
+    for i in 0..lc.total {
+        let lead = arrivals[i] - sw.elapsed();
+        if lead > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(lead));
+        }
+        if lc.swap_at == Some(i) {
+            // Zero-downtime roll of the hot model: calibrates in the
+            // background while version 0 keeps serving — submissions below
+            // keep flowing and route to whichever version is live.
+            router.swap(ModelKey::new(0, 1), mk_model(0, 1));
+        }
+        let req = ShardRequest {
+            id: i,
+            z0: vec![E::ZERO; d],
+            cotangent: cots[i * d..(i + 1) * d].to_vec(),
+        };
+        let key = router
+            .submit(model_of[i], req)
+            .expect("per-shard queues sized for the whole schedule");
+        routed_key.push(key);
+    }
+    let responses = router.collect(lc.total);
+    let seconds = sw.elapsed();
+    if lc.swap_at.is_some() {
+        // Let a calibration that outlasted the schedule finish before the
+        // telemetry snapshot (no request is waiting on it).
+        router.wait_live(ModelKey::new(0, 1));
+    }
+    let shard_stats = router.shard_stats();
+    let latencies: Vec<f64> = responses.iter().map(|r| r.completed - r.enqueued).collect();
+    let all_converged = responses.iter().all(|r| r.stats.converged);
+    let swap = lc.swap_at.map(|at| {
+        let old = ModelKey::new(0, 0);
+        let new = ModelKey::new(0, 1);
+        SwapTelemetry {
+            requested_at: at,
+            cutover_at: routed_key.iter().position(|k| *k == new),
+            old_served: responses.iter().filter(|r| r.key == old).count(),
+            new_served: responses.iter().filter(|r| r.key == new).count(),
+            completed: router.live_version(0) == Some(1),
+        }
+    });
+    let rep = ShardedReport {
+        shards: lc.shards,
+        requests: responses.len(),
+        seconds,
+        rps: responses.len() as f64 / seconds.max(1e-12),
+        offered_rps: lc.arrivals.rate(),
+        p50_latency_ms: stats::median(&latencies) * 1e3,
+        p95_latency_ms: stats::quantile(&latencies, 0.95) * 1e3,
+        p99_latency_ms: stats::quantile(&latencies, 0.99) * 1e3,
+        steals: shard_stats.iter().map(|s| s.steals).sum(),
+        calibrations: shard_stats.iter().map(|s| s.calibrations).sum(),
+        recalibrations: shard_stats.iter().map(|s| s.recalibrations).sum(),
+        per_shard_served: shard_stats.iter().map(|s| s.served).collect(),
+        swap,
+        all_converged,
+    };
+    router.shutdown();
+    rep
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn closed_loop_serves_every_request() {
@@ -794,5 +993,43 @@ mod tests {
         assert_eq!(rep.requests, 9);
         assert!(sw.elapsed() < 5.0, "partial batches must not wait out max_wait");
         assert!(rep.mean_batch <= 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn sharded_open_loop_serves_schedule_and_swaps() {
+        let d = 32;
+        let engine = EngineConfig {
+            max_batch: 4,
+            ..Default::default()
+        }
+        .with_tol(1e-6);
+        let mk = |m: u32, v: u32| -> SharedModel<f64> {
+            Arc::new(SynthDeq::<f64>::new(d, 8, 7 + 13 * m as u64 + 101 * v as u64))
+        };
+        let lc = ShardedLoadConfig {
+            shards: 2,
+            models: 2,
+            total: 24,
+            arrivals: Arrivals::Poisson { rate: 50_000.0 },
+            max_batch: 4,
+            max_wait: 1e-4,
+            hot_share: Some(0.75),
+            swap_at: Some(12),
+        };
+        let rep = run_sharded_open_loop(engine, &mk, &lc, 3);
+        assert_eq!(rep.requests, 24);
+        assert!(rep.all_converged);
+        assert!(rep.rps > 0.0);
+        assert_eq!(rep.shards, 2);
+        assert_eq!(rep.per_shard_served.iter().sum::<usize>(), 24);
+        let swap = rep.swap.expect("swap telemetry present");
+        assert!(swap.completed, "cutover must finish before the report");
+        assert_eq!(swap.requested_at, 12);
+        assert!(swap.old_served >= 1, "old version served the early hot traffic");
+        let hot_total = swap.old_served + swap.new_served;
+        assert!((1..=24).contains(&hot_total));
+        // Two models at v0 plus the rolled version ⇒ at least three
+        // calibrations (steals may add re-homed copies on top).
+        assert!(rep.calibrations >= 3);
     }
 }

@@ -38,6 +38,16 @@
 //!   hook for the per-key [`AdaptiveWidth`] AIMD controller. The
 //!   [`loadgen::run_open_loop`] driver measures it against discrete batch
 //!   formation under Poisson/Pareto open-loop arrivals.
+//! * **Sharded scale-out** — [`ShardedRouter`] spawns N scheduler shards on
+//!   `std::thread` workers, routes every key's traffic to one shard by
+//!   affinity hash (the per-key calibration estimate never crosses
+//!   threads), steals **whole per-key queues** from backlogged shards
+//!   (FIFO-within-key survives), and rolls model versions with zero
+//!   downtime — background calibration, atomic cutover, retire-and-drain
+//!   of exactly the old key. Per-request results are bit-identical to the
+//!   single-shard router (pinned in `rust/tests/serve_shard.rs`); the
+//!   [`loadgen::run_sharded_open_loop`] driver produces the shard-scaling
+//!   and live-swap cells of `BENCH_serve.json`.
 //!
 //! # Invariants and contracts
 //!
@@ -110,13 +120,18 @@ pub mod engine;
 pub mod loadgen;
 pub mod router;
 pub mod scheduler;
+pub mod shard;
 pub mod synth;
 
 pub use engine::{Admission, BatchReport, EngineConfig, RecalibPolicy, ServeEngine, StreamReport};
 pub use loadgen::{
-    run_closed_loop, run_open_loop, run_routed_closed_loop, run_suite, Arrivals, LoadConfig,
-    OpenLoopConfig, OpenLoopReport, RoutedLoadConfig, RoutedReport, SuiteRow, ThroughputReport,
+    run_closed_loop, run_open_loop, run_routed_closed_loop, run_sharded_open_loop, run_suite,
+    Arrivals, LoadConfig, OpenLoopConfig, OpenLoopReport, RoutedLoadConfig, RoutedReport,
+    ShardedLoadConfig, ShardedReport, SuiteRow, SwapTelemetry, ThroughputReport,
 };
 pub use router::{BatchResidual, KeyedScheduler, ModelKey, Router};
 pub use scheduler::{AdaptiveWidth, AdaptiveWidthConfig, Scheduler, SchedulerConfig};
+pub use shard::{
+    ShardConfig, ShardRequest, ShardResponse, ShardStats, ShardedRouter, SharedModel, SubmitError,
+};
 pub use synth::SynthDeq;

@@ -8,11 +8,17 @@
 //! cache key — [`ModelKey`] = model id + parameter version — and a routed
 //! tier is a map from keys to engines:
 //!
-//! * [`KeyedScheduler`] — one bounded FIFO admission queue for all models.
-//!   Batch formation **never crosses keys**: a batch is released either
-//!   when some key has `max_batch` requests queued, or when the oldest
-//!   request has waited `max_wait` (releasing the oldest request's key
-//!   only). FIFO order is preserved within each key.
+//! * [`KeyedScheduler`] — one bounded admission surface for all models,
+//!   organized as per-key FIFO queues. Batch formation **never crosses
+//!   keys**: a batch is released either when some key has `max_batch`
+//!   requests queued, or when the oldest request has waited `max_wait`
+//!   (releasing the oldest request's key only). FIFO order is preserved
+//!   within each key. Drained-empty queues are garbage-collected (their
+//!   buffers recycled through a bounded spare pool) so a long tail of cold
+//!   keys cannot grow the key map, and whole per-key queues can be moved
+//!   between schedulers ([`KeyedScheduler::take_queue`] /
+//!   [`KeyedScheduler::inject_queue`]) — the work-stealing primitive
+//!   [`crate::serve::shard::ShardedRouter`] builds on.
 //! * [`Router`] — per-key [`ServeEngine`]s plus their residual models.
 //!   [`Router::register`] calibrates the new key's engine and **evicts any
 //!   older parameter version of the same model** (a version bump
@@ -75,21 +81,51 @@ impl<E: Elem> BatchResidual<E> for SynthDeq<E> {
     }
 }
 
-/// One admission queue for every model: a bounded FIFO of
-/// (arrival, key, payload) with per-key batch formation. Same
+/// Emptied per-key queues hand their buffer back to a bounded spare pool
+/// so a steady-state workload churns zero allocations while a long tail of
+/// cold keys still cannot grow the pool without bound.
+const SPARE_QUEUE_CAP: usize = 8;
+
+/// One live per-key FIFO: `(arrival, payload)` pairs in admission order.
+#[derive(Debug)]
+struct KeyQueue<T> {
+    key: ModelKey,
+    q: VecDeque<(f64, T)>,
+}
+
+/// One admission surface for every model: per-key bounded FIFO queues
+/// (shared `queue_cap` across keys) with per-key batch formation. Same
 /// clock-agnostic discipline as [`crate::serve::Scheduler`] — every
 /// operation takes `now` — and the same backpressure contract (`push`
-/// rejects when full).
+/// rejects when the shared capacity is exhausted).
+///
+/// The key map is self-cleaning: a key's entry is created when the first
+/// request of a cohort arrives and garbage-collected the moment its queue
+/// drains empty (buffer recycled through a bounded spare pool), so a
+/// long-running server visited by a long tail of cold [`ModelKey`]s holds
+/// at most `O(live keys + SPARE_QUEUE_CAP)` queue state — pinned by
+/// `keyed_scheduler_gcs_cold_keys`. Entries are kept in cohort-arrival
+/// order, which is what makes `ready`'s full-batch tie-breaking and
+/// `next_deadline` deterministic.
+///
+/// Whole queues can also be moved between schedulers —
+/// [`KeyedScheduler::take_queue`] / [`KeyedScheduler::inject_queue`] —
+/// preserving per-request arrival stamps and FIFO order. That is the
+/// work-stealing primitive [`crate::serve::shard::ShardedRouter`] uses to
+/// re-home a backlogged key onto an idle shard.
 #[derive(Debug)]
 pub struct KeyedScheduler<T> {
     cfg: SchedulerConfig,
-    queue: VecDeque<(f64, ModelKey, T)>,
-    /// Per-key queued counts, maintained incrementally by `push` /
-    /// `drain_key` (emptied keys are removed, so a key's position tracks
-    /// the arrival of its oldest queued cohort). Keeps every poll —
-    /// `ready` / `next_deadline` run once per serving-loop iteration —
-    /// O(#keys) and allocation-free at steady state.
-    counts: Vec<(ModelKey, usize)>,
+    /// Live per-key queues, in cohort-arrival order (a key enters at the
+    /// back when the first request of a cohort arrives and leaves when its
+    /// queue empties). Every poll — `ready` / `next_deadline` run once per
+    /// serving-loop iteration — is O(#live keys) and allocation-free.
+    keys: Vec<KeyQueue<T>>,
+    /// Recycled buffers from garbage-collected keys (bounded by
+    /// [`SPARE_QUEUE_CAP`]).
+    spare: Vec<VecDeque<(f64, T)>>,
+    /// Total queued requests across keys (the backpressure quantity).
+    len: usize,
     pub accepted: usize,
     pub rejected: usize,
 }
@@ -103,8 +139,9 @@ impl<T> KeyedScheduler<T> {
         );
         KeyedScheduler {
             cfg,
-            queue: VecDeque::with_capacity(cfg.queue_cap),
-            counts: Vec::new(),
+            keys: Vec::new(),
+            spare: Vec::new(),
+            len: 0,
             accepted: 0,
             rejected: 0,
         }
@@ -115,52 +152,104 @@ impl<T> KeyedScheduler<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.len == 0
+    }
+
+    /// Live keys currently holding queued requests — the leak-regression
+    /// observable: after every queue drains this must be 0.
+    pub fn key_count(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Recycled queue buffers held for reuse (bounded by
+    /// [`SPARE_QUEUE_CAP`]).
+    pub fn spare_queues(&self) -> usize {
+        self.spare.len()
+    }
+
+    fn entry(&self, key: ModelKey) -> Option<&KeyQueue<T>> {
+        self.keys.iter().find(|e| e.key == key)
+    }
+
+    /// Remove the (drained-empty) entry at `pos`, recycling its buffer.
+    fn gc_at(&mut self, pos: usize) {
+        let kq = self.keys.remove(pos);
+        debug_assert!(kq.q.is_empty(), "only empty queues are collected");
+        if self.spare.len() < SPARE_QUEUE_CAP {
+            self.spare.push(kq.q);
+        }
     }
 
     /// Admit a request for `key` at time `now`; rejects (returning the
-    /// payload) when the shared queue is full.
+    /// payload) when the shared capacity is exhausted.
     pub fn push(&mut self, now: f64, key: ModelKey, item: T) -> Result<(), T> {
-        if self.queue.len() >= self.cfg.queue_cap {
+        if self.len >= self.cfg.queue_cap {
             self.rejected += 1;
             return Err(item);
         }
-        self.queue.push_back((now, key, item));
-        match self.counts.iter_mut().find(|(k, _)| *k == key) {
-            Some(e) => e.1 += 1,
-            None => self.counts.push((key, 1)),
+        match self.keys.iter_mut().find(|e| e.key == key) {
+            Some(e) => e.q.push_back((now, item)),
+            None => {
+                let mut q = self.spare.pop().unwrap_or_default();
+                q.push_back((now, item));
+                self.keys.push(KeyQueue { key, q });
+            }
         }
+        self.len += 1;
         self.accepted += 1;
         Ok(())
     }
 
-    /// Queued requests for one key (O(#keys) registry lookup).
+    /// Queued requests for one key (O(#live keys) lookup).
     pub fn count_key(&self, key: ModelKey) -> usize {
-        self.counts
-            .iter()
-            .find(|(k, _)| *k == key)
-            .map(|(_, c)| *c)
-            .unwrap_or(0)
+        self.entry(key).map(|e| e.q.len()).unwrap_or(0)
     }
 
-    /// The key of the oldest queued request.
+    /// The key of the oldest queued request (earliest front arrival across
+    /// keys; cohort order breaks exact ties).
     pub fn front_key(&self) -> Option<ModelKey> {
-        self.queue.front().map(|(_, k, _)| *k)
+        self.oldest_front().map(|(_, k)| k)
     }
 
-    /// The first key in the count registry with a full batch queued
-    /// (registry order tracks each key's oldest queued cohort). O(#keys),
-    /// allocation-free — the routed serving loop polls this every
-    /// iteration.
+    /// `(arrival, key)` of the oldest queued request. A linear min-scan —
+    /// cohort order alone is not enough because `pop_front_key` can age a
+    /// later cohort's front past an earlier one's.
+    fn oldest_front(&self) -> Option<(f64, ModelKey)> {
+        let mut best: Option<(f64, ModelKey)> = None;
+        for e in &self.keys {
+            if let Some((t, _)) = e.q.front() {
+                if best.map(|(bt, _)| *t < bt).unwrap_or(true) {
+                    best = Some((*t, e.key));
+                }
+            }
+        }
+        best
+    }
+
+    /// The first key in cohort-arrival order with a full batch queued.
+    /// O(#live keys), allocation-free — the routed serving loop polls this
+    /// every iteration.
     fn first_full_key(&self) -> Option<ModelKey> {
-        self.counts
+        self.keys
             .iter()
-            .find(|(_, c)| *c >= self.cfg.max_batch)
-            .map(|(k, _)| *k)
+            .find(|e| e.q.len() >= self.cfg.max_batch)
+            .map(|e| e.key)
+    }
+
+    /// The key holding the most queued requests, as `(key, count)` — the
+    /// work-stealing victim-selection probe (first key wins exact ties).
+    pub fn heaviest_key(&self) -> Option<(ModelKey, usize)> {
+        let mut best: Option<(ModelKey, usize)> = None;
+        for e in &self.keys {
+            if best.map(|(_, n)| e.q.len() > n).unwrap_or(true) {
+                best = Some((e.key, e.q.len()));
+            }
+        }
+        best.filter(|(_, n)| *n > 0)
     }
 
     /// The batch releasable at time `now`, as `(key, count)` — never mixes
@@ -172,11 +261,11 @@ impl<T> KeyedScheduler<T> {
         if let Some(k) = self.first_full_key() {
             return Some((k, self.cfg.max_batch));
         }
-        let (t0, k0, _) = self.queue.front()?;
+        let (t0, k0) = self.oldest_front()?;
         if now - t0 >= self.cfg.max_wait {
             // Below a full batch by the check above, so release everything
             // this key has queued.
-            return Some((*k0, self.count_key(*k0)));
+            return Some((k0, self.count_key(k0)));
         }
         None
     }
@@ -188,7 +277,7 @@ impl<T> KeyedScheduler<T> {
         if self.first_full_key().is_some() {
             return None;
         }
-        self.queue.front().map(|(t, _, _)| t + self.cfg.max_wait)
+        self.oldest_front().map(|(t, _)| t + self.cfg.max_wait)
     }
 
     /// Pop the single oldest request of `key` as a
@@ -198,43 +287,65 @@ impl<T> KeyedScheduler<T> {
     /// within the key is preserved because this always takes the key's
     /// front. Other keys' requests keep their positions.
     pub fn pop_front_key(&mut self, key: ModelKey, now: f64) -> Option<(f64, T)> {
-        let i = self.queue.iter().position(|(_, k, _)| *k == key)?;
-        let (t, _, item) = self.queue.remove(i).expect("index in bounds");
-        if let Some(pos) = self.counts.iter().position(|(k, _)| *k == key) {
-            self.counts[pos].1 -= 1;
-            if self.counts[pos].1 == 0 {
-                self.counts.remove(pos);
-            }
+        let pos = self.keys.iter().position(|e| e.key == key)?;
+        let (t, item) = self.keys[pos].q.pop_front()?;
+        self.len -= 1;
+        if self.keys[pos].q.is_empty() {
+            self.gc_at(pos);
         }
         Some((now - t, item))
     }
 
     /// Drain up to `n` oldest requests of `key` (FIFO within the key) into
     /// `out` as `(queue latency at now, payload)` pairs. Other keys'
-    /// requests keep their positions; the queue is edited in place (no
-    /// rebuild, no allocation beyond the caller's reused `out`).
+    /// requests keep their positions; emptied queues are collected (no
+    /// allocation beyond the caller's reused `out`).
     pub fn drain_key(&mut self, key: ModelKey, n: usize, now: f64, out: &mut Vec<(f64, T)>) {
-        let mut taken = 0usize;
-        let mut i = 0usize;
-        while i < self.queue.len() && taken < n {
-            if self.queue[i].1 == key {
-                let (t, _, item) = self.queue.remove(i).expect("index in bounds");
-                out.push((now - t, item));
-                taken += 1;
-            } else {
-                i += 1;
-            }
+        let Some(pos) = self.keys.iter().position(|e| e.key == key) else {
+            return;
+        };
+        let take = n.min(self.keys[pos].q.len());
+        for _ in 0..take {
+            let (t, item) = self.keys[pos].q.pop_front().expect("len checked");
+            out.push((now - t, item));
         }
-        if taken > 0 {
-            if let Some(pos) = self.counts.iter().position(|(k, _)| *k == key) {
-                self.counts[pos].1 -= taken.min(self.counts[pos].1);
-                if self.counts[pos].1 == 0 {
-                    // Emptied keys leave the registry so a later re-arrival
-                    // re-enters at the back (cohort arrival order).
-                    self.counts.remove(pos);
-                }
-            }
+        self.len -= take;
+        if self.keys[pos].q.is_empty() {
+            self.gc_at(pos);
         }
+    }
+
+    /// Remove `key`'s entire queue — arrival stamps and FIFO order intact —
+    /// for injection into another scheduler ([`KeyedScheduler::inject_queue`]).
+    /// This is the whole-queue work-stealing primitive: stealing the queue
+    /// (rather than individual items) is what lets FIFO-within-key survive a
+    /// shard migration. Returns `None` if the key holds nothing.
+    pub fn take_queue(&mut self, key: ModelKey) -> Option<VecDeque<(f64, T)>> {
+        let pos = self.keys.iter().position(|e| e.key == key)?;
+        let kq = self.keys.remove(pos);
+        self.len -= kq.q.len();
+        Some(kq.q)
+    }
+
+    /// Install a queue moved from another scheduler (the receiving half of
+    /// [`KeyedScheduler::take_queue`]). The key must not already be live
+    /// here — shard ownership guarantees a key's queue exists in exactly
+    /// one scheduler at a time. Injection is exempt from `queue_cap`
+    /// backpressure: the requests were already admitted once, and a steal
+    /// must never drop them.
+    pub fn inject_queue(&mut self, key: ModelKey, q: VecDeque<(f64, T)>) {
+        assert!(
+            self.entry(key).is_none(),
+            "inject_queue: {key} already live in this scheduler"
+        );
+        if q.is_empty() {
+            if self.spare.len() < SPARE_QUEUE_CAP {
+                self.spare.push(q);
+            }
+            return;
+        }
+        self.len += q.len();
+        self.keys.push(KeyQueue { key, q });
     }
 }
 
@@ -477,6 +588,83 @@ mod tests {
         assert_eq!(s.push(0.0, A, 3), Err(3));
         assert_eq!(s.accepted, 2);
         assert_eq!(s.rejected, 1);
+    }
+
+    #[test]
+    fn keyed_scheduler_gcs_cold_keys() {
+        // Regression for the key-map leak: a long tail of cold ModelKeys,
+        // each seen once and drained, must not grow the key map. Before the
+        // per-key-queue GC the registry kept one entry per key ever seen.
+        let mut s = ks(4, 1.0, 64);
+        let mut out = Vec::new();
+        for i in 0..500u32 {
+            let k = ModelKey::new(i, 0);
+            s.push(i as f64, k, i).unwrap();
+            // At most two keys live at once (one cold key queued while the
+            // previous drains).
+            assert!(s.key_count() <= 2, "key map grew to {}", s.key_count());
+            out.clear();
+            s.drain_key(k, 4, i as f64 + 0.5, &mut out);
+            assert_eq!(out.len(), 1);
+        }
+        assert_eq!(s.key_count(), 0, "all cold keys collected");
+        assert!(s.is_empty());
+        // Buffers are recycled, not hoarded: the spare pool stays bounded.
+        assert!(s.spare_queues() <= 8, "spare pool bounded");
+        assert!(s.spare_queues() >= 1, "drained buffers are recycled");
+        assert_eq!(s.accepted, 500);
+    }
+
+    #[test]
+    fn keyed_scheduler_pop_gc_and_heaviest() {
+        let mut s = ks(8, 1.0, 16);
+        s.push(0.0, A, 0).unwrap();
+        s.push(0.1, B, 1).unwrap();
+        s.push(0.2, B, 2).unwrap();
+        assert_eq!(s.heaviest_key(), Some((B, 2)));
+        assert_eq!(s.key_count(), 2);
+        // pop_front_key drains A empty: its entry is collected.
+        assert_eq!(s.pop_front_key(A, 1.0).map(|(_, p)| p), Some(0));
+        assert_eq!(s.key_count(), 1);
+        assert_eq!(s.count_key(A), 0);
+        assert_eq!(s.heaviest_key(), Some((B, 2)));
+        assert_eq!(s.pop_front_key(B, 1.0).map(|(_, p)| p), Some(1));
+        assert_eq!(s.pop_front_key(B, 1.0).map(|(_, p)| p), Some(2));
+        assert_eq!(s.key_count(), 0);
+        assert_eq!(s.heaviest_key(), None);
+    }
+
+    #[test]
+    fn take_and_inject_queue_preserve_fifo_and_stamps() {
+        // The work-stealing primitive: move B's whole queue from a "victim"
+        // scheduler into a "thief" and verify arrival stamps + FIFO order
+        // survive the migration, and that the victim's view is consistent.
+        let mut victim = ks(4, 1.0, 16);
+        let mut thief = ks(4, 1.0, 16);
+        for (i, k) in [A, B, A, B, B].iter().enumerate() {
+            victim.push(0.1 * i as f64, *k, i as u32).unwrap();
+        }
+        assert_eq!(victim.take_queue(ModelKey::new(9, 9)).map(|q| q.len()), None);
+        let q = victim.take_queue(B).expect("B queued");
+        assert_eq!(q.len(), 3);
+        assert_eq!(victim.len(), 2);
+        assert_eq!(victim.count_key(B), 0);
+        assert_eq!(victim.key_count(), 1);
+        thief.inject_queue(B, q);
+        assert_eq!(thief.len(), 3);
+        assert_eq!(thief.count_key(B), 3);
+        // FIFO + stamps: payloads 1, 3, 4 with their original arrivals.
+        let (w, p) = thief.pop_front_key(B, 1.0).unwrap();
+        assert_eq!(p, 1);
+        assert!((w - 0.9).abs() < 1e-12, "arrival stamp moved with the queue");
+        let mut out = Vec::new();
+        thief.drain_key(B, 8, 1.0, &mut out);
+        assert_eq!(out.iter().map(|(_, p)| *p).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(thief.is_empty());
+        // The victim still serves A untouched, in order.
+        let mut out = Vec::new();
+        victim.drain_key(A, 8, 1.0, &mut out);
+        assert_eq!(out.iter().map(|(_, p)| *p).collect::<Vec<_>>(), vec![0, 2]);
     }
 
     fn router_cfg(b: usize) -> EngineConfig {

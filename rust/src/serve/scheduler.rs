@@ -216,6 +216,7 @@ impl AdaptiveWidth {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
     fn sched(max_batch: usize, max_wait: f64, cap: usize) -> Scheduler<u32> {
         Scheduler::new(SchedulerConfig {
@@ -332,6 +333,136 @@ mod tests {
         // Comfort band (between 0.7× and 1× target): hold.
         aw.observe(0.8e-3);
         assert_eq!(aw.width(), 8);
+    }
+
+    #[test]
+    fn prop_adaptive_width_stays_in_bounds() {
+        // Under ARBITRARY latency sequences (heavy-tailed, bursty, zero,
+        // huge) and arbitrary valid configs, the width never leaves
+        // [min_width, max_width] and the EWMA stays finite.
+        prop::check("adaptive width bounds", 200, |rng| {
+            let min_width = 1 + rng.below(4);
+            let max_width = min_width + rng.below(32);
+            let cfg = AdaptiveWidthConfig {
+                min_width,
+                max_width,
+                target_latency: rng.uniform_in(1e-6, 1e-1),
+                alpha: rng.uniform_in(0.05, 1.0),
+            };
+            let mut aw = AdaptiveWidth::new(cfg);
+            for _ in 0..200 {
+                let lat = match rng.below(4) {
+                    0 => 0.0,
+                    1 => rng.uniform_in(0.0, 2.0 * cfg.target_latency),
+                    2 => rng.exponential(1.0 / cfg.target_latency),
+                    _ => rng.pareto_interarrival(cfg.target_latency, 1.5),
+                };
+                aw.observe(lat);
+                prop::ensure(
+                    (cfg.min_width..=cfg.max_width).contains(&aw.width()),
+                    &format!(
+                        "width {} outside [{}, {}]",
+                        aw.width(),
+                        cfg.min_width,
+                        cfg.max_width
+                    ),
+                )?;
+                prop::ensure(
+                    aw.ewma_latency().map(|e| e.is_finite()).unwrap_or(false),
+                    "EWMA must be finite after an observation",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_adaptive_width_halves_on_sustained_overload() {
+        // Any sustained over-target sequence drives a geometric descent:
+        // once the EWMA crosses target, every further over-target
+        // observation halves the width (floored at min), so after
+        // log2(max) + slack observations the width must sit at min_width.
+        prop::check("adaptive width halves under overload", 100, |rng| {
+            let min_width = 1 + rng.below(3);
+            let max_width = (min_width + 1 + rng.below(31)).min(64);
+            let cfg = AdaptiveWidthConfig {
+                min_width,
+                max_width,
+                target_latency: rng.uniform_in(1e-5, 1e-2),
+                alpha: rng.uniform_in(0.3, 1.0),
+            };
+            let mut aw = AdaptiveWidth::new(cfg);
+            let mut prev = aw.width();
+            let mut crossed = false;
+            // Latencies 2×–10× target: the EWMA converges above target from
+            // any start, and with alpha ≥ 0.3 it crosses within a few steps.
+            for _ in 0..64 {
+                let lat = cfg.target_latency * rng.uniform_in(2.0, 10.0);
+                aw.observe(lat);
+                let e = aw.ewma_latency().expect("observed");
+                if e > cfg.target_latency {
+                    crossed = true;
+                    prop::ensure(
+                        aw.width() == (prev / 2).max(cfg.min_width),
+                        &format!("over-target step must halve: {prev} -> {}", aw.width()),
+                    )?;
+                }
+                prev = aw.width();
+            }
+            prop::ensure(crossed, "EWMA never crossed target under 2-10x load")?;
+            prop::ensure(
+                aw.width() == cfg.min_width,
+                &format!("sustained overload must floor width at {min_width}, got {prev}"),
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_adaptive_width_recovers_additively() {
+        // After any overload history, comfortable latencies (< 0.7×target)
+        // grow the width by EXACTLY one per observation until max_width.
+        prop::check("adaptive width additive recovery", 100, |rng| {
+            let min_width = 1 + rng.below(3);
+            let max_width = min_width + 1 + rng.below(31);
+            let cfg = AdaptiveWidthConfig {
+                min_width,
+                max_width,
+                target_latency: rng.uniform_in(1e-5, 1e-2),
+                alpha: rng.uniform_in(0.3, 1.0),
+            };
+            let mut aw = AdaptiveWidth::new(cfg);
+            // Random overload prefix leaves the width somewhere low.
+            for _ in 0..rng.below(20) {
+                aw.observe(cfg.target_latency * rng.uniform_in(2.0, 8.0));
+            }
+            // Drive the EWMA deep into the comfort zone first (recovery
+            // steps before the EWMA drops below 0.7×target are holds, not
+            // increases — that lag is the AIMD hysteresis, so burn it off).
+            for _ in 0..64 {
+                aw.observe(cfg.target_latency * 1e-3);
+                if aw.ewma_latency().expect("observed") < 0.7 * cfg.target_latency {
+                    break;
+                }
+            }
+            prop::ensure(
+                aw.ewma_latency().expect("observed") < 0.7 * cfg.target_latency,
+                "EWMA must reach the comfort zone under near-zero latency",
+            )?;
+            let start = aw.width();
+            for k in 1..=(max_width + 4) {
+                aw.observe(cfg.target_latency * 1e-3);
+                prop::ensure(
+                    aw.width() == (start + k).min(cfg.max_width),
+                    &format!(
+                        "recovery must be +1/observation: start {start}, step {k}, got {}",
+                        aw.width()
+                    ),
+                )?;
+            }
+            prop::ensure(aw.width() == cfg.max_width, "recovery must reach max_width")?;
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,975 @@
+//! Sharded serve scale-out: N scheduler shards on `std::thread` workers,
+//! key-affinity routing, whole-queue work stealing, and zero-downtime
+//! model swap.
+//!
+//! The single-threaded [`crate::serve::Router`] caps aggregate throughput
+//! at one drain loop no matter how many cores the box has. SHINE's
+//! serving contract makes sharding natural: the only cross-request state
+//! is the per-[`ModelKey`] calibration estimate (the forward-pass
+//! quasi-Newton inverse reused for the backward sweep), so routing every
+//! request of a key to one shard keeps that estimate **thread-local — it
+//! never crosses threads** and the hot path takes no lock while solving.
+//!
+//! # Threading model
+//!
+//! [`ShardedRouter::new`] spawns `shards` worker threads (pure
+//! `std::thread` + `Mutex`/`Condvar`, consistent with the vendored-deps
+//! idiom). Each worker owns, privately on its stack:
+//!
+//! * a [`KeyedScheduler`] of queued requests (behind the shard's mutex so
+//!   the front door can push),
+//! * a map `ModelKey → ServeEngine` built and calibrated **inside** the
+//!   worker thread — engines (and the solver trait objects within) are
+//!   never sent across threads.
+//!
+//! Shared state is two layers, with one global lock-order rule — **the
+//! registry mutex is always acquired before any shard mutex, never the
+//! reverse** — which makes every multi-lock path (submit, steal, swap
+//! cutover) deadlock-free by construction:
+//!
+//! * the **registry**: every registered key's model handle, its current
+//!   owning shard, and the `model id → live version` routing table;
+//! * per shard, a mutex-guarded [`KeyedScheduler`] + control queue +
+//!   published [`ShardStats`].
+//!
+//! # Work stealing
+//!
+//! A shard with nothing releasable probes the others (registry lock held
+//! throughout, so concurrent steals are serialized) for a key whose batch
+//! is *ready* but not yet picked up — the backlogged-victim signal. It
+//! then moves that key's **entire queue** ([`KeyedScheduler::take_queue`]
+//! / [`KeyedScheduler::inject_queue`]) and re-homes the key in the
+//! registry in the same critical section, so subsequent arrivals follow
+//! the queue. Stealing whole queues rather than items is what preserves
+//! FIFO-within-key: at any instant a key's queue lives in exactly one
+//! scheduler, and admission stamps (drawn from a global counter while the
+//! owning shard's lock is held) stay monotone in submission order. The
+//! thief calibrates its own engine for the stolen key from the same
+//! deterministic z₀ = 0 probe, so its estimate is bit-identical to the
+//! home shard's — stealing moves work, never estimates.
+//!
+//! # Zero-downtime swap (blue/green)
+//!
+//! [`ShardedRouter::swap`] registers the new parameter version as
+//! *calibrating* on its affinity shard (the hash mixes the version, so a
+//! roll usually lands on a different — "background" — shard) while the
+//! old version keeps serving. When the background calibration finishes,
+//! the worker performs the **atomic cutover** under the registry lock:
+//! the model's live version bumps, and exactly the old key is marked
+//! retired. Requests queued before the cutover still serve on the old
+//! engine; once its queue drains, the owning shard garbage-collects the
+//! retired entry and drops the old engine — exactly one key's estimate is
+//! invalidated, every other key's survives bit-identically.
+//!
+//! # Determinism
+//!
+//! Sharded results are **bit-identical per request** to the single-shard
+//! router: batched solves are bit-identical per column to solo solves
+//! regardless of batch composition (pinned by `rust/tests/serve_batch.rs`),
+//! calibration from z₀ = 0 is deterministic, and the backward sweep is a
+//! deterministic panel apply — so neither shard count, batch formation,
+//! nor steal timing can perturb a trajectory (pinned by
+//! `rust/tests/serve_shard.rs`).
+
+use crate::linalg::vecops::Elem;
+use crate::serve::engine::{EngineConfig, ServeEngine};
+use crate::serve::router::{BatchResidual, KeyedScheduler, ModelKey};
+use crate::serve::scheduler::SchedulerConfig;
+use crate::solvers::fixed_point::ColStats;
+use crate::util::threads;
+use crate::util::timer::Stopwatch;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A model shared with the shard workers. `Send + Sync` because several
+/// shards may evaluate the residual concurrently (the model is immutable
+/// parameter state; all mutable solve state is engine-local).
+pub type SharedModel<E> = Arc<dyn BatchResidual<E> + Send + Sync>;
+
+/// Idle-shard poll cadence: how often an idle worker re-probes for steal
+/// opportunities and deadline releases (with exponential backoff to
+/// [`STEAL_POLL_MAX_S`] while nothing arrives).
+const STEAL_POLL_S: f64 = 200e-6;
+const STEAL_POLL_MAX_S: f64 = 5e-3;
+
+/// Configuration of a [`ShardedRouter`]: shard count plus the per-key
+/// engine config (shared by every engine, as in [`crate::serve::Router`])
+/// and the per-shard scheduler config.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Worker threads (= scheduler shards). One shard reproduces the
+    /// single-threaded router exactly.
+    pub shards: usize,
+    /// Built per key, inside the owning worker thread.
+    pub engine: EngineConfig,
+    /// Per-shard admission queue (each shard holds its own `queue_cap`).
+    pub sched: SchedulerConfig,
+    /// Whole-queue work stealing (on by default; off pins every key to its
+    /// affinity shard, useful when debugging placement).
+    pub steal: bool,
+}
+
+impl ShardConfig {
+    pub fn new(shards: usize, engine: EngineConfig, sched: SchedulerConfig) -> ShardConfig {
+        ShardConfig {
+            shards,
+            engine,
+            sched,
+            steal: true,
+        }
+    }
+}
+
+/// One request through the sharded front door. `z0` is the warm-start
+/// iterate (the serving convention is zeros) and `cotangent` the SHINE
+/// backward right-hand side; both must be the target model's dimension.
+#[derive(Clone, Debug)]
+pub struct ShardRequest<E: Elem> {
+    /// Caller-side request id, echoed in the response.
+    pub id: usize,
+    pub z0: Vec<E>,
+    pub cotangent: Vec<E>,
+}
+
+/// One completed request.
+#[derive(Clone, Debug)]
+pub struct ShardResponse<E: Elem> {
+    /// Caller-side request id from the matching [`ShardRequest`].
+    pub id: usize,
+    /// The model snapshot that served this request (reveals which side of
+    /// a version cutover it landed on).
+    pub key: ModelKey,
+    /// Shard whose engine served it.
+    pub shard: usize,
+    /// Global admission stamp, assigned in drain order under the owning
+    /// shard's lock — within a key, sorting by `seq` recovers submission
+    /// order even across steals (the FIFO-within-key witness).
+    pub seq: u64,
+    /// Fixed point.
+    pub z: Vec<E>,
+    /// SHINE backward answer for the cotangent.
+    pub w: Vec<E>,
+    /// Per-column forward telemetry.
+    pub stats: ColStats,
+    /// Router-clock seconds at admission / completion (latency =
+    /// `completed - enqueued`).
+    pub enqueued: f64,
+    pub completed: f64,
+}
+
+/// Why [`ShardedRouter::submit`] bounced a request (the payload is handed
+/// back, mirroring the scheduler's backpressure contract).
+#[derive(Debug)]
+pub enum SubmitError<E: Elem> {
+    /// No live version is registered for the model id.
+    UnknownModel(ShardRequest<E>),
+    /// The owning shard's queue is at `queue_cap`.
+    QueueFull(ShardRequest<E>),
+}
+
+impl<E: Elem> SubmitError<E> {
+    /// Recover the rejected request.
+    pub fn into_request(self) -> ShardRequest<E> {
+        match self {
+            SubmitError::UnknownModel(r) | SubmitError::QueueFull(r) => r,
+        }
+    }
+}
+
+/// Published per-shard counters (snapshot via [`ShardedRouter::shard_stats`]).
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Requests served (responses produced) by this shard.
+    pub served: usize,
+    /// Batches dispatched.
+    pub batches: usize,
+    /// Whole-queue steals performed *by* this shard (as the thief).
+    pub steals: usize,
+    /// Engines built + calibrated on this shard (registration, swap
+    /// calibration, or first batch after a steal).
+    pub calibrations: usize,
+    /// Stale-estimate re-calibrations triggered by the trip-rate policy.
+    pub recalibrations: usize,
+    /// Keys whose engine (and calibration estimate) currently live on this
+    /// shard — the observable for "a swap invalidates exactly one key".
+    pub engine_keys: Vec<ModelKey>,
+}
+
+/// Lifecycle of a registered key in the blue/green protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum KeyState {
+    /// Background calibration in progress; not yet routable.
+    Calibrating,
+    /// The live route for its model id (or a coexisting older version
+    /// still draining — the live table is the routing authority).
+    Live,
+    /// Cut over from; serves only already-queued requests, then GC'd.
+    Retired,
+}
+
+struct RegEntry<E: Elem> {
+    key: ModelKey,
+    model: SharedModel<E>,
+    /// Shard currently owning this key's queue (affinity hash at
+    /// registration; work stealing re-homes it).
+    shard: usize,
+    state: KeyState,
+}
+
+/// Global routing state: one entry per registered key plus the
+/// `model id → live version` table. Guarded by `Shared::reg`; always
+/// locked *before* any shard mutex.
+struct Registry<E: Elem> {
+    entries: Vec<RegEntry<E>>,
+    live: Vec<(u32, u32)>,
+}
+
+impl<E: Elem> Registry<E> {
+    fn find(&self, key: ModelKey) -> Option<&RegEntry<E>> {
+        self.entries.iter().find(|e| e.key == key)
+    }
+
+    fn find_mut(&mut self, key: ModelKey) -> Option<&mut RegEntry<E>> {
+        self.entries.iter_mut().find(|e| e.key == key)
+    }
+
+    fn live_version(&self, model: u32) -> Option<u32> {
+        self.live
+            .iter()
+            .find(|(m, _)| *m == model)
+            .map(|(_, v)| *v)
+    }
+}
+
+/// A queued request (the scheduler payload).
+struct QueuedReq<E: Elem> {
+    id: usize,
+    z0: Vec<E>,
+    cot: Vec<E>,
+}
+
+struct ShardState<E: Elem> {
+    sched: KeyedScheduler<QueuedReq<E>>,
+    /// Keys awaiting background calibration on this shard.
+    ctl: VecDeque<ModelKey>,
+    stats: ShardStats,
+}
+
+struct ShardCell<E: Elem> {
+    state: Mutex<ShardState<E>>,
+    cv: Condvar,
+}
+
+struct Shared<E: Elem> {
+    cfg: ShardConfig,
+    reg: Mutex<Registry<E>>,
+    reg_cv: Condvar,
+    cells: Vec<ShardCell<E>>,
+    done: Mutex<Vec<ShardResponse<E>>>,
+    done_cv: Condvar,
+    /// Global admission-stamp counter (see [`ShardResponse::seq`]).
+    seq: AtomicU64,
+    /// The router clock: all arrival/completion instants are seconds since
+    /// construction.
+    clock: Stopwatch,
+    shutdown: AtomicBool,
+}
+
+/// The sharded serving front door. See the module docs for the threading
+/// model, lock order, and the stealing / swap protocols.
+pub struct ShardedRouter<E: Elem> {
+    sh: Arc<Shared<E>>,
+    handles: Vec<JoinHandle<()>>,
+    /// `threads::set_active_shards` value to restore on shutdown.
+    prev_shards: usize,
+}
+
+impl<E: Elem> ShardedRouter<E> {
+    pub fn new(cfg: ShardConfig) -> ShardedRouter<E> {
+        assert!(cfg.shards >= 1, "need at least one shard");
+        assert!(
+            cfg.sched.max_batch <= cfg.engine.max_batch,
+            "scheduler max_batch cannot exceed engine max_batch"
+        );
+        // Fail fast on the caller's thread for engine-config mistakes
+        // (e.g. a non-Broyden calibration spec) that would otherwise kill
+        // a worker mid-calibration.
+        let _probe: ServeEngine<E> = ServeEngine::new(1, cfg.engine);
+        // Divide the kernel-level thread fan-out across shards so N drain
+        // loops cannot oversubscribe the cores (restored on shutdown).
+        let prev_shards = threads::set_active_shards(cfg.shards);
+        let cells = (0..cfg.shards)
+            .map(|_| ShardCell {
+                state: Mutex::new(ShardState {
+                    sched: KeyedScheduler::new(cfg.sched),
+                    ctl: VecDeque::new(),
+                    stats: ShardStats::default(),
+                }),
+                cv: Condvar::new(),
+            })
+            .collect();
+        let sh = Arc::new(Shared {
+            cfg,
+            reg: Mutex::new(Registry {
+                entries: Vec::new(),
+                live: Vec::new(),
+            }),
+            reg_cv: Condvar::new(),
+            cells,
+            done: Mutex::new(Vec::new()),
+            done_cv: Condvar::new(),
+            seq: AtomicU64::new(0),
+            clock: Stopwatch::start(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..cfg.shards)
+            .map(|i| {
+                let sh = Arc::clone(&sh);
+                std::thread::Builder::new()
+                    .name(format!("shine-shard-{i}"))
+                    .spawn(move || worker_loop(i, sh))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        ShardedRouter {
+            sh,
+            handles,
+            prev_shards,
+        }
+    }
+
+    pub fn config(&self) -> &ShardConfig {
+        &self.sh.cfg
+    }
+
+    /// The shard `key` hashes to (its home before any stealing).
+    pub fn affinity(&self, key: ModelKey) -> usize {
+        affinity_shard(key, self.sh.cfg.shards)
+    }
+
+    /// Register a model snapshot and **block** until its background
+    /// calibration finishes and it is the live route for its model id.
+    /// For a non-blocking roll of an already-live model, use
+    /// [`ShardedRouter::swap`].
+    pub fn register(&self, key: ModelKey, model: SharedModel<E>) {
+        self.swap(key, model);
+        self.wait_live(key);
+    }
+
+    /// Zero-downtime version roll: enqueue `key` for background
+    /// calibration on its affinity shard and return immediately. The
+    /// previously live version keeps serving until the calibration
+    /// completes, at which point the worker atomically cuts the live route
+    /// over and retires exactly the old key (see the module docs). A stale
+    /// replay (version ≤ current live) calibrates but never cuts over.
+    pub fn swap(&self, key: ModelKey, model: SharedModel<E>) {
+        let shard = affinity_shard(key, self.sh.cfg.shards);
+        {
+            let mut reg = self.sh.reg.lock().unwrap();
+            assert!(
+                reg.find(key).is_none(),
+                "key {key} is already registered"
+            );
+            reg.entries.push(RegEntry {
+                key,
+                model,
+                shard,
+                state: KeyState::Calibrating,
+            });
+        }
+        let cell = &self.sh.cells[shard];
+        let mut st = cell.state.lock().unwrap();
+        st.ctl.push_back(key);
+        drop(st);
+        cell.cv.notify_one();
+    }
+
+    /// Block until `key` is the live route for its model id.
+    pub fn wait_live(&self, key: ModelKey) {
+        let mut reg = self.sh.reg.lock().unwrap();
+        while reg.live_version(key.model) != Some(key.version) {
+            reg = self.sh.reg_cv.wait(reg).unwrap();
+        }
+    }
+
+    /// The live (routed-to) version of a model id, if any.
+    pub fn live_version(&self, model: u32) -> Option<u32> {
+        self.sh.reg.lock().unwrap().live_version(model)
+    }
+
+    /// Registered keys (live, calibrating, and retired-but-draining).
+    pub fn keys(&self) -> Vec<ModelKey> {
+        let reg = self.sh.reg.lock().unwrap();
+        reg.entries.iter().map(|e| e.key).collect()
+    }
+
+    /// Route a request to the live version of `model` and enqueue it on
+    /// the key's owning shard. Returns the [`ModelKey`] it was routed to —
+    /// resolved atomically with the enqueue, so across a concurrent swap
+    /// the submission order cleanly partitions into an old-key prefix and
+    /// a new-key suffix.
+    pub fn submit(&self, model: u32, req: ShardRequest<E>) -> Result<ModelKey, SubmitError<E>> {
+        let now = self.sh.clock.elapsed();
+        let reg = self.sh.reg.lock().unwrap();
+        let Some(version) = reg.live_version(model) else {
+            return Err(SubmitError::UnknownModel(req));
+        };
+        let key = ModelKey::new(model, version);
+        let shard = reg.find(key).expect("live key is registered").shard;
+        let cell = &self.sh.cells[shard];
+        // Take the shard lock while still holding the registry lock
+        // (registry → shard order): a steal re-homing this key cannot slip
+        // between shard resolution and the push.
+        let mut st = cell.state.lock().unwrap();
+        drop(reg);
+        let q = QueuedReq {
+            id: req.id,
+            z0: req.z0,
+            cot: req.cotangent,
+        };
+        match st.sched.push(now, key, q) {
+            Ok(()) => {
+                drop(st);
+                cell.cv.notify_one();
+                Ok(key)
+            }
+            Err(q) => Err(SubmitError::QueueFull(ShardRequest {
+                id: q.id,
+                z0: q.z0,
+                cotangent: q.cot,
+            })),
+        }
+    }
+
+    /// Drain whatever responses have completed (non-blocking).
+    pub fn try_collect(&self) -> Vec<ShardResponse<E>> {
+        let mut done = self.sh.done.lock().unwrap();
+        std::mem::take(&mut *done)
+    }
+
+    /// Block until at least `n` responses have accumulated, draining them.
+    pub fn collect(&self, n: usize) -> Vec<ShardResponse<E>> {
+        let mut out = Vec::with_capacity(n);
+        let mut done = self.sh.done.lock().unwrap();
+        loop {
+            out.append(&mut *done);
+            if out.len() >= n {
+                return out;
+            }
+            done = self.sh.done_cv.wait(done).unwrap();
+        }
+    }
+
+    /// Requests queued (admitted, not yet drained) across all shards.
+    pub fn pending(&self) -> usize {
+        self.sh
+            .cells
+            .iter()
+            .map(|c| c.state.lock().unwrap().sched.len())
+            .sum()
+    }
+
+    /// Snapshot every shard's published counters.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.sh
+            .cells
+            .iter()
+            .map(|c| c.state.lock().unwrap().stats.clone())
+            .collect()
+    }
+
+    /// Whole-queue steals across all shards.
+    pub fn total_steals(&self) -> usize {
+        self.shard_stats().iter().map(|s| s.steals).sum()
+    }
+
+    /// Stop the workers (after they drain their queues) and join them.
+    /// Dropping the router does the same.
+    pub fn shutdown(mut self) {
+        self.join_workers();
+    }
+
+    fn join_workers(&mut self) {
+        if self.handles.is_empty() {
+            return;
+        }
+        self.sh.shutdown.store(true, Ordering::SeqCst);
+        for c in &self.sh.cells {
+            c.cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        threads::set_active_shards(self.prev_shards);
+    }
+}
+
+impl<E: Elem> Drop for ShardedRouter<E> {
+    fn drop(&mut self) {
+        self.join_workers();
+    }
+}
+
+/// Deterministic `ModelKey → shard` hash. Mixes model id and version with
+/// distinct odd multipliers so consecutive versions of one model usually
+/// land on different shards — the swap's background-calibration shard.
+fn affinity_shard(key: ModelKey, shards: usize) -> usize {
+    let h = (key.model as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((key.version as u64).wrapping_mul(0xD134_2543_DE82_EF95));
+    let h = h ^ (h >> 32);
+    (h % shards as u64) as usize
+}
+
+/// A worker-local engine: built, calibrated, and only ever used on this
+/// shard's thread.
+struct EngineSlot<E: Elem> {
+    key: ModelKey,
+    engine: ServeEngine<E>,
+    model: SharedModel<E>,
+}
+
+enum Work {
+    Calibrate(ModelKey),
+    Batch {
+        key: ModelKey,
+        base_seq: u64,
+        drained_at: f64,
+    },
+    Idle,
+    Exit,
+}
+
+fn worker_loop<E: Elem>(me: usize, sh: Arc<Shared<E>>) {
+    let mut engines: Vec<EngineSlot<E>> = Vec::new();
+    let mut items: Vec<(f64, QueuedReq<E>)> = Vec::new();
+    let mut zs: Vec<E> = Vec::new();
+    let mut cots: Vec<E> = Vec::new();
+    let mut w: Vec<E> = Vec::new();
+    let mut stats: Vec<ColStats> = Vec::new();
+    let mut poll = STEAL_POLL_S;
+    loop {
+        match next_work(me, &sh, &mut items) {
+            Work::Calibrate(key) => {
+                calibrate_key(me, &sh, &mut engines, key);
+                poll = STEAL_POLL_S;
+            }
+            Work::Batch {
+                key,
+                base_seq,
+                drained_at,
+            } => {
+                serve_batch(
+                    me,
+                    &sh,
+                    &mut engines,
+                    key,
+                    &mut items,
+                    base_seq,
+                    drained_at,
+                    &mut zs,
+                    &mut cots,
+                    &mut w,
+                    &mut stats,
+                );
+                gc_retired(me, &sh, &mut engines);
+                poll = STEAL_POLL_S;
+            }
+            Work::Idle => {
+                if sh.cfg.steal && try_steal(me, &sh) {
+                    poll = STEAL_POLL_S;
+                    continue;
+                }
+                gc_retired(me, &sh, &mut engines);
+                idle_wait(me, &sh, poll);
+                poll = (poll * 2.0).min(STEAL_POLL_MAX_S);
+            }
+            Work::Exit => break,
+        }
+    }
+}
+
+/// Pick the shard's next unit of work under its own lock: control ops
+/// first, then a releasable batch (drained into `items` with admission
+/// stamps assigned *while the lock is held* — the FIFO-within-key
+/// witness), else idle / exit.
+fn next_work<E: Elem>(me: usize, sh: &Shared<E>, items: &mut Vec<(f64, QueuedReq<E>)>) -> Work {
+    let mut st = sh.cells[me].state.lock().unwrap();
+    if let Some(key) = st.ctl.pop_front() {
+        return Work::Calibrate(key);
+    }
+    let now = sh.clock.elapsed();
+    if let Some((key, n)) = st.sched.ready(now) {
+        items.clear();
+        st.sched.drain_key(key, n, now, items);
+        let base_seq = sh.seq.fetch_add(items.len() as u64, Ordering::SeqCst);
+        return Work::Batch {
+            key,
+            base_seq,
+            drained_at: now,
+        };
+    }
+    if sh.shutdown.load(Ordering::SeqCst) && st.sched.is_empty() {
+        return Work::Exit;
+    }
+    Work::Idle
+}
+
+/// Build + calibrate a worker-local engine for `key` (idempotent).
+fn build_engine<E: Elem>(
+    me: usize,
+    sh: &Shared<E>,
+    engines: &mut Vec<EngineSlot<E>>,
+    key: ModelKey,
+    model: &SharedModel<E>,
+) {
+    if engines.iter().any(|s| s.key == key) {
+        return;
+    }
+    let d = model.dim();
+    let mut engine: ServeEngine<E> = ServeEngine::new(d, sh.cfg.engine);
+    engine.calibrate(
+        |z: &[E], out: &mut [E]| model.residual_batch(z, 1, out),
+        &vec![E::ZERO; d],
+    );
+    engines.push(EngineSlot {
+        key,
+        engine,
+        model: Arc::clone(model),
+    });
+    let mut st = sh.cells[me].state.lock().unwrap();
+    st.stats.calibrations += 1;
+    st.stats.engine_keys = engines.iter().map(|s| s.key).collect();
+}
+
+/// Background calibration + the blue/green cutover (see module docs).
+fn calibrate_key<E: Elem>(
+    me: usize,
+    sh: &Shared<E>,
+    engines: &mut Vec<EngineSlot<E>>,
+    key: ModelKey,
+) {
+    let model = {
+        let reg = sh.reg.lock().unwrap();
+        match reg.find(key) {
+            Some(e) => Arc::clone(&e.model),
+            // Retired and collected before we got to it: drop the op.
+            None => return,
+        }
+    };
+    build_engine(me, sh, engines, key, &model);
+    // Atomic cutover under the registry lock: bump the live route and
+    // retire exactly the previous live version of this model id.
+    {
+        let mut guard = sh.reg.lock().unwrap();
+        let reg = &mut *guard;
+        if let Some(e) = reg.find_mut(key) {
+            e.state = KeyState::Live;
+        }
+        match reg.live.iter_mut().find(|(m, _)| *m == key.model) {
+            None => reg.live.push((key.model, key.version)),
+            Some(entry) if entry.1 < key.version => {
+                let old = ModelKey::new(key.model, entry.1);
+                entry.1 = key.version;
+                if let Some(e) = reg.find_mut(old) {
+                    e.state = KeyState::Retired;
+                }
+            }
+            // Stale replay: never tear down a newer live version.
+            Some(_) => {}
+        }
+    }
+    sh.reg_cv.notify_all();
+}
+
+/// Serve one single-key batch on this shard's private engine, then publish
+/// the responses. Mirrors [`crate::serve::Router::process`] including the
+/// trip-rate re-calibration policy.
+#[allow(clippy::too_many_arguments)]
+fn serve_batch<E: Elem>(
+    me: usize,
+    sh: &Shared<E>,
+    engines: &mut Vec<EngineSlot<E>>,
+    key: ModelKey,
+    items: &mut Vec<(f64, QueuedReq<E>)>,
+    base_seq: u64,
+    drained_at: f64,
+    zs: &mut Vec<E>,
+    cots: &mut Vec<E>,
+    w: &mut Vec<E>,
+    stats: &mut Vec<ColStats>,
+) {
+    if !engines.iter().any(|s| s.key == key) {
+        // First batch after a steal: calibrate a local engine from the
+        // same deterministic z₀ = 0 probe — bit-identical to the home
+        // shard's estimate, which therefore never crosses threads.
+        let model = {
+            let reg = sh.reg.lock().unwrap();
+            Arc::clone(&reg.find(key).expect("queued key is registered").model)
+        };
+        build_engine(me, sh, engines, key, &model);
+    }
+    let pos = engines.iter().position(|s| s.key == key).expect("engine built");
+    let slot = &mut engines[pos];
+    let d = slot.model.dim();
+    let b = items.len();
+    zs.clear();
+    zs.resize(b * d, E::ZERO);
+    cots.clear();
+    cots.resize(b * d, E::ZERO);
+    w.clear();
+    w.resize(b * d, E::ZERO);
+    stats.clear();
+    stats.resize(b, ColStats::default());
+    for (p, (_, req)) in items.iter().enumerate() {
+        zs[p * d..(p + 1) * d].copy_from_slice(&req.z0);
+        cots[p * d..(p + 1) * d].copy_from_slice(&req.cot);
+    }
+    let model = &slot.model;
+    let report = slot.engine.process(
+        |block: &[E], _ids: &[usize], out: &mut [E]| {
+            model.residual_batch(block, block.len() / d, out)
+        },
+        &mut zs[..],
+        &cots[..],
+        &mut w[..],
+        &mut stats[..],
+    );
+    let mut recalibrated = false;
+    if report.estimate_stale {
+        slot.engine.invalidate_estimate();
+        slot.engine.calibrate(
+            |z: &[E], out: &mut [E]| model.residual_batch(z, 1, out),
+            &vec![E::ZERO; d],
+        );
+        recalibrated = true;
+    }
+    let completed = sh.clock.elapsed();
+    {
+        let mut done = sh.done.lock().unwrap();
+        for (p, (wait, req)) in items.drain(..).enumerate() {
+            done.push(ShardResponse {
+                id: req.id,
+                key,
+                shard: me,
+                seq: base_seq + p as u64,
+                z: zs[p * d..(p + 1) * d].to_vec(),
+                w: w[p * d..(p + 1) * d].to_vec(),
+                stats: stats[p],
+                enqueued: drained_at - wait,
+                completed,
+            });
+        }
+    }
+    sh.done_cv.notify_all();
+    let mut st = sh.cells[me].state.lock().unwrap();
+    st.stats.served += b;
+    st.stats.batches += 1;
+    if recalibrated {
+        st.stats.recalibrations += 1;
+    }
+}
+
+/// Collect retired keys this shard owns once their queues drain: remove
+/// the registry entry and drop the local engine — the "invalidate exactly
+/// that key" half of the swap protocol. Also drops engines for keys whose
+/// entries another shard already collected (e.g. after a historic steal).
+fn gc_retired<E: Elem>(me: usize, sh: &Shared<E>, engines: &mut Vec<EngineSlot<E>>) {
+    let mut guard = sh.reg.lock().unwrap();
+    let reg = &mut *guard;
+    let mut st = sh.cells[me].state.lock().unwrap();
+    let sched = &st.sched;
+    reg.entries.retain(|e| {
+        !(e.state == KeyState::Retired && e.shard == me && sched.count_key(e.key) == 0)
+    });
+    let before = engines.len();
+    engines.retain(|s| reg.entries.iter().any(|e| e.key == s.key));
+    if engines.len() != before {
+        st.stats.engine_keys = engines.iter().map(|s| s.key).collect();
+    }
+}
+
+/// Steal the entire queue of a backlogged key from another shard. The
+/// victim signal is precise: a key whose batch is *releasable right now*
+/// (`ready()` non-empty) on a shard that has not picked it up — so stolen
+/// work is immediately actionable on the thief and idle shards never
+/// ping-pong not-yet-ready queues. Registry lock held throughout; at most
+/// one shard lock at a time.
+fn try_steal<E: Elem>(me: usize, sh: &Shared<E>) -> bool {
+    let mut guard = sh.reg.lock().unwrap();
+    let reg = &mut *guard;
+    let now = sh.clock.elapsed();
+    let mut best: Option<(usize, ModelKey, usize)> = None;
+    for j in 0..sh.cfg.shards {
+        if j == me {
+            continue;
+        }
+        let st = sh.cells[j].state.lock().unwrap();
+        if let Some((key, n)) = st.sched.ready(now) {
+            let routed_here = reg.find(key).map(|e| e.shard == j).unwrap_or(false);
+            if routed_here && best.map(|(_, _, bn)| n > bn).unwrap_or(true) {
+                best = Some((j, key, n));
+            }
+        }
+    }
+    let Some((victim, key, _)) = best else {
+        return false;
+    };
+    let q = {
+        let mut vst = sh.cells[victim].state.lock().unwrap();
+        // The victim may have drained it between the probe and now.
+        match vst.sched.take_queue(key) {
+            Some(q) if !q.is_empty() => q,
+            _ => return false,
+        }
+    };
+    // Re-home the key in the same registry critical section, so arrivals
+    // after the steal follow the queue (FIFO-within-key survives).
+    if let Some(e) = reg.find_mut(key) {
+        e.shard = me;
+    }
+    let mut st = sh.cells[me].state.lock().unwrap();
+    st.sched.inject_queue(key, q);
+    st.stats.steals += 1;
+    true
+}
+
+/// Sleep until notified (submit / control / shutdown), a queued partial
+/// batch's deadline, or the steal-poll timeout — whichever is soonest.
+fn idle_wait<E: Elem>(me: usize, sh: &Shared<E>, poll: f64) {
+    let cell = &sh.cells[me];
+    let st = cell.state.lock().unwrap();
+    // Re-check under the lock so a wakeup between next_work and here is
+    // not slept through.
+    if !st.ctl.is_empty() || sh.shutdown.load(Ordering::SeqCst) {
+        return;
+    }
+    let now = sh.clock.elapsed();
+    if st.sched.ready(now).is_some() {
+        return;
+    }
+    let mut wait = if sh.cfg.steal { poll } else { 0.05 };
+    if let Some(t) = st.sched.next_deadline() {
+        wait = wait.min((t - now).max(0.0));
+    }
+    let _ = cell
+        .cv
+        .wait_timeout(st, Duration::from_secs_f64(wait))
+        .unwrap();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::synth::SynthDeq;
+
+    #[test]
+    fn affinity_is_deterministic_and_in_range() {
+        for shards in [1usize, 2, 3, 4, 7] {
+            for m in 0..16u32 {
+                for v in 0..4u32 {
+                    let k = ModelKey::new(m, v);
+                    let s = affinity_shard(k, shards);
+                    assert!(s < shards);
+                    assert_eq!(s, affinity_shard(k, shards), "deterministic");
+                }
+            }
+        }
+        // One shard degenerates to the single-threaded placement.
+        assert_eq!(affinity_shard(ModelKey::new(3, 1), 1), 0);
+    }
+
+    #[test]
+    fn version_mixing_spreads_rolls() {
+        // Consecutive versions of one model should not all collapse onto
+        // one shard (the swap wants a background shard to calibrate on).
+        let shards = 4;
+        let homes: Vec<usize> = (0..8u32)
+            .map(|v| affinity_shard(ModelKey::new(0, v), shards))
+            .collect();
+        assert!(
+            homes.iter().any(|s| *s != homes[0]),
+            "all versions hashed to shard {}: {homes:?}",
+            homes[0]
+        );
+    }
+
+    #[test]
+    fn submit_unknown_model_is_rejected() {
+        let cfg = ShardConfig::new(
+            2,
+            EngineConfig {
+                max_batch: 4,
+                ..Default::default()
+            },
+            SchedulerConfig {
+                max_batch: 4,
+                max_wait: 1e-4,
+                queue_cap: 16,
+            },
+        );
+        let router: ShardedRouter<f64> = ShardedRouter::new(cfg);
+        let req = ShardRequest {
+            id: 0,
+            z0: vec![0.0; 8],
+            cotangent: vec![1.0; 8],
+        };
+        match router.submit(9, req) {
+            Err(SubmitError::UnknownModel(r)) => assert_eq!(r.id, 0),
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn single_shard_end_to_end() {
+        let d = 24;
+        let cfg = ShardConfig::new(
+            1,
+            EngineConfig {
+                max_batch: 4,
+                ..Default::default()
+            }
+            .with_tol(1e-8),
+            SchedulerConfig {
+                max_batch: 4,
+                max_wait: 1e-4,
+                queue_cap: 64,
+            },
+        );
+        let router: ShardedRouter<f64> = ShardedRouter::new(cfg);
+        let key = ModelKey::new(0, 0);
+        router.register(key, Arc::new(SynthDeq::<f64>::new(d, 8, 1)));
+        assert_eq!(router.live_version(0), Some(0));
+        for id in 0..8usize {
+            let req = ShardRequest {
+                id,
+                z0: vec![0.0; d],
+                cotangent: vec![1.0; d],
+            };
+            router.submit(0, req).expect("routed");
+        }
+        let mut out = router.collect(8);
+        assert_eq!(out.len(), 8);
+        out.sort_by_key(|r| r.id);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert_eq!(r.key, key);
+            assert_eq!(r.shard, 0);
+            assert!(r.stats.converged, "request {i} converged");
+            assert!(r.completed >= r.enqueued);
+        }
+        // All eight solve the same problem from the same start: identical.
+        for r in &out[1..] {
+            assert_eq!(r.z, out[0].z);
+            assert_eq!(r.w, out[0].w);
+        }
+        let stats = router.shard_stats();
+        assert_eq!(stats[0].served, 8);
+        assert_eq!(stats[0].engine_keys, vec![key]);
+        router.shutdown();
+    }
+}

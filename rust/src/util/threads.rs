@@ -121,19 +121,48 @@ pub fn ncpus() -> usize {
         .unwrap_or(4)
 }
 
+/// How many scheduler shards are concurrently driving kernels (set by
+/// [`crate::serve::shard::ShardedRouter`]); divides the per-kernel worker
+/// budget so N shards × per-kernel fan-out cannot oversubscribe the cores.
+static ACTIVE_SHARDS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(1);
+
+/// Declare `n` active scheduler shards (clamped to ≥ 1) and return the
+/// previous value so the caller can restore it on shutdown. Process-global:
+/// concurrent routers see each other's setting, which only redistributes
+/// the worker budget — every kernel is bit-identical at any worker count
+/// (f64 per-row accumulation), so this is a performance knob, never a
+/// correctness one.
+pub fn set_active_shards(n: usize) -> usize {
+    ACTIVE_SHARDS.swap(n.max(1), std::sync::atomic::Ordering::Relaxed)
+}
+
+/// The current active-shard count (1 unless a sharded router is running).
+pub fn active_shards() -> usize {
+    ACTIVE_SHARDS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
 /// Worker-count heuristic shared by the residual/panel block evaluators:
 /// 1 below `min_elems` total elements (spawning scoped threads costs more
 /// than the sweep and would break the allocation-free hot loops), otherwise
-/// up to `cap` workers bounded by the machine width. This is the lever that
-/// makes *batched* serving faster than per-request dispatch: a single
-/// request's block often sits below `min_elems`, while the same residual
-/// over a B-wide state block crosses it and fans out.
+/// up to `cap` workers bounded by the machine width **divided by the
+/// active shard count** (each shard gets an equal slice of the cores, min
+/// 1 — with one shard this degenerates to the historic behaviour). This is
+/// the lever that makes *batched* serving faster than per-request dispatch:
+/// a single request's block often sits below `min_elems`, while the same
+/// residual over a B-wide state block crosses it and fans out.
 pub fn workers_for(elems: usize, min_elems: usize, cap: usize) -> usize {
     if elems < min_elems {
         1
     } else {
-        ncpus().min(cap).max(1)
+        shard_capped(ncpus(), active_shards(), cap)
     }
+}
+
+/// The shard-aware budget split: `cpus / shards` (floor), clamped to
+/// `[1, cap]`. Factored out of [`workers_for`] so the sharing math is
+/// testable without touching the process-global shard count.
+fn shard_capped(cpus: usize, shards: usize, cap: usize) -> usize {
+    (cpus / shards.max(1)).max(1).min(cap.max(1))
 }
 
 #[cfg(test)]
@@ -201,5 +230,36 @@ mod tests {
         assert!((1..=8).contains(&w));
         // cap bounds the fan-out even on wide machines
         assert_eq!(workers_for(1 << 20, 1, 1), 1);
+    }
+
+    #[test]
+    fn workers_for_divides_by_active_shards() {
+        // The sharing math, exercised through the pure helper so the test
+        // cannot race other tests that run sharded routers (the global
+        // shard count is process-wide).
+        assert_eq!(shard_capped(16, 1, 1024), 16, "one shard keeps the full budget");
+        assert_eq!(shard_capped(16, 2, 1024), 8);
+        assert_eq!(shard_capped(16, 4, 1024), 4);
+        assert_eq!(shard_capped(16, 4, 2), 2, "explicit cap still binds");
+        assert_eq!(shard_capped(8, 3, 1024), 2, "floor division");
+        assert_eq!(shard_capped(16, 32, 1024), 1, "more shards than cores → 1 each");
+        assert_eq!(shard_capped(4, 0, 8), 4, "zero shards clamped to 1");
+        assert_eq!(shard_capped(4, 1, 0), 1, "zero cap clamped to 1");
+        // No oversubscription: shards × per-shard workers ≤ cores whenever
+        // the shard count itself fits the machine.
+        for shards in 1..=32usize {
+            for cpus in 1..=64usize {
+                let w = shard_capped(cpus, shards, 1024);
+                assert!(w >= 1);
+                if shards <= cpus {
+                    assert!(w * shards <= cpus, "{w}×{shards} oversubscribes {cpus}");
+                }
+            }
+        }
+        // The global knob returns the previous value (restore contract).
+        let prev = set_active_shards(3);
+        set_active_shards(prev);
+        // Below the element threshold the shard count is irrelevant.
+        assert_eq!(workers_for(4, 1 << 20, 1024), 1);
     }
 }
