@@ -1,16 +1,19 @@
 //! Micro-benchmarks of the qN hot loops (the SHINE backward cost itself):
 //! FactorPanel low-rank apply across dims and ranks versus the legacy
 //! `Vec<Vec<f64>>` baseline, the f32-storage panel path versus the f64 one
-//! (the precision-generic `Elem` stack), Broyden panel updates, multi-RHS
-//! cotangent batches, LBFGS two-loop, and native-vs-Pallas-artifact
-//! application.
+//! (the precision-generic `Elem` stack), the bf16 and mixed (bf16 U, f32 V)
+//! reduced-precision panel layouts applied to f32 state, Broyden panel
+//! updates, multi-RHS cotangent batches, LBFGS two-loop, and
+//! native-vs-Pallas-artifact application.
 //!
 //! Emits `BENCH_qn.json` at the repo root with per-case medians and
-//! speedups — the acceptance gates are `apply_speedup ≥ 2` vs the legacy
-//! layout and `f32_apply_speedup_vs_f64 ≥ 1.5` (half the panel bytes moved)
-//! at d=16384, m=30.
+//! speedups — the acceptance gates at d=16384, m=30 are
+//! `apply_speedup ≥ 2` vs the legacy layout, `f32_apply_speedup_vs_f64
+//! ≥ 1.5` (half the panel bytes moved) and `bf16_apply_speedup_vs_f32
+//! ≥ 1.3` (half the panel bytes again; sub-2x because the f32 state
+//! stream no longer shrinks with the panels).
 
-use shine::linalg::vecops::{axpy, dot};
+use shine::linalg::vecops::{axpy, dot, Bf16, Elem};
 use shine::qn::broyden::BroydenInverse;
 use shine::qn::lbfgs::LbfgsInverse;
 use shine::qn::low_rank::LowRank;
@@ -58,6 +61,9 @@ fn main() {
     let mut accept_apply_t = 0.0;
     let mut accept_f32_apply = 0.0;
     let mut accept_f32_apply_t = 0.0;
+    let mut accept_bf16_apply = 0.0;
+    let mut accept_bf16_apply_t = 0.0;
+    let mut accept_mixed_apply = 0.0;
     // Layout-only (single-threaded) signal: the largest case below
     // PAR_MIN_ELEMS, so the panel-vs-legacy comparison excludes threading.
     let mut serial_apply = 0.0;
@@ -73,6 +79,8 @@ fn main() {
     ] {
         let mut lr = LowRank::identity(d, m, MemoryPolicy::Freeze);
         let mut lr32: LowRank<f32> = LowRank::identity(d, m, MemoryPolicy::Freeze);
+        let mut lr16: LowRank<Bf16> = LowRank::identity(d, m, MemoryPolicy::Freeze);
+        let mut lrmix: LowRank<Bf16, f32> = LowRank::identity(d, m, MemoryPolicy::Freeze);
         let mut legacy = LegacyLowRank {
             us: Vec::with_capacity(m),
             vs: Vec::with_capacity(m),
@@ -82,8 +90,12 @@ fn main() {
             let v = rng.normal_vec(d);
             let u32v: Vec<f32> = u.iter().map(|&a| a as f32).collect();
             let v32v: Vec<f32> = v.iter().map(|&a| a as f32).collect();
+            let u16v: Vec<Bf16> = u.iter().map(|&a| Bf16::from_f64(a)).collect();
+            let v16v: Vec<Bf16> = v.iter().map(|&a| Bf16::from_f64(a)).collect();
             lr.push(&u, &v);
             lr32.push(&u32v, &v32v);
+            lr16.push(&u16v, &v16v);
+            lrmix.push(&u16v, &v32v);
             legacy.us.push(u);
             legacy.vs.push(v);
         }
@@ -118,6 +130,35 @@ fn main() {
                 out32[0]
             })
             .median_ms();
+        // bf16 panel storage applied to f32 state (the ISSUE 8 serving
+        // layout): half the panel bytes of f32 again, widened per element
+        // into the same f64 accumulation.
+        let panel_apply_bf16 = b
+            .run(&format!("panel_apply_bf16 d={d} m={m}"), || {
+                lr16.apply_into(&x32, &mut out32, &mut ws32);
+                out32[0]
+            })
+            .median_ms();
+        let panel_apply_t_bf16 = b
+            .run(&format!("panel_apply_t_bf16 d={d} m={m}"), || {
+                lr16.apply_t_into(&x32, &mut out32, &mut ws32);
+                out32[0]
+            })
+            .median_ms();
+        // Mixed layout (bf16 U, f32 V): the accuracy-conservative variant —
+        // 75% of the homogeneous-f32 panel traffic.
+        let panel_apply_mixed = b
+            .run(&format!("panel_apply_mixed d={d} m={m}"), || {
+                lrmix.apply_into(&x32, &mut out32, &mut ws32);
+                out32[0]
+            })
+            .median_ms();
+        let panel_apply_t_mixed = b
+            .run(&format!("panel_apply_t_mixed d={d} m={m}"), || {
+                lrmix.apply_t_into(&x32, &mut out32, &mut ws32);
+                out32[0]
+            })
+            .median_ms();
         let legacy_apply = b
             .run(&format!("legacy_apply d={d} m={m}"), || {
                 legacy.apply(&x, &mut out);
@@ -148,6 +189,12 @@ fn main() {
         let multi_f32 = b
             .run(&format!("panel_apply_multi_f32 k={k} d={d} m={m}"), || {
                 lr32.apply_t_multi(&xs32, &mut outs32);
+                outs32[0]
+            })
+            .median_ms();
+        let multi_bf16 = b
+            .run(&format!("panel_apply_multi_bf16 k={k} d={d} m={m}"), || {
+                lr16.apply_t_multi(&xs32, &mut outs32);
                 outs32[0]
             })
             .median_ms();
@@ -191,11 +238,18 @@ fn main() {
         let apply_t_speedup = legacy_apply_t / panel_apply_t.max(1e-12);
         let f32_apply_speedup = panel_apply / panel_apply_f32.max(1e-12);
         let f32_apply_t_speedup = panel_apply_t / panel_apply_t_f32.max(1e-12);
+        let bf16_apply_speedup = panel_apply_f32 / panel_apply_bf16.max(1e-12);
+        let bf16_apply_t_speedup = panel_apply_t_f32 / panel_apply_t_bf16.max(1e-12);
+        let mixed_apply_speedup = panel_apply_f32 / panel_apply_mixed.max(1e-12);
+        let mixed_apply_t_speedup = panel_apply_t_f32 / panel_apply_t_mixed.max(1e-12);
         if d == 16384 && m == 30 {
             accept_apply = apply_speedup;
             accept_apply_t = apply_t_speedup;
             accept_f32_apply = f32_apply_speedup;
             accept_f32_apply_t = f32_apply_t_speedup;
+            accept_bf16_apply = bf16_apply_speedup;
+            accept_bf16_apply_t = bf16_apply_t_speedup;
+            accept_mixed_apply = mixed_apply_speedup;
         }
         if d == 4096 && m == 30 {
             serial_apply = apply_speedup;
@@ -208,16 +262,25 @@ fn main() {
             .set("panel_apply_t_ms", panel_apply_t)
             .set("panel_apply_f32_ms", panel_apply_f32)
             .set("panel_apply_t_f32_ms", panel_apply_t_f32)
+            .set("panel_apply_bf16_ms", panel_apply_bf16)
+            .set("panel_apply_t_bf16_ms", panel_apply_t_bf16)
+            .set("panel_apply_mixed_ms", panel_apply_mixed)
+            .set("panel_apply_t_mixed_ms", panel_apply_t_mixed)
             .set("legacy_apply_ms", legacy_apply)
             .set("legacy_apply_t_ms", legacy_apply_t)
             .set("apply_speedup", apply_speedup)
             .set("apply_t_speedup", apply_t_speedup)
             .set("f32_apply_speedup_vs_f64", f32_apply_speedup)
             .set("f32_apply_t_speedup_vs_f64", f32_apply_t_speedup)
+            .set("bf16_apply_speedup_vs_f32", bf16_apply_speedup)
+            .set("bf16_apply_t_speedup_vs_f32", bf16_apply_t_speedup)
+            .set("mixed_apply_speedup_vs_f32", mixed_apply_speedup)
+            .set("mixed_apply_t_speedup_vs_f32", mixed_apply_t_speedup)
             .set("apply_gflops", 4.0 * (m * d) as f64 / (panel_apply * 1e6).max(1e-12))
             .set("multi_rhs_k", k)
             .set("apply_t_multi_ms", multi)
             .set("apply_t_multi_f32_ms", multi_f32)
+            .set("apply_t_multi_bf16_ms", multi_bf16)
             .set("apply_t_columnwise_ms", columnwise)
             .set("multi_speedup", columnwise / multi.max(1e-12))
             .set("broyden_update_ms", update)
@@ -296,6 +359,15 @@ fn main() {
                 .set("f32_apply_t_speedup_vs_f64", accept_f32_apply_t)
                 .set("f32_target_speedup", 1.5)
                 .set("f32_pass", accept_f32_apply >= 1.5)
+                // bf16-panel gate (ISSUE 8): halving the bytes again must
+                // buy ≥1.3x over the f32 panel apply at the same memory-bound
+                // cell (sub-2x because the f32 state/accumulation stream no
+                // longer shrinks with the panels).
+                .set("bf16_apply_speedup_vs_f32", accept_bf16_apply)
+                .set("bf16_apply_t_speedup_vs_f32", accept_bf16_apply_t)
+                .set("mixed_apply_speedup_vs_f32", accept_mixed_apply)
+                .set("bf16_target_speedup", 1.3)
+                .set("bf16_pass", accept_bf16_apply >= 1.3)
                 .clone(),
         );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_qn.json");
@@ -305,6 +377,7 @@ fn main() {
     }
     println!(
         "acceptance d=16384 m=30: apply {accept_apply:.2}x, apply_t {accept_apply_t:.2}x vs \
-         legacy; f32 panel {accept_f32_apply:.2}x / {accept_f32_apply_t:.2}x vs f64 panel"
+         legacy; f32 panel {accept_f32_apply:.2}x / {accept_f32_apply_t:.2}x vs f64 panel; \
+         bf16 panel {accept_bf16_apply:.2}x, mixed {accept_mixed_apply:.2}x vs f32 panel"
     );
 }

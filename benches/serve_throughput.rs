@@ -1,9 +1,11 @@
 //! Batched DEQ serving throughput: closed-loop load through the
 //! scheduler + ServeEngine pipeline at batch widths B ∈ {1, 8, 32}
 //! (d = 4096, f32 serving precision), an **open-loop heavy-tailed**
-//! continuous-vs-discrete tail-latency comparison at B = 32, plus a micro
-//! comparison of the one-sweep multi-RHS SHINE backward against
-//! per-request panel applies.
+//! continuous-vs-discrete tail-latency comparison at B = 32, a
+//! **mixed-precision** B = 32 cell (bf16 U panels, f32 V — the ISSUE 8
+//! reduced-precision serving layout) against the homogeneous-f32 row,
+//! plus a micro comparison of the one-sweep multi-RHS SHINE backward
+//! against per-request panel applies.
 //!
 //! Emits `BENCH_serve.json` at the repo root with requests/sec,
 //! per-request latency and the batched-vs-sequential speedup — the
@@ -19,6 +21,7 @@
 //! mid-run zero-downtime model swap cell (p99 across the cutover) and a
 //! 90%-hot skewed-traffic cell (work-stealing rebalance).
 
+use shine::linalg::vecops::Bf16;
 use shine::qn::low_rank::LowRank;
 use shine::qn::workspace::Workspace;
 use shine::qn::{InvOp, MemoryPolicy};
@@ -44,7 +47,7 @@ fn main() {
          (closed-loop, f32 serving precision)"
     );
     let solver = SolverSpec::picard(1.0).with_tol(tol).with_max_iters(200);
-    let rows = run_suite::<f32>(d, block, &batch_sizes, total, solver, 1);
+    let rows = run_suite::<f32, f32, f32>(d, block, &batch_sizes, total, solver, 1);
 
     let mut cases: Vec<Json> = Vec::new();
     let mut accept_speedup = 0.0;
@@ -124,6 +127,23 @@ fn main() {
     }
     let (cont_p95, disc_p95) = (open_reps[0].p95_latency_ms, open_reps[1].p95_latency_ms);
 
+    // Mixed-precision panel cell (ISSUE 8): the same closed-loop B = 32
+    // schedule served by an engine whose cached estimate stores U in bf16
+    // and keeps V in f32 (`ServeEngine<f32, Bf16, f32>`). Forward cost is
+    // identical — the delta isolates the backward sweep's panel-traffic
+    // saving at serving scale.
+    let mixed_rows = run_suite::<f32, Bf16, f32>(d, block, &[32], total, solver, 1);
+    let mixed_rep = &mixed_rows[0].report;
+    let f32_b32_rps = rows.last().expect("B=32 row").report.rps;
+    println!(
+        "mixed-precision B=32: {:>10.1} req/s ({:.2}x f32 panels)  p50 {:>8.3} ms  p95 {:>8.3} ms",
+        mixed_rep.rps,
+        mixed_rep.rps / f32_b32_rps.max(1e-12),
+        mixed_rep.p50_latency_ms,
+        mixed_rep.p95_latency_ms
+    );
+    all_converged &= mixed_rep.all_converged;
+
     // Sharded scale-out. Geometry chosen so sharding is the only lever:
     // d = 512, B = 8 puts every residual evaluation below the kernel
     // thread-fanout threshold (serial inner loop), and 8 distinct models
@@ -165,7 +185,7 @@ fn main() {
             hot_share: None,
             swap_at: None,
         };
-        let rep = run_sharded_open_loop::<f32>(sengine, &mk, &lc, 7);
+        let rep = run_sharded_open_loop::<f32, f32, f32>(sengine, &mk, &lc, 7);
         println!(
             "sharded {shards}x: {:>10.1} req/s  p50 {:>8.3} ms  p99 {:>8.3} ms  \
              steals {}",
@@ -203,7 +223,7 @@ fn main() {
         hot_share: None,
         swap_at: Some(stotal / 2),
     };
-    let swap_rep = run_sharded_open_loop::<f32>(sengine, &mk, &swap_lc, 7);
+    let swap_rep = run_sharded_open_loop::<f32, f32, f32>(sengine, &mk, &swap_lc, 7);
     let swap_tel = swap_rep.swap.expect("swap configured");
     println!(
         "sharded swap: p99 {:>8.3} ms across cutover ({} old / {} new, completed {})",
@@ -224,7 +244,7 @@ fn main() {
         hot_share: Some(0.9),
         swap_at: None,
     };
-    let skew_rep = run_sharded_open_loop::<f32>(sengine, &mk, &skew_lc, 7);
+    let skew_rep = run_sharded_open_loop::<f32, f32, f32>(sengine, &mk, &skew_lc, 7);
     println!(
         "sharded skew (90% hot): {:>10.1} req/s  p99 {:>8.3} ms  steals {}",
         skew_rep.rps, skew_rep.p99_latency_ms, skew_rep.steals
@@ -317,6 +337,19 @@ fn main() {
                         .set("steals", skew_rep.steals)
                         .clone(),
                 )
+                .clone(),
+        )
+        .set(
+            "mixed_precision",
+            Json::obj()
+                .set("b", 32usize)
+                .set("layout", "bf16_u_f32_v")
+                .set("rps", mixed_rep.rps)
+                .set("rps_ratio_vs_f32", mixed_rep.rps / f32_b32_rps.max(1e-12))
+                .set("p50_latency_ms", mixed_rep.p50_latency_ms)
+                .set("p95_latency_ms", mixed_rep.p95_latency_ms)
+                .set("fwd_iters_mean", mixed_rep.fwd_iters_mean)
+                .set("all_converged", mixed_rep.all_converged)
                 .clone(),
         )
         .set(

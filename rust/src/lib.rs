@@ -40,13 +40,19 @@
 //! identity-plus-low-rank inverse estimates `H = I + Σ uᵢvᵢᵀ` — is built
 //! on three primitives:
 //!
-//! * [`linalg::vecops::Elem`] — the storage scalar (`f32`/`f64`) the whole
-//!   qN/solver stack is generic over, with the *store narrow, accumulate
-//!   wide* contract: panels and iterates in `E`, every reduction in f64.
-//!   The DEQ path runs `E = f32` end-to-end (half the panel traffic, no
-//!   boundary casts against the f32 artifacts); the bi-level/HOAG path
-//!   keeps the `f64` default. `rust/tests/precision_parity.rs` proves the
-//!   instantiations agree to f32 tolerance.
+//! * [`linalg::vecops::Elem`] — the storage scalar (`f64`, `f32`, or the
+//!   hand-rolled 16-bit [`linalg::vecops::Bf16`] / [`linalg::vecops::F16`])
+//!   the whole qN/solver stack is generic over, with the *store narrow,
+//!   accumulate wide* contract: panels and iterates in `E`, every
+//!   reduction in f64. The DEQ path runs `E = f32` end-to-end (half the
+//!   panel traffic, no boundary casts against the f32 artifacts); the
+//!   bi-level/HOAG path keeps the `f64` default; the serving tier can
+//!   additionally demote cached estimate *panels* to bf16/f16 or the
+//!   mixed U-bf16/V-f32 layout via the independent storage parameters on
+//!   [`qn::LowRank`] (`LowRank<EU, EV>`) while state stays f32.
+//!   `rust/tests/precision_parity.rs` proves the instantiations agree to
+//!   the documented tolerances and pins the 16-bit conversions bit-level
+//!   (exhaustive round-trips + round-to-nearest-even).
 //! * [`qn::FactorPanel`] — contiguous row-major factor storage behind a
 //!   ring buffer: `H x` is two streaming panel sweeps
 //!   (`linalg::vecops::panel_gemv` → `panel_gemv_t`, thread-parallel above
@@ -82,8 +88,14 @@
 //! itself is **continuous batching**
 //! ([`serve::ServeEngine::process_streaming`]): requests are admitted into
 //! columns freed by retirement mid-solve, with per-column iteration
-//! budgets, straggler evict-and-retry and per-key adaptive width — see
-//! `docs/ARCHITECTURE.md` and `docs/adr/001-continuous-batching.md`.
+//! budgets, straggler evict-and-retry and per-key adaptive width. The
+//! engine's panel storage is selectable per instantiation
+//! (`ServeEngine<E, EU, EV>`, CLI `--panel-precision`): calibration runs
+//! at full state precision and the cached estimate is demoted once, with
+//! the §3 fallback guard + [`serve::RecalibPolicy`] policing demotion
+//! error — see `docs/ARCHITECTURE.md`,
+//! `docs/adr/001-continuous-batching.md` and
+//! `docs/adr/003-reduced-precision-panels.md`.
 //!
 //! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
 //! paper-vs-measured results.

@@ -3,13 +3,14 @@
 //! # The `Elem` precision contract
 //!
 //! Every vector kernel in this module — and through it the whole qN /
-//! solver / DEQ stack — is generic over a storage scalar [`Elem`] with two
-//! instantiations, `f64` and `f32`. The contract is **store narrow,
-//! accumulate wide**:
+//! solver / DEQ stack — is generic over a storage scalar [`Elem`] with four
+//! instantiations: `f64`, `f32`, and the half-width bit-level newtypes
+//! [`Bf16`] (bfloat16: 1+8+7, f32's exponent range) and [`F16`] (IEEE
+//! binary16: 1+5+10). The contract is **store narrow, accumulate wide**:
 //!
 //! * *storage* (panels, iterates, residuals, cotangents) is `E`;
 //! * every *reduction* (dot products, norms, Gram entries) is carried in the
-//!   wide accumulator `Elem::Acc` — pinned to `f64` for both instantiations —
+//!   wide accumulator `Elem::Acc` — pinned to `f64` for every instantiation —
 //!   and every *coefficient* derived from a reduction (Sherman–Morrison
 //!   denominators, two-loop α/β, `ρ = 1/yᵀs`, mixing weights) stays `f64`
 //!   until the final element-wise write-back narrows it to `E`.
@@ -17,11 +18,11 @@
 //! This is exactly the trade the DEQ literature shows the backward pass
 //! tolerates (Jacobian-Free training, inexact/implicit gradients): f32
 //! panels halve the memory traffic of the O(m·d) low-rank sweeps that
-//! dominate SHINE's backward cost at MDEQ scale, while f64 accumulation
-//! keeps the dot products as accurate as the old all-f64 path. The bi-level
-//! experiments instantiate the same code at `E = f64` and are bit-compatible
-//! with the pre-generic implementation (`to_f64`/`from_f64` are identity for
-//! `f64` and compile away).
+//! dominate SHINE's backward cost at MDEQ scale, and bf16/f16 panels halve
+//! it again, while f64 accumulation keeps the dot products as accurate as
+//! the old all-f64 path. The bi-level experiments instantiate the same code
+//! at `E = f64` and are bit-compatible with the pre-generic implementation
+//! (`to_f64`/`from_f64` are identity for `f64` and compile away).
 //!
 //! # Kernels
 //!
@@ -34,22 +35,33 @@
 //! (via [`crate::util::threads::par_row_chunks_mut`]) once the panel
 //! exceeds [`PAR_MIN_ELEMS`], so a large batch of cotangents uses every
 //! core.
+//!
+//! The kernels that touch two buffers take **two independent storage
+//! parameters** (the panel's and the vector's): since every element is
+//! widened to f64 before any arithmetic, a bf16 panel can sweep an f32
+//! state vector in one pass with no intermediate buffer. Same-typed call
+//! sites infer both parameters identically, so the single-precision API is
+//! unchanged; mixed instantiations are what let `MixedPanel`-style layouts
+//! (bf16 U factors, f32 V factors — see [`crate::qn::FactorPanel`]) put the
+//! byte savings where the error is cheap.
 
 use crate::util::threads;
 
-/// Storage scalar of the low-rank engine: `f32` or `f64` panels, always with
-/// `f64` accumulation (see the module docs for the full contract).
+/// Storage scalar of the low-rank engine: `f64`, `f32`, [`Bf16`] or [`F16`]
+/// panels, always with `f64` accumulation (see the module docs for the full
+/// contract).
 ///
 /// `to_f64`/`from_f64` are the only arithmetic surface — generic code widens
 /// operands, computes in `f64`, and narrows results. For `E = f64` both are
 /// identities and the optimizer erases them; for `E = f32` they compile to
-/// single convert instructions that vanish inside the memory-bound sweeps.
+/// single convert instructions; for the half-width newtypes they are a few
+/// integer ops that still vanish inside the memory-bound sweeps.
 pub trait Elem:
     Copy + PartialEq + PartialOrd + Send + Sync + std::fmt::Debug + 'static
 {
     /// Wide accumulator type for reductions. Pinned to `f64` for every
-    /// supported storage type; a future f16/bf16 storage would keep it at
-    /// `f64` too — the contract is that `Acc` never narrows below f64.
+    /// supported storage type — including the half-width `Bf16`/`F16`
+    /// storages; the contract is that `Acc` never narrows below f64.
     /// Because every impl pins it, the kernel/coefficient signatures below
     /// spell the accumulator as plain `f64`; the associated type exists to
     /// mark the contract (and the seam a non-f64 accumulator would thread
@@ -93,9 +105,244 @@ impl Elem for f32 {
     }
 }
 
-/// dot(a, b), accumulated in f64 regardless of storage precision.
+// ---- half-width storage scalars -------------------------------------------
+//
+// Pure-Rust bit-level bfloat16 and IEEE binary16, per the vendored-dependency
+// idiom: no `half` crate, just `u16` newtypes whose entire arithmetic surface
+// is `to_f64`/`from_f64`. Narrowing is round-to-nearest-even with subnormals,
+// ±Inf and NaN handled; widening is exact (every bf16/f16 value is exactly
+// representable in f32, hence f64). `from_f64` narrows through f32 first
+// (`as f32` is RNE in Rust), then RNE again to 16 bits — the composition can
+// double-round a ≤1-ulp sliver of f64 inputs sitting within 2⁻¹⁶ of a
+// halfway point, which is irrelevant at 8/11 bits of mantissa; for f32
+// inputs (all panel traffic) the narrowing is exactly RNE.
+
+/// Narrow an f32 to bfloat16 bits: round-to-nearest-even by add-with-carry
+/// on the upper half (bf16 is f32 truncated to 16 bits, so subnormals and
+/// overflow-to-Inf fall out of the same add).
+#[inline(always)]
+fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep the sign, force a quiet NaN that survives the truncation.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7FFF + lsb) >> 16) as u16
+}
+
+/// Widen bfloat16 bits to f32 — exact for every class (bf16 ⊂ f32).
+#[inline(always)]
+fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Narrow an f32 to IEEE binary16 bits with round-to-nearest-even.
+/// Branches: Inf/NaN, normal (≥ 2⁻¹⁴, RNE by add-with-carry on the rebased
+/// bits, overflow to Inf), underflow-to-zero (≤ 2⁻²⁵, the tie rounds to the
+/// even zero), and subnormal (explicit RNE on the shifted-out mantissa; a
+/// carry into the exponent field yields the smallest normal, which is the
+/// correct encoding).
+#[inline(always)]
+fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7FFF_FFFF;
+    if abs >= 0x7F80_0000 {
+        // Inf or NaN; preserve a NaN payload sliver and quietness.
+        return if abs > 0x7F80_0000 {
+            sign | 0x7E00 | ((abs >> 13) & 0x3FF) as u16
+        } else {
+            sign | 0x7C00
+        };
+    }
+    if abs >= 0x3880_0000 {
+        // Normal range: rebias 127→15 (subtract 112 exponents), then RNE on
+        // the 13 dropped mantissa bits; a carry past the top overflows to Inf.
+        let adjusted = abs - 0x3800_0000;
+        let lsb = (adjusted >> 13) & 1;
+        let rounded = (adjusted + 0xFFF + lsb) >> 13;
+        return if rounded >= 0x7C00 {
+            sign | 0x7C00
+        } else {
+            sign | rounded as u16
+        };
+    }
+    if abs <= 0x3300_0000 {
+        // ≤ 2⁻²⁵: underflows to (signed) zero; the exact tie at 2⁻²⁵ rounds
+        // to the even candidate, which is zero.
+        return sign;
+    }
+    // Subnormal range (2⁻²⁵, 2⁻¹⁴): value = man·2^(exp32−150), target ulp is
+    // 2⁻²⁴, so shift the 24-bit significand right by 126 − exp32 ∈ [14, 24]
+    // with explicit round-to-nearest-even on the dropped bits.
+    let exp32 = (abs >> 23) as i32;
+    let man = (abs & 0x007F_FFFF) | 0x0080_0000;
+    let shift = (126 - exp32) as u32;
+    let halfway = 1u32 << (shift - 1);
+    let kept = man >> shift;
+    let dropped = man & ((1u32 << shift) - 1);
+    let round_up = dropped > halfway || (dropped == halfway && kept & 1 == 1);
+    sign | (kept + round_up as u32) as u16
+}
+
+/// Widen IEEE binary16 bits to f32 — exact for every class (f16 ⊂ f32).
+#[inline(always)]
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal: man · 2⁻²⁴, exact as an f32 product (man ≤ 1023).
+        let mag = (man as f32) * f32::from_bits(0x3380_0000); // 2⁻²⁴
+        return if sign != 0 { -mag } else { mag };
+    }
+    if exp == 31 {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13)); // Inf / NaN
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// bfloat16 storage scalar: f32's 8-bit exponent with a 7-bit mantissa, so
+/// narrowing from f32 never over/underflows new ranges — the dynamic range
+/// of the panels survives and only resolution (~0.4% relative) is lost.
+/// This is the default half-width panel storage (see ADR-003).
+#[derive(Copy, Clone)]
+pub struct Bf16(u16);
+
+impl Bf16 {
+    /// Wrap raw bfloat16 bits.
+    #[inline(always)]
+    pub const fn from_bits(bits: u16) -> Self {
+        Bf16(bits)
+    }
+    /// The raw bfloat16 bit pattern.
+    #[inline(always)]
+    pub const fn to_bits(self) -> u16 {
+        self.0
+    }
+    /// Narrow an f32 with round-to-nearest-even.
+    #[inline(always)]
+    pub fn from_f32(x: f32) -> Self {
+        Bf16(f32_to_bf16_bits(x))
+    }
+    /// Widen to f32 (exact).
+    #[inline(always)]
+    pub fn to_f32(self) -> f32 {
+        bf16_bits_to_f32(self.0)
+    }
+}
+
+impl Elem for Bf16 {
+    type Acc = f64;
+    const ZERO: Self = Bf16(0x0000);
+    const ONE: Self = Bf16(0x3F80);
+    #[inline(always)]
+    fn from_f64(x: f64) -> Bf16 {
+        Bf16(f32_to_bf16_bits(x as f32))
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        bf16_bits_to_f32(self.0) as f64
+    }
+}
+
+/// IEEE binary16 storage scalar: 5-bit exponent (range ±65504, subnormals
+/// down to 2⁻²⁴) with a 10-bit mantissa — finer resolution than [`Bf16`]
+/// but a range that large panel factors can overflow; the scale-aware
+/// representability guards in the qN updates skip such factors.
+#[derive(Copy, Clone)]
+pub struct F16(u16);
+
+impl F16 {
+    /// Wrap raw binary16 bits.
+    #[inline(always)]
+    pub const fn from_bits(bits: u16) -> Self {
+        F16(bits)
+    }
+    /// The raw binary16 bit pattern.
+    #[inline(always)]
+    pub const fn to_bits(self) -> u16 {
+        self.0
+    }
+    /// Narrow an f32 with round-to-nearest-even.
+    #[inline(always)]
+    pub fn from_f32(x: f32) -> Self {
+        F16(f32_to_f16_bits(x))
+    }
+    /// Widen to f32 (exact).
+    #[inline(always)]
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+}
+
+impl Elem for F16 {
+    type Acc = f64;
+    const ZERO: Self = F16(0x0000);
+    const ONE: Self = F16(0x3C00);
+    #[inline(always)]
+    fn from_f64(x: f64) -> F16 {
+        F16(f32_to_f16_bits(x as f32))
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        f16_bits_to_f32(self.0) as f64
+    }
+}
+
+// Value comparison (not bit comparison): derived ordering on the raw bits
+// would misorder negatives, distinguish ±0 and equate NaNs. Widening is
+// exact, so comparing through f64 gives exactly IEEE semantics.
+impl PartialEq for Bf16 {
+    #[inline(always)]
+    fn eq(&self, other: &Self) -> bool {
+        self.to_f64() == other.to_f64()
+    }
+}
+
+impl PartialOrd for Bf16 {
+    #[inline(always)]
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.to_f64().partial_cmp(&other.to_f64())
+    }
+}
+
+impl std::fmt::Debug for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}bf16", self.to_f32())
+    }
+}
+
+impl PartialEq for F16 {
+    #[inline(always)]
+    fn eq(&self, other: &Self) -> bool {
+        self.to_f64() == other.to_f64()
+    }
+}
+
+impl PartialOrd for F16 {
+    #[inline(always)]
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.to_f64().partial_cmp(&other.to_f64())
+    }
+}
+
+impl std::fmt::Debug for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}f16", self.to_f32())
+    }
+}
+
+/// dot(a, b), accumulated in f64 regardless of storage precision. The two
+/// operands may use different storage scalars (both widen per element), so a
+/// reduced-precision panel row can sweep a wider state vector directly;
+/// same-typed call sites infer `A = B` as before.
 #[inline]
-pub fn dot<E: Elem>(a: &[E], b: &[E]) -> f64 {
+pub fn dot<A: Elem, B: Elem>(a: &[A], b: &[B]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = 0.0f64;
     for i in 0..a.len() {
@@ -105,11 +352,13 @@ pub fn dot<E: Elem>(a: &[E], b: &[E]) -> f64 {
 }
 
 /// y += alpha * x (alpha in accumulator precision, one narrowing per write).
+/// `x` and `y` may use different storage scalars — the accumulation side `y`
+/// keeps its own precision while a narrower `x` panel row widens per element.
 #[inline]
-pub fn axpy<E: Elem>(alpha: f64, x: &[E], y: &mut [E]) {
+pub fn axpy<X: Elem, Y: Elem>(alpha: f64, x: &[X], y: &mut [Y]) {
     debug_assert_eq!(x.len(), y.len());
     for i in 0..x.len() {
-        y[i] = E::from_f64(y[i].to_f64() + alpha * x[i].to_f64());
+        y[i] = Y::from_f64(y[i].to_f64() + alpha * x[i].to_f64());
     }
 }
 
@@ -210,8 +459,16 @@ pub const PAR_MIN_ELEMS: usize = 1 << 17;
 
 /// `coeffs[i] = Σ_j panel[i·dim + j] · x[j]` for `i in 0..rows`
 /// (row-major panel–vector products; phase 1 of the low-rank apply).
+/// The panel and vector storage scalars are independent (both widen to f64
+/// per element), so reduced-precision panels sweep wider state directly.
 #[inline]
-pub fn panel_gemv<E: Elem>(panel: &[E], rows: usize, dim: usize, x: &[E], coeffs: &mut [f64]) {
+pub fn panel_gemv<P: Elem, X: Elem>(
+    panel: &[P],
+    rows: usize,
+    dim: usize,
+    x: &[X],
+    coeffs: &mut [f64],
+) {
     debug_assert!(panel.len() >= rows * dim);
     debug_assert_eq!(x.len(), dim);
     debug_assert!(coeffs.len() >= rows);
@@ -222,8 +479,15 @@ pub fn panel_gemv<E: Elem>(panel: &[E], rows: usize, dim: usize, x: &[E], coeffs
 
 /// `y[j] += Σ_i coeffs[i] · panel[i·dim + j]` (transposed panel–vector
 /// product; phase 2 of the low-rank apply — one contiguous axpy per row).
+/// Panel and output storage scalars are independent, as in [`panel_gemv`].
 #[inline]
-pub fn panel_gemv_t<E: Elem>(panel: &[E], rows: usize, dim: usize, coeffs: &[f64], y: &mut [E]) {
+pub fn panel_gemv_t<P: Elem, Y: Elem>(
+    panel: &[P],
+    rows: usize,
+    dim: usize,
+    coeffs: &[f64],
+    y: &mut [Y],
+) {
     debug_assert!(panel.len() >= rows * dim);
     debug_assert!(coeffs.len() >= rows);
     debug_assert_eq!(y.len(), dim);
@@ -242,11 +506,11 @@ pub fn panel_gemv_t<E: Elem>(panel: &[E], rows: usize, dim: usize, coeffs: &[f64
 /// the sweep is sharded across threads by blocks of panel rows (each block
 /// owns a contiguous run of `coeffs` rows, so workers never share a write).
 #[inline]
-pub fn panel_gemv_multi<E: Elem>(
-    panel: &[E],
+pub fn panel_gemv_multi<P: Elem, X: Elem>(
+    panel: &[P],
     rows: usize,
     dim: usize,
-    xs: &[E],
+    xs: &[X],
     k: usize,
     coeffs: &mut [f64],
 ) {
@@ -264,11 +528,11 @@ pub fn panel_gemv_multi<E: Elem>(
 }
 
 #[inline]
-fn gemv_multi_serial<E: Elem>(
-    panel: &[E],
+fn gemv_multi_serial<P: Elem, X: Elem>(
+    panel: &[P],
     rows: usize,
     dim: usize,
-    xs: &[E],
+    xs: &[X],
     k: usize,
     coeffs: &mut [f64],
 ) {
@@ -289,13 +553,13 @@ fn gemv_multi_serial<E: Elem>(
 /// regime is large `k`, where each of up to `k` workers streams the panel
 /// once for `k/workers` outputs.
 #[inline]
-pub fn panel_gemv_t_multi<E: Elem>(
-    panel: &[E],
+pub fn panel_gemv_t_multi<P: Elem, Y: Elem>(
+    panel: &[P],
     rows: usize,
     dim: usize,
     coeffs: &[f64],
     k: usize,
-    ys: &mut [E],
+    ys: &mut [Y],
 ) {
     debug_assert!(panel.len() >= rows * dim);
     debug_assert_eq!(ys.len(), k * dim);
@@ -313,14 +577,14 @@ pub fn panel_gemv_t_multi<E: Elem>(
 /// Serial body of [`panel_gemv_t_multi`] over the RHS rows `r0..` held in
 /// `ys_chunk` (whole rows of the full `k × dim` output).
 #[inline]
-fn gemv_t_multi_sharded<E: Elem>(
-    panel: &[E],
+fn gemv_t_multi_sharded<P: Elem, Y: Elem>(
+    panel: &[P],
     rows: usize,
     dim: usize,
     coeffs: &[f64],
     k: usize,
     r0: usize,
-    ys_chunk: &mut [E],
+    ys_chunk: &mut [Y],
 ) {
     for i in 0..rows {
         let row = &panel[i * dim..i * dim + dim];
@@ -441,6 +705,106 @@ mod tests {
         for j in 0..3 {
             assert!((y64[j] - y32[j] as f64).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn bf16_conversion_edge_cases() {
+        // Exact values survive the round trip bit-for-bit.
+        assert_eq!(Bf16::ONE.to_bits(), 0x3F80);
+        assert_eq!(Bf16::from_f32(1.0).to_bits(), 0x3F80);
+        assert_eq!(Bf16::from_f32(-0.0).to_bits(), 0x8000);
+        assert_eq!(Bf16::from_f32(0.0).to_bits(), 0x0000);
+        for v in [1.0f32, -2.5, 0.15625, 3.0e38, 1.0e-38, -7.0] {
+            let b = Bf16::from_f32(v);
+            assert_eq!(Bf16::from_f32(b.to_f32()).to_bits(), b.to_bits());
+        }
+        // Round-to-nearest-even at the 2⁻⁸ tie around 1.0: the tie with an
+        // even kept-lsb truncates, the tie with an odd kept-lsb rounds up,
+        // and anything past the tie rounds up.
+        assert_eq!(Bf16::from_f32(f32::from_bits(0x3F80_8000)).to_bits(), 0x3F80);
+        assert_eq!(Bf16::from_f32(f32::from_bits(0x3F81_8000)).to_bits(), 0x3F82);
+        assert_eq!(Bf16::from_f32(f32::from_bits(0x3F80_8001)).to_bits(), 0x3F81);
+        // Range: bf16 shares f32's exponent field, so f32::MIN_POSITIVE is
+        // exactly representable and f32::MAX rounds up to +Inf.
+        assert_eq!(Bf16::from_f32(f32::MIN_POSITIVE).to_bits(), 0x0080);
+        assert_eq!(Bf16::from_f32(f32::MAX).to_bits(), 0x7F80);
+        assert_eq!(Bf16::from_f32(-f32::MAX).to_bits(), 0xFF80);
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_bits(), 0x7F80);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert!(Bf16::from_f64(f64::NAN).to_f64().is_nan());
+    }
+
+    #[test]
+    fn f16_conversion_edge_cases() {
+        assert_eq!(F16::ONE.to_bits(), 0x3C00);
+        assert_eq!(F16::from_f32(1.5).to_bits(), 0x3E00);
+        assert_eq!(F16::from_f32(-0.0).to_bits(), 0x8000);
+        for v in [1.0f32, -2.5, 0.15625, 65504.0, -1024.0] {
+            let h = F16::from_f32(v);
+            assert_eq!(F16::from_f32(h.to_f32()).to_bits(), h.to_bits());
+        }
+        // Largest finite value and the overflow tie: 65520 sits exactly
+        // between 65504 and 2¹⁶; the even candidate is 2¹⁶, which overflows
+        // to +Inf. Anything below the tie stays at 65504.
+        assert_eq!(F16::from_f32(65504.0).to_bits(), 0x7BFF);
+        assert_eq!(F16::from_f32(65519.0).to_bits(), 0x7BFF);
+        assert_eq!(F16::from_f32(65520.0).to_bits(), 0x7C00);
+        assert_eq!(F16::from_f32(1.0e9).to_bits(), 0x7C00);
+        // Smallest normal, subnormals, and the underflow tie: 2⁻²⁵ is the
+        // halfway point between 0 and the smallest subnormal 2⁻²⁴ — it
+        // rounds to the even zero; 0.75·2⁻²⁴ rounds up to 2⁻²⁴.
+        assert_eq!(F16::from_f32(f32::from_bits(0x3880_0000)).to_bits(), 0x0400);
+        assert_eq!(F16::from_f64((2.0f64).powi(-24)).to_bits(), 0x0001);
+        assert_eq!(F16::from_f64((2.0f64).powi(-25)).to_bits(), 0x0000);
+        assert_eq!(F16::from_f64(0.75 * (2.0f64).powi(-24)).to_bits(), 0x0001);
+        assert_eq!(F16::from_f64((2.0f64).powi(-26)).to_bits(), 0x0000);
+        // Subnormal RNE ties round to even mantissas.
+        assert_eq!(F16::from_f64(100.5 * (2.0f64).powi(-24)).to_bits(), 0x0064);
+        assert_eq!(F16::from_f64(101.5 * (2.0f64).powi(-24)).to_bits(), 0x0066);
+        // Just below the normal boundary the carry lands on the smallest
+        // normal encoding.
+        assert_eq!(F16::from_f32(f32::from_bits(0x387F_FFFF)).to_bits(), 0x0400);
+        // Subnormal round trips are exact.
+        for bits in [0x0001u16, 0x0064, 0x03FF, 0x8001, 0x83FF] {
+            let h = F16::from_bits(bits);
+            assert_eq!(F16::from_f32(h.to_f32()).to_bits(), bits);
+        }
+        assert_eq!(F16::from_f32(f32::INFINITY).to_bits(), 0x7C00);
+        assert_eq!(F16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+        assert!(F16::from_f64(f64::NAN).to_f64().is_nan());
+    }
+
+    #[test]
+    fn mixed_storage_kernels_widen_per_element() {
+        // A bf16 panel sweeping f32 state: every operand widens to f64, so
+        // the mixed kernel must agree exactly with widening the panel by
+        // hand first (bf16 → f64 is exact).
+        let panel64 = [0.5, -1.25, 2.0, 0.75, 1.5, -0.5];
+        let panel: Vec<Bf16> = panel64.iter().map(|&x| Bf16::from_f64(x)).collect();
+        let widened: Vec<f64> = panel.iter().map(|b| b.to_f64()).collect();
+        let x = [1.0f32, -2.0, 0.5];
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let mut c = [0.0; 2];
+        let mut c_ref = [0.0; 2];
+        panel_gemv(&panel, 2, 3, &x, &mut c);
+        panel_gemv(&widened, 2, 3, &x64, &mut c_ref);
+        assert_eq!(c, c_ref);
+        let mut y = [0.25f32; 3];
+        let mut y_ref = [0.25f64; 3];
+        panel_gemv_t(&panel, 2, 3, &c, &mut y);
+        panel_gemv_t(&widened, 2, 3, &c_ref, &mut y_ref);
+        for j in 0..3 {
+            assert_eq!(y[j] as f64, y_ref[j], "dyadic values narrow exactly");
+        }
+        // dot/axpy accept mixed operands directly.
+        let a16: Vec<F16> = [1.0f64, 2.0, -0.5].iter().map(|&v| F16::from_f64(v)).collect();
+        let b32 = [4.0f32, 0.5, 2.0];
+        assert_eq!(dot(&a16, &b32), 4.0);
+        let mut acc = [1.0f32; 3];
+        axpy(2.0, &a16, &mut acc);
+        assert_eq!(acc, [3.0, 5.0, 0.0]);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!   version
 
 use shine::coordinator::{registry, run_experiment, ExpCtx};
+use shine::linalg::vecops::Elem;
 use shine::util::cli::Args;
 use std::process::ExitCode;
 
@@ -136,6 +137,13 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                 )
                 .flag("tol", "1e-5", "forward residual tolerance")
                 .flag(
+                    "panel-precision",
+                    "f32",
+                    "estimate panel storage (f64 | f32 | bf16 | f16 | mixed); \
+                     reduced variants keep f32 state and demote only the cached \
+                     estimate's factor panels",
+                )
+                .flag(
                     "models",
                     "1",
                     "distinct models: >1 runs the routed multi-model workload \
@@ -177,8 +185,9 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                 .switch(
                     "smoke",
                     "tiny sizes for CI (overrides d/block/requests/batch-sizes and \
-                     adds a two-model routed case plus a two-shard sharded cell \
-                     with one mid-run version swap)",
+                     adds a two-model routed case, a two-shard sharded cell with \
+                     one mid-run version swap, and a bf16 reduced-precision cell \
+                     gated on convergence + guard trip rate)",
                 )
                 .parse(rest)?;
             cmd_serve_bench(&a)
@@ -351,7 +360,37 @@ fn cmd_hpo(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Monomorphization dispatch for `--panel-precision`: every variant runs
+/// the identical generic body, differing only in the storage types of the
+/// cached inverse estimates (see [`shine::solvers::session::PanelPrecision`]
+/// for the mapping). The smoke run additionally pins a bf16
+/// reduced-precision cell regardless of the flag.
 fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
+    use shine::linalg::vecops::{Bf16, F16};
+    use shine::solvers::session::PanelPrecision;
+
+    let precision = PanelPrecision::parse(a.get("panel-precision"))
+        .map_err(|e| anyhow::anyhow!("--panel-precision: {e}"))?;
+    match precision {
+        PanelPrecision::F64 => serve_bench_run::<f64, f64, f64>(a, precision)?,
+        PanelPrecision::F32 => serve_bench_run::<f32, f32, f32>(a, precision)?,
+        PanelPrecision::Bf16 => serve_bench_run::<f32, Bf16, Bf16>(a, precision)?,
+        PanelPrecision::F16 => serve_bench_run::<f32, F16, F16>(a, precision)?,
+        PanelPrecision::Mixed => serve_bench_run::<f32, Bf16, f32>(a, precision)?,
+    }
+    if a.get_bool("smoke") {
+        smoke_reduced_precision(a)?;
+    }
+    Ok(())
+}
+
+/// The serve-bench body at one panel-precision instantiation: `E` is the
+/// state precision (requests, iterates, cotangents); `EU`/`EV` the storage
+/// of every cached estimate's U/V factor panels.
+fn serve_bench_run<E: Elem, EU: Elem, EV: Elem>(
+    a: &Args,
+    precision: shine::solvers::session::PanelPrecision,
+) -> anyhow::Result<()> {
     use shine::serve::{
         run_open_loop, run_routed_closed_loop, run_sharded_open_loop, run_suite, Arrivals,
         EngineConfig, ModelKey, OpenLoopConfig, RecalibPolicy, RoutedLoadConfig, Router,
@@ -396,10 +435,11 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
     }
     eprintln!(
         "serve-bench: d={d} block={block} requests/case={total} batch sizes {batch_sizes:?} \
-         solver={} (f32 serving precision; first width is the sequential baseline)",
-        solver.method.name()
+         solver={} panel-precision={} (first width is the sequential baseline)",
+        solver.method.name(),
+        precision.name()
     );
-    let rows = run_suite::<f32>(d, block, &batch_sizes, total, solver, seed);
+    let rows = run_suite::<E, EU, EV>(d, block, &batch_sizes, total, solver, seed);
     println!(
         "{:>6} {:>12} {:>10} {:>12} {:>12} {:>10} {:>6}",
         "B", "req/s", "speedup", "p50 ms", "p95 ms", "iters/req", "conv"
@@ -452,9 +492,9 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
         };
         let cb = a.get_usize("col-budget");
         let col_budget = if cb == 0 { None } else { Some(cb) };
-        let model: SynthDeq<f32> = SynthDeq::new(d, block, seed);
+        let model: SynthDeq<E> = SynthDeq::new(d, block, seed);
         let mk_engine = |col_budget| {
-            let mut e: ServeEngine<f32> = ServeEngine::new(
+            let mut e: ServeEngine<E, EU, EV> = ServeEngine::new(
                 d,
                 EngineConfig {
                     max_batch: bsz,
@@ -466,8 +506,8 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
                 },
             );
             e.calibrate(
-                |z: &[f32], out: &mut [f32]| model.residual_batch(z, 1, out),
-                &vec![0.0f32; d],
+                |z: &[E], out: &mut [E]| model.residual_batch(z, 1, out),
+                &vec![E::ZERO; d],
             );
             e
         };
@@ -528,11 +568,11 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
             recalib: Some(RecalibPolicy::default()),
             col_budget: None,
         };
-        let mut router: Router<f32> = Router::new(cfg);
+        let mut router: Router<E, EU, EV> = Router::new(cfg);
         let keys: Vec<ModelKey> = (0..models as u32).map(|m| ModelKey::new(m, 0)).collect();
         for &k in &keys {
             let (it, rn) =
-                router.register(k, Box::new(SynthDeq::<f32>::new(d, block, seed ^ k.model as u64)));
+                router.register(k, Box::new(SynthDeq::<E>::new(d, block, seed ^ k.model as u64)));
             eprintln!("  routed: calibrated {k} in {it} iters (residual {rn:.2e})");
         }
         let lc = RoutedLoadConfig {
@@ -573,8 +613,8 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
             col_budget: None,
         };
         let sharded_models = models.max(2);
-        let mk = move |m: u32, v: u32| -> SharedModel<f32> {
-            Arc::new(SynthDeq::<f32>::new(
+        let mk = move |m: u32, v: u32| -> SharedModel<E> {
+            Arc::new(SynthDeq::<E>::new(
                 d,
                 block,
                 seed ^ m as u64 ^ ((v as u64) << 32),
@@ -602,7 +642,7 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
              swap at {:?}",
             lc.swap_at
         );
-        let rep = run_sharded_open_loop::<f32>(engine_cfg, &mk, &lc, seed ^ 0x5A4D);
+        let rep = run_sharded_open_loop::<E, EU, EV>(engine_cfg, &mk, &lc, seed ^ 0x5A4D);
         println!(
             "sharded {shards}x: {:.1} req/s (p50 {:.3} ms, p99 {:.3} ms, {} steals, \
              {} calibrations, {} re-calibrations)",
@@ -640,6 +680,113 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
                 );
             }
         }
+    }
+    Ok(())
+}
+
+/// The CI smoke gate's reduced-precision cell: the routed two-model closed
+/// loop through a `Router<f32, Bf16, Bf16>` and a two-shard open loop
+/// through the matching `ShardedRouter`, both with the §3 fallback guard
+/// armed. Gates hard on the issue's acceptance criteria: every column
+/// converges AND the guard trip rate never exceeds the recalibration
+/// policy's bound (no bf16 estimate may degrade enough to go stale on
+/// healthy traffic).
+fn smoke_reduced_precision(a: &Args) -> anyhow::Result<()> {
+    use shine::linalg::vecops::Bf16;
+    use shine::serve::{
+        run_routed_closed_loop, run_sharded_open_loop, Arrivals, EngineConfig, ModelKey,
+        RecalibPolicy, RoutedLoadConfig, Router, ShardedLoadConfig, SharedModel, SynthDeq,
+    };
+    use shine::solvers::session::SolverSpec;
+    use std::sync::Arc;
+
+    // The pinned smoke geometry (matches the main smoke body).
+    let (d, block, total, bsz) = (256, 32, 48, 8);
+    let tol = a.get_f64("tol");
+    let solver = SolverSpec::parse(a.get("solver"))
+        .map_err(|e| anyhow::anyhow!("--solver: {e}"))?
+        .with_tol(tol)
+        .with_max_iters(200);
+    let seed = a.get_u64("seed");
+    let policy = RecalibPolicy::default();
+    let cfg = EngineConfig {
+        max_batch: bsz,
+        solver,
+        calib: SolverSpec::broyden(30).with_tol(tol).with_max_iters(60),
+        fallback_ratio: Some(10.0),
+        recalib: Some(policy),
+        col_budget: None,
+    };
+    eprintln!("smoke: bf16 reduced-precision cell (guard armed, trip-rate bound {})",
+        policy.trip_rate);
+    let mut router: Router<f32, Bf16, Bf16> = Router::new(cfg);
+    let keys: Vec<ModelKey> = (0..2u32).map(|m| ModelKey::new(m, 0)).collect();
+    for &k in &keys {
+        router.register(k, Box::new(SynthDeq::<f32>::new(d, block, seed ^ k.model as u64)));
+    }
+    let lc = RoutedLoadConfig {
+        clients_per_model: bsz,
+        total,
+        max_batch: bsz,
+        max_wait: 1e-3,
+    };
+    let rep = run_routed_closed_loop(&mut router, &keys, &lc, seed ^ 0xB16);
+    println!(
+        "bf16 routed: {:.1} req/s over {} batches ({} re-calibrations)",
+        rep.rps, rep.batches, rep.recalibrations
+    );
+    if !rep.all_converged {
+        anyhow::bail!("bf16 routed smoke cell had unconverged columns (tol {tol})");
+    }
+    for &k in &keys {
+        let tr = router.engine(k).expect("registered key").trip_rate();
+        if tr > policy.trip_rate {
+            anyhow::bail!(
+                "bf16 routed smoke cell: key {k} guard trip rate {tr:.3} exceeds \
+                 the {} bound",
+                policy.trip_rate
+            );
+        }
+    }
+    if rep.recalibrations != 0 {
+        anyhow::bail!(
+            "bf16 routed smoke cell: {} estimates went stale on healthy traffic",
+            rep.recalibrations
+        );
+    }
+    let mk = move |m: u32, v: u32| -> SharedModel<f32> {
+        Arc::new(SynthDeq::<f32>::new(
+            d,
+            block,
+            seed ^ m as u64 ^ ((v as u64) << 32),
+        ))
+    };
+    let slc = ShardedLoadConfig {
+        shards: 2,
+        models: 2,
+        total,
+        arrivals: Arrivals::Poisson { rate: 50_000.0 },
+        max_batch: bsz,
+        max_wait: 1e-3,
+        hot_share: Some(0.75),
+        swap_at: None,
+    };
+    let srep = run_sharded_open_loop::<f32, Bf16, Bf16>(cfg, &mk, &slc, seed ^ 0xB16);
+    println!(
+        "bf16 sharded 2x: {:.1} req/s ({} steals, {} calibrations, {} re-calibrations)",
+        srep.rps, srep.steals, srep.calibrations, srep.recalibrations
+    );
+    if srep.requests != total {
+        anyhow::bail!("bf16 sharded smoke cell served {}/{total} requests", srep.requests);
+    }
+    if !srep.all_converged {
+        anyhow::bail!("bf16 sharded smoke cell had unconverged columns (tol {tol})");
+    }
+    if srep.recalibrations != 0 {
+        anyhow::bail!(
+            "bf16 sharded smoke cell: {} estimates went stale on healthy traffic",
+            srep.recalibrations
+        );
     }
     Ok(())
 }

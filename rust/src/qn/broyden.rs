@@ -56,7 +56,7 @@ impl<E: Elem> BroydenInverse<E> {
     }
 
     pub fn dim(&self) -> usize {
-        InvOp::dim(&self.h)
+        self.h.dim()
     }
 
     pub fn rank(&self) -> usize {
@@ -120,7 +120,7 @@ impl<E: Elem> BroydenInverse<E> {
 
 impl<E: Elem> InvOp<E> for BroydenInverse<E> {
     fn dim(&self) -> usize {
-        InvOp::dim(&self.h)
+        self.h.dim()
     }
     fn apply(&self, x: &[E], out: &mut [E]) {
         self.h.apply(x, out)

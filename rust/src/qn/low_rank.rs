@@ -16,7 +16,17 @@
 //! [`LowRank::push_with`] fills the new factor's panel slots in place so
 //! solver loops never allocate. At `E = f32` the sweeps move half the bytes
 //! of the f64 instantiation while every dot still accumulates in f64 (the
-//! [`Elem`] contract).
+//! [`Elem`] contract), and the half-width storages
+//! ([`crate::linalg::vecops::Bf16`]/[`crate::linalg::vecops::F16`]) halve
+//! them again.
+//!
+//! The structure carries **two storage parameters**, `LowRank<EU, EV>`
+//! (`EV` defaults to `EU`, so the historical `LowRank<E>` spelling is
+//! unchanged), and its [`InvOp`] implementation is **blanket over the
+//! vector precision**: a `LowRank<Bf16, f32>` — the serving tier's mixed
+//! layout, bf16 U factors next to f32 V factors — applies directly to f32
+//! state vectors with no widening buffer, because every kernel operand
+//! widens to f64 per element anyway.
 
 use crate::linalg::vecops::{
     axpy, panel_gemv, panel_gemv_multi, panel_gemv_t, panel_gemv_t_multi, Elem,
@@ -32,20 +42,27 @@ use crate::util::threads;
 pub use crate::linalg::vecops::PAR_MIN_ELEMS;
 
 #[derive(Clone, Debug)]
-pub struct LowRank<E: Elem = f64> {
-    panel: FactorPanel<E>,
+pub struct LowRank<EU: Elem = f64, EV: Elem = EU> {
+    panel: FactorPanel<EU, EV>,
     policy: MemoryPolicy,
     /// Number of updates rejected because the buffer was frozen.
     pub frozen_rejects: usize,
 }
 
-impl<E: Elem> LowRank<E> {
+impl<EU: Elem, EV: Elem> LowRank<EU, EV> {
     pub fn identity(dim: usize, max_mem: usize, policy: MemoryPolicy) -> Self {
         LowRank {
             panel: FactorPanel::new(dim, max_mem),
             policy,
             frozen_rejects: 0,
         }
+    }
+
+    /// Dimension of the operator. Inherent (not just via [`InvOp`]) because
+    /// the blanket `InvOp<X>` impl leaves `InvOp::dim(&lr)` without a unique
+    /// `X` to infer — the inherent method needs none.
+    pub fn dim(&self) -> usize {
+        self.panel.dim()
     }
 
     pub fn rank(&self) -> usize {
@@ -69,7 +86,7 @@ impl<E: Elem> LowRank<E> {
     /// [`MemoryPolicy::Evict`] a full buffer drops its oldest factor in O(1);
     /// under [`MemoryPolicy::Freeze`] the update is rejected (returns false)
     /// and `fill` is never called.
-    pub fn push_with(&mut self, fill: impl FnOnce(&mut [E], &mut [E])) -> bool {
+    pub fn push_with(&mut self, fill: impl FnOnce(&mut [EU], &mut [EV])) -> bool {
         if self.panel.is_full() && self.policy == MemoryPolicy::Freeze {
             self.frozen_rejects += 1;
             return false;
@@ -80,7 +97,7 @@ impl<E: Elem> LowRank<E> {
     }
 
     /// Append a rank-one term `u vᵀ`. Returns false if frozen-full.
-    pub fn push(&mut self, u: &[E], v: &[E]) -> bool {
+    pub fn push(&mut self, u: &[EU], v: &[EV]) -> bool {
         debug_assert_eq!(u.len(), self.panel.dim());
         debug_assert_eq!(v.len(), self.panel.dim());
         self.push_with(|us, vs| {
@@ -92,7 +109,7 @@ impl<E: Elem> LowRank<E> {
     /// Factor pairs in logical (oldest → newest) order. Direct access for
     /// warm-starting a backward solver from the forward estimate (the
     /// *refine* strategy) and for dense test oracles.
-    pub fn rows(&self) -> impl Iterator<Item = (&[E], &[E])> + '_ {
+    pub fn rows(&self) -> impl Iterator<Item = (&[EU], &[EV])> + '_ {
         self.panel.rows()
     }
 
@@ -104,32 +121,40 @@ impl<E: Elem> LowRank<E> {
     /// Zero-copy view of the transposed operator
     /// `(I + Σ u vᵀ)ᵀ = I + Σ v uᵀ` — apply/apply_t swapped, no storage
     /// touched. Use when the backward pass only needs to *apply* `Hᵀ`.
-    pub fn t(&self) -> TransposedView<'_, E> {
+    /// Available at any storage mix (both orientations of the kernels accept
+    /// independent panel precisions).
+    pub fn t(&self) -> TransposedView<'_, EU, EV> {
         TransposedView(self)
-    }
-
-    /// Consume into the transposed operator by swapping the u/v panels —
-    /// O(1), no copies. Use (after a clone when the forward estimate must be
-    /// retained) when the transposed matrix seeds a solver that will push
-    /// further updates, e.g. the refine strategy's warm-started backward
-    /// Broyden.
-    pub fn into_transposed(mut self) -> LowRank<E> {
-        self.panel.swap_uv();
-        self
     }
 
     /// Grow/shrink the memory budget (refine adds room for new updates on
     /// top of the forward estimate). Keeps the newest factors on shrink;
     /// growing an unwrapped (Freeze-built) estimate is O(1).
-    pub fn with_max_mem(mut self, max_mem: usize, policy: MemoryPolicy) -> LowRank<E> {
+    pub fn with_max_mem(mut self, max_mem: usize, policy: MemoryPolicy) -> LowRank<EU, EV> {
         self.panel.resize_cap(max_mem);
         self.policy = policy;
         self
     }
 
-    /// Pack factors into flat row-major (m, d) buffers in logical order —
-    /// the layout the `lowrank_apply` Pallas artifact consumes.
-    pub fn pack(&self) -> (Vec<E>, Vec<E>) {
+    /// Re-store the operator in the target precisions (widen to f64, narrow
+    /// once per element — round-to-nearest-even for the half-width
+    /// storages), preserving logical factor order, capacity and policy.
+    /// This is how the serving tier demotes a freshly calibrated f32
+    /// estimate into its reduced-precision panel layout. O(m·d); never on a
+    /// hot path.
+    pub fn convert<FU: Elem, FV: Elem>(&self) -> LowRank<FU, FV> {
+        LowRank {
+            panel: self.panel.convert(),
+            policy: self.policy,
+            frozen_rejects: self.frozen_rejects,
+        }
+    }
+
+    /// Pack factors into flat row-major (m, d) buffers in logical order, in
+    /// the panel's native storage precisions. For the PJRT artifact boundary
+    /// use [`LowRank::pack_f32`], which performs the ABI conversion
+    /// explicitly.
+    pub fn pack(&self) -> (Vec<EU>, Vec<EV>) {
         let d = self.panel.dim();
         let mut u = Vec::with_capacity(self.rank() * d);
         let mut v = Vec::with_capacity(self.rank() * d);
@@ -140,40 +165,43 @@ impl<E: Elem> LowRank<E> {
         (u, v)
     }
 
+    /// Pack factors into flat row-major (m, d) **f32** buffers in logical
+    /// order — the layout and dtype the `lowrank_apply` Pallas artifact
+    /// consumes (its manifest records `dtype: "f32"`; see
+    /// `runtime/manifest.rs`). This is the sanctioned conversion point for
+    /// feeding non-f32 panels to the AOT kernels: each element widens to f64
+    /// and narrows to f32 exactly once, instead of the panel storage being
+    /// silently assumed to match the artifact tensors.
+    pub fn pack_f32(&self) -> (Vec<f32>, Vec<f32>) {
+        let d = self.panel.dim();
+        let mut u = Vec::with_capacity(self.rank() * d);
+        let mut v = Vec::with_capacity(self.rank() * d);
+        for (ur, vr) in self.rows() {
+            u.extend(ur.iter().map(|x| x.to_f64() as f32));
+            v.extend(vr.iter().map(|x| x.to_f64() as f32));
+        }
+        (u, v)
+    }
+
     /// Two-phase blocked kernel shared by apply/apply_t: with
     /// `transpose == false` computes `out = x + Uᵀ (V x)`, with `true` the
     /// roles of the panels swap. `coeffs` must hold at least `rank()` f64
     /// slots (coefficients are reduction results and stay in accumulator
-    /// precision).
-    fn apply_impl(&self, transpose: bool, x: &[E], out: &mut [E], coeffs: &mut [f64]) {
+    /// precision). The two orientations dispatch to a helper generic over
+    /// both panel precisions, since the coefficient panel and the
+    /// accumulation panel have different storage types in a mixed layout.
+    fn apply_impl<X: Elem>(&self, transpose: bool, x: &[X], out: &mut [X], coeffs: &mut [f64]) {
         out.copy_from_slice(x);
         let m = self.panel.len();
         if m == 0 {
             return;
         }
         let d = self.panel.dim();
-        let (coef_panel, acc_panel) = if transpose {
-            (self.panel.u_flat(), self.panel.v_flat())
-        } else {
-            (self.panel.v_flat(), self.panel.u_flat())
-        };
         let coeffs = &mut coeffs[..m];
-        if m * d < PAR_MIN_ELEMS {
-            panel_gemv(coef_panel, m, d, x, coeffs);
-            panel_gemv_t(acc_panel, m, d, coeffs, out);
+        if transpose {
+            lr_apply_panels(self.panel.u_flat(), self.panel.v_flat(), m, d, x, out, coeffs);
         } else {
-            let workers = threads::ncpus().min(16);
-            threads::par_chunks_mut(&mut coeffs[..], workers.min(m), |off, cc| {
-                panel_gemv(&coef_panel[off * d..], cc.len(), d, x, cc);
-            });
-            let coeffs: &[f64] = coeffs;
-            threads::par_chunks_mut(&mut out[..], workers, |off, oc| {
-                for (i, &c) in coeffs.iter().enumerate() {
-                    if c != 0.0 {
-                        axpy(c, &acc_panel[i * d + off..i * d + off + oc.len()], oc);
-                    }
-                }
-            });
+            lr_apply_panels(self.panel.v_flat(), self.panel.u_flat(), m, d, x, out, coeffs);
         }
     }
 
@@ -182,7 +210,13 @@ impl<E: Elem> LowRank<E> {
     /// row-major `k × d`); `coeffs` must hold at least `rank() · k` f64
     /// slots. The sweeps themselves shard across threads above
     /// [`PAR_MIN_ELEMS`] (see [`panel_gemv_multi`] / [`panel_gemv_t_multi`]).
-    fn apply_multi_impl(&self, transpose: bool, xs: &[E], out: &mut [E], coeffs: &mut [f64]) {
+    fn apply_multi_impl<X: Elem>(
+        &self,
+        transpose: bool,
+        xs: &[X],
+        out: &mut [X],
+        coeffs: &mut [f64],
+    ) {
         out.copy_from_slice(xs);
         let m = self.panel.len();
         if m == 0 {
@@ -191,19 +225,19 @@ impl<E: Elem> LowRank<E> {
         let d = self.panel.dim();
         let k = xs.len() / d;
         debug_assert_eq!(xs.len(), k * d);
-        let (coef_panel, acc_panel) = if transpose {
-            (self.panel.u_flat(), self.panel.v_flat())
-        } else {
-            (self.panel.v_flat(), self.panel.u_flat())
-        };
         let coeffs = &mut coeffs[..m * k];
-        panel_gemv_multi(coef_panel, m, d, xs, k, coeffs);
-        panel_gemv_t_multi(acc_panel, m, d, coeffs, k, out);
+        if transpose {
+            panel_gemv_multi(self.panel.u_flat(), m, d, xs, k, coeffs);
+            panel_gemv_t_multi(self.panel.v_flat(), m, d, coeffs, k, out);
+        } else {
+            panel_gemv_multi(self.panel.v_flat(), m, d, xs, k, coeffs);
+            panel_gemv_t_multi(self.panel.u_flat(), m, d, coeffs, k, out);
+        }
     }
 
     /// Right-hand-side count of a multi-RHS call (`xs.len() / dim`, robust
     /// to the empty-panel case the kernels early-return on).
-    fn multi_k(&self, xs: &[E]) -> usize {
+    fn multi_k<X: Elem>(&self, xs: &[X]) -> usize {
         let d = self.panel.dim();
         if d == 0 {
             0
@@ -213,22 +247,74 @@ impl<E: Elem> LowRank<E> {
     }
 }
 
-impl<E: Elem> InvOp<E> for LowRank<E> {
+impl<E: Elem> LowRank<E, E> {
+    /// Consume into the transposed operator by swapping the u/v panels —
+    /// O(1), no copies. Use (after a clone when the forward estimate must be
+    /// retained) when the transposed matrix seeds a solver that will push
+    /// further updates, e.g. the refine strategy's warm-started backward
+    /// Broyden. Homogeneous storage only: transposing a mixed layout would
+    /// move the narrow panel onto the coefficient-sweep side, exactly the
+    /// placement the layout exists to avoid (use [`LowRank::convert`] to
+    /// change layouts explicitly).
+    pub fn into_transposed(mut self) -> LowRank<E, E> {
+        self.panel.swap_uv();
+        self
+    }
+}
+
+/// Single-RHS body of [`LowRank`]'s apply: one coefficient sweep over
+/// `coef_panel`, one accumulation sweep over `acc_panel`, thread-parallel
+/// above [`PAR_MIN_ELEMS`]. Generic over both panel storages and the vector
+/// storage so every orientation of every layout shares this text.
+fn lr_apply_panels<P: Elem, Q: Elem, X: Elem>(
+    coef_panel: &[P],
+    acc_panel: &[Q],
+    m: usize,
+    d: usize,
+    x: &[X],
+    out: &mut [X],
+    coeffs: &mut [f64],
+) {
+    if m * d < PAR_MIN_ELEMS {
+        panel_gemv(coef_panel, m, d, x, coeffs);
+        panel_gemv_t(acc_panel, m, d, coeffs, out);
+    } else {
+        let workers = threads::ncpus().min(16);
+        threads::par_chunks_mut(&mut coeffs[..], workers.min(m), |off, cc| {
+            panel_gemv(&coef_panel[off * d..], cc.len(), d, x, cc);
+        });
+        let coeffs: &[f64] = coeffs;
+        threads::par_chunks_mut(&mut out[..], workers, |off, oc| {
+            for (i, &c) in coeffs.iter().enumerate() {
+                if c != 0.0 {
+                    axpy(c, &acc_panel[i * d + off..i * d + off + oc.len()], oc);
+                }
+            }
+        });
+    }
+}
+
+/// Blanket over the vector precision `X`: the kernels widen every operand
+/// to f64 per element, so a panel stored at any `(EU, EV)` mix applies to
+/// vectors of any `Elem` without intermediate buffers. The serving tier's
+/// mixed layout (`LowRank<Bf16, f32>` acting on f32 batches) is one
+/// instantiation of this impl.
+impl<EU: Elem, EV: Elem, X: Elem> InvOp<X> for LowRank<EU, EV> {
     fn dim(&self) -> usize {
         self.panel.dim()
     }
 
-    fn apply(&self, x: &[E], out: &mut [E]) {
+    fn apply(&self, x: &[X], out: &mut [X]) {
         let mut coeffs = vec![0.0f64; self.panel.len()];
         self.apply_impl(false, x, out, &mut coeffs);
     }
 
-    fn apply_t(&self, x: &[E], out: &mut [E]) {
+    fn apply_t(&self, x: &[X], out: &mut [X]) {
         let mut coeffs = vec![0.0f64; self.panel.len()];
         self.apply_impl(true, x, out, &mut coeffs);
     }
 
-    fn apply_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+    fn apply_into(&self, x: &[X], out: &mut [X], ws: &mut Workspace<X>) {
         // Power-of-two-quantized coefficient buffer: its size stays stable
         // while the rank grows, so the workspace stops reallocating after the
         // first few iterations of a solver run.
@@ -237,23 +323,23 @@ impl<E: Elem> InvOp<E> for LowRank<E> {
         ws.give_acc(coeffs);
     }
 
-    fn apply_t_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+    fn apply_t_into(&self, x: &[X], out: &mut [X], ws: &mut Workspace<X>) {
         let mut coeffs = ws.take_acc(self.panel.coeff_len());
         self.apply_impl(true, x, out, &mut coeffs);
         ws.give_acc(coeffs);
     }
 
-    fn apply_multi(&self, xs: &[E], out: &mut [E]) {
+    fn apply_multi(&self, xs: &[X], out: &mut [X]) {
         let mut coeffs = vec![0.0f64; self.panel.len() * self.multi_k(xs)];
         self.apply_multi_impl(false, xs, out, &mut coeffs);
     }
 
-    fn apply_t_multi(&self, xs: &[E], out: &mut [E]) {
+    fn apply_t_multi(&self, xs: &[X], out: &mut [X]) {
         let mut coeffs = vec![0.0f64; self.panel.len() * self.multi_k(xs)];
         self.apply_multi_impl(true, xs, out, &mut coeffs);
     }
 
-    fn apply_multi_into(&self, xs: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+    fn apply_multi_into(&self, xs: &[X], out: &mut [X], ws: &mut Workspace<X>) {
         // coeff_len-quantized block: stable take size while the rank grows,
         // so the serving loop's per-batch takes never reallocate.
         let mut coeffs = ws.take_acc(self.panel.coeff_len() * self.multi_k(xs));
@@ -261,7 +347,7 @@ impl<E: Elem> InvOp<E> for LowRank<E> {
         ws.give_acc(coeffs);
     }
 
-    fn apply_t_multi_into(&self, xs: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+    fn apply_t_multi_into(&self, xs: &[X], out: &mut [X], ws: &mut Workspace<X>) {
         let mut coeffs = ws.take_acc(self.panel.coeff_len() * self.multi_k(xs));
         self.apply_multi_impl(true, xs, out, &mut coeffs);
         ws.give_acc(coeffs);
@@ -270,34 +356,42 @@ impl<E: Elem> InvOp<E> for LowRank<E> {
 
 /// Zero-copy transposed view of a [`LowRank`]: `apply` and `apply_t` swap.
 /// Created by [`LowRank::t`].
-pub struct TransposedView<'a, E: Elem = f64>(&'a LowRank<E>);
+pub struct TransposedView<'a, EU: Elem = f64, EV: Elem = EU>(&'a LowRank<EU, EV>);
 
-impl<E: Elem> InvOp<E> for TransposedView<'_, E> {
-    fn dim(&self) -> usize {
-        InvOp::dim(self.0)
+impl<EU: Elem, EV: Elem> TransposedView<'_, EU, EV> {
+    /// Dimension of the viewed operator. Inherent for the same inference
+    /// reason as [`LowRank::dim`].
+    pub fn dim(&self) -> usize {
+        self.0.dim()
     }
-    fn apply(&self, x: &[E], out: &mut [E]) {
+}
+
+impl<EU: Elem, EV: Elem, X: Elem> InvOp<X> for TransposedView<'_, EU, EV> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+    fn apply(&self, x: &[X], out: &mut [X]) {
         self.0.apply_t(x, out)
     }
-    fn apply_t(&self, x: &[E], out: &mut [E]) {
+    fn apply_t(&self, x: &[X], out: &mut [X]) {
         self.0.apply(x, out)
     }
-    fn apply_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+    fn apply_into(&self, x: &[X], out: &mut [X], ws: &mut Workspace<X>) {
         self.0.apply_t_into(x, out, ws)
     }
-    fn apply_t_into(&self, x: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+    fn apply_t_into(&self, x: &[X], out: &mut [X], ws: &mut Workspace<X>) {
         self.0.apply_into(x, out, ws)
     }
-    fn apply_multi(&self, xs: &[E], out: &mut [E]) {
+    fn apply_multi(&self, xs: &[X], out: &mut [X]) {
         self.0.apply_t_multi(xs, out)
     }
-    fn apply_t_multi(&self, xs: &[E], out: &mut [E]) {
+    fn apply_t_multi(&self, xs: &[X], out: &mut [X]) {
         self.0.apply_multi(xs, out)
     }
-    fn apply_multi_into(&self, xs: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+    fn apply_multi_into(&self, xs: &[X], out: &mut [X], ws: &mut Workspace<X>) {
         self.0.apply_t_multi_into(xs, out, ws)
     }
-    fn apply_t_multi_into(&self, xs: &[E], out: &mut [E], ws: &mut Workspace<E>) {
+    fn apply_t_multi_into(&self, xs: &[X], out: &mut [X], ws: &mut Workspace<X>) {
         self.0.apply_multi_into(xs, out, ws)
     }
 }
@@ -311,7 +405,7 @@ mod tests {
 
     /// Dense materialization for oracle comparison.
     fn dense(lr: &LowRank) -> DMat {
-        let n = InvOp::dim(lr);
+        let n = lr.dim();
         let mut m = DMat::eye(n);
         for (u, v) in lr.rows() {
             for i in 0..n {
@@ -490,7 +584,7 @@ mod tests {
         let view = lr.t();
         assert_eq!(view.apply_vec(&x), want_t);
         assert_eq!(view.apply_t_vec(&x), want);
-        assert_eq!(InvOp::dim(&view), n);
+        assert_eq!(view.dim(), n);
         // Owned O(1) transpose: same operator.
         let owned = lr.clone().into_transposed();
         assert_eq!(owned.apply_vec(&x), want_t);
@@ -587,5 +681,97 @@ mod tests {
                 w
             );
         }
+    }
+
+    #[test]
+    fn mixed_layout_applies_to_f32_and_tracks_reference() {
+        // LowRank<Bf16, f32> — the serving tier's mixed layout — applies
+        // directly to f32 vectors through the blanket InvOp. Reference: the
+        // same (already-narrowed) factors widened to f64, so the comparison
+        // isolates kernel arithmetic from storage rounding and can use a
+        // tight tolerance.
+        use crate::linalg::vecops::Bf16;
+        let mut rng = Rng::new(77);
+        let n = 32;
+        let mut mixed: LowRank<Bf16, f32> = LowRank::identity(n, 6, MemoryPolicy::Evict);
+        let mut wide = LowRank::identity(n, 6, MemoryPolicy::Evict);
+        for _ in 0..8 {
+            let u = rng.normal_vec(n);
+            let v = rng.normal_vec(n);
+            let u16v: Vec<Bf16> = u.iter().map(|&a| Bf16::from_f64(a)).collect();
+            let v32v: Vec<f32> = v.iter().map(|&a| a as f32).collect();
+            wide.push(
+                &u16v.iter().map(|b| b.to_f64()).collect::<Vec<f64>>(),
+                &v32v.iter().map(|&b| b as f64).collect::<Vec<f64>>(),
+            );
+            mixed.push(&u16v, &v32v);
+        }
+        let x = rng.normal_vec(n);
+        let x32: Vec<f32> = x.iter().map(|&a| a as f32).collect();
+        let xw: Vec<f64> = x32.iter().map(|&a| a as f64).collect();
+        for transpose in [false, true] {
+            let want = if transpose {
+                wide.apply_t_vec(&xw)
+            } else {
+                wide.apply_vec(&xw)
+            };
+            let got = if transpose {
+                mixed.apply_t_vec(&x32)
+            } else {
+                mixed.apply_vec(&x32)
+            };
+            for i in 0..n {
+                let w = want[i];
+                assert!(
+                    (got[i] as f64 - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                    "transpose={transpose} idx {i}: {} vs {}",
+                    got[i],
+                    w
+                );
+            }
+        }
+        // The zero-copy transposed view works at the mixed layout too.
+        let view = mixed.t();
+        assert_eq!(view.dim(), n);
+        assert_eq!(view.apply_vec(&x32), mixed.apply_t_vec(&x32));
+    }
+
+    #[test]
+    fn convert_round_trips_and_pack_f32_matches() {
+        use crate::linalg::vecops::Bf16;
+        let mut rng = Rng::new(101);
+        let n = 12;
+        let mut lr32: LowRank<f32> = LowRank::identity(n, 4, MemoryPolicy::Evict);
+        for _ in 0..5 {
+            let u: Vec<f32> = rng.normal_vec(n).iter().map(|&a| a as f32).collect();
+            let v: Vec<f32> = rng.normal_vec(n).iter().map(|&a| a as f32).collect();
+            lr32.push(&u, &v);
+        }
+        // Demote to the mixed layout, then widen back: the f32 V panel must
+        // round-trip exactly, the bf16 U panel re-narrows to identical bits.
+        let mixed: LowRank<Bf16, f32> = lr32.convert();
+        assert_eq!(mixed.rank(), lr32.rank());
+        assert_eq!(mixed.max_mem(), lr32.max_mem());
+        assert_eq!(mixed.policy(), lr32.policy());
+        for ((u32r, v32r), (umx, vmx)) in lr32.rows().zip(mixed.rows()) {
+            for (a, b) in u32r.iter().zip(umx.iter()) {
+                assert_eq!(Bf16::from_f64(*a as f64).to_bits(), b.to_bits());
+            }
+            assert_eq!(v32r, vmx);
+        }
+        let again: LowRank<Bf16, f32> = mixed.convert::<f32, f32>().convert();
+        for ((a_u, a_v), (b_u, b_v)) in mixed.rows().zip(again.rows()) {
+            assert!(a_u.iter().zip(b_u).all(|(x, y)| x.to_bits() == y.to_bits()));
+            assert_eq!(a_v, b_v);
+        }
+        // pack_f32 on the mixed layout = widened-u, unchanged-v flat panels.
+        let (pu, pv) = mixed.pack_f32();
+        let (nu, nv) = mixed.pack();
+        assert_eq!(pu.len(), mixed.rank() * n);
+        assert!(pu
+            .iter()
+            .zip(nu.iter())
+            .all(|(a, b)| *a as f64 == b.to_f64()));
+        assert_eq!(pv, nv);
     }
 }

@@ -17,18 +17,31 @@
 //! # Storage and execution architecture
 //!
 //! The whole family stack is **precision-generic** over the storage scalar
-//! [`crate::linalg::vecops::Elem`] (`f32` or `f64`), with defaults of `f64`
-//! everywhere so the bi-level/HOAG experiments read exactly as before. The
-//! precision contract is *store narrow, accumulate wide*: panels, iterates
-//! and cotangents live in `E`, while every reduction (dot products, norms,
-//! Sherman–Morrison denominators, `ρ = 1/yᵀs`, two-loop α/β) is carried in
-//! `f64` — see [`crate::linalg::vecops`]. The DEQ path instantiates the
-//! stack at `E = f32` end-to-end (the fixed point is f32 at the artifact
-//! boundary anyway), halving the panel memory traffic that dominates the
-//! backward cost at MDEQ scale; the bi-level path stays at `E = f64`. Both
+//! [`crate::linalg::vecops::Elem`] (`f64`, `f32`, and the half-width
+//! [`crate::linalg::vecops::Bf16`]/[`crate::linalg::vecops::F16`]), with
+//! defaults of `f64` everywhere so the bi-level/HOAG experiments read
+//! exactly as before. The precision contract is *store narrow, accumulate
+//! wide*: panels, iterates and cotangents live in `E`, while every
+//! reduction (dot products, norms, Sherman–Morrison denominators,
+//! `ρ = 1/yᵀs`, two-loop α/β) is carried in `f64` — see
+//! [`crate::linalg::vecops`]. The DEQ path instantiates the stack at
+//! `E = f32` end-to-end (the fixed point is f32 at the artifact boundary
+//! anyway), halving the panel memory traffic that dominates the backward
+//! cost at MDEQ scale; the bi-level path stays at `E = f64`. All
 //! instantiations coexist — `LowRank<f32>` and `LowRank<f64>` are
 //! independent monomorphizations of the same kernels, proven equivalent to
-//! f32 tolerance by `rust/tests/precision_parity.rs`.
+//! f32 tolerance by `rust/tests/precision_parity.rs`, with the half-width
+//! instantiations covered at looser (documented) tolerances.
+//!
+//! [`LowRank`] additionally takes a **second storage parameter**
+//! (`LowRank<EU, EV>`, `EV` defaulting to `EU`) so the serving tier can run
+//! the *mixed layout* — bf16 U factors with f32 V factors — and its
+//! [`InvOp`] impl is blanket over the vector precision, so reduced-precision
+//! panels apply directly to f32 batches. Solvers that *build* estimates
+//! (the three qN families) stay homogeneous in `E`; reduced precision is a
+//! storage demotion applied after calibration (`LowRank::convert`), guarded
+//! at serve time by the §3 fallback check (see
+//! `docs/adr/003-reduced-precision-panels.md`).
 //!
 //! All three families store their rank-one factors in a
 //! [`panel::FactorPanel<E>`]: two flat row-major `m × d` panels behind a

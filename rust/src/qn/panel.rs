@@ -2,9 +2,17 @@
 //!
 //! [`FactorPanel`] keeps the rank-one factors of `H = I + Σᵢ uᵢ vᵢᵀ` in two
 //! flat row-major panels (`m × d` each) backed by a ring buffer, generic
-//! over the storage precision [`Elem`] (f32 panels for the DEQ path, f64
-//! for the bi-level experiments — same code, see the precision contract in
-//! [`crate::linalg::vecops`]):
+//! over **two independent storage precisions** — one per panel side
+//! (`FactorPanel<EU, EV>`, with `EV` defaulting to `EU` so the historical
+//! single-precision spelling `FactorPanel<E>` is unchanged). f32 panels
+//! serve the DEQ path, f64 the bi-level experiments, and the half-width
+//! [`crate::linalg::vecops::Bf16`]/[`crate::linalg::vecops::F16`] storages
+//! the reduced-precision serving tier; the **mixed layout**
+//! `FactorPanel<Bf16, f32>` keeps the U factors (the error-cheap
+//! accumulation side of `Hᵀ x = x + V (Uᵀ x)`… the side only ever summed
+//! into under an f64 accumulator) in bf16 while the V factors — the
+//! coefficient-sweep side whose dot products set every coefficient — stay
+//! f32. See the precision contract in [`crate::linalg::vecops`]:
 //!
 //! * **apply is one linear sweep** — the kernels in
 //!   [`crate::linalg::vecops`] (`panel_gemv` / `panel_gemv_t`) stream the
@@ -30,27 +38,30 @@
 use crate::linalg::vecops::Elem;
 
 /// Flat row-major storage of up to `cap` factor pairs `(uᵢ, vᵢ)` of
-/// dimension `dim`, in storage precision `E`. Backing storage grows
-/// geometrically up to `cap` as rows are pushed (callers routinely pass
-/// generous caps like `max_iters + 64`, which would be gigabytes if
-/// allocated eagerly at DEQ-scale `dim`); once the high-water mark is
-/// reached, pushes never allocate again.
+/// dimension `dim`, with the u-panel in storage precision `EU` and the
+/// v-panel in `EV` (defaulting to `EU` — `FactorPanel<f32>` is the
+/// homogeneous f32 panel it always was; `FactorPanel<Bf16, f32>` is the
+/// mixed serving layout). Backing storage grows geometrically up to `cap`
+/// as rows are pushed (callers routinely pass generous caps like
+/// `max_iters + 64`, which would be gigabytes if allocated eagerly at
+/// DEQ-scale `dim`); once the high-water mark is reached, pushes never
+/// allocate again.
 #[derive(Clone, Debug)]
-pub struct FactorPanel<E: Elem = f64> {
+pub struct FactorPanel<EU: Elem = f64, EV: Elem = EU> {
     dim: usize,
     cap: usize,
     len: usize,
     /// Ring start: logical row 0 lives at physical row `head`.
     head: usize,
     /// Row-major panel of u-factors (allocated rows × dim).
-    u: Vec<E>,
+    u: Vec<EU>,
     /// Row-major panel of v-factors (allocated rows × dim).
-    v: Vec<E>,
+    v: Vec<EV>,
 }
 
-impl<E: Elem> FactorPanel<E> {
+impl<EU: Elem, EV: Elem> FactorPanel<EU, EV> {
     /// Create a panel for up to `cap` factors of dimension `dim`.
-    pub fn new(dim: usize, cap: usize) -> FactorPanel<E> {
+    pub fn new(dim: usize, cap: usize) -> FactorPanel<EU, EV> {
         FactorPanel {
             dim,
             cap,
@@ -107,26 +118,26 @@ impl<E: Elem> FactorPanel<E> {
 
     /// Logical row `i` (0 = oldest, `len-1` = newest) as `(uᵢ, vᵢ)` slices.
     #[inline]
-    pub fn row(&self, i: usize) -> (&[E], &[E]) {
+    pub fn row(&self, i: usize) -> (&[EU], &[EV]) {
         let p = self.phys(i) * self.dim;
         (&self.u[p..p + self.dim], &self.v[p..p + self.dim])
     }
 
     /// Iterate rows in logical (oldest → newest) order.
-    pub fn rows(&self) -> impl Iterator<Item = (&[E], &[E])> + '_ {
+    pub fn rows(&self) -> impl Iterator<Item = (&[EU], &[EV])> + '_ {
         (0..self.len).map(move |i| self.row(i))
     }
 
     /// The live portion of the u-panel as one contiguous `len × dim` block
     /// (physical order — valid for order-independent sweeps only).
     #[inline]
-    pub fn u_flat(&self) -> &[E] {
+    pub fn u_flat(&self) -> &[EU] {
         &self.u[..self.len * self.dim]
     }
 
     /// The live portion of the v-panel as one contiguous `len × dim` block.
     #[inline]
-    pub fn v_flat(&self) -> &[E] {
+    pub fn v_flat(&self) -> &[EV] {
         &self.v[..self.len * self.dim]
     }
 
@@ -136,7 +147,7 @@ impl<E: Elem> FactorPanel<E> {
     /// high-water mark is still rising (geometric growth, bounded by `cap`);
     /// at steady state — ring full, or rank no longer growing — this never
     /// touches the allocator.
-    pub fn advance(&mut self) -> (usize, &mut [E], &mut [E]) {
+    pub fn advance(&mut self) -> (usize, &mut [EU], &mut [EV]) {
         assert!(self.cap > 0, "FactorPanel::advance on zero-capacity panel");
         let phys = if self.len < self.cap {
             // Ring is not full: head is still 0, rows are 0..len.
@@ -158,8 +169,8 @@ impl<E: Elem> FactorPanel<E> {
         if self.u.len() < need {
             let have_rows = if self.dim == 0 { 0 } else { self.u.len() / self.dim };
             let new_rows = (have_rows * 2).max(4).max(phys + 1).min(self.cap);
-            self.u.resize(new_rows * self.dim, E::ZERO);
-            self.v.resize(new_rows * self.dim, E::ZERO);
+            self.u.resize(new_rows * self.dim, EU::ZERO);
+            self.v.resize(new_rows * self.dim, EV::ZERO);
         }
         let o = phys * self.dim;
         (
@@ -170,7 +181,7 @@ impl<E: Elem> FactorPanel<E> {
     }
 
     /// Copy-push a factor pair (convenience over [`FactorPanel::advance`]).
-    pub fn push(&mut self, u: &[E], v: &[E]) {
+    pub fn push(&mut self, u: &[EU], v: &[EV]) {
         debug_assert_eq!(u.len(), self.dim);
         debug_assert_eq!(v.len(), self.dim);
         let (_, us, vs) = self.advance();
@@ -196,7 +207,7 @@ impl<E: Elem> FactorPanel<E> {
     /// Rebuild into a panel of capacity `cap`, keeping the newest
     /// `min(len, cap)` factors in logical order. O(m·d) — used only when a
     /// strategy resizes its memory budget, never inside a solver loop.
-    pub fn with_cap(&self, cap: usize) -> FactorPanel<E> {
+    pub fn with_cap(&self, cap: usize) -> FactorPanel<EU, EV> {
         let mut out = FactorPanel::new(self.dim, cap);
         let keep = self.len.min(cap);
         for i in (self.len - keep)..self.len {
@@ -206,8 +217,34 @@ impl<E: Elem> FactorPanel<E> {
         out
     }
 
+    /// Re-store every live factor in the target precisions, preserving
+    /// logical (oldest → newest) order and capacity. Each element widens to
+    /// f64 and narrows once (round-to-nearest-even for the half-width
+    /// storages) — this is the one sanctioned place a panel changes
+    /// precision, used when the serving tier demotes a freshly calibrated
+    /// estimate into its reduced-precision layout. O(m·d); never on a hot
+    /// path.
+    pub fn convert<FU: Elem, FV: Elem>(&self) -> FactorPanel<FU, FV> {
+        let mut out: FactorPanel<FU, FV> = FactorPanel::new(self.dim, self.cap);
+        for (u, v) in self.rows() {
+            let (_, us, vs) = out.advance();
+            for (dst, src) in us.iter_mut().zip(u) {
+                *dst = FU::from_f64(src.to_f64());
+            }
+            for (dst, src) in vs.iter_mut().zip(v) {
+                *dst = FV::from_f64(src.to_f64());
+            }
+        }
+        out
+    }
+}
+
+impl<E: Elem> FactorPanel<E, E> {
     /// Swap the u/v panels in place — the zero-copy transpose
-    /// `(I + Σ u vᵀ)ᵀ = I + Σ v uᵀ`.
+    /// `(I + Σ u vᵀ)ᵀ = I + Σ v uᵀ`. Only defined for homogeneous panels:
+    /// a mixed layout is orientation-specific by construction (the narrow
+    /// side must stay the accumulation side), so transposing it requires an
+    /// explicit [`FactorPanel::convert`].
     pub fn swap_uv(&mut self) {
         std::mem::swap(&mut self.u, &mut self.v);
     }
@@ -336,6 +373,39 @@ mod tests {
         }
         assert_eq!(p.row(0).0, &[1.0, 2.0, 3.0]);
         assert_eq!(p.row(0).1, &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn mixed_panel_and_convert() {
+        use crate::linalg::vecops::Bf16;
+        // Mixed layout: bf16 u-side, f32 v-side. Dyadic values are exact in
+        // both storages, so conversion round-trips bit-for-bit.
+        let mut p: FactorPanel<Bf16, f32> = FactorPanel::new(2, 3);
+        for k in 0..4 {
+            // 4 pushes into cap 3: the oldest row evicts.
+            let u: Vec<Bf16> = [k as f64, 0.5].iter().map(|&x| Bf16::from_f64(x)).collect();
+            p.push(&u, &[k as f32, -0.25]);
+        }
+        assert_eq!(p.len(), 3);
+        let (u0, v0) = p.row(0);
+        assert_eq!(u0[0].to_f64(), 1.0);
+        assert_eq!(v0[0], 1.0f32);
+        // convert preserves logical order and capacity across precisions.
+        let q: FactorPanel<f64, f64> = p.convert();
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.cap(), 3);
+        for (i, (u, v)) in q.rows().enumerate() {
+            assert_eq!(u[0], (i + 1) as f64);
+            assert_eq!(u[1], 0.5);
+            assert_eq!(v[0], (i + 1) as f64);
+            assert_eq!(v[1], -0.25);
+        }
+        // Narrowing back reproduces the original bits for dyadic values.
+        let back: FactorPanel<Bf16, f32> = q.convert();
+        for ((bu, bv), (pu, pv)) in back.rows().zip(p.rows()) {
+            assert!(bu.iter().zip(pu).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert_eq!(bv, pv);
+        }
     }
 
     #[test]

@@ -59,9 +59,20 @@ impl VariantCfg {
     }
 }
 
+/// The element type every host buffer crossing the PJRT boundary must
+/// have. The AOT artifacts are compiled for f32 tensors; reduced-precision
+/// panel storage (`Bf16`/`F16` in [`crate::linalg::vecops`]) is a
+/// *host-side* layout and must be widened before it reaches an artifact —
+/// `LowRank::pack_f32` is the sanctioned conversion point.
+pub const ARTIFACT_DTYPE: &str = "f32";
+
 #[derive(Clone, Debug)]
 pub struct ArtifactRec {
     pub file: String,
+    /// Element type of every input/output tensor. Optional in the JSON
+    /// (defaults to `"f32"`, the only dtype the run path ships); any other
+    /// value is rejected at load time rather than silently reinterpreted.
+    pub dtype: String,
     pub inputs: Vec<Vec<usize>>,
     pub outputs: Vec<Vec<usize>>,
 }
@@ -154,6 +165,23 @@ impl Manifest {
             .and_then(|v| v.as_obj())
             .ok_or_else(|| anyhow!("manifest missing artifacts"))?
         {
+            let dtype = a
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .unwrap_or(ARTIFACT_DTYPE)
+                .to_string();
+            // Reject rather than reinterpret: the Rust host buffers handed
+            // to PJRT are f32 slices, so a manifest declaring any other
+            // dtype would silently read garbage. Reduced-precision panels
+            // must be widened first (`LowRank::pack_f32`).
+            if dtype != ARTIFACT_DTYPE {
+                return Err(anyhow!(
+                    "artifact {name} declares dtype '{dtype}' but the run path only \
+                     ships {ARTIFACT_DTYPE} host buffers; re-export the artifact at \
+                     {ARTIFACT_DTYPE} (reduced-precision panel storage is host-side \
+                     only — widen via LowRank::pack_f32 before the PJRT boundary)"
+                ));
+            }
             artifacts.insert(
                 name.clone(),
                 ArtifactRec {
@@ -162,6 +190,7 @@ impl Manifest {
                         .and_then(|f| f.as_str())
                         .ok_or_else(|| anyhow!("artifact {name} missing file"))?
                         .to_string(),
+                    dtype,
                     inputs: shapes_from(a.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
                     outputs: shapes_from(a.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
                 },
@@ -228,7 +257,36 @@ mod tests {
         let a = m.artifact("tiny_f_fwd").unwrap();
         assert_eq!(a.inputs.len(), 2);
         assert_eq!(a.outputs[0], vec![4, 16, 8]);
+        assert_eq!(a.dtype, ARTIFACT_DTYPE, "absent dtype defaults to f32");
         assert!(m.variant("nope").is_err());
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn non_f32_artifact_dtype_is_rejected() {
+        // A manifest declaring bf16 tensors must fail loudly at load time:
+        // the host side hands PJRT f32 slices, so accepting it would
+        // reinterpret bits. (Reduced-precision panels widen through
+        // LowRank::pack_f32 instead.)
+        let doc = DOC.replace(
+            "\"file\": \"tiny_f_fwd.hlo.txt\",",
+            "\"file\": \"tiny_f_fwd.hlo.txt\",\n          \"dtype\": \"bf16\",",
+        );
+        let dir = std::env::temp_dir().join("shine_manifest_dtype_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+        let err = Manifest::load(dir.to_str().unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bf16"), "error names the offending dtype: {msg}");
+        assert!(msg.contains("pack_f32"), "error points at the conversion: {msg}");
+
+        // An explicit f32 declaration loads fine.
+        let doc32 = DOC.replace(
+            "\"file\": \"tiny_f_fwd.hlo.txt\",",
+            "\"file\": \"tiny_f_fwd.hlo.txt\",\n          \"dtype\": \"f32\",",
+        );
+        std::fs::write(dir.join("manifest.json"), doc32).unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.artifact("tiny_f_fwd").unwrap().dtype, "f32");
     }
 }

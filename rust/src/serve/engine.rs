@@ -20,7 +20,7 @@
 //! and re-calibrates it.
 
 use crate::linalg::vecops::{nrm2, Elem};
-use crate::qn::InvOp;
+use crate::qn::{InvOp, LowRank};
 use crate::solvers::fixed_point::{swap_cols, ColStats};
 use crate::solvers::session::{EstimateHandle, FixedPointSolver, Session, SolverSpec};
 use crate::util::timer::Stopwatch;
@@ -174,12 +174,22 @@ pub struct BatchReport {
 /// answering every SHINE cotangent. Holds the built forward solver (whose
 /// per-column state persists across batches), the solve session and the
 /// shared calibration estimate — nothing is allocated per batch once warm.
-pub struct ServeEngine<E: Elem> {
+///
+/// The engine carries three storage parameters: `E` is the state/cotangent
+/// precision every solve runs in, and `EU`/`EV` (defaulting to `E`) are the
+/// **panel storage** precisions of the cached estimate. Calibration always
+/// runs at `E`; the captured estimate is then *demoted* into the
+/// `LowRank<EU, EV>` layout (e.g. `ServeEngine<f32, Bf16, f32>` — the mixed
+/// layout, half the U-panel traffic on the backward sweep), and the §3
+/// fallback guard plus [`RecalibPolicy`] bound the damage a too-coarse
+/// panel can do. Training and the bi-level experiments never see these
+/// parameters — reduced precision is a serve-tier storage decision.
+pub struct ServeEngine<E: Elem, EU: Elem = E, EV: Elem = EU> {
     d: usize,
     cfg: EngineConfig,
-    /// Shared SHINE estimate from the calibration probe; `None` serves the
-    /// Jacobian-free direction (w = dz).
-    h: Option<EstimateHandle<E>>,
+    /// Shared SHINE estimate demoted from the calibration probe's capture;
+    /// `None` serves the Jacobian-free direction (w = dz).
+    h: Option<LowRank<EU, EV>>,
     sess: Session<E>,
     solver: Box<dyn FixedPointSolver<E>>,
     /// Guarded columns / guard trips since the last calibration (the
@@ -190,8 +200,8 @@ pub struct ServeEngine<E: Elem> {
     calibrations: usize,
 }
 
-impl<E: Elem> ServeEngine<E> {
-    pub fn new(d: usize, cfg: EngineConfig) -> ServeEngine<E> {
+impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
+    pub fn new(d: usize, cfg: EngineConfig) -> ServeEngine<E, EU, EV> {
         assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
         // Fail at construction, not mid-service: only a quasi-Newton probe
         // captures the inverse estimate `calibrate` stores.
@@ -222,8 +232,9 @@ impl<E: Elem> ServeEngine<E> {
         &self.cfg
     }
 
-    /// The shared inverse estimate (None until [`ServeEngine::calibrate`]).
-    pub fn estimate(&self) -> Option<&EstimateHandle<E>> {
+    /// The shared inverse estimate in its serving storage layout (None
+    /// until [`ServeEngine::calibrate`]).
+    pub fn estimate(&self) -> Option<&LowRank<EU, EV>> {
         self.h.as_ref()
     }
 
@@ -260,10 +271,12 @@ impl<E: Elem> ServeEngine<E> {
     }
 
     /// Install an externally captured estimate (the router's per-key cache
-    /// hand-off; tests use it to inject adversarial estimates). Resets the
-    /// staleness counters — a fresh estimate starts with a clean record.
+    /// hand-off; tests use it to inject adversarial estimates), demoting it
+    /// into the engine's panel storage layout. Resets the staleness
+    /// counters — a fresh estimate starts with a clean record. At the
+    /// homogeneous default (`EU = EV = E`) the demotion is a bit-exact copy.
     pub fn install_estimate(&mut self, h: EstimateHandle<E>) {
-        self.h = Some(h);
+        self.h = Some(h.low_rank().convert());
         self.guard_cols = 0;
         self.guard_trips = 0;
     }
@@ -281,9 +294,14 @@ impl<E: Elem> ServeEngine<E> {
         let mut g1 = g1;
         let out = probe.solve(&mut self.sess, &mut g1, z0);
         let stats = (out.iters, out.residual);
+        // Demote the freshly captured estimate into the serving layout —
+        // the one narrow-once conversion point of the reduced-precision
+        // path (bit-exact at the homogeneous default).
         self.h = Some(
             out.estimate
-                .expect("calibration probe must capture an inverse estimate"),
+                .expect("calibration probe must capture an inverse estimate")
+                .low_rank()
+                .convert(),
         );
         self.guard_cols = 0;
         self.guard_trips = 0;
@@ -724,8 +742,75 @@ mod tests {
         // The one-sweep multi answer must equal per-column H^T applies.
         let h = eng.estimate().unwrap();
         for j in 0..b {
-            let want = h.low_rank().apply_t_vec(&cots[j * d..(j + 1) * d]);
+            let want = h.apply_t_vec(&cots[j * d..(j + 1) * d]);
             assert_eq!(&w[j * d..(j + 1) * d], &want[..], "col {j}");
+        }
+    }
+
+    #[test]
+    fn mixed_precision_engine_tracks_f32_backward() {
+        // ServeEngine<f32, Bf16, f32>: calibration runs at f32, the capture
+        // is demoted into the mixed panel layout, and the backward sweep
+        // stays within bf16 storage tolerance of the homogeneous f32 engine
+        // on the same request stream — with the §3 guard armed and silent.
+        use crate::linalg::vecops::Bf16;
+        let d = 24;
+        let b = 3;
+        let mut rng = Rng::new(12);
+        let bias: Vec<f32> = rng.normal_vec(d).iter().map(|&x| x as f32 * 0.1).collect();
+        let g32 = |block: &[f32], out: &mut [f32]| {
+            let k = block.len() / d;
+            for p in 0..k {
+                for i in 0..d {
+                    let zn = block[p * d + (i + 1) % d];
+                    out[p * d + i] = block[p * d + i] - 0.3 * zn - bias[i];
+                }
+            }
+        };
+        let mut cfg = EngineConfig {
+            max_batch: b,
+            fallback_ratio: Some(4.0),
+            ..Default::default()
+        }
+        .with_tol(1e-5);
+        cfg.calib = SolverSpec::broyden(10).with_tol(1e-5).with_max_iters(60);
+        let mut full: ServeEngine<f32> = ServeEngine::new(d, cfg);
+        let mut mixed: ServeEngine<f32, Bf16, f32> = ServeEngine::new(d, cfg);
+        let z0 = vec![0.0f32; d];
+        full.calibrate(|z: &[f32], out: &mut [f32]| g32(z, out), &z0);
+        mixed.calibrate(|z: &[f32], out: &mut [f32]| g32(z, out), &z0);
+        let cots: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        let mut stats = vec![ColStats::default(); b];
+        let mut zs = vec![0.0f32; b * d];
+        let mut w_full = vec![0.0f32; b * d];
+        let rep_full = full.process(
+            |block, _ids, out| g32(block, out),
+            &mut zs,
+            &cots,
+            &mut w_full,
+            &mut stats,
+        );
+        zs.iter_mut().for_each(|z| *z = 0.0);
+        let mut w_mixed = vec![0.0f32; b * d];
+        let rep_mixed = mixed.process(
+            |block, _ids, out| g32(block, out),
+            &mut zs,
+            &cots,
+            &mut w_mixed,
+            &mut stats,
+        );
+        assert!(rep_full.all_converged && rep_mixed.all_converged);
+        assert_eq!(rep_mixed.fallback_cols, 0, "guard must stay silent on a healthy estimate");
+        // bf16 keeps ~8 mantissa bits: per-element agreement at ~1% of the
+        // vector scale is the expected storage-rounding envelope here.
+        for i in 0..b * d {
+            let wf = w_full[i] as f64;
+            assert!(
+                (w_mixed[i] as f64 - wf).abs() <= 2e-2 * (1.0 + wf.abs()),
+                "idx {i}: mixed {} vs f32 {}",
+                w_mixed[i],
+                wf
+            );
         }
     }
 

@@ -80,8 +80,8 @@ pub struct ThroughputReport {
 /// scheduler + engine. Requests start from z₀ = 0 with a fixed random
 /// cotangent per client; all heavy blocks are preallocated, so the loop
 /// measures the serving path, not the harness.
-pub fn run_closed_loop<E: Elem>(
-    engine: &mut ServeEngine<E>,
+pub fn run_closed_loop<E: Elem, EU: Elem, EV: Elem>(
+    engine: &mut ServeEngine<E, EU, EV>,
     model: &SynthDeq<E>,
     lc: &LoadConfig,
     seed: u64,
@@ -188,7 +188,11 @@ pub struct SuiteRow {
 /// run so pools/caches don't bill the measured pass. `solver` is the
 /// forward [`SolverSpec`] (its tolerance also drives the calibration
 /// probe) — the CLI `--solver` flag lands here.
-pub fn run_suite<E: Elem>(
+///
+/// The `EU`/`EV` parameters select the panel-storage precision of every
+/// engine in the suite (state stays `E`): `run_suite::<f32, Bf16, f32>`
+/// measures the mixed reduced-precision layout under the identical load.
+pub fn run_suite<E: Elem, EU: Elem, EV: Elem>(
     d: usize,
     block: usize,
     batch_sizes: &[usize],
@@ -200,7 +204,7 @@ pub fn run_suite<E: Elem>(
     let mut rows: Vec<SuiteRow> = Vec::with_capacity(batch_sizes.len());
     let mut base_rps = 0.0;
     for &bsz in batch_sizes {
-        let mut engine: ServeEngine<E> = ServeEngine::new(
+        let mut engine: ServeEngine<E, EU, EV> = ServeEngine::new(
             d,
             EngineConfig {
                 max_batch: bsz,
@@ -339,8 +343,8 @@ struct OpenState<E> {
 /// cotangents) is precomputed from `seed`, so a continuous and a discrete
 /// run with the same config-but-`continuous` and seed measure the same
 /// offered load. Requests start from z₀ = 0.
-pub fn run_open_loop<E: Elem>(
-    engine: &mut ServeEngine<E>,
+pub fn run_open_loop<E: Elem, EU: Elem, EV: Elem>(
+    engine: &mut ServeEngine<E, EU, EV>,
     model: &SynthDeq<E>,
     lc: &OpenLoopConfig,
     seed: u64,
@@ -367,8 +371,8 @@ pub fn run_open_loop<E: Elem>(
     }
 }
 
-fn run_open_continuous<E: Elem>(
-    engine: &mut ServeEngine<E>,
+fn run_open_continuous<E: Elem, EU: Elem, EV: Elem>(
+    engine: &mut ServeEngine<E, EU, EV>,
     model: &SynthDeq<E>,
     lc: &OpenLoopConfig,
     arrivals: &[f64],
@@ -464,8 +468,8 @@ fn run_open_continuous<E: Elem>(
     }
 }
 
-fn run_open_discrete<E: Elem>(
-    engine: &mut ServeEngine<E>,
+fn run_open_discrete<E: Elem, EU: Elem, EV: Elem>(
+    engine: &mut ServeEngine<E, EU, EV>,
     model: &SynthDeq<E>,
     lc: &OpenLoopConfig,
     arrivals: &[f64],
@@ -594,9 +598,10 @@ pub struct RoutedReport {
 /// cross-model) and served by that key's engine; the router's trip-rate
 /// policy may evict and re-calibrate estimates mid-run. All registered
 /// models must share one fixed-point dimension (one set of preallocated
-/// blocks serves every key).
-pub fn run_routed_closed_loop<E: Elem>(
-    router: &mut Router<E>,
+/// blocks serves every key). A `Router<E, EU, EV>` with reduced-precision
+/// panel storage drives the identical load through demoted estimates.
+pub fn run_routed_closed_loop<E: Elem, EU: Elem, EV: Elem>(
+    router: &mut Router<E, EU, EV>,
     keys: &[ModelKey],
     lc: &RoutedLoadConfig,
     seed: u64,
@@ -775,8 +780,10 @@ pub struct ShardedReport {
 /// models must share one fixed-point dimension. The submission thread
 /// paces itself to the arrival instants; responses are collected after the
 /// full schedule is offered, so the router's own drain loops set the pace
-/// (open-loop discipline).
-pub fn run_sharded_open_loop<E: Elem>(
+/// (open-loop discipline). `EU`/`EV` select the panel-storage precision of
+/// every worker-local engine (see [`ShardedRouter`]); requests, responses
+/// and models stay in `E`.
+pub fn run_sharded_open_loop<E: Elem, EU: Elem, EV: Elem>(
     engine: EngineConfig,
     mk_model: &dyn Fn(u32, u32) -> SharedModel<E>,
     lc: &ShardedLoadConfig,
@@ -792,7 +799,8 @@ pub fn run_sharded_open_loop<E: Elem>(
         // One shard could own (or steal) the whole schedule: never reject.
         queue_cap: lc.total.max(lc.max_batch),
     };
-    let router: ShardedRouter<E> = ShardedRouter::new(ShardConfig::new(lc.shards, engine, sched));
+    let router: ShardedRouter<E, EU, EV> =
+        ShardedRouter::new(ShardConfig::new(lc.shards, engine, sched));
     let d = mk_model(0, 0).dim();
     for m in 0..lc.models as u32 {
         let model = mk_model(m, 0);
@@ -929,7 +937,7 @@ mod tests {
     #[test]
     fn suite_reports_baseline_relative_speedups() {
         let solver = SolverSpec::picard(1.0).with_tol(1e-4).with_max_iters(200);
-        let rows = run_suite::<f32>(64, 16, &[1, 2], 8, solver, 5);
+        let rows = run_suite::<f32, f32, f32>(64, 16, &[1, 2], 8, solver, 5);
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].b, 1);
         assert!((rows[0].speedup_vs_baseline - 1.0).abs() < 1e-12);
@@ -1016,7 +1024,7 @@ mod tests {
             hot_share: Some(0.75),
             swap_at: Some(12),
         };
-        let rep = run_sharded_open_loop(engine, &mk, &lc, 3);
+        let rep = run_sharded_open_loop::<f64, f64, f64>(engine, &mk, &lc, 3);
         assert_eq!(rep.requests, 24);
         assert!(rep.all_converged);
         assert!(rep.rps > 0.0);

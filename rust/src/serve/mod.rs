@@ -47,7 +47,25 @@
 //!   of exactly the old key. Per-request results are bit-identical to the
 //!   single-shard router (pinned in `rust/tests/serve_shard.rs`); the
 //!   [`loadgen::run_sharded_open_loop`] driver produces the shard-scaling
-//!   and live-swap cells of `BENCH_serve.json`.
+//!   and live-swap cells of `BENCH_serve.json`. A stolen key enters a
+//!   served-batch *cooldown* ([`shard::STEAL_COOLDOWN_BATCHES`]) before it
+//!   can be stolen again, so ownership cannot ping-pong under alternating
+//!   load.
+//! * **Reduced-precision panel storage** — [`ServeEngine`], [`Router`] and
+//!   [`ShardedRouter`] carry two optional storage parameters
+//!   (`<E, EU = E, EV = EU>`) selecting the precision of the cached
+//!   estimate's U and V factor panels. Calibration always runs at the state
+//!   precision `E`; the resulting `LowRank<E>` is *demoted* into
+//!   `LowRank<EU, EV>` storage (`LowRank::convert`) before caching, and the
+//!   blanket `InvOp` impl applies it to `E` batches with f64 accumulation.
+//!   The accuracy-critical **mixed layout** (`<f32, Bf16, f32>`) stores U
+//!   in bf16 — where the backward sweep's memory traffic lives — and keeps
+//!   the coefficient-sweep V side in f32; the §3 fallback guard plus
+//!   [`RecalibPolicy`] bound the damage if demoted estimates ever degrade
+//!   (see `docs/adr/003-reduced-precision-panels.md`). Training and
+//!   calibration precision are untouched — reduced precision is a pure
+//!   serving-storage decision, selected per instantiation (and per
+//!   [`ModelKey`] by running distinct router instantiations).
 //!
 //! # Invariants and contracts
 //!
@@ -133,5 +151,6 @@ pub use router::{BatchResidual, KeyedScheduler, ModelKey, Router};
 pub use scheduler::{AdaptiveWidth, AdaptiveWidthConfig, Scheduler, SchedulerConfig};
 pub use shard::{
     ShardConfig, ShardRequest, ShardResponse, ShardStats, ShardedRouter, SharedModel, SubmitError,
+    STEAL_COOLDOWN_BATCHES,
 };
 pub use synth::SynthDeq;

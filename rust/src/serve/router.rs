@@ -349,9 +349,9 @@ impl<T> KeyedScheduler<T> {
     }
 }
 
-struct RouteEntry<E: Elem> {
+struct RouteEntry<E: Elem, EU: Elem, EV: Elem> {
     key: ModelKey,
-    engine: ServeEngine<E>,
+    engine: ServeEngine<E, EU, EV>,
     model: Box<dyn BatchResidual<E>>,
     /// Stale-estimate evictions + re-calibrations performed by the policy.
     recalibrations: usize,
@@ -366,16 +366,23 @@ struct RouteEntry<E: Elem> {
 /// the single source of truth) and its calibration estimate;
 /// [`Router::process`] dispatches a single-key batch and runs the
 /// continuous re-calibration policy.
-pub struct Router<E: Elem> {
+///
+/// Like the engine, the router takes optional panel-storage parameters:
+/// a `Router<f32, Bf16, f32>` serves every key's estimate in the mixed
+/// reduced-precision layout while solves (and calibration probes) stay at
+/// `E = f32` — the per-key demotion happens inside
+/// [`ServeEngine::calibrate`], and the re-calibration policy guards the
+/// whole tier against a layout too coarse for some key.
+pub struct Router<E: Elem, EU: Elem = E, EV: Elem = EU> {
     cfg: EngineConfig,
-    entries: Vec<RouteEntry<E>>,
+    entries: Vec<RouteEntry<E, EU, EV>>,
     /// When set, every key registered afterwards gets its own
     /// [`AdaptiveWidth`] controller fed from served-batch latency.
     width_cfg: Option<AdaptiveWidthConfig>,
 }
 
-impl<E: Elem> Router<E> {
-    pub fn new(cfg: EngineConfig) -> Router<E> {
+impl<E: Elem, EU: Elem, EV: Elem> Router<E, EU, EV> {
+    pub fn new(cfg: EngineConfig) -> Router<E, EU, EV> {
         Router {
             cfg,
             entries: Vec::new(),
@@ -389,7 +396,7 @@ impl<E: Elem> Router<E> {
     /// latency (`(fwd_seconds + bwd_seconds) / batch` from
     /// [`BatchReport`]); [`Router::target_width`] exposes the width the
     /// serving loop should form batches at.
-    pub fn with_adaptive_width(mut self, wc: AdaptiveWidthConfig) -> Router<E> {
+    pub fn with_adaptive_width(mut self, wc: AdaptiveWidthConfig) -> Router<E, EU, EV> {
         assert!(
             wc.max_width <= self.cfg.max_batch,
             "adaptive max_width cannot exceed engine max_batch"
@@ -418,7 +425,7 @@ impl<E: Elem> Router<E> {
         self.entries.iter().map(|e| e.key).collect()
     }
 
-    pub fn engine(&self, key: ModelKey) -> Option<&ServeEngine<E>> {
+    pub fn engine(&self, key: ModelKey) -> Option<&ServeEngine<E, EU, EV>> {
         self.entries.iter().find(|e| e.key == key).map(|e| &e.engine)
     }
 

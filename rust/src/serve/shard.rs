@@ -48,6 +48,16 @@
 //! deterministic z₀ = 0 probe, so its estimate is bit-identical to the
 //! home shard's — stealing moves work, never estimates.
 //!
+//! **Steal hysteresis:** a freshly stolen key enters a *cooldown* of
+//! [`STEAL_COOLDOWN_BATCHES`] served batches during which it cannot be
+//! stolen again. Without it, alternating load makes ownership ping-pong
+//! between shards — each bounce re-homes the queue and makes every
+//! first-time owner pay a calibration probe. The cooldown is counted in
+//! batches the new owner actually serves (not wall-clock, not steal
+//! probes), so a spinning idle shard cannot burn through it; fresh keys
+//! start with no cooldown, so the *first* steal of a backlogged key is
+//! never delayed.
+//!
 //! # Zero-downtime swap (blue/green)
 //!
 //! [`ShardedRouter::swap`] registers the new parameter version as
@@ -94,6 +104,12 @@ pub type SharedModel<E> = Arc<dyn BatchResidual<E> + Send + Sync>;
 /// [`STEAL_POLL_MAX_S`] while nothing arrives).
 const STEAL_POLL_S: f64 = 200e-6;
 const STEAL_POLL_MAX_S: f64 = 5e-3;
+
+/// Steal hysteresis: batches the new owner must serve for a stolen key
+/// before another shard may steal it again (see the module docs). Counted
+/// in served batches of that key, so the cooldown reflects actual serving
+/// progress rather than wall-clock or probe cadence.
+pub const STEAL_COOLDOWN_BATCHES: u32 = 4;
 
 /// Configuration of a [`ShardedRouter`]: shard count plus the per-key
 /// engine config (shared by every engine, as in [`crate::serve::Router`])
@@ -217,6 +233,11 @@ struct RegEntry<E: Elem> {
     /// registration; work stealing re-homes it).
     shard: usize,
     state: KeyState,
+    /// Batches the current owner must serve before this key may be stolen
+    /// again — the steal-hysteresis counter, stamped to
+    /// [`STEAL_COOLDOWN_BATCHES`] on every steal and decremented per served
+    /// batch of the key. Fresh keys start at 0 (first steal never delayed).
+    steal_cooldown: u32,
 }
 
 /// Global routing state: one entry per registered key plus the
@@ -280,15 +301,24 @@ struct Shared<E: Elem> {
 
 /// The sharded serving front door. See the module docs for the threading
 /// model, lock order, and the stealing / swap protocols.
-pub struct ShardedRouter<E: Elem> {
+///
+/// Carries the same optional panel-storage parameters as
+/// [`crate::serve::Router`]: a `ShardedRouter<f32, Bf16, f32>` runs every
+/// shard's per-key estimates in the mixed reduced-precision layout. The
+/// parameters select the worker-local [`ServeEngine`] instantiation only —
+/// queues, requests and responses stay in `E`.
+pub struct ShardedRouter<E: Elem, EU: Elem = E, EV: Elem = EU> {
     sh: Arc<Shared<E>>,
     handles: Vec<JoinHandle<()>>,
     /// `threads::set_active_shards` value to restore on shutdown.
     prev_shards: usize,
+    /// The panel-storage instantiation lives in the worker threads'
+    /// engines, not in any shared field.
+    _panel: std::marker::PhantomData<(EU, EV)>,
 }
 
-impl<E: Elem> ShardedRouter<E> {
-    pub fn new(cfg: ShardConfig) -> ShardedRouter<E> {
+impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
+    pub fn new(cfg: ShardConfig) -> ShardedRouter<E, EU, EV> {
         assert!(cfg.shards >= 1, "need at least one shard");
         assert!(
             cfg.sched.max_batch <= cfg.engine.max_batch,
@@ -297,7 +327,7 @@ impl<E: Elem> ShardedRouter<E> {
         // Fail fast on the caller's thread for engine-config mistakes
         // (e.g. a non-Broyden calibration spec) that would otherwise kill
         // a worker mid-calibration.
-        let _probe: ServeEngine<E> = ServeEngine::new(1, cfg.engine);
+        let _probe: ServeEngine<E, EU, EV> = ServeEngine::new(1, cfg.engine);
         // Divide the kernel-level thread fan-out across shards so N drain
         // loops cannot oversubscribe the cores (restored on shutdown).
         let prev_shards = threads::set_active_shards(cfg.shards);
@@ -330,7 +360,7 @@ impl<E: Elem> ShardedRouter<E> {
                 let sh = Arc::clone(&sh);
                 std::thread::Builder::new()
                     .name(format!("shine-shard-{i}"))
-                    .spawn(move || worker_loop(i, sh))
+                    .spawn(move || worker_loop::<E, EU, EV>(i, sh))
                     .expect("spawn shard worker")
             })
             .collect();
@@ -338,6 +368,7 @@ impl<E: Elem> ShardedRouter<E> {
             sh,
             handles,
             prev_shards,
+            _panel: std::marker::PhantomData,
         }
     }
 
@@ -378,6 +409,7 @@ impl<E: Elem> ShardedRouter<E> {
                 model,
                 shard,
                 state: KeyState::Calibrating,
+                steal_cooldown: 0,
             });
         }
         let cell = &self.sh.cells[shard];
@@ -507,7 +539,7 @@ impl<E: Elem> ShardedRouter<E> {
     }
 }
 
-impl<E: Elem> Drop for ShardedRouter<E> {
+impl<E: Elem, EU: Elem, EV: Elem> Drop for ShardedRouter<E, EU, EV> {
     fn drop(&mut self) {
         self.join_workers();
     }
@@ -526,9 +558,9 @@ fn affinity_shard(key: ModelKey, shards: usize) -> usize {
 
 /// A worker-local engine: built, calibrated, and only ever used on this
 /// shard's thread.
-struct EngineSlot<E: Elem> {
+struct EngineSlot<E: Elem, EU: Elem, EV: Elem> {
     key: ModelKey,
-    engine: ServeEngine<E>,
+    engine: ServeEngine<E, EU, EV>,
     model: SharedModel<E>,
 }
 
@@ -543,8 +575,8 @@ enum Work {
     Exit,
 }
 
-fn worker_loop<E: Elem>(me: usize, sh: Arc<Shared<E>>) {
-    let mut engines: Vec<EngineSlot<E>> = Vec::new();
+fn worker_loop<E: Elem, EU: Elem, EV: Elem>(me: usize, sh: Arc<Shared<E>>) {
+    let mut engines: Vec<EngineSlot<E, EU, EV>> = Vec::new();
     let mut items: Vec<(f64, QueuedReq<E>)> = Vec::new();
     let mut zs: Vec<E> = Vec::new();
     let mut cots: Vec<E> = Vec::new();
@@ -619,10 +651,10 @@ fn next_work<E: Elem>(me: usize, sh: &Shared<E>, items: &mut Vec<(f64, QueuedReq
 }
 
 /// Build + calibrate a worker-local engine for `key` (idempotent).
-fn build_engine<E: Elem>(
+fn build_engine<E: Elem, EU: Elem, EV: Elem>(
     me: usize,
     sh: &Shared<E>,
-    engines: &mut Vec<EngineSlot<E>>,
+    engines: &mut Vec<EngineSlot<E, EU, EV>>,
     key: ModelKey,
     model: &SharedModel<E>,
 ) {
@@ -630,7 +662,7 @@ fn build_engine<E: Elem>(
         return;
     }
     let d = model.dim();
-    let mut engine: ServeEngine<E> = ServeEngine::new(d, sh.cfg.engine);
+    let mut engine: ServeEngine<E, EU, EV> = ServeEngine::new(d, sh.cfg.engine);
     engine.calibrate(
         |z: &[E], out: &mut [E]| model.residual_batch(z, 1, out),
         &vec![E::ZERO; d],
@@ -646,10 +678,10 @@ fn build_engine<E: Elem>(
 }
 
 /// Background calibration + the blue/green cutover (see module docs).
-fn calibrate_key<E: Elem>(
+fn calibrate_key<E: Elem, EU: Elem, EV: Elem>(
     me: usize,
     sh: &Shared<E>,
-    engines: &mut Vec<EngineSlot<E>>,
+    engines: &mut Vec<EngineSlot<E, EU, EV>>,
     key: ModelKey,
 ) {
     let model = {
@@ -689,10 +721,10 @@ fn calibrate_key<E: Elem>(
 /// the responses. Mirrors [`crate::serve::Router::process`] including the
 /// trip-rate re-calibration policy.
 #[allow(clippy::too_many_arguments)]
-fn serve_batch<E: Elem>(
+fn serve_batch<E: Elem, EU: Elem, EV: Elem>(
     me: usize,
     sh: &Shared<E>,
-    engines: &mut Vec<EngineSlot<E>>,
+    engines: &mut Vec<EngineSlot<E, EU, EV>>,
     key: ModelKey,
     items: &mut Vec<(f64, QueuedReq<E>)>,
     base_seq: u64,
@@ -765,6 +797,15 @@ fn serve_batch<E: Elem>(
         }
     }
     sh.done_cv.notify_all();
+    // Steal hysteresis: a served batch is one unit of cooldown progress for
+    // this key (registry lock taken on its own, before the shard lock below
+    // — the global lock order).
+    if sh.cfg.steal {
+        let mut reg = sh.reg.lock().unwrap();
+        if let Some(e) = reg.find_mut(key) {
+            e.steal_cooldown = e.steal_cooldown.saturating_sub(1);
+        }
+    }
     let mut st = sh.cells[me].state.lock().unwrap();
     st.stats.served += b;
     st.stats.batches += 1;
@@ -777,7 +818,11 @@ fn serve_batch<E: Elem>(
 /// the registry entry and drop the local engine — the "invalidate exactly
 /// that key" half of the swap protocol. Also drops engines for keys whose
 /// entries another shard already collected (e.g. after a historic steal).
-fn gc_retired<E: Elem>(me: usize, sh: &Shared<E>, engines: &mut Vec<EngineSlot<E>>) {
+fn gc_retired<E: Elem, EU: Elem, EV: Elem>(
+    me: usize,
+    sh: &Shared<E>,
+    engines: &mut Vec<EngineSlot<E, EU, EV>>,
+) {
     let mut guard = sh.reg.lock().unwrap();
     let reg = &mut *guard;
     let mut st = sh.cells[me].state.lock().unwrap();
@@ -809,8 +854,15 @@ fn try_steal<E: Elem>(me: usize, sh: &Shared<E>) -> bool {
         }
         let st = sh.cells[j].state.lock().unwrap();
         if let Some((key, n)) = st.sched.ready(now) {
-            let routed_here = reg.find(key).map(|e| e.shard == j).unwrap_or(false);
-            if routed_here && best.map(|(_, _, bn)| n > bn).unwrap_or(true) {
+            // A key in steal cooldown stays with its current owner — the
+            // hysteresis that stops ownership bouncing under alternating
+            // load (each bounce would re-home the queue and charge a new
+            // owner a calibration probe).
+            let stealable = reg
+                .find(key)
+                .map(|e| e.shard == j && e.steal_cooldown == 0)
+                .unwrap_or(false);
+            if stealable && best.map(|(_, _, bn)| n > bn).unwrap_or(true) {
                 best = Some((j, key, n));
             }
         }
@@ -827,9 +879,12 @@ fn try_steal<E: Elem>(me: usize, sh: &Shared<E>) -> bool {
         }
     };
     // Re-home the key in the same registry critical section, so arrivals
-    // after the steal follow the queue (FIFO-within-key survives).
+    // after the steal follow the queue (FIFO-within-key survives), and
+    // stamp the cooldown that keeps it here until the new owner has served
+    // [`STEAL_COOLDOWN_BATCHES`] batches of it.
     if let Some(e) = reg.find_mut(key) {
         e.shard = me;
+        e.steal_cooldown = STEAL_COOLDOWN_BATCHES;
     }
     let mut st = sh.cells[me].state.lock().unwrap();
     st.sched.inject_queue(key, q);
@@ -895,6 +950,141 @@ mod tests {
             "all versions hashed to shard {}: {homes:?}",
             homes[0]
         );
+    }
+
+    /// A [`Shared`] with no worker threads, so the steal/serve protocol
+    /// can be driven by hand on one thread — fully deterministic, no
+    /// scheduler timing involved. `max_wait = 0` makes every queued
+    /// request immediately releasable.
+    fn bare_shared(shards: usize, max_batch: usize) -> Arc<Shared<f64>> {
+        let sched = SchedulerConfig {
+            max_batch,
+            max_wait: 0.0,
+            queue_cap: 64,
+        };
+        let cfg = ShardConfig::new(
+            shards,
+            EngineConfig {
+                max_batch,
+                ..Default::default()
+            }
+            .with_tol(1e-8),
+            sched,
+        );
+        Arc::new(Shared {
+            cfg,
+            reg: Mutex::new(Registry {
+                entries: Vec::new(),
+                live: Vec::new(),
+            }),
+            reg_cv: Condvar::new(),
+            cells: (0..shards)
+                .map(|_| ShardCell {
+                    state: Mutex::new(ShardState {
+                        sched: KeyedScheduler::new(sched),
+                        ctl: VecDeque::new(),
+                        stats: ShardStats::default(),
+                    }),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+            done: Mutex::new(Vec::new()),
+            done_cv: Condvar::new(),
+            seq: AtomicU64::new(0),
+            clock: Stopwatch::start(),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    #[test]
+    fn steal_cooldown_blocks_ownership_bouncing() {
+        // The bounce regression: under alternating load a ready queue on
+        // the current owner used to be immediately re-stealable by the
+        // shard it just left, ping-ponging ownership (and charging each
+        // first-time owner a calibration probe). The cooldown must (a) not
+        // delay the FIRST steal of a fresh key, (b) pin the key to its new
+        // owner for STEAL_COOLDOWN_BATCHES served batches, (c) release it
+        // afterwards.
+        let d = 16;
+        let b = 2usize;
+        let sh = bare_shared(2, b);
+        let key = ModelKey::new(0, 0);
+        let model: SharedModel<f64> = Arc::new(SynthDeq::<f64>::new(d, 8, 1));
+        {
+            let mut reg = sh.reg.lock().unwrap();
+            reg.entries.push(RegEntry {
+                key,
+                model: Arc::clone(&model),
+                shard: 0,
+                state: KeyState::Live,
+                steal_cooldown: 0,
+            });
+            reg.live.push((0, 0));
+        }
+        let push_batch = |shard: usize, base: usize| {
+            let mut st = sh.cells[shard].state.lock().unwrap();
+            for i in 0..b {
+                let req = QueuedReq {
+                    id: base + i,
+                    z0: vec![0.0; d],
+                    cot: vec![1.0; d],
+                };
+                assert!(st.sched.push(0.0, key, req).is_ok());
+            }
+        };
+        // (a) a ready batch on the home shard: the idle shard 1 steals it
+        // immediately — fresh keys carry no cooldown.
+        push_batch(0, 0);
+        assert!(try_steal(1, &sh), "first steal is never delayed");
+        {
+            let reg = sh.reg.lock().unwrap();
+            let e = reg.find(key).unwrap();
+            assert_eq!(e.shard, 1, "key re-homed to the thief");
+            assert_eq!(e.steal_cooldown, STEAL_COOLDOWN_BATCHES);
+        }
+        // (b) the queue is ready on the thief and shard 0 is idle — the
+        // exact bounce configuration. Serve the cooldown out on shard 1,
+        // re-offering a ready batch (alternating load) each round; shard 0
+        // must not reclaim the key until the cooldown is spent.
+        assert!(!try_steal(0, &sh), "cooldown blocks the immediate re-steal");
+        let mut engines: Vec<EngineSlot<f64, f64, f64>> = Vec::new();
+        let mut items = Vec::new();
+        let (mut zs, mut cots, mut w) = (Vec::new(), Vec::new(), Vec::new());
+        let mut stats = Vec::new();
+        for round in 0..STEAL_COOLDOWN_BATCHES {
+            let Work::Batch {
+                key: k,
+                base_seq,
+                drained_at,
+            } = next_work(1, &sh, &mut items)
+            else {
+                panic!("round {round}: expected a releasable batch on shard 1");
+            };
+            assert_eq!(k, key);
+            serve_batch(
+                1, &sh, &mut engines, k, &mut items, base_seq, drained_at, &mut zs, &mut cots,
+                &mut w, &mut stats,
+            );
+            let left = sh.reg.lock().unwrap().find(key).unwrap().steal_cooldown;
+            assert_eq!(left, STEAL_COOLDOWN_BATCHES - 1 - round);
+            push_batch(1, 100 * (round as usize + 1));
+            if round + 1 < STEAL_COOLDOWN_BATCHES {
+                assert!(
+                    !try_steal(0, &sh),
+                    "round {round}: {left} cooldown batches left must still block"
+                );
+            }
+        }
+        // (c) cooldown spent: the ready queue is stealable again, and the
+        // steal restamps the cooldown for the next owner.
+        assert!(try_steal(0, &sh), "expired cooldown releases the key");
+        let reg = sh.reg.lock().unwrap();
+        let e = reg.find(key).unwrap();
+        assert_eq!(e.shard, 0);
+        assert_eq!(e.steal_cooldown, STEAL_COOLDOWN_BATCHES);
+        // Exactly one calibration happened on the thief across the whole
+        // cooldown window — the cost the hysteresis caps.
+        assert_eq!(sh.cells[1].state.lock().unwrap().stats.calibrations, 1);
     }
 
     #[test]

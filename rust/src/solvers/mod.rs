@@ -31,7 +31,7 @@ pub mod session;
 
 pub use session::{
     Backward, BackwardOutcome, BackwardSpec, EstimateHandle, FixedPointSolver, ForwardHandle,
-    Session, SolveOutcome, SolverMethod, SolverSpec,
+    PanelPrecision, Session, SolveOutcome, SolverMethod, SolverSpec,
 };
 
 /// Shared solver telemetry: per-iteration residual + wall time.

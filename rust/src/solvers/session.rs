@@ -294,6 +294,78 @@ impl Default for SolverSpec {
 }
 
 // ---------------------------------------------------------------------------
+// PanelPrecision
+// ---------------------------------------------------------------------------
+
+/// Panel-storage precision of a serving-tier inverse estimate — the value
+/// of the CLI `--panel-precision` flag, naming one instantiation of
+/// `ServeEngine<E, EU, EV>` / `Router<E, EU, EV>` /
+/// `ShardedRouter<E, EU, EV>`.
+///
+/// Monomorphized generics cannot be selected by a runtime value directly,
+/// so this enum is the dispatch point: callers match on it and call their
+/// generic driver with the corresponding storage types. State (iterates,
+/// cotangents, residuals) stays `f32` in every reduced variant — only the
+/// cached estimate's factor panels are demoted, and all accumulation is
+/// f64 regardless (the `Elem` contract). See
+/// `docs/adr/003-reduced-precision-panels.md` for why `Mixed` is the
+/// recommended reduced layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PanelPrecision {
+    /// `<f64, f64, f64>` — the bi-level/HOAG reference precision.
+    F64,
+    /// `<f32, f32, f32>` — the DEQ serving default.
+    F32,
+    /// `<f32, Bf16, Bf16>` — both panels bf16 (maximum traffic win).
+    Bf16,
+    /// `<f32, F16, F16>` — both panels IEEE binary16.
+    F16,
+    /// `<f32, Bf16, f32>` — bf16 U factors, f32 V factors: the
+    /// accuracy-critical mixed layout (U carries the memory traffic of the
+    /// backward sweep; V feeds the coefficient reductions where error is
+    /// cheapest to avoid).
+    Mixed,
+}
+
+impl PanelPrecision {
+    /// CLI / JSON name of the variant.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PanelPrecision::F64 => "f64",
+            PanelPrecision::F32 => "f32",
+            PanelPrecision::Bf16 => "bf16",
+            PanelPrecision::F16 => "f16",
+            PanelPrecision::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a CLI-style name (`f64 | f32 | bf16 | f16 | mixed`).
+    pub fn parse(s: &str) -> Result<PanelPrecision, String> {
+        match s {
+            "f64" => Ok(PanelPrecision::F64),
+            "f32" => Ok(PanelPrecision::F32),
+            "bf16" => Ok(PanelPrecision::Bf16),
+            "f16" => Ok(PanelPrecision::F16),
+            "mixed" => Ok(PanelPrecision::Mixed),
+            other => Err(format!(
+                "unknown panel precision '{other}' (f64 | f32 | bf16 | f16 | mixed)"
+            )),
+        }
+    }
+
+    /// Every variant, in documentation order (drives sweep harnesses).
+    pub fn all() -> [PanelPrecision; 5] {
+        [
+            PanelPrecision::F64,
+            PanelPrecision::F32,
+            PanelPrecision::Bf16,
+            PanelPrecision::F16,
+            PanelPrecision::Mixed,
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
 // SolveOutcome + EstimateHandle
 // ---------------------------------------------------------------------------
 
@@ -335,7 +407,7 @@ impl<E: Elem> EstimateHandle<E> {
 
 impl<E: Elem> InvOp<E> for EstimateHandle<E> {
     fn dim(&self) -> usize {
-        InvOp::dim(&self.lr)
+        self.lr.dim()
     }
     fn apply(&self, x: &[E], out: &mut [E]) {
         self.lr.apply(x, out)
@@ -1157,6 +1229,15 @@ mod tests {
             BackwardSpec::ShineRefine { iters: 5 }
         );
         assert!(BackwardSpec::parse("wat").is_err());
+    }
+
+    #[test]
+    fn panel_precision_parse_round_trips() {
+        for p in PanelPrecision::all() {
+            assert_eq!(PanelPrecision::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(PanelPrecision::parse("mixed").unwrap(), PanelPrecision::Mixed);
+        assert!(PanelPrecision::parse("fp8").is_err());
     }
 
     #[test]

@@ -12,10 +12,11 @@
 
 use shine::linalg::dmat::DMat;
 use shine::linalg::lu::Lu;
+use shine::linalg::vecops::{Bf16, Elem, F16};
 use shine::qn::adjoint_broyden::AdjointBroyden;
 use shine::qn::broyden::BroydenInverse;
 use shine::qn::lbfgs::LbfgsInverse;
-use shine::qn::{InvOp, MemoryPolicy};
+use shine::qn::{InvOp, LowRank, MemoryPolicy};
 use shine::solvers::fixed_point::{broyden_solve, FpOptions};
 use shine::util::prop;
 use shine::util::rng::Rng;
@@ -24,6 +25,23 @@ use shine::util::rng::Rng;
 /// amplifies that. 5e-3 relative is comfortably inside "f32 tolerance" while
 /// far outside anything an algorithmic divergence would produce.
 const TOL: f64 = 5e-3;
+
+/// bf16 keeps an 8-bit significand (relative steps of 2⁻⁸ ≈ 0.4%); with
+/// both panel factors demoted and a handful of rank-one terms composed,
+/// ~1% relative drift is typical. 4e-2 is the documented bf16-panel
+/// tolerance (ADR-003) — loose enough to never flake, far below any
+/// algorithmic divergence.
+const BF16_TOL: f64 = 4e-2;
+
+/// f16 keeps an 11-bit significand (steps of 2⁻¹¹ ≈ 5e-4) — an order finer
+/// than bf16 — but its 5-bit exponent caps the range at ±65504.
+/// The documented f16-panel tolerance is 1e-2.
+const F16_TOL: f64 = 1e-2;
+
+/// Mixed layout (`LowRank<Bf16, f32>`): only the U factor of each term is
+/// demoted, so the error budget is bf16-class but roughly halved. Documented
+/// at the bf16 tolerance.
+const MIXED_TOL: f64 = 4e-2;
 
 fn to32(v: &[f64]) -> Vec<f32> {
     v.iter().map(|&x| x as f32).collect()
@@ -129,6 +147,199 @@ fn adjoint_broyden_family_f32_matches_f64() {
         let mut sb32 = vec![0.0f32; n];
         q32.left_apply_direct(&to32(&x), &mut sb32);
         ensure_close_f32(&sb32, &sb64, "adj left apply")
+    });
+}
+
+#[test]
+fn half_precision_panels_match_f64_reference() {
+    // The ISSUE 8 serving contract: demoting a calibrated estimate's factor
+    // panels to bf16 / f16 / mixed storage (`LowRank::convert`) perturbs
+    // `apply` / `apply_t` by at most the documented per-format tolerance.
+    // The state side stays wide (f64 probes through the blanket `InvOp`),
+    // exactly like a reduced-precision serving engine applying its panels
+    // to full-precision cotangents with f64 accumulation.
+    prop::check("parity-halfpanels", 12, |rng| {
+        let n = 8 + rng.below(24);
+        let m = 3 + rng.below(6);
+        let mut lr: LowRank<f64> = LowRank::identity(n, m, MemoryPolicy::Freeze);
+        for _ in 0..m {
+            prop::ensure(lr.push(&rng.normal_vec(n), &rng.normal_vec(n)), "panel has room")?;
+        }
+        let lr_bf: LowRank<Bf16> = lr.convert();
+        let lr_f16: LowRank<F16> = lr.convert();
+        let lr_mix: LowRank<Bf16, f32> = lr.convert();
+        prop::ensure(
+            lr_bf.rank() == lr.rank() && lr_f16.rank() == lr.rank() && lr_mix.rank() == lr.rank(),
+            "conversion preserves every factor",
+        )?;
+
+        let x = rng.normal_vec(n);
+        let want = lr.apply_vec(&x);
+        let want_t = lr.apply_t_vec(&x);
+        prop::ensure_close_vec(&lr_bf.apply_vec(&x), &want, BF16_TOL, "bf16 apply")?;
+        prop::ensure_close_vec(&lr_bf.apply_t_vec(&x), &want_t, BF16_TOL, "bf16 apply_t")?;
+        prop::ensure_close_vec(&lr_f16.apply_vec(&x), &want, F16_TOL, "f16 apply")?;
+        prop::ensure_close_vec(&lr_f16.apply_t_vec(&x), &want_t, F16_TOL, "f16 apply_t")?;
+        prop::ensure_close_vec(&lr_mix.apply_vec(&x), &want, MIXED_TOL, "mixed apply")?;
+        prop::ensure_close_vec(&lr_mix.apply_t_vec(&x), &want_t, MIXED_TOL, "mixed apply_t")?;
+
+        // Widening back is exact (bf16 ⊂ f32 ⊂ f64), so a demote → widen
+        // round trip applies identically to the demoted operator.
+        let back: LowRank<f64> = lr_bf.convert();
+        prop::ensure_close_vec(
+            &back.apply_t_vec(&x),
+            &lr_bf.apply_t_vec(&x),
+            1e-14,
+            "widening a bf16 panel is exact",
+        )
+    });
+}
+
+#[test]
+fn bf16_every_bit_pattern_round_trips() {
+    // bf16 ⊂ f32 ⊂ f64: widening any bf16 value to f64 and narrowing back
+    // must reproduce the exact bit pattern (RNE is the identity on
+    // representable values). NaNs keep their class rather than their payload.
+    for bits in 0..=u16::MAX {
+        let v = Bf16::from_bits(bits);
+        let f = v.to_f64();
+        let back = Bf16::from_f64(f);
+        if f.is_nan() {
+            assert!(back.to_f64().is_nan(), "bf16 {bits:#06x} NaN class lost");
+        } else {
+            assert_eq!(back.to_bits(), bits, "bf16 {bits:#06x} failed to round-trip");
+        }
+    }
+}
+
+#[test]
+fn f16_every_bit_pattern_round_trips() {
+    for bits in 0..=u16::MAX {
+        let v = F16::from_bits(bits);
+        let f = v.to_f64();
+        let back = F16::from_f64(f);
+        if f.is_nan() {
+            assert!(back.to_f64().is_nan(), "f16 {bits:#06x} NaN class lost");
+        } else {
+            assert_eq!(back.to_bits(), bits, "f16 {bits:#06x} failed to round-trip");
+        }
+    }
+}
+
+#[test]
+fn bf16_narrowing_rounds_to_nearest_even() {
+    // Ties round to the even mantissa; off-tie values to the nearest.
+    // 1 + 2⁻⁸ sits exactly between 1.0 (0x3F80, even) and 1 + 2⁻⁷ (0x3F81).
+    assert_eq!(Bf16::from_f64(1.0 + 0.00390625).to_bits(), 0x3F80, "tie to even (down)");
+    // 1 + 3·2⁻⁸ sits between 0x3F81 (odd) and 1 + 2⁻⁶ (0x3F82, even).
+    assert_eq!(Bf16::from_f64(1.0 + 3.0 * 0.00390625).to_bits(), 0x3F82, "tie to even (up)");
+    // Nudged past the tie, round to the nearest neighbour.
+    assert_eq!(Bf16::from_f64(1.0 + 0.00390625 + 1e-6).to_bits(), 0x3F81, "above tie");
+    assert_eq!(Bf16::from_f64(1.0 + 0.00390625 - 1e-6).to_bits(), 0x3F80, "below tie");
+
+    // Range behaviour: bf16 shares f32's exponent, so f32::MAX rounds up to
+    // Inf (it sits above the largest bf16, 0x7F7F) and ±Inf pass through.
+    assert_eq!(Bf16::from_f64(f32::MAX as f64).to_bits(), 0x7F80, "overflow to +Inf");
+    assert_eq!(Bf16::from_f64(f64::INFINITY).to_bits(), 0x7F80);
+    assert_eq!(Bf16::from_f64(f64::NEG_INFINITY).to_bits(), 0xFF80);
+    assert!(Bf16::from_f64(f64::NAN).to_f64().is_nan());
+
+    // Subnormals: the smallest positive bf16 is 2⁻¹³³ (bits 0x0001); half of
+    // it ties back to the even zero.
+    let tiny = 2.0f64.powi(-133);
+    assert_eq!(Bf16::from_f64(tiny).to_bits(), 0x0001, "smallest subnormal is exact");
+    assert_eq!(Bf16::from_f64(tiny / 2.0).to_bits(), 0x0000, "half-ulp ties to zero");
+    assert_eq!(Bf16::from_f64(-0.0).to_bits(), 0x8000, "signed zero survives");
+}
+
+#[test]
+fn f16_narrowing_rounds_to_nearest_even() {
+    // 1 + 2⁻¹¹ ties between 1.0 (0x3C00, even) and 1 + 2⁻¹⁰ (0x3C01).
+    let ulp = 2.0f64.powi(-11);
+    assert_eq!(F16::from_f64(1.0 + ulp).to_bits(), 0x3C00, "tie to even (down)");
+    assert_eq!(F16::from_f64(1.0 + 3.0 * ulp).to_bits(), 0x3C02, "tie to even (up)");
+    assert_eq!(F16::from_f64(1.0 + ulp + 1e-7).to_bits(), 0x3C01, "above tie");
+
+    // Range: 65504 is the largest finite f16 (0x7BFF); the tie at 65520
+    // rounds to the even candidate 65536, which overflows to Inf.
+    assert_eq!(F16::from_f64(65504.0).to_bits(), 0x7BFF, "max finite is exact");
+    assert_eq!(F16::from_f64(65520.0).to_bits(), 0x7C00, "overflow tie to Inf");
+    assert_eq!(F16::from_f64(65519.0).to_bits(), 0x7BFF, "below the overflow tie");
+    assert_eq!(F16::from_f64(f64::NEG_INFINITY).to_bits(), 0xFC00);
+    assert!(F16::from_f64(f64::NAN).to_f64().is_nan());
+
+    // Subnormals: smallest positive f16 is 2⁻²⁴ (0x0001); exactly half of it
+    // ties to zero, and 1.5·2⁻²⁴ ties up to the even 0x0002.
+    let tiny = 2.0f64.powi(-24);
+    assert_eq!(F16::from_f64(tiny).to_bits(), 0x0001, "smallest subnormal is exact");
+    assert_eq!(F16::from_f64(tiny / 2.0).to_bits(), 0x0000, "half-ulp ties to zero");
+    assert_eq!(F16::from_f64(1.5 * tiny).to_bits(), 0x0002, "mid-subnormal tie to even");
+    assert_eq!(F16::from_f64(-tiny).to_bits(), 0x8001, "sign survives subnormals");
+}
+
+/// Value-ordered successor of a 16-bit IEEE-layout pattern (works for both
+/// bf16 and f16: for a fixed sign, the bit patterns are value-ordered).
+fn next_up16(bits: u16) -> u16 {
+    if bits & 0x8000 == 0 {
+        bits + 1 // positive: grow the magnitude
+    } else if bits == 0x8000 {
+        0x0001 // −0 → smallest positive
+    } else {
+        bits - 1 // negative: shrink the magnitude
+    }
+}
+
+/// Value-ordered predecessor (mirror of [`next_up16`]).
+fn next_down16(bits: u16) -> u16 {
+    if bits & 0x8000 != 0 {
+        bits + 1
+    } else if bits == 0x0000 {
+        0x8001
+    } else {
+        bits - 1
+    }
+}
+
+/// The RNE contract, checked against the format itself: the narrowed value
+/// must be at least as close to `x` as BOTH its representable neighbours,
+/// and an exact tie must have landed on the even mantissa.
+fn ensure_rne(x: f64, r_bits: u16, widen: impl Fn(u16) -> f64, fmt: &str) -> Result<(), String> {
+    let r = widen(r_bits);
+    if !r.is_finite() {
+        return Ok(()); // overflow / NaN classes are pinned by the targeted tests
+    }
+    let err = (r - x).abs();
+    for nb in [next_up16(r_bits), next_down16(r_bits)] {
+        let nv = widen(nb);
+        if !nv.is_finite() {
+            continue;
+        }
+        let nerr = (nv - x).abs();
+        prop::ensure(
+            err < nerr || (err == nerr && r_bits & 1 == 0),
+            &format!("{fmt}: {x:e} → {r:e} but neighbour {nv:e} is as close or closer"),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn half_precision_narrowing_is_round_to_nearest_even() {
+    // Property form of the RNE contract over magnitudes spanning both
+    // formats' normal AND subnormal ranges (f16 subnormals live below
+    // 2⁻¹⁴; draws above 65504 exercise its overflow path and are skipped
+    // by the finiteness guard inside `ensure_rne`). The contract is
+    // "narrow to f32, then RNE to 16 bits", so nearest-ness is measured
+    // from the f32 value — measuring from the raw f64 would trip over
+    // legitimate double rounding near tie midpoints.
+    prop::check("half-rne", 16, |rng| {
+        for _ in 0..256 {
+            let x = rng.normal() * 2f64.powi(rng.below(80) as i32 - 40);
+            let xf = (x as f32) as f64;
+            ensure_rne(xf, Bf16::from_f64(x).to_bits(), |b| Bf16::from_bits(b).to_f64(), "bf16")?;
+            ensure_rne(xf, F16::from_f64(x).to_bits(), |b| F16::from_bits(b).to_f64(), "f16")?;
+        }
+        Ok(())
     });
 }
 

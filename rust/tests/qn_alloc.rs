@@ -15,7 +15,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use shine::linalg::vecops::Elem;
+use shine::linalg::vecops::{Bf16, Elem};
 use shine::qn::broyden::BroydenInverse;
 use shine::qn::workspace::Workspace;
 use shine::qn::{InvOp, LowRank, MemoryPolicy};
@@ -168,6 +168,36 @@ fn qn_hot_loops_do_not_allocate() {
     });
     assert_eq!(events, 0, "LowRank<f32> apply_into allocated {events} times");
 
+    // --- (2b) half-precision and mixed panel storage (ISSUE 8): applying a
+    // bf16-stored or mixed-layout estimate to f32 state widens per element
+    // inside the sweeps — no conversion buffers, and the coefficient scratch
+    // comes from the same Workspace<f32> pools. Zero allocations once warm.
+    let mut lr16: LowRank<Bf16> = LowRank::identity(n, 8, MemoryPolicy::Evict);
+    let mut lrmix: LowRank<Bf16, f32> = LowRank::identity(n, 8, MemoryPolicy::Evict);
+    for _ in 0..8 {
+        let u: Vec<Bf16> = rng.normal_vec(n).iter().map(|&x| Bf16::from_f64(x)).collect();
+        let v32 = rng.normal_vec_f32(n, 1.0);
+        let v: Vec<Bf16> = v32.iter().map(|&x| Bf16::from_f64(x as f64)).collect();
+        lr16.push(&u, &v);
+        lrmix.push(&u, &v32);
+    }
+    lr16.apply_into(&x32, &mut out32, &mut ws32); // warm for this size
+    lr16.apply_t_into(&x32, &mut out32, &mut ws32);
+    lrmix.apply_into(&x32, &mut out32, &mut ws32);
+    lrmix.apply_t_into(&x32, &mut out32, &mut ws32);
+    let (events, _) = alloc_events(|| {
+        for _ in 0..16 {
+            lr16.apply_into(&x32, &mut out32, &mut ws32);
+            lr16.apply_t_into(&x32, &mut out32, &mut ws32);
+            lrmix.apply_into(&x32, &mut out32, &mut ws32);
+            lrmix.apply_t_into(&x32, &mut out32, &mut ws32);
+        }
+    });
+    assert_eq!(
+        events, 0,
+        "half-precision panel apply allocated {events} times after warm-up"
+    );
+
     // --- (3) BroydenInverse::update_ws at steady state (Evict ring full)
     // writes factors in place: zero allocations, in both precisions.
     let mut bro = BroydenInverse::new(n, 6, MemoryPolicy::Evict);
@@ -202,16 +232,22 @@ fn qn_hot_loops_do_not_allocate() {
     // (Picard and Anderson) + ONE apply_t_multi panel sweep answering every
     // cotangent — performs zero heap allocations per batch once the engine
     // is warm. Sizes stay below every thread threshold (scoped spawns
-    // allocate) and tol = -1.0 pins the iteration count.
-    serving_batch_is_allocation_free(SolverSpec::picard(1.0), "picard");
-    serving_batch_is_allocation_free(SolverSpec::anderson(4, 1.0), "anderson");
+    // allocate) and tol = -1.0 pins the iteration count. The guarantee
+    // holds for every panel storage layout: homogeneous f32, demoted bf16
+    // and the mixed (bf16 U, f32 V) layout.
+    serving_batch_is_allocation_free::<f32, f32>(SolverSpec::picard(1.0), "picard");
+    serving_batch_is_allocation_free::<f32, f32>(SolverSpec::anderson(4, 1.0), "anderson");
+    serving_batch_is_allocation_free::<Bf16, Bf16>(SolverSpec::picard(1.0), "picard-bf16");
+    serving_batch_is_allocation_free::<Bf16, f32>(SolverSpec::picard(1.0), "picard-mixed");
 }
 
-/// Build a small f32 serving engine, warm it with two batches, then assert
-/// the third batch allocates nothing: forward block solve, retirement
-/// bookkeeping (idx pool), the shared-estimate multi-RHS backward and the
-/// fallback-guard scan all run out of the engine's pools.
-fn serving_batch_is_allocation_free(solver: SolverSpec, name: &str) {
+/// Build a small f32-state serving engine with `EU`/`EV` panel storage,
+/// warm it with two batches, then assert the third batch allocates nothing:
+/// forward block solve, retirement bookkeeping (idx pool), the
+/// shared-estimate multi-RHS backward and the fallback-guard scan all run
+/// out of the engine's pools — including the widen-per-element sweeps of
+/// the reduced-precision layouts.
+fn serving_batch_is_allocation_free<EU: Elem, EV: Elem>(solver: SolverSpec, name: &str) {
     let d = 48usize;
     let bsz = 4usize;
     let bias: Vec<f32> = (0..d).map(|i| ((i as f32) * 0.13).cos() * 0.1).collect();
@@ -224,7 +260,7 @@ fn serving_batch_is_allocation_free(solver: SolverSpec, name: &str) {
             }
         }
     };
-    let mut eng: ServeEngine<f32> = ServeEngine::new(
+    let mut eng: ServeEngine<f32, EU, EV> = ServeEngine::new(
         d,
         EngineConfig {
             max_batch: bsz,

@@ -7,15 +7,20 @@
 //! 2. a parameter-version bump invalidates only that key's cached
 //!    calibration estimate (the other model's estimate survives bit-for-bit);
 //! 3. the trip-rate re-calibration policy evicts and re-captures a stale
-//!    estimate through the [`Router`] while serving continues.
+//!    estimate through the [`Router`] while serving continues;
+//! 4. (ISSUE 8) the §3 fallback guard + [`RecalibPolicy`] protect the
+//!    reduced-precision panel path: a deliberately degraded estimate served
+//!    from bf16 storage trips the guard, is flagged stale, and a
+//!    re-calibration restores full-precision-grade backward answers.
 
-use shine::qn::InvOp;
+use shine::linalg::vecops::{Bf16, Elem};
+use shine::qn::{LowRank, MemoryPolicy};
 use shine::serve::{
-    run_routed_closed_loop, EngineConfig, KeyedScheduler, ModelKey, RecalibPolicy,
-    RoutedLoadConfig, Router, Scheduler, SchedulerConfig, SynthDeq,
+    run_routed_closed_loop, BatchReport, EngineConfig, KeyedScheduler, ModelKey, RecalibPolicy,
+    RoutedLoadConfig, Router, Scheduler, SchedulerConfig, ServeEngine, SynthDeq,
 };
 use shine::solvers::fixed_point::{picard_solve, ColStats};
-use shine::solvers::session::SolverSpec;
+use shine::solvers::session::{EstimateHandle, SolverSpec};
 use shine::util::rng::Rng;
 
 fn cfg(max_batch: usize, tol: f64) -> EngineConfig {
@@ -189,6 +194,138 @@ fn routed_closed_loop_with_recalibration_policy() {
     assert!(router.engine(ka).unwrap().estimate().is_some());
     assert!(router.engine(kb).unwrap().estimate().is_some());
     assert!(router.engine(ka).unwrap().calibrations() >= 2 || router.engine(kb).unwrap().calibrations() >= 2);
+}
+
+/// Drive one already-calibrated engine over a fresh zero-initialized batch
+/// and hand back the backward answers plus the batch report. Generic over
+/// the panel storage so the bf16 engine and its f32 reference share the
+/// exact same serving code path.
+fn serve_once<EU: Elem, EV: Elem>(
+    engine: &mut ServeEngine<f32, EU, EV>,
+    model: &SynthDeq<f32>,
+    d: usize,
+    cots: &[f32],
+) -> (Vec<f32>, BatchReport) {
+    let b = cots.len() / d;
+    let mut zs = vec![0.0f32; b * d];
+    let mut w = vec![0.0f32; b * d];
+    let mut stats = vec![ColStats::default(); b];
+    let rep = engine.process(
+        |block: &[f32], _ids: &[usize], out: &mut [f32]| {
+            model.residual_batch(block, block.len() / d, out)
+        },
+        &mut zs,
+        cots,
+        &mut w,
+        &mut stats,
+    );
+    (w, rep)
+}
+
+#[test]
+fn degraded_bf16_estimate_trips_guard_and_recalibration_restores_accuracy() {
+    // The §3 fallback guard is the safety net that makes reduced-precision
+    // panel storage shippable (ADR-003). Three acts:
+    //   1. a freshly calibrated estimate, demoted to bf16 panels, serves
+    //      guard-silent and tracks the f32 reference backward;
+    //   2. a deliberately degraded estimate injected into bf16 storage
+    //      blows every cotangent past `ratio * ||dz||` — the guard reverts
+    //      the answers and the RecalibPolicy flags the estimate stale;
+    //   3. evict + re-calibrate restores guard-silent serving and
+    //      reference-grade answers, exactly the Router's recovery loop.
+    let d = 32;
+    let tol = 1e-5;
+    let b = 4;
+    let mut config = cfg(b, tol);
+    // Healthy amplification for SynthDeq is ||J_g^{-1}|| ≈ 2 (Jacobian norm
+    // ≈ 0.5), so 4.0 stays silent on a good estimate and trips on a bad one.
+    config.fallback_ratio = Some(4.0);
+    let policy = RecalibPolicy {
+        trip_rate: 0.5,
+        min_cols: 4,
+    };
+    config.recalib = Some(policy);
+    let model: SynthDeq<f32> = SynthDeq::new(d, 8, 77);
+    let z0 = vec![0.0f32; d];
+
+    // bf16 panel storage under test; homogeneous f32 panels as reference.
+    let mut engine: ServeEngine<f32, Bf16, Bf16> = ServeEngine::new(d, config);
+    let mut reference: ServeEngine<f32> = ServeEngine::new(d, cfg(b, tol));
+    engine.calibrate(|z: &[f32], out: &mut [f32]| model.residual_batch(z, 1, out), &z0);
+    reference.calibrate(|z: &[f32], out: &mut [f32]| model.residual_batch(z, 1, out), &z0);
+    assert_eq!(engine.calibrations(), 1);
+
+    let mut rng = Rng::new(9);
+    let cots = rng.normal_vec_f32(b * d, 1.0);
+    let rel = |a: &[f32], r: &[f32]| {
+        let num: f64 = a
+            .iter()
+            .zip(r)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 = r.iter().map(|&y| (y as f64).powi(2)).sum::<f64>().sqrt();
+        num / den.max(1e-30)
+    };
+
+    // Act 1: healthy bf16-stored estimate — guard silent, answers track f32.
+    let (w_ref, rep_ref) = serve_once(&mut reference, &model, d, &cots);
+    let (w16, rep) = serve_once(&mut engine, &model, d, &cots);
+    assert!(rep_ref.all_converged && rep.all_converged);
+    assert_eq!(rep.fallback_cols, 0, "healthy bf16 estimate must serve guard-silent");
+    assert!(!rep.estimate_stale);
+    let healthy_err = rel(&w16, &w_ref);
+    assert!(
+        healthy_err < 5e-2,
+        "bf16 backward must track the f32 reference (rel err {healthy_err:.2e})"
+    );
+
+    // Act 2: inject a degraded estimate. H^T = I + Σ v_i u_i^T with
+    // u_i = 100·e_i amplifies the first 8 components of every cotangent
+    // ×101, so ||H^T dz|| >> ratio · ||dz|| for any generic dz. 100.0 and
+    // 1.0 are exactly representable in bf16 — the blow-up survives demotion.
+    let mut bad: LowRank<f32> = LowRank::identity(d, 16, MemoryPolicy::Freeze);
+    for i in 0..8 {
+        let mut u = vec![0.0f32; d];
+        let mut v = vec![0.0f32; d];
+        u[i] = 100.0;
+        v[i] = 1.0;
+        assert!(bad.push(&u, &v));
+    }
+    engine.install_estimate(EstimateHandle::new(bad));
+    let (_w_bad, rep_bad) = serve_once(&mut engine, &model, d, &cots);
+    assert!(rep_bad.all_converged, "the forward solve is estimate-independent");
+    assert_eq!(
+        rep_bad.fallback_cols, b,
+        "every degraded cotangent must trip the guard"
+    );
+    assert!(
+        rep_bad.estimate_stale,
+        "{} guarded cols at 100% trips must cross RecalibPolicy {{ trip_rate: {}, min_cols: {} }}",
+        b, policy.trip_rate, policy.min_cols
+    );
+    assert!(engine.estimate_stale());
+    assert!(engine.trip_rate() > policy.trip_rate);
+
+    // Act 3: the Router's recovery loop — evict, re-calibrate, serve again.
+    engine.invalidate_estimate();
+    assert!(engine.estimate().is_none());
+    let (_, probe_res) = engine.calibrate(
+        |z: &[f32], out: &mut [f32]| model.residual_batch(z, 1, out),
+        &z0,
+    );
+    assert!(probe_res <= tol, "re-calibration probe must converge ({probe_res:.2e})");
+    assert_eq!(engine.calibrations(), 2, "install_estimate is not a calibration");
+    let (w_rec, rep_rec) = serve_once(&mut engine, &model, d, &cots);
+    assert!(rep_rec.all_converged);
+    assert_eq!(rep_rec.fallback_cols, 0, "re-calibration must silence the guard");
+    assert!(!rep_rec.estimate_stale && !engine.estimate_stale());
+    assert_eq!(engine.trip_rate(), 0.0, "staleness counters restart clean");
+    let rec_err = rel(&w_rec, &w_ref);
+    assert!(
+        rec_err < 5e-2,
+        "recovered bf16 backward must match the reference again (rel err {rec_err:.2e})"
+    );
 }
 
 #[test]
