@@ -18,16 +18,22 @@
 //! (many small models, each below the kernel parallelism threshold so
 //! the shard count is the only parallelism lever) through
 //! [`shine::serve::ShardedRouter`] at shards ∈ {1, 2, 4}, plus a
-//! mid-run zero-downtime model swap cell (p99 across the cutover) and a
-//! 90%-hot skewed-traffic cell (work-stealing rebalance).
+//! mid-run zero-downtime model swap cell (p99 across the cutover), a
+//! 90%-hot skewed-traffic cell (work-stealing rebalance), and a **chaos**
+//! cell replaying the 2-shard schedule under a seeded
+//! [`shine::serve::FaultPlan`] (injected panics, NaN residuals,
+//! stragglers) with the circuit breaker armed — the overhead of
+//! supervision + typed-outcome accounting under faults, and the p99 cost
+//! of a worker respawn.
 
 use shine::linalg::vecops::Bf16;
 use shine::qn::low_rank::LowRank;
 use shine::qn::workspace::Workspace;
 use shine::qn::{InvOp, MemoryPolicy};
 use shine::serve::{
-    run_open_loop, run_sharded_open_loop, run_suite, Arrivals, EngineConfig, OpenLoopConfig,
-    ServeEngine, ShardedLoadConfig, SharedModel, SynthDeq,
+    run_open_loop, run_sharded_open_loop, run_sharded_open_loop_with, run_suite, Arrivals,
+    BreakerConfig, EngineConfig, FaultPlan, OpenLoopConfig, ServeEngine, ShardedLoadConfig,
+    SharedModel, SynthDeq,
 };
 use shine::solvers::session::SolverSpec;
 use shine::util::bench::Bench;
@@ -102,6 +108,7 @@ fn main() {
                 fallback_ratio: None,
                 recalib: None,
                 col_budget: if continuous { Some(64) } else { None },
+                breaker: None,
             },
         );
         engine.calibrate(
@@ -162,6 +169,7 @@ fn main() {
         fallback_ratio: None,
         recalib: None,
         col_budget: None,
+        breaker: None,
     };
     let mk = move |m: u32, v: u32| -> SharedModel<f32> {
         Arc::new(SynthDeq::<f32>::new(
@@ -184,6 +192,7 @@ fn main() {
             max_wait: 1e-3,
             hot_share: None,
             swap_at: None,
+            deadline: None,
         };
         let rep = run_sharded_open_loop::<f32, f32, f32>(sengine, &mk, &lc, 7);
         println!(
@@ -222,6 +231,7 @@ fn main() {
         max_wait: 1e-3,
         hot_share: None,
         swap_at: Some(stotal / 2),
+        deadline: None,
     };
     let swap_rep = run_sharded_open_loop::<f32, f32, f32>(sengine, &mk, &swap_lc, 7);
     let swap_tel = swap_rep.swap.expect("swap configured");
@@ -243,6 +253,7 @@ fn main() {
         max_wait: 1e-3,
         hot_share: Some(0.9),
         swap_at: None,
+        deadline: None,
     };
     let skew_rep = run_sharded_open_loop::<f32, f32, f32>(sengine, &mk, &skew_lc, 7);
     println!(
@@ -250,6 +261,53 @@ fn main() {
         skew_rep.rps, skew_rep.p99_latency_ms, skew_rep.steals
     );
     all_converged &= skew_rep.all_converged;
+
+    // Chaos cell: the 2-shard schedule under a seeded fault plan (panics,
+    // NaN residual columns, stragglers — victims in the first half so the
+    // healthy tail closes any opened breaker), with the §3 guard and the
+    // per-key circuit breaker armed. Measures the cost of fault tolerance
+    // under actual faults: throughput and p99 with a worker respawn in the
+    // middle of the run, plus the typed-failure accounting.
+    let chaos_engine = EngineConfig {
+        fallback_ratio: Some(10.0),
+        breaker: Some(BreakerConfig {
+            threshold: 2,
+            cooldown: 2,
+        }),
+        ..sengine
+    };
+    let chaos_plan = FaultPlan::seeded(7 ^ 0xC4A05, stotal / 2, 2, 4, 4);
+    let chaos_lc = ShardedLoadConfig {
+        shards: 2,
+        models: smodels,
+        total: stotal,
+        arrivals: burst,
+        max_batch: 8,
+        max_wait: 1e-3,
+        hot_share: None,
+        swap_at: None,
+        deadline: None,
+    };
+    let chaos_rep = run_sharded_open_loop_with::<f32, f32, f32>(
+        chaos_engine,
+        &mk,
+        &chaos_lc,
+        Some(&chaos_plan),
+        7,
+    );
+    println!(
+        "sharded chaos (2x, {} faults): {:>10.1} req/s  p99 {:>8.3} ms  \
+         {} respawns  {} worker lost  {} model faults  {} shed",
+        chaos_plan.len(),
+        chaos_rep.rps,
+        chaos_rep.p99_latency_ms,
+        chaos_rep.respawns,
+        chaos_rep.worker_lost,
+        chaos_rep.model_faults,
+        chaos_rep.shed
+    );
+    all_converged &= chaos_rep.all_converged;
+    let chaos_accounted = chaos_rep.requests + chaos_rep.shed == stotal;
 
     // Micro view of the serving backward: ONE apply_t_multi sweep for k=32
     // cotangents vs 32 per-request panel applies (m=30 estimate, f32).
@@ -337,6 +395,23 @@ fn main() {
                         .set("steals", skew_rep.steals)
                         .clone(),
                 )
+                .set(
+                    "chaos",
+                    Json::obj()
+                        .set("shards", 2usize)
+                        .set("faults", chaos_plan.len())
+                        .set("rps", chaos_rep.rps)
+                        .set("p99_latency_ms", chaos_rep.p99_latency_ms)
+                        .set("respawns", chaos_rep.respawns)
+                        .set("worker_lost", chaos_rep.worker_lost)
+                        .set("model_faults", chaos_rep.model_faults)
+                        .set("deadline_exceeded", chaos_rep.deadline_exceeded)
+                        .set("retries", chaos_rep.retries)
+                        .set("shed", chaos_rep.shed)
+                        .set("open_breakers_at_end", chaos_rep.open_breakers)
+                        .set("every_request_accounted", chaos_accounted)
+                        .clone(),
+                )
                 .clone(),
         )
         .set(
@@ -379,6 +454,9 @@ fn main() {
                 .set("swap_p99_ms", swap_rep.p99_latency_ms)
                 .set("swap_cutover_completed", swap_tel.completed)
                 .set("skew_steals", skew_rep.steals)
+                .set("chaos_every_request_accounted", chaos_accounted)
+                .set("chaos_respawns", chaos_rep.respawns)
+                .set("chaos_open_breakers_at_end", chaos_rep.open_breakers)
                 .set("all_converged", all_converged)
                 .clone(),
         );

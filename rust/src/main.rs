@@ -189,6 +189,13 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                      one mid-run version swap, and a bf16 reduced-precision cell \
                      gated on convergence + guard trip rate)",
                 )
+                .switch(
+                    "chaos",
+                    "replay a two-shard, two-model cell under a seeded fault plan \
+                     (injected panics, NaN residuals, stragglers) with the circuit \
+                     breaker armed; gates on zero lost requests, >= 1 worker \
+                     respawn, fault-free convergence, and every breaker closed",
+                )
                 .parse(rest)?;
             cmd_serve_bench(&a)
         }
@@ -381,6 +388,9 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
     if a.get_bool("smoke") {
         smoke_reduced_precision(a)?;
     }
+    if a.get_bool("chaos") {
+        chaos_cell(a)?;
+    }
     Ok(())
 }
 
@@ -503,6 +513,7 @@ fn serve_bench_run<E: Elem, EU: Elem, EV: Elem>(
                     fallback_ratio: None,
                     recalib: None,
                     col_budget,
+                    breaker: None,
                 },
             );
             e.calibrate(
@@ -567,7 +578,9 @@ fn serve_bench_run<E: Elem, EU: Elem, EV: Elem>(
             fallback_ratio: Some(10.0),
             recalib: Some(RecalibPolicy::default()),
             col_budget: None,
+            breaker: None,
         };
+        cfg.validate().map_err(|e| anyhow::anyhow!("routed engine config: {e}"))?;
         let mut router: Router<E, EU, EV> = Router::new(cfg);
         let keys: Vec<ModelKey> = (0..models as u32).map(|m| ModelKey::new(m, 0)).collect();
         for &k in &keys {
@@ -611,7 +624,11 @@ fn serve_bench_run<E: Elem, EU: Elem, EV: Elem>(
             fallback_ratio: Some(10.0),
             recalib: Some(RecalibPolicy::default()),
             col_budget: None,
+            breaker: None,
         };
+        engine_cfg
+            .validate()
+            .map_err(|e| anyhow::anyhow!("sharded engine config: {e}"))?;
         let sharded_models = models.max(2);
         let mk = move |m: u32, v: u32| -> SharedModel<E> {
             Arc::new(SynthDeq::<E>::new(
@@ -636,6 +653,7 @@ fn serve_bench_run<E: Elem, EU: Elem, EV: Elem>(
             } else {
                 None
             },
+            deadline: None,
         };
         eprintln!(
             "sharded: {shards} shards, {sharded_models} models, poisson {rate:.1} req/s, \
@@ -716,7 +734,10 @@ fn smoke_reduced_precision(a: &Args) -> anyhow::Result<()> {
         fallback_ratio: Some(10.0),
         recalib: Some(policy),
         col_budget: None,
+        breaker: None,
     };
+    cfg.validate()
+        .map_err(|e| anyhow::anyhow!("bf16 smoke engine config: {e}"))?;
     eprintln!("smoke: bf16 reduced-precision cell (guard armed, trip-rate bound {})",
         policy.trip_rate);
     let mut router: Router<f32, Bf16, Bf16> = Router::new(cfg);
@@ -770,6 +791,7 @@ fn smoke_reduced_precision(a: &Args) -> anyhow::Result<()> {
         max_wait: 1e-3,
         hot_share: Some(0.75),
         swap_at: None,
+        deadline: None,
     };
     let srep = run_sharded_open_loop::<f32, Bf16, Bf16>(cfg, &mk, &slc, seed ^ 0xB16);
     println!(
@@ -786,6 +808,127 @@ fn smoke_reduced_precision(a: &Args) -> anyhow::Result<()> {
         anyhow::bail!(
             "bf16 sharded smoke cell: {} estimates went stale on healthy traffic",
             srep.recalibrations
+        );
+    }
+    Ok(())
+}
+
+/// The CI chaos gate: a two-shard, two-model sharded open loop replayed
+/// under a seeded [`FaultPlan`] — injected model panics, NaN residual
+/// columns, and straggler delays — with the hardened §3 guard and the
+/// per-key circuit breaker armed. Victims are drawn from the first half of
+/// the schedule so the healthy tail must close any breaker the faults
+/// opened. Gates hard, in order: every submission resolves to exactly one
+/// typed outcome (zero lost, zero shed), the injected panic actually killed
+/// and respawned a worker, every injected fault surfaced as a typed
+/// failure, every fault-free request converged, and no breaker is still
+/// open at the end.
+fn chaos_cell(a: &Args) -> anyhow::Result<()> {
+    use shine::serve::{
+        run_sharded_open_loop_with, Arrivals, BreakerConfig, EngineConfig, FaultPlan,
+        RecalibPolicy, ShardedLoadConfig, SharedModel, SynthDeq,
+    };
+    use shine::solvers::session::SolverSpec;
+    use std::sync::Arc;
+
+    // The pinned chaos geometry (matches the smoke cells).
+    let (d, block, total, bsz) = (256, 32, 48, 8);
+    let (panics, nans, straggles) = (1, 2, 1);
+    let tol = a.get_f64("tol");
+    let solver = SolverSpec::parse(a.get("solver"))
+        .map_err(|e| anyhow::anyhow!("--solver: {e}"))?
+        .with_tol(tol)
+        .with_max_iters(200);
+    let seed = a.get_u64("seed");
+    let cfg = EngineConfig {
+        max_batch: bsz,
+        solver,
+        calib: SolverSpec::broyden(30).with_tol(tol).with_max_iters(60),
+        fallback_ratio: Some(10.0),
+        recalib: Some(RecalibPolicy::default()),
+        col_budget: None,
+        breaker: Some(BreakerConfig {
+            threshold: 2,
+            cooldown: 2,
+        }),
+    };
+    cfg.validate()
+        .map_err(|e| anyhow::anyhow!("chaos engine config: {e}"))?;
+    // Victims drawn from the first half of the schedule: the clean tail
+    // forces every opened breaker through half-open back to closed.
+    let plan = FaultPlan::seeded(seed ^ 0xC4A05, total / 2, panics, nans, straggles);
+    let mk = move |m: u32, v: u32| -> SharedModel<f64> {
+        Arc::new(SynthDeq::<f64>::new(
+            d,
+            block,
+            seed ^ m as u64 ^ ((v as u64) << 32),
+        ))
+    };
+    let lc = ShardedLoadConfig {
+        shards: 2,
+        models: 2,
+        total,
+        arrivals: Arrivals::Poisson { rate: 50_000.0 },
+        max_batch: bsz,
+        max_wait: 1e-3,
+        hot_share: None,
+        swap_at: None,
+        deadline: None,
+    };
+    eprintln!(
+        "chaos: 2 shards, 2 models, fault plan {panics} panic / {nans} NaN / \
+         {straggles} straggler over {total} requests (breaker threshold 2, cooldown 2)"
+    );
+    let rep =
+        run_sharded_open_loop_with::<f64, f64, f64>(cfg, &mk, &lc, Some(&plan), seed ^ 0xC4A05);
+    let ok = rep.requests
+        - rep.model_faults
+        - rep.worker_lost
+        - rep.unconverged
+        - rep.deadline_exceeded;
+    println!(
+        "chaos 2x: {} resolved ({ok} ok, {} model faults, {} worker lost, {} unconverged), \
+         {} respawns, {} retries, {} shed, {} breakers open at end",
+        rep.requests,
+        rep.model_faults,
+        rep.worker_lost,
+        rep.unconverged,
+        rep.respawns,
+        rep.retries,
+        rep.shed,
+        rep.open_breakers
+    );
+    if rep.requests + rep.shed != total {
+        anyhow::bail!(
+            "chaos cell lost requests: {} resolved + {} shed != {total} offered",
+            rep.requests,
+            rep.shed
+        );
+    }
+    if rep.shed != 0 {
+        anyhow::bail!("chaos cell shed {} submissions despite the retry budget", rep.shed);
+    }
+    if rep.respawns == 0 {
+        anyhow::bail!("chaos cell saw no worker respawn — the injected panic never landed");
+    }
+    // Every injected panic/NaN victim must surface as a typed failure. A
+    // NaN victim sharing the panicked batch resolves WorkerLost instead of
+    // ModelFault (batch composition is timing-dependent), so the two
+    // counts are gated jointly.
+    if rep.model_faults + rep.worker_lost < panics + nans {
+        anyhow::bail!(
+            "chaos cell: {} typed failures for {} injected panic/NaN victims",
+            rep.model_faults + rep.worker_lost,
+            panics + nans
+        );
+    }
+    if !rep.all_converged {
+        anyhow::bail!("chaos cell had unconverged fault-free requests (tol {tol})");
+    }
+    if rep.open_breakers != 0 {
+        anyhow::bail!(
+            "chaos cell ended with {} circuit breakers still open",
+            rep.open_breakers
         );
     }
     Ok(())

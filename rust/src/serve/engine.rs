@@ -21,6 +21,7 @@
 
 use crate::linalg::vecops::{nrm2, Elem};
 use crate::qn::{InvOp, LowRank};
+use crate::serve::scheduler::ConfigError;
 use crate::solvers::fixed_point::{swap_cols, ColStats};
 use crate::solvers::session::{EstimateHandle, FixedPointSolver, Session, SolverSpec};
 use crate::util::timer::Stopwatch;
@@ -42,6 +43,131 @@ impl Default for RecalibPolicy {
         RecalibPolicy {
             trip_rate: 0.25,
             min_cols: 8,
+        }
+    }
+}
+
+/// Per-key circuit breaker policy: how many consecutive faulted batches
+/// (non-finite residual/cotangent norms or a failed calibration) open the
+/// breaker, and how many degraded batches it serves before the half-open
+/// probe. Batch-granular and clock-free, so replays are deterministic.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive faulted batches before the breaker opens.
+    pub threshold: u32,
+    /// Degraded batches served while open before the half-open probe.
+    pub cooldown: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            threshold: 3,
+            cooldown: 4,
+        }
+    }
+}
+
+/// Circuit-breaker state ([`CircuitBreaker`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: the backward serves the cached SHINE estimate.
+    Closed,
+    /// Degrading: `remaining` more batches serve the Jacobian-free
+    /// direction before the half-open probe.
+    Open { remaining: u32 },
+    /// Probing: the next batch runs through the estimate again; a clean
+    /// batch closes the breaker, a faulted one re-opens it.
+    HalfOpen,
+}
+
+/// Graceful-degradation circuit breaker for one serving key.
+///
+/// A key whose model emits non-finite values (or whose calibration probe
+/// fails) would otherwise trip the §3 guard on every batch forever. The
+/// breaker counts *consecutive* faulted batches; at
+/// [`BreakerConfig::threshold`] it opens and the engine degrades the
+/// backward from the cached SHINE estimate to the guaranteed-cheap
+/// Jacobian-free direction (`w = dz` — the
+/// [`JacobianFree`](crate::solvers::session::Backward) variant) while the
+/// estimate itself is retained. After [`BreakerConfig::cooldown`] degraded
+/// batches it half-opens: one probe batch runs through the estimate, and a
+/// clean probe closes the breaker. Everything is counted in batches, not
+/// wall-clock, so a seeded fault plan replays bit-for-bit.
+#[derive(Clone, Copy, Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    strikes: u32,
+    trips: usize,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            state: BreakerState::Closed,
+            strikes: 0,
+            trips: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Whether the breaker currently degrades the backward (open only; the
+    /// half-open probe deliberately serves the estimate again).
+    pub fn is_open(&self) -> bool {
+        matches!(self.state, BreakerState::Open { .. })
+    }
+
+    /// Times the breaker has opened over its lifetime.
+    pub fn trips(&self) -> usize {
+        self.trips
+    }
+
+    /// Record one served batch (or one failed calibration, which counts as
+    /// a faulted batch): advances the Closed → Open → HalfOpen → Closed
+    /// cycle.
+    pub fn on_batch(&mut self, faulted: bool) {
+        match self.state {
+            BreakerState::Closed => {
+                if faulted {
+                    self.strikes += 1;
+                    if self.strikes >= self.cfg.threshold {
+                        self.state = BreakerState::Open {
+                            remaining: self.cfg.cooldown,
+                        };
+                        self.trips += 1;
+                    }
+                } else {
+                    self.strikes = 0;
+                }
+            }
+            BreakerState::Open { remaining } => {
+                // The batch just served degraded; burn one cooldown slot
+                // regardless of its health (degraded output is w = dz, so
+                // its health says nothing about the estimate).
+                if remaining <= 1 {
+                    self.state = BreakerState::HalfOpen;
+                } else {
+                    self.state = BreakerState::Open {
+                        remaining: remaining - 1,
+                    };
+                }
+            }
+            BreakerState::HalfOpen => {
+                if faulted {
+                    self.state = BreakerState::Open {
+                        remaining: self.cfg.cooldown,
+                    };
+                    self.trips += 1;
+                } else {
+                    self.state = BreakerState::Closed;
+                    self.strikes = 0;
+                }
+            }
         }
     }
 }
@@ -73,6 +199,11 @@ pub struct EngineConfig {
     /// back for re-admission. `None` disables eviction; the discrete
     /// [`ServeEngine::process`] path ignores this.
     pub col_budget: Option<usize>,
+    /// Per-key circuit breaker ([`CircuitBreaker`]): opens after
+    /// `threshold` consecutive faulted batches and degrades the backward to
+    /// the Jacobian-free direction while open. `None` disables breaking
+    /// (legacy behaviour — a sick key trips the §3 guard forever).
+    pub breaker: Option<BreakerConfig>,
 }
 
 impl Default for EngineConfig {
@@ -84,6 +215,7 @@ impl Default for EngineConfig {
             fallback_ratio: None,
             recalib: None,
             col_budget: None,
+            breaker: None,
         }
     }
 }
@@ -96,6 +228,45 @@ impl EngineConfig {
         self.solver = self.solver.with_tol(tol);
         self.calib = self.calib.with_tol(tol);
         self
+    }
+
+    /// Typed validation of every engine invariant
+    /// ([`ServeEngine::try_new`] calls this); malformed CLI input becomes
+    /// an error instead of an abort.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.max_batch == 0 {
+            return Err(ConfigError::ZeroMaxBatch);
+        }
+        // Only a quasi-Newton probe captures the inverse estimate
+        // `calibrate` stores.
+        if !matches!(
+            self.calib.method,
+            crate::solvers::session::SolverMethod::Broyden { .. }
+        ) {
+            return Err(ConfigError::NonBroydenCalibration);
+        }
+        if let Some(r) = self.fallback_ratio {
+            if !r.is_finite() || r <= 0.0 {
+                return Err(ConfigError::BadFallbackRatio(r));
+            }
+        }
+        if let Some(p) = self.recalib {
+            if !p.trip_rate.is_finite() || p.trip_rate <= 0.0 {
+                return Err(ConfigError::BadTripRate(p.trip_rate));
+            }
+            if p.min_cols == 0 {
+                return Err(ConfigError::ZeroMinCols);
+            }
+        }
+        if self.col_budget == Some(0) {
+            return Err(ConfigError::ZeroColBudget);
+        }
+        if let Some(bk) = self.breaker {
+            if bk.threshold == 0 {
+                return Err(ConfigError::ZeroBreakerThreshold);
+            }
+        }
+        Ok(())
     }
 }
 
@@ -135,6 +306,12 @@ pub struct StreamReport {
     pub col_iters_total: usize,
     /// Columns reverted to the Jacobian-free direction by the §3 guard.
     pub fallback_cols: usize,
+    /// Retired columns whose residual or cotangent norm was non-finite
+    /// (each counts as a guard trip and a circuit-breaker strike).
+    pub nonfinite_cols: usize,
+    /// Whether any wave of this call served the degraded (breaker-open)
+    /// Jacobian-free backward.
+    pub degraded: bool,
     /// Every finally-retired request converged.
     pub all_converged: bool,
     /// Whether the shared estimate crossed the staleness threshold as of
@@ -159,6 +336,14 @@ pub struct BatchReport {
     pub all_converged: bool,
     /// Columns reverted to the Jacobian-free direction by the guard.
     pub fallback_cols: usize,
+    /// Columns whose residual or cotangent norm was non-finite — the model
+    /// (or the caller's seed) emitted NaN/Inf. Each counts as a guard trip
+    /// and a circuit-breaker strike; none of them can poison
+    /// `fallback_rate`, which stays a finite integer ratio.
+    pub nonfinite_cols: usize,
+    /// Whether this batch served the degraded (breaker-open) Jacobian-free
+    /// backward instead of the cached SHINE estimate.
+    pub degraded: bool,
     /// This batch's guard trip rate (`fallback_cols / batch`).
     pub fallback_rate: f64,
     /// Whether the shared estimate crossed the staleness threshold
@@ -198,21 +383,29 @@ pub struct ServeEngine<E: Elem, EU: Elem = E, EV: Elem = EU> {
     guard_trips: usize,
     /// Calibrations performed over this engine's lifetime.
     calibrations: usize,
+    /// Graceful-degradation breaker (None when `cfg.breaker` is None).
+    breaker: Option<CircuitBreaker>,
 }
 
 impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
+    /// Build an engine, panicking on an invalid config (the in-process
+    /// construction path where a bad config is a programming error; CLI
+    /// surfaces go through [`ServeEngine::try_new`]).
     pub fn new(d: usize, cfg: EngineConfig) -> ServeEngine<E, EU, EV> {
-        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
-        // Fail at construction, not mid-service: only a quasi-Newton probe
-        // captures the inverse estimate `calibrate` stores.
-        assert!(
-            matches!(cfg.calib.method, crate::solvers::session::SolverMethod::Broyden { .. }),
-            "calibration spec must be a Broyden method (it must capture an inverse estimate)"
-        );
+        match Self::try_new(d, cfg) {
+            Ok(e) => e,
+            Err(e) => panic!("invalid engine config: {e}"),
+        }
+    }
+
+    /// Build an engine, rejecting an invalid config with a typed error
+    /// ([`EngineConfig::validate`]) instead of aborting the process.
+    pub fn try_new(d: usize, cfg: EngineConfig) -> Result<ServeEngine<E, EU, EV>, ConfigError> {
+        cfg.validate()?;
         let mut sess = Session::new();
         let mut solver = cfg.solver.build::<E>();
         solver.prepare_batch(d, cfg.max_batch, &mut sess);
-        ServeEngine {
+        Ok(ServeEngine {
             d,
             cfg,
             h: None,
@@ -221,7 +414,8 @@ impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
             guard_cols: 0,
             guard_trips: 0,
             calibrations: 0,
-        }
+            breaker: cfg.breaker.map(CircuitBreaker::new),
+        })
     }
 
     pub fn dim(&self) -> usize {
@@ -270,6 +464,17 @@ impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
         self.calibrations
     }
 
+    /// The graceful-degradation breaker, if configured.
+    pub fn breaker(&self) -> Option<&CircuitBreaker> {
+        self.breaker.as_ref()
+    }
+
+    /// Whether the breaker is currently open (degraded Jacobian-free
+    /// serving). `false` when no breaker is configured.
+    pub fn breaker_open(&self) -> bool {
+        self.breaker.as_ref().is_some_and(|bk| bk.is_open())
+    }
+
     /// Install an externally captured estimate (the router's per-key cache
     /// hand-off; tests use it to inject adversarial estimates), demoting it
     /// into the engine's panel storage layout. Resets the staleness
@@ -294,15 +499,30 @@ impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
         let mut g1 = g1;
         let out = probe.solve(&mut self.sess, &mut g1, z0);
         let stats = (out.iters, out.residual);
-        // Demote the freshly captured estimate into the serving layout —
-        // the one narrow-once conversion point of the reduced-precision
-        // path (bit-exact at the homogeneous default).
-        self.h = Some(
-            out.estimate
-                .expect("calibration probe must capture an inverse estimate")
-                .low_rank()
-                .convert(),
-        );
+        if out.residual_finite() {
+            // Demote the freshly captured estimate into the serving layout
+            // — the one narrow-once conversion point of the
+            // reduced-precision path (bit-exact at the homogeneous
+            // default).
+            self.h = Some(
+                out.estimate
+                    .expect("calibration probe must capture an inverse estimate")
+                    .low_rank()
+                    .convert(),
+            );
+            if let Some(bk) = self.breaker.as_mut() {
+                bk.on_batch(false);
+            }
+        } else {
+            // Failed calibration: the model emitted NaN/Inf under the
+            // probe. Whatever the probe captured approximates a garbage
+            // Jacobian — serve Jacobian-free until a healthy probe lands,
+            // and strike the breaker.
+            self.h = None;
+            if let Some(bk) = self.breaker.as_mut() {
+                bk.on_batch(true);
+            }
+        }
         self.guard_cols = 0;
         self.guard_trips = 0;
         self.calibrations += 1;
@@ -385,21 +605,34 @@ impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
         // Backward: the whole batch of cotangents through ONE multi-RHS
         // panel sweep against the shared forward estimate — this is the
         // SHINE serving contract (uncalibrated engines answer with the
-        // Jacobian-free identity direction).
+        // Jacobian-free identity direction). An open breaker degrades to
+        // the same Jacobian-free direction with the estimate retained.
+        // (Field access, not the accessor: `sess` above still borrows
+        // `self.sess` mutably.)
+        let degraded = self.breaker.as_ref().is_some_and(|bk| bk.is_open());
+        let mut nonfinite_cols = 0usize;
         match &self.h {
-            Some(h) => h.apply_t_multi_into(cotangents, w_out, sess.workspace()),
-            None => w_out.copy_from_slice(cotangents),
+            Some(h) if !degraded => h.apply_t_multi_into(cotangents, w_out, sess.workspace()),
+            _ => w_out.copy_from_slice(cotangents),
         }
         let mut fallback_cols = 0usize;
         if let Some(ratio) = self.cfg.fallback_ratio {
-            if self.h.is_some() {
+            if self.h.is_some() && !degraded {
                 for j in 0..b {
                     let dzn = nrm2(&cotangents[j * d..(j + 1) * d]);
                     let wn = nrm2(&w_out[j * d..(j + 1) * d]);
-                    if wn > ratio * dzn {
+                    // A non-finite norm on either side is an unconditional
+                    // trip: NaN fails every `>` comparison, so without the
+                    // explicit check a NaN column would sail through the
+                    // guard untouched.
+                    let broken = !dzn.is_finite() || !wn.is_finite();
+                    if broken || wn > ratio * dzn {
                         w_out[j * d..(j + 1) * d]
                             .copy_from_slice(&cotangents[j * d..(j + 1) * d]);
                         fallback_cols += 1;
+                        if broken {
+                            nonfinite_cols += 1;
+                        }
                     }
                 }
                 // Staleness tracking: every guarded column counts toward the
@@ -417,6 +650,15 @@ impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
             fwd_iters_max = fwd_iters_max.max(s.iters);
             fwd_col_iters_total += s.iters;
             all_converged &= s.converged;
+            if !s.residual.is_finite() {
+                nonfinite_cols += 1;
+            }
+        }
+        // One breaker observation per batch: any non-finite column is a
+        // strike; a clean batch resets the strike run (or closes a
+        // half-open breaker).
+        if let Some(bk) = self.breaker.as_mut() {
+            bk.on_batch(nonfinite_cols > 0);
         }
         BatchReport {
             batch: b,
@@ -424,6 +666,8 @@ impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
             fwd_col_iters_total,
             all_converged,
             fallback_cols,
+            nonfinite_cols,
+            degraded,
             fallback_rate: fallback_cols as f64 / b.max(1) as f64,
             estimate_stale: self.estimate_stale(),
             fwd_seconds,
@@ -537,15 +781,26 @@ impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
             // swapped-in column's residual moved with it).
             wave.clear();
             let mut bw = 0usize; // staged backward columns (non-evicted)
+            let mut wave_fault = false;
             let mut j = 0usize;
             while j < active {
                 let n = nrm2(&r[j * d..(j + 1) * d]);
+                // A non-finite residual can only get worse: retire the
+                // column now (as a final, unconverged outcome — never an
+                // eviction) instead of burning its whole budget on NaN
+                // sweeps. This is the mid-solve fault-eviction path.
+                let broken = !n.is_finite();
                 let converged = n <= tol;
                 let exhausted = !converged && iters_col[j] >= budgets[j];
                 let evict = !converged
                     && !exhausted
+                    && !broken
                     && self.cfg.col_budget.is_some_and(|cb| iters_col[j] >= cb);
-                if converged || exhausted || evict {
+                if broken {
+                    rep.nonfinite_cols += 1;
+                    wave_fault = true;
+                }
+                if converged || exhausted || evict || broken {
                     let wi = wave.len();
                     let st = ColStats {
                         iters: iters_col[j],
@@ -576,24 +831,36 @@ impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
             // then the §3 guard per column (the `process` contract).
             if bw > 0 {
                 let swb = Stopwatch::start();
+                let degraded = self.breaker_open();
+                if degraded {
+                    rep.degraded = true;
+                }
                 match &self.h {
-                    Some(h) => h.apply_t_multi_into(
+                    Some(h) if !degraded => h.apply_t_multi_into(
                         &stage_cot[..bw * d],
                         &mut stage_w[..bw * d],
                         self.sess.workspace(),
                     ),
-                    None => stage_w[..bw * d].copy_from_slice(&stage_cot[..bw * d]),
+                    _ => stage_w[..bw * d].copy_from_slice(&stage_cot[..bw * d]),
                 }
                 if let Some(ratio) = self.cfg.fallback_ratio {
-                    if self.h.is_some() {
+                    if self.h.is_some() && !degraded {
                         let mut trips = 0usize;
                         for k in 0..bw {
                             let dzn = nrm2(&stage_cot[k * d..(k + 1) * d]);
                             let wn = nrm2(&stage_w[k * d..(k + 1) * d]);
-                            if wn > ratio * dzn {
+                            // Non-finite on either side trips
+                            // unconditionally (NaN fails `>`, see
+                            // `process`).
+                            let broken = !dzn.is_finite() || !wn.is_finite();
+                            if broken || wn > ratio * dzn {
                                 stage_w[k * d..(k + 1) * d]
                                     .copy_from_slice(&stage_cot[k * d..(k + 1) * d]);
                                 trips += 1;
+                                if broken {
+                                    rep.nonfinite_cols += 1;
+                                    wave_fault = true;
+                                }
                             }
                         }
                         self.guard_cols += bw;
@@ -602,6 +869,13 @@ impl<E: Elem, EU: Elem, EV: Elem> ServeEngine<E, EU, EV> {
                     }
                 }
                 rep.bwd_seconds += swb.elapsed();
+            }
+            // One breaker observation per retirement wave (the streaming
+            // analogue of a served batch).
+            if !wave.is_empty() {
+                if let Some(bk) = self.breaker.as_mut() {
+                    bk.on_batch(wave_fault);
+                }
             }
             // --- hand every retired column back to the caller.
             let mut k = 0usize;
@@ -1092,5 +1366,244 @@ mod tests {
         );
         assert_eq!(rep3.fallback_cols, 0);
         assert_eq!(w, cots);
+    }
+
+    #[test]
+    fn engine_config_rejections_are_typed() {
+        let ok = EngineConfig::default();
+        assert!(ok.validate().is_ok());
+        let mut c = ok;
+        c.max_batch = 0;
+        assert_eq!(c.validate(), Err(ConfigError::ZeroMaxBatch));
+        let mut c = ok;
+        c.calib = SolverSpec::picard(1.0);
+        assert_eq!(c.validate(), Err(ConfigError::NonBroydenCalibration));
+        assert!(ServeEngine::<f64>::try_new(8, c).is_err());
+        let mut c = ok;
+        c.fallback_ratio = Some(f64::NAN);
+        assert!(matches!(c.validate(), Err(ConfigError::BadFallbackRatio(r)) if r.is_nan()));
+        let mut c = ok;
+        c.fallback_ratio = Some(-1.0);
+        assert_eq!(c.validate(), Err(ConfigError::BadFallbackRatio(-1.0)));
+        let mut c = ok;
+        c.recalib = Some(RecalibPolicy {
+            trip_rate: 0.0,
+            min_cols: 8,
+        });
+        assert_eq!(c.validate(), Err(ConfigError::BadTripRate(0.0)));
+        let mut c = ok;
+        c.recalib = Some(RecalibPolicy {
+            trip_rate: 0.25,
+            min_cols: 0,
+        });
+        assert_eq!(c.validate(), Err(ConfigError::ZeroMinCols));
+        let mut c = ok;
+        c.col_budget = Some(0);
+        assert_eq!(c.validate(), Err(ConfigError::ZeroColBudget));
+        let mut c = ok;
+        c.breaker = Some(BreakerConfig {
+            threshold: 0,
+            cooldown: 2,
+        });
+        assert_eq!(c.validate(), Err(ConfigError::ZeroBreakerThreshold));
+    }
+
+    #[test]
+    fn nan_cotangent_trips_guard_and_keeps_rate_finite() {
+        // Regression for the NaN hole: `wn > ratio * dzn` is false when
+        // either norm is NaN, so a poisoned column used to sail through
+        // the guard and (worse) could make fallback_rate NaN. It must
+        // count as a trip and a non-finite column instead.
+        let d = 8;
+        let b = 2;
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: b,
+                fallback_ratio: Some(1.5),
+                ..Default::default()
+            }
+            .with_tol(1e-9),
+        );
+        eng.install_estimate(blown_estimate(d));
+        let bias = vec![0.1; d];
+        let mut zs = vec![0.0; b * d];
+        let mut cots = vec![0.0; b * d];
+        cots[0] = f64::NAN; // col 0 poisoned
+        cots[d + 1] = 1.0; // col 1 healthy and orthogonal to the factor
+        let mut w = vec![0.0; b * d];
+        let mut stats = vec![ColStats::default(); b];
+        let rep = eng.process(
+            |block: &[f64], _ids: &[usize], out: &mut [f64]| test_g(&bias, block, d, out),
+            &mut zs,
+            &cots,
+            &mut w,
+            &mut stats,
+        );
+        assert_eq!(rep.fallback_cols, 1, "NaN column must count as a trip");
+        assert_eq!(rep.nonfinite_cols, 1);
+        assert!(rep.fallback_rate.is_finite());
+        assert!((rep.fallback_rate - 0.5).abs() < 1e-12);
+        assert_eq!(w[d + 1], 1.0, "healthy column unaffected");
+    }
+
+    #[test]
+    fn breaker_opens_degrades_and_recovers() {
+        // Two faulted batches open the breaker; while open the backward is
+        // the Jacobian-free direction even though the estimate is retained;
+        // after the cooldown the half-open probe runs through the estimate
+        // and a clean batch closes the breaker.
+        let d = 8;
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: 1,
+                fallback_ratio: Some(1e6), // guard present but lenient
+                breaker: Some(BreakerConfig {
+                    threshold: 2,
+                    cooldown: 1,
+                }),
+                ..Default::default()
+            }
+            .with_tol(1e-9),
+        );
+        let bias = vec![0.1; d];
+        let g = |block: &[f64], out: &mut [f64]| test_g(&bias, block, d, out);
+        eng.calibrate(|z: &[f64], out: &mut [f64]| g(z, out), &vec![0.0; d]);
+        let mut run = |eng: &mut ServeEngine<f64>, cot0: f64| {
+            let mut zs = vec![0.0; d];
+            let mut cots = vec![0.0; d];
+            cots[0] = cot0;
+            let mut w = vec![0.0; d];
+            let mut stats = vec![ColStats::default(); 1];
+            let rep = eng.process(
+                |block: &[f64], _ids: &[usize], out: &mut [f64]| test_g(&bias, block, d, out),
+                &mut zs,
+                &cots,
+                &mut w,
+                &mut stats,
+            );
+            (rep, w, cots)
+        };
+        // Strike 1 and 2: NaN cotangents.
+        let (r1, _, _) = run(&mut eng, f64::NAN);
+        assert_eq!(r1.nonfinite_cols, 1);
+        assert!(!eng.breaker_open(), "one strike below threshold");
+        let (_, _, _) = run(&mut eng, f64::NAN);
+        assert!(eng.breaker_open(), "threshold reached: breaker open");
+        assert_eq!(eng.breaker().unwrap().trips(), 1);
+        // Open: a clean batch serves degraded (w == dz bit-for-bit despite
+        // the installed estimate) and burns the cooldown slot.
+        let (r3, w3, c3) = run(&mut eng, 1.0);
+        assert!(r3.degraded);
+        assert_eq!(w3, c3, "degraded backward is Jacobian-free");
+        assert!(eng.estimate().is_some(), "estimate retained while open");
+        assert_eq!(eng.breaker().unwrap().state(), BreakerState::HalfOpen);
+        // Half-open probe: clean batch through the estimate closes it.
+        let (r4, w4, c4) = run(&mut eng, 1.0);
+        assert!(!r4.degraded);
+        assert_ne!(w4, c4, "probe ran through the estimate");
+        assert_eq!(eng.breaker().unwrap().state(), BreakerState::Closed);
+        assert!(!eng.breaker_open());
+    }
+
+    #[test]
+    fn failed_calibration_serves_jacobian_free_and_strikes_breaker() {
+        // A model emitting NaN under the probe must not install a garbage
+        // estimate: the engine keeps serving the Jacobian-free direction
+        // and the breaker takes the strike.
+        let d = 8;
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: 1,
+                breaker: Some(BreakerConfig {
+                    threshold: 1,
+                    cooldown: 2,
+                }),
+                ..Default::default()
+            }
+            .with_tol(1e-9),
+        );
+        let (_, rn) = eng.calibrate(
+            |_z: &[f64], out: &mut [f64]| out.iter_mut().for_each(|x| *x = f64::NAN),
+            &vec![0.0; d],
+        );
+        assert!(!rn.is_finite());
+        assert!(eng.estimate().is_none(), "garbage estimate must not install");
+        assert_eq!(eng.calibrations(), 1);
+        assert!(eng.breaker_open(), "threshold-1 breaker opens on the failure");
+        // A healthy recalibration later installs and (via the cooldown →
+        // half-open → close cycle) recovers.
+        let bias = vec![0.1; d];
+        let (_, rn2) = eng.calibrate(
+            |z: &[f64], out: &mut [f64]| test_g(&bias, z, d, out),
+            &vec![0.0; d],
+        );
+        assert!(rn2.is_finite());
+        assert!(eng.estimate().is_some());
+    }
+
+    #[test]
+    fn streaming_retires_nonfinite_columns_early() {
+        // A request whose residual goes NaN mid-stream retires immediately
+        // as a final unconverged outcome (no budget burn, no eviction) and
+        // neighbours are untouched.
+        let d = 10;
+        let mut rng = Rng::new(11);
+        let bias = rng.normal_vec(d);
+        let mut eng: ServeEngine<f64> = ServeEngine::new(
+            d,
+            EngineConfig {
+                max_batch: 2,
+                ..Default::default()
+            }
+            .with_tol(1e-10),
+        );
+        let n_req = 3usize;
+        let bad_id = 1usize;
+        let z0s: Vec<Vec<f64>> = (0..n_req).map(|_| rng.normal_vec(d)).collect();
+        let mut next = 0usize;
+        let mut outcomes: Vec<Option<ColStats>> = vec![None; n_req];
+        let rep = eng.process_streaming(
+            |block, ids, out| {
+                test_g(&bias, block, d, out);
+                for (p, &id) in ids.iter().enumerate() {
+                    if id == bad_id {
+                        out[p * d..(p + 1) * d].iter_mut().for_each(|x| *x = f64::NAN);
+                    }
+                }
+            },
+            || 2,
+            |z, c| {
+                if next >= n_req {
+                    return None;
+                }
+                z.copy_from_slice(&z0s[next]);
+                c.iter_mut().for_each(|x| *x = 0.0);
+                let a = Admission {
+                    id: next,
+                    budget: 200,
+                };
+                next += 1;
+                Some(a)
+            },
+            |id, _z, _w, st, evicted| {
+                assert!(!evicted, "broken columns must retire, not evict");
+                outcomes[id] = Some(st);
+            },
+        );
+        assert_eq!(rep.served, n_req);
+        assert!(rep.nonfinite_cols >= 1);
+        assert!(!rep.all_converged);
+        let bad = outcomes[bad_id].expect("poisoned request still resolves");
+        assert!(!bad.converged);
+        assert!(!bad.residual.is_finite());
+        assert!(bad.iters < 5, "no budget burn on NaN: {} iters", bad.iters);
+        for (id, o) in outcomes.iter().enumerate() {
+            if id != bad_id {
+                assert!(o.expect("healthy request resolves").converged);
+            }
+        }
     }
 }

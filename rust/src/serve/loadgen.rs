@@ -34,8 +34,10 @@ use crate::linalg::vecops::Elem;
 use crate::serve::engine::{Admission, EngineConfig, ServeEngine};
 use crate::serve::router::{KeyedScheduler, ModelKey, Router};
 use crate::serve::scheduler::{Scheduler, SchedulerConfig};
-use crate::serve::shard::{ShardConfig, ShardRequest, ShardedRouter, SharedModel};
-use crate::serve::synth::SynthDeq;
+use crate::serve::shard::{
+    ServeError, ShardConfig, ShardRequest, ShardedRouter, SharedModel, SubmitError,
+};
+use crate::serve::synth::{FaultPlan, FaultyModel, SynthDeq};
 use crate::solvers::fixed_point::ColStats;
 use crate::solvers::session::SolverSpec;
 use crate::util::rng::Rng;
@@ -213,6 +215,7 @@ pub fn run_suite<E: Elem, EU: Elem, EV: Elem>(
                 fallback_ratio: None,
                 recalib: None,
                 col_budget: None,
+                breaker: None,
             },
         );
         engine.calibrate(
@@ -729,6 +732,9 @@ pub struct ShardedLoadConfig {
     /// Submission index at which model 0 rolls to version 1 via the
     /// zero-downtime [`ShardedRouter::swap`]. `None` = no swap.
     pub swap_at: Option<usize>,
+    /// Relative per-request deadline in seconds (absolute deadline =
+    /// submission instant + this). `None` = requests never expire.
+    pub deadline: Option<f64>,
 }
 
 /// How the served traffic of model 0 partitioned across a mid-run swap.
@@ -770,7 +776,24 @@ pub struct ShardedReport {
     pub per_shard_served: Vec<usize>,
     /// Present when [`ShardedLoadConfig::swap_at`] was set.
     pub swap: Option<SwapTelemetry>,
+    /// Every ok response's forward solve converged (failed responses are
+    /// accounted separately below).
     pub all_converged: bool,
+    /// Responses carrying a typed [`ServeError`], by kind.
+    pub deadline_exceeded: usize,
+    pub model_faults: usize,
+    pub worker_lost: usize,
+    pub unconverged: usize,
+    /// `QueueFull` retries performed by the driver's bounded
+    /// exponential-backoff policy.
+    pub retries: usize,
+    /// Requests shed after exhausting the retry budget (plus admissions
+    /// bounced for an already-expired deadline).
+    pub shed: usize,
+    /// Worker respawns across all shards (supervision events).
+    pub respawns: usize,
+    /// Circuit breakers open across all shards at the end of the run.
+    pub open_breakers: usize,
 }
 
 /// Replay one precomputed open-loop schedule through a [`ShardedRouter`]
@@ -789,6 +812,28 @@ pub fn run_sharded_open_loop<E: Elem, EU: Elem, EV: Elem>(
     lc: &ShardedLoadConfig,
     seed: u64,
 ) -> ShardedReport {
+    run_sharded_open_loop_with::<E, EU, EV>(engine, mk_model, lc, None, seed)
+}
+
+/// Bounded retry policy for `QueueFull` admissions: exponential backoff
+/// starting at the scheduler's `retry_after` hint, at most this many
+/// attempts before the request is shed.
+const SUBMIT_RETRIES: usize = 4;
+
+/// [`run_sharded_open_loop`] with an optional chaos schedule: when `faults`
+/// is set, every registered model is wrapped in a [`FaultyModel`] executing
+/// the shared seeded [`FaultPlan`] (panics, NaN columns, stragglers keyed
+/// by request id), and the report carries the typed failure counts. The
+/// driver applies the bounded retry-with-exponential-backoff policy on
+/// `QueueFull` and counts what it sheds — every request of the schedule is
+/// accounted for exactly once, served or not.
+pub fn run_sharded_open_loop_with<E: Elem, EU: Elem, EV: Elem>(
+    engine: EngineConfig,
+    mk_model: &dyn Fn(u32, u32) -> SharedModel<E>,
+    lc: &ShardedLoadConfig,
+    faults: Option<&FaultPlan>,
+    seed: u64,
+) -> ShardedReport {
     assert!(lc.shards >= 1 && lc.models >= 1 && lc.total >= 1 && lc.max_batch >= 1);
     if let Some(at) = lc.swap_at {
         assert!(at < lc.total, "swap_at must fall inside the schedule");
@@ -801,6 +846,12 @@ pub fn run_sharded_open_loop<E: Elem, EU: Elem, EV: Elem>(
     };
     let router: ShardedRouter<E, EU, EV> =
         ShardedRouter::new(ShardConfig::new(lc.shards, engine, sched));
+    let wrap = |model: SharedModel<E>| -> SharedModel<E> {
+        match faults {
+            Some(plan) => std::sync::Arc::new(FaultyModel::new(model, plan.clone())),
+            None => model,
+        }
+    };
     let d = mk_model(0, 0).dim();
     for m in 0..lc.models as u32 {
         let model = mk_model(m, 0);
@@ -809,7 +860,7 @@ pub fn run_sharded_open_loop<E: Elem, EU: Elem, EV: Elem>(
             d,
             "sharded driver requires one shared fixed-point dimension"
         );
-        router.register(ModelKey::new(m, 0), model);
+        router.register(ModelKey::new(m, 0), wrap(model));
     }
     // Precompute the offered load — arrival instants, per-request model
     // choice, cotangents — identical across shard counts at one seed.
@@ -834,7 +885,9 @@ pub fn run_sharded_open_loop<E: Elem, EU: Elem, EV: Elem>(
         .collect();
     let cots: Vec<E> = (0..lc.total * d).map(|_| E::from_f64(rng.normal())).collect();
 
-    let mut routed_key: Vec<ModelKey> = Vec::with_capacity(lc.total);
+    let mut routed_key: Vec<Option<ModelKey>> = Vec::with_capacity(lc.total);
+    let mut retries = 0usize;
+    let mut shed = 0usize;
     let sw = Stopwatch::start();
     for i in 0..lc.total {
         let lead = arrivals[i] - sw.elapsed();
@@ -845,19 +898,37 @@ pub fn run_sharded_open_loop<E: Elem, EU: Elem, EV: Elem>(
             // Zero-downtime roll of the hot model: calibrates in the
             // background while version 0 keeps serving — submissions below
             // keep flowing and route to whichever version is live.
-            router.swap(ModelKey::new(0, 1), mk_model(0, 1));
+            router.swap(ModelKey::new(0, 1), wrap(mk_model(0, 1)));
         }
-        let req = ShardRequest {
-            id: i,
-            z0: vec![E::ZERO; d],
-            cotangent: cots[i * d..(i + 1) * d].to_vec(),
+        let mut req = ShardRequest::new(i, vec![E::ZERO; d], cots[i * d..(i + 1) * d].to_vec());
+        req.deadline = lc.deadline.map(|dl| router.now() + dl);
+        // Bounded retry with exponential backoff from the queue's
+        // retry_after hint; a request that exhausts the budget (or whose
+        // deadline lapses before admission) is shed and counted.
+        let mut attempt = 0usize;
+        let key = loop {
+            match router.submit(model_of[i], req) {
+                Ok(key) => break Some(key),
+                Err(SubmitError::QueueFull {
+                    req: r,
+                    retry_after,
+                }) if attempt < SUBMIT_RETRIES => {
+                    attempt += 1;
+                    retries += 1;
+                    let backoff = retry_after * (1 << (attempt - 1)) as f64;
+                    std::thread::sleep(std::time::Duration::from_secs_f64(backoff));
+                    req = r;
+                }
+                Err(_) => break None,
+            }
         };
-        let key = router
-            .submit(model_of[i], req)
-            .expect("per-shard queues sized for the whole schedule");
+        if key.is_none() {
+            shed += 1;
+        }
         routed_key.push(key);
     }
-    let responses = router.collect(lc.total);
+    let submitted = routed_key.iter().filter(|k| k.is_some()).count();
+    let responses = router.collect(submitted);
     let seconds = sw.elapsed();
     if lc.swap_at.is_some() {
         // Let a calibration that outlasted the schedule finish before the
@@ -865,24 +936,33 @@ pub fn run_sharded_open_loop<E: Elem, EU: Elem, EV: Elem>(
         router.wait_live(ModelKey::new(0, 1));
     }
     let shard_stats = router.shard_stats();
-    let latencies: Vec<f64> = responses.iter().map(|r| r.completed - r.enqueued).collect();
-    let all_converged = responses.iter().all(|r| r.stats.converged);
+    let latencies: Vec<f64> = responses
+        .iter()
+        .filter(|r| r.ok())
+        .map(|r| r.completed - r.enqueued)
+        .collect();
+    let all_converged = responses
+        .iter()
+        .filter(|r| r.ok())
+        .all(|r| r.stats.converged);
+    let count_err = |e: ServeError| responses.iter().filter(|r| r.error == Some(e)).count();
     let swap = lc.swap_at.map(|at| {
         let old = ModelKey::new(0, 0);
         let new = ModelKey::new(0, 1);
         SwapTelemetry {
             requested_at: at,
-            cutover_at: routed_key.iter().position(|k| *k == new),
+            cutover_at: routed_key.iter().position(|k| *k == Some(new)),
             old_served: responses.iter().filter(|r| r.key == old).count(),
             new_served: responses.iter().filter(|r| r.key == new).count(),
             completed: router.live_version(0) == Some(1),
         }
     });
+    let served = responses.iter().filter(|r| r.ok()).count();
     let rep = ShardedReport {
         shards: lc.shards,
         requests: responses.len(),
         seconds,
-        rps: responses.len() as f64 / seconds.max(1e-12),
+        rps: served as f64 / seconds.max(1e-12),
         offered_rps: lc.arrivals.rate(),
         p50_latency_ms: stats::median(&latencies) * 1e3,
         p95_latency_ms: stats::quantile(&latencies, 0.95) * 1e3,
@@ -893,6 +973,14 @@ pub fn run_sharded_open_loop<E: Elem, EU: Elem, EV: Elem>(
         per_shard_served: shard_stats.iter().map(|s| s.served).collect(),
         swap,
         all_converged,
+        deadline_exceeded: count_err(ServeError::DeadlineExceeded),
+        model_faults: count_err(ServeError::ModelFault),
+        worker_lost: count_err(ServeError::WorkerLost),
+        unconverged: count_err(ServeError::Unconverged),
+        retries,
+        shed,
+        respawns: shard_stats.iter().map(|s| s.respawns).sum(),
+        open_breakers: shard_stats.iter().map(|s| s.open_breakers).sum(),
     };
     router.shutdown();
     rep
@@ -1023,6 +1111,7 @@ mod tests {
             max_wait: 1e-4,
             hot_share: Some(0.75),
             swap_at: Some(12),
+            deadline: None,
         };
         let rep = run_sharded_open_loop::<f64, f64, f64>(engine, &mk, &lc, 3);
         assert_eq!(rep.requests, 24);
@@ -1039,5 +1128,51 @@ mod tests {
         // Two models at v0 plus the rolled version ⇒ at least three
         // calibrations (steals may add re-homed copies on top).
         assert!(rep.calibrations >= 3);
+        // Clean run: no typed failures, nothing shed, no respawns.
+        assert_eq!(rep.model_faults + rep.worker_lost + rep.deadline_exceeded, 0);
+        assert_eq!(rep.shed, 0);
+        assert_eq!(rep.respawns, 0);
+    }
+
+    #[test]
+    fn sharded_chaos_run_accounts_for_every_request() {
+        use crate::serve::engine::BreakerConfig;
+        let d = 32;
+        let engine = EngineConfig {
+            max_batch: 4,
+            breaker: Some(BreakerConfig {
+                threshold: 2,
+                cooldown: 2,
+            }),
+            ..Default::default()
+        }
+        .with_tol(1e-6);
+        let mk = |m: u32, v: u32| -> SharedModel<f64> {
+            Arc::new(SynthDeq::<f64>::new(d, 8, 7 + 13 * m as u64 + 101 * v as u64))
+        };
+        let total = 32;
+        let lc = ShardedLoadConfig {
+            shards: 2,
+            models: 2,
+            total,
+            arrivals: Arrivals::Poisson { rate: 50_000.0 },
+            max_batch: 4,
+            max_wait: 1e-4,
+            hot_share: None,
+            swap_at: None,
+            deadline: None,
+        };
+        let plan = FaultPlan::seeded(11, total, 1, 2, 1);
+        let rep = run_sharded_open_loop_with::<f64, f64, f64>(engine, &mk, &lc, Some(&plan), 3);
+        // Every submitted request resolved to exactly one typed outcome.
+        assert_eq!(rep.requests, total - rep.shed);
+        assert_eq!(rep.shed, 0, "queues sized for the schedule");
+        assert!(rep.worker_lost >= 1, "panic victim's batch reported");
+        assert!(rep.respawns >= 1, "supervision respawned the worker");
+        // 1 panic + 2 NaN victims: each resolves as WorkerLost or
+        // ModelFault (a NaN victim sharing the panicked batch is lost, not
+        // faulted — batch composition is timing-dependent).
+        assert!(rep.model_faults + rep.worker_lost >= 3);
+        assert!(rep.all_converged, "surviving traffic converged");
     }
 }

@@ -119,6 +119,26 @@
 //! re-calibrated (the continuous re-calibration policy the [`Router`] runs
 //! per key).
 //!
+//! **Failure domains** (see `docs/adr/004-fault-tolerant-serving.md`): the
+//! serve tier isolates faults at three scopes. *Per column* — a NaN/Inf
+//! residual or cotangent answer is confined to its own column by the
+//! hardened §3 guard and retired early, typed as
+//! [`ServeError::ModelFault`]; neighbours in the same batch stay
+//! bit-exact. *Per key* — K consecutive faulted batches open that key's
+//! [`CircuitBreaker`], which serves the backward Jacobian-free (Fung et
+//! al.) while the estimate rests, half-open probes, and closes on a
+//! healthy batch; other keys' engines never notice. *Per shard* — a
+//! panicking model residual is caught by the worker's `catch_unwind`
+//! supervision: in-flight requests resolve as
+//! [`ServeError::WorkerLost`] (never a hung `collect`), the dead shard's
+//! queues re-home through the steal machinery, and the worker respawns
+//! with bit-identical lazily-rebuilt engines. Every submitted request
+//! resolves to exactly one typed outcome ([`ShardResponse::error`]),
+//! deadlines are enforced at admission and drain
+//! ([`ServeError::DeadlineExceeded`]), and the whole surface is exercised
+//! by the seeded [`FaultPlan`] chaos harness (`serve-bench --chaos`,
+//! pinned in `rust/tests/serve_faults.rs`).
+//!
 //! **Session API**: the engine is a consumer of
 //! [`crate::solvers::session`] — [`EngineConfig`] carries the forward and
 //! calibration [`SolverSpec`](crate::solvers::session::SolverSpec)s (the
@@ -141,16 +161,23 @@ pub mod scheduler;
 pub mod shard;
 pub mod synth;
 
-pub use engine::{Admission, BatchReport, EngineConfig, RecalibPolicy, ServeEngine, StreamReport};
+pub use engine::{
+    Admission, BatchReport, BreakerConfig, BreakerState, CircuitBreaker, EngineConfig,
+    RecalibPolicy, ServeEngine, StreamReport,
+};
 pub use loadgen::{
-    run_closed_loop, run_open_loop, run_routed_closed_loop, run_sharded_open_loop, run_suite,
-    Arrivals, LoadConfig, OpenLoopConfig, OpenLoopReport, RoutedLoadConfig, RoutedReport,
-    ShardedLoadConfig, ShardedReport, SuiteRow, SwapTelemetry, ThroughputReport,
+    run_closed_loop, run_open_loop, run_routed_closed_loop, run_sharded_open_loop,
+    run_sharded_open_loop_with, run_suite, Arrivals, LoadConfig, OpenLoopConfig, OpenLoopReport,
+    RoutedLoadConfig, RoutedReport, ShardedLoadConfig, ShardedReport, SuiteRow, SwapTelemetry,
+    ThroughputReport,
 };
 pub use router::{BatchResidual, KeyedScheduler, ModelKey, Router};
-pub use scheduler::{AdaptiveWidth, AdaptiveWidthConfig, Scheduler, SchedulerConfig};
-pub use shard::{
-    ShardConfig, ShardRequest, ShardResponse, ShardStats, ShardedRouter, SharedModel, SubmitError,
-    STEAL_COOLDOWN_BATCHES,
+pub use scheduler::{
+    AdaptiveWidth, AdaptiveWidthConfig, ConfigError, QueueEntry, Rejected, SchedStats, Scheduler,
+    SchedulerConfig,
 };
-pub use synth::SynthDeq;
+pub use shard::{
+    ServeError, ShardConfig, ShardRequest, ShardResponse, ShardStats, ShardedRouter, SharedModel,
+    SubmitError, STEAL_COOLDOWN_BATCHES,
+};
+pub use synth::{Fault, FaultPlan, FaultyModel, SynthDeq};

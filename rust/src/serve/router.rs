@@ -35,7 +35,10 @@
 
 use crate::linalg::vecops::Elem;
 use crate::serve::engine::{BatchReport, EngineConfig, ServeEngine};
-use crate::serve::scheduler::{AdaptiveWidth, AdaptiveWidthConfig, SchedulerConfig};
+use crate::serve::scheduler::{
+    AdaptiveWidth, AdaptiveWidthConfig, ConfigError, QueueEntry, Rejected, SchedStats,
+    SchedulerConfig,
+};
 use crate::serve::synth::SynthDeq;
 use crate::solvers::fixed_point::ColStats;
 use anyhow::{anyhow, Result};
@@ -70,6 +73,15 @@ pub trait BatchResidual<E: Elem> {
     /// Evaluate the residual over `k` stacked d-columns (see
     /// [`crate::serve::SynthDeq::residual_batch`] for the contract).
     fn residual_batch(&self, zs: &[E], k: usize, out: &mut [E]);
+    /// Id-aware variant: `ids[p]` names the request whose state occupies
+    /// column `p`. The default ignores the ids and delegates; the
+    /// fault-injection wrapper ([`crate::serve::synth::FaultyModel`])
+    /// overrides it to target scheduled request indices. Calibration probes
+    /// always go through the id-less entry point, so injected faults never
+    /// perturb the deterministic z₀ = 0 probe.
+    fn residual_batch_ids(&self, zs: &[E], ids: &[usize], out: &mut [E]) {
+        self.residual_batch(zs, ids.len(), out);
+    }
 }
 
 impl<E: Elem> BatchResidual<E> for SynthDeq<E> {
@@ -86,11 +98,11 @@ impl<E: Elem> BatchResidual<E> for SynthDeq<E> {
 /// cold keys still cannot grow the pool without bound.
 const SPARE_QUEUE_CAP: usize = 8;
 
-/// One live per-key FIFO: `(arrival, payload)` pairs in admission order.
+/// One live per-key FIFO: [`QueueEntry`]s in admission order.
 #[derive(Debug)]
 struct KeyQueue<T> {
     key: ModelKey,
-    q: VecDeque<(f64, T)>,
+    q: VecDeque<QueueEntry<T>>,
 }
 
 /// One admission surface for every model: per-key bounded FIFO queues
@@ -123,32 +135,72 @@ pub struct KeyedScheduler<T> {
     keys: Vec<KeyQueue<T>>,
     /// Recycled buffers from garbage-collected keys (bounded by
     /// [`SPARE_QUEUE_CAP`]).
-    spare: Vec<VecDeque<(f64, T)>>,
+    spare: Vec<VecDeque<QueueEntry<T>>>,
     /// Total queued requests across keys (the backpressure quantity).
     len: usize,
-    pub accepted: usize,
-    pub rejected: usize,
+    /// Admission telemetry (accepted / rejected / deadline-expired).
+    pub stats: SchedStats,
+    /// Deadline-expired entries diverted at drain time, awaiting pickup as
+    /// `(key, queue latency at GC, payload)` — the caller owes each one a
+    /// typed `DeadlineExceeded` outcome.
+    expired: Vec<(ModelKey, f64, T)>,
+    /// Drain-rate EWMA (items/second) backing the `retry_after` hint.
+    last_drain: Option<f64>,
+    drain_rate: f64,
 }
 
 impl<T> KeyedScheduler<T> {
-    pub fn new(cfg: SchedulerConfig) -> KeyedScheduler<T> {
-        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
-        assert!(
-            cfg.queue_cap >= cfg.max_batch,
-            "queue_cap must fit at least one full batch"
-        );
-        KeyedScheduler {
+    /// Validating constructor: malformed configs come back as
+    /// [`ConfigError`] instead of aborting the process.
+    pub fn try_new(cfg: SchedulerConfig) -> Result<KeyedScheduler<T>, ConfigError> {
+        cfg.validate()?;
+        Ok(KeyedScheduler {
             cfg,
             keys: Vec::new(),
             spare: Vec::new(),
             len: 0,
-            accepted: 0,
-            rejected: 0,
-        }
+            stats: SchedStats::default(),
+            expired: Vec::new(),
+            last_drain: None,
+            drain_rate: 0.0,
+        })
+    }
+
+    /// Panicking wrapper over [`KeyedScheduler::try_new`] for in-crate
+    /// callers with static configs.
+    pub fn new(cfg: SchedulerConfig) -> KeyedScheduler<T> {
+        KeyedScheduler::try_new(cfg).unwrap_or_else(|e| panic!("invalid scheduler config: {e}"))
     }
 
     pub fn config(&self) -> &SchedulerConfig {
         &self.cfg
+    }
+
+    /// Backoff hint for a rejected push: the reciprocal of the recent drain
+    /// rate (≈ time for one slot to free), clamped to [1µs, 1s]; before any
+    /// drain has been observed, `max_wait` (the batch-release cadence).
+    pub fn retry_after(&self) -> f64 {
+        if self.drain_rate > 0.0 {
+            (1.0 / self.drain_rate).clamp(1e-6, 1.0)
+        } else {
+            self.cfg.max_wait.max(1e-6)
+        }
+    }
+
+    fn note_drain(&mut self, now: f64, n: usize) {
+        if n == 0 {
+            return;
+        }
+        if let Some(prev) = self.last_drain {
+            let dt = (now - prev).max(1e-9);
+            let inst = n as f64 / dt;
+            self.drain_rate = if self.drain_rate > 0.0 {
+                0.7 * self.drain_rate + 0.3 * inst
+            } else {
+                inst
+            };
+        }
+        self.last_drain = Some(now);
     }
 
     pub fn len(&self) -> usize {
@@ -185,22 +237,45 @@ impl<T> KeyedScheduler<T> {
     }
 
     /// Admit a request for `key` at time `now`; rejects (returning the
-    /// payload) when the shared capacity is exhausted.
-    pub fn push(&mut self, now: f64, key: ModelKey, item: T) -> Result<(), T> {
+    /// payload plus a [`Rejected::retry_after`] backoff hint) when the
+    /// shared capacity is exhausted.
+    pub fn push(&mut self, now: f64, key: ModelKey, item: T) -> Result<(), Rejected<T>> {
+        self.push_deadline(now, f64::INFINITY, key, item)
+    }
+
+    /// [`KeyedScheduler::push`] with an absolute deadline: an entry still
+    /// queued when the clock passes `deadline` is GC'd at drain time
+    /// (counted in [`SchedStats::expired`], handed back via
+    /// [`KeyedScheduler::take_expired`] for a typed outcome).
+    pub fn push_deadline(
+        &mut self,
+        now: f64,
+        deadline: f64,
+        key: ModelKey,
+        item: T,
+    ) -> Result<(), Rejected<T>> {
         if self.len >= self.cfg.queue_cap {
-            self.rejected += 1;
-            return Err(item);
+            self.stats.rejected += 1;
+            return Err(Rejected {
+                item,
+                retry_after: self.retry_after(),
+            });
         }
+        let entry = QueueEntry {
+            at: now,
+            deadline,
+            item,
+        };
         match self.keys.iter_mut().find(|e| e.key == key) {
-            Some(e) => e.q.push_back((now, item)),
+            Some(e) => e.q.push_back(entry),
             None => {
                 let mut q = self.spare.pop().unwrap_or_default();
-                q.push_back((now, item));
+                q.push_back(entry);
                 self.keys.push(KeyQueue { key, q });
             }
         }
         self.len += 1;
-        self.accepted += 1;
+        self.stats.accepted += 1;
         Ok(())
     }
 
@@ -221,9 +296,9 @@ impl<T> KeyedScheduler<T> {
     fn oldest_front(&self) -> Option<(f64, ModelKey)> {
         let mut best: Option<(f64, ModelKey)> = None;
         for e in &self.keys {
-            if let Some((t, _)) = e.q.front() {
-                if best.map(|(bt, _)| *t < bt).unwrap_or(true) {
-                    best = Some((*t, e.key));
+            if let Some(front) = e.q.front() {
+                if best.map(|(bt, _)| front.at < bt).unwrap_or(true) {
+                    best = Some((front.at, e.key));
                 }
             }
         }
@@ -288,31 +363,64 @@ impl<T> KeyedScheduler<T> {
     /// front. Other keys' requests keep their positions.
     pub fn pop_front_key(&mut self, key: ModelKey, now: f64) -> Option<(f64, T)> {
         let pos = self.keys.iter().position(|e| e.key == key)?;
-        let (t, item) = self.keys[pos].q.pop_front()?;
-        self.len -= 1;
+        // Deadline-expired fronts are GC'd on the way (counted + diverted),
+        // so streaming admission never spends a column on a dead request.
+        let live = loop {
+            match self.keys[pos].q.pop_front() {
+                None => break None,
+                Some(e) if e.deadline <= now => {
+                    self.len -= 1;
+                    self.stats.expired += 1;
+                    self.expired.push((key, now - e.at, e.item));
+                }
+                Some(e) => {
+                    self.len -= 1;
+                    break Some((now - e.at, e.item));
+                }
+            }
+        };
+        self.note_drain(now, 1);
         if self.keys[pos].q.is_empty() {
             self.gc_at(pos);
         }
-        Some((now - t, item))
+        live
     }
 
     /// Drain up to `n` oldest requests of `key` (FIFO within the key) into
     /// `out` as `(queue latency at now, payload)` pairs. Other keys'
     /// requests keep their positions; emptied queues are collected (no
-    /// allocation beyond the caller's reused `out`).
+    /// allocation beyond the caller's reused `out`). Entries whose deadline
+    /// has passed are GC'd instead of released: counted in
+    /// [`SchedStats::expired`] and diverted to
+    /// [`KeyedScheduler::take_expired`], so the batch may come back smaller
+    /// than `n`.
     pub fn drain_key(&mut self, key: ModelKey, n: usize, now: f64, out: &mut Vec<(f64, T)>) {
         let Some(pos) = self.keys.iter().position(|e| e.key == key) else {
             return;
         };
         let take = n.min(self.keys[pos].q.len());
         for _ in 0..take {
-            let (t, item) = self.keys[pos].q.pop_front().expect("len checked");
-            out.push((now - t, item));
+            let e = self.keys[pos].q.pop_front().expect("len checked");
+            if e.deadline <= now {
+                self.stats.expired += 1;
+                self.expired.push((key, now - e.at, e.item));
+            } else {
+                out.push((now - e.at, e.item));
+            }
         }
         self.len -= take;
+        self.note_drain(now, take);
         if self.keys[pos].q.is_empty() {
             self.gc_at(pos);
         }
+    }
+
+    /// Hand over deadline-expired entries GC'd by earlier drains as
+    /// `(key, queue latency at GC, payload)` triples. The caller owes each
+    /// one a typed `DeadlineExceeded` outcome — GC never silently drops a
+    /// request.
+    pub fn take_expired(&mut self, out: &mut Vec<(ModelKey, f64, T)>) {
+        out.append(&mut self.expired);
     }
 
     /// Remove `key`'s entire queue — arrival stamps and FIFO order intact —
@@ -320,7 +428,7 @@ impl<T> KeyedScheduler<T> {
     /// This is the whole-queue work-stealing primitive: stealing the queue
     /// (rather than individual items) is what lets FIFO-within-key survive a
     /// shard migration. Returns `None` if the key holds nothing.
-    pub fn take_queue(&mut self, key: ModelKey) -> Option<VecDeque<(f64, T)>> {
+    pub fn take_queue(&mut self, key: ModelKey) -> Option<VecDeque<QueueEntry<T>>> {
         let pos = self.keys.iter().position(|e| e.key == key)?;
         let kq = self.keys.remove(pos);
         self.len -= kq.q.len();
@@ -333,7 +441,7 @@ impl<T> KeyedScheduler<T> {
     /// one scheduler at a time. Injection is exempt from `queue_cap`
     /// backpressure: the requests were already admitted once, and a steal
     /// must never drop them.
-    pub fn inject_queue(&mut self, key: ModelKey, q: VecDeque<(f64, T)>) {
+    pub fn inject_queue(&mut self, key: ModelKey, q: VecDeque<QueueEntry<T>>) {
         assert!(
             self.entry(key).is_none(),
             "inject_queue: {key} already live in this scheduler"
@@ -436,6 +544,18 @@ impl<E: Elem, EU: Elem, EV: Elem> Router<E, EU, EV> {
             .find(|e| e.key == key)
             .map(|e| e.recalibrations)
             .unwrap_or(0)
+    }
+
+    /// Whether `key`'s circuit breaker is currently open — the engine is
+    /// serving degraded Jacobian-free backwards instead of the cached SHINE
+    /// estimate (see [`crate::serve::CircuitBreaker`]). `false` when the
+    /// key is unregistered or the breaker is disabled.
+    pub fn breaker_open(&self, key: ModelKey) -> bool {
+        self.entries
+            .iter()
+            .find(|e| e.key == key)
+            .map(|e| e.engine.breaker_open())
+            .unwrap_or(false)
     }
 
     /// Register (or roll) a model snapshot: builds its engine, calibrates
@@ -592,9 +712,37 @@ mod tests {
         let mut s = ks(2, 1.0, 2);
         assert!(s.push(0.0, A, 1).is_ok());
         assert!(s.push(0.0, B, 2).is_ok());
-        assert_eq!(s.push(0.0, A, 3), Err(3));
-        assert_eq!(s.accepted, 2);
-        assert_eq!(s.rejected, 1);
+        let r = s.push(0.0, A, 3).unwrap_err();
+        assert_eq!(r.item, 3);
+        assert!(r.retry_after > 0.0, "rejection carries a backoff hint");
+        assert_eq!(s.stats.accepted, 2);
+        assert_eq!(s.stats.rejected, 1);
+    }
+
+    #[test]
+    fn keyed_scheduler_gcs_expired_entries_at_drain() {
+        let mut s = ks(4, 0.1, 16);
+        s.push_deadline(0.0, 0.5, A, 10).unwrap(); // dead by drain time
+        s.push(0.0, A, 20).unwrap();
+        s.push_deadline(0.0, 9.0, A, 30).unwrap(); // still live
+        let (k, n) = s.ready(1.0).expect("oldest waited past max_wait");
+        assert_eq!(k, A);
+        let mut out = Vec::new();
+        s.drain_key(k, n, 1.0, &mut out);
+        // The expired entry never reaches the batch…
+        assert_eq!(out.iter().map(|&(_, p)| p).collect::<Vec<_>>(), vec![20, 30]);
+        assert_eq!(s.stats.expired, 1);
+        // …but is handed back, attributed to its key, for a typed outcome.
+        let mut exp = Vec::new();
+        s.take_expired(&mut exp);
+        assert_eq!(exp.len(), 1);
+        assert_eq!((exp[0].0, exp[0].2), (A, 10));
+        assert!(s.is_empty());
+        // pop_front_key GCs expired fronts too (streaming admission).
+        s.push_deadline(2.0, 2.1, B, 40).unwrap();
+        s.push(2.0, B, 50).unwrap();
+        assert_eq!(s.pop_front_key(B, 3.0).map(|(_, p)| p), Some(50));
+        assert_eq!(s.stats.expired, 2);
     }
 
     #[test]
@@ -619,7 +767,7 @@ mod tests {
         // Buffers are recycled, not hoarded: the spare pool stays bounded.
         assert!(s.spare_queues() <= 8, "spare pool bounded");
         assert!(s.spare_queues() >= 1, "drained buffers are recycled");
-        assert_eq!(s.accepted, 500);
+        assert_eq!(s.stats.accepted, 500);
     }
 
     #[test]

@@ -4,8 +4,105 @@
 //! The scheduler is deliberately clock-agnostic — every operation takes
 //! `now` as a parameter — so the same code runs against wall time in the
 //! serving loop and against a manual clock in tests.
+//!
+//! Admission is part of the typed failure surface (see
+//! `docs/adr/004-fault-tolerant-serving.md`): a rejected push carries a
+//! [`Rejected::retry_after`] hint derived from the queue's recent drain
+//! rate, entries may carry a **deadline** past which they are garbage
+//! collected at drain time instead of being served, and [`SchedStats`]
+//! counts every admission outcome so dropped work is visible, never silent.
 
 use std::collections::VecDeque;
+use std::fmt;
+
+/// Typed rejection for malformed serving configuration. Constructors used
+/// on CLI-reachable paths validate through `try_new`/`validate` and return
+/// this instead of `assert!`-aborting the process; the panicking `new`
+/// wrappers remain for in-crate callers whose configs are static.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ConfigError {
+    /// `max_batch` must be at least 1.
+    ZeroMaxBatch,
+    /// `queue_cap` must fit at least one full batch.
+    QueueCapBelowBatch { queue_cap: usize, max_batch: usize },
+    /// `max_wait` must be finite and non-negative.
+    BadMaxWait(f64),
+    /// `min_width` must be at least 1.
+    ZeroMinWidth,
+    /// `max_width` must be at least `min_width`.
+    WidthBoundsInverted { min_width: usize, max_width: usize },
+    /// EWMA smoothing factor must lie in (0, 1].
+    BadAlpha(f64),
+    /// `target_latency` must be finite and positive.
+    BadTargetLatency(f64),
+    /// The calibration spec must be Broyden — only it captures an estimate.
+    NonBroydenCalibration,
+    /// `fallback_ratio` must be finite and positive.
+    BadFallbackRatio(f64),
+    /// `RecalibPolicy::trip_rate` must be finite and positive.
+    BadTripRate(f64),
+    /// `RecalibPolicy::min_cols` must be at least 1.
+    ZeroMinCols,
+    /// `col_budget` must be at least 1 iteration.
+    ZeroColBudget,
+    /// Circuit-breaker strike threshold must be at least 1.
+    ZeroBreakerThreshold,
+    /// A sharded router needs at least one shard.
+    ZeroShards,
+    /// The scheduler may not release batches wider than the engine accepts.
+    SchedBatchExceedsEngine { sched_batch: usize, engine_batch: usize },
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            ConfigError::ZeroMaxBatch => write!(f, "max_batch must be at least 1"),
+            ConfigError::QueueCapBelowBatch {
+                queue_cap,
+                max_batch,
+            } => write!(
+                f,
+                "queue_cap {queue_cap} must fit at least one full batch (max_batch {max_batch})"
+            ),
+            ConfigError::BadMaxWait(v) => {
+                write!(f, "max_wait must be finite and non-negative, got {v}")
+            }
+            ConfigError::ZeroMinWidth => write!(f, "min_width must be at least 1"),
+            ConfigError::WidthBoundsInverted {
+                min_width,
+                max_width,
+            } => write!(f, "max_width {max_width} must be at least min_width {min_width}"),
+            ConfigError::BadAlpha(v) => write!(f, "alpha must be in (0, 1], got {v}"),
+            ConfigError::BadTargetLatency(v) => {
+                write!(f, "target_latency must be finite and positive, got {v}")
+            }
+            ConfigError::NonBroydenCalibration => {
+                write!(f, "calibration solver must be Broyden (it captures the estimate)")
+            }
+            ConfigError::BadFallbackRatio(v) => {
+                write!(f, "fallback_ratio must be finite and positive, got {v}")
+            }
+            ConfigError::BadTripRate(v) => {
+                write!(f, "recalib trip_rate must be finite and positive, got {v}")
+            }
+            ConfigError::ZeroMinCols => write!(f, "recalib min_cols must be at least 1"),
+            ConfigError::ZeroColBudget => write!(f, "col_budget must be at least 1"),
+            ConfigError::ZeroBreakerThreshold => {
+                write!(f, "breaker threshold must be at least 1")
+            }
+            ConfigError::ZeroShards => write!(f, "need at least one shard"),
+            ConfigError::SchedBatchExceedsEngine {
+                sched_batch,
+                engine_batch,
+            } => write!(
+                f,
+                "scheduler max_batch {sched_batch} cannot exceed engine max_batch {engine_batch}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerConfig {
@@ -18,6 +115,27 @@ pub struct SchedulerConfig {
     pub queue_cap: usize,
 }
 
+impl SchedulerConfig {
+    /// Typed validation backing [`Scheduler::try_new`] (and the keyed
+    /// variant) — malformed CLI input surfaces as [`ConfigError`] instead
+    /// of an `assert!` abort.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.max_batch < 1 {
+            return Err(ConfigError::ZeroMaxBatch);
+        }
+        if self.queue_cap < self.max_batch {
+            return Err(ConfigError::QueueCapBelowBatch {
+                queue_cap: self.queue_cap,
+                max_batch: self.max_batch,
+            });
+        }
+        if !self.max_wait.is_finite() || self.max_wait < 0.0 {
+            return Err(ConfigError::BadMaxWait(self.max_wait));
+        }
+        Ok(())
+    }
+}
+
 impl Default for SchedulerConfig {
     fn default() -> Self {
         SchedulerConfig {
@@ -28,32 +146,73 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Admission telemetry for a bounded queue. `expired` counts
+/// deadline-expired entries garbage-collected at drain time (each is handed
+/// back through `take_expired` so the caller can publish a typed
+/// `DeadlineExceeded` outcome — GC never silently drops a request).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    pub accepted: usize,
+    pub rejected: usize,
+    pub expired: usize,
+}
+
+/// One queued request: arrival stamp, absolute deadline (`f64::INFINITY`
+/// when none) and the payload. Public because whole queues migrate between
+/// shards via `KeyedScheduler::take_queue` / `inject_queue`.
+#[derive(Clone, Debug)]
+pub struct QueueEntry<T> {
+    pub at: f64,
+    pub deadline: f64,
+    pub item: T,
+}
+
+/// A rejected push: the payload handed back plus a backoff hint (seconds)
+/// derived from the queue's recent drain rate — roughly the time for one
+/// slot to free. Callers retry after the hint (see the bounded
+/// exponential-backoff policy in `serve::loadgen`) or shed the request.
+#[derive(Debug)]
+pub struct Rejected<T> {
+    pub item: T,
+    pub retry_after: f64,
+}
+
 /// Bounded FIFO request queue with batch-formation policy. Generic over the
 /// request payload (the serving loop uses small client ids and keeps the
 /// heavy state in preallocated blocks).
 #[derive(Debug)]
 pub struct Scheduler<T> {
     cfg: SchedulerConfig,
-    /// (arrival time, payload), oldest at the front.
-    queue: VecDeque<(f64, T)>,
+    /// Oldest at the front.
+    queue: VecDeque<QueueEntry<T>>,
     /// Admission telemetry.
-    pub accepted: usize,
-    pub rejected: usize,
+    pub stats: SchedStats,
+    /// Deadline-expired entries diverted at drain time, awaiting pickup.
+    expired: Vec<(f64, T)>,
+    /// Drain-rate EWMA (items/second) backing the `retry_after` hint.
+    last_drain: Option<f64>,
+    drain_rate: f64,
 }
 
 impl<T> Scheduler<T> {
-    pub fn new(cfg: SchedulerConfig) -> Scheduler<T> {
-        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
-        assert!(
-            cfg.queue_cap >= cfg.max_batch,
-            "queue_cap must fit at least one full batch"
-        );
-        Scheduler {
+    /// Validating constructor: malformed configs come back as
+    /// [`ConfigError`] instead of aborting the process.
+    pub fn try_new(cfg: SchedulerConfig) -> Result<Scheduler<T>, ConfigError> {
+        cfg.validate()?;
+        Ok(Scheduler {
             cfg,
             queue: VecDeque::with_capacity(cfg.queue_cap),
-            accepted: 0,
-            rejected: 0,
-        }
+            stats: SchedStats::default(),
+            expired: Vec::new(),
+            last_drain: None,
+            drain_rate: 0.0,
+        })
+    }
+
+    /// Panicking wrapper over [`Scheduler::try_new`] for in-crate callers
+    /// with static configs.
+    pub fn new(cfg: SchedulerConfig) -> Scheduler<T> {
+        Scheduler::try_new(cfg).unwrap_or_else(|e| panic!("invalid scheduler config: {e}"))
     }
 
     pub fn config(&self) -> &SchedulerConfig {
@@ -68,16 +227,57 @@ impl<T> Scheduler<T> {
         self.queue.is_empty()
     }
 
-    /// Admit a request at time `now`. Rejects (returning the payload) when
-    /// the bounded queue is full — callers shed load instead of queueing
-    /// unboundedly.
-    pub fn push(&mut self, now: f64, item: T) -> Result<(), T> {
-        if self.queue.len() >= self.cfg.queue_cap {
-            self.rejected += 1;
-            return Err(item);
+    /// Backoff hint for a rejected push: the reciprocal of the recent drain
+    /// rate (≈ time for one slot to free), clamped to [1µs, 1s]; before any
+    /// drain has been observed, `max_wait` (the batch-release cadence).
+    pub fn retry_after(&self) -> f64 {
+        if self.drain_rate > 0.0 {
+            (1.0 / self.drain_rate).clamp(1e-6, 1.0)
+        } else {
+            self.cfg.max_wait.max(1e-6)
         }
-        self.queue.push_back((now, item));
-        self.accepted += 1;
+    }
+
+    fn note_drain(&mut self, now: f64, n: usize) {
+        if n == 0 {
+            return;
+        }
+        if let Some(prev) = self.last_drain {
+            let dt = (now - prev).max(1e-9);
+            let inst = n as f64 / dt;
+            self.drain_rate = if self.drain_rate > 0.0 {
+                0.7 * self.drain_rate + 0.3 * inst
+            } else {
+                inst
+            };
+        }
+        self.last_drain = Some(now);
+    }
+
+    /// Admit a request at time `now`. Rejects when the bounded queue is
+    /// full — callers shed load (or back off for
+    /// [`Rejected::retry_after`]) instead of queueing unboundedly.
+    pub fn push(&mut self, now: f64, item: T) -> Result<(), Rejected<T>> {
+        self.push_deadline(now, f64::INFINITY, item)
+    }
+
+    /// [`Scheduler::push`] with an absolute deadline: an entry still queued
+    /// when `now` passes `deadline` is GC'd at drain time (counted in
+    /// [`SchedStats::expired`], handed back via [`Scheduler::take_expired`]).
+    pub fn push_deadline(&mut self, now: f64, deadline: f64, item: T) -> Result<(), Rejected<T>> {
+        if self.queue.len() >= self.cfg.queue_cap {
+            self.stats.rejected += 1;
+            return Err(Rejected {
+                item,
+                retry_after: self.retry_after(),
+            });
+        }
+        self.queue.push_back(QueueEntry {
+            at: now,
+            deadline,
+            item,
+        });
+        self.stats.accepted += 1;
         Ok(())
     }
 
@@ -92,7 +292,7 @@ impl<T> Scheduler<T> {
         if n >= self.cfg.max_batch {
             return self.cfg.max_batch;
         }
-        let oldest = self.queue.front().expect("non-empty").0;
+        let oldest = self.queue.front().expect("non-empty").at;
         if now - oldest >= self.cfg.max_wait {
             n
         } else {
@@ -107,16 +307,33 @@ impl<T> Scheduler<T> {
         if self.queue.is_empty() || self.queue.len() >= self.cfg.max_batch {
             return None;
         }
-        Some(self.queue.front().expect("non-empty").0 + self.cfg.max_wait)
+        Some(self.queue.front().expect("non-empty").at + self.cfg.max_wait)
     }
 
     /// Drain up to `n` oldest requests (FIFO) into `out` as
-    /// `(queue latency at now, payload)` pairs.
+    /// `(queue latency at now, payload)` pairs. Entries whose deadline has
+    /// passed are GC'd instead: counted in [`SchedStats::expired`] and
+    /// diverted to the expired buffer ([`Scheduler::take_expired`]), so the
+    /// released batch may be smaller than `n`.
     pub fn drain_into(&mut self, n: usize, now: f64, out: &mut Vec<(f64, T)>) {
-        for _ in 0..n.min(self.queue.len()) {
-            let (t, item) = self.queue.pop_front().expect("len checked");
-            out.push((now - t, item));
+        let take = n.min(self.queue.len());
+        for _ in 0..take {
+            let e = self.queue.pop_front().expect("len checked");
+            if e.deadline <= now {
+                self.stats.expired += 1;
+                self.expired.push((now - e.at, e.item));
+            } else {
+                out.push((now - e.at, e.item));
+            }
         }
+        self.note_drain(now, take);
+    }
+
+    /// Hand over deadline-expired entries GC'd by earlier drains as
+    /// `(queue latency at GC, payload)` pairs. The caller owes each one a
+    /// typed `DeadlineExceeded` outcome.
+    pub fn take_expired(&mut self, out: &mut Vec<(f64, T)>) {
+        out.append(&mut self.expired);
     }
 }
 
@@ -132,6 +349,28 @@ pub struct AdaptiveWidthConfig {
     pub target_latency: f64,
     /// EWMA smoothing factor in (0, 1]; 1 = no smoothing.
     pub alpha: f64,
+}
+
+impl AdaptiveWidthConfig {
+    /// Typed validation backing [`AdaptiveWidth::try_new`].
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.min_width < 1 {
+            return Err(ConfigError::ZeroMinWidth);
+        }
+        if self.max_width < self.min_width {
+            return Err(ConfigError::WidthBoundsInverted {
+                min_width: self.min_width,
+                max_width: self.max_width,
+            });
+        }
+        if !(self.alpha > 0.0 && self.alpha <= 1.0) {
+            return Err(ConfigError::BadAlpha(self.alpha));
+        }
+        if !self.target_latency.is_finite() || self.target_latency <= 0.0 {
+            return Err(ConfigError::BadTargetLatency(self.target_latency));
+        }
+        Ok(())
+    }
 }
 
 impl Default for AdaptiveWidthConfig {
@@ -161,24 +400,22 @@ pub struct AdaptiveWidth {
 }
 
 impl AdaptiveWidth {
-    /// Starts wide (at `max_width`): under light load width barely matters,
-    /// and under heavy load the first over-target observation halves it.
-    pub fn new(cfg: AdaptiveWidthConfig) -> AdaptiveWidth {
-        assert!(cfg.min_width >= 1, "min_width must be at least 1");
-        assert!(
-            cfg.max_width >= cfg.min_width,
-            "max_width must be at least min_width"
-        );
-        assert!(
-            cfg.alpha > 0.0 && cfg.alpha <= 1.0,
-            "alpha must be in (0, 1]"
-        );
-        assert!(cfg.target_latency > 0.0, "target_latency must be positive");
-        AdaptiveWidth {
+    /// Validating constructor; starts wide (at `max_width`): under light
+    /// load width barely matters, and under heavy load the first
+    /// over-target observation halves it.
+    pub fn try_new(cfg: AdaptiveWidthConfig) -> Result<AdaptiveWidth, ConfigError> {
+        cfg.validate()?;
+        Ok(AdaptiveWidth {
             cfg,
             width: cfg.max_width,
             ewma: None,
-        }
+        })
+    }
+
+    /// Panicking wrapper over [`AdaptiveWidth::try_new`] for in-crate
+    /// callers with static configs.
+    pub fn new(cfg: AdaptiveWidthConfig) -> AdaptiveWidth {
+        AdaptiveWidth::try_new(cfg).unwrap_or_else(|e| panic!("invalid width config: {e}"))
     }
 
     pub fn config(&self) -> &AdaptiveWidthConfig {
@@ -199,7 +436,12 @@ impl AdaptiveWidth {
     /// Feed one per-request service-latency observation (seconds) and
     /// update the width: multiplicative decrease above target, additive
     /// increase below 0.7 × target, hold in the comfort band between.
+    /// Non-finite observations (a faulting model's NaN timings) are
+    /// discarded — one poisoned sample must not wedge the EWMA forever.
     pub fn observe(&mut self, latency_s: f64) {
+        if !latency_s.is_finite() {
+            return;
+        }
         let e = match self.ewma {
             Some(prev) => prev + self.cfg.alpha * (latency_s - prev),
             None => latency_s,
@@ -258,13 +500,128 @@ mod tests {
         assert!(s.push(0.0, 1).is_ok());
         assert!(s.push(0.0, 2).is_ok());
         assert!(s.push(0.0, 3).is_ok());
-        assert_eq!(s.push(0.0, 4), Err(4));
-        assert_eq!(s.accepted, 3);
-        assert_eq!(s.rejected, 1);
+        let r = s.push(0.0, 4).unwrap_err();
+        assert_eq!(r.item, 4);
+        assert_eq!(s.stats.accepted, 3);
+        assert_eq!(s.stats.rejected, 1);
         // Draining frees capacity.
         let mut out = Vec::new();
         s.drain_into(2, 0.0, &mut out);
         assert!(s.push(0.0, 4).is_ok());
+    }
+
+    #[test]
+    fn rejection_carries_drain_rate_retry_hint() {
+        let mut s = sched(2, 0.25, 2);
+        // No drain history yet: the hint falls back to max_wait.
+        s.push(0.0, 1).unwrap();
+        s.push(0.0, 2).unwrap();
+        let r = s.push(0.0, 3).unwrap_err();
+        assert_eq!(r.retry_after, 0.25);
+        // Two drains 1s apart at 2 items/drain → rate 2/s → hint 0.5s.
+        let mut out = Vec::new();
+        s.drain_into(2, 1.0, &mut out); // sets the baseline stamp
+        s.push(1.0, 4).unwrap();
+        s.push(1.0, 5).unwrap();
+        out.clear();
+        s.drain_into(2, 2.0, &mut out); // 2 items over 1s → 2 items/s
+        s.push(2.0, 6).unwrap();
+        s.push(2.0, 7).unwrap();
+        let r = s.push(2.0, 8).unwrap_err();
+        assert!((r.retry_after - 0.5).abs() < 1e-12, "hint {}", r.retry_after);
+    }
+
+    #[test]
+    fn expired_entries_are_gcd_at_drain_and_counted() {
+        let mut s = sched(4, 0.1, 16);
+        s.push_deadline(0.0, 0.5, 10).unwrap(); // expires at 0.5
+        s.push(0.0, 20).unwrap(); // no deadline
+        s.push_deadline(0.0, 5.0, 30).unwrap(); // still live at drain
+        let mut out = Vec::new();
+        s.drain_into(s.ready(1.0), 1.0, &mut out);
+        // The expired entry never reaches the batch…
+        assert_eq!(out.iter().map(|&(_, x)| x).collect::<Vec<_>>(), vec![20, 30]);
+        assert_eq!(s.stats.expired, 1);
+        // …but is handed back for a typed DeadlineExceeded outcome.
+        let mut exp = Vec::new();
+        s.take_expired(&mut exp);
+        assert_eq!(exp.len(), 1);
+        assert_eq!(exp[0].1, 10);
+        assert_eq!(exp[0].0, 1.0); // queue latency at GC
+        let mut again = Vec::new();
+        s.take_expired(&mut again);
+        assert!(again.is_empty(), "expired buffer drains once");
+    }
+
+    #[test]
+    fn config_rejections_are_typed() {
+        let bad_batch = SchedulerConfig {
+            max_batch: 0,
+            ..SchedulerConfig::default()
+        };
+        assert_eq!(
+            Scheduler::<u32>::try_new(bad_batch).err(),
+            Some(ConfigError::ZeroMaxBatch)
+        );
+        let bad_cap = SchedulerConfig {
+            max_batch: 8,
+            queue_cap: 4,
+            ..SchedulerConfig::default()
+        };
+        assert_eq!(
+            Scheduler::<u32>::try_new(bad_cap).err(),
+            Some(ConfigError::QueueCapBelowBatch {
+                queue_cap: 4,
+                max_batch: 8
+            })
+        );
+        let bad_wait = SchedulerConfig {
+            max_wait: f64::NAN,
+            ..SchedulerConfig::default()
+        };
+        assert!(matches!(
+            Scheduler::<u32>::try_new(bad_wait).err(),
+            Some(ConfigError::BadMaxWait(w)) if w.is_nan()
+        ));
+    }
+
+    #[test]
+    fn width_config_rejections_are_typed() {
+        let base = AdaptiveWidthConfig::default();
+        let cases = [
+            (
+                AdaptiveWidthConfig {
+                    min_width: 0,
+                    ..base
+                },
+                ConfigError::ZeroMinWidth,
+            ),
+            (
+                AdaptiveWidthConfig {
+                    min_width: 8,
+                    max_width: 4,
+                    ..base
+                },
+                ConfigError::WidthBoundsInverted {
+                    min_width: 8,
+                    max_width: 4,
+                },
+            ),
+            (
+                AdaptiveWidthConfig { alpha: 0.0, ..base },
+                ConfigError::BadAlpha(0.0),
+            ),
+            (
+                AdaptiveWidthConfig {
+                    target_latency: f64::INFINITY,
+                    ..base
+                },
+                ConfigError::BadTargetLatency(f64::INFINITY),
+            ),
+        ];
+        for (cfg, want) in cases {
+            assert_eq!(AdaptiveWidth::try_new(cfg).err(), Some(want));
+        }
     }
 
     #[test]
@@ -310,6 +667,20 @@ mod tests {
             aw.observe(5e-3);
         }
         assert_eq!(aw.width(), 1, "multiplicative decrease floors at min");
+    }
+
+    #[test]
+    fn adaptive_width_ignores_non_finite_latency() {
+        let mut aw = AdaptiveWidth::new(AdaptiveWidthConfig {
+            alpha: 1.0,
+            ..AdaptiveWidthConfig::default()
+        });
+        aw.observe(1e-4);
+        let (w, e) = (aw.width(), aw.ewma_latency());
+        aw.observe(f64::NAN);
+        aw.observe(f64::INFINITY);
+        assert_eq!(aw.width(), w, "poisoned samples must not move the width");
+        assert_eq!(aw.ewma_latency(), e, "poisoned samples must not wedge the EWMA");
     }
 
     #[test]

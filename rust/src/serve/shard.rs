@@ -84,20 +84,66 @@
 use crate::linalg::vecops::Elem;
 use crate::serve::engine::{EngineConfig, ServeEngine};
 use crate::serve::router::{BatchResidual, KeyedScheduler, ModelKey};
-use crate::serve::scheduler::SchedulerConfig;
+use crate::serve::scheduler::{ConfigError, SchedulerConfig};
 use crate::solvers::fixed_point::ColStats;
 use crate::util::threads;
 use crate::util::timer::Stopwatch;
 use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Duration;
+
+/// Lock a mutex, recovering from poison: a panicking worker must not make
+/// the shared state permanently unreachable (supervision recovers the
+/// in-flight casualties explicitly; the data under the lock is always left
+/// structurally valid because panics can only originate in model residual
+/// evaluations, never mid-mutation of scheduler or registry state).
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// A model shared with the shard workers. `Send + Sync` because several
 /// shards may evaluate the residual concurrently (the model is immutable
 /// parameter state; all mutable solve state is engine-local).
 pub type SharedModel<E> = Arc<dyn BatchResidual<E> + Send + Sync>;
+
+/// Typed per-request failure: every submitted request resolves to exactly
+/// one outcome — a success ([`ShardResponse::error`] `None`) or one of
+/// these. Nothing is silently dropped and `collect` never hangs on a
+/// casualty.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServeError {
+    /// Bounced at admission: the owning shard's queue is at `queue_cap`.
+    /// Retry after the hint (seconds, from the queue's recent drain rate).
+    QueueFull { retry_after: f64 },
+    /// The request's deadline passed before (or while) it was served.
+    DeadlineExceeded,
+    /// The forward solve retired without reaching tolerance.
+    Unconverged,
+    /// The model emitted non-finite values for this request (NaN/Inf in
+    /// the fixed point, the backward answer, or the final residual).
+    ModelFault,
+    /// The worker serving this request's batch died; supervision respawned
+    /// the shard and reports the in-flight batch as casualties.
+    WorkerLost,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            ServeError::QueueFull { retry_after } => {
+                write!(f, "queue full (retry after {retry_after:.3e}s)")
+            }
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServeError::Unconverged => write!(f, "forward solve did not converge"),
+            ServeError::ModelFault => write!(f, "model emitted non-finite values"),
+            ServeError::WorkerLost => write!(f, "shard worker died mid-batch"),
+        }
+    }
+}
 
 /// Idle-shard poll cadence: how often an idle worker re-probes for steal
 /// opportunities and deadline releases (with exponential backoff to
@@ -148,6 +194,24 @@ pub struct ShardRequest<E: Elem> {
     pub id: usize,
     pub z0: Vec<E>,
     pub cotangent: Vec<E>,
+    /// Absolute deadline on the router clock ([`ShardedRouter::now`]);
+    /// `None` never expires. Enforced at admission (an already-expired
+    /// request bounces as [`SubmitError::DeadlineExceeded`]) and at drain
+    /// time (a queued request whose deadline passes resolves as a typed
+    /// [`ServeError::DeadlineExceeded`] instead of being served).
+    pub deadline: Option<f64>,
+}
+
+impl<E: Elem> ShardRequest<E> {
+    /// A request with no deadline (the common case).
+    pub fn new(id: usize, z0: Vec<E>, cotangent: Vec<E>) -> ShardRequest<E> {
+        ShardRequest {
+            id,
+            z0,
+            cotangent,
+            deadline: None,
+        }
+    }
 }
 
 /// One completed request.
@@ -174,6 +238,18 @@ pub struct ShardResponse<E: Elem> {
     /// `completed - enqueued`).
     pub enqueued: f64,
     pub completed: f64,
+    /// `None` on success; a typed failure otherwise (`z`/`w` are empty for
+    /// [`ServeError::DeadlineExceeded`] and [`ServeError::WorkerLost`],
+    /// best-effort values for [`ServeError::Unconverged`] and
+    /// [`ServeError::ModelFault`]).
+    pub error: Option<ServeError>,
+}
+
+impl<E: Elem> ShardResponse<E> {
+    /// Whether this request was served successfully.
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
 }
 
 /// Why [`ShardedRouter::submit`] bounced a request (the payload is handed
@@ -182,15 +258,36 @@ pub struct ShardResponse<E: Elem> {
 pub enum SubmitError<E: Elem> {
     /// No live version is registered for the model id.
     UnknownModel(ShardRequest<E>),
-    /// The owning shard's queue is at `queue_cap`.
-    QueueFull(ShardRequest<E>),
+    /// The owning shard's queue is at `queue_cap`; back off for
+    /// `retry_after` seconds (the queue's recent-drain-rate hint) before
+    /// retrying.
+    QueueFull {
+        req: ShardRequest<E>,
+        retry_after: f64,
+    },
+    /// The request's deadline had already passed at admission.
+    DeadlineExceeded(ShardRequest<E>),
 }
 
 impl<E: Elem> SubmitError<E> {
     /// Recover the rejected request.
     pub fn into_request(self) -> ShardRequest<E> {
         match self {
-            SubmitError::UnknownModel(r) | SubmitError::QueueFull(r) => r,
+            SubmitError::UnknownModel(r)
+            | SubmitError::QueueFull { req: r, .. }
+            | SubmitError::DeadlineExceeded(r) => r,
+        }
+    }
+
+    /// The matching typed outcome (what a driver records for a shed
+    /// request).
+    pub fn as_serve_error(&self) -> ServeError {
+        match self {
+            SubmitError::UnknownModel(_) => ServeError::ModelFault,
+            SubmitError::QueueFull { retry_after, .. } => ServeError::QueueFull {
+                retry_after: *retry_after,
+            },
+            SubmitError::DeadlineExceeded(_) => ServeError::DeadlineExceeded,
         }
     }
 }
@@ -209,6 +306,17 @@ pub struct ShardStats {
     pub calibrations: usize,
     /// Stale-estimate re-calibrations triggered by the trip-rate policy.
     pub recalibrations: usize,
+    /// Times this shard's worker died and was respawned by supervision.
+    pub respawns: usize,
+    /// In-flight requests reported as [`ServeError::WorkerLost`] across
+    /// this shard's respawns.
+    pub worker_lost: usize,
+    /// Queued requests that resolved as [`ServeError::DeadlineExceeded`]
+    /// at drain time.
+    pub deadline_expired: usize,
+    /// Engines on this shard whose circuit breaker is currently open
+    /// (serving degraded Jacobian-free backwards).
+    pub open_breakers: usize,
     /// Keys whose engine (and calibration estimate) currently live on this
     /// shard — the observable for "a swap invalidates exactly one key".
     pub engine_keys: Vec<ModelKey>,
@@ -272,11 +380,42 @@ struct QueuedReq<E: Elem> {
     cot: Vec<E>,
 }
 
+/// What supervision needs to report one in-flight request as a
+/// [`ServeError::WorkerLost`] casualty: recorded under the shard lock at
+/// drain time, cleared after the batch's responses publish.
+#[derive(Clone, Copy, Debug)]
+struct InFlight {
+    id: usize,
+    seq: u64,
+    enqueued: f64,
+}
+
 struct ShardState<E: Elem> {
     sched: KeyedScheduler<QueuedReq<E>>,
     /// Keys awaiting background calibration on this shard.
     ctl: VecDeque<ModelKey>,
     stats: ShardStats,
+    /// The batch currently being served (empty between batches). If the
+    /// worker dies mid-batch, supervision publishes each entry as a
+    /// [`ServeError::WorkerLost`] response so `collect` never hangs.
+    inflight: Vec<InFlight>,
+    inflight_key: Option<ModelKey>,
+    /// Control op currently executing (re-queued on worker death so a
+    /// pending registration is never lost).
+    active_ctl: Option<ModelKey>,
+}
+
+impl<E: Elem> ShardState<E> {
+    fn new(sched: SchedulerConfig) -> ShardState<E> {
+        ShardState {
+            sched: KeyedScheduler::new(sched),
+            ctl: VecDeque::new(),
+            stats: ShardStats::default(),
+            inflight: Vec::new(),
+            inflight_key: None,
+            active_ctl: None,
+        }
+    }
 }
 
 struct ShardCell<E: Elem> {
@@ -318,26 +457,38 @@ pub struct ShardedRouter<E: Elem, EU: Elem = E, EV: Elem = EU> {
 }
 
 impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
+    /// Build and spawn the sharded router, panicking on an invalid config
+    /// (in-crate callers with static configs; CLI surfaces use
+    /// [`ShardedRouter::try_new`]).
     pub fn new(cfg: ShardConfig) -> ShardedRouter<E, EU, EV> {
-        assert!(cfg.shards >= 1, "need at least one shard");
-        assert!(
-            cfg.sched.max_batch <= cfg.engine.max_batch,
-            "scheduler max_batch cannot exceed engine max_batch"
-        );
-        // Fail fast on the caller's thread for engine-config mistakes
-        // (e.g. a non-Broyden calibration spec) that would otherwise kill
-        // a worker mid-calibration.
-        let _probe: ServeEngine<E, EU, EV> = ServeEngine::new(1, cfg.engine);
+        match Self::try_new(cfg) {
+            Ok(r) => r,
+            Err(e) => panic!("invalid shard config: {e}"),
+        }
+    }
+
+    /// Validating constructor: every config invariant is checked on the
+    /// caller's thread and returned as a typed [`ConfigError`] — a mistake
+    /// (e.g. a non-Broyden calibration spec) surfaces here instead of
+    /// killing a worker mid-calibration.
+    pub fn try_new(cfg: ShardConfig) -> Result<ShardedRouter<E, EU, EV>, ConfigError> {
+        if cfg.shards == 0 {
+            return Err(ConfigError::ZeroShards);
+        }
+        cfg.engine.validate()?;
+        cfg.sched.validate()?;
+        if cfg.sched.max_batch > cfg.engine.max_batch {
+            return Err(ConfigError::SchedBatchExceedsEngine {
+                sched_batch: cfg.sched.max_batch,
+                engine_batch: cfg.engine.max_batch,
+            });
+        }
         // Divide the kernel-level thread fan-out across shards so N drain
         // loops cannot oversubscribe the cores (restored on shutdown).
         let prev_shards = threads::set_active_shards(cfg.shards);
         let cells = (0..cfg.shards)
             .map(|_| ShardCell {
-                state: Mutex::new(ShardState {
-                    sched: KeyedScheduler::new(cfg.sched),
-                    ctl: VecDeque::new(),
-                    stats: ShardStats::default(),
-                }),
+                state: Mutex::new(ShardState::new(cfg.sched)),
                 cv: Condvar::new(),
             })
             .collect();
@@ -364,16 +515,22 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
                     .expect("spawn shard worker")
             })
             .collect();
-        ShardedRouter {
+        Ok(ShardedRouter {
             sh,
             handles,
             prev_shards,
             _panel: std::marker::PhantomData,
-        }
+        })
     }
 
     pub fn config(&self) -> &ShardConfig {
         &self.sh.cfg
+    }
+
+    /// Seconds since construction on the router clock — the time base for
+    /// [`ShardRequest::deadline`].
+    pub fn now(&self) -> f64 {
+        self.sh.clock.elapsed()
     }
 
     /// The shard `key` hashes to (its home before any stealing).
@@ -399,7 +556,7 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
     pub fn swap(&self, key: ModelKey, model: SharedModel<E>) {
         let shard = affinity_shard(key, self.sh.cfg.shards);
         {
-            let mut reg = self.sh.reg.lock().unwrap();
+            let mut reg = lock_ok(&self.sh.reg);
             assert!(
                 reg.find(key).is_none(),
                 "key {key} is already registered"
@@ -413,7 +570,7 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
             });
         }
         let cell = &self.sh.cells[shard];
-        let mut st = cell.state.lock().unwrap();
+        let mut st = lock_ok(&cell.state);
         st.ctl.push_back(key);
         drop(st);
         cell.cv.notify_one();
@@ -421,20 +578,20 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
 
     /// Block until `key` is the live route for its model id.
     pub fn wait_live(&self, key: ModelKey) {
-        let mut reg = self.sh.reg.lock().unwrap();
+        let mut reg = lock_ok(&self.sh.reg);
         while reg.live_version(key.model) != Some(key.version) {
-            reg = self.sh.reg_cv.wait(reg).unwrap();
+            reg = self.sh.reg_cv.wait(reg).unwrap_or_else(|p| p.into_inner());
         }
     }
 
     /// The live (routed-to) version of a model id, if any.
     pub fn live_version(&self, model: u32) -> Option<u32> {
-        self.sh.reg.lock().unwrap().live_version(model)
+        lock_ok(&self.sh.reg).live_version(model)
     }
 
     /// Registered keys (live, calibrating, and retired-but-draining).
     pub fn keys(&self) -> Vec<ModelKey> {
-        let reg = self.sh.reg.lock().unwrap();
+        let reg = lock_ok(&self.sh.reg);
         reg.entries.iter().map(|e| e.key).collect()
     }
 
@@ -445,7 +602,12 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
     /// a new-key suffix.
     pub fn submit(&self, model: u32, req: ShardRequest<E>) -> Result<ModelKey, SubmitError<E>> {
         let now = self.sh.clock.elapsed();
-        let reg = self.sh.reg.lock().unwrap();
+        if let Some(dl) = req.deadline {
+            if dl <= now {
+                return Err(SubmitError::DeadlineExceeded(req));
+            }
+        }
+        let reg = lock_ok(&self.sh.reg);
         let Some(version) = reg.live_version(model) else {
             return Err(SubmitError::UnknownModel(req));
         };
@@ -455,43 +617,51 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
         // Take the shard lock while still holding the registry lock
         // (registry → shard order): a steal re-homing this key cannot slip
         // between shard resolution and the push.
-        let mut st = cell.state.lock().unwrap();
+        let mut st = lock_ok(&cell.state);
         drop(reg);
+        let deadline = req.deadline.unwrap_or(f64::INFINITY);
         let q = QueuedReq {
             id: req.id,
             z0: req.z0,
             cot: req.cotangent,
         };
-        match st.sched.push(now, key, q) {
+        match st.sched.push_deadline(now, deadline, key, q) {
             Ok(()) => {
                 drop(st);
                 cell.cv.notify_one();
                 Ok(key)
             }
-            Err(q) => Err(SubmitError::QueueFull(ShardRequest {
-                id: q.id,
-                z0: q.z0,
-                cotangent: q.cot,
-            })),
+            Err(rej) => {
+                let q = rej.item;
+                Err(SubmitError::QueueFull {
+                    req: ShardRequest {
+                        id: q.id,
+                        z0: q.z0,
+                        cotangent: q.cot,
+                        deadline: req.deadline,
+                    },
+                    retry_after: rej.retry_after,
+                })
+            }
         }
     }
 
     /// Drain whatever responses have completed (non-blocking).
     pub fn try_collect(&self) -> Vec<ShardResponse<E>> {
-        let mut done = self.sh.done.lock().unwrap();
+        let mut done = lock_ok(&self.sh.done);
         std::mem::take(&mut *done)
     }
 
     /// Block until at least `n` responses have accumulated, draining them.
     pub fn collect(&self, n: usize) -> Vec<ShardResponse<E>> {
         let mut out = Vec::with_capacity(n);
-        let mut done = self.sh.done.lock().unwrap();
+        let mut done = lock_ok(&self.sh.done);
         loop {
             out.append(&mut *done);
             if out.len() >= n {
                 return out;
             }
-            done = self.sh.done_cv.wait(done).unwrap();
+            done = self.sh.done_cv.wait(done).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -500,7 +670,7 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
         self.sh
             .cells
             .iter()
-            .map(|c| c.state.lock().unwrap().sched.len())
+            .map(|c| lock_ok(&c.state).sched.len())
             .sum()
     }
 
@@ -509,7 +679,7 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
         self.sh
             .cells
             .iter()
-            .map(|c| c.state.lock().unwrap().stats.clone())
+            .map(|c| lock_ok(&c.state).stats.clone())
             .collect()
     }
 
@@ -575,18 +745,36 @@ enum Work {
     Exit,
 }
 
+/// Supervised shard worker: the serving loop runs inside `catch_unwind`, so
+/// a panicking model residual kills one *iteration* of the loop, not the
+/// shard. On a panic, [`recover_shard`] reports the in-flight batch as
+/// [`ServeError::WorkerLost`] casualties, re-homes the shard's queues if
+/// possible, and the loop re-enters [`worker_body`] with fresh worker-local
+/// state (engines are rebuilt lazily from the same deterministic z₀ = 0
+/// probe, so the respawned shard's estimates are bit-identical).
 fn worker_loop<E: Elem, EU: Elem, EV: Elem>(me: usize, sh: Arc<Shared<E>>) {
+    loop {
+        match catch_unwind(AssertUnwindSafe(|| worker_body::<E, EU, EV>(me, &sh))) {
+            Ok(()) => break,
+            Err(_) => recover_shard(me, &sh),
+        }
+    }
+}
+
+fn worker_body<E: Elem, EU: Elem, EV: Elem>(me: usize, sh: &Shared<E>) {
     let mut engines: Vec<EngineSlot<E, EU, EV>> = Vec::new();
     let mut items: Vec<(f64, QueuedReq<E>)> = Vec::new();
+    let mut expired: Vec<(ModelKey, f64, QueuedReq<E>)> = Vec::new();
     let mut zs: Vec<E> = Vec::new();
     let mut cots: Vec<E> = Vec::new();
     let mut w: Vec<E> = Vec::new();
     let mut stats: Vec<ColStats> = Vec::new();
     let mut poll = STEAL_POLL_S;
     loop {
-        match next_work(me, &sh, &mut items) {
+        match next_work(me, sh, &mut items, &mut expired) {
             Work::Calibrate(key) => {
-                calibrate_key(me, &sh, &mut engines, key);
+                calibrate_key(me, sh, &mut engines, key);
+                lock_ok(&sh.cells[me].state).active_ctl = None;
                 poll = STEAL_POLL_S;
             }
             Work::Batch {
@@ -594,29 +782,44 @@ fn worker_loop<E: Elem, EU: Elem, EV: Elem>(me: usize, sh: Arc<Shared<E>>) {
                 base_seq,
                 drained_at,
             } => {
-                serve_batch(
-                    me,
-                    &sh,
-                    &mut engines,
-                    key,
-                    &mut items,
-                    base_seq,
-                    drained_at,
-                    &mut zs,
-                    &mut cots,
-                    &mut w,
-                    &mut stats,
-                );
-                gc_retired(me, &sh, &mut engines);
+                // Deadline-expired entries GC'd by this drain resolve first
+                // (their seq stamps follow the live batch), then the live
+                // requests are served.
+                let live = items.len();
+                if !expired.is_empty() {
+                    publish_expired(
+                        me,
+                        sh,
+                        &mut expired,
+                        base_seq + live as u64,
+                        drained_at,
+                    );
+                }
+                if !items.is_empty() {
+                    serve_batch(
+                        me,
+                        sh,
+                        &mut engines,
+                        key,
+                        &mut items,
+                        base_seq,
+                        drained_at,
+                        &mut zs,
+                        &mut cots,
+                        &mut w,
+                        &mut stats,
+                    );
+                }
+                gc_retired(me, sh, &mut engines);
                 poll = STEAL_POLL_S;
             }
             Work::Idle => {
-                if sh.cfg.steal && try_steal(me, &sh) {
+                if sh.cfg.steal && try_steal(me, sh) {
                     poll = STEAL_POLL_S;
                     continue;
                 }
-                gc_retired(me, &sh, &mut engines);
-                idle_wait(me, &sh, poll);
+                gc_retired(me, sh, &mut engines);
+                idle_wait(me, sh, poll);
                 poll = (poll * 2.0).min(STEAL_POLL_MAX_S);
             }
             Work::Exit => break,
@@ -624,20 +827,153 @@ fn worker_loop<E: Elem, EU: Elem, EV: Elem>(me: usize, sh: Arc<Shared<E>>) {
     }
 }
 
+/// Post-panic cleanup, run on the worker's own thread before it re-enters
+/// [`worker_body`]:
+///
+/// 1. every in-flight request of the dead batch resolves as a typed
+///    [`ServeError::WorkerLost`] response (so `collect` never hangs on a
+///    casualty), and an interrupted control op is re-queued so a pending
+///    registration is never lost;
+/// 2. if other shards exist, every key homed here is re-homed through the
+///    whole-queue steal primitives ([`KeyedScheduler::take_queue`] /
+///    [`KeyedScheduler::inject_queue`]), preserving FIFO-within-key, so
+///    queued requests keep serving even while this shard restarts.
+///
+/// Lock discipline matches the rest of the file: registry before any shard
+/// lock, at most one shard lock at a time.
+fn recover_shard<E: Elem>(me: usize, sh: &Shared<E>) {
+    let completed = sh.clock.elapsed();
+    let (casualties, lost_key) = {
+        let mut st = lock_ok(&sh.cells[me].state);
+        let lost = std::mem::take(&mut st.inflight);
+        let lost_key = st.inflight_key.take();
+        if let Some(key) = st.active_ctl.take() {
+            st.ctl.push_front(key);
+        }
+        st.stats.respawns += 1;
+        st.stats.worker_lost += lost.len();
+        (lost, lost_key)
+    };
+    if !casualties.is_empty() {
+        let key = lost_key.expect("in-flight batch records its key");
+        let mut done = lock_ok(&sh.done);
+        for c in &casualties {
+            done.push(ShardResponse {
+                id: c.id,
+                key,
+                shard: me,
+                seq: c.seq,
+                z: Vec::new(),
+                w: Vec::new(),
+                stats: ColStats::default(),
+                enqueued: c.enqueued,
+                completed,
+                error: Some(ServeError::WorkerLost),
+            });
+        }
+        drop(done);
+        sh.done_cv.notify_all();
+    }
+    // Re-home this shard's queues onto the neighbouring shard so queued
+    // requests drain without waiting for the respawn (single-shard routers
+    // have nowhere to move them; the respawned body serves them instead).
+    if sh.cfg.shards > 1 {
+        let mut guard = lock_ok(&sh.reg);
+        let reg = &mut *guard;
+        let target = (me + 1) % sh.cfg.shards;
+        let mut moved = false;
+        for e in reg.entries.iter_mut().filter(|e| e.shard == me) {
+            let q = {
+                let mut st = lock_ok(&sh.cells[me].state);
+                st.sched.take_queue(e.key)
+            };
+            if let Some(q) = q {
+                if !q.is_empty() {
+                    e.shard = target;
+                    e.steal_cooldown = STEAL_COOLDOWN_BATCHES;
+                    let mut st = lock_ok(&sh.cells[target].state);
+                    st.sched.inject_queue(e.key, q);
+                    moved = true;
+                }
+            }
+        }
+        drop(guard);
+        if moved {
+            sh.cells[target].cv.notify_one();
+        }
+    }
+}
+
+/// Resolve deadline-expired entries GC'd at drain time as typed
+/// [`ServeError::DeadlineExceeded`] responses (empty `z`/`w` — the solve
+/// never ran).
+fn publish_expired<E: Elem>(
+    me: usize,
+    sh: &Shared<E>,
+    expired: &mut Vec<(ModelKey, f64, QueuedReq<E>)>,
+    base_seq: u64,
+    drained_at: f64,
+) {
+    let n = expired.len();
+    let completed = sh.clock.elapsed();
+    {
+        let mut done = lock_ok(&sh.done);
+        for (p, (key, wait, q)) in expired.drain(..).enumerate() {
+            done.push(ShardResponse {
+                id: q.id,
+                key,
+                shard: me,
+                seq: base_seq + p as u64,
+                z: Vec::new(),
+                w: Vec::new(),
+                stats: ColStats::default(),
+                enqueued: drained_at - wait,
+                completed,
+                error: Some(ServeError::DeadlineExceeded),
+            });
+        }
+    }
+    sh.done_cv.notify_all();
+    let mut st = lock_ok(&sh.cells[me].state);
+    st.stats.deadline_expired += n;
+}
+
 /// Pick the shard's next unit of work under its own lock: control ops
 /// first, then a releasable batch (drained into `items` with admission
 /// stamps assigned *while the lock is held* — the FIFO-within-key
-/// witness), else idle / exit.
-fn next_work<E: Elem>(me: usize, sh: &Shared<E>, items: &mut Vec<(f64, QueuedReq<E>)>) -> Work {
-    let mut st = sh.cells[me].state.lock().unwrap();
+/// witness), else idle / exit. Deadline-expired entries GC'd by the drain
+/// land in `expired` (stamped after the live batch); the in-flight batch is
+/// recorded in the shard state under the same lock so supervision can
+/// resolve it as [`ServeError::WorkerLost`] if the worker dies serving it.
+fn next_work<E: Elem>(
+    me: usize,
+    sh: &Shared<E>,
+    items: &mut Vec<(f64, QueuedReq<E>)>,
+    expired: &mut Vec<(ModelKey, f64, QueuedReq<E>)>,
+) -> Work {
+    let mut st = lock_ok(&sh.cells[me].state);
     if let Some(key) = st.ctl.pop_front() {
+        st.active_ctl = Some(key);
         return Work::Calibrate(key);
     }
     let now = sh.clock.elapsed();
     if let Some((key, n)) = st.sched.ready(now) {
         items.clear();
+        expired.clear();
         st.sched.drain_key(key, n, now, items);
-        let base_seq = sh.seq.fetch_add(items.len() as u64, Ordering::SeqCst);
+        st.sched.take_expired(expired);
+        let total = (items.len() + expired.len()) as u64;
+        let base_seq = sh.seq.fetch_add(total, Ordering::SeqCst);
+        st.inflight_key = (!items.is_empty()).then_some(key);
+        st.inflight = items
+            .iter()
+            .enumerate()
+            .map(|(p, (wait, q))| InFlight {
+                id: q.id,
+                seq: base_seq + p as u64,
+                enqueued: now - wait,
+            })
+            .collect();
         return Work::Batch {
             key,
             base_seq,
@@ -672,7 +1008,7 @@ fn build_engine<E: Elem, EU: Elem, EV: Elem>(
         engine,
         model: Arc::clone(model),
     });
-    let mut st = sh.cells[me].state.lock().unwrap();
+    let mut st = lock_ok(&sh.cells[me].state);
     st.stats.calibrations += 1;
     st.stats.engine_keys = engines.iter().map(|s| s.key).collect();
 }
@@ -685,7 +1021,7 @@ fn calibrate_key<E: Elem, EU: Elem, EV: Elem>(
     key: ModelKey,
 ) {
     let model = {
-        let reg = sh.reg.lock().unwrap();
+        let reg = lock_ok(&sh.reg);
         match reg.find(key) {
             Some(e) => Arc::clone(&e.model),
             // Retired and collected before we got to it: drop the op.
@@ -696,7 +1032,7 @@ fn calibrate_key<E: Elem, EU: Elem, EV: Elem>(
     // Atomic cutover under the registry lock: bump the live route and
     // retire exactly the previous live version of this model id.
     {
-        let mut guard = sh.reg.lock().unwrap();
+        let mut guard = lock_ok(&sh.reg);
         let reg = &mut *guard;
         if let Some(e) = reg.find_mut(key) {
             e.state = KeyState::Live;
@@ -739,7 +1075,7 @@ fn serve_batch<E: Elem, EU: Elem, EV: Elem>(
         // same deterministic z₀ = 0 probe — bit-identical to the home
         // shard's estimate, which therefore never crosses threads.
         let model = {
-            let reg = sh.reg.lock().unwrap();
+            let reg = lock_ok(&sh.reg);
             Arc::clone(&reg.find(key).expect("queued key is registered").model)
         };
         build_engine(me, sh, engines, key, &model);
@@ -761,9 +1097,16 @@ fn serve_batch<E: Elem, EU: Elem, EV: Elem>(
         cots[p * d..(p + 1) * d].copy_from_slice(&req.cot);
     }
     let model = &slot.model;
+    // The engine hands physical column indices; map them back to caller
+    // request ids so per-request fault injection (and any id-aware model)
+    // keys off the submitted id, not the batch slot.
+    let req_ids: Vec<usize> = items.iter().map(|(_, q)| q.id).collect();
+    let mut idbuf: Vec<usize> = Vec::with_capacity(b);
     let report = slot.engine.process(
-        |block: &[E], _ids: &[usize], out: &mut [E]| {
-            model.residual_batch(block, block.len() / d, out)
+        |block: &[E], cols: &[usize], out: &mut [E]| {
+            idbuf.clear();
+            idbuf.extend(cols.iter().map(|&c| req_ids[c]));
+            model.residual_batch_ids(block, &idbuf, out)
         },
         &mut zs[..],
         &cots[..],
@@ -781,18 +1124,34 @@ fn serve_batch<E: Elem, EU: Elem, EV: Elem>(
     }
     let completed = sh.clock.elapsed();
     {
-        let mut done = sh.done.lock().unwrap();
+        let mut done = lock_ok(&sh.done);
         for (p, (wait, req)) in items.drain(..).enumerate() {
+            let zc = &zs[p * d..(p + 1) * d];
+            let wc = &w[p * d..(p + 1) * d];
+            // Per-column outcome: non-finite anywhere in the column's fixed
+            // point, backward answer, or final residual is a ModelFault
+            // (best-effort values still attached); a finite column that
+            // missed tolerance is Unconverged.
+            let finite = stats[p].residual.is_finite()
+                && zc.iter().chain(wc.iter()).all(|v| v.to_f64().is_finite());
+            let error = if !finite {
+                Some(ServeError::ModelFault)
+            } else if !stats[p].converged {
+                Some(ServeError::Unconverged)
+            } else {
+                None
+            };
             done.push(ShardResponse {
                 id: req.id,
                 key,
                 shard: me,
                 seq: base_seq + p as u64,
-                z: zs[p * d..(p + 1) * d].to_vec(),
-                w: w[p * d..(p + 1) * d].to_vec(),
+                z: zc.to_vec(),
+                w: wc.to_vec(),
                 stats: stats[p],
                 enqueued: drained_at - wait,
                 completed,
+                error,
             });
         }
     }
@@ -801,17 +1160,24 @@ fn serve_batch<E: Elem, EU: Elem, EV: Elem>(
     // this key (registry lock taken on its own, before the shard lock below
     // — the global lock order).
     if sh.cfg.steal {
-        let mut reg = sh.reg.lock().unwrap();
+        let mut reg = lock_ok(&sh.reg);
         if let Some(e) = reg.find_mut(key) {
             e.steal_cooldown = e.steal_cooldown.saturating_sub(1);
         }
     }
-    let mut st = sh.cells[me].state.lock().unwrap();
+    let mut st = lock_ok(&sh.cells[me].state);
+    // The batch's responses are published: clearing the in-flight record
+    // here (and only here) is what makes every request resolve exactly once
+    // — the publish path above has no panic sources, so supervision can
+    // never double-report a batch it has already seen resolved.
+    st.inflight.clear();
+    st.inflight_key = None;
     st.stats.served += b;
     st.stats.batches += 1;
     if recalibrated {
         st.stats.recalibrations += 1;
     }
+    st.stats.open_breakers = engines.iter().filter(|s| s.engine.breaker_open()).count();
 }
 
 /// Collect retired keys this shard owns once their queues drain: remove
@@ -823,9 +1189,9 @@ fn gc_retired<E: Elem, EU: Elem, EV: Elem>(
     sh: &Shared<E>,
     engines: &mut Vec<EngineSlot<E, EU, EV>>,
 ) {
-    let mut guard = sh.reg.lock().unwrap();
+    let mut guard = lock_ok(&sh.reg);
     let reg = &mut *guard;
-    let mut st = sh.cells[me].state.lock().unwrap();
+    let mut st = lock_ok(&sh.cells[me].state);
     let sched = &st.sched;
     reg.entries.retain(|e| {
         !(e.state == KeyState::Retired && e.shard == me && sched.count_key(e.key) == 0)
@@ -844,7 +1210,7 @@ fn gc_retired<E: Elem, EU: Elem, EV: Elem>(
 /// ping-pong not-yet-ready queues. Registry lock held throughout; at most
 /// one shard lock at a time.
 fn try_steal<E: Elem>(me: usize, sh: &Shared<E>) -> bool {
-    let mut guard = sh.reg.lock().unwrap();
+    let mut guard = lock_ok(&sh.reg);
     let reg = &mut *guard;
     let now = sh.clock.elapsed();
     let mut best: Option<(usize, ModelKey, usize)> = None;
@@ -852,7 +1218,7 @@ fn try_steal<E: Elem>(me: usize, sh: &Shared<E>) -> bool {
         if j == me {
             continue;
         }
-        let st = sh.cells[j].state.lock().unwrap();
+        let st = lock_ok(&sh.cells[j].state);
         if let Some((key, n)) = st.sched.ready(now) {
             // A key in steal cooldown stays with its current owner — the
             // hysteresis that stops ownership bouncing under alternating
@@ -871,7 +1237,7 @@ fn try_steal<E: Elem>(me: usize, sh: &Shared<E>) -> bool {
         return false;
     };
     let q = {
-        let mut vst = sh.cells[victim].state.lock().unwrap();
+        let mut vst = lock_ok(&sh.cells[victim].state);
         // The victim may have drained it between the probe and now.
         match vst.sched.take_queue(key) {
             Some(q) if !q.is_empty() => q,
@@ -886,7 +1252,7 @@ fn try_steal<E: Elem>(me: usize, sh: &Shared<E>) -> bool {
         e.shard = me;
         e.steal_cooldown = STEAL_COOLDOWN_BATCHES;
     }
-    let mut st = sh.cells[me].state.lock().unwrap();
+    let mut st = lock_ok(&sh.cells[me].state);
     st.sched.inject_queue(key, q);
     st.stats.steals += 1;
     true
@@ -896,7 +1262,7 @@ fn try_steal<E: Elem>(me: usize, sh: &Shared<E>) -> bool {
 /// batch's deadline, or the steal-poll timeout — whichever is soonest.
 fn idle_wait<E: Elem>(me: usize, sh: &Shared<E>, poll: f64) {
     let cell = &sh.cells[me];
-    let st = cell.state.lock().unwrap();
+    let st = lock_ok(&cell.state);
     // Re-check under the lock so a wakeup between next_work and here is
     // not slept through.
     if !st.ctl.is_empty() || sh.shutdown.load(Ordering::SeqCst) {
@@ -913,7 +1279,7 @@ fn idle_wait<E: Elem>(me: usize, sh: &Shared<E>, poll: f64) {
     let _ = cell
         .cv
         .wait_timeout(st, Duration::from_secs_f64(wait))
-        .unwrap();
+        .unwrap_or_else(|p| p.into_inner());
 }
 
 #[cfg(test)]
@@ -980,11 +1346,7 @@ mod tests {
             reg_cv: Condvar::new(),
             cells: (0..shards)
                 .map(|_| ShardCell {
-                    state: Mutex::new(ShardState {
-                        sched: KeyedScheduler::new(sched),
-                        ctl: VecDeque::new(),
-                        stats: ShardStats::default(),
-                    }),
+                    state: Mutex::new(ShardState::new(sched)),
                     cv: Condvar::new(),
                 })
                 .collect(),
@@ -1049,6 +1411,7 @@ mod tests {
         assert!(!try_steal(0, &sh), "cooldown blocks the immediate re-steal");
         let mut engines: Vec<EngineSlot<f64, f64, f64>> = Vec::new();
         let mut items = Vec::new();
+        let mut expired = Vec::new();
         let (mut zs, mut cots, mut w) = (Vec::new(), Vec::new(), Vec::new());
         let mut stats = Vec::new();
         for round in 0..STEAL_COOLDOWN_BATCHES {
@@ -1056,7 +1419,7 @@ mod tests {
                 key: k,
                 base_seq,
                 drained_at,
-            } = next_work(1, &sh, &mut items)
+            } = next_work(1, &sh, &mut items, &mut expired)
             else {
                 panic!("round {round}: expected a releasable batch on shard 1");
             };
@@ -1102,11 +1465,7 @@ mod tests {
             },
         );
         let router: ShardedRouter<f64> = ShardedRouter::new(cfg);
-        let req = ShardRequest {
-            id: 0,
-            z0: vec![0.0; 8],
-            cotangent: vec![1.0; 8],
-        };
+        let req = ShardRequest::new(0, vec![0.0; 8], vec![1.0; 8]);
         match router.submit(9, req) {
             Err(SubmitError::UnknownModel(r)) => assert_eq!(r.id, 0),
             other => panic!("expected UnknownModel, got {other:?}"),
@@ -1135,11 +1494,7 @@ mod tests {
         router.register(key, Arc::new(SynthDeq::<f64>::new(d, 8, 1)));
         assert_eq!(router.live_version(0), Some(0));
         for id in 0..8usize {
-            let req = ShardRequest {
-                id,
-                z0: vec![0.0; d],
-                cotangent: vec![1.0; d],
-            };
+            let req = ShardRequest::new(id, vec![0.0; d], vec![1.0; d]);
             router.submit(0, req).expect("routed");
         }
         let mut out = router.collect(8);
@@ -1149,6 +1504,7 @@ mod tests {
             assert_eq!(r.id, i);
             assert_eq!(r.key, key);
             assert_eq!(r.shard, 0);
+            assert!(r.ok(), "request {i} served: {:?}", r.error);
             assert!(r.stats.converged, "request {i} converged");
             assert!(r.completed >= r.enqueued);
         }
@@ -1160,6 +1516,186 @@ mod tests {
         let stats = router.shard_stats();
         assert_eq!(stats[0].served, 8);
         assert_eq!(stats[0].engine_keys, vec![key]);
+        router.shutdown();
+    }
+
+    #[test]
+    fn lock_ok_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex is poisoned");
+        // lock_ok sees through the poison and the data is intact.
+        assert_eq!(*lock_ok(&m), 7);
+        *lock_ok(&m) += 1;
+        assert_eq!(*lock_ok(&m), 8);
+    }
+
+    #[test]
+    fn expired_entries_resolve_as_deadline_exceeded() {
+        let d = 16;
+        let sh = bare_shared(1, 4);
+        let key = ModelKey::new(0, 0);
+        let model: SharedModel<f64> = Arc::new(SynthDeq::<f64>::new(d, 8, 1));
+        {
+            let mut reg = sh.reg.lock().unwrap();
+            reg.entries.push(RegEntry {
+                key,
+                model: Arc::clone(&model),
+                shard: 0,
+                state: KeyState::Live,
+                steal_cooldown: 0,
+            });
+            reg.live.push((0, 0));
+        }
+        {
+            let mut st = sh.cells[0].state.lock().unwrap();
+            let q = |id: usize| QueuedReq {
+                id,
+                z0: vec![0.0; d],
+                cot: vec![1.0; d],
+            };
+            // id 0 never expires; id 1's deadline is already in the past by
+            // the time next_work drains (absolute deadline 0 on a running
+            // clock).
+            assert!(st.sched.push_deadline(0.0, f64::INFINITY, key, q(0)).is_ok());
+            assert!(st.sched.push_deadline(0.0, 0.0, key, q(1)).is_ok());
+        }
+        let mut items = Vec::new();
+        let mut expired = Vec::new();
+        let Work::Batch {
+            key: k,
+            base_seq,
+            drained_at,
+        } = next_work(0, &sh, &mut items, &mut expired)
+        else {
+            panic!("expected a releasable batch");
+        };
+        assert_eq!(k, key);
+        assert_eq!(items.len(), 1, "live request drained");
+        assert_eq!(expired.len(), 1, "expired request diverted");
+        // Mirror worker_body's Batch arm: expired first (stamped after the
+        // live batch), then the live request serves.
+        publish_expired(0, &sh, &mut expired, base_seq + 1, drained_at);
+        let mut engines: Vec<EngineSlot<f64, f64, f64>> = Vec::new();
+        let (mut zs, mut cots, mut w) = (Vec::new(), Vec::new(), Vec::new());
+        let mut stats = Vec::new();
+        serve_batch(
+            0, &sh, &mut engines, key, &mut items, base_seq, drained_at, &mut zs, &mut cots,
+            &mut w, &mut stats,
+        );
+        let mut done = sh.done.lock().unwrap();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 2, "both requests resolved");
+        assert!(done[0].ok() && done[0].stats.converged);
+        assert_eq!(done[0].seq, base_seq);
+        assert_eq!(done[1].error, Some(ServeError::DeadlineExceeded));
+        assert_eq!(done[1].seq, base_seq + 1);
+        assert!(done[1].z.is_empty() && done[1].w.is_empty());
+        drop(done);
+        let st = sh.cells[0].state.lock().unwrap();
+        assert_eq!(st.stats.deadline_expired, 1);
+        assert!(st.inflight.is_empty() && st.inflight_key.is_none());
+    }
+
+    #[test]
+    fn recover_shard_reports_casualties_and_rehomes_queues() {
+        let d = 16;
+        let sh = bare_shared(2, 4);
+        let key = ModelKey::new(0, 0);
+        let model: SharedModel<f64> = Arc::new(SynthDeq::<f64>::new(d, 8, 1));
+        {
+            let mut reg = sh.reg.lock().unwrap();
+            reg.entries.push(RegEntry {
+                key,
+                model: Arc::clone(&model),
+                shard: 0,
+                state: KeyState::Live,
+                steal_cooldown: 0,
+            });
+            reg.live.push((0, 0));
+        }
+        {
+            let mut st = sh.cells[0].state.lock().unwrap();
+            // A queued request that survives the crash...
+            let q = QueuedReq {
+                id: 10,
+                z0: vec![0.0; d],
+                cot: vec![1.0; d],
+            };
+            assert!(st.sched.push(0.0, key, q).is_ok());
+            // ...an in-flight batch that does not...
+            st.inflight_key = Some(key);
+            st.inflight = vec![
+                InFlight { id: 0, seq: 5, enqueued: 0.0 },
+                InFlight { id: 1, seq: 6, enqueued: 0.0 },
+            ];
+            // ...and an interrupted control op.
+            st.active_ctl = Some(ModelKey::new(3, 0));
+        }
+        recover_shard(0, &sh);
+        let mut done = sh.done.lock().unwrap();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 2, "both in-flight requests resolved");
+        for (r, (id, seq)) in done.iter().zip([(0usize, 5u64), (1, 6)]) {
+            assert_eq!(r.id, id);
+            assert_eq!(r.seq, seq);
+            assert_eq!(r.error, Some(ServeError::WorkerLost));
+            assert!(r.z.is_empty() && r.w.is_empty());
+        }
+        drop(done);
+        {
+            let st = sh.cells[0].state.lock().unwrap();
+            assert_eq!(st.stats.respawns, 1);
+            assert_eq!(st.stats.worker_lost, 2);
+            assert!(st.inflight.is_empty() && st.inflight_key.is_none());
+            assert_eq!(st.ctl.front(), Some(&ModelKey::new(3, 0)), "ctl re-queued");
+            assert_eq!(st.sched.len(), 0, "queue moved off the dead shard");
+        }
+        let reg = sh.reg.lock().unwrap();
+        assert_eq!(reg.find(key).unwrap().shard, 1, "key re-homed");
+        assert_eq!(
+            reg.find(key).unwrap().steal_cooldown,
+            STEAL_COOLDOWN_BATCHES
+        );
+        drop(reg);
+        let st = sh.cells[1].state.lock().unwrap();
+        assert_eq!(st.sched.count_key(key), 1, "queued request followed the key");
+    }
+
+    #[test]
+    fn submit_rejects_expired_deadline_at_admission() {
+        let cfg = ShardConfig::new(
+            1,
+            EngineConfig {
+                max_batch: 4,
+                ..Default::default()
+            },
+            SchedulerConfig {
+                max_batch: 4,
+                max_wait: 1e-4,
+                queue_cap: 16,
+            },
+        );
+        let router: ShardedRouter<f64> = ShardedRouter::new(cfg);
+        let key = ModelKey::new(0, 0);
+        router.register(key, Arc::new(SynthDeq::<f64>::new(8, 8, 1)));
+        let mut req = ShardRequest::new(0, vec![0.0; 8], vec![1.0; 8]);
+        req.deadline = Some(0.0); // already in the past on the router clock
+        match router.submit(0, req) {
+            Err(SubmitError::DeadlineExceeded(r)) => {
+                assert_eq!(r.id, 0);
+                assert_eq!(
+                    SubmitError::DeadlineExceeded(r).as_serve_error(),
+                    ServeError::DeadlineExceeded
+                );
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
         router.shutdown();
     }
 }

@@ -86,12 +86,170 @@ impl<E: Elem> SynthDeq<E> {
     }
 }
 
+/// One scheduled model misbehaviour, keyed to a request id by a
+/// [`FaultPlan`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// The residual evaluation panics (on the shard worker's thread — the
+    /// supervision trigger).
+    Panic,
+    /// The faulted request's residual column fills with NaN (only its own
+    /// column: batched neighbours stay clean, which is what the per-column
+    /// outcome classification and chaos parity rely on).
+    Nan,
+    /// The evaluation sleeps `delay_s` before returning correct values — a
+    /// straggler. Value-neutral, so a straggled request still matches the
+    /// fault-free reference bit-for-bit.
+    Straggle { delay_s: f64 },
+}
+
+/// A seeded, replayable chaos schedule: which request ids misbehave and
+/// how. The plan is pure data keyed by caller request id — replaying the
+/// same seed against the same workload injects the identical faults no
+/// matter how requests batch, shard, or interleave, which is what makes
+/// the chaos harness deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// `(request id, fault)`, sorted by id.
+    faults: Vec<(usize, Fault)>,
+}
+
+impl FaultPlan {
+    /// Sample a plan over request ids `0..total`: `panics` + `nans` +
+    /// `straggles` distinct victims (must fit in `total`), assignment and
+    /// placement fully determined by `seed`.
+    pub fn seeded(
+        seed: u64,
+        total: usize,
+        panics: usize,
+        nans: usize,
+        straggles: usize,
+    ) -> FaultPlan {
+        let n = panics + nans + straggles;
+        assert!(n <= total, "more faults than requests");
+        let mut rng = Rng::new(seed ^ 0xFA17);
+        let victims = rng.choose_k(total, n);
+        let mut faults: Vec<(usize, Fault)> = victims
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| {
+                let f = if i < panics {
+                    Fault::Panic
+                } else if i < panics + nans {
+                    Fault::Nan
+                } else {
+                    Fault::Straggle {
+                        delay_s: rng.uniform_in(0.5e-3, 2e-3),
+                    }
+                };
+                (id, f)
+            })
+            .collect();
+        faults.sort_by_key(|(id, _)| *id);
+        FaultPlan { faults }
+    }
+
+    /// An explicit plan (tests that want exact placement).
+    pub fn from_faults(mut faults: Vec<(usize, Fault)>) -> FaultPlan {
+        faults.sort_by_key(|(id, _)| *id);
+        FaultPlan { faults }
+    }
+
+    /// The fault scheduled for `id`, if any.
+    pub fn fault(&self, id: usize) -> Option<Fault> {
+        self.faults
+            .binary_search_by_key(&id, |(i, _)| *i)
+            .ok()
+            .map(|p| self.faults[p].1)
+    }
+
+    /// Scheduled faults in id order.
+    pub fn faults(&self) -> &[(usize, Fault)] {
+        &self.faults
+    }
+
+    /// Ids whose requests are fault-free (the bit-parity witness set).
+    pub fn clean_ids(&self, total: usize) -> Vec<usize> {
+        (0..total).filter(|id| self.fault(*id).is_none()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+/// A [`BatchResidual`] wrapper executing a [`FaultPlan`]: clean requests
+/// pass straight through to the inner model; scheduled victims panic, go
+/// NaN, or straggle *inside the residual evaluation* — the exact site a
+/// real model fault would occur, on the worker thread that owns the batch.
+///
+/// Faults key off the id-aware entry point only: calibration probes (and
+/// any other id-less evaluation) always run clean, so a faulted workload
+/// still calibrates the same estimate as a clean one.
+///
+/// [`BatchResidual`]: crate::serve::BatchResidual
+pub struct FaultyModel<E: Elem> {
+    inner: std::sync::Arc<dyn crate::serve::router::BatchResidual<E> + Send + Sync>,
+    plan: FaultPlan,
+}
+
+impl<E: Elem> FaultyModel<E> {
+    pub fn new(
+        inner: std::sync::Arc<dyn crate::serve::router::BatchResidual<E> + Send + Sync>,
+        plan: FaultPlan,
+    ) -> FaultyModel<E> {
+        FaultyModel { inner, plan }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl<E: Elem> crate::serve::router::BatchResidual<E> for FaultyModel<E> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn residual_batch(&self, zs: &[E], k: usize, out: &mut [E]) {
+        self.inner.residual_batch(zs, k, out);
+    }
+
+    fn residual_batch_ids(&self, zs: &[E], ids: &[usize], out: &mut [E]) {
+        // Panics and stragglers fire before the evaluation (a panic must
+        // not leave `out` half-written with plausible values; a straggler
+        // models a slow dependency).
+        for &id in ids {
+            match self.plan.fault(id) {
+                Some(Fault::Panic) => panic!("injected fault: request {id} panics"),
+                Some(Fault::Straggle { delay_s }) => {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(delay_s));
+                }
+                _ => {}
+            }
+        }
+        self.inner.residual_batch_ids(zs, ids, out);
+        let d = self.inner.dim();
+        for (p, &id) in ids.iter().enumerate() {
+            if self.plan.fault(id) == Some(Fault::Nan) {
+                out[p * d..(p + 1) * d].fill(E::from_f64(f64::NAN));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::vecops::nrm2;
     use crate::qn::workspace::Workspace;
+    use crate::serve::router::BatchResidual;
     use crate::solvers::fixed_point::{picard_solve, picard_solve_batch, ColStats};
+    use std::sync::Arc;
 
     #[test]
     fn batched_residual_matches_per_column() {
@@ -163,5 +321,81 @@ mod tests {
             assert_eq!(stats[j].iters, it, "col {j}");
             assert!(stats[j].converged);
         }
+    }
+
+    #[test]
+    fn fault_plan_is_seeded_and_replayable() {
+        let (total, panics, nans, straggles) = (64, 2, 3, 4);
+        let a = FaultPlan::seeded(7, total, panics, nans, straggles);
+        let b = FaultPlan::seeded(7, total, panics, nans, straggles);
+        assert_eq!(a.faults(), b.faults(), "same seed, same plan");
+        let c = FaultPlan::seeded(8, total, panics, nans, straggles);
+        assert_ne!(a.faults(), c.faults(), "different seed, different plan");
+        assert_eq!(a.len(), panics + nans + straggles);
+        let mut by_kind = [0usize; 3];
+        for &(id, f) in a.faults() {
+            assert!(id < total);
+            match f {
+                Fault::Panic => by_kind[0] += 1,
+                Fault::Nan => by_kind[1] += 1,
+                Fault::Straggle { delay_s } => {
+                    assert!(delay_s > 0.0 && delay_s < 0.01);
+                    by_kind[2] += 1;
+                }
+            }
+        }
+        assert_eq!(by_kind, [panics, nans, straggles]);
+        // Lookup agrees with the schedule; clean ids complement it.
+        for &(id, f) in a.faults() {
+            assert_eq!(a.fault(id), Some(f));
+        }
+        assert_eq!(a.clean_ids(total).len(), total - a.len());
+    }
+
+    #[test]
+    fn faulty_model_nans_only_its_own_column() {
+        let d = 32;
+        let inner: Arc<dyn BatchResidual<f64> + Send + Sync> =
+            Arc::new(SynthDeq::<f64>::new(d, 8, 5));
+        let plan = FaultPlan::from_faults(vec![(1, Fault::Nan)]);
+        let faulty = FaultyModel::new(Arc::clone(&inner), plan);
+        let mut rng = Rng::new(3);
+        let zs: Vec<f64> = (0..3 * d).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0; 3 * d];
+        faulty.residual_batch_ids(&zs, &[0, 1, 2], &mut out);
+        let mut clean = vec![0.0; 3 * d];
+        inner.residual_batch(&zs, 3, &mut clean);
+        assert_eq!(&out[..d], &clean[..d], "col 0 untouched");
+        assert!(out[d..2 * d].iter().all(|v| v.is_nan()), "victim column NaN");
+        assert_eq!(&out[2 * d..], &clean[2 * d..], "col 2 untouched");
+        // The id-less entry point (calibration) never faults.
+        let mut calib = vec![0.0; d];
+        faulty.residual_batch(&zs[d..2 * d], 1, &mut calib);
+        assert_eq!(&calib[..], &clean[d..2 * d]);
+    }
+
+    #[test]
+    fn faulty_model_panics_on_schedule_and_straggles_value_neutrally() {
+        let d = 16;
+        let inner: Arc<dyn BatchResidual<f64> + Send + Sync> =
+            Arc::new(SynthDeq::<f64>::new(d, 8, 5));
+        let plan = FaultPlan::from_faults(vec![
+            (0, Fault::Panic),
+            (2, Fault::Straggle { delay_s: 1e-4 }),
+        ]);
+        let faulty = FaultyModel::new(Arc::clone(&inner), plan);
+        let zs = vec![0.25; d];
+        let mut out = vec![0.0; d];
+        // The straggler returns bit-identical values, just later.
+        faulty.residual_batch_ids(&zs, &[2], &mut out);
+        let mut clean = vec![0.0; d];
+        inner.residual_batch(&zs, 1, &mut clean);
+        assert_eq!(out, clean);
+        // The panic victim fires inside the evaluation.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut out = vec![0.0; d];
+            faulty.residual_batch_ids(&zs, &[0], &mut out);
+        }));
+        assert!(r.is_err(), "scheduled panic fired");
     }
 }

@@ -455,6 +455,16 @@ pub struct SolveOutcome<E: Elem = f64> {
 }
 
 impl<E: Elem> SolveOutcome<E> {
+    /// Whether the final residual is a finite number. A NaN/Inf residual
+    /// means the model emitted non-finite values mid-solve: the captured
+    /// estimate panel is then garbage and must not be installed for
+    /// serving — the serve tier counts such a solve as a failed
+    /// calibration and a circuit-breaker strike
+    /// (see [`crate::serve::CircuitBreaker`]).
+    pub fn residual_finite(&self) -> bool {
+        self.residual.is_finite()
+    }
+
     /// Lower to the legacy Broyden result struct (shim path). Panics if the
     /// solve captured no estimate — only Broyden outcomes convert.
     pub fn into_fp_result(self) -> FpResult<E> {

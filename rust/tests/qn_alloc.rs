@@ -270,6 +270,7 @@ fn serving_batch_is_allocation_free<EU: Elem, EV: Elem>(solver: SolverSpec, name
             fallback_ratio: Some(1e30), // guard scan runs, never triggers
             recalib: None,
             col_budget: None,
+            breaker: None,
         },
     );
     eng.calibrate(

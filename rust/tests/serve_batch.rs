@@ -188,6 +188,7 @@ fn run_streaming<E: Elem>(
             fallback_ratio: None,
             recalib: None,
             col_budget: None,
+            breaker: None,
         },
     );
     let mut next = 0usize;
@@ -481,6 +482,7 @@ fn serving_pipeline_matches_per_request_reference() {
             fallback_ratio: None,
             recalib: None,
             col_budget: None,
+            breaker: None,
         },
     );
     engine.calibrate(

@@ -1,0 +1,327 @@
+//! Fault-tolerance invariants (ISSUE 9 tentpole):
+//!
+//! 1. **Supervision / exactly-once** — an injected model panic kills the
+//!    worker mid-batch; supervision respawns it, reports the in-flight
+//!    batch as typed [`ServeError::WorkerLost`] casualties, and every
+//!    submitted request still resolves to exactly one outcome (`collect`
+//!    never hangs, nothing is duplicated). The respawned worker keeps
+//!    serving subsequent rounds.
+//! 2. **FIFO-within-key across a crash** — the admission stamps still
+//!    recover per-key submission order on both sides of a worker death
+//!    (casualties included), even when the dead shard's queues re-home.
+//! 3. **Chaos parity** — under an active [`FaultPlan`] (panic + NaNs +
+//!    straggler), every fault-free request that didn't share the panicked
+//!    batch returns the bit-identical fixed point, backward answer and
+//!    iteration count as the single-threaded [`Router`] reference; faults
+//!    are confined to their victims' typed outcomes.
+//! 4. **Deadlines** — an already-expired deadline bounces at admission;
+//!    requests whose deadline lapses while a straggler batch occupies the
+//!    worker resolve as typed [`ServeError::DeadlineExceeded`] at drain
+//!    instead of being served late.
+
+use shine::serve::{
+    EngineConfig, Fault, FaultPlan, FaultyModel, ModelKey, Router, SchedulerConfig, ServeError,
+    ShardConfig, ShardRequest, ShardedRouter, SharedModel, SubmitError, SynthDeq,
+};
+use shine::solvers::fixed_point::ColStats;
+use shine::util::rng::Rng;
+use std::sync::Arc;
+
+const D: usize = 24;
+const BLOCK: usize = 8;
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        ..Default::default()
+    }
+    .with_tol(1e-8)
+}
+
+fn shard_cfg(shards: usize, queue_cap: usize) -> ShardConfig {
+    ShardConfig::new(
+        shards,
+        engine_cfg(),
+        SchedulerConfig {
+            max_batch: 4,
+            max_wait: 1e-4,
+            queue_cap,
+        },
+    )
+}
+
+fn model_seed(m: u32) -> u64 {
+    100 * (m as u64 + 1)
+}
+
+fn mk_model(m: u32) -> SharedModel<f32> {
+    Arc::new(SynthDeq::<f32>::new(D, BLOCK, model_seed(m)))
+}
+
+/// A model executing the shared fault plan (victims keyed by request id).
+fn faulty(m: u32, plan: &FaultPlan) -> SharedModel<f32> {
+    Arc::new(FaultyModel::new(mk_model(m), plan.clone()))
+}
+
+/// Deterministic per-request cotangents, independent of shard count.
+fn cotangents(n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(42);
+    (0..n)
+        .map(|_| (0..D).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Reference: the single-threaded Router serving each request alone
+/// (batch = 1), fault-free — the baseline the sharded chaos run's clean
+/// requests must match bit for bit.
+fn run_reference(reqs: &[u32], cots: &[Vec<f32>]) -> Vec<(Vec<f32>, Vec<f32>, ColStats)> {
+    let mut router: Router<f32> = Router::new(engine_cfg());
+    let mut models: Vec<u32> = reqs.to_vec();
+    models.sort_unstable();
+    models.dedup();
+    for &m in &models {
+        router.register(
+            ModelKey::new(m, 0),
+            Box::new(SynthDeq::<f32>::new(D, BLOCK, model_seed(m))),
+        );
+    }
+    reqs.iter()
+        .enumerate()
+        .map(|(id, &m)| {
+            let mut z = vec![0.0f32; D];
+            let mut w = vec![0.0f32; D];
+            let mut stats = [ColStats::default()];
+            router
+                .process(ModelKey::new(m, 0), &mut z, &cots[id], &mut w, &mut stats)
+                .expect("registered");
+            (z, w, stats[0])
+        })
+        .collect()
+}
+
+#[test]
+fn worker_panic_respawns_and_every_request_resolves_exactly_once() {
+    let total = 16;
+    let plan = FaultPlan::from_faults(vec![(3, Fault::Panic)]);
+    let router: ShardedRouter<f32> = ShardedRouter::new(shard_cfg(1, total));
+    router.register(ModelKey::new(0, 0), faulty(0, &plan));
+    let cots = cotangents(total + 4);
+    for id in 0..total {
+        router
+            .submit(0, ShardRequest::new(id, vec![0.0f32; D], cots[id].clone()))
+            .expect("queue sized for the whole run");
+    }
+    // Exactly once: `collect` returns despite the crash, and the id
+    // multiset is exactly the submitted set.
+    let responses = router.collect(total);
+    assert_eq!(responses.len(), total);
+    let mut ids: Vec<usize> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..total).collect::<Vec<_>>());
+    // The panic victim died with its batch; anything else either served
+    // fine or was an in-flight casualty of the same batch.
+    let victim = responses.iter().find(|r| r.id == 3).expect("resolved");
+    assert_eq!(victim.error, Some(ServeError::WorkerLost));
+    assert!(victim.z.is_empty() && victim.w.is_empty());
+    for r in &responses {
+        assert!(
+            r.ok() || r.error == Some(ServeError::WorkerLost),
+            "request {}: unexpected outcome {:?}",
+            r.id,
+            r.error
+        );
+        if r.ok() {
+            assert!(r.stats.converged, "served request {} converged", r.id);
+        }
+    }
+    let stats = &router.shard_stats()[0];
+    assert!(stats.respawns >= 1, "supervision respawned the worker");
+    assert_eq!(
+        stats.worker_lost,
+        responses.iter().filter(|r| !r.ok()).count(),
+        "casualty counter matches the typed outcomes"
+    );
+    // The respawned worker keeps serving: a post-crash round is clean.
+    for id in total..total + 4 {
+        router
+            .submit(0, ShardRequest::new(id, vec![0.0f32; D], cots[id].clone()))
+            .expect("respawned worker still admits");
+    }
+    let next = router.collect(4);
+    assert_eq!(next.len(), 4);
+    assert!(next.iter().all(|r| r.ok() && r.stats.converged));
+    router.shutdown();
+}
+
+#[test]
+fn fifo_within_key_survives_a_worker_crash() {
+    // A panic mid-stream (and the queue re-homing it triggers at 2 shards):
+    // per-key admission stamps must still recover submission order,
+    // casualties included.
+    let total = 32;
+    let plan = FaultPlan::from_faults(vec![(10, Fault::Panic)]);
+    let router: ShardedRouter<f32> = ShardedRouter::new(shard_cfg(2, total));
+    let reqs: Vec<u32> = (0..total as u32).map(|i| i % 2).collect();
+    for m in 0..2u32 {
+        router.register(ModelKey::new(m, 0), faulty(m, &plan));
+    }
+    let cots = cotangents(total);
+    for (id, &m) in reqs.iter().enumerate() {
+        router
+            .submit(m, ShardRequest::new(id, vec![0.0f32; D], cots[id].clone()))
+            .expect("queue sized for the whole run");
+    }
+    let responses = router.collect(total);
+    assert_eq!(responses.len(), total);
+    for m in 0..2u32 {
+        let key = ModelKey::new(m, 0);
+        let mut of_key: Vec<_> = responses.iter().filter(|r| r.key == key).collect();
+        of_key.sort_by_key(|r| r.seq);
+        let got: Vec<usize> = of_key.iter().map(|r| r.id).collect();
+        let mut expected = got.clone();
+        expected.sort_unstable();
+        assert_eq!(
+            got, expected,
+            "admission stamps of {key} recover submission order across the crash"
+        );
+    }
+    let respawns: usize = router.shard_stats().iter().map(|s| s.respawns).sum();
+    assert!(respawns >= 1, "the injected panic killed a worker");
+    router.shutdown();
+}
+
+#[test]
+fn chaos_fault_free_requests_match_the_single_threaded_reference_bit_for_bit() {
+    // Request id → model id: evens on model 0, odds on model 1. The panic
+    // and one NaN land on model 1, one NaN on model 0, the straggler on
+    // model 1 — so both keys see faults and both keys carry clean traffic.
+    let total = 32;
+    let reqs: Vec<u32> = (0..total as u32).map(|i| i % 2).collect();
+    let cots = cotangents(total);
+    let plan = FaultPlan::from_faults(vec![
+        (3, Fault::Panic),
+        (7, Fault::Nan),
+        (12, Fault::Nan),
+        (19, Fault::Straggle { delay_s: 2e-3 }),
+    ]);
+    let reference = run_reference(&reqs, &cots);
+    let router: ShardedRouter<f32> = ShardedRouter::new(shard_cfg(2, total));
+    for m in 0..2u32 {
+        router.register(ModelKey::new(m, 0), faulty(m, &plan));
+    }
+    for (id, &m) in reqs.iter().enumerate() {
+        router
+            .submit(m, ShardRequest::new(id, vec![0.0f32; D], cots[id].clone()))
+            .expect("queue sized for the whole run");
+    }
+    let mut responses = router.collect(total);
+    assert_eq!(responses.len(), total);
+    responses.sort_by_key(|r| r.id);
+    // Typed outcomes of the victims: the panic victim is always a
+    // WorkerLost casualty; a NaN victim is a ModelFault unless it shared
+    // the panicked batch (batch composition is timing-dependent); the
+    // straggler is value-neutral and, when served, must match the
+    // reference (checked below with the clean set).
+    assert_eq!(responses[3].error, Some(ServeError::WorkerLost));
+    assert!(
+        matches!(
+            responses[7].error,
+            Some(ServeError::ModelFault | ServeError::WorkerLost)
+        ),
+        "NaN victim 7: {:?}",
+        responses[7].error
+    );
+    // Request 12 is on model 0 — a different key than the panic — so its
+    // NaN can never be masked by the crash.
+    assert_eq!(responses[12].error, Some(ServeError::ModelFault));
+    // Clean requests: bit parity with the fault-free single-threaded
+    // reference, except in-flight casualties of the panicked batch (which
+    // are typed, not silently wrong).
+    let mut compared = 0usize;
+    for id in plan.clean_ids(total) {
+        let r = &responses[id];
+        if r.error == Some(ServeError::WorkerLost) {
+            assert_eq!(reqs[id], 1, "casualties share the panicked batch's key");
+            continue;
+        }
+        assert!(r.ok(), "clean request {id}: {:?}", r.error);
+        let (rz, rw, rs) = &reference[id];
+        assert_eq!(bits(&r.z), bits(rz), "forward bits, request {id}");
+        assert_eq!(bits(&r.w), bits(rw), "backward bits, request {id}");
+        assert_eq!(r.stats.iters, rs.iters, "iteration count, request {id}");
+        assert!(r.stats.converged);
+        compared += 1;
+    }
+    // The panicked batch holds at most max_batch requests, one of which is
+    // the victim itself — the parity set cannot silently collapse.
+    assert!(
+        compared >= total - plan.len() - 3,
+        "parity compared only {compared} requests"
+    );
+    router.shutdown();
+}
+
+#[test]
+fn deadlines_bounce_at_admission_and_expire_at_drain() {
+    let router: ShardedRouter<f32> = ShardedRouter::new(shard_cfg(1, 64));
+    // Model 0's first request straggles hard (10 ms per residual sweep);
+    // model 1 is clean. Both keys live on the single shard, and key 0's
+    // full batch is strictly older, so the worker must finish the
+    // straggler batch before it can drain key 1 — by which time key 1's
+    // deadlines have long lapsed.
+    let plan = FaultPlan::from_faults(vec![(0, Fault::Straggle { delay_s: 10e-3 })]);
+    router.register(ModelKey::new(0, 0), faulty(0, &plan));
+    router.register(ModelKey::new(1, 0), mk_model(1));
+    let cots = cotangents(9);
+    // Admission: an already-expired deadline bounces with the payload
+    // handed back, before it ever reaches a queue.
+    let mut dead = ShardRequest::new(8, vec![0.0f32; D], cots[8].clone());
+    dead.deadline = Some(0.0);
+    match router.submit(0, dead) {
+        Err(e @ SubmitError::DeadlineExceeded(_)) => {
+            assert_eq!(e.as_serve_error(), ServeError::DeadlineExceeded);
+            assert_eq!(e.into_request().id, 8);
+        }
+        other => panic!("expected an admission bounce, got {other:?}"),
+    }
+    // A full straggler-fronted batch on key 0 ...
+    for id in 0..4 {
+        router
+            .submit(0, ShardRequest::new(id, vec![0.0f32; D], cots[id].clone()))
+            .expect("admitted");
+    }
+    // ... then a full batch of short-deadline requests on key 1. The
+    // deadline is in the future at admission (so they queue) but expires
+    // during key 0's straggler service.
+    for id in 4..8 {
+        let mut req = ShardRequest::new(id, vec![0.0f32; D], cots[id].clone());
+        req.deadline = Some(router.now() + 2e-3);
+        router.submit(1, req).expect("admitted");
+    }
+    let mut responses = router.collect(8);
+    assert_eq!(responses.len(), 8);
+    responses.sort_by_key(|r| r.id);
+    for id in 0..4 {
+        assert!(
+            responses[id].ok() && responses[id].stats.converged,
+            "straggled batch served fine: request {id} {:?}",
+            responses[id].error
+        );
+    }
+    for id in 4..8 {
+        assert_eq!(
+            responses[id].error,
+            Some(ServeError::DeadlineExceeded),
+            "request {id} expired at drain"
+        );
+        assert!(responses[id].z.is_empty() && responses[id].w.is_empty());
+    }
+    let stats = &router.shard_stats()[0];
+    assert_eq!(stats.deadline_expired, 4);
+    assert_eq!(stats.respawns, 0, "no supervision events in this scenario");
+    router.shutdown();
+}

@@ -31,6 +31,7 @@ fn cfg(max_batch: usize, tol: f64) -> EngineConfig {
         fallback_ratio: None,
         recalib: None,
         col_budget: None,
+        breaker: None,
     }
 }
 

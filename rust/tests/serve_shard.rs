@@ -77,18 +77,12 @@ fn run_sharded(
     }
     for (id, &m) in reqs.iter().enumerate() {
         router
-            .submit(
-                m,
-                ShardRequest {
-                    id,
-                    z0: vec![0.0f32; D],
-                    cotangent: cots[id].clone(),
-                },
-            )
+            .submit(m, ShardRequest::new(id, vec![0.0f32; D], cots[id].clone()))
             .expect("queue sized for the whole run");
     }
     let mut out = router.collect(reqs.len());
     assert_eq!(out.len(), reqs.len());
+    assert!(out.iter().all(|r| r.ok()), "fault-free run has no typed failures");
     out.sort_by_key(|r| r.id);
     let res = out.into_iter().map(|r| (r.z, r.w, r.stats)).collect();
     router.shutdown();
@@ -172,14 +166,7 @@ fn fifo_within_key_survives_work_stealing() {
     // Per-key submission order = increasing request id.
     for (id, &m) in reqs.iter().enumerate() {
         router
-            .submit(
-                m,
-                ShardRequest {
-                    id,
-                    z0: vec![0.0f32; D],
-                    cotangent: cots[id].clone(),
-                },
-            )
+            .submit(m, ShardRequest::new(id, vec![0.0f32; D], cots[id].clone()))
             .expect("queue sized for the whole run");
     }
     let responses = router.collect(reqs.len());
@@ -231,14 +218,7 @@ fn live_swap_serves_old_then_new_and_invalidates_exactly_one_key() {
     let cots = cotangents(24);
     let submit = |id: usize, m: u32| -> ModelKey {
         router
-            .submit(
-                m,
-                ShardRequest {
-                    id,
-                    z0: vec![0.0f32; D],
-                    cotangent: cots[id].clone(),
-                },
-            )
+            .submit(m, ShardRequest::new(id, vec![0.0f32; D], cots[id].clone()))
             .expect("routed")
     };
     // Phase 1: pre-swap traffic on both models.
