@@ -1,0 +1,189 @@
+//! Minimal blocking HTTP/1.1 client for the loopback drivers and tests.
+//!
+//! Just enough protocol to talk to [`crate::http::server::HttpServer`]:
+//! keep-alive connections, `Content-Length` framing, no redirects, no
+//! TLS. The load generator's TCP driver and the integration tests both
+//! sit on it, so the server is always exercised through real sockets
+//! rather than hand-built byte strings.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// One parsed response.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    /// Lower-cased header names.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == lower)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 (lossy — diagnostics only).
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// A keep-alive connection to one server. Reconnects transparently if
+/// the server closed the previous exchange (`Connection: close`).
+pub struct HttpClient {
+    addr: SocketAddr,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr) -> std::io::Result<HttpClient> {
+        Ok(HttpClient {
+            addr,
+            conn: Some(BufReader::new(TcpStream::connect(addr)?)),
+        })
+    }
+
+    /// `POST path` with a JSON body (plus optional extra headers).
+    pub fn post_json(
+        &mut self,
+        path: &str,
+        body: &str,
+        extra: &[(&str, &str)],
+    ) -> std::io::Result<ClientResponse> {
+        self.request("POST", path, extra, Some(body.as_bytes()))
+    }
+
+    /// `GET path`.
+    pub fn get(&mut self, path: &str) -> std::io::Result<ClientResponse> {
+        self.request("GET", path, &[], None)
+    }
+
+    /// Issue one request, reconnecting once if the pooled connection was
+    /// closed server-side between exchanges.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        extra: &[(&str, &str)],
+        body: Option<&[u8]>,
+    ) -> std::io::Result<ClientResponse> {
+        for attempt in 0..2 {
+            if self.conn.is_none() {
+                self.conn = Some(BufReader::new(TcpStream::connect(self.addr)?));
+            }
+            match self.exchange(method, path, extra, body) {
+                Ok(resp) => {
+                    if resp.header("connection") == Some("close") {
+                        self.conn = None;
+                    }
+                    return Ok(resp);
+                }
+                Err(e) if attempt == 0 => {
+                    // A keep-alive connection the server dropped between
+                    // exchanges surfaces as EOF/reset on the next use —
+                    // retry once on a fresh connection.
+                    self.conn = None;
+                    let retriable = matches!(
+                        e.kind(),
+                        std::io::ErrorKind::UnexpectedEof
+                            | std::io::ErrorKind::ConnectionReset
+                            | std::io::ErrorKind::BrokenPipe
+                    );
+                    if !retriable {
+                        return Err(e);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!("loop returns on the second attempt");
+    }
+
+    fn exchange(
+        &mut self,
+        method: &str,
+        path: &str,
+        extra: &[(&str, &str)],
+        body: Option<&[u8]>,
+    ) -> std::io::Result<ClientResponse> {
+        let reader = self.conn.as_mut().expect("connection established above");
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: shine\r\n");
+        for (k, v) in extra {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        if let Some(b) = body {
+            head.push_str(&format!("content-type: application/json\r\ncontent-length: {}\r\n", b.len()));
+        }
+        head.push_str("\r\n");
+        {
+            let w = reader.get_mut();
+            w.write_all(head.as_bytes())?;
+            if let Some(b) = body {
+                w.write_all(b)?;
+            }
+            w.flush()?;
+        }
+        read_response(reader)
+    }
+}
+
+fn read_response<R: BufRead>(r: &mut R) -> std::io::Result<ClientResponse> {
+    let status_line = read_line(r)?;
+    let status = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| bad(format!("malformed status line: {status_line:?}")))?;
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?;
+        if line.is_empty() {
+            break;
+        }
+        let Some(colon) = line.find(':') else {
+            return Err(bad(format!("malformed header: {line:?}")));
+        };
+        headers.push((
+            line[..colon].trim().to_ascii_lowercase(),
+            line[colon + 1..].trim().to_string(),
+        ));
+    }
+    let len = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse::<usize>().ok())
+        .ok_or_else(|| bad("response without content-length".to_string()))?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(ClientResponse {
+        status,
+        headers,
+        body,
+    })
+}
+
+fn read_line<R: BufRead>(r: &mut R) -> std::io::Result<String> {
+    let mut buf = Vec::new();
+    let got = r.read_until(b'\n', &mut buf)?;
+    if got == 0 || buf.last() != Some(&b'\n') {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "connection closed mid-response",
+        ));
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map_err(|_| bad("non-UTF-8 response head".to_string()))
+}
+
+fn bad(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}

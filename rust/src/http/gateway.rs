@@ -1,0 +1,572 @@
+//! The bridge between HTTP and the sharded router: typed status mapping,
+//! request/response JSON, and the completion-forwarding collector thread.
+//!
+//! [`ShardedRouter`] is a submit/collect machine — responses come back in
+//! completion order on a shared queue, not per caller. The HTTP surface
+//! needs per-request rendezvous, so [`Gateway`] runs **one collector
+//! thread** that drains [`ShardedRouter::collect_timeout`] and delivers
+//! each response to the slot its connection handler is parked on. Handlers
+//! never touch the shared completion queue; the router's exactly-once
+//! outcome contract becomes an exactly-once slot fill.
+//!
+//! The status mapping is canonical and lives in exactly one place
+//! ([`serve_status`]): every [`ServeError`] variant maps to exactly one
+//! HTTP status, pinned by an exhaustive-match unit test below. Admission
+//! uses [`RetryPolicy::none`] by default — the server sheds with a fast
+//! 429 + `Retry-After` and lets the *client* back off, instead of parking
+//! connection handlers in server-side sleeps.
+
+use crate::http::json::{JsonBuilder, LazyDoc};
+use crate::http::proto::HttpError;
+use crate::linalg::vecops::Elem;
+use crate::serve::engine::BreakerState;
+use crate::serve::scheduler::RetryPolicy;
+use crate::serve::shard::{
+    KeyMetrics, ServeError, ShardRequest, ShardResponse, ShardedRouter, SubmitError,
+};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// The canonical [`ServeError`] → HTTP mapping: one status and one stable
+/// machine-readable error token per variant. The exhaustive match (no
+/// wildcard arm) means a new variant fails compilation here rather than
+/// silently serving a default status; uniqueness is pinned by
+/// `every_serve_error_has_exactly_one_status`.
+pub fn serve_status(e: &ServeError) -> (u16, &'static str) {
+    match e {
+        ServeError::QueueFull { .. } => (429, "queue_full"),
+        ServeError::DeadlineExceeded => (504, "deadline_exceeded"),
+        ServeError::Unconverged => (422, "unconverged"),
+        ServeError::ModelFault => (502, "model_fault"),
+        ServeError::WorkerLost => (503, "worker_lost"),
+    }
+}
+
+/// Numeric encoding of [`BreakerState`] for the `/metrics` exposition:
+/// 0 = closed (healthy), 1 = open (degraded), 2 = half-open (probing).
+pub fn breaker_code(b: BreakerState) -> u32 {
+    match b {
+        BreakerState::Closed => 0,
+        BreakerState::Open { .. } => 1,
+        BreakerState::HalfOpen => 2,
+    }
+}
+
+/// One parsed `/v1/solve` call, precision-agnostic (`f64` is the wire
+/// format; the backend narrows to its storage precision).
+#[derive(Clone, Debug)]
+pub struct SolveCall {
+    pub model: u32,
+    /// Initial iterate; `None` = zeros (the deterministic default every
+    /// in-process driver uses).
+    pub z0: Option<Vec<f64>>,
+    pub cotangent: Vec<f64>,
+    /// Relative deadline in seconds from admission; `None` never expires.
+    pub deadline_s: Option<f64>,
+}
+
+/// What the backend answers: already rendered to status + JSON, plus the
+/// header-borne retry hint and submit-attempt count.
+#[derive(Clone, Debug)]
+pub struct SolveReply {
+    pub status: u16,
+    /// JSON body (success document or `{"error", "message", ...}`).
+    pub body: String,
+    /// Backpressure hint, seconds (429 replies).
+    pub retry_after: Option<f64>,
+    /// Queue-full retries the submit path performed before resolving.
+    pub attempts: usize,
+}
+
+impl SolveReply {
+    fn error(status: u16, token: &str, message: &str, retry_after: Option<f64>) -> SolveReply {
+        let mut b = JsonBuilder::obj().text("error", token).text("message", message);
+        if let Some(ra) = retry_after {
+            b = b.num("retry_after", ra);
+        }
+        SolveReply {
+            status,
+            body: b.finish(),
+            retry_after,
+            attempts: 0,
+        }
+    }
+}
+
+/// What the HTTP server needs from a solve tier. Object-safe so the
+/// server is monomorphization-free: one `Arc<dyn SolveBackend>` serves
+/// every panel-precision instantiation of [`Gateway`].
+pub trait SolveBackend: Send + Sync {
+    /// Fixed-point dimension d (the required `cotangent`/`z0` length).
+    fn dim(&self) -> usize;
+    /// Resolve one call to a rendered reply. **Blocks** until the router
+    /// produces the request's typed outcome (bounded by the deadline).
+    fn solve(&self, call: SolveCall) -> SolveReply;
+    /// `/healthz` body: liveness + per-shard respawn counts.
+    fn health(&self) -> String;
+    /// `/metrics` body: text exposition of router + per-key telemetry.
+    fn metrics(&self) -> String;
+}
+
+/// Parse a `/v1/solve` request body into a [`SolveCall`] with the lazy
+/// path-scanner — only the four known paths are decoded, bytes after the
+/// last hit are never validated (ADR-002 discipline). Errors are typed
+/// 400s carrying the scanner's position/diagnosis.
+pub fn parse_solve_call(
+    body: &[u8],
+    d: usize,
+    header_deadline_ms: Option<f64>,
+) -> Result<SolveCall, HttpError> {
+    let doc = LazyDoc::new(body);
+    let bad = |e: crate::http::json::ScanError| {
+        HttpError::new(400, format!("invalid JSON body: {e}"))
+    };
+    let model = doc.u32_at(&["model"]).map_err(bad)?.unwrap_or(0);
+    let cotangent = doc
+        .f64_vec_at(&["cotangent"], d)
+        .map_err(bad)?
+        .ok_or_else(|| HttpError::new(400, "missing required field: cotangent"))?;
+    if cotangent.len() != d {
+        return Err(HttpError::new(
+            400,
+            format!("cotangent has {} elements, model dimension is {d}", cotangent.len()),
+        ));
+    }
+    let z0 = doc.f64_vec_at(&["z0"], d).map_err(bad)?;
+    if let Some(z) = &z0 {
+        if z.len() != d {
+            return Err(HttpError::new(
+                400,
+                format!("z0 has {} elements, model dimension is {d}", z.len()),
+            ));
+        }
+    }
+    // Body field wins over the x-deadline-ms header.
+    let deadline_ms = match doc.f64_at(&["deadline_ms"]).map_err(bad)? {
+        Some(ms) => Some(ms),
+        None => header_deadline_ms,
+    };
+    let deadline_s = match deadline_ms {
+        Some(ms) if !(ms.is_finite() && ms > 0.0) => {
+            return Err(HttpError::new(400, "deadline_ms must be finite and positive"))
+        }
+        Some(ms) => Some(ms / 1e3),
+        None => None,
+    };
+    Ok(SolveCall {
+        model,
+        z0,
+        cotangent,
+        deadline_s,
+    })
+}
+
+/// Per-request rendezvous: the connection handler parks on the condvar,
+/// the collector fills the slot and wakes it.
+type Slot<E> = Arc<(Mutex<Option<ShardResponse<E>>>, Condvar)>;
+
+struct PendingMap<E: Elem> {
+    slots: Mutex<HashMap<usize, Slot<E>>>,
+    /// Responses whose waiter had already given up (deadline-expired
+    /// handlers deregister; the typed outcome still arrives here).
+    orphans: AtomicUsize,
+}
+
+/// HTTP-facing front of one [`ShardedRouter`] instantiation. Cheap to
+/// share (`Arc` it into the server); dropping the last handle stops the
+/// collector thread and shuts the router down.
+pub struct Gateway<E: Elem, EU: Elem = E, EV: Elem = EU> {
+    router: Arc<ShardedRouter<E, EU, EV>>,
+    /// Fixed-point dimension shared by every registered model (the
+    /// sharded tier requires one; asserted by the drivers).
+    d: usize,
+    pending: Arc<PendingMap<E>>,
+    next_id: AtomicUsize,
+    retry: RetryPolicy,
+    /// Bound on the post-submit wait when the request carries no deadline
+    /// (a liveness backstop — the router's exactly-once contract means it
+    /// fires only if the deployment is wedged).
+    reply_timeout_s: f64,
+    stop: Arc<AtomicBool>,
+    collector: Option<JoinHandle<()>>,
+}
+
+/// Margin added to a request's deadline before the handler gives up
+/// waiting: the drain loop types the outcome at the deadline, this covers
+/// its trip through the completion queue.
+const REPLY_MARGIN_S: f64 = 0.25;
+/// Collector wake cadence; bounds shutdown latency, not delivery latency
+/// (deliveries ride the completion condvar).
+const COLLECT_TICK_S: f64 = 0.05;
+
+impl<E: Elem, EU: Elem, EV: Elem> Gateway<E, EU, EV> {
+    /// Wrap a router and start the collector thread. `d` is the shared
+    /// fixed-point dimension of every model this router serves; `retry`
+    /// governs the submit path ([`RetryPolicy::none`] for the HTTP
+    /// default — shed fast, let the client back off on the echoed
+    /// `Retry-After`).
+    pub fn new(
+        router: ShardedRouter<E, EU, EV>,
+        d: usize,
+        retry: RetryPolicy,
+    ) -> Gateway<E, EU, EV> {
+        let router = Arc::new(router);
+        let pending = Arc::new(PendingMap {
+            slots: Mutex::new(HashMap::new()),
+            orphans: AtomicUsize::new(0),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let collector = {
+            let router = Arc::clone(&router);
+            let pending = Arc::clone(&pending);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    for resp in router.collect_timeout(1, COLLECT_TICK_S) {
+                        let slot = {
+                            let mut slots =
+                                pending.slots.lock().unwrap_or_else(|p| p.into_inner());
+                            slots.remove(&resp.id)
+                        };
+                        match slot {
+                            Some(s) => {
+                                *s.0.lock().unwrap_or_else(|p| p.into_inner()) = Some(resp);
+                                s.1.notify_one();
+                            }
+                            None => {
+                                pending.orphans.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            })
+        };
+        Gateway {
+            router,
+            d,
+            pending,
+            next_id: AtomicUsize::new(0),
+            retry,
+            reply_timeout_s: 60.0,
+            stop,
+            collector: Some(collector),
+        }
+    }
+
+    /// The wrapped router (registration, swaps, telemetry snapshots).
+    pub fn router(&self) -> &ShardedRouter<E, EU, EV> {
+        &self.router
+    }
+
+    /// Typed outcomes delivered after their waiter gave up.
+    pub fn orphans(&self) -> usize {
+        self.pending.orphans.load(Ordering::Relaxed)
+    }
+
+    fn wait_for(&self, id: usize, slot: &Slot<E>, give_up_at: f64) -> Option<ShardResponse<E>> {
+        let mut guard = slot.0.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(resp) = guard.take() {
+                return Some(resp);
+            }
+            let left = give_up_at - self.router.now();
+            if left <= 0.0 {
+                // Deregister so the collector counts the late outcome as
+                // an orphan instead of filling a dead slot.
+                let mut slots = self.pending.slots.lock().unwrap_or_else(|p| p.into_inner());
+                slots.remove(&id);
+                // The response may have been delivered between the take()
+                // above and the deregistration — final check under both
+                // locks' effects.
+                return guard.take();
+            }
+            let (g, _) = slot
+                .1
+                .wait_timeout(guard, std::time::Duration::from_secs_f64(left))
+                .unwrap_or_else(|p| p.into_inner());
+            guard = g;
+        }
+    }
+
+    fn render_ok(&self, resp: &ShardResponse<E>, attempts: usize) -> SolveReply {
+        let body = JsonBuilder::obj()
+            .uint("id", resp.id as u64)
+            .uint("model", resp.key.model as u64)
+            .uint("version", resp.key.version as u64)
+            .uint("shard", resp.shard as u64)
+            .uint("seq", resp.seq)
+            .uint("iters", resp.stats.iters as u64)
+            .num("residual", resp.stats.residual)
+            .boolean("converged", resp.stats.converged)
+            .num("latency_s", resp.completed - resp.enqueued)
+            .nums("z", resp.z.iter().map(|x| x.to_f64()))
+            .nums("w", resp.w.iter().map(|x| x.to_f64()))
+            .uint("attempts", attempts as u64)
+            .finish();
+        SolveReply {
+            status: 200,
+            body,
+            retry_after: None,
+            attempts,
+        }
+    }
+
+    fn render_err(&self, e: &ServeError, attempts: usize) -> SolveReply {
+        let (status, token) = serve_status(e);
+        let retry_after = match e {
+            ServeError::QueueFull { retry_after } => Some(*retry_after),
+            _ => None,
+        };
+        let mut reply = SolveReply::error(status, token, &e.to_string(), retry_after);
+        reply.attempts = attempts;
+        reply
+    }
+}
+
+impl<E: Elem, EU: Elem, EV: Elem> SolveBackend for Gateway<E, EU, EV> {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn solve(&self, call: SolveCall) -> SolveReply {
+        let d = self.dim();
+        if call.cotangent.len() != d {
+            return SolveReply::error(
+                400,
+                "bad_dimension",
+                &format!("cotangent has {} elements, expected {d}", call.cotangent.len()),
+                None,
+            );
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let z0: Vec<E> = match &call.z0 {
+            Some(z) => z.iter().map(|&x| E::from_f64(x)).collect(),
+            None => vec![E::ZERO; d],
+        };
+        let cot: Vec<E> = call.cotangent.iter().map(|&x| E::from_f64(x)).collect();
+        let mut req = ShardRequest::new(id, z0, cot);
+        let now = self.router.now();
+        req.deadline = call.deadline_s.map(|s| now + s);
+        let give_up_at = match call.deadline_s {
+            Some(s) => now + s + REPLY_MARGIN_S,
+            None => now + self.reply_timeout_s,
+        };
+
+        // Slot registered BEFORE submit: the collector may deliver the
+        // response before submit_with_retry even returns.
+        let slot: Slot<E> = Arc::new((Mutex::new(None), Condvar::new()));
+        {
+            let mut slots = self.pending.slots.lock().unwrap_or_else(|p| p.into_inner());
+            slots.insert(id, Arc::clone(&slot));
+        }
+
+        let (res, attempts) = self.router.submit_with_retry(call.model, req, &self.retry);
+        if let Err(e) = res {
+            // Bounced at admission: nothing will ever fill the slot.
+            let mut slots = self.pending.slots.lock().unwrap_or_else(|p| p.into_inner());
+            slots.remove(&id);
+            drop(slots);
+            if let SubmitError::UnknownModel(_) = e {
+                let mut reply = SolveReply::error(
+                    404,
+                    "unknown_model",
+                    &format!("no live version registered for model {}", call.model),
+                    None,
+                );
+                reply.attempts = attempts;
+                return reply;
+            }
+            return self.render_err(&e.as_serve_error(), attempts);
+        }
+
+        match self.wait_for(id, &slot, give_up_at) {
+            Some(resp) => match resp.error {
+                None => self.render_ok(&resp, attempts),
+                Some(e) => self.render_err(&e, attempts),
+            },
+            None => self.render_err(&ServeError::DeadlineExceeded, attempts),
+        }
+    }
+
+    fn health(&self) -> String {
+        let stats = self.router.shard_stats();
+        let depths = self.router.queue_depths();
+        let quarantined = self.router.quarantined_keys();
+        let mut shards = String::from("[");
+        for (i, (s, q)) in stats.iter().zip(&depths).enumerate() {
+            if i > 0 {
+                shards.push(',');
+            }
+            shards.push_str(
+                &JsonBuilder::obj()
+                    .uint("shard", i as u64)
+                    .uint("respawns", s.respawns as u64)
+                    .uint("worker_lost", s.worker_lost as u64)
+                    .uint("queue_depth", *q as u64)
+                    .finish(),
+            );
+        }
+        shards.push(']');
+        let mut quars = String::from("[");
+        for (i, (k, strikes)) in quarantined.iter().enumerate() {
+            if i > 0 {
+                quars.push(',');
+            }
+            quars.push_str(
+                &JsonBuilder::obj()
+                    .text("key", &k.to_string())
+                    .uint("strikes", *strikes as u64)
+                    .finish(),
+            );
+        }
+        quars.push(']');
+        JsonBuilder::obj()
+            .text("status", "ok")
+            .uint("pending", self.router.pending() as u64)
+            .raw("shards", &shards)
+            .raw("quarantined", &quars)
+            .finish()
+    }
+
+    fn metrics(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let stats = self.router.shard_stats();
+        let depths = self.router.queue_depths();
+        let hints = self.router.retry_hints();
+        for (i, s) in stats.iter().enumerate() {
+            let l = format!("{{shard=\"{i}\"}}");
+            out.push_str(&format!("shine_shard_served_total{l} {}\n", s.served));
+            out.push_str(&format!("shine_shard_batches_total{l} {}\n", s.batches));
+            out.push_str(&format!("shine_shard_steals_total{l} {}\n", s.steals));
+            out.push_str(&format!("shine_shard_respawns_total{l} {}\n", s.respawns));
+            out.push_str(&format!("shine_shard_worker_lost_total{l} {}\n", s.worker_lost));
+            out.push_str(&format!(
+                "shine_shard_deadline_expired_total{l} {}\n",
+                s.deadline_expired
+            ));
+            out.push_str(&format!("shine_shard_quarantined_total{l} {}\n", s.quarantined));
+            out.push_str(&format!("shine_shard_queue_depth{l} {}\n", depths[i]));
+            let mut hint = String::new();
+            crate::util::json::write_num(&mut hint, hints[i]);
+            out.push_str(&format!("shine_shard_retry_after_seconds{l} {hint}\n"));
+        }
+        for m in self.router.key_metrics() {
+            push_key_metrics(&mut out, &m);
+        }
+        out.push_str(&format!(
+            "shine_gateway_orphaned_responses_total {}\n",
+            self.orphans()
+        ));
+        out
+    }
+}
+
+/// Text-exposition block for one key's merged telemetry (shared with the
+/// server's test hooks).
+pub fn push_key_metrics(out: &mut String, m: &KeyMetrics) {
+    let l = format!("{{key=\"{}\"}}", m.key);
+    out.push_str(&format!("shine_key_served_total{l} {}\n", m.served));
+    out.push_str(&format!("shine_key_batches_total{l} {}\n", m.batches));
+    out.push_str(&format!("shine_key_fwd_iters_total{l} {}\n", m.fwd_iters));
+    out.push_str(&format!("shine_key_fallback_cols_total{l} {}\n", m.fallback_cols));
+    out.push_str(&format!("shine_key_nonfinite_cols_total{l} {}\n", m.nonfinite_cols));
+    out.push_str(&format!("shine_key_unconverged_total{l} {}\n", m.unconverged));
+    out.push_str(&format!("shine_key_model_faults_total{l} {}\n", m.model_faults));
+    out.push_str(&format!("shine_key_calibrations_total{l} {}\n", m.calibrations));
+    out.push_str(&format!("shine_key_recalibrations_total{l} {}\n", m.recalibrations));
+    let mut rate = String::new();
+    crate::util::json::write_num(&mut rate, m.fallback_rate);
+    out.push_str(&format!("shine_key_fallback_rate{l} {rate}\n"));
+    out.push_str(&format!(
+        "shine_key_estimate_stale{l} {}\n",
+        m.estimate_stale as u32
+    ));
+    out.push_str(&format!("shine_key_breaker_state{l} {}\n", breaker_code(m.breaker)));
+    out.push_str(&format!("shine_key_strikes{l} {}\n", m.strikes));
+    out.push_str(&format!("shine_key_quarantined{l} {}\n", m.quarantined as u32));
+}
+
+impl<E: Elem, EU: Elem, EV: Elem> Drop for Gateway<E, EU, EV> {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.collector.take() {
+            let _ = h.join();
+        }
+        // The router (last Arc here once the collector has exited) joins
+        // its workers in its own Drop.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_serve_error_has_exactly_one_status() {
+        // One mapping per variant; the match in serve_status has no
+        // wildcard so this list is necessarily exhaustive.
+        let cases = [
+            (ServeError::QueueFull { retry_after: 0.1 }, 429, "queue_full"),
+            (ServeError::DeadlineExceeded, 504, "deadline_exceeded"),
+            (ServeError::Unconverged, 422, "unconverged"),
+            (ServeError::ModelFault, 502, "model_fault"),
+            (ServeError::WorkerLost, 503, "worker_lost"),
+        ];
+        let mut statuses: Vec<u16> = Vec::new();
+        let mut tokens: Vec<&str> = Vec::new();
+        for (e, status, token) in cases {
+            let (s, t) = serve_status(&e);
+            assert_eq!((s, t), (status, token), "{e:?}");
+            assert!(!statuses.contains(&s), "status {s} mapped twice");
+            assert!(!tokens.contains(&t), "token {t} mapped twice");
+            statuses.push(s);
+            tokens.push(t);
+        }
+    }
+
+    #[test]
+    fn breaker_codes_are_stable() {
+        assert_eq!(breaker_code(BreakerState::Closed), 0);
+        assert_eq!(breaker_code(BreakerState::Open { remaining: 5 }), 1);
+        assert_eq!(breaker_code(BreakerState::HalfOpen), 2);
+    }
+
+    #[test]
+    fn parse_solve_call_defaults_and_validation() {
+        let d = 3;
+        let ok = parse_solve_call(br#"{"cotangent":[1,2,3]}"#, d, None).unwrap();
+        assert_eq!(ok.model, 0);
+        assert!(ok.z0.is_none());
+        assert_eq!(ok.cotangent, vec![1.0, 2.0, 3.0]);
+        assert!(ok.deadline_s.is_none());
+
+        let full = parse_solve_call(
+            br#"{"model":2,"z0":[0,0,0],"cotangent":[1,2,3],"deadline_ms":250}"#,
+            d,
+            Some(1000.0),
+        )
+        .unwrap();
+        assert_eq!(full.model, 2);
+        assert_eq!(full.z0.as_deref(), Some(&[0.0, 0.0, 0.0][..]));
+        // Body field wins over the header.
+        assert!((full.deadline_s.unwrap() - 0.25).abs() < 1e-12);
+
+        let hdr = parse_solve_call(br#"{"cotangent":[1,2,3]}"#, d, Some(500.0)).unwrap();
+        assert!((hdr.deadline_s.unwrap() - 0.5).abs() < 1e-12);
+
+        for (body, needle) in [
+            (&br#"{}"#[..], "cotangent"),
+            (&br#"{"cotangent":[1,2]}"#[..], "3"),
+            (&br#"{"cotangent":[1,2,3],"z0":[1]}"#[..], "3"),
+            (&br#"{"cotangent":[1,2,3,4]}"#[..], "dimension"),
+            (&br#"{"cotangent":[1,2,3],"deadline_ms":-5}"#[..], "deadline"),
+            (&br#"{"cotangent":"#[..], "JSON"),
+        ] {
+            let e = parse_solve_call(body, d, None).unwrap_err();
+            assert_eq!(e.status, 400, "{body:?}");
+            assert!(e.msg.contains(needle), "{body:?} -> {}", e.msg);
+        }
+    }
+}

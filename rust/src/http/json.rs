@@ -1,0 +1,765 @@
+//! Lazy JSON for the serve front door: a path-scanner that extracts the
+//! few fields a solve request needs **without building a tree**, and a
+//! streaming builder for responses.
+//!
+//! A `POST /v1/solve` body is dominated by two long float arrays (`z0`,
+//! `cotangent` — the fixed-point seed and the SHINE backward right-hand
+//! side). A full-tree parse ([`crate::util::json::parse`]) would allocate
+//! a `Json::Arr` of boxed `Json::Num`s per element and then immediately
+//! flatten it back into a `Vec<f64>` — most of the work is building a
+//! structure the handler never looks at. [`LazyDoc`] instead *scans*: it
+//! walks the object's keys with a validating cursor, skips values it was
+//! not asked for, and parses numbers directly out of the byte slice into
+//! the caller's `Vec<f64>` (the mik-sdk ADR-002 observation: lazy
+//! path-scanning beats full-tree parsing by an order of magnitude when
+//! only a few paths are read).
+//!
+//! The scanner is **strict on what it touches and silent on what it
+//! skips**: every byte on the path to a requested value (including skipped
+//! sibling values) is grammar-checked — malformed input, truncation,
+//! nesting beyond [`MAX_DEPTH`], lone surrogates, unescaped control
+//! characters, and out-of-range numbers all surface as a typed
+//! [`ScanError`] (never a panic — pinned by the fuzz loops in
+//! `rust/tests/http_parse.rs`) — but bytes *after* the last requested
+//! value are never read. Duplicate keys resolve first-match-wins, the
+//! natural order for a single forward scan.
+//!
+//! Responses use [`JsonBuilder`], which streams fields into one `String`
+//! with the same number formatting as [`crate::util::json`] (shortest
+//! round-trip float `Display`, integral values as integers) — the bit-
+//! parity contract between the wire and the in-process router rides on
+//! every `f64` surviving the format/parse round trip exactly.
+
+use crate::util::json::{write_escaped, write_num};
+use std::fmt;
+
+/// Maximum value-nesting depth the scanner will follow. Deeper documents
+/// are rejected with a typed error instead of recursing toward a stack
+/// overflow (the classic deep-nesting attack on recursive parsers).
+pub const MAX_DEPTH: usize = 64;
+
+/// Typed scan failure: byte offset plus a static message. The HTTP layer
+/// maps every `ScanError` to a 400 response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScanError {
+    /// Byte offset in the document where the error was detected.
+    pub pos: usize,
+    pub msg: &'static str,
+}
+
+impl fmt::Display for ScanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} at byte {}", self.msg, self.pos)
+    }
+}
+
+impl std::error::Error for ScanError {}
+
+/// A JSON document scanned lazily, by path. Borrowing, zero-copy: the
+/// document bytes are walked per query and only requested values are
+/// materialized.
+pub struct LazyDoc<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> LazyDoc<'a> {
+    pub fn new(bytes: &'a [u8]) -> LazyDoc<'a> {
+        LazyDoc { b: bytes }
+    }
+
+    /// Raw bytes of the value at `path` (object keys, outermost first):
+    /// `Ok(None)` when any key on the path is absent, `Err` when the bytes
+    /// walked to reach it are not valid JSON. Bytes after the found value
+    /// are not scanned — that is the lazy contract.
+    pub fn path(&self, path: &[&str]) -> Result<Option<&'a [u8]>, ScanError> {
+        assert!(!path.is_empty(), "empty path");
+        let mut c = Cur { b: self.b, i: 0 };
+        let mut seg = 0usize;
+        loop {
+            c.ws();
+            if c.peek() != Some(b'{') {
+                if seg == 0 {
+                    return Err(c.err("document is not a JSON object"));
+                }
+                // An intermediate value of a non-object type: the path
+                // cannot continue, so it is absent (not malformed).
+                return Ok(None);
+            }
+            c.i += 1;
+            c.ws();
+            if c.peek() == Some(b'}') {
+                return Ok(None);
+            }
+            'members: loop {
+                c.ws();
+                if c.peek() != Some(b'"') {
+                    return Err(c.err("expected object key"));
+                }
+                let (ks, ke) = c.skip_string()?;
+                let hit = key_matches(&self.b[ks..ke], path[seg], ks)?;
+                c.ws();
+                if c.bump()? != b':' {
+                    return Err(c.err_at(c.i - 1, "expected ':' after object key"));
+                }
+                c.ws();
+                if hit {
+                    if seg + 1 == path.len() {
+                        let start = c.i;
+                        c.skip_value(0)?;
+                        return Ok(Some(&self.b[start..c.i]));
+                    }
+                    seg += 1;
+                    // Descend: the outer loop re-enters expecting '{'.
+                    break 'members;
+                }
+                c.skip_value(0)?;
+                c.ws();
+                match c.bump()? {
+                    b',' => continue,
+                    b'}' => return Ok(None),
+                    _ => return Err(c.err_at(c.i - 1, "expected ',' or '}' in object")),
+                }
+            }
+        }
+    }
+
+    /// The number at `path`, rejecting non-number values and overflow
+    /// (`1e999` is a typed error, never an `inf` smuggled into a solve).
+    pub fn f64_at(&self, path: &[&str]) -> Result<Option<f64>, ScanError> {
+        match self.path(path)? {
+            None => Ok(None),
+            Some(sl) => {
+                let pos = offset_in(self.b, sl);
+                Ok(Some(parse_number(sl, pos)?))
+            }
+        }
+    }
+
+    /// The non-negative integer at `path` (accepts any integral JSON
+    /// number representation, e.g. `1e2`).
+    pub fn u32_at(&self, path: &[&str]) -> Result<Option<u32>, ScanError> {
+        match self.path(path)? {
+            None => Ok(None),
+            Some(sl) => {
+                let pos = offset_in(self.b, sl);
+                let x = parse_number(sl, pos)?;
+                if x < 0.0 || x != x.trunc() || x > u32::MAX as f64 {
+                    return Err(ScanError {
+                        pos,
+                        msg: "expected a non-negative integer",
+                    });
+                }
+                Ok(Some(x as u32))
+            }
+        }
+    }
+
+    /// The string at `path`, unescaped.
+    pub fn str_at(&self, path: &[&str]) -> Result<Option<String>, ScanError> {
+        match self.path(path)? {
+            None => Ok(None),
+            Some(sl) => {
+                let pos = offset_in(self.b, sl);
+                if sl.first() != Some(&b'"') {
+                    return Err(ScanError {
+                        pos,
+                        msg: "expected a string",
+                    });
+                }
+                Ok(Some(unescape(&sl[1..sl.len() - 1], pos + 1)?))
+            }
+        }
+    }
+
+    /// The flat number array at `path`, parsed straight into a `Vec<f64>`
+    /// — the hot path for `z0`/cotangent payloads. `max_len` bounds the
+    /// allocation (the handler passes the model dimension, so an oversized
+    /// array is a typed error before any memory is committed to it).
+    pub fn f64_vec_at(
+        &self,
+        path: &[&str],
+        max_len: usize,
+    ) -> Result<Option<Vec<f64>>, ScanError> {
+        let Some(sl) = self.path(path)? else {
+            return Ok(None);
+        };
+        let base = offset_in(self.b, sl);
+        let mut c = Cur { b: sl, i: 0 };
+        c.ws();
+        if c.peek() != Some(b'[') {
+            return Err(ScanError {
+                pos: base + c.i,
+                msg: "expected an array of numbers",
+            });
+        }
+        c.i += 1;
+        let mut out = Vec::new();
+        c.ws();
+        if c.peek() == Some(b']') {
+            return Ok(Some(out));
+        }
+        loop {
+            c.ws();
+            let start = c.i;
+            c.skip_number()
+                .map_err(|e| ScanError { pos: base + e.pos, msg: e.msg })?;
+            if out.len() >= max_len {
+                return Err(ScanError {
+                    pos: base + start,
+                    msg: "array longer than the model dimension",
+                });
+            }
+            out.push(parse_number(&sl[start..c.i], base + start)?);
+            c.ws();
+            match c.bump().map_err(|e| ScanError { pos: base + e.pos, msg: e.msg })? {
+                b',' => continue,
+                b']' => return Ok(Some(out)),
+                _ => {
+                    return Err(ScanError {
+                        pos: base + c.i - 1,
+                        msg: "expected ',' or ']' in array",
+                    })
+                }
+            }
+        }
+    }
+
+    /// Strict full validation: exactly one JSON value plus whitespace.
+    /// Not used on the serve hot path (that is the point of laziness);
+    /// the differential fuzz tests use it to compare scanner strictness
+    /// against the tree parser.
+    pub fn validate(&self) -> Result<(), ScanError> {
+        let mut c = Cur { b: self.b, i: 0 };
+        c.ws();
+        c.skip_value(0)?;
+        c.ws();
+        if c.i != c.b.len() {
+            return Err(c.err("trailing bytes after JSON value"));
+        }
+        Ok(())
+    }
+}
+
+/// Byte offset of subslice `sl` within `b` (both borrow the same buffer).
+fn offset_in(b: &[u8], sl: &[u8]) -> usize {
+    sl.as_ptr() as usize - b.as_ptr() as usize
+}
+
+/// Parse one grammar-validated number token, rejecting anything else and
+/// overflow to infinity.
+fn parse_number(sl: &[u8], pos: usize) -> Result<f64, ScanError> {
+    let mut c = Cur { b: sl, i: 0 };
+    c.skip_number().map_err(|e| ScanError {
+        pos: pos + e.pos,
+        msg: e.msg,
+    })?;
+    if c.i != sl.len() {
+        return Err(ScanError {
+            pos,
+            msg: "expected a number",
+        });
+    }
+    let s = std::str::from_utf8(sl).map_err(|_| ScanError {
+        pos,
+        msg: "invalid UTF-8 in number",
+    })?;
+    let x: f64 = s.parse().map_err(|_| ScanError {
+        pos,
+        msg: "malformed number",
+    })?;
+    if !x.is_finite() {
+        return Err(ScanError {
+            pos,
+            msg: "number out of range",
+        });
+    }
+    Ok(x)
+}
+
+/// Whether the raw (still-escaped) key bytes equal `want`. The fast path
+/// is a direct byte compare (real keys are plain ASCII); keys containing
+/// escapes are unescaped first so `"mo..."` still routes.
+fn key_matches(raw: &[u8], want: &str, pos: usize) -> Result<bool, ScanError> {
+    if !raw.contains(&b'\\') {
+        return Ok(raw == want.as_bytes());
+    }
+    Ok(unescape(raw, pos)? == want)
+}
+
+/// Unescape the content bytes of a JSON string (quotes already stripped,
+/// escapes already grammar-checked by `skip_string`). Handles `\uXXXX`
+/// including surrogate pairs; lone surrogates are a typed error.
+fn unescape(raw: &[u8], pos: usize) -> Result<String, ScanError> {
+    let mut out = String::with_capacity(raw.len());
+    let mut i = 0usize;
+    while i < raw.len() {
+        let c = raw[i];
+        if c != b'\\' {
+            // Raw UTF-8 passthrough: collect the longest escape-free run
+            // and validate it as UTF-8 once.
+            let start = i;
+            while i < raw.len() && raw[i] != b'\\' {
+                i += 1;
+            }
+            let s = std::str::from_utf8(&raw[start..i]).map_err(|_| ScanError {
+                pos: pos + start,
+                msg: "invalid UTF-8 in string",
+            })?;
+            out.push_str(s);
+            continue;
+        }
+        // skip_string guarantees a valid escape head follows.
+        i += 1;
+        match raw[i] {
+            b'"' => out.push('"'),
+            b'\\' => out.push('\\'),
+            b'/' => out.push('/'),
+            b'b' => out.push('\u{0008}'),
+            b'f' => out.push('\u{000C}'),
+            b'n' => out.push('\n'),
+            b'r' => out.push('\r'),
+            b't' => out.push('\t'),
+            b'u' => {
+                let hi = hex4(raw, i + 1, pos)?;
+                i += 4;
+                let cp = if (0xD800..0xDC00).contains(&hi) {
+                    // High surrogate: require the paired low surrogate.
+                    if raw.len() < i + 7 || raw[i + 1] != b'\\' || raw[i + 2] != b'u' {
+                        return Err(ScanError {
+                            pos: pos + i,
+                            msg: "lone surrogate in \\u escape",
+                        });
+                    }
+                    let lo = hex4(raw, i + 3, pos)?;
+                    if !(0xDC00..0xE000).contains(&lo) {
+                        return Err(ScanError {
+                            pos: pos + i,
+                            msg: "lone surrogate in \\u escape",
+                        });
+                    }
+                    i += 6;
+                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                } else if (0xDC00..0xE000).contains(&hi) {
+                    return Err(ScanError {
+                        pos: pos + i,
+                        msg: "lone surrogate in \\u escape",
+                    });
+                } else {
+                    hi
+                };
+                out.push(char::from_u32(cp).ok_or(ScanError {
+                    pos: pos + i,
+                    msg: "invalid \\u escape",
+                })?);
+            }
+            _ => {
+                return Err(ScanError {
+                    pos: pos + i,
+                    msg: "invalid escape",
+                })
+            }
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+fn hex4(raw: &[u8], at: usize, pos: usize) -> Result<u32, ScanError> {
+    if raw.len() < at + 4 {
+        return Err(ScanError {
+            pos: pos + at,
+            msg: "truncated \\u escape",
+        });
+    }
+    let mut v = 0u32;
+    for k in 0..4 {
+        let d = match raw[at + k] {
+            c @ b'0'..=b'9' => (c - b'0') as u32,
+            c @ b'a'..=b'f' => (c - b'a') as u32 + 10,
+            c @ b'A'..=b'F' => (c - b'A') as u32 + 10,
+            _ => {
+                return Err(ScanError {
+                    pos: pos + at + k,
+                    msg: "invalid \\u escape",
+                })
+            }
+        };
+        v = v * 16 + d;
+    }
+    Ok(v)
+}
+
+/// The validating cursor all scans share.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn err(&self, msg: &'static str) -> ScanError {
+        ScanError { pos: self.i, msg }
+    }
+
+    fn err_at(&self, pos: usize, msg: &'static str) -> ScanError {
+        ScanError { pos, msg }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8, ScanError> {
+        let c = self
+            .peek()
+            .ok_or(ScanError { pos: self.i, msg: "unexpected end of document" })?;
+        self.i += 1;
+        Ok(c)
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ') | Some(b'\t') | Some(b'\n') | Some(b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    /// Skip one string (cursor on the opening quote); returns the content
+    /// byte range, quotes excluded. Escapes are shape-checked here so
+    /// later unescaping cannot fail on structure.
+    fn skip_string(&mut self) -> Result<(usize, usize), ScanError> {
+        if self.bump()? != b'"' {
+            return Err(self.err_at(self.i - 1, "expected a string"));
+        }
+        let start = self.i;
+        loop {
+            match self.bump()? {
+                b'"' => return Ok((start, self.i - 1)),
+                b'\\' => match self.bump()? {
+                    b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => {}
+                    b'u' => {
+                        for _ in 0..4 {
+                            if !self.bump()?.is_ascii_hexdigit() {
+                                return Err(self.err_at(self.i - 1, "invalid \\u escape"));
+                            }
+                        }
+                    }
+                    _ => return Err(self.err_at(self.i - 1, "invalid escape")),
+                },
+                c if c < 0x20 => {
+                    return Err(self.err_at(self.i - 1, "unescaped control character in string"))
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Skip one number token, validating the JSON grammar (`-?int frac?
+    /// exp?`). Parsing to `f64` happens separately, on extraction.
+    fn skip_number(&mut self) -> Result<(), ScanError> {
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        match self.peek() {
+            Some(b'0') => self.i += 1,
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.i += 1;
+                }
+            }
+            _ => return Err(self.err("expected a number")),
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("digit required after decimal point"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.i += 1;
+            }
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("digit required in exponent"));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn skip_literal(&mut self, lit: &'static [u8]) -> Result<(), ScanError> {
+        if self.b.len() < self.i + lit.len() || &self.b[self.i..self.i + lit.len()] != lit {
+            return Err(self.err("invalid literal"));
+        }
+        self.i += lit.len();
+        Ok(())
+    }
+
+    /// Skip one complete JSON value, validating as it goes. `depth` is the
+    /// container-nesting level, bounded by [`MAX_DEPTH`] — the recursion
+    /// cannot be driven deeper than ~64 frames by any input.
+    fn skip_value(&mut self, depth: usize) -> Result<(), ScanError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.ws();
+        match self.peek() {
+            Some(b'"') => self.skip_string().map(|_| ()),
+            Some(b'{') => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    if self.peek() != Some(b'"') {
+                        return Err(self.err("expected object key"));
+                    }
+                    self.skip_string()?;
+                    self.ws();
+                    if self.bump()? != b':' {
+                        return Err(self.err_at(self.i - 1, "expected ':' after object key"));
+                    }
+                    self.skip_value(depth + 1)?;
+                    self.ws();
+                    match self.bump()? {
+                        b',' => continue,
+                        b'}' => return Ok(()),
+                        _ => return Err(self.err_at(self.i - 1, "expected ',' or '}' in object")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_value(depth + 1)?;
+                    self.ws();
+                    match self.bump()? {
+                        b',' => continue,
+                        b']' => return Ok(()),
+                        _ => return Err(self.err_at(self.i - 1, "expected ',' or ']' in array")),
+                    }
+                }
+            }
+            Some(b't') => self.skip_literal(b"true"),
+            Some(b'f') => self.skip_literal(b"false"),
+            Some(b'n') => self.skip_literal(b"null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.skip_number(),
+            Some(_) => Err(self.err("unexpected byte")),
+            None => Err(self.err("unexpected end of document")),
+        }
+    }
+}
+
+/// Streaming JSON object builder for responses: fields append directly to
+/// one `String`, numbers in the same exact round-trip format as
+/// [`crate::util::json`] (the wire half of the bit-parity contract).
+pub struct JsonBuilder {
+    buf: String,
+    first: bool,
+}
+
+impl JsonBuilder {
+    pub fn obj() -> JsonBuilder {
+        JsonBuilder {
+            buf: String::from("{"),
+            first: true,
+        }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.buf.push(',');
+        }
+        self.first = false;
+        write_escaped(&mut self.buf, k);
+        self.buf.push(':');
+    }
+
+    pub fn num(mut self, k: &str, x: f64) -> Self {
+        self.key(k);
+        write_num(&mut self.buf, x);
+        self
+    }
+
+    pub fn int(mut self, k: &str, x: i64) -> Self {
+        self.key(k);
+        let _ = std::fmt::Write::write_fmt(&mut self.buf, format_args!("{x}"));
+        self
+    }
+
+    pub fn uint(mut self, k: &str, x: u64) -> Self {
+        self.key(k);
+        let _ = std::fmt::Write::write_fmt(&mut self.buf, format_args!("{x}"));
+        self
+    }
+
+    pub fn text(mut self, k: &str, v: &str) -> Self {
+        self.key(k);
+        write_escaped(&mut self.buf, v);
+        self
+    }
+
+    pub fn boolean(mut self, k: &str, v: bool) -> Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// A pre-serialized JSON fragment (nested object/array). The caller
+    /// guarantees validity.
+    pub fn raw(mut self, k: &str, fragment: &str) -> Self {
+        self.key(k);
+        self.buf.push_str(fragment);
+        self
+    }
+
+    /// A flat number array streamed from an iterator — the `z`/`w` vector
+    /// fields, written without any intermediate tree.
+    pub fn nums<I: IntoIterator<Item = f64>>(mut self, k: &str, it: I) -> Self {
+        self.key(k);
+        self.buf.push('[');
+        for (i, x) in it.into_iter().enumerate() {
+            if i > 0 {
+                self.buf.push(',');
+            }
+            write_num(&mut self.buf, x);
+        }
+        self.buf.push(']');
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn scans_paths_lazily() {
+        let doc = br#"{"user":{"name":"ada","id":7},"z0":[1,2.5,-3e-1],"ok":true}"#;
+        let d = LazyDoc::new(doc);
+        assert_eq!(d.str_at(&["user", "name"]).unwrap().unwrap(), "ada");
+        assert_eq!(d.u32_at(&["user", "id"]).unwrap().unwrap(), 7);
+        assert_eq!(
+            d.f64_vec_at(&["z0"], 8).unwrap().unwrap(),
+            vec![1.0, 2.5, -0.3]
+        );
+        assert!(d.path(&["missing"]).unwrap().is_none());
+        assert!(d.path(&["user", "missing"]).unwrap().is_none());
+        // Path through a non-object is absent, not an error.
+        assert!(d.path(&["ok", "x"]).unwrap().is_none());
+    }
+
+    #[test]
+    fn duplicate_keys_resolve_first_match() {
+        let d = LazyDoc::new(br#"{"a":1,"a":2}"#);
+        assert_eq!(d.f64_at(&["a"]).unwrap().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn laziness_skips_garbage_after_the_hit() {
+        // Bytes after the requested value are never scanned: the broken
+        // tail is invisible to the path query (the lazy contract).
+        let d = LazyDoc::new(br#"{"a":1,"b":<<<garbage"#);
+        assert_eq!(d.f64_at(&["a"]).unwrap().unwrap(), 1.0);
+        assert!(d.f64_at(&["b"]).is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_a_typed_error_not_a_crash() {
+        let mut doc = Vec::new();
+        for _ in 0..100_000 {
+            doc.push(b'[');
+        }
+        let d = LazyDoc::new(&doc);
+        let e = d.validate().unwrap_err();
+        assert_eq!(e.msg, "nesting too deep");
+    }
+
+    #[test]
+    fn overflow_and_malformed_numbers_are_typed() {
+        assert!(LazyDoc::new(br#"{"x":1e999}"#).f64_at(&["x"]).is_err());
+        assert!(LazyDoc::new(br#"{"x":01}"#).validate().is_err());
+        assert!(LazyDoc::new(br#"{"x":+1}"#).f64_at(&["x"]).is_err());
+        assert!(LazyDoc::new(br#"{"x":1.}"#).f64_at(&["x"]).is_err());
+        assert!(LazyDoc::new(br#"{"x":NaN}"#).f64_at(&["x"]).is_err());
+    }
+
+    #[test]
+    fn unicode_escapes_round_trip() {
+        let raw = "{\"s\":\"a\u{e9}\u{1F600}b\"}";
+        let d = LazyDoc::new(raw.as_bytes());
+        assert_eq!(d.str_at(&["s"]).unwrap().unwrap(), "a\u{e9}\u{1F600}b");
+        // Surrogate-pair escape decodes; a lone surrogate is typed.
+        let d = LazyDoc::new(br#"{"s":"\ud83d\ude00"}"#);
+        assert_eq!(d.str_at(&["s"]).unwrap().unwrap(), "\u{1F600}");
+        assert!(LazyDoc::new(br#"{"s":"\ud800"}"#).str_at(&["s"]).is_err());
+        // Escaped keys still route.
+        let d = LazyDoc::new(br#"{"m":5}"#);
+        assert_eq!(d.f64_at(&["m"]).unwrap().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn builder_round_trips_through_the_tree_parser() {
+        let s = JsonBuilder::obj()
+            .uint("id", 7)
+            .num("residual", 1.25e-9)
+            .text("error", "queue \"full\"\n")
+            .boolean("ok", false)
+            .nums("z", [1.0, -0.5, 3e22])
+            .raw("nested", "{\"a\":1}")
+            .finish();
+        let t = json::parse(&s).expect("builder output is valid JSON");
+        assert_eq!(t.at(&["id"]).and_then(|j| j.as_f64()), Some(7.0));
+        assert_eq!(
+            t.at(&["error"]).and_then(|j| j.as_str()),
+            Some("queue \"full\"\n")
+        );
+        assert_eq!(t.at(&["nested", "a"]).and_then(|j| j.as_f64()), Some(1.0));
+        // And the lazy scanner agrees with itself on its own output.
+        let d = LazyDoc::new(s.as_bytes());
+        assert_eq!(
+            d.f64_vec_at(&["z"], 4).unwrap().unwrap(),
+            vec![1.0, -0.5, 3e22]
+        );
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn f64_bits_survive_the_wire_format() {
+        let vals = [
+            1.0f64,
+            -0.0,
+            1.0 / 3.0,
+            6.02214076e23,
+            f64::MIN_POSITIVE,
+            1e-300,
+            -123456.789012345678,
+        ];
+        let s = JsonBuilder::obj().nums("v", vals).finish();
+        let back = LazyDoc::new(s.as_bytes())
+            .f64_vec_at(&["v"], 16)
+            .unwrap()
+            .unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} round trip");
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Pure-Rust HTTP/1.1 front for the sharded serving tier.
+//!
+//! The serve stack ([`crate::serve`]) ends at an in-process API:
+//! [`ShardedRouter::submit`](crate::serve::ShardedRouter::submit) /
+//! `collect`. This module puts a network edge on it with **zero new
+//! dependencies** — std `TcpListener`, the crate's own thread/Condvar
+//! idioms, and a hand-rolled JSON layer — so the whole binary stays a
+//! single self-contained artifact.
+//!
+//! * [`proto`] — HTTP/1.1 framing: bounded request parsing with typed
+//!   4xx errors ([`proto::HttpError`]), `Content-Length`-only bodies
+//!   (no chunked smuggling surface), header-injection hardening on
+//!   ingress and egress.
+//! * [`json`] — a **lazy path-scanner** ([`json::LazyDoc`]): `/v1/solve`
+//!   bodies are scanned for the few known paths and decoded straight
+//!   into `f64` buffers, without materializing a document tree; strict
+//!   on every byte it touches, silent on bytes after the last hit. Plus
+//!   [`json::JsonBuilder`], the allocation-light response writer whose
+//!   number format round-trips `f64` bits exactly (shortest-round-trip
+//!   `Display`, pinned by its unit tests).
+//! * [`gateway`] — the typed bridge: [`gateway::Gateway`] wraps a
+//!   [`ShardedRouter`](crate::serve::ShardedRouter) with a collector
+//!   thread for per-request rendezvous, and [`gateway::serve_status`] is
+//!   the **canonical** `ServeError → HTTP status` mapping (exactly one
+//!   status per variant, exhaustively matched).
+//! * [`server`] — accept thread + worker pool + **admission control**:
+//!   connections beyond the budget shed with an inline `429 +
+//!   Retry-After` before any parse runs; `/healthz` and `/metrics`
+//!   expose supervision, breaker, staleness and quarantine telemetry.
+//! * [`client`] — the minimal blocking client the loopback load driver
+//!   and integration tests use, so everything is exercised over real
+//!   sockets.
+//!
+//! Endpoints: `POST /v1/solve`, `GET /healthz`, `GET /metrics` — see
+//! `docs/adr/005-http-front-end.md` for the design record and
+//! `README.md` for the wire format.
+
+pub mod client;
+pub mod gateway;
+pub mod json;
+pub mod proto;
+pub mod server;
+
+pub use client::{ClientResponse, HttpClient};
+pub use gateway::{
+    breaker_code, parse_solve_call, serve_status, Gateway, SolveBackend, SolveCall, SolveReply,
+};
+pub use json::{JsonBuilder, LazyDoc, ScanError, MAX_DEPTH};
+pub use proto::{
+    read_request, status_reason, HttpError, RecvError, Request, Response, DEFAULT_MAX_BODY,
+    MAX_HEADERS, MAX_LINE_BYTES,
+};
+pub use server::{HttpConfig, HttpCounters, HttpServer};

@@ -1,0 +1,446 @@
+//! Minimal HTTP/1.1 framing: request parsing with hard caps and typed 4xx
+//! errors, response writing with header sanitization.
+//!
+//! This is deliberately a *subset* of HTTP/1.1 — exactly what a JSON solve
+//! API needs and nothing a parser can be confused by:
+//!
+//! * `Content-Length` bodies only; `Transfer-Encoding` is rejected with a
+//!   typed 400 (chunked parsing is the classic request-smuggling surface,
+//!   and no serve client needs it).
+//! * Every limit is explicit: request-line and header-line length
+//!   ([`MAX_LINE_BYTES`]), header count ([`MAX_HEADERS`]), body size (the
+//!   server's configured cap → 413). Overload degrades to a typed status,
+//!   never to unbounded buffering.
+//! * Header names must be RFC 7230 tokens and values must be free of
+//!   control bytes — a value containing CR/LF is a 400 at ingress, and
+//!   [`Response`] strips CR/LF from outgoing values, so header injection
+//!   dies at both ends (pinned by `rust/tests/http_parse.rs`).
+//!
+//! Parsing failures are [`HttpError`]s carrying the status to serve; IO
+//! and connection teardown are kept separate in [`RecvError`] so the
+//! connection loop can distinguish "send a 4xx and close" from "peer went
+//! away".
+
+use std::fmt;
+use std::io::{BufRead, Read, Write};
+
+/// Cap on one request/status/header line, bytes (includes the CRLF).
+pub const MAX_LINE_BYTES: usize = 8 * 1024;
+/// Cap on the number of headers per request.
+pub const MAX_HEADERS: usize = 64;
+/// Default cap on a request body, bytes (a d=4096 solve request with z0 +
+/// cotangent at ~25 bytes/float is ~200 KiB; 8 MiB leaves headroom
+/// without letting one connection hold the box).
+pub const DEFAULT_MAX_BODY: usize = 8 << 20;
+
+/// A typed protocol failure: the status to answer with and a short,
+/// header-safe message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, msg: impl Into<String>) -> HttpError {
+        HttpError {
+            status,
+            msg: msg.into(),
+        }
+    }
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}: {}", self.status, status_reason(self.status), self.msg)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// Why a request could not be read off the connection.
+#[derive(Debug)]
+pub enum RecvError {
+    /// Clean end of stream between requests (keep-alive close).
+    Closed,
+    /// Transport error (or the peer vanished mid-request).
+    Io(std::io::Error),
+    /// Malformed request: answer with the typed status, then close.
+    Proto(HttpError),
+}
+
+/// One parsed request. Header names are stored lower-cased (HTTP headers
+/// are case-insensitive); values have surrounding whitespace trimmed.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the client asked to keep the connection open (HTTP/1.1
+    /// default unless `Connection: close`).
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == lower)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one request. `Ok(None)` never occurs — absence is signalled via
+/// [`RecvError::Closed`] so the match in the connection loop is total.
+pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> Result<Request, RecvError> {
+    let line = match read_line(r, true)? {
+        Some(l) => l,
+        None => return Err(RecvError::Closed),
+    };
+    let (method, target, version) = parse_request_line(&line).map_err(RecvError::Proto)?;
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line(r, false)? {
+            Some(l) => l,
+            None => {
+                return Err(RecvError::Proto(HttpError::new(
+                    400,
+                    "truncated request head",
+                )))
+            }
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(RecvError::Proto(HttpError::new(431, "too many headers")));
+        }
+        headers.push(parse_header_line(&line).map_err(RecvError::Proto)?);
+    }
+    if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+        // Refuse rather than mis-frame: chunked bodies are the classic
+        // smuggling surface and no solve client needs them.
+        return Err(RecvError::Proto(HttpError::new(
+            400,
+            "transfer-encoding is not supported; use content-length",
+        )));
+    }
+    let mut content_length = 0usize;
+    let cl_headers: Vec<&str> = headers
+        .iter()
+        .filter(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.as_str())
+        .collect();
+    if cl_headers.len() > 1 {
+        return Err(RecvError::Proto(HttpError::new(
+            400,
+            "conflicting content-length headers",
+        )));
+    }
+    if let Some(v) = cl_headers.first() {
+        content_length = v
+            .parse::<usize>()
+            .map_err(|_| RecvError::Proto(HttpError::new(400, "malformed content-length")))?;
+    } else if method == "POST" || method == "PUT" {
+        return Err(RecvError::Proto(HttpError::new(
+            411,
+            "content-length required",
+        )));
+    }
+    if content_length > max_body {
+        return Err(RecvError::Proto(HttpError::new(
+            413,
+            format!("body exceeds the {max_body}-byte cap"),
+        )));
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        r.read_exact(&mut body).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                RecvError::Proto(HttpError::new(400, "truncated body"))
+            } else {
+                RecvError::Io(e)
+            }
+        })?;
+    }
+    let keep_alive = {
+        let conn = headers
+            .iter()
+            .find(|(k, _)| k == "connection")
+            .map(|(_, v)| v.to_ascii_lowercase());
+        match conn.as_deref() {
+            Some("close") => false,
+            Some("keep-alive") => true,
+            // HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close.
+            _ => version >= 1,
+        }
+    };
+    Ok(Request {
+        method,
+        target,
+        headers,
+        body,
+        keep_alive,
+    })
+}
+
+/// Read one CRLF-terminated line (tolerating bare LF), without the
+/// terminator. `Ok(None)` = clean EOF before any byte; EOF mid-line is a
+/// typed 400 via the caller. `at_boundary` marks the gap between requests,
+/// where EOF is a normal keep-alive close rather than truncation.
+fn read_line<R: BufRead>(r: &mut R, at_boundary: bool) -> Result<Option<Vec<u8>>, RecvError> {
+    let mut buf = Vec::new();
+    // Cap the read: a line longer than MAX_LINE_BYTES is rejected without
+    // buffering the rest of it.
+    let got = r
+        .by_ref()
+        .take(MAX_LINE_BYTES as u64)
+        .read_until(b'\n', &mut buf)
+        .map_err(RecvError::Io)?;
+    if got == 0 {
+        return if at_boundary {
+            Ok(None)
+        } else {
+            Err(RecvError::Proto(HttpError::new(400, "truncated request")))
+        };
+    }
+    if buf.last() != Some(&b'\n') {
+        return Err(RecvError::Proto(if buf.len() >= MAX_LINE_BYTES {
+            HttpError::new(431, "header line too long")
+        } else {
+            HttpError::new(400, "truncated request")
+        }));
+    }
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    Ok(Some(buf))
+}
+
+/// `METHOD SP target SP HTTP/1.x` — returns (method, target, minor).
+fn parse_request_line(line: &[u8]) -> Result<(String, String, u8), HttpError> {
+    let s = std::str::from_utf8(line)
+        .map_err(|_| HttpError::new(400, "request line is not UTF-8"))?;
+    let mut parts = s.split(' ');
+    let (Some(method), Some(target), Some(version), None) =
+        (parts.next(), parts.next(), parts.next(), parts.next())
+    else {
+        return Err(HttpError::new(400, "malformed request line"));
+    };
+    if method.is_empty() || !method.bytes().all(|c| c.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, "malformed method"));
+    }
+    if !target.starts_with('/') || target.bytes().any(|c| c <= 0x20 || c == 0x7f) {
+        return Err(HttpError::new(400, "malformed request target"));
+    }
+    let minor = match version {
+        "HTTP/1.1" => 1u8,
+        "HTTP/1.0" => 0u8,
+        _ => return Err(HttpError::new(400, "unsupported HTTP version")),
+    };
+    Ok((method.to_string(), target.to_string(), minor))
+}
+
+/// `name: value` with an RFC 7230 token name and a control-free value —
+/// the ingress half of header-injection hardening.
+fn parse_header_line(line: &[u8]) -> Result<(String, String), HttpError> {
+    let s =
+        std::str::from_utf8(line).map_err(|_| HttpError::new(400, "header is not UTF-8"))?;
+    let Some(colon) = s.find(':') else {
+        return Err(HttpError::new(400, "malformed header"));
+    };
+    let (name, rest) = s.split_at(colon);
+    if name.is_empty() || !name.bytes().all(is_token_byte) {
+        return Err(HttpError::new(400, "malformed header name"));
+    }
+    let value = rest[1..].trim();
+    if value.bytes().any(|c| c < 0x20 || c == 0x7f) {
+        return Err(HttpError::new(400, "control byte in header value"));
+    }
+    Ok((name.to_ascii_lowercase(), value.to_string()))
+}
+
+fn is_token_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric()
+        || matches!(
+            c,
+            b'!' | b'#' | b'$' | b'%' | b'&' | b'\'' | b'*' | b'+' | b'-' | b'.' | b'^' | b'_'
+                | b'`' | b'|' | b'~'
+        )
+}
+
+/// One response, written with `Content-Length` framing.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".into(), "application/json".into())],
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            headers: vec![(
+                "content-type".into(),
+                "text/plain; version=0.0.4".into(),
+            )],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    /// Add a header. The egress half of injection hardening: CR/LF/NUL in
+    /// the value are stripped, so a hostile string can never mint a header
+    /// or split the response.
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        let clean: String = value.chars().filter(|c| !matches!(c, '\r' | '\n' | '\0')).collect();
+        self.headers.push((name.to_ascii_lowercase(), clean));
+        self
+    }
+
+    /// Serialize to `w`. `keep_alive` controls the `Connection` header the
+    /// client sees (the server closes after writing when it is `false`).
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\n",
+            self.status,
+            status_reason(self.status)
+        );
+        for (k, v) in &self.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str(&format!("content-length: {}\r\n", self.body.len()));
+        head.push_str(if keep_alive {
+            "connection: keep-alive\r\n"
+        } else {
+            "connection: close\r\n"
+        });
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Canonical reason phrases for every status this server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(bytes: &[u8]) -> Result<Request, RecvError> {
+        read_request(&mut BufReader::new(bytes), DEFAULT_MAX_BODY)
+    }
+
+    #[test]
+    fn parses_a_simple_post() {
+        let req = parse(
+            b"POST /v1/solve HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\n{\"a\"",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/solve");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.body, b"{\"a\"");
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn eof_between_requests_is_a_clean_close() {
+        assert!(matches!(parse(b""), Err(RecvError::Closed)));
+    }
+
+    #[test]
+    fn truncation_and_framing_failures_are_typed_4xx() {
+        let cases: [&[u8]; 8] = [
+            b"POST /v1/solve HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort",
+            b"POST /v1/solve HTTP/1.1\r\nHost: x\r\n",
+            b"GARBAGE\r\n\r\n",
+            b"GET /x HTTP/2.0\r\n\r\n",
+            b"POST /v1/solve HTTP/1.1\r\n\r\n",
+            b"POST / HTTP/1.1\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\nxx",
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            b"GET /sp ace HTTP/1.1\r\n\r\n",
+        ];
+        for c in cases {
+            match parse(c) {
+                Err(RecvError::Proto(e)) => {
+                    assert!((400..500).contains(&e.status), "{c:?} -> {e:?}")
+                }
+                other => panic!("{c:?} parsed as {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn header_injection_is_rejected_on_both_sides() {
+        // Ingress: a raw CR inside a header value cannot arrive intact —
+        // read_line splits on LF, so an embedded CRLF mints a *new* line
+        // that must itself parse as a header; a lone CR is a control byte.
+        let r = parse(b"GET / HTTP/1.1\r\nx-a: ok\revil: 1\r\n\r\n");
+        assert!(matches!(r, Err(RecvError::Proto(e)) if e.status == 400));
+        // Egress: CR/LF stripped from values before writing.
+        let mut out = Vec::new();
+        Response::json(200, "{}".into())
+            .with_header("x-echo", "a\r\nx-fake: 1")
+            .write_to(&mut out, true)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(!s.contains("x-fake: 1\r\n"), "{s}");
+        assert!(s.contains("x-echo: ax-fake: 1\r\n"), "{s}");
+    }
+
+    #[test]
+    fn oversized_lines_and_bodies_are_capped() {
+        let mut big = b"GET /".to_vec();
+        big.extend(std::iter::repeat(b'a').take(MAX_LINE_BYTES));
+        big.extend_from_slice(b" HTTP/1.1\r\n\r\n");
+        assert!(matches!(
+            parse(&big),
+            Err(RecvError::Proto(e)) if e.status == 431
+        ));
+        let r = parse(b"POST / HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n");
+        assert!(matches!(r, Err(RecvError::Proto(e)) if e.status == 413));
+    }
+
+    #[test]
+    fn http_1_0_defaults_to_close() {
+        let req = parse(b"GET /healthz HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!req.keep_alive);
+    }
+}

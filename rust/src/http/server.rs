@@ -1,0 +1,379 @@
+//! The TCP front: accept thread, worker pool, admission control, and
+//! endpoint dispatch over a [`SolveBackend`].
+//!
+//! Std-only by design (the crate has no async runtime and adds no
+//! dependencies): one accept thread hands connections to a fixed worker
+//! pool through the same `Mutex<VecDeque> + Condvar` idiom the shard
+//! workers use. Each worker owns its connection end-to-end — HTTP/1.1
+//! keep-alive, one request in flight per connection — so the concurrency
+//! model stays the crate's: threads and condvars, no reactors.
+//!
+//! **Admission control** is end-to-end and sheds at the cheapest point
+//! first: a connection beyond [`HttpConfig::max_connections`] gets an
+//! inline `429 + Retry-After` from the accept thread and is closed before
+//! a worker or a parse ever touches it; past admission, the router's own
+//! `queue_cap` bounds queued work and bounces with the same typed 429.
+//! Overload therefore degrades to fast, honest backpressure — never to
+//! unbounded queues or silent drops.
+//!
+//! Endpoints:
+//!
+//! | method | path        | reply                                          |
+//! |--------|-------------|------------------------------------------------|
+//! | POST   | `/v1/solve` | typed solve result (see [`SolveBackend`])      |
+//! | GET    | `/healthz`  | liveness JSON + per-shard respawn counts       |
+//! | GET    | `/metrics`  | text exposition: router, per-key, server counters |
+
+use crate::http::gateway::{parse_solve_call, SolveBackend};
+use crate::http::json::JsonBuilder;
+use crate::http::proto::{read_request, HttpError, RecvError, Request, Response};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Network-layer knobs (the solve tier's knobs live in `ShardConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct HttpConfig {
+    /// Connection-handler threads. Each parks on its connection's
+    /// in-flight solve, so this also caps concurrent solves in the HTTP
+    /// path.
+    pub workers: usize,
+    /// Admission budget: connections beyond this are shed with an inline
+    /// 429 before any worker touches them.
+    pub max_connections: usize,
+    /// Request-body cap, bytes (413 beyond it).
+    pub max_body: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            workers: 4,
+            max_connections: 64,
+            max_body: crate::http::proto::DEFAULT_MAX_BODY,
+        }
+    }
+}
+
+/// Server-side response ledger: every byte-stream answer is counted by
+/// status exactly once, so the CI gate can reconcile client-observed
+/// statuses against the router's typed-outcome ledger.
+#[derive(Default)]
+pub struct HttpCounters {
+    by_status: Mutex<BTreeMap<u16, u64>>,
+    requests: AtomicUsize,
+    /// Connections shed by admission control (their inline 429s are also
+    /// in `by_status`).
+    shed: AtomicUsize,
+    accepted: AtomicUsize,
+}
+
+impl HttpCounters {
+    fn count(&self, status: u16) {
+        let mut m = self.by_status.lock().unwrap_or_else(|p| p.into_inner());
+        *m.entry(status).or_insert(0) += 1;
+    }
+
+    /// `(status, responses)` pairs, ascending by status.
+    pub fn by_status(&self) -> Vec<(u16, u64)> {
+        let m = self.by_status.lock().unwrap_or_else(|p| p.into_inner());
+        m.iter().map(|(&k, &v)| (k, v)).collect()
+    }
+
+    pub fn requests(&self) -> usize {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> usize {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn accepted(&self) -> usize {
+        self.accepted.load(Ordering::Relaxed)
+    }
+}
+
+struct ServerShared {
+    backend: Arc<dyn SolveBackend>,
+    cfg: HttpConfig,
+    conns: Mutex<VecDeque<TcpStream>>,
+    conns_cv: Condvar,
+    active: AtomicUsize,
+    counters: HttpCounters,
+    stop: AtomicBool,
+}
+
+/// A running HTTP front. [`HttpServer::shutdown`] (or drop) stops the
+/// accept thread, drains the workers, and joins everything.
+pub struct HttpServer {
+    addr: SocketAddr,
+    sh: Arc<ServerShared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (use `127.0.0.1:0` for an ephemeral test port — read
+    /// it back via [`HttpServer::local_addr`]) and start serving.
+    pub fn bind(
+        backend: Arc<dyn SolveBackend>,
+        addr: &str,
+        cfg: HttpConfig,
+    ) -> std::io::Result<HttpServer> {
+        assert!(cfg.workers >= 1, "need at least one worker");
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let sh = Arc::new(ServerShared {
+            backend,
+            cfg,
+            conns: Mutex::new(VecDeque::new()),
+            conns_cv: Condvar::new(),
+            active: AtomicUsize::new(0),
+            counters: HttpCounters::default(),
+            stop: AtomicBool::new(false),
+        });
+        let accept = {
+            let sh = Arc::clone(&sh);
+            std::thread::spawn(move || accept_loop(&sh, listener))
+        };
+        let workers = (0..cfg.workers)
+            .map(|_| {
+                let sh = Arc::clone(&sh);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        Ok(HttpServer {
+            addr: local,
+            sh,
+            accept: Some(accept),
+            workers,
+        })
+    }
+
+    /// The bound address (the real port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The response ledger (live; snapshot methods copy out).
+    pub fn counters(&self) -> &HttpCounters {
+        &self.sh.counters
+    }
+
+    /// Stop accepting, finish queued connections' in-flight requests, and
+    /// join every thread. Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.accept.is_none() && self.workers.is_empty() {
+            return;
+        }
+        self.sh.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept() call with a throwaway connection; the flag
+        // is already set, so the loop exits on wake.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.sh.conns_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(sh: &ServerShared, listener: TcpListener) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if sh.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if sh.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        sh.counters.accepted.fetch_add(1, Ordering::Relaxed);
+        // Admission control: shed beyond the connection budget with an
+        // inline 429 — cheaper than parking the connection on a worker.
+        let admitted = sh.active.load(Ordering::SeqCst) < sh.cfg.max_connections;
+        if !admitted {
+            sh.counters.shed.fetch_add(1, Ordering::Relaxed);
+            sh.counters.count(429);
+            let mut stream = stream;
+            let body = JsonBuilder::obj()
+                .text("error", "overloaded")
+                .text("message", "connection budget exhausted; retry with backoff")
+                .finish();
+            let _ = Response::json(429, body)
+                .with_header("retry-after", "1")
+                .write_to(&mut stream, false);
+            linger_close(&mut stream);
+            continue;
+        }
+        sh.active.fetch_add(1, Ordering::SeqCst);
+        let mut q = sh.conns.lock().unwrap_or_else(|p| p.into_inner());
+        q.push_back(stream);
+        drop(q);
+        sh.conns_cv.notify_one();
+    }
+}
+
+fn worker_loop(sh: &ServerShared) {
+    loop {
+        let stream = {
+            let mut q = sh.conns.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                if let Some(s) = q.pop_front() {
+                    break Some(s);
+                }
+                if sh.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = sh.conns_cv.wait(q).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        let Some(stream) = stream else { return };
+        handle_connection(sh, stream);
+        sh.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Serve one connection: keep-alive request loop, close on protocol
+/// error, client close, `Connection: close`, or server stop.
+fn handle_connection(sh: &ServerShared, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    loop {
+        let req = match read_request(&mut reader, sh.cfg.max_body) {
+            Ok(r) => r,
+            Err(RecvError::Closed) | Err(RecvError::Io(_)) => return,
+            Err(RecvError::Proto(e)) => {
+                // Malformed framing: answer typed, then close (the
+                // connection's byte position is no longer trustworthy).
+                let resp = error_response(&e);
+                sh.counters.count(resp.status);
+                let _ = resp.write_to(&mut stream, false);
+                linger_close(&mut stream);
+                return;
+            }
+        };
+        sh.counters.requests.fetch_add(1, Ordering::Relaxed);
+        // A handler panic answers 500 and closes, instead of tearing down
+        // the worker (defense in depth — the solve tier already converts
+        // model panics into typed WorkerLost outcomes).
+        let resp = catch_unwind(AssertUnwindSafe(|| dispatch(sh, &req))).unwrap_or_else(|_| {
+            Response::json(
+                500,
+                JsonBuilder::obj()
+                    .text("error", "internal")
+                    .text("message", "handler panicked")
+                    .finish(),
+            )
+        });
+        let closing = resp.status == 500;
+        let keep_alive = req.keep_alive && !closing && !sh.stop.load(Ordering::SeqCst);
+        sh.counters.count(resp.status);
+        let wrote = resp.write_to(&mut stream, keep_alive);
+        if wrote.is_err() {
+            return;
+        }
+        if !keep_alive {
+            linger_close(&mut stream);
+            return;
+        }
+    }
+}
+
+/// Half-close then read-drain (bounded by a short timeout) before
+/// dropping a connection we just answered on. Closing a socket with
+/// unread client bytes in its receive buffer sends an immediate RST,
+/// which on most stacks discards the response still sitting in the
+/// client's buffer — the typed 4xx would vanish exactly when it matters
+/// (oversized request, shed connection). Draining until the client's
+/// half closes makes the answer reliably observable.
+fn linger_close(stream: &mut TcpStream) {
+    use std::io::Read;
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    let mut sink = [0u8; 4096];
+    while matches!(stream.read(&mut sink), Ok(n) if n > 0) {}
+}
+
+fn error_response(e: &HttpError) -> Response {
+    Response::json(
+        e.status,
+        JsonBuilder::obj()
+            .text("error", "bad_request")
+            .text("message", &e.msg)
+            .finish(),
+    )
+}
+
+fn dispatch(sh: &ServerShared, req: &Request) -> Response {
+    match (req.method.as_str(), req.target.as_str()) {
+        ("POST", "/v1/solve") => solve_endpoint(sh, req),
+        ("GET", "/healthz") => Response::json(200, sh.backend.health()),
+        ("GET", "/metrics") => {
+            let mut body = sh.backend.metrics();
+            append_server_metrics(sh, &mut body);
+            Response::text(200, &body)
+        }
+        ("POST", "/healthz") | ("POST", "/metrics") | ("GET", "/v1/solve") => {
+            error_response(&HttpError::new(405, format!("{} not allowed here", req.method)))
+        }
+        _ => error_response(&HttpError::new(404, format!("no route for {}", req.target))),
+    }
+}
+
+fn solve_endpoint(sh: &ServerShared, req: &Request) -> Response {
+    let header_deadline = req
+        .header("x-deadline-ms")
+        .and_then(|v| v.parse::<f64>().ok());
+    let call = match parse_solve_call(&req.body, sh.backend.dim(), header_deadline) {
+        Ok(c) => c,
+        Err(e) => return error_response(&e),
+    };
+    let reply = sh.backend.solve(call);
+    let mut resp = Response::json(reply.status, reply.body)
+        .with_header("x-shine-attempts", &reply.attempts.to_string());
+    if let Some(ra) = reply.retry_after {
+        // RFC header is whole seconds (rounded up, floor 1); the precise
+        // hint rides the extension header.
+        let secs = (ra.ceil() as u64).max(1);
+        resp = resp
+            .with_header("retry-after", &secs.to_string())
+            .with_header("x-retry-after-ms", &format!("{:.3}", ra * 1e3));
+    }
+    resp
+}
+
+fn append_server_metrics(sh: &ServerShared, out: &mut String) {
+    let c = &sh.counters;
+    out.push_str(&format!("shine_http_requests_total {}\n", c.requests()));
+    out.push_str(&format!("shine_http_connections_accepted_total {}\n", c.accepted()));
+    out.push_str(&format!("shine_http_admission_shed_total {}\n", c.shed()));
+    out.push_str(&format!(
+        "shine_http_active_connections {}\n",
+        sh.active.load(Ordering::SeqCst)
+    ));
+    for (status, n) in c.by_status() {
+        out.push_str(&format!(
+            "shine_http_responses_total{{code=\"{status}\"}} {n}\n"
+        ));
+    }
+}

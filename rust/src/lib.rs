@@ -95,7 +95,11 @@
 //! the §3 fallback guard + [`serve::RecalibPolicy`] policing demotion
 //! error — see `docs/ARCHITECTURE.md`,
 //! `docs/adr/001-continuous-batching.md` and
-//! `docs/adr/003-reduced-precision-panels.md`.
+//! `docs/adr/003-reduced-precision-panels.md`. The [`http`] module puts a
+//! dependency-free network edge on that tier — a std-`TcpListener`
+//! HTTP/1.1 server with lazy JSON scanning, end-to-end admission
+//! control, and `/healthz` + `/metrics` over the sharded router
+//! (`shine serve-http`, `docs/adr/005-http-front-end.md`).
 //!
 //! See DESIGN.md for the per-experiment index and EXPERIMENTS.md for
 //! paper-vs-measured results.
@@ -104,6 +108,7 @@ pub mod bilevel;
 pub mod coordinator;
 pub mod data;
 pub mod deq;
+pub mod http;
 pub mod hypergrad;
 pub mod linalg;
 pub mod power;

@@ -6,6 +6,7 @@
 //!   run-all [--quick]             run every experiment in registry order
 //!   train [--variant cifar] ...   ad-hoc DEQ training run
 //!   hpo [--dataset news20] ...    ad-hoc bi-level HPO run
+//!   serve-http [--addr ...] ...   HTTP/1.1 front over the sharded serving tier
 //!   artifacts-check               load + execute every artifact once
 //!   version
 
@@ -196,8 +197,53 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                      breaker armed; gates on zero lost requests, >= 1 worker \
                      respawn, fault-free convergence, and every breaker closed",
                 )
+                .switch(
+                    "http",
+                    "additionally replay the smoke (and, with --chaos, the chaos) \
+                     cell through the full HTTP edge over loopback TCP — real \
+                     sockets, lazy JSON, admission control — gating on the \
+                     exactly-once reconciliation of client statuses, the server \
+                     response ledger, and the router's typed outcomes",
+                )
                 .parse(rest)?;
             cmd_serve_bench(&a)
+        }
+        "serve-http" => {
+            let a = Args::new("shine serve-http — HTTP/1.1 front for the sharded DEQ serving tier")
+                .flag("addr", "127.0.0.1:8080", "listen address (host:port; port 0 = ephemeral)")
+                .flag("shards", "2", "scheduler shards (worker threads) of the router")
+                .flag("models", "2", "synthetic models registered up front (ids 0..models)")
+                .flag("d", "256", "fixed-point dimension per request")
+                .flag("block", "32", "dense mixing block width of the synthetic model")
+                .flag(
+                    "solver",
+                    "picard",
+                    "forward solver spec (picard[:tau] | anderson[:m[,beta]] | broyden[:mem])",
+                )
+                .flag("tol", "1e-5", "forward residual tolerance")
+                .flag(
+                    "panel-precision",
+                    "f32",
+                    "estimate panel storage (f64 | f32 | bf16 | f16 | mixed)",
+                )
+                .flag("max-batch", "8", "per-shard scheduler batch cap")
+                .flag("max-wait", "1e-3", "partial-batch deadline, seconds")
+                .flag("queue-cap", "256", "per-shard admission queue cap (429 beyond it)")
+                .flag("workers", "4", "HTTP connection-handler threads")
+                .flag(
+                    "max-conn",
+                    "64",
+                    "admission budget: connections beyond it shed with an inline 429",
+                )
+                .flag("seed", "0", "model parameter seed")
+                .flag(
+                    "requests",
+                    "0",
+                    "exit once this many solve requests have been answered \
+                     (0 = serve until killed)",
+                )
+                .parse(rest)?;
+            cmd_serve_http(&a)
         }
         "artifacts-check" => {
             let a = common_flags(Args::new("shine artifacts-check")).parse(rest)?;
@@ -215,6 +261,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
                  hpo               ad-hoc bi-level HPO\n  \
                  serve-bench       batched DEQ serving: closed-loop throughput + open-loop\n                    \
                  continuous-batching tail latency\n  \
+                 serve-http        HTTP/1.1 front over the sharded router (POST /v1/solve,\n                    \
+                 GET /healthz, GET /metrics)\n  \
                  artifacts-check   smoke-test every AOT artifact\n  \
                  version",
                 shine::version()
@@ -390,6 +438,12 @@ fn cmd_serve_bench(a: &Args) -> anyhow::Result<()> {
     }
     if a.get_bool("chaos") {
         chaos_cell(a)?;
+    }
+    if a.get_bool("http") {
+        http_smoke_cell(a)?;
+        if a.get_bool("chaos") {
+            http_chaos_cell(a)?;
+        }
     }
     Ok(())
 }
@@ -930,6 +984,387 @@ fn chaos_cell(a: &Args) -> anyhow::Result<()> {
             "chaos cell ended with {} circuit breakers still open",
             rep.open_breakers
         );
+    }
+    Ok(())
+}
+
+/// Monomorphization dispatch for `serve-http` (same mapping as
+/// [`cmd_serve_bench`]): the network layer itself is precision-free — it
+/// talks to an `Arc<dyn SolveBackend>` — only the gateway + router behind
+/// it are instantiated per storage layout.
+fn cmd_serve_http(a: &Args) -> anyhow::Result<()> {
+    use shine::linalg::vecops::{Bf16, F16};
+    use shine::solvers::session::PanelPrecision;
+
+    let precision = PanelPrecision::parse(a.get("panel-precision"))
+        .map_err(|e| anyhow::anyhow!("--panel-precision: {e}"))?;
+    match precision {
+        PanelPrecision::F64 => serve_http_run::<f64, f64, f64>(a, precision),
+        PanelPrecision::F32 => serve_http_run::<f32, f32, f32>(a, precision),
+        PanelPrecision::Bf16 => serve_http_run::<f32, Bf16, Bf16>(a, precision),
+        PanelPrecision::F16 => serve_http_run::<f32, F16, F16>(a, precision),
+        PanelPrecision::Mixed => serve_http_run::<f32, Bf16, f32>(a, precision),
+    }
+}
+
+/// Boot router + gateway + HTTP server on `--addr` and serve until killed
+/// (or until `--requests` solves have been answered, for scripted runs).
+fn serve_http_run<E: Elem, EU: Elem, EV: Elem>(
+    a: &Args,
+    precision: shine::solvers::session::PanelPrecision,
+) -> anyhow::Result<()> {
+    use shine::http::{Gateway, HttpConfig, HttpServer, SolveBackend};
+    use shine::serve::{
+        BreakerConfig, EngineConfig, ModelKey, RecalibPolicy, RetryPolicy, SchedulerConfig,
+        ShardConfig, ShardedRouter, SynthDeq,
+    };
+    use shine::solvers::session::SolverSpec;
+    use std::sync::Arc;
+
+    let d = a.get_usize("d");
+    let block = a.get_usize("block");
+    let shards = a.get_usize("shards");
+    let models = a.get_usize("models");
+    if block == 0 || d % block != 0 {
+        anyhow::bail!("--block must divide --d");
+    }
+    if shards == 0 || models == 0 {
+        anyhow::bail!("--shards and --models must be at least 1");
+    }
+    let tol = a.get_f64("tol");
+    let solver = SolverSpec::parse(a.get("solver"))
+        .map_err(|e| anyhow::anyhow!("--solver: {e}"))?
+        .with_tol(tol)
+        .with_max_iters(200);
+    let seed = a.get_u64("seed");
+    let max_batch = a.get_usize("max-batch");
+    let engine = EngineConfig {
+        max_batch,
+        solver,
+        calib: SolverSpec::broyden(30).with_tol(tol).with_max_iters(60),
+        fallback_ratio: Some(10.0),
+        recalib: Some(RecalibPolicy::default()),
+        col_budget: None,
+        breaker: Some(BreakerConfig {
+            threshold: 2,
+            cooldown: 2,
+        }),
+    };
+    engine
+        .validate()
+        .map_err(|e| anyhow::anyhow!("serve-http engine config: {e}"))?;
+    let sched = SchedulerConfig {
+        max_batch,
+        max_wait: a.get_f64("max-wait"),
+        queue_cap: a.get_usize("queue-cap"),
+    };
+    let router: ShardedRouter<E, EU, EV> =
+        ShardedRouter::try_new(ShardConfig::new(shards, engine, sched))
+            .map_err(|e| anyhow::anyhow!("serve-http router config: {e}"))?;
+    for m in 0..models as u32 {
+        let live = router.register(
+            ModelKey::new(m, 0),
+            Arc::new(SynthDeq::<E>::new(d, block, seed ^ m as u64)),
+        );
+        if !live {
+            anyhow::bail!("model {m} failed calibration and never went live");
+        }
+    }
+    let gateway = Arc::new(Gateway::new(router, d, RetryPolicy::none()));
+    let backend: Arc<dyn SolveBackend> = gateway.clone();
+    let http = HttpConfig {
+        workers: a.get_usize("workers"),
+        max_connections: a.get_usize("max-conn"),
+        ..HttpConfig::default()
+    };
+    let mut server = HttpServer::bind(backend, a.get("addr"), http)
+        .map_err(|e| anyhow::anyhow!("bind {}: {e}", a.get("addr")))?;
+    println!(
+        "serve-http listening on http://{} — {shards} shards, {models} models, d={d}, \
+         panel-precision={}",
+        server.local_addr(),
+        precision.name()
+    );
+    println!("  POST /v1/solve   {{\"model\", \"z0\"?, \"cotangent\", \"deadline_ms\"?}}");
+    println!("  GET  /healthz    liveness + per-shard respawns + quarantined keys");
+    println!("  GET  /metrics    text exposition (router, per-key, server counters)");
+    let stop_after = a.get_usize("requests");
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if stop_after > 0 && server.counters().requests() >= stop_after {
+            break;
+        }
+    }
+    server.shutdown();
+    let (mut ok, mut total) = (0u64, 0u64);
+    for (status, n) in server.counters().by_status() {
+        total += n;
+        if status == 200 {
+            ok += n;
+        }
+    }
+    println!("serve-http: answered {total} responses ({ok} ok); shutting down");
+    Ok(())
+}
+
+/// The loopback-HTTP smoke gate: a two-shard, two-model open loop with a
+/// mid-run zero-downtime swap, replayed through real TCP sockets. Gates
+/// hard on the exactly-once reconciliation across all three ledgers:
+/// every offered request gets exactly one client-observed response, the
+/// server's per-status response counts match the client's, every solve is
+/// a converged 200, and the swap cut over with traffic on both versions.
+fn http_smoke_cell(a: &Args) -> anyhow::Result<()> {
+    use shine::http::HttpConfig;
+    use shine::serve::{
+        run_http_open_loop, Arrivals, EngineConfig, HttpLoadConfig, RecalibPolicy, SharedModel,
+        SynthDeq,
+    };
+    use shine::solvers::session::SolverSpec;
+    use std::sync::Arc;
+
+    // The pinned smoke geometry (matches the other smoke cells).
+    let (d, block, total, bsz) = (256, 32, 48, 8);
+    let tol = a.get_f64("tol");
+    let solver = SolverSpec::parse(a.get("solver"))
+        .map_err(|e| anyhow::anyhow!("--solver: {e}"))?
+        .with_tol(tol)
+        .with_max_iters(200);
+    let seed = a.get_u64("seed");
+    let cfg = EngineConfig {
+        max_batch: bsz,
+        solver,
+        calib: SolverSpec::broyden(30).with_tol(tol).with_max_iters(60),
+        fallback_ratio: Some(10.0),
+        recalib: Some(RecalibPolicy::default()),
+        col_budget: None,
+        breaker: None,
+    };
+    cfg.validate()
+        .map_err(|e| anyhow::anyhow!("http smoke engine config: {e}"))?;
+    let mk = move |m: u32, v: u32| -> SharedModel<f64> {
+        Arc::new(SynthDeq::<f64>::new(
+            d,
+            block,
+            seed ^ m as u64 ^ ((v as u64) << 32),
+        ))
+    };
+    let lc = HttpLoadConfig {
+        shards: 2,
+        models: 2,
+        total,
+        clients: 6,
+        arrivals: Arrivals::Poisson { rate: 50_000.0 },
+        max_batch: bsz,
+        max_wait: 1e-3,
+        queue_cap: None,
+        hot_share: Some(0.75),
+        swap_at: Some(total / 2),
+        deadline_ms: None,
+        http: HttpConfig::default(),
+    };
+    eprintln!(
+        "http smoke: 2 shards, 2 models over loopback TCP, {} clients, swap at #{}",
+        lc.clients,
+        total / 2
+    );
+    let rep = run_http_open_loop::<f64, f64, f64>(cfg, &mk, &lc, None, seed ^ 0x177E);
+    println!(
+        "http 2x: {} responses ({} ok) at {:.1} req/s (p50 {:.3} ms, p95 {:.3} ms), \
+         swap old/new {}/{}, server ledger {:?}",
+        rep.requests,
+        rep.ok,
+        rep.rps,
+        rep.p50_latency_ms,
+        rep.p95_latency_ms,
+        rep.old_served,
+        rep.new_served,
+        rep.server_responses
+    );
+    if rep.client_errors != 0 {
+        anyhow::bail!("http smoke cell: {} transport errors", rep.client_errors);
+    }
+    if rep.requests != total {
+        anyhow::bail!(
+            "http smoke cell: {}/{total} offered requests got a response",
+            rep.requests
+        );
+    }
+    if rep.ok != total {
+        anyhow::bail!(
+            "http smoke cell: {} of {total} responses were not 200s on a fault-free run",
+            total - rep.ok
+        );
+    }
+    if !rep.all_converged {
+        anyhow::bail!("http smoke cell had unconverged 200s (tol {tol})");
+    }
+    // Server ledger must reconcile exactly-once with the client ledger.
+    let server_total: u64 = rep.server_responses.iter().map(|(_, n)| n).sum();
+    let server_ok = rep
+        .server_responses
+        .iter()
+        .find(|(s, _)| *s == 200)
+        .map(|(_, n)| *n)
+        .unwrap_or(0);
+    if server_total != total as u64 || server_ok != rep.ok as u64 {
+        anyhow::bail!(
+            "http smoke cell: server ledger ({server_ok} ok / {server_total} total) does not \
+             match the client ledger ({} ok / {} total)",
+            rep.ok,
+            rep.requests
+        );
+    }
+    if !rep.swap_completed || rep.old_served == 0 || rep.new_served == 0 {
+        anyhow::bail!(
+            "http smoke cell: swap did not complete with traffic on both versions \
+             (completed {}, old {}, new {})",
+            rep.swap_completed,
+            rep.old_served,
+            rep.new_served
+        );
+    }
+    if rep.orphans != 0 {
+        anyhow::bail!("http smoke cell: {} orphaned responses", rep.orphans);
+    }
+    Ok(())
+}
+
+/// The loopback-HTTP chaos gate: the chaos cell's seeded fault plan —
+/// injected panics and NaN columns — driven through steal + swap
+/// machinery AND the full HTTP edge concurrently. Gates on the typed
+/// status mapping end-to-end: every offered request resolves to exactly
+/// one client-observed status, every 503 matches a router-ledger
+/// WorkerLost casualty one-for-one, every injected victim surfaced as a
+/// typed 5xx, supervision respawned the shard, the healthy tail closed
+/// every breaker, and fault-free traffic converged.
+fn http_chaos_cell(a: &Args) -> anyhow::Result<()> {
+    use shine::http::HttpConfig;
+    use shine::serve::{
+        run_http_open_loop, Arrivals, BreakerConfig, EngineConfig, FaultPlan, HttpLoadConfig,
+        RecalibPolicy, SharedModel, SynthDeq,
+    };
+    use shine::solvers::session::SolverSpec;
+    use std::sync::Arc;
+
+    let (d, block, total, bsz) = (256, 32, 48, 8);
+    let (panics, nans, straggles) = (1, 2, 1);
+    let tol = a.get_f64("tol");
+    let solver = SolverSpec::parse(a.get("solver"))
+        .map_err(|e| anyhow::anyhow!("--solver: {e}"))?
+        .with_tol(tol)
+        .with_max_iters(200);
+    let seed = a.get_u64("seed");
+    let cfg = EngineConfig {
+        max_batch: bsz,
+        solver,
+        calib: SolverSpec::broyden(30).with_tol(tol).with_max_iters(60),
+        fallback_ratio: Some(10.0),
+        recalib: Some(RecalibPolicy::default()),
+        col_budget: None,
+        breaker: Some(BreakerConfig {
+            threshold: 2,
+            cooldown: 2,
+        }),
+    };
+    cfg.validate()
+        .map_err(|e| anyhow::anyhow!("http chaos engine config: {e}"))?;
+    // Victims drawn from the first half of the schedule (gateway ids are
+    // assigned in submission order), so the clean tail closes breakers
+    // and the swap's background calibration runs against faulted traffic.
+    let plan = FaultPlan::seeded(seed ^ 0xC4A05, total / 2, panics, nans, straggles);
+    let mk = move |m: u32, v: u32| -> SharedModel<f64> {
+        Arc::new(SynthDeq::<f64>::new(
+            d,
+            block,
+            seed ^ m as u64 ^ ((v as u64) << 32),
+        ))
+    };
+    let lc = HttpLoadConfig {
+        shards: 2,
+        models: 2,
+        total,
+        clients: 6,
+        arrivals: Arrivals::Poisson { rate: 50_000.0 },
+        max_batch: bsz,
+        max_wait: 1e-3,
+        queue_cap: None,
+        // The hot-key skew keeps the steal machinery engaged while the
+        // faults and the swap land.
+        hot_share: Some(0.75),
+        swap_at: Some(total / 2),
+        deadline_ms: None,
+        http: HttpConfig::default(),
+    };
+    eprintln!(
+        "http chaos: 2 shards, 2 models over loopback TCP, fault plan {panics} panic / \
+         {nans} NaN / {straggles} straggler, swap at #{} (steal + swap + faults concurrent)",
+        total / 2
+    );
+    let rep = run_http_open_loop::<f64, f64, f64>(cfg, &mk, &lc, Some(&plan), seed ^ 0xC4A05);
+    println!(
+        "http chaos 2x: {} responses ({} ok, {} 502, {} 503, {} 422) at {:.1} req/s, \
+         {} respawns, server ledger {:?}",
+        rep.requests,
+        rep.ok,
+        rep.model_faults,
+        rep.worker_lost,
+        rep.unconverged,
+        rep.rps,
+        rep.respawns,
+        rep.server_responses
+    );
+    if rep.client_errors != 0 {
+        anyhow::bail!("http chaos cell: {} transport errors", rep.client_errors);
+    }
+    if rep.requests != total {
+        anyhow::bail!(
+            "http chaos cell lost requests: {}/{total} offered got a response",
+            rep.requests
+        );
+    }
+    let accounted =
+        rep.ok + rep.queue_full + rep.unconverged + rep.model_faults + rep.worker_lost
+            + rep.deadline_exceeded + rep.other_4xx;
+    if accounted != total {
+        anyhow::bail!(
+            "http chaos cell: {accounted}/{total} responses carried a mapped status"
+        );
+    }
+    if rep.respawns == 0 {
+        anyhow::bail!("http chaos cell saw no worker respawn — the injected panic never landed");
+    }
+    if rep.worker_lost != rep.ledger_worker_lost {
+        anyhow::bail!(
+            "http chaos cell: {} client 503s vs {} router WorkerLost casualties — the \
+             typed-outcome ledger must reconcile one-for-one",
+            rep.worker_lost,
+            rep.ledger_worker_lost
+        );
+    }
+    if rep.model_faults + rep.worker_lost < panics + nans {
+        anyhow::bail!(
+            "http chaos cell: {} typed 5xx for {} injected panic/NaN victims",
+            rep.model_faults + rep.worker_lost,
+            panics + nans
+        );
+    }
+    let server_total: u64 = rep.server_responses.iter().map(|(_, n)| n).sum();
+    if server_total != total as u64 {
+        anyhow::bail!(
+            "http chaos cell: server wrote {server_total} responses for {total} offered"
+        );
+    }
+    if !rep.all_converged {
+        anyhow::bail!("http chaos cell had unconverged 200s (tol {tol})");
+    }
+    if rep.open_breakers != 0 {
+        anyhow::bail!(
+            "http chaos cell ended with {} circuit breakers still open",
+            rep.open_breakers
+        );
+    }
+    if rep.orphans != 0 {
+        anyhow::bail!("http chaos cell: {} orphaned responses", rep.orphans);
     }
     Ok(())
 }

@@ -29,13 +29,24 @@
 //! of `BENCH_serve.json`. It can also roll the hot model to a new version
 //! mid-run ([`ShardedLoadConfig::swap_at`]) and report how the served
 //! traffic partitioned across the cutover.
+//!
+//! The **loopback-HTTP** driver ([`run_http_open_loop`]) replays the same
+//! kind of schedule through the full network edge: it boots a
+//! [`Gateway`](crate::http::Gateway) + [`HttpServer`](crate::http::HttpServer)
+//! on an ephemeral loopback port and drives it from keep-alive
+//! [`HttpClient`](crate::http::HttpClient) threads over **real TCP**, so
+//! serialization, framing, admission control and the typed status mapping
+//! are all on the measured path. It reconciles three ledgers — client-side
+//! statuses, the server's response counters, and the router's typed-outcome
+//! stats — which is what the CI smoke gate asserts against.
 
+use crate::http::{Gateway, HttpClient, HttpConfig, HttpServer, JsonBuilder, LazyDoc, SolveBackend};
 use crate::linalg::vecops::Elem;
 use crate::serve::engine::{Admission, EngineConfig, ServeEngine};
 use crate::serve::router::{KeyedScheduler, ModelKey, Router};
-use crate::serve::scheduler::{Scheduler, SchedulerConfig};
+use crate::serve::scheduler::{RetryPolicy, Scheduler, SchedulerConfig};
 use crate::serve::shard::{
-    ServeError, ShardConfig, ShardRequest, ShardedRouter, SharedModel, SubmitError,
+    ServeError, ShardConfig, ShardRequest, ShardedRouter, SharedModel,
 };
 use crate::serve::synth::{FaultPlan, FaultyModel, SynthDeq};
 use crate::solvers::fixed_point::ColStats;
@@ -815,11 +826,6 @@ pub fn run_sharded_open_loop<E: Elem, EU: Elem, EV: Elem>(
     run_sharded_open_loop_with::<E, EU, EV>(engine, mk_model, lc, None, seed)
 }
 
-/// Bounded retry policy for `QueueFull` admissions: exponential backoff
-/// starting at the scheduler's `retry_after` hint, at most this many
-/// attempts before the request is shed.
-const SUBMIT_RETRIES: usize = 4;
-
 /// [`run_sharded_open_loop`] with an optional chaos schedule: when `faults`
 /// is set, every registered model is wrapped in a [`FaultyModel`] executing
 /// the shared seeded [`FaultPlan`] (panics, NaN columns, stragglers keyed
@@ -902,26 +908,13 @@ pub fn run_sharded_open_loop_with<E: Elem, EU: Elem, EV: Elem>(
         }
         let mut req = ShardRequest::new(i, vec![E::ZERO; d], cots[i * d..(i + 1) * d].to_vec());
         req.deadline = lc.deadline.map(|dl| router.now() + dl);
-        // Bounded retry with exponential backoff from the queue's
-        // retry_after hint; a request that exhausts the budget (or whose
-        // deadline lapses before admission) is shed and counted.
-        let mut attempt = 0usize;
-        let key = loop {
-            match router.submit(model_of[i], req) {
-                Ok(key) => break Some(key),
-                Err(SubmitError::QueueFull {
-                    req: r,
-                    retry_after,
-                }) if attempt < SUBMIT_RETRIES => {
-                    attempt += 1;
-                    retries += 1;
-                    let backoff = retry_after * (1 << (attempt - 1)) as f64;
-                    std::thread::sleep(std::time::Duration::from_secs_f64(backoff));
-                    req = r;
-                }
-                Err(_) => break None,
-            }
-        };
+        // Bounded retry with exponential backoff under the shared
+        // [`RetryPolicy`] (the same policy the HTTP front door echoes to
+        // clients); a request that exhausts the budget (or whose deadline
+        // lapses before admission) is shed and counted.
+        let (res, attempts) = router.submit_with_retry(model_of[i], req, &RetryPolicy::standard());
+        retries += attempts;
+        let key = res.ok();
         if key.is_none() {
             shed += 1;
         }
@@ -984,6 +977,319 @@ pub fn run_sharded_open_loop_with<E: Elem, EU: Elem, EV: Elem>(
     };
     router.shutdown();
     rep
+}
+
+/// Config of one loopback-HTTP open-loop run.
+#[derive(Clone, Copy, Debug)]
+pub struct HttpLoadConfig {
+    /// Scheduler shards (worker threads) of the [`ShardedRouter`].
+    pub shards: usize,
+    /// Models registered up front (ids `0..models`, all at version 0).
+    pub models: usize,
+    /// Total requests in the arrival schedule.
+    pub total: usize,
+    /// Client threads, each holding one keep-alive connection with one
+    /// request in flight (requests are striped round-robin, so `clients`
+    /// also caps HTTP-side concurrency).
+    pub clients: usize,
+    /// Interarrival process of the precomputed schedule.
+    pub arrivals: Arrivals,
+    /// Per-shard scheduler batch cap.
+    pub max_batch: usize,
+    /// Partial-batch deadline in seconds.
+    pub max_wait: f64,
+    /// Per-shard queue cap; `None` sizes for the whole schedule (never
+    /// reject). Set small to exercise the 429 path deliberately.
+    pub queue_cap: Option<usize>,
+    /// Probability a request targets model 0 (hot-key skew).
+    pub hot_share: Option<f64>,
+    /// Submission index at which model 0 rolls to version 1 mid-run.
+    pub swap_at: Option<usize>,
+    /// Relative per-request deadline, ms, carried in the request body.
+    pub deadline_ms: Option<f64>,
+    /// Network-layer knobs (worker pool, connection budget, body cap).
+    pub http: HttpConfig,
+}
+
+/// What one loopback-HTTP run measured: the client-observed statuses, the
+/// server's response ledger, and the router's typed-outcome ledger — three
+/// views of the same traffic that must reconcile exactly-once.
+#[derive(Clone, Debug, Default)]
+pub struct HttpReport {
+    /// Client-observed responses (exactly one per offered request).
+    pub requests: usize,
+    pub seconds: f64,
+    /// Successful solves per second of wall time.
+    pub rps: f64,
+    /// Client-observed statuses: 200 / 429 / 422 / 502 / 503 / 504 /
+    /// other 4xx.
+    pub ok: usize,
+    pub queue_full: usize,
+    pub unconverged: usize,
+    pub model_faults: usize,
+    pub worker_lost: usize,
+    pub deadline_exceeded: usize,
+    pub other_4xx: usize,
+    /// Transport-level failures seen by clients (0 in a healthy run).
+    pub client_errors: usize,
+    /// End-to-end (socket round-trip) latency quantiles of 200s, ms.
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    /// Every 200's forward solve converged.
+    pub all_converged: bool,
+    /// Total submit retries echoed in `x-shine-attempts`.
+    pub attempts: usize,
+    /// 200s served on the old / new version of model 0 (swap runs).
+    pub old_served: usize,
+    pub new_served: usize,
+    /// The rolled version ended up the live route (swap runs).
+    pub swap_completed: bool,
+    /// Server response ledger: `(status, responses)` by status.
+    pub server_responses: Vec<(u16, u64)>,
+    /// Connections shed by the server's admission control.
+    pub server_shed: usize,
+    /// Router ledger (supervision + typed outcomes + quarantine).
+    pub respawns: usize,
+    pub steals: usize,
+    pub ledger_worker_lost: usize,
+    pub ledger_deadline_expired: usize,
+    pub ledger_quarantined: usize,
+    pub quarantined_keys: usize,
+    pub open_breakers: usize,
+    /// Typed outcomes delivered after their HTTP waiter gave up.
+    pub orphans: usize,
+}
+
+/// One client-side observation (private to the driver).
+struct HttpObs {
+    status: u16,
+    latency: f64,
+    converged: bool,
+    version: u32,
+    model: u32,
+    attempts: usize,
+    err: bool,
+}
+
+/// Replay one precomputed open-loop schedule through the full HTTP edge
+/// over loopback TCP: router + [`Gateway`] + [`HttpServer`] on an
+/// ephemeral port, driven by `lc.clients` keep-alive [`HttpClient`]
+/// threads. Same schedule idiom (and seed-mixing constant) as
+/// [`run_sharded_open_loop_with`], so in-process and over-the-wire runs
+/// offer identical load. `faults` wraps every registered model in the
+/// seeded [`FaultPlan`] chaos harness — panics and NaNs travel through
+/// supervision, the typed status mapping, and the client, and the report
+/// carries all three ledgers for the exactly-once reconciliation.
+pub fn run_http_open_loop<E: Elem, EU: Elem, EV: Elem>(
+    engine: EngineConfig,
+    mk_model: &dyn Fn(u32, u32) -> SharedModel<E>,
+    lc: &HttpLoadConfig,
+    faults: Option<&FaultPlan>,
+    seed: u64,
+) -> HttpReport {
+    assert!(lc.shards >= 1 && lc.models >= 1 && lc.total >= 1 && lc.clients >= 1);
+    if let Some(at) = lc.swap_at {
+        assert!(at < lc.total, "swap_at must fall inside the schedule");
+    }
+    let sched = SchedulerConfig {
+        max_batch: lc.max_batch,
+        max_wait: lc.max_wait,
+        queue_cap: lc.queue_cap.unwrap_or_else(|| lc.total.max(lc.max_batch)),
+    };
+    let router: ShardedRouter<E, EU, EV> =
+        ShardedRouter::new(ShardConfig::new(lc.shards, engine, sched));
+    let wrap = |model: SharedModel<E>| -> SharedModel<E> {
+        match faults {
+            Some(plan) => std::sync::Arc::new(FaultyModel::new(model, plan.clone())),
+            None => model,
+        }
+    };
+    let d = mk_model(0, 0).dim();
+    for m in 0..lc.models as u32 {
+        let model = mk_model(m, 0);
+        assert_eq!(model.dim(), d, "http driver requires one shared dimension");
+        router.register(ModelKey::new(m, 0), wrap(model));
+    }
+    // HTTP admission uses the fail-fast policy: 429s reach the client with
+    // a Retry-After instead of parking connection handlers in backoff.
+    let gateway = std::sync::Arc::new(Gateway::new(router, d, RetryPolicy::none()));
+    let backend: std::sync::Arc<dyn SolveBackend> = gateway.clone();
+    let mut server = HttpServer::bind(backend, "127.0.0.1:0", lc.http).expect("bind loopback");
+    let addr = server.local_addr();
+
+    // Precompute the offered load — same idiom and seed mix as the
+    // in-process sharded driver, but cotangents stay f64 (the wire format).
+    let mut rng = Rng::new(seed ^ 0x54A2D);
+    let mut arrivals = Vec::with_capacity(lc.total);
+    let mut t = 0.0f64;
+    for _ in 0..lc.total {
+        t += lc.arrivals.gap(&mut rng);
+        arrivals.push(t);
+    }
+    let model_of: Vec<u32> = (0..lc.total)
+        .map(|_| match lc.hot_share {
+            Some(p) if lc.models > 1 => {
+                if rng.uniform() < p {
+                    0
+                } else {
+                    1 + rng.below(lc.models - 1) as u32
+                }
+            }
+            _ => rng.below(lc.models) as u32,
+        })
+        .collect();
+    let cots: Vec<f64> = (0..lc.total * d).map(|_| rng.normal()).collect();
+
+    let sw = Stopwatch::start();
+    let obs: Vec<HttpObs> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(lc.clients);
+        for c in 0..lc.clients {
+            let (sw, arrivals, model_of, cots) = (&sw, &arrivals, &model_of, &cots);
+            handles.push(scope.spawn(move || {
+                let mut out: Vec<HttpObs> = Vec::new();
+                let mut client = match HttpClient::connect(addr) {
+                    Ok(cl) => cl,
+                    Err(_) => {
+                        let mut i = c;
+                        while i < lc.total {
+                            out.push(HttpObs {
+                                status: 0,
+                                latency: 0.0,
+                                converged: false,
+                                version: 0,
+                                model: model_of[i],
+                                attempts: 0,
+                                err: true,
+                            });
+                            i += lc.clients;
+                        }
+                        return out;
+                    }
+                };
+                let mut i = c;
+                while i < lc.total {
+                    let lead = arrivals[i] - sw.elapsed();
+                    if lead > 0.0 {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(lead));
+                    }
+                    let mut b = JsonBuilder::obj()
+                        .uint("model", model_of[i] as u64)
+                        .nums("cotangent", cots[i * d..(i + 1) * d].iter().copied());
+                    if let Some(ms) = lc.deadline_ms {
+                        b = b.num("deadline_ms", ms);
+                    }
+                    let body = b.finish();
+                    let t0 = sw.elapsed();
+                    match client.post_json("/v1/solve", &body, &[]) {
+                        Ok(resp) => {
+                            let doc = LazyDoc::new(&resp.body);
+                            out.push(HttpObs {
+                                status: resp.status,
+                                latency: sw.elapsed() - t0,
+                                converged: doc.path(&["converged"]).ok().flatten()
+                                    == Some(b"true".as_slice()),
+                                version: doc.u32_at(&["version"]).ok().flatten().unwrap_or(0),
+                                model: model_of[i],
+                                attempts: resp
+                                    .header("x-shine-attempts")
+                                    .and_then(|v| v.parse().ok())
+                                    .unwrap_or(0),
+                                err: false,
+                            });
+                        }
+                        Err(_) => out.push(HttpObs {
+                            status: 0,
+                            latency: 0.0,
+                            converged: false,
+                            version: 0,
+                            model: model_of[i],
+                            attempts: 0,
+                            err: true,
+                        }),
+                    }
+                    i += lc.clients;
+                }
+                out
+            }));
+        }
+        // The main thread drives the mid-run roll (clients only see HTTP;
+        // version management stays a control-plane operation).
+        if let Some(at) = lc.swap_at {
+            let lead = arrivals[at] - sw.elapsed();
+            if lead > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(lead));
+            }
+            gateway.router().swap(ModelKey::new(0, 1), wrap(mk_model(0, 1)));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    let seconds = sw.elapsed();
+    if lc.swap_at.is_some() {
+        gateway.router().wait_live(ModelKey::new(0, 1));
+    }
+
+    // Snapshot every ledger before teardown.
+    let shard_stats = gateway.router().shard_stats();
+    let quarantined = gateway.router().quarantined_keys();
+    let server_responses = server.counters().by_status();
+    let server_shed = server.counters().shed();
+    let orphans = gateway.orphans();
+    let swap_completed = lc.swap_at.is_some() && gateway.router().live_version(0) == Some(1);
+    server.shutdown();
+    drop(server);
+    drop(gateway);
+
+    let latencies: Vec<f64> = obs
+        .iter()
+        .filter(|o| o.status == 200)
+        .map(|o| o.latency)
+        .collect();
+    let count = |s: u16| obs.iter().filter(|o| o.status == s).count();
+    let ok = count(200);
+    HttpReport {
+        requests: obs.len(),
+        seconds,
+        rps: ok as f64 / seconds.max(1e-12),
+        ok,
+        queue_full: count(429),
+        unconverged: count(422),
+        model_faults: count(502),
+        worker_lost: count(503),
+        deadline_exceeded: count(504),
+        other_4xx: obs
+            .iter()
+            .filter(|o| (400..500).contains(&o.status) && o.status != 429 && o.status != 422)
+            .count(),
+        client_errors: obs.iter().filter(|o| o.err).count(),
+        p50_latency_ms: stats::median(&latencies) * 1e3,
+        p95_latency_ms: stats::quantile(&latencies, 0.95) * 1e3,
+        p99_latency_ms: stats::quantile(&latencies, 0.99) * 1e3,
+        all_converged: obs.iter().filter(|o| o.status == 200).all(|o| o.converged),
+        attempts: obs.iter().map(|o| o.attempts).sum(),
+        swap_completed,
+        old_served: obs
+            .iter()
+            .filter(|o| o.status == 200 && o.model == 0 && o.version == 0)
+            .count(),
+        new_served: obs
+            .iter()
+            .filter(|o| o.status == 200 && o.model == 0 && o.version == 1)
+            .count(),
+        server_responses,
+        server_shed,
+        respawns: shard_stats.iter().map(|s| s.respawns).sum(),
+        steals: shard_stats.iter().map(|s| s.steals).sum(),
+        ledger_worker_lost: shard_stats.iter().map(|s| s.worker_lost).sum(),
+        ledger_deadline_expired: shard_stats.iter().map(|s| s.deadline_expired).sum(),
+        ledger_quarantined: shard_stats.iter().map(|s| s.quarantined).sum(),
+        quarantined_keys: quarantined.len(),
+        open_breakers: shard_stats.iter().map(|s| s.open_breakers).sum(),
+        orphans,
+    }
 }
 
 #[cfg(test)]

@@ -132,7 +132,12 @@
 //! supervision: in-flight requests resolve as
 //! [`ServeError::WorkerLost`] (never a hung `collect`), the dead shard's
 //! queues re-home through the steal machinery, and the worker respawns
-//! with bit-identical lazily-rebuilt engines. Every submitted request
+//! with bit-identical lazily-rebuilt engines. A key whose model keeps
+//! panicking is **quarantined** after [`ShardConfig::quarantine_after`]
+//! attributable respawns ([`QUARANTINE_STRIKES`] by default): its queued
+//! and future requests resolve as typed [`ServeError::ModelFault`]
+//! instead of respawn-looping the shard, and the strike/quarantine record
+//! is published via [`ShardedRouter::key_metrics`]. Every submitted request
 //! resolves to exactly one typed outcome ([`ShardResponse::error`]),
 //! deadlines are enforced at admission and drain
 //! ([`ServeError::DeadlineExceeded`]), and the whole surface is exercised
@@ -166,18 +171,18 @@ pub use engine::{
     RecalibPolicy, ServeEngine, StreamReport,
 };
 pub use loadgen::{
-    run_closed_loop, run_open_loop, run_routed_closed_loop, run_sharded_open_loop,
-    run_sharded_open_loop_with, run_suite, Arrivals, LoadConfig, OpenLoopConfig, OpenLoopReport,
-    RoutedLoadConfig, RoutedReport, ShardedLoadConfig, ShardedReport, SuiteRow, SwapTelemetry,
-    ThroughputReport,
+    run_closed_loop, run_http_open_loop, run_open_loop, run_routed_closed_loop,
+    run_sharded_open_loop, run_sharded_open_loop_with, run_suite, Arrivals, HttpLoadConfig,
+    HttpReport, LoadConfig, OpenLoopConfig, OpenLoopReport, RoutedLoadConfig, RoutedReport,
+    ShardedLoadConfig, ShardedReport, SuiteRow, SwapTelemetry, ThroughputReport,
 };
 pub use router::{BatchResidual, KeyedScheduler, ModelKey, Router};
 pub use scheduler::{
-    AdaptiveWidth, AdaptiveWidthConfig, ConfigError, QueueEntry, Rejected, SchedStats, Scheduler,
-    SchedulerConfig,
+    AdaptiveWidth, AdaptiveWidthConfig, ConfigError, QueueEntry, Rejected, RetryPolicy, SchedStats,
+    Scheduler, SchedulerConfig,
 };
 pub use shard::{
-    ServeError, ShardConfig, ShardRequest, ShardResponse, ShardStats, ShardedRouter, SharedModel,
-    SubmitError, STEAL_COOLDOWN_BATCHES,
+    KeyMetrics, ServeError, ShardConfig, ShardRequest, ShardResponse, ShardStats, ShardedRouter,
+    SharedModel, SubmitError, QUARANTINE_STRIKES, STEAL_COOLDOWN_BATCHES,
 };
 pub use synth::{Fault, FaultPlan, FaultyModel, SynthDeq};

@@ -146,6 +146,72 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Bounded retry-with-backoff policy for `QueueFull` admission rejections
+/// — shared by every submit surface (the load drivers' open-loop
+/// submitters, [`ShardedRouter::submit_with_retry`](crate::serve::ShardedRouter::submit_with_retry),
+/// the HTTP front door) so callers see ONE backoff behaviour and the HTTP
+/// layer can echo it (`Retry-After` / `x-shine-attempts` headers) instead
+/// of each driver hand-rolling its own loop.
+///
+/// Retry `k` (0-based) sleeps `hint · multiplier^k` seconds, where `hint`
+/// is the rejection's [`Rejected::retry_after`] drain-rate estimate —
+/// exponential backoff seeded by live queue telemetry, capped at
+/// `max_backoff` per sleep and `attempts` retries total.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Maximum retries after the initial attempt (0 = never retry).
+    pub attempts: usize,
+    /// Exponential backoff growth per retry.
+    pub multiplier: f64,
+    /// Cap on a single backoff sleep, seconds.
+    pub max_backoff: f64,
+}
+
+impl RetryPolicy {
+    /// Fail fast: a single attempt, no sleeping. What a network front end
+    /// wants — the caller holds the connection, so shed in microseconds
+    /// and let the client back off on the echoed `Retry-After`.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 0,
+            multiplier: 1.0,
+            max_backoff: 0.0,
+        }
+    }
+
+    /// The load drivers' historical policy: up to 4 retries, doubling the
+    /// drain-rate hint each time, uncapped sleeps.
+    pub fn standard() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 4,
+            multiplier: 2.0,
+            max_backoff: f64::INFINITY,
+        }
+    }
+
+    /// Backoff before retry number `attempt` (0-based count of retries
+    /// already performed): `Some(seconds)` to sleep then retry, `None`
+    /// when the budget is exhausted and the rejection is final.
+    pub fn backoff(&self, attempt: usize, hint: f64) -> Option<f64> {
+        if attempt >= self.attempts {
+            return None;
+        }
+        let hint = if hint.is_finite() && hint > 0.0 {
+            hint
+        } else {
+            1e-4
+        };
+        let delay = hint * self.multiplier.powi(attempt as i32);
+        Some(delay.min(self.max_backoff).max(0.0))
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy::standard()
+    }
+}
+
 /// Admission telemetry for a bounded queue. `expired` counts
 /// deadline-expired entries garbage-collected at drain time (each is handed
 /// back through `take_expired` so the caller can publish a typed

@@ -82,9 +82,9 @@
 //! `rust/tests/serve_shard.rs`).
 
 use crate::linalg::vecops::Elem;
-use crate::serve::engine::{EngineConfig, ServeEngine};
+use crate::serve::engine::{BreakerState, EngineConfig, ServeEngine};
 use crate::serve::router::{BatchResidual, KeyedScheduler, ModelKey};
-use crate::serve::scheduler::{ConfigError, SchedulerConfig};
+use crate::serve::scheduler::{ConfigError, RetryPolicy, SchedulerConfig};
 use crate::solvers::fixed_point::ColStats;
 use crate::util::threads;
 use crate::util::timer::Stopwatch;
@@ -172,7 +172,17 @@ pub struct ShardConfig {
     /// Whole-queue work stealing (on by default; off pins every key to its
     /// affinity shard, useful when debugging placement).
     pub steal: bool,
+    /// Per-key respawn cap: after this many worker panics attributable to
+    /// one key (its batch or its calibration probe was executing), the key
+    /// is **quarantined** — queued and future requests resolve as typed
+    /// [`ServeError::ModelFault`] instead of respawn-looping the shard
+    /// (the known limit in `docs/adr/004`). `0` disables the cap.
+    pub quarantine_after: u32,
 }
+
+/// Default [`ShardConfig::quarantine_after`]: strikes before a key whose
+/// model keeps panicking is quarantined.
+pub const QUARANTINE_STRIKES: u32 = 3;
 
 impl ShardConfig {
     pub fn new(shards: usize, engine: EngineConfig, sched: SchedulerConfig) -> ShardConfig {
@@ -181,6 +191,7 @@ impl ShardConfig {
             engine,
             sched,
             steal: true,
+            quarantine_after: QUARANTINE_STRIKES,
         }
     }
 }
@@ -267,6 +278,10 @@ pub enum SubmitError<E: Elem> {
     },
     /// The request's deadline had already passed at admission.
     DeadlineExceeded(ShardRequest<E>),
+    /// The live version of this model is quarantined: its respawn strikes
+    /// crossed [`ShardConfig::quarantine_after`], so it can never serve
+    /// again (resolve as [`ServeError::ModelFault`]).
+    Quarantined(ShardRequest<E>),
 }
 
 impl<E: Elem> SubmitError<E> {
@@ -275,7 +290,8 @@ impl<E: Elem> SubmitError<E> {
         match self {
             SubmitError::UnknownModel(r)
             | SubmitError::QueueFull { req: r, .. }
-            | SubmitError::DeadlineExceeded(r) => r,
+            | SubmitError::DeadlineExceeded(r)
+            | SubmitError::Quarantined(r) => r,
         }
     }
 
@@ -288,6 +304,7 @@ impl<E: Elem> SubmitError<E> {
                 retry_after: *retry_after,
             },
             SubmitError::DeadlineExceeded(_) => ServeError::DeadlineExceeded,
+            SubmitError::Quarantined(_) => ServeError::ModelFault,
         }
     }
 }
@@ -314,12 +331,87 @@ pub struct ShardStats {
     /// Queued requests that resolved as [`ServeError::DeadlineExceeded`]
     /// at drain time.
     pub deadline_expired: usize,
+    /// Queued requests resolved as [`ServeError::ModelFault`] because
+    /// their key was quarantined (the solve never ran).
+    pub quarantined: usize,
     /// Engines on this shard whose circuit breaker is currently open
     /// (serving degraded Jacobian-free backwards).
     pub open_breakers: usize,
     /// Keys whose engine (and calibration estimate) currently live on this
     /// shard — the observable for "a swap invalidates exactly one key".
     pub engine_keys: Vec<ModelKey>,
+}
+
+/// Per-[`ModelKey`] serving telemetry, merged across shards by
+/// [`ShardedRouter::key_metrics`] — the `/metrics` observability surface:
+/// [`BatchReport`](crate::serve::BatchReport) aggregates, the §3
+/// fallback-guard trip rate, calibration staleness, breaker state, and the
+/// quarantine record. Counters are summed across every shard that ever
+/// served the key; gauges (`fallback_rate`, `estimate_stale`, `breaker`)
+/// are taken from the key's current owning shard when it has served the
+/// key, best-effort otherwise.
+#[derive(Clone, Debug)]
+pub struct KeyMetrics {
+    pub key: ModelKey,
+    /// Responses produced for this key (success or typed failure).
+    pub served: usize,
+    /// Batches dispatched for this key.
+    pub batches: usize,
+    /// Total forward iterations across served columns
+    /// ([`BatchReport::fwd_col_iters_total`](crate::serve::BatchReport)).
+    pub fwd_iters: usize,
+    /// Columns the §3 guard reverted to the Jacobian-free direction.
+    pub fallback_cols: usize,
+    /// Columns whose residual/cotangent answer was non-finite.
+    pub nonfinite_cols: usize,
+    /// Columns retired without reaching tolerance
+    /// ([`ServeError::Unconverged`]).
+    pub unconverged: usize,
+    /// Responses typed [`ServeError::ModelFault`] (non-finite columns plus
+    /// quarantine drains).
+    pub model_faults: usize,
+    /// Guard trip rate since the estimate's last calibration — the
+    /// staleness signal driving
+    /// [`RecalibPolicy`](crate::serve::RecalibPolicy).
+    pub fallback_rate: f64,
+    /// Whether the estimate had crossed the staleness threshold as of the
+    /// key's last served batch.
+    pub estimate_stale: bool,
+    /// Circuit-breaker state after the key's last served batch.
+    pub breaker: BreakerState,
+    /// Engines built + calibrated for this key (registration, swap, steal,
+    /// respawn rebuilds).
+    pub calibrations: usize,
+    /// Stale-estimate re-calibrations.
+    pub recalibrations: usize,
+    /// Worker panics attributed to this key (its batch or calibration
+    /// probe was executing when the shard died).
+    pub strikes: u32,
+    /// Whether the key crossed [`ShardConfig::quarantine_after`] and was
+    /// quarantined.
+    pub quarantined: bool,
+}
+
+impl KeyMetrics {
+    fn new(key: ModelKey) -> KeyMetrics {
+        KeyMetrics {
+            key,
+            served: 0,
+            batches: 0,
+            fwd_iters: 0,
+            fallback_cols: 0,
+            nonfinite_cols: 0,
+            unconverged: 0,
+            model_faults: 0,
+            fallback_rate: 0.0,
+            estimate_stale: false,
+            breaker: BreakerState::Closed,
+            calibrations: 0,
+            recalibrations: 0,
+            strikes: 0,
+            quarantined: false,
+        }
+    }
 }
 
 /// Lifecycle of a registered key in the blue/green protocol.
@@ -332,6 +424,11 @@ enum KeyState {
     Live,
     /// Cut over from; serves only already-queued requests, then GC'd.
     Retired,
+    /// Respawn strikes crossed [`ShardConfig::quarantine_after`]: never
+    /// serves again; queued and future requests resolve as
+    /// [`ServeError::ModelFault`]. Never GC'd (the record *is* the
+    /// quarantine), never cut over to.
+    Quarantined,
 }
 
 struct RegEntry<E: Elem> {
@@ -341,6 +438,8 @@ struct RegEntry<E: Elem> {
     /// registration; work stealing re-homes it).
     shard: usize,
     state: KeyState,
+    /// Worker panics attributed to this key — the quarantine counter.
+    strikes: u32,
     /// Batches the current owner must serve before this key may be stolen
     /// again — the steal-hysteresis counter, stamped to
     /// [`STEAL_COOLDOWN_BATCHES`] on every steal and decremented per served
@@ -395,6 +494,9 @@ struct ShardState<E: Elem> {
     /// Keys awaiting background calibration on this shard.
     ctl: VecDeque<ModelKey>,
     stats: ShardStats,
+    /// Per-key telemetry for keys this shard has served (merged across
+    /// shards by [`ShardedRouter::key_metrics`]).
+    keys: Vec<KeyMetrics>,
     /// The batch currently being served (empty between batches). If the
     /// worker dies mid-batch, supervision publishes each entry as a
     /// [`ServeError::WorkerLost`] response so `collect` never hangs.
@@ -411,10 +513,20 @@ impl<E: Elem> ShardState<E> {
             sched: KeyedScheduler::new(sched),
             ctl: VecDeque::new(),
             stats: ShardStats::default(),
+            keys: Vec::new(),
             inflight: Vec::new(),
             inflight_key: None,
             active_ctl: None,
         }
+    }
+
+    /// The shard-local metrics row for `key`, created on first touch.
+    fn key_entry(&mut self, key: ModelKey) -> &mut KeyMetrics {
+        if let Some(p) = self.keys.iter().position(|m| m.key == key) {
+            return &mut self.keys[p];
+        }
+        self.keys.push(KeyMetrics::new(key));
+        self.keys.last_mut().expect("just pushed")
     }
 }
 
@@ -541,10 +653,12 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
     /// Register a model snapshot and **block** until its background
     /// calibration finishes and it is the live route for its model id.
     /// For a non-blocking roll of an already-live model, use
-    /// [`ShardedRouter::swap`].
-    pub fn register(&self, key: ModelKey, model: SharedModel<E>) {
+    /// [`ShardedRouter::swap`]. Returns `false` if the key was quarantined
+    /// before going live (its calibration probe kept panicking) — the key
+    /// will never serve.
+    pub fn register(&self, key: ModelKey, model: SharedModel<E>) -> bool {
         self.swap(key, model);
-        self.wait_live(key);
+        self.wait_live(key)
     }
 
     /// Zero-downtime version roll: enqueue `key` for background
@@ -567,6 +681,7 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
                 shard,
                 state: KeyState::Calibrating,
                 steal_cooldown: 0,
+                strikes: 0,
             });
         }
         let cell = &self.sh.cells[shard];
@@ -576,10 +691,21 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
         cell.cv.notify_one();
     }
 
-    /// Block until `key` is the live route for its model id.
-    pub fn wait_live(&self, key: ModelKey) {
+    /// Block until `key` is the live route for its model id (`true`), or
+    /// until the key is quarantined and can never go live (`false`) — the
+    /// wait would otherwise hang forever on a calibration panic loop.
+    pub fn wait_live(&self, key: ModelKey) -> bool {
         let mut reg = lock_ok(&self.sh.reg);
-        while reg.live_version(key.model) != Some(key.version) {
+        loop {
+            if reg.live_version(key.model) == Some(key.version) {
+                return true;
+            }
+            if matches!(
+                reg.find(key).map(|e| e.state),
+                Some(KeyState::Quarantined)
+            ) {
+                return false;
+            }
             reg = self.sh.reg_cv.wait(reg).unwrap_or_else(|p| p.into_inner());
         }
     }
@@ -612,7 +738,11 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
             return Err(SubmitError::UnknownModel(req));
         };
         let key = ModelKey::new(model, version);
-        let shard = reg.find(key).expect("live key is registered").shard;
+        let entry = reg.find(key).expect("live key is registered");
+        if entry.state == KeyState::Quarantined {
+            return Err(SubmitError::Quarantined(req));
+        }
+        let shard = entry.shard;
         let cell = &self.sh.cells[shard];
         // Take the shard lock while still holding the registry lock
         // (registry → shard order): a steal re-homing this key cannot slip
@@ -646,6 +776,44 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
         }
     }
 
+    /// [`ShardedRouter::submit`] under a bounded [`RetryPolicy`]:
+    /// [`SubmitError::QueueFull`] rejections sleep the policy's backoff
+    /// (derived from the queue's `retry_after` hint) and retry; every
+    /// other outcome is final. Returns the result plus the number of
+    /// retries performed — the value the HTTP surface echoes in its
+    /// `x-shine-attempts` header. **Blocks** the calling thread while
+    /// backing off.
+    pub fn submit_with_retry(
+        &self,
+        model: u32,
+        req: ShardRequest<E>,
+        policy: &RetryPolicy,
+    ) -> (Result<ModelKey, SubmitError<E>>, usize) {
+        let mut req = req;
+        let mut attempt = 0usize;
+        loop {
+            match self.submit(model, req) {
+                Ok(key) => return (Ok(key), attempt),
+                Err(SubmitError::QueueFull { req: r, retry_after }) => {
+                    match policy.backoff(attempt, retry_after) {
+                        Some(delay) => {
+                            attempt += 1;
+                            std::thread::sleep(Duration::from_secs_f64(delay));
+                            req = r;
+                        }
+                        None => {
+                            return (
+                                Err(SubmitError::QueueFull { req: r, retry_after }),
+                                attempt,
+                            )
+                        }
+                    }
+                }
+                Err(e) => return (Err(e), attempt),
+            }
+        }
+    }
+
     /// Drain whatever responses have completed (non-blocking).
     pub fn try_collect(&self) -> Vec<ShardResponse<E>> {
         let mut done = lock_ok(&self.sh.done);
@@ -662,6 +830,30 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
                 return out;
             }
             done = self.sh.done_cv.wait(done).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Like [`ShardedRouter::collect`], but wait at most `timeout_s`
+    /// seconds: returns whatever has accumulated (possibly empty) once `n`
+    /// responses are available or the timeout elapses — the wakeable wait
+    /// a completion-forwarding thread (the HTTP gateway's collector) needs
+    /// so shutdown is never stuck on an empty queue.
+    pub fn collect_timeout(&self, n: usize, timeout_s: f64) -> Vec<ShardResponse<E>> {
+        let deadline = self.sh.clock.elapsed() + timeout_s;
+        let mut out = Vec::new();
+        let mut done = lock_ok(&self.sh.done);
+        loop {
+            out.append(&mut *done);
+            let left = deadline - self.sh.clock.elapsed();
+            if out.len() >= n || left <= 0.0 {
+                return out;
+            }
+            let (g, _) = self
+                .sh
+                .done_cv
+                .wait_timeout(done, Duration::from_secs_f64(left))
+                .unwrap_or_else(|p| p.into_inner());
+            done = g;
         }
     }
 
@@ -686,6 +878,104 @@ impl<E: Elem, EU: Elem, EV: Elem> ShardedRouter<E, EU, EV> {
     /// Whole-queue steals across all shards.
     pub fn total_steals(&self) -> usize {
         self.shard_stats().iter().map(|s| s.steals).sum()
+    }
+
+    /// Per-shard admitted-but-undrained queue depths.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.sh
+            .cells
+            .iter()
+            .map(|c| lock_ok(&c.state).sched.len())
+            .collect()
+    }
+
+    /// Per-shard backpressure hints: the seconds a bounced caller should
+    /// wait, from each queue's recent drain rate (what
+    /// [`SubmitError::QueueFull`] would carry right now).
+    pub fn retry_hints(&self) -> Vec<f64> {
+        self.sh
+            .cells
+            .iter()
+            .map(|c| lock_ok(&c.state).sched.retry_after())
+            .collect()
+    }
+
+    /// Quarantined keys with their strike counts (the `/metrics` record of
+    /// the per-key respawn cap).
+    pub fn quarantined_keys(&self) -> Vec<(ModelKey, u32)> {
+        let reg = lock_ok(&self.sh.reg);
+        reg.entries
+            .iter()
+            .filter(|e| e.state == KeyState::Quarantined)
+            .map(|e| (e.key, e.strikes))
+            .collect()
+    }
+
+    /// Merge every shard's per-key telemetry into one row per
+    /// [`ModelKey`], stamped with the registry's strike/quarantine record.
+    /// Counters are summed; gauges come from the key's current owning
+    /// shard when it has served the key (best-effort otherwise — a steal
+    /// can leave the gauge one batch behind). Registered keys that never
+    /// served (still calibrating, or quarantined before first batch) get a
+    /// zero row so quarantine is visible the moment it happens.
+    pub fn key_metrics(&self) -> Vec<KeyMetrics> {
+        // Registry lock first, released before any shard lock (the global
+        // order — even though we never hold both here, keep it one-way).
+        let reg_info: Vec<(ModelKey, u32, bool, usize)> = {
+            let reg = lock_ok(&self.sh.reg);
+            reg.entries
+                .iter()
+                .map(|e| {
+                    (
+                        e.key,
+                        e.strikes,
+                        e.state == KeyState::Quarantined,
+                        e.shard,
+                    )
+                })
+                .collect()
+        };
+        let mut out: Vec<KeyMetrics> = Vec::new();
+        for (si, c) in self.sh.cells.iter().enumerate() {
+            let st = lock_ok(&c.state);
+            for km in &st.keys {
+                let owner_here = reg_info
+                    .iter()
+                    .any(|(k, _, _, home)| *k == km.key && *home == si);
+                match out.iter_mut().find(|m| m.key == km.key) {
+                    Some(m) => {
+                        m.served += km.served;
+                        m.batches += km.batches;
+                        m.fwd_iters += km.fwd_iters;
+                        m.fallback_cols += km.fallback_cols;
+                        m.nonfinite_cols += km.nonfinite_cols;
+                        m.unconverged += km.unconverged;
+                        m.model_faults += km.model_faults;
+                        m.calibrations += km.calibrations;
+                        m.recalibrations += km.recalibrations;
+                        if owner_here {
+                            m.fallback_rate = km.fallback_rate;
+                            m.estimate_stale = km.estimate_stale;
+                            m.breaker = km.breaker;
+                        }
+                    }
+                    None => out.push(km.clone()),
+                }
+            }
+        }
+        for (key, strikes, quarantined, _) in &reg_info {
+            if !out.iter().any(|m| m.key == *key) {
+                out.push(KeyMetrics::new(*key));
+            }
+            let m = out
+                .iter_mut()
+                .find(|m| m.key == *key)
+                .expect("pushed above");
+            m.strikes = *strikes;
+            m.quarantined = *quarantined;
+        }
+        out.sort_by_key(|m| (m.key.model, m.key.version));
+        out
     }
 
     /// Stop the workers (after they drain their queues) and join them.
@@ -843,17 +1133,55 @@ fn worker_body<E: Elem, EU: Elem, EV: Elem>(me: usize, sh: &Shared<E>) {
 /// lock, at most one shard lock at a time.
 fn recover_shard<E: Elem>(me: usize, sh: &Shared<E>) {
     let completed = sh.clock.elapsed();
-    let (casualties, lost_key) = {
+    let (casualties, lost_key, ctl_key) = {
         let mut st = lock_ok(&sh.cells[me].state);
         let lost = std::mem::take(&mut st.inflight);
         let lost_key = st.inflight_key.take();
-        if let Some(key) = st.active_ctl.take() {
-            st.ctl.push_front(key);
-        }
+        let ctl_key = st.active_ctl.take();
         st.stats.respawns += 1;
         st.stats.worker_lost += lost.len();
-        (lost, lost_key)
+        (lost, lost_key, ctl_key)
     };
+    // Attribute the panic to the key whose work was executing (a batch
+    // records `inflight_key`, a calibration probe `active_ctl`) and apply
+    // the per-key respawn cap: at `quarantine_after` strikes the key is
+    // quarantined and never served again — the fix for the calibration
+    // respawn loop (docs/adr/004). Registry lock on its own, before any
+    // shard lock below.
+    let struck = lost_key.or(ctl_key);
+    let mut newly_quarantined = false;
+    let mut requeue_ctl = false;
+    {
+        let mut reg = lock_ok(&sh.reg);
+        if let Some(key) = struck {
+            if let Some(e) = reg.find_mut(key) {
+                e.strikes += 1;
+                let cap = sh.cfg.quarantine_after;
+                if cap > 0 && e.strikes >= cap && e.state != KeyState::Quarantined {
+                    e.state = KeyState::Quarantined;
+                    newly_quarantined = true;
+                }
+            }
+        }
+        // An interrupted calibration re-queues so a pending registration
+        // is never lost — unless the key is quarantined, where re-running
+        // the probe would only burn another respawn.
+        if let Some(key) = ctl_key {
+            requeue_ctl = reg
+                .find(key)
+                .map(|e| e.state != KeyState::Quarantined)
+                .unwrap_or(false);
+        }
+    }
+    if newly_quarantined {
+        // Wake register()/wait_live() blockers: the key can never go live.
+        sh.reg_cv.notify_all();
+    }
+    if let Some(key) = ctl_key {
+        if requeue_ctl {
+            lock_ok(&sh.cells[me].state).ctl.push_front(key);
+        }
+    }
     if !casualties.is_empty() {
         let key = lost_key.expect("in-flight batch records its key");
         let mut done = lock_ok(&sh.done);
@@ -1011,6 +1339,7 @@ fn build_engine<E: Elem, EU: Elem, EV: Elem>(
     let mut st = lock_ok(&sh.cells[me].state);
     st.stats.calibrations += 1;
     st.stats.engine_keys = engines.iter().map(|s| s.key).collect();
+    st.key_entry(key).calibrations += 1;
 }
 
 /// Background calibration + the blue/green cutover (see module docs).
@@ -1070,6 +1399,48 @@ fn serve_batch<E: Elem, EU: Elem, EV: Elem>(
     w: &mut Vec<E>,
     stats: &mut Vec<ColStats>,
 ) {
+    // A quarantined key is never served again: every queued request
+    // resolves as a typed `ModelFault` without running the solve (the
+    // panic loop already consumed its respawn budget). Registry lock
+    // taken and released before the done/shard locks below.
+    let quarantined = {
+        let reg = lock_ok(&sh.reg);
+        matches!(
+            reg.find(key).map(|e| e.state),
+            Some(KeyState::Quarantined)
+        )
+    };
+    if quarantined {
+        let completed = sh.clock.elapsed();
+        let b = items.len();
+        {
+            let mut done = lock_ok(&sh.done);
+            for (p, (wait, req)) in items.drain(..).enumerate() {
+                done.push(ShardResponse {
+                    id: req.id,
+                    key,
+                    shard: me,
+                    seq: base_seq + p as u64,
+                    z: Vec::new(),
+                    w: Vec::new(),
+                    stats: ColStats::default(),
+                    enqueued: drained_at - wait,
+                    completed,
+                    error: Some(ServeError::ModelFault),
+                });
+            }
+        }
+        sh.done_cv.notify_all();
+        let mut st = lock_ok(&sh.cells[me].state);
+        st.inflight.clear();
+        st.inflight_key = None;
+        st.stats.served += b;
+        st.stats.quarantined += b;
+        let km = st.key_entry(key);
+        km.served += b;
+        km.model_faults += b;
+        return;
+    }
     if !engines.iter().any(|s| s.key == key) {
         // First batch after a steal: calibrate a local engine from the
         // same deterministic z₀ = 0 probe — bit-identical to the home
@@ -1122,6 +1493,16 @@ fn serve_batch<E: Elem, EU: Elem, EV: Elem>(
         );
         recalibrated = true;
     }
+    // Engine gauges for the per-key metrics row, read before any lock.
+    let trip_rate = slot.engine.trip_rate();
+    let stale = slot.engine.estimate_stale();
+    let breaker = slot
+        .engine
+        .breaker()
+        .map(|br| br.state())
+        .unwrap_or(BreakerState::Closed);
+    let mut model_faults = 0usize;
+    let mut unconverged = 0usize;
     let completed = sh.clock.elapsed();
     {
         let mut done = lock_ok(&sh.done);
@@ -1135,8 +1516,10 @@ fn serve_batch<E: Elem, EU: Elem, EV: Elem>(
             let finite = stats[p].residual.is_finite()
                 && zc.iter().chain(wc.iter()).all(|v| v.to_f64().is_finite());
             let error = if !finite {
+                model_faults += 1;
                 Some(ServeError::ModelFault)
             } else if !stats[p].converged {
+                unconverged += 1;
                 Some(ServeError::Unconverged)
             } else {
                 None
@@ -1178,6 +1561,20 @@ fn serve_batch<E: Elem, EU: Elem, EV: Elem>(
         st.stats.recalibrations += 1;
     }
     st.stats.open_breakers = engines.iter().filter(|s| s.engine.breaker_open()).count();
+    let km = st.key_entry(key);
+    km.served += b;
+    km.batches += 1;
+    km.fwd_iters += report.fwd_col_iters_total;
+    km.fallback_cols += report.fallback_cols;
+    km.nonfinite_cols += report.nonfinite_cols;
+    km.unconverged += unconverged;
+    km.model_faults += model_faults;
+    km.fallback_rate = trip_rate;
+    km.estimate_stale = stale;
+    km.breaker = breaker;
+    if recalibrated {
+        km.recalibrations += 1;
+    }
 }
 
 /// Collect retired keys this shard owns once their queues drain: remove
@@ -1380,6 +1777,7 @@ mod tests {
                 shard: 0,
                 state: KeyState::Live,
                 steal_cooldown: 0,
+                strikes: 0,
             });
             reg.live.push((0, 0));
         }
@@ -1549,6 +1947,7 @@ mod tests {
                 shard: 0,
                 state: KeyState::Live,
                 steal_cooldown: 0,
+                strikes: 0,
             });
             reg.live.push((0, 0));
         }
@@ -1616,6 +2015,7 @@ mod tests {
                 shard: 0,
                 state: KeyState::Live,
                 steal_cooldown: 0,
+                strikes: 0,
             });
             reg.live.push((0, 0));
         }

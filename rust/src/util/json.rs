@@ -109,18 +109,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(x) => {
-                if x.is_finite() {
-                    if *x == x.trunc() && x.abs() < 1e15 {
-                        let _ = write!(out, "{}", *x as i64);
-                    } else {
-                        let _ = write!(out, "{}", x);
-                    }
-                } else {
-                    // JSON has no inf/nan; encode as null (documented loss).
-                    out.push_str("null");
-                }
-            }
+            Json::Num(x) => write_num(out, *x),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(v) => {
                 out.push('[');
@@ -168,7 +157,26 @@ fn newline_indent(out: &mut String, indent: Option<usize>, level: usize) {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Append one JSON number. Integral values below 1e15 print as integers
+/// (exact in f64, so they still round-trip bit-for-bit through `parse`);
+/// everything else uses Rust's shortest-round-trip float `Display`.
+/// Non-finite values encode as `null` (JSON has no inf/nan — documented
+/// loss). Shared with the HTTP response builder (`crate::http::json`).
+pub(crate) fn write_num(out: &mut String, x: f64) {
+    if x.is_finite() {
+        if x == x.trunc() && x.abs() < 1e15 {
+            let _ = write!(out, "{}", x as i64);
+        } else {
+            let _ = write!(out, "{}", x);
+        }
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Append `s` as a quoted, escaped JSON string. Shared with the HTTP
+/// response builder (`crate::http::json`).
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {

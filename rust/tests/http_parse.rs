@@ -1,0 +1,328 @@
+//! Seeded fuzz harness for the HTTP edge's two parsers (ISSUE 10
+//! satellite): ~20,000 deterministic cases through
+//! [`shine::http::read_request`] and [`shine::http::LazyDoc`].
+//!
+//! The contract under test is narrow and absolute: **no input panics**,
+//! and every rejection is a *typed* outcome — a 4xx [`HttpError`] from
+//! the framing layer (only 400/411/413/431 exist there), a clean
+//! `Closed`, or a positioned [`ScanError`] from the JSON scanner. Byte
+//! soup, truncations at every prefix of valid requests, random
+//! mutations, oversized bodies and header lines, 200-deep JSON nesting,
+//! duplicate keys and header-injection payloads all go through the same
+//! assertion. A differential cross-check pins the lazy scanner against
+//! the crate's tree parser (`util::json::parse`) on generated valid
+//! documents, where both must extract bit-identical numbers.
+//!
+//! Everything is driven by the crate's own [`Rng`], so a failure
+//! reproduces from the seed printed in the assert message.
+
+use shine::http::{read_request, HttpError, LazyDoc, RecvError, Response, DEFAULT_MAX_BODY};
+use shine::util::json::{parse as tree_parse, Json};
+use shine::util::rng::Rng;
+use std::io::Cursor;
+
+/// Framing-layer statuses that exist (anything else is a bug).
+fn assert_typed(res: Result<shine::http::Request, RecvError>, ctx: &str) {
+    match res {
+        Ok(_) | Err(RecvError::Closed) | Err(RecvError::Io(_)) => {}
+        Err(RecvError::Proto(HttpError { status, .. })) => {
+            assert!(
+                matches!(status, 400 | 411 | 413 | 431),
+                "{ctx}: untyped framing status {status}"
+            );
+        }
+    }
+}
+
+fn parse_bytes(bytes: &[u8], ctx: &str) {
+    assert_typed(read_request(&mut Cursor::new(bytes), DEFAULT_MAX_BODY), ctx);
+}
+
+/// A canonical valid solve request with `n` body bytes of JSON payload.
+fn valid_request(body: &str) -> Vec<u8> {
+    format!(
+        "POST /v1/solve HTTP/1.1\r\nhost: shine\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+#[test]
+fn fuzz_random_bytes_through_the_framing_layer() {
+    // 4,000 cases of raw byte soup, half biased into printable ASCII so
+    // the parser gets past the request line more often.
+    let mut rng = Rng::new(0x10_F422);
+    for case in 0..4_000u32 {
+        let len = rng.below(700);
+        let ascii = case % 2 == 0;
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| {
+                let b = (rng.next_u64() & 0xFF) as u8;
+                if ascii {
+                    0x20 + (b % 0x5F)
+                } else {
+                    b
+                }
+            })
+            .collect();
+        parse_bytes(&bytes, &format!("random case {case}"));
+    }
+}
+
+#[test]
+fn fuzz_every_truncation_of_valid_requests() {
+    // 10 distinct valid requests x every prefix length: ~3,400 cases.
+    // A truncated request must resolve as Closed (EOF on the request
+    // boundary) or a typed 400 (EOF mid-frame) — never a panic or hang.
+    let mut rng = Rng::new(0x10_721C);
+    for doc in 0..10u32 {
+        let n = 1 + rng.below(40);
+        let nums: Vec<String> = (0..n)
+            .map(|_| format!("{:.6}", rng.uniform_in(-10.0, 10.0)))
+            .collect();
+        let body = format!("{{\"model\":{doc},\"cotangent\":[{}]}}", nums.join(","));
+        let req = valid_request(&body);
+        // The untruncated request must parse.
+        let full = read_request(&mut Cursor::new(&req), DEFAULT_MAX_BODY)
+            .unwrap_or_else(|_| panic!("untruncated request {doc} must parse"));
+        assert_eq!(full.method, "POST");
+        assert_eq!(full.body.len(), body.len());
+        for cut in 0..req.len() {
+            parse_bytes(&req[..cut], &format!("doc {doc} cut {cut}"));
+        }
+    }
+}
+
+#[test]
+fn fuzz_mutated_requests() {
+    // 4,000 cases: a valid request with 1-8 random bytes overwritten.
+    // Mutations can corrupt the method, the version, a header name, the
+    // content-length digits or the body — all must stay typed.
+    let mut rng = Rng::new(0x10_3A7);
+    let base = valid_request("{\"model\":1,\"cotangent\":[1.0,2.0,3.0]}");
+    for case in 0..4_000u32 {
+        let mut req = base.clone();
+        for _ in 0..(1 + rng.below(8)) {
+            let i = rng.below(req.len());
+            req[i] = (rng.next_u64() & 0xFF) as u8;
+        }
+        parse_bytes(&req, &format!("mutation case {case}"));
+    }
+}
+
+#[test]
+fn fuzz_oversized_requests_are_bounded_rejections() {
+    // ~600 cases around the body and line caps: content-length past the
+    // configured max_body -> 413 before any body byte is read; header /
+    // request lines past the 8 KiB line bound -> 431.
+    let mut rng = Rng::new(0x10_B16);
+    for case in 0..300u32 {
+        let cap = 64 + rng.below(512);
+        let claimed = cap + 1 + rng.below(1 << 20);
+        let head = format!(
+            "POST /v1/solve HTTP/1.1\r\nhost: s\r\ncontent-length: {claimed}\r\n\r\n"
+        );
+        match read_request(&mut Cursor::new(head.as_bytes()), cap) {
+            Err(RecvError::Proto(e)) => assert_eq!(e.status, 413, "case {case}"),
+            other => panic!("case {case}: oversize body not rejected: {other:?}"),
+        }
+    }
+    for case in 0..300u32 {
+        let pad = 8 * 1024 + 1 + rng.below(4096);
+        let line = match case % 3 {
+            0 => format!("GET /{} HTTP/1.1\r\n\r\n", "x".repeat(pad)),
+            1 => format!("GET / HTTP/1.1\r\nx-big: {}\r\n\r\n", "y".repeat(pad)),
+            _ => "z".repeat(pad),
+        };
+        match read_request(&mut Cursor::new(line.as_bytes()), DEFAULT_MAX_BODY) {
+            Err(RecvError::Proto(e)) => {
+                assert!(matches!(e.status, 431 | 400), "case {case}: {}", e.status)
+            }
+            other => panic!("case {case}: oversize line not rejected: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn fuzz_header_injection_is_neutralized_both_ways() {
+    let mut rng = Rng::new(0x10_145);
+    // Ingress: 500 requests whose header values embed control bytes that
+    // survived line splitting (lone CR, NUL, ESC...) must be typed 400s.
+    for case in 0..500u32 {
+        let ctl = [b'\0', b'\r', 0x01, 0x0B, 0x1B][rng.below(5)];
+        let mut req = Vec::new();
+        req.extend_from_slice(b"GET /healthz HTTP/1.1\r\nx-evil: a");
+        req.push(ctl);
+        req.extend_from_slice(b"b\r\n\r\n");
+        match read_request(&mut Cursor::new(&req), DEFAULT_MAX_BODY) {
+            Err(RecvError::Proto(e)) => assert_eq!(e.status, 400, "case {case}"),
+            other => panic!("case {case}: ctrl byte {ctl:#x} accepted: {other:?}"),
+        }
+    }
+    // Egress: 500 hostile header values through Response::with_header —
+    // the serialized response must contain exactly one blank line and no
+    // smuggled header, whatever CR/LF/NUL the value carried.
+    for case in 0..500u32 {
+        let mut value = String::from("ok");
+        for _ in 0..(1 + rng.below(4)) {
+            value.push(['\r', '\n', '\0', ';'][rng.below(4)]);
+            value.push_str("evil: injected");
+        }
+        let mut wire = Vec::new();
+        Response::json(200, "{}".to_string())
+            .with_header("x-fuzz", &value)
+            .write_to(&mut wire, true)
+            .unwrap();
+        let text = String::from_utf8_lossy(&wire);
+        let head = text.split("\r\n\r\n").next().unwrap();
+        assert!(
+            !head.lines().any(|l| l.starts_with("evil:")),
+            "case {case}: smuggled header in {head:?}"
+        );
+        assert!(!text.contains('\0'), "case {case}: NUL on the wire");
+    }
+}
+
+#[test]
+fn fuzz_json_scanner_soup_nesting_and_duplicates() {
+    // 6,000 cases through every LazyDoc entry point: random soup,
+    // structured mutations, deep nesting past MAX_DEPTH (a typed
+    // ScanError, not a stack overflow), duplicate keys (first match
+    // wins), and oversized arrays against f64_vec_at's bound.
+    let mut rng = Rng::new(0x10_D0C);
+    for case in 0..4_000u32 {
+        let bytes: Vec<u8> = if case % 2 == 0 {
+            (0..rng.below(300)).map(|_| (rng.next_u64() & 0xFF) as u8).collect()
+        } else {
+            let mut b = format!(
+                "{{\"model\":{},\"cotangent\":[{:.4},{:.4}],\"z0\":null}}",
+                rng.below(9),
+                rng.uniform(),
+                rng.uniform()
+            )
+            .into_bytes();
+            for _ in 0..(1 + rng.below(6)) {
+                let i = rng.below(b.len());
+                b[i] = (rng.next_u64() & 0xFF) as u8;
+            }
+            b
+        };
+        let doc = LazyDoc::new(&bytes);
+        let _ = doc.validate();
+        let _ = doc.path(&["model"]);
+        let _ = doc.f64_at(&["cotangent"]);
+        let _ = doc.u32_at(&["model"]);
+        let _ = doc.str_at(&["z0"]);
+        let _ = doc.f64_vec_at(&["cotangent"], 16);
+    }
+    // Nesting: every depth from shallow to far past MAX_DEPTH, both pure
+    // arrays and alternating object/array chains. 1,000 cases.
+    for depth in 1..=500usize {
+        let arr = format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+        let d = LazyDoc::new(arr.as_bytes());
+        if depth <= shine::http::MAX_DEPTH {
+            d.validate().unwrap_or_else(|e| panic!("depth {depth}: {e}"));
+        } else {
+            assert!(d.validate().is_err(), "depth {depth} accepted");
+        }
+        let obj = format!("{}1{}", "{\"k\":".repeat(depth), "}".repeat(depth));
+        let d = LazyDoc::new(obj.as_bytes());
+        if depth <= shine::http::MAX_DEPTH {
+            d.validate().unwrap_or_else(|e| panic!("obj depth {depth}: {e}"));
+            assert_eq!(
+                d.f64_at(&(0..depth).map(|_| "k").collect::<Vec<_>>()).unwrap(),
+                Some(1.0),
+                "obj depth {depth} path walk"
+            );
+        } else {
+            assert!(d.validate().is_err(), "obj depth {depth} accepted");
+        }
+    }
+    // Duplicate keys: the scanner documents first-match-wins; 1,000
+    // seeded duplicate layouts must return the first binding.
+    for case in 0..1_000u32 {
+        let first = rng.below(1000) as f64;
+        let second = first + 1.0;
+        let pad = "\"x\":0,".repeat(rng.below(4));
+        let doc = format!("{{{pad}\"k\":{first},\"k\":{second}}}");
+        let d = LazyDoc::new(doc.as_bytes());
+        assert_eq!(
+            d.f64_at(&["k"]).unwrap(),
+            Some(first),
+            "case {case}: duplicate key not first-match"
+        );
+    }
+}
+
+#[test]
+fn differential_scanner_vs_tree_parser() {
+    // 2,000 generated valid documents (unique keys, depth <= 3): the lazy
+    // scanner and the crate's tree parser must agree bit-for-bit on every
+    // extracted number and string. Numbers are emitted through write_num
+    // (shortest round-trip), so "agree" means exact equality.
+    let mut rng = Rng::new(0x10_D1FF);
+    for case in 0..2_000u32 {
+        let x = match case % 4 {
+            0 => rng.normal_ms(0.0, 1e6),
+            1 => rng.uniform_in(-1.0, 1.0),
+            2 => (rng.next_u64() % 1_000_000) as f64,
+            _ => rng.normal() * 1e-12,
+        };
+        let n = 1 + rng.below(8);
+        let arr: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let body = shine::http::JsonBuilder::obj()
+            .num("x", x)
+            .nums("arr", arr.iter().copied())
+            .raw("inner", &shine::http::JsonBuilder::obj().num("y", x * 0.5).finish())
+            .text("s", &format!("case-{case}"))
+            .finish();
+
+        let d = LazyDoc::new(body.as_bytes());
+        d.validate().unwrap_or_else(|e| panic!("case {case}: generated doc invalid: {e}"));
+        let tree = tree_parse(&body).unwrap_or_else(|e| panic!("case {case}: {e:?}"));
+        let Json::Obj(map) = &tree else { panic!("case {case}: not an object") };
+
+        let tree_x = match map.get("x") {
+            Some(Json::Num(v)) => *v,
+            other => panic!("case {case}: x = {other:?}"),
+        };
+        assert_eq!(
+            d.f64_at(&["x"]).unwrap().unwrap().to_bits(),
+            tree_x.to_bits(),
+            "case {case}: x disagrees"
+        );
+        let tree_y = match map.get("inner") {
+            Some(Json::Obj(inner)) => match inner.get("y") {
+                Some(Json::Num(v)) => *v,
+                other => panic!("case {case}: y = {other:?}"),
+            },
+            other => panic!("case {case}: inner = {other:?}"),
+        };
+        assert_eq!(
+            d.f64_at(&["inner", "y"]).unwrap().unwrap().to_bits(),
+            tree_y.to_bits(),
+            "case {case}: nested y disagrees"
+        );
+        let scan_arr = d.f64_vec_at(&["arr"], n).unwrap().unwrap();
+        let tree_arr: Vec<f64> = match map.get("arr") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Json::Num(x) => *x,
+                    other => panic!("case {case}: arr elem {other:?}"),
+                })
+                .collect(),
+            other => panic!("case {case}: arr = {other:?}"),
+        };
+        assert_eq!(scan_arr.len(), tree_arr.len(), "case {case}");
+        for (a, b) in scan_arr.iter().zip(&tree_arr) {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case}: arr elem disagrees");
+        }
+        assert_eq!(
+            d.str_at(&["s"]).unwrap().as_deref(),
+            Some(format!("case-{case}").as_str()),
+            "case {case}: string disagrees"
+        );
+    }
+}

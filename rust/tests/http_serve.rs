@@ -1,0 +1,316 @@
+//! HTTP front-end invariants (ISSUE 10 tentpole):
+//!
+//! 1. **Wire-format bit parity** — a `POST /v1/solve` over loopback TCP
+//!    returns the bit-identical fixed point, backward answer, iteration
+//!    count and residual as the in-process single-threaded [`Router`]
+//!    serving the same request. JSON (de)serialization, the gateway's
+//!    f64 wire boundary and the network layer are invisible in the
+//!    results — pinned for both the `f64` and `f32` state precisions
+//!    (shortest-round-trip number formatting makes this exact, see
+//!    ADR-005).
+//! 2. **Typed status mapping end-to-end** — malformed bodies, unknown
+//!    models, wrong methods/paths, oversized bodies/headers, expired
+//!    deadlines and shed connections each surface as their one canonical
+//!    status over a real socket, with machine-readable error tokens.
+//! 3. **Telemetry surfaces** — `/healthz` and `/metrics` expose the
+//!    supervision, breaker, staleness and admission counters the
+//!    acceptance criteria name, and keep-alive connections are actually
+//!    reused (one accepted connection serves many requests).
+
+use shine::http::{
+    Gateway, HttpClient, HttpConfig, HttpServer, JsonBuilder, LazyDoc, SolveBackend,
+};
+use shine::linalg::vecops::Elem;
+use shine::serve::{
+    EngineConfig, ModelKey, RetryPolicy, Router, SchedulerConfig, ShardConfig, ShardedRouter,
+    SynthDeq,
+};
+use shine::solvers::fixed_point::ColStats;
+use shine::util::rng::Rng;
+use std::sync::Arc;
+
+const D: usize = 24;
+const BLOCK: usize = 8;
+const MODEL_SEED: u64 = 4242;
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        ..Default::default()
+    }
+    .with_tol(1e-8)
+}
+
+fn shard_cfg(queue_cap: usize) -> ShardConfig {
+    ShardConfig::new(
+        1,
+        engine_cfg(),
+        SchedulerConfig {
+            max_batch: 4,
+            max_wait: 1e-4,
+            queue_cap,
+        },
+    )
+}
+
+/// Boot router + gateway + server on an ephemeral loopback port and hand
+/// back the pieces. The returned server must outlive the last request;
+/// the gateway Arc keeps the router alive underneath it.
+fn boot<E: Elem, EU: Elem, EV: Elem>(
+    queue_cap: usize,
+    http: HttpConfig,
+) -> (Arc<Gateway<E, EU, EV>>, HttpServer, HttpClient) {
+    let router: ShardedRouter<E, EU, EV> = ShardedRouter::new(shard_cfg(queue_cap));
+    assert!(router.register(
+        ModelKey::new(0, 0),
+        Arc::new(SynthDeq::<E>::new(D, BLOCK, MODEL_SEED)),
+    ));
+    let gateway = Arc::new(Gateway::new(router, D, RetryPolicy::none()));
+    let backend: Arc<dyn SolveBackend> = gateway.clone();
+    let server = HttpServer::bind(backend, "127.0.0.1:0", http).expect("bind loopback");
+    let client = HttpClient::connect(server.local_addr()).expect("connect loopback");
+    (gateway, server, client)
+}
+
+/// Deterministic per-request cotangents (same idiom as serve_shard.rs).
+fn cotangents(n: usize) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(42);
+    (0..n).map(|_| rng.normal_vec(D)).collect()
+}
+
+fn solve_body(cot: &[f64]) -> String {
+    JsonBuilder::obj()
+        .uint("model", 0)
+        .nums("cotangent", cot.iter().copied())
+        .finish()
+}
+
+/// Reference: the single-threaded [`Router`] serving each request alone.
+fn run_reference<E: Elem>(cots: &[Vec<f64>]) -> Vec<(Vec<E>, Vec<E>, ColStats)> {
+    let mut router: Router<E> = Router::new(engine_cfg());
+    router.register(
+        ModelKey::new(0, 0),
+        Box::new(SynthDeq::<E>::new(D, BLOCK, MODEL_SEED)),
+    );
+    cots.iter()
+        .map(|cot| {
+            let mut z = vec![E::ZERO; D];
+            let mut w = vec![E::ZERO; D];
+            let cot_e: Vec<E> = cot.iter().map(|&x| E::from_f64(x)).collect();
+            let mut stats = [ColStats::default()];
+            router
+                .process(ModelKey::new(0, 0), &mut z, &cot_e, &mut w, &mut stats)
+                .expect("registered");
+            (z, w, stats[0])
+        })
+        .collect()
+}
+
+/// The parity harness at one state precision: every value in the HTTP
+/// response must parse back to the exact bits the in-process reference
+/// produced. `E::from_f64(wire_f64)` is exact because the wire carries
+/// shortest-round-trip decimals of values that originated in `E`.
+fn assert_http_parity<E: Elem, EU: Elem, EV: Elem>() {
+    let n = 6;
+    let cots = cotangents(n);
+    let reference = run_reference::<E>(&cots);
+    let (_gw, _server, mut client) = boot::<E, EU, EV>(n.max(4), HttpConfig::default());
+
+    for (i, cot) in cots.iter().enumerate() {
+        let resp = client
+            .post_json("/v1/solve", &solve_body(cot), &[])
+            .expect("solve round-trip");
+        assert_eq!(resp.status, 200, "request {i}: {}", resp.text());
+        assert!(
+            resp.header("x-shine-attempts").is_some(),
+            "attempt echo header missing"
+        );
+        let doc = LazyDoc::new(&resp.body);
+        let z = doc.f64_vec_at(&["z"], D).unwrap().expect("z present");
+        let w = doc.f64_vec_at(&["w"], D).unwrap().expect("w present");
+        let iters = doc.u32_at(&["iters"]).unwrap().expect("iters present");
+        let residual = doc.f64_at(&["residual"]).unwrap().expect("residual present");
+        assert_eq!(
+            doc.path(&["converged"]).unwrap().expect("converged present"),
+            b"true",
+            "request {i} did not converge"
+        );
+
+        let (ref_z, ref_w, ref_stats) = &reference[i];
+        assert_eq!(iters as usize, ref_stats.iters, "request {i} iters");
+        assert_eq!(
+            residual.to_bits(),
+            ref_stats.residual.to_bits(),
+            "request {i} residual bits"
+        );
+        for (j, (&wire, refv)) in z.iter().zip(ref_z).enumerate() {
+            assert_eq!(
+                E::from_f64(wire).to_f64().to_bits(),
+                refv.to_f64().to_bits(),
+                "request {i} z[{j}]"
+            );
+        }
+        for (j, (&wire, refv)) in w.iter().zip(ref_w).enumerate() {
+            assert_eq!(
+                E::from_f64(wire).to_f64().to_bits(),
+                refv.to_f64().to_bits(),
+                "request {i} w[{j}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn http_solve_is_bit_identical_to_in_process_f64() {
+    assert_http_parity::<f64, f64, f64>();
+}
+
+#[test]
+fn http_solve_is_bit_identical_to_in_process_f32() {
+    assert_http_parity::<f32, f32, f32>();
+}
+
+#[test]
+fn typed_status_mapping_over_the_wire() {
+    let (_gw, _server, mut client) = boot::<f64, f64, f64>(8, HttpConfig::default());
+    let cot = cotangents(1).remove(0);
+
+    // Unknown model -> the submit path's 404, with the machine token.
+    let resp = client
+        .post_json(
+            "/v1/solve",
+            &JsonBuilder::obj()
+                .uint("model", 7)
+                .nums("cotangent", cot.iter().copied())
+                .finish(),
+            &[],
+        )
+        .unwrap();
+    assert_eq!(resp.status, 404);
+    assert!(resp.text().contains("unknown_model"), "{}", resp.text());
+
+    // Malformed JSON -> 400 with the scanner's diagnosis.
+    let resp = client.post_json("/v1/solve", "{\"cotangent\":[1,", &[]).unwrap();
+    assert_eq!(resp.status, 400);
+    assert!(resp.text().contains("error"), "{}", resp.text());
+
+    // Wrong cotangent length -> 400 naming the model dimension.
+    let resp = client
+        .post_json("/v1/solve", "{\"cotangent\":[1.0,2.0]}", &[])
+        .unwrap();
+    assert_eq!(resp.status, 400);
+    assert!(resp.text().contains("dimension"), "{}", resp.text());
+
+    // Method / path mapping.
+    let resp = client.get("/v1/solve").unwrap();
+    assert_eq!(resp.status, 405);
+    let resp = client.get("/nope").unwrap();
+    assert_eq!(resp.status, 404);
+    let resp = client
+        .request("POST", "/healthz", &[], Some(b"{}"))
+        .unwrap();
+    assert_eq!(resp.status, 405);
+
+    // An already-expired deadline -> the canonical 504.
+    let resp = client
+        .post_json(
+            "/v1/solve",
+            &JsonBuilder::obj()
+                .uint("model", 0)
+                .nums("cotangent", cot.iter().copied())
+                .num("deadline_ms", 1e-6)
+                .finish(),
+            &[],
+        )
+        .unwrap();
+    assert_eq!(resp.status, 504, "{}", resp.text());
+    assert!(resp.text().contains("deadline_exceeded"), "{}", resp.text());
+}
+
+#[test]
+fn request_bounds_are_typed_rejections_not_panics() {
+    let cfg = HttpConfig {
+        max_body: 256,
+        ..HttpConfig::default()
+    };
+    let (_gw, _server, mut client) = boot::<f64, f64, f64>(8, cfg);
+
+    // Body over the configured cap -> 413 before the body is read.
+    let big = format!("{{\"cotangent\":[{}]}}", vec!["1.0"; 200].join(","));
+    assert!(big.len() > 256);
+    let resp = client.post_json("/v1/solve", &big, &[]).unwrap();
+    assert_eq!(resp.status, 413);
+
+    // A header line past the 8 KiB bound -> 431 (request line included).
+    let huge = "x".repeat(9 * 1024);
+    let resp = client
+        .post_json("/v1/solve", "{}", &[("x-padding", &huge)])
+        .unwrap();
+    assert_eq!(resp.status, 431);
+
+    // The connection was closed after the framing error; the client's
+    // single reconnect must make the next request succeed.
+    let cot = cotangents(1).remove(0);
+    let resp = client.post_json("/v1/solve", &solve_body(&cot), &[]).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.text());
+}
+
+#[test]
+fn admission_control_sheds_with_fast_429() {
+    // A zero connection budget sheds every connection before any parse.
+    let cfg = HttpConfig {
+        max_connections: 0,
+        ..HttpConfig::default()
+    };
+    let (_gw, server, mut client) = boot::<f64, f64, f64>(8, cfg);
+    let cot = cotangents(1).remove(0);
+    let resp = client.post_json("/v1/solve", &solve_body(&cot), &[]).unwrap();
+    assert_eq!(resp.status, 429);
+    assert!(resp.header("retry-after").is_some(), "shed without a hint");
+    assert!(server.counters().shed() >= 1);
+    // Shed before any worker or parse touched the connection.
+    assert_eq!(server.counters().requests(), 0);
+}
+
+#[test]
+fn healthz_and_metrics_expose_the_ledger() {
+    let (gw, server, mut client) = boot::<f64, f64, f64>(8, HttpConfig::default());
+    let cots = cotangents(3);
+    for cot in &cots {
+        let resp = client.post_json("/v1/solve", &solve_body(cot), &[]).unwrap();
+        assert_eq!(resp.status, 200);
+    }
+
+    let health = client.get("/healthz").unwrap();
+    assert_eq!(health.status, 200);
+    let text = health.text();
+    for needle in ["\"status\":\"ok\"", "\"respawns\"", "\"queue_depth\"", "\"quarantined\""] {
+        assert!(text.contains(needle), "healthz missing {needle}: {text}");
+    }
+
+    let metrics = client.get("/metrics").unwrap();
+    assert_eq!(metrics.status, 200);
+    let text = metrics.text();
+    for needle in [
+        "shine_shard_served_total{shard=\"0\"} 3",
+        "shine_shard_respawns_total",
+        "shine_shard_queue_depth",
+        "shine_shard_retry_after_seconds",
+        "shine_key_served_total{key=\"m0v0\"}",
+        "shine_key_fallback_rate{key=\"m0v0\"}",
+        "shine_key_estimate_stale{key=\"m0v0\"}",
+        "shine_key_breaker_state{key=\"m0v0\"} 0",
+        "shine_key_quarantined{key=\"m0v0\"} 0",
+        "shine_gateway_orphaned_responses_total 0",
+        "shine_http_requests_total",
+        "shine_http_responses_total{code=\"200\"}",
+        "shine_http_admission_shed_total 0",
+    ] {
+        assert!(text.contains(needle), "metrics missing {needle}:\n{text}");
+    }
+
+    // Keep-alive actually reused one connection for every request above.
+    assert_eq!(server.counters().accepted(), 1);
+    assert!(server.counters().requests() >= 5);
+    assert_eq!(gw.orphans(), 0);
+}

@@ -18,6 +18,13 @@
 //!    requests whose deadline lapses while a straggler batch occupies the
 //!    worker resolve as typed [`ServeError::DeadlineExceeded`] at drain
 //!    instead of being served late.
+//! 5. **Per-key respawn cap / quarantine** (ISSUE 10 satellite) — a key
+//!    whose model panics on every batch stops respawn-looping the shard
+//!    after [`ShardConfig::quarantine_after`] attributable strikes: its
+//!    queued requests resolve as typed [`ServeError::ModelFault`], new
+//!    submits bounce as [`SubmitError::Quarantined`], the record is
+//!    published through `quarantined_keys` / `key_metrics`, and innocent
+//!    keys on the same shard keep serving.
 
 use shine::serve::{
     EngineConfig, Fault, FaultPlan, FaultyModel, ModelKey, Router, SchedulerConfig, ServeError,
@@ -323,5 +330,91 @@ fn deadlines_bounce_at_admission_and_expire_at_drain() {
     let stats = &router.shard_stats()[0];
     assert_eq!(stats.deadline_expired, 4);
     assert_eq!(stats.respawns, 0, "no supervision events in this scenario");
+    router.shutdown();
+}
+
+#[test]
+fn repeat_offender_key_is_quarantined_after_the_respawn_cap() {
+    // Model 1 panics on every request it ever serves (the calibration
+    // probe is id-less, so registration itself succeeds); model 0 is
+    // clean. With a cap of one strike, the first panicked batch must be
+    // the shard's LAST supervision event for that key.
+    let total = 6;
+    let mut cfg = shard_cfg(1, 64);
+    cfg.quarantine_after = 1;
+    let plan = FaultPlan::from_faults((0..64).map(|id| (id, Fault::Panic)).collect());
+    let router: ShardedRouter<f32> = ShardedRouter::new(cfg);
+    router.register(ModelKey::new(0, 0), mk_model(0));
+    router.register(ModelKey::new(1, 0), faulty(1, &plan));
+    let cots = cotangents(16);
+
+    for id in 0..total {
+        router
+            .submit(1, ShardRequest::new(id, vec![0.0f32; D], cots[id].clone()))
+            .expect("admitted before the quarantine");
+    }
+    // Exactly once across the crash AND the quarantine: whatever was
+    // in-flight with the panic is a WorkerLost casualty (at most one
+    // batch), everything still queued resolves as the quarantined key's
+    // typed ModelFault — never a hang, never a respawn loop.
+    let mut responses = router.collect(total);
+    assert_eq!(responses.len(), total);
+    responses.sort_by_key(|r| r.id);
+    let mut ids: Vec<usize> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..total).collect::<Vec<_>>());
+    let lost = responses
+        .iter()
+        .filter(|r| r.error == Some(ServeError::WorkerLost))
+        .count();
+    let faulted = responses
+        .iter()
+        .filter(|r| r.error == Some(ServeError::ModelFault))
+        .count();
+    assert_eq!(lost + faulted, total, "only the two typed outcomes exist");
+    assert!((1..=4).contains(&lost), "one panicked batch: {lost} casualties");
+    assert!(faulted >= total - 4, "queued requests resolved as ModelFault");
+
+    // One respawn, then the cap: the record is public on every surface,
+    // and the quarantine-drain counter reconciles with the typed ledger.
+    let stats = &router.shard_stats()[0];
+    assert_eq!(stats.respawns, 1, "quarantine stopped the respawn loop");
+    assert_eq!(stats.quarantined, faulted);
+    assert_eq!(stats.worker_lost, lost);
+    assert_eq!(router.quarantined_keys(), vec![(ModelKey::new(1, 0), 1)]);
+    let metrics = router.key_metrics();
+    let m1 = metrics
+        .iter()
+        .find(|m| m.key == ModelKey::new(1, 0))
+        .expect("quarantined key stays in the metrics");
+    assert!(m1.quarantined);
+    assert_eq!(m1.strikes, 1);
+    let m0 = metrics
+        .iter()
+        .find(|m| m.key == ModelKey::new(0, 0))
+        .expect("clean key");
+    assert!(!m0.quarantined);
+    assert_eq!(m0.strikes, 0);
+
+    // New submits bounce at admission as the typed quarantine error.
+    let late = ShardRequest::new(9, vec![0.0f32; D], cots[9].clone());
+    match router.submit(1, late) {
+        Err(e @ SubmitError::Quarantined(_)) => {
+            assert_eq!(e.as_serve_error(), ServeError::ModelFault);
+            assert_eq!(e.into_request().id, 9);
+        }
+        other => panic!("expected a quarantine bounce, got {other:?}"),
+    }
+
+    // The innocent key on the same shard is untouched by its neighbour's
+    // quarantine: still serving, still converged.
+    for id in 10..14 {
+        router
+            .submit(0, ShardRequest::new(id, vec![0.0f32; D], cots[id].clone()))
+            .expect("clean key still admits");
+    }
+    let clean = router.collect(4);
+    assert_eq!(clean.len(), 4);
+    assert!(clean.iter().all(|r| r.ok() && r.stats.converged));
     router.shutdown();
 }
