@@ -163,9 +163,20 @@ pub fn parse_solve_call(
     })
 }
 
+/// Per-request rendezvous state, guarded by the slot mutex. The waiter
+/// marks `Abandoned` under the lock when it gives up, and the collector
+/// checks the state under the same lock at fill time — so a typed
+/// outcome arriving at the deadline boundary is either delivered or
+/// counted as an orphan, never silently written into a dead slot.
+enum SlotState<E: Elem> {
+    Empty,
+    Filled(ShardResponse<E>),
+    Abandoned,
+}
+
 /// Per-request rendezvous: the connection handler parks on the condvar,
 /// the collector fills the slot and wakes it.
-type Slot<E> = Arc<(Mutex<Option<ShardResponse<E>>>, Condvar)>;
+type Slot<E> = Arc<(Mutex<SlotState<E>>, Condvar)>;
 
 struct PendingMap<E: Elem> {
     slots: Mutex<HashMap<usize, Slot<E>>>,
@@ -232,8 +243,18 @@ impl<E: Elem, EU: Elem, EV: Elem> Gateway<E, EU, EV> {
                         };
                         match slot {
                             Some(s) => {
-                                *s.0.lock().unwrap_or_else(|p| p.into_inner()) = Some(resp);
-                                s.1.notify_one();
+                                let mut state =
+                                    s.0.lock().unwrap_or_else(|p| p.into_inner());
+                                if matches!(*state, SlotState::Abandoned) {
+                                    // The waiter gave up at its deadline
+                                    // between our map removal and this
+                                    // fill; the outcome is an orphan, not
+                                    // a delivery.
+                                    pending.orphans.fetch_add(1, Ordering::Relaxed);
+                                } else {
+                                    *state = SlotState::Filled(resp);
+                                    s.1.notify_one();
+                                }
                             }
                             None => {
                                 pending.orphans.fetch_add(1, Ordering::Relaxed);
@@ -268,19 +289,23 @@ impl<E: Elem, EU: Elem, EV: Elem> Gateway<E, EU, EV> {
     fn wait_for(&self, id: usize, slot: &Slot<E>, give_up_at: f64) -> Option<ShardResponse<E>> {
         let mut guard = slot.0.lock().unwrap_or_else(|p| p.into_inner());
         loop {
-            if let Some(resp) = guard.take() {
-                return Some(resp);
+            if matches!(*guard, SlotState::Filled(_)) {
+                match std::mem::replace(&mut *guard, SlotState::Empty) {
+                    SlotState::Filled(resp) => return Some(resp),
+                    _ => unreachable!("matched Filled above"),
+                }
             }
             let left = give_up_at - self.router.now();
             if left <= 0.0 {
-                // Deregister so the collector counts the late outcome as
-                // an orphan instead of filling a dead slot.
+                // Abandon under the slot lock: the collector checks this
+                // state under the same lock before filling, so a late
+                // outcome is counted as an orphan — whether the collector
+                // has already pulled the slot out of the map or not.
+                *guard = SlotState::Abandoned;
+                drop(guard);
                 let mut slots = self.pending.slots.lock().unwrap_or_else(|p| p.into_inner());
                 slots.remove(&id);
-                // The response may have been delivered between the take()
-                // above and the deregistration — final check under both
-                // locks' effects.
-                return guard.take();
+                return None;
             }
             let (g, _) = slot
                 .1
@@ -356,7 +381,7 @@ impl<E: Elem, EU: Elem, EV: Elem> SolveBackend for Gateway<E, EU, EV> {
 
         // Slot registered BEFORE submit: the collector may deliver the
         // response before submit_with_retry even returns.
-        let slot: Slot<E> = Arc::new((Mutex::new(None), Condvar::new()));
+        let slot: Slot<E> = Arc::new((Mutex::new(SlotState::Empty), Condvar::new()));
         {
             let mut slots = self.pending.slots.lock().unwrap_or_else(|p| p.into_inner());
             slots.insert(id, Arc::clone(&slot));

@@ -9,10 +9,12 @@
 //! model stays the crate's: threads and condvars, no reactors.
 //!
 //! **Admission control** is end-to-end and sheds at the cheapest point
-//! first: a connection beyond [`HttpConfig::max_connections`] gets an
-//! inline `429 + Retry-After` from the accept thread and is closed before
-//! a worker or a parse ever touches it; past admission, the router's own
-//! `queue_cap` bounds queued work and bounces with the same typed 429.
+//! first: a connection beyond [`HttpConfig::max_connections`] gets a
+//! `429 + Retry-After` from a dedicated shed thread (never the accept
+//! thread — a slow shed client must not stall the front door) and is
+//! closed before a worker or a parse ever touches it; past admission, the
+//! router's own `queue_cap` bounds queued work and bounces with the same
+//! typed 429.
 //! Overload therefore degrades to fast, honest backpressure — never to
 //! unbounded queues or silent drops.
 //!
@@ -66,8 +68,9 @@ impl Default for HttpConfig {
 pub struct HttpCounters {
     by_status: Mutex<BTreeMap<u16, u64>>,
     requests: AtomicUsize,
-    /// Connections shed by admission control (their inline 429s are also
-    /// in `by_status`).
+    /// Connections shed by admission control. Those that got a 429 answer
+    /// are also in `by_status`; ones dropped past [`SHED_QUEUE_CAP`] are
+    /// counted here only (no answer was attempted).
     shed: AtomicUsize,
     accepted: AtomicUsize,
 }
@@ -102,10 +105,22 @@ struct ServerShared {
     cfg: HttpConfig,
     conns: Mutex<VecDeque<TcpStream>>,
     conns_cv: Condvar,
+    /// Shed connections waiting for their 429 write + drain. Handled by a
+    /// dedicated thread so a slow (or hostile) shed client never stalls
+    /// the accept loop; bounded by [`SHED_QUEUE_CAP`].
+    shed_q: Mutex<VecDeque<TcpStream>>,
+    shed_cv: Condvar,
     active: AtomicUsize,
     counters: HttpCounters,
     stop: AtomicBool,
 }
+
+/// Bound on shed connections parked for their 429: beyond this the
+/// connection is dropped un-answered (reset) — under a flood that deep,
+/// spending memory and drain time on politeness is itself a DoS vector.
+/// Dropped-unanswered connections count in `shed` but not `by_status`
+/// (no byte-stream answer was attempted).
+const SHED_QUEUE_CAP: usize = 128;
 
 /// A running HTTP front. [`HttpServer::shutdown`] (or drop) stops the
 /// accept thread, drains the workers, and joins everything.
@@ -113,6 +128,7 @@ pub struct HttpServer {
     addr: SocketAddr,
     sh: Arc<ServerShared>,
     accept: Option<JoinHandle<()>>,
+    shed: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -132,6 +148,8 @@ impl HttpServer {
             cfg,
             conns: Mutex::new(VecDeque::new()),
             conns_cv: Condvar::new(),
+            shed_q: Mutex::new(VecDeque::new()),
+            shed_cv: Condvar::new(),
             active: AtomicUsize::new(0),
             counters: HttpCounters::default(),
             stop: AtomicBool::new(false),
@@ -139,6 +157,10 @@ impl HttpServer {
         let accept = {
             let sh = Arc::clone(&sh);
             std::thread::spawn(move || accept_loop(&sh, listener))
+        };
+        let shed = {
+            let sh = Arc::clone(&sh);
+            std::thread::spawn(move || shed_loop(&sh))
         };
         let workers = (0..cfg.workers)
             .map(|_| {
@@ -150,6 +172,7 @@ impl HttpServer {
             addr: local,
             sh,
             accept: Some(accept),
+            shed: Some(shed),
             workers,
         })
     }
@@ -177,6 +200,10 @@ impl HttpServer {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+        self.sh.shed_cv.notify_all();
+        if let Some(h) = self.shed.take() {
+            let _ = h.join();
+        }
         self.sh.conns_cv.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -198,6 +225,12 @@ fn accept_loop(sh: &ServerShared, listener: TcpListener) {
                 if sh.stop.load(Ordering::SeqCst) {
                     return;
                 }
+                // Back off instead of hot-spinning: under fd exhaustion
+                // (EMFILE/ENFILE) accept() fails repeatedly, and a tight
+                // retry loop at 100% CPU worsens the overload that caused
+                // it. A brief sleep lets in-flight connections close and
+                // return fds.
+                std::thread::sleep(std::time::Duration::from_millis(50));
                 continue;
             }
         };
@@ -205,21 +238,20 @@ fn accept_loop(sh: &ServerShared, listener: TcpListener) {
             return;
         }
         sh.counters.accepted.fetch_add(1, Ordering::Relaxed);
-        // Admission control: shed beyond the connection budget with an
-        // inline 429 — cheaper than parking the connection on a worker.
+        // Admission control: connections beyond the budget are handed to
+        // the shed thread for their 429 + drain. The accept thread never
+        // writes to (or drains) a client socket itself — a hostile shed
+        // connection must not be able to stall the front door.
         let admitted = sh.active.load(Ordering::SeqCst) < sh.cfg.max_connections;
         if !admitted {
             sh.counters.shed.fetch_add(1, Ordering::Relaxed);
-            sh.counters.count(429);
-            let mut stream = stream;
-            let body = JsonBuilder::obj()
-                .text("error", "overloaded")
-                .text("message", "connection budget exhausted; retry with backoff")
-                .finish();
-            let _ = Response::json(429, body)
-                .with_header("retry-after", "1")
-                .write_to(&mut stream, false);
-            linger_close(&mut stream);
+            let mut q = sh.shed_q.lock().unwrap_or_else(|p| p.into_inner());
+            if q.len() < SHED_QUEUE_CAP {
+                q.push_back(stream);
+                drop(q);
+                sh.shed_cv.notify_one();
+            }
+            // Over the cap: drop un-answered (the stream closes here).
             continue;
         }
         sh.active.fetch_add(1, Ordering::SeqCst);
@@ -227,6 +259,38 @@ fn accept_loop(sh: &ServerShared, listener: TcpListener) {
         q.push_back(stream);
         drop(q);
         sh.conns_cv.notify_one();
+    }
+}
+
+/// Dedicated thread for shed connections: write the 429 and drain
+/// (bounded) off the accept path, one connection at a time.
+fn shed_loop(sh: &ServerShared) {
+    loop {
+        let stream = {
+            let mut q = sh.shed_q.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                // Stop wins over the backlog: connections still queued at
+                // shutdown are dropped un-answered rather than holding the
+                // join for up to a linger bound each.
+                if sh.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                if let Some(s) = q.pop_front() {
+                    break Some(s);
+                }
+                q = sh.shed_cv.wait(q).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        let Some(mut stream) = stream else { return };
+        sh.counters.count(429);
+        let body = JsonBuilder::obj()
+            .text("error", "overloaded")
+            .text("message", "connection budget exhausted; retry with backoff")
+            .finish();
+        let _ = Response::json(429, body)
+            .with_header("retry-after", "1")
+            .write_to(&mut stream, false);
+        linger_close(&mut stream);
     }
 }
 
@@ -299,19 +363,35 @@ fn handle_connection(sh: &ServerShared, stream: TcpStream) {
     }
 }
 
-/// Half-close then read-drain (bounded by a short timeout) before
-/// dropping a connection we just answered on. Closing a socket with
-/// unread client bytes in its receive buffer sends an immediate RST,
-/// which on most stacks discards the response still sitting in the
-/// client's buffer — the typed 4xx would vanish exactly when it matters
-/// (oversized request, shed connection). Draining until the client's
-/// half closes makes the answer reliably observable.
+/// Hard bounds on the close-time drain: a cooperative client finishes
+/// well inside these; a hostile one that trickles bytes forever gets cut
+/// off instead of pinning the thread.
+const LINGER_TOTAL: std::time::Duration = std::time::Duration::from_millis(1000);
+const LINGER_IDLE: std::time::Duration = std::time::Duration::from_millis(200);
+const LINGER_MAX_BYTES: usize = 64 * 1024;
+
+/// Half-close then read-drain before dropping a connection we just
+/// answered on. Closing a socket with unread client bytes in its receive
+/// buffer sends an immediate RST, which on most stacks discards the
+/// response still sitting in the client's buffer — the typed 4xx would
+/// vanish exactly when it matters (oversized request, shed connection).
+/// Draining until the client's half closes makes the answer reliably
+/// observable. The drain is bounded three ways (per-read idle timeout,
+/// total deadline, byte budget) so a client that trickles data cannot
+/// pin the thread indefinitely.
 fn linger_close(stream: &mut TcpStream) {
     use std::io::Read;
     let _ = stream.shutdown(std::net::Shutdown::Write);
-    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    let _ = stream.set_read_timeout(Some(LINGER_IDLE));
+    let start = std::time::Instant::now();
+    let mut budget = LINGER_MAX_BYTES;
     let mut sink = [0u8; 4096];
-    while matches!(stream.read(&mut sink), Ok(n) if n > 0) {}
+    while budget > 0 && start.elapsed() < LINGER_TOTAL {
+        match stream.read(&mut sink) {
+            Ok(n) if n > 0 => budget = budget.saturating_sub(n),
+            _ => return,
+        }
+    }
 }
 
 fn error_response(e: &HttpError) -> Response {

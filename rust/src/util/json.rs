@@ -160,11 +160,14 @@ fn newline_indent(out: &mut String, indent: Option<usize>, level: usize) {
 /// Append one JSON number. Integral values below 1e15 print as integers
 /// (exact in f64, so they still round-trip bit-for-bit through `parse`);
 /// everything else uses Rust's shortest-round-trip float `Display`.
-/// Non-finite values encode as `null` (JSON has no inf/nan — documented
-/// loss). Shared with the HTTP response builder (`crate::http::json`).
+/// Negative zero is excluded from the integer branch — `-0.0 as i64` is
+/// `0`, which would drop the sign bit; float `Display` prints `-0`,
+/// which parses back to `-0.0` exactly. Non-finite values encode as
+/// `null` (JSON has no inf/nan — documented loss). Shared with the HTTP
+/// response builder (`crate::http::json`).
 pub(crate) fn write_num(out: &mut String, x: f64) {
     if x.is_finite() {
-        if x == x.trunc() && x.abs() < 1e15 {
+        if x == x.trunc() && x.abs() < 1e15 && !(x == 0.0 && x.is_sign_negative()) {
             let _ = write!(out, "{}", x as i64);
         } else {
             let _ = write!(out, "{}", x);
@@ -589,6 +592,18 @@ mod tests {
     #[test]
     fn nan_becomes_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        // -0.0 must not take the integer fast path (`-0.0 as i64` is 0):
+        // the sign bit is part of the wire bit-parity contract.
+        let s = Json::Num(-0.0).to_string();
+        assert_eq!(s, "-0");
+        let back = parse(&s).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        // Positive zero still prints as a bare integer.
+        assert_eq!(Json::Num(0.0).to_string(), "0");
     }
 
     #[test]
